@@ -1,0 +1,48 @@
+//! L1/L2 perf bench: batched block analysis — native Rust vs the
+//! AOT-compiled PJRT executable (when `artifacts/` exists). This is the
+//! compute hot-spot the three-layer architecture accelerates; §Perf in
+//! EXPERIMENTS.md records the before/after.
+//!
+//! Output: `an,<dims>,<backend>,<blocks_per_s>,<mbs>`
+
+use sz3::bench_harness::Bench;
+use sz3::pipeline::analysis::{BlockAnalyzer, NativeAnalyzer};
+use sz3::runtime::{PjrtEngine, PjrtService};
+use sz3::util::rng::Pcg32;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let nb = if quick { 2048 } else { 8192 };
+    let mut rng = Pcg32::seeded(42);
+    println!("# block-analysis backend bench, {nb} blocks/call (quick={quick})");
+    println!("an,dims,backend,blocks_per_s,mbs");
+    let service = {
+        let dir = PjrtEngine::default_dir();
+        if PjrtEngine::available(&dir) {
+            Some(PjrtService::start(&dir).expect("pjrt service"))
+        } else {
+            eprintln!("# no artifacts; PJRT rows skipped (run `make artifacts`)");
+            None
+        }
+    };
+    for dims in [vec![128usize], vec![12usize, 12], vec![6usize, 6, 6]] {
+        let block_len: usize = dims.iter().product();
+        let blocks: Vec<f64> = (0..nb * block_len).map(|_| rng.uniform(-10.0, 10.0)).collect();
+        let bytes = blocks.len() * 8;
+        let label = dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x");
+
+        let native = NativeAnalyzer;
+        let (s, mbs) = bench.throughput(&format!("native|{label}"), bytes, || {
+            native.analyze_batch(&blocks, &dims).unwrap()
+        });
+        println!("an,{label},native,{:.0},{mbs:.1}", nb as f64 / s.mean.as_secs_f64());
+
+        if let Some(svc) = &service {
+            let (s, mbs) = bench.throughput(&format!("pjrt|{label}"), bytes, || {
+                svc.analyze(&blocks, &dims).unwrap()
+            });
+            println!("an,{label},pjrt,{:.0},{mbs:.1}", nb as f64 / s.mean.as_secs_f64());
+        }
+    }
+}

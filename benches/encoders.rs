@@ -1,0 +1,58 @@
+//! Ablation bench (DESIGN.md §Perf): encoder and lossless stage choices on
+//! a fixed quantization-index workload — the design-choice study behind the
+//! module instances of Fig. 1. Reports size and speed per instance.
+//!
+//! Output: `enc,<stage>,<instance>,<bytes>,<mbs>`
+
+use sz3::bench_harness::Bench;
+use sz3::byteio::{ByteReader, ByteWriter};
+use sz3::encoder::{self, Encoder};
+use sz3::lossless::{self, Lossless};
+use sz3::util::rng::Pcg32;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let n = if quick { 1 << 18 } else { 1 << 21 };
+    // quantization-index-like stream: two-sided geometric around the center
+    let mut rng = Pcg32::seeded(42);
+    let radius = 32768u32;
+    let symbols: Vec<u32> = (0..n)
+        .map(|_| {
+            let d = (rng.normal() * 4.0).round() as i64;
+            (radius as i64 + d).max(0) as u32
+        })
+        .collect();
+    let raw_bytes = n * 4;
+    println!("# encoder/lossless ablation over {n} indices (quick={quick})");
+    println!("enc,stage,instance,bytes,mbs");
+    for name in ["huffman", "fixed_huffman", "arithmetic", "raw"] {
+        let e = encoder::by_name(name, radius).unwrap();
+        let mut w = ByteWriter::new();
+        e.encode(&symbols, &mut w).unwrap();
+        let encoded = w.finish();
+        let (_, mbs) = bench.throughput(&format!("enc|{name}"), raw_bytes, || {
+            let mut w = ByteWriter::new();
+            e.encode(&symbols, &mut w).unwrap();
+            w.finish()
+        });
+        // verify decode correctness while we're here
+        let mut r = ByteReader::new(&encoded);
+        assert_eq!(e.decode(&mut r, n).unwrap(), symbols);
+        println!("enc,encoder,{name},{},{mbs:.1}", encoded.len());
+    }
+    // lossless stage over the huffman output (the realistic input)
+    let e = encoder::by_name("huffman", radius).unwrap();
+    let mut w = ByteWriter::new();
+    e.encode(&symbols, &mut w).unwrap();
+    let payload = w.finish();
+    for name in ["zstd", "gzip", "lzhuf", "rle", "bypass"] {
+        let l = lossless::by_name(name).unwrap();
+        let packed = l.compress(&payload).unwrap();
+        assert_eq!(l.decompress(&packed).unwrap(), payload);
+        let (_, mbs) = bench.throughput(&format!("ll|{name}"), payload.len(), || {
+            l.compress(&payload).unwrap()
+        });
+        println!("enc,lossless,{name},{},{mbs:.1}", packed.len());
+    }
+}

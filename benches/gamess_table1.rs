@@ -1,0 +1,42 @@
+//! Table 1 regeneration: compression ratio and speed of the three PaSTRI
+//! variants on the GAMESS fields at abs eb 1e-10. Expect: ratios ordered
+//! sz3-pastri > sz-pastri-zstd > sz-pastri (paper: 10.8 / 9.3 / 8.5 on
+//! ff|ff), speeds reversed (the lossless stage + bitplane coding cost).
+//!
+//! Output: `t1,<field>,<pipeline>,<ratio>,<compress_mbs>,<decompress_mbs>`
+
+use sz3::bench_harness::Bench;
+use sz3::datagen::gamess;
+use sz3::pipeline::{decompress_any, CompressConf, Compressor, ErrorBound, PastriCompressor};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let n = if quick { 1 << 19 } else { 1 << 21 };
+    let eb = 1e-10;
+    println!("# Table 1: GAMESS at abs eb {eb:.0e}, {n} doubles/field (quick={quick})");
+    println!("t1,field,pipeline,ratio,compress_mbs,decompress_mbs");
+    for field in gamess::gamess_dataset(n, 42) {
+        let variants: Vec<PastriCompressor> = vec![
+            PastriCompressor::sz(),
+            PastriCompressor::sz_with_zstd(),
+            PastriCompressor::sz3(),
+        ];
+        for c in &variants {
+            let conf = CompressConf::with_radius(ErrorBound::Abs(eb), 64);
+            let stream = c.compress(&field, &conf).expect("compress");
+            let ratio = field.nbytes() as f64 / stream.len() as f64;
+            let (_, comp) = bench.throughput(
+                &format!("{}|{}", field.name, c.name()),
+                field.nbytes(),
+                || c.compress(&field, &conf).unwrap(),
+            );
+            let (_, dec) = bench.throughput(
+                &format!("{}|{}|dec", field.name, c.name()),
+                field.nbytes(),
+                || decompress_any(&stream).unwrap(),
+            );
+            println!("t1,{},{},{ratio:.2},{comp:.1},{dec:.1}", field.name, c.name());
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Fig. 4 regeneration: rate-distortion of SZ-Pastri, SZ-Pastri+zstd and
+//! SZ3-Pastri on the three GAMESS ERI-like fields. Expect SZ3-Pastri to
+//! dominate at ~all bit rates (bitplane unpredictables + lossless stage).
+//!
+//! Output: `rd,fig4,<field>,<pipeline>,<abs_eb>,<bitrate>,<psnr>,<ratio>`
+
+use sz3::datagen::gamess;
+use sz3::metrics;
+use sz3::pipeline::{decompress_any, CompressConf, Compressor, ErrorBound, PastriCompressor};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 1 << 18 } else { 1 << 20 };
+    let bounds: &[f64] = if quick {
+        &[1e-8, 1e-10]
+    } else {
+        &[1e-6, 1e-7, 1e-8, 1e-9, 1e-10, 1e-11, 1e-12]
+    };
+    println!("# Fig. 4: GAMESS rate-distortion (quick={quick})");
+    println!("rd,figure,dataset,pipeline,abs_eb,bitrate,psnr,ratio");
+    for field in gamess::gamess_dataset(n, 42) {
+        let variants: Vec<PastriCompressor> = vec![
+            PastriCompressor::sz(),
+            PastriCompressor::sz_with_zstd(),
+            PastriCompressor::sz3(),
+        ];
+        for c in &variants {
+            for &eb in bounds {
+                let conf = CompressConf::with_radius(ErrorBound::Abs(eb), 64);
+                let stream = match c.compress(&field, &conf) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("# {} at {eb}: {e}", c.name());
+                        continue;
+                    }
+                };
+                let len = stream.len();
+                let out = decompress_any(&stream).expect("decode");
+                let m = metrics::evaluate(&field, &out, len);
+                println!(
+                    "rd,fig4,{},{},{eb:.1e},{:.4},{:.2},{:.2}",
+                    field.name,
+                    c.name(),
+                    m.bit_rate,
+                    m.psnr,
+                    m.ratio
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Fig. 7 regeneration: rate-distortion of SZ3-LR, SZ3-Interp and
+//! SZ3-Truncation across the eight survey datasets. Expect: Truncation
+//! worst everywhere; Interp ahead of LR at low bit rates (esp. Miranda);
+//! LR competitive at high-accuracy settings (Scale, Hurricane).
+//!
+//! Output: `rd,fig7,<dataset>,<pipeline>,<rel_eb>,<bitrate>,<psnr>,<ratio>`
+
+use sz3::bench_harness::{print_rd_series, rd_sweep};
+use sz3::pipeline;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bounds: Vec<f64> = if quick {
+        vec![1e-2, 1e-3, 1e-4]
+    } else {
+        vec![5e-2, 1e-2, 5e-3, 1e-3, 5e-4, 1e-4, 5e-5, 1e-5]
+    };
+    println!("# Fig. 7: rate-distortion on the survey datasets (quick={quick})");
+    println!("rd,figure,dataset,pipeline,rel_eb,bitrate,psnr,ratio");
+    for ds in sz3::datagen::survey(42) {
+        for name in ["sz3-lr", "sz3-interp", "sz3-truncation"] {
+            let c = pipeline::by_name(name).unwrap();
+            let pts = rd_sweep(c.as_ref(), &ds.fields[0], &bounds, 32768);
+            print_rd_series("fig7", ds.name, name, &pts);
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Fig. 8 regeneration: compression/decompression throughput (MB/s) of
+//! every pipeline on the eight survey datasets at relative error bound
+//! 1e-3. Expect the paper's ordering: Truncation ≫ LR/LR-s > Interp, with
+//! Truncation several × the next best.
+//!
+//! Output lines: `tp,<dataset>,<pipeline>,<comp MB/s>,<decomp MB/s>,<ratio>`
+
+use sz3::bench_harness::Bench;
+use sz3::pipeline::{self, CompressConf, ErrorBound};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let pipelines = ["sz3-truncation", "sz3-lr", "sz3-lr-s", "sz3-interp"];
+    println!("# Fig. 8: throughput at rel eb 1e-3 (quick={quick})");
+    println!("tp,dataset,pipeline,compress_mbs,decompress_mbs,ratio");
+    for ds in sz3::datagen::survey(42) {
+        // one representative field per dataset keeps runtime sane
+        let field = &ds.fields[0];
+        let bytes = field.nbytes();
+        for name in pipelines {
+            let c = pipeline::by_name(name).unwrap();
+            let conf = CompressConf::new(ErrorBound::Rel(1e-3));
+            let stream = match c.compress(field, &conf) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("# {name} on {}: {e}", ds.name);
+                    continue;
+                }
+            };
+            let ratio = bytes as f64 / stream.len() as f64;
+            let (_, comp_mbs) =
+                bench.throughput(&format!("{}|{name}|comp", ds.name), bytes, || {
+                    c.compress(field, &conf).unwrap()
+                });
+            let (_, dec_mbs) =
+                bench.throughput(&format!("{}|{name}|dec", ds.name), bytes, || {
+                    c.decompress(&stream).unwrap()
+                });
+            println!("tp,{},{name},{comp_mbs:.1},{dec_mbs:.1},{ratio:.2}", ds.name);
+        }
+    }
+}

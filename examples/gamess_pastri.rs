@@ -1,0 +1,52 @@
+//! GAMESS scenario (paper §4): compress ERI-like streams with the three
+//! PaSTRI variants and print the Table 1 rows (ratio + compression speed)
+//! plus the Fig. 3 unpredictable-rate characterization.
+//!
+//! Run: `cargo run --release --example gamess_pastri`
+
+use std::time::Instant;
+use sz3::datagen::gamess;
+use sz3::pipeline::{decompress_any, CompressConf, Compressor, ErrorBound, PastriCompressor};
+
+fn main() -> anyhow::Result<()> {
+    let eb = 1e-10; // the domain scientists' requirement (Table 1)
+    let n = 1 << 21; // ~16 MB per field (f64)
+    println!("GAMESS ERI-like data, absolute error bound {eb:.0e}, {n} doubles/field\n");
+    println!(
+        "{:<8} {:<18} {:>8} {:>14} {:>12}",
+        "field", "compressor", "ratio", "comp MB/s", "unpred %"
+    );
+    for field in gamess::gamess_dataset(n, 42) {
+        let variants: Vec<PastriCompressor> = vec![
+            PastriCompressor::sz(),
+            PastriCompressor::sz_with_zstd(),
+            PastriCompressor::sz3(),
+        ];
+        for c in variants {
+            let conf = CompressConf::with_radius(ErrorBound::Abs(eb), 64);
+            let t0 = Instant::now();
+            let (stream, [data_idx, _, _]) = c.compress_instrumented(&field, &conf)?;
+            let dt = t0.elapsed();
+            let ratio = field.nbytes() as f64 / stream.len() as f64;
+            let mbs = field.nbytes() as f64 / 1e6 / dt.as_secs_f64();
+            let unpred =
+                100.0 * data_idx.iter().filter(|&&i| i == 0).count() as f64 / data_idx.len() as f64;
+            println!(
+                "{:<8} {:<18} {:>8.2} {:>14.1} {:>11.1}%",
+                field.name,
+                c.name(),
+                ratio,
+                mbs,
+                unpred
+            );
+            // verify the bound end to end
+            let out = decompress_any(&stream)?;
+            for (o, d) in field.values.to_f64_vec().iter().zip(out.values.to_f64_vec()) {
+                assert!((o - d).abs() <= eb * (1.0 + 1e-9), "bound violated");
+            }
+        }
+        println!();
+    }
+    println!("(expect the Table 1 ordering: sz3-pastri > sz-pastri-zstd > sz-pastri in ratio,\n reversed in speed — the unpred-aware quantizer + lossless stage trade speed for ratio)");
+    Ok(())
+}

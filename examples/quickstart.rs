@@ -1,0 +1,43 @@
+//! Quickstart: compress a field with a registry pipeline, decompress, and
+//! verify the error bound.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sz3::data::Field;
+use sz3::metrics;
+use sz3::pipeline::{by_name, decompress_any, CompressConf, ErrorBound};
+use sz3::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    // A smooth 3-D field (stand-in for one simulation snapshot variable).
+    let dims = [64usize, 64, 64];
+    let mut rng = Pcg32::seeded(7);
+    let values = sz3::util::prop::smooth_field(&mut rng, &dims);
+    let field = Field::f32("demo", &dims, values)?;
+
+    // Pick a pipeline from the registry and an error bound.
+    let pipeline = by_name("sz3-interp").expect("registered pipeline");
+    let conf = CompressConf::new(ErrorBound::Rel(1e-4));
+
+    let stream = pipeline.compress(&field, &conf)?;
+    let restored = decompress_any(&stream)?;
+
+    let m = metrics::evaluate(&field, &restored, stream.len());
+    println!("pipeline      : {}", pipeline.name());
+    println!("original      : {} bytes {:?}", field.nbytes(), field.shape.dims());
+    println!("compressed    : {} bytes", stream.len());
+    println!("metrics       : {m}");
+
+    // The headline guarantee: every point within the absolute bound.
+    let abs = ErrorBound::Rel(1e-4).to_abs(&field)?;
+    let worst = field
+        .values
+        .to_f64_vec()
+        .iter()
+        .zip(restored.values.to_f64_vec())
+        .map(|(o, d)| (o - d).abs())
+        .fold(0.0f64, f64::max);
+    assert!(worst <= abs * (1.0 + 1e-12));
+    println!("bound check   : max|err| {worst:.3e} <= {abs:.3e}  OK");
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! END-TO-END DRIVER: stream a realistic multi-field scientific workload
+//! through the full stack — datagen → coordinator (sharding, bounded-queue
+//! backpressure, worker pool) → SZ3-LR with PJRT-backed block analysis when
+//! `artifacts/` is present → decompress → verify the error bound on every
+//! element — and report the headline metrics (ratio, PSNR, throughput).
+//!
+//! This is the run recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `make artifacts && cargo run --release --example streaming_service`
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+use sz3::config::JobConfig;
+use sz3::coordinator::{reassemble, CompressedChunk, Coordinator};
+use sz3::metrics;
+use sz3::pipeline::{self, ErrorBound};
+use sz3::runtime::{PjrtAnalyzer, PjrtEngine, PjrtService};
+
+fn main() -> anyhow::Result<()> {
+    let rel_eb = 1e-3;
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Rel(rel_eb),
+        ..Default::default()
+    };
+    let mut coord = Coordinator::from_config(&cfg)?;
+
+    // PJRT-backed analysis when artifacts exist (the three-layer path).
+    let dir = PjrtEngine::default_dir();
+    let mut backend = "native";
+    if PjrtEngine::available(&dir) {
+        let service = PjrtService::start(&dir)?;
+        println!(
+            "analysis backend: PJRT ({}) with artifacts for dims {:?}",
+            service.platform, service.dims
+        );
+        backend = "pjrt";
+        coord.make_compressor = Arc::new(move || {
+            Box::new(
+                pipeline::BlockCompressor::sz3_lr()
+                    .with_analyzer(Arc::new(PjrtAnalyzer::new(service.clone()))),
+            )
+        });
+    } else {
+        println!("analysis backend: native (run `make artifacts` for the PJRT path)");
+    }
+
+    // Workload: the full Table 3 survey (8 applications, reduced dims).
+    let datasets = sz3::datagen::survey(42);
+    let total_bytes: usize = datasets.iter().map(|d| d.nbytes()).sum();
+    println!(
+        "workload: {} datasets, {} fields, {:.1} MB uncompressed; pipeline={} rel_eb={rel_eb} workers={} queue={}",
+        datasets.len(),
+        datasets.iter().map(|d| d.fields.len()).sum::<usize>(),
+        total_bytes as f64 / 1e6,
+        cfg.pipeline,
+        cfg.workers,
+        cfg.queue_depth,
+    );
+
+    let mut grand_in = 0u64;
+    let mut grand_out = 0u64;
+    let t0 = Instant::now();
+    let mut all: Vec<(String, Vec<CompressedChunk>, Vec<sz3::data::Field>)> = Vec::new();
+    for ds in datasets {
+        let originals = ds.fields.clone();
+        let mut chunks: HashMap<String, Vec<CompressedChunk>> = HashMap::new();
+        let report = coord.run(ds.fields, |c| {
+            chunks.entry(c.field.clone()).or_default().push(c);
+        })?;
+        println!("  {:<12} {report}", ds.name);
+        grand_in += report.bytes_in;
+        grand_out += report.bytes_out;
+        for f in &originals {
+            let field_chunks = chunks.remove(&f.name).expect("chunks for field");
+            all.push((ds.name.to_string(), field_chunks, vec![f.clone()]));
+        }
+    }
+    let compress_wall = t0.elapsed();
+
+    // Decompress + verify every element of every field.
+    let t1 = Instant::now();
+    let mut worst_rel = 0.0f64;
+    let mut psnr_min = f64::INFINITY;
+    let mut violations = 0usize;
+    for (ds_name, chunks, fields) in &all {
+        let field = &fields[0];
+        let restored = reassemble(chunks)?;
+        let stream_len: usize = chunks.iter().map(|c| c.stream.len()).sum();
+        let m = metrics::evaluate(field, &restored, stream_len);
+        psnr_min = psnr_min.min(m.psnr);
+        let (lo, hi) = field.value_range();
+        let abs = rel_eb * (hi - lo).max(f64::MIN_POSITIVE);
+        let worst = field
+            .values
+            .to_f64_vec()
+            .iter()
+            .zip(restored.values.to_f64_vec())
+            .map(|(o, d)| (o - d).abs())
+            .fold(0.0f64, f64::max);
+        if worst > abs * (1.0 + 1e-12) {
+            violations += 1;
+            eprintln!("BOUND VIOLATION {ds_name}/{}: {worst} > {abs}", field.name);
+        }
+        worst_rel = worst_rel.max(worst / abs);
+    }
+    let decompress_wall = t1.elapsed();
+
+    println!("\n=== headline metrics ===");
+    println!("analysis backend      : {backend}");
+    println!("total                 : {:.1} MB -> {:.1} MB", grand_in as f64 / 1e6, grand_out as f64 / 1e6);
+    println!("overall ratio         : {:.2}", grand_in as f64 / grand_out as f64);
+    println!("compress throughput   : {:.1} MB/s (wall, incl. generation-side streaming)", grand_in as f64 / 1e6 / compress_wall.as_secs_f64());
+    println!("decompress throughput : {:.1} MB/s", grand_in as f64 / 1e6 / decompress_wall.as_secs_f64());
+    println!("min field PSNR        : {psnr_min:.1} dB");
+    println!("worst err / bound     : {worst_rel:.4} (must be <= 1)");
+    println!("bound violations      : {violations}");
+    assert_eq!(violations, 0, "error bound must hold everywhere");
+    println!("OK — all layers composed; every element within the requested bound.");
+    Ok(())
+}

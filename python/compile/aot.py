@@ -1,0 +1,97 @@
+"""AOT compile path: lower the L2 graphs to HLO **text** artifacts.
+
+HLO text — not ``.serialize()`` protos — is the interchange format: jax
+>= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla_extension 0.5.1 used by the published ``xla`` crate rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Python runs ONLY here, at build time (`make artifacts`). The rust binary
+is self-contained once ``artifacts/`` exists.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_analysis(nd: int) -> str:
+    shape = (model.BATCH,) + model.BLOCK_SHAPES[nd]
+    spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+    return to_hlo_text(jax.jit(model.analysis_fn).lower(spec))
+
+
+def lower_quantize(nd: int) -> str:
+    shape = (model.BATCH,) + model.BLOCK_SHAPES[nd]
+    bspec = jax.ShapeDtypeStruct(shape, jnp.float32)
+    cspec = jax.ShapeDtypeStruct((model.BATCH, nd + 1), jnp.float32)
+    espec = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return to_hlo_text(jax.jit(model.quantize_fn).lower(bspec, cspec, espec))
+
+
+def lower_stats() -> str:
+    spec = jax.ShapeDtypeStruct((model.STATS_N,), jnp.float32)
+    return to_hlo_text(jax.jit(model.stats_fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file target (ignored)")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "batch": model.BATCH,
+        "stats_n": model.STATS_N,
+        "block_shapes": {str(k): list(v) for k, v in model.BLOCK_SHAPES.items()},
+        "artifacts": {},
+    }
+    for nd in (1, 2, 3, 4):
+        name = f"analysis_{nd}d.hlo.txt"
+        text = lower_analysis(nd)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["artifacts"][f"analysis_{nd}d"] = name
+        print(f"wrote {name} ({len(text)} chars)")
+    for nd in (2, 3):
+        name = f"quantize_{nd}d.hlo.txt"
+        text = lower_quantize(nd)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["artifacts"][f"quantize_{nd}d"] = name
+        print(f"wrote {name} ({len(text)} chars)")
+    name = "stats.hlo.txt"
+    text = lower_stats()
+    with open(os.path.join(out_dir, name), "w") as f:
+        f.write(text)
+    manifest["artifacts"]["stats"] = name
+    print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

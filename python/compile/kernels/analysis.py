@@ -1,0 +1,113 @@
+"""L1 Pallas kernels: blockwise regression fit + predictor-error estimation.
+
+The compute hot-spot of the SZ3-LR pipeline (paper §6.2): for a batch of
+equally-shaped blocks, fit the regression hyperplane, evaluate its mean
+|residual|, and estimate the order-1 Lorenzo error. One fused kernel
+produces all three outputs so the block tile is loaded into VMEM once.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid runs over tiles of
+`TILE` blocks; each program holds a (TILE, *block_shape) tile in VMEM
+(~TILE·216·4 B for 3-D) and reduces it on the VPU. `interpret=True` is
+mandatory here — the CPU PJRT plugin cannot execute Mosaic custom calls —
+so these kernels lower to plain HLO that both jax and the rust runtime can
+run; the BlockSpec structure is what would carry over to real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Blocks per kernel program (VMEM tile).
+TILE = 256
+
+
+def _analysis_kernel(x_ref, coeff_ref, lor_ref, reg_ref, *, block_shape):
+    """Fused fit + error estimation for one VMEM tile of blocks."""
+    x = x_ref[...]  # (TILE, *block_shape)
+    nd = len(block_shape)
+    tile = x.shape[0]
+    n = 1
+    for s in block_shape:
+        n *= s
+    flat = x.reshape(tile, -1)
+    mean = flat.mean(axis=1)
+
+    # --- regression fit (diagonalized normal equations) ---
+    slopes = []
+    for d in range(nd):
+        sd = block_shape[d]
+        coord = jnp.arange(sd, dtype=x.dtype) - (sd - 1) / 2.0
+        shape = [1] * (nd + 1)
+        shape[1 + d] = sd
+        num = (x * coord.reshape(shape)).reshape(tile, -1).sum(axis=1)
+        denom = n * (sd * sd - 1) / 12.0
+        slopes.append(num / denom)
+    intercept = mean
+    for d in range(nd):
+        intercept = intercept - slopes[d] * (block_shape[d] - 1) / 2.0
+    coeff_ref[...] = jnp.stack(slopes + [intercept], axis=1)
+
+    # --- regression residual ---
+    pred = intercept.reshape((tile,) + (1,) * nd)
+    for d in range(nd):
+        sd = block_shape[d]
+        coord = jnp.arange(sd, dtype=x.dtype)
+        shape = [1] * (nd + 1)
+        shape[1 + d] = sd
+        pred = pred + slopes[d].reshape((tile,) + (1,) * nd) * coord.reshape(shape)
+    reg_ref[...] = jnp.abs(x - pred).reshape(tile, -1).mean(axis=1)
+
+    # --- Lorenzo error (inclusion-exclusion over backward shifts) ---
+    lpred = jnp.zeros_like(x)
+    for subset in range(1, 1 << nd):
+        shifted = x
+        for d in range(nd):
+            if subset >> d & 1:
+                pad = [(0, 0)] * x.ndim
+                pad[1 + d] = (1, 0)
+                shifted = jnp.pad(shifted, pad)[
+                    tuple(
+                        slice(0, x.shape[a]) if a == 1 + d else slice(None)
+                        for a in range(x.ndim)
+                    )
+                ]
+        sign = 1.0 if bin(subset).count("1") % 2 == 1 else -1.0
+        lpred = lpred + sign * shifted
+    lor_ref[...] = jnp.abs(x - lpred).reshape(tile, -1).mean(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def analyze_blocks(blocks: jnp.ndarray, *, interpret: bool = True):
+    """Batched block analysis via Pallas.
+
+    blocks: (B, *block_shape) with B a multiple of TILE.
+    Returns (coeffs (B, nd+1), lorenzo_err (B,), regression_err (B,)).
+    """
+    b = blocks.shape[0]
+    block_shape = blocks.shape[1:]
+    nd = len(block_shape)
+    assert b % TILE == 0, f"batch {b} must be a multiple of {TILE}"
+    grid = (b // TILE,)
+    tile_block = (TILE,) + tuple(block_shape)
+    zero_tail = (0,) * nd
+    kernel = functools.partial(_analysis_kernel, block_shape=tuple(block_shape))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(tile_block, lambda i: (i,) + zero_tail)],
+        out_specs=[
+            pl.BlockSpec((TILE, nd + 1), lambda i: (i, 0)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nd + 1), blocks.dtype),
+            jax.ShapeDtypeStruct((b,), blocks.dtype),
+            jax.ShapeDtypeStruct((b,), blocks.dtype),
+        ],
+        interpret=interpret,
+    )(blocks)

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: linear-scaling quantization of regression-predicted
+blocks.
+
+Regression prediction depends only on the fitted plane — never on
+decompressed neighbors — so quantization of regression-selected blocks is
+embarrassingly parallel (unlike the Lorenzo path, which stays sequential in
+rust). This kernel evaluates the plane and quantizes the whole tile in one
+pass: the batched counterpart of `LinearQuantizer::quantize` +
+`RegressionFit::predict`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def _quantize_kernel(x_ref, coeff_ref, eb_ref, idx_ref, rec_ref, *, block_shape, radius):
+    x = x_ref[...]
+    coeffs = coeff_ref[...]
+    eb = eb_ref[0]
+    nd = len(block_shape)
+    tile = x.shape[0]
+    pred = coeffs[:, nd].reshape((tile,) + (1,) * nd)
+    for d in range(nd):
+        sd = block_shape[d]
+        coord = jnp.arange(sd, dtype=x.dtype)
+        shape = [1] * (nd + 1)
+        shape[1 + d] = sd
+        pred = pred + coeffs[:, d].reshape((tile,) + (1,) * nd) * coord.reshape(shape)
+    diff = x - pred
+    q = jnp.round(diff / (2.0 * eb))
+    rec = pred + q * 2.0 * eb
+    ok = (jnp.abs(q) < radius) & (jnp.abs(rec - x) <= eb)
+    idx_ref[...] = jnp.where(ok, q.astype(jnp.int32) + radius, 0).astype(jnp.int32)
+    rec_ref[...] = jnp.where(ok, rec, x)
+
+
+@functools.partial(jax.jit, static_argnames=("radius", "interpret"))
+def quantize_blocks(
+    blocks: jnp.ndarray,
+    coeffs: jnp.ndarray,
+    eb: jnp.ndarray,
+    *,
+    radius: int = 32768,
+    interpret: bool = True,
+):
+    """Quantize a batch of regression-predicted blocks.
+
+    blocks: (B, *shape); coeffs: (B, nd+1); eb: (1,) scalar array.
+    Returns (indices int32 (B, *shape), recovered (B, *shape)).
+    """
+    b = blocks.shape[0]
+    block_shape = blocks.shape[1:]
+    nd = len(block_shape)
+    assert b % TILE == 0, f"batch {b} must be a multiple of {TILE}"
+    grid = (b // TILE,)
+    tile_block = (TILE,) + tuple(block_shape)
+    zero_tail = (0,) * nd
+    kernel = functools.partial(
+        _quantize_kernel, block_shape=tuple(block_shape), radius=radius
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(tile_block, lambda i: (i,) + zero_tail),
+            pl.BlockSpec((TILE, nd + 1), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(tile_block, lambda i: (i,) + zero_tail),
+            pl.BlockSpec(tile_block, lambda i: (i,) + zero_tail),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(blocks.shape, jnp.int32),
+            jax.ShapeDtypeStruct(blocks.shape, blocks.dtype),
+        ],
+        interpret=interpret,
+    )(blocks, coeffs, eb)

@@ -1,0 +1,133 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+This is the single source of truth for the block-analysis math shared by
+three implementations:
+  * this module (pure jnp)                      — swept with hypothesis
+  * the Pallas kernels in this package          — tested against this module
+  * ``rust/src/pipeline/analysis.rs`` (native)  — same closed forms in f64
+
+The math (paper SZ2 [8] / SZ3 §6.2):
+  * regression fit: least-squares hyperplane over a regular block grid —
+    after centering each coordinate the normal equations diagonalize, so
+    every slope is an independent weighted sum;
+  * lorenzo error: mean |x - order-1 Lorenzo prediction| with zero padding
+    at block boundaries;
+  * quantize: SZ linear-scaling quantization of residuals against a
+    predicted block.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def regression_fit(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Fit ``f(i) = sum_d b_d i_d + c`` per block.
+
+    blocks: (B, s0, ..., sd) -> coeffs (B, d+1), slopes then intercept.
+    """
+    nd = blocks.ndim - 1
+    b = blocks.shape[0]
+    n = 1
+    for s in blocks.shape[1:]:
+        n *= s
+    mean = blocks.reshape(b, -1).mean(axis=1)
+    slopes = []
+    for d in range(nd):
+        sd = blocks.shape[1 + d]
+        coord = jnp.arange(sd, dtype=blocks.dtype) - (sd - 1) / 2.0
+        shape = [1] * (nd + 1)
+        shape[1 + d] = sd
+        centered = coord.reshape(shape)
+        num = (blocks * centered).reshape(b, -1).sum(axis=1)
+        denom = n * (sd * sd - 1) / 12.0
+        slopes.append(num / denom)
+    intercept = mean
+    for d in range(nd):
+        sd = blocks.shape[1 + d]
+        intercept = intercept - slopes[d] * (sd - 1) / 2.0
+    return jnp.stack(slopes + [intercept], axis=1)
+
+
+def regression_predict(coeffs: jnp.ndarray, block_shape: tuple) -> jnp.ndarray:
+    """Evaluate fitted planes on the block grid: (B, d+1) -> (B, *shape)."""
+    nd = len(block_shape)
+    b = coeffs.shape[0]
+    pred = coeffs[:, nd].reshape((b,) + (1,) * nd)
+    for d in range(nd):
+        sd = block_shape[d]
+        coord = jnp.arange(sd, dtype=coeffs.dtype)
+        shape = [1] * (nd + 1)
+        shape[1 + d] = sd
+        pred = pred + coeffs[:, d].reshape((b,) + (1,) * nd) * coord.reshape(shape)
+    return pred
+
+
+def regression_err(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Mean |residual| of the per-block regression fit: (B,)."""
+    coeffs = regression_fit(blocks)
+    pred = regression_predict(coeffs, blocks.shape[1:])
+    b = blocks.shape[0]
+    return jnp.abs(blocks - pred).reshape(b, -1).mean(axis=1)
+
+
+def _shift_back(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """x[..., i-1, ...] with zero at i = 0 (per-block zero padding)."""
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (1, 0)
+    padded = jnp.pad(x, pad)
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(0, x.shape[axis])
+    return padded[tuple(sl)]
+
+
+def lorenzo_pred(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Order-1 Lorenzo prediction per point (inclusion-exclusion over
+    backward neighbors), zero padding outside the block."""
+    nd = blocks.ndim - 1
+    pred = jnp.zeros_like(blocks)
+    for subset in range(1, 1 << nd):
+        shifted = blocks
+        for d in range(nd):
+            if subset >> d & 1:
+                shifted = _shift_back(shifted, 1 + d)
+        sign = 1.0 if bin(subset).count("1") % 2 == 1 else -1.0
+        pred = pred + sign * shifted
+    return pred
+
+
+def lorenzo_err(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Mean |x - Lorenzo prediction| per block: (B,)."""
+    b = blocks.shape[0]
+    return jnp.abs(blocks - lorenzo_pred(blocks)).reshape(b, -1).mean(axis=1)
+
+
+def analyze(blocks: jnp.ndarray):
+    """Full block analysis: (coeffs, lorenzo_err, regression_err)."""
+    coeffs = regression_fit(blocks)
+    pred = regression_predict(coeffs, blocks.shape[1:])
+    b = blocks.shape[0]
+    reg = jnp.abs(blocks - pred).reshape(b, -1).mean(axis=1)
+    lor = lorenzo_err(blocks)
+    return coeffs, lor, reg
+
+
+def quantize(blocks: jnp.ndarray, pred: jnp.ndarray, eb, radius: int):
+    """SZ linear-scaling quantization of a predicted block batch.
+
+    Returns (indices, recovered): index 0 marks unpredictable (caller
+    stores those exactly), q + radius otherwise; recovered is the value
+    the decompressor reconstructs.
+    """
+    diff = blocks - pred
+    q = jnp.round(diff / (2.0 * eb))
+    rec = pred + q * 2.0 * eb
+    ok = (jnp.abs(q) < radius) & (jnp.abs(rec - blocks) <= eb)
+    indices = jnp.where(ok, q.astype(jnp.int32) + radius, 0).astype(jnp.int32)
+    recovered = jnp.where(ok, rec, blocks)
+    return indices, recovered
+
+
+def stats(x: jnp.ndarray) -> jnp.ndarray:
+    """Field statistics for PSNR/range metrics: [min, max, sum, sumsq]."""
+    return jnp.stack([x.min(), x.max(), x.sum(), (x * x).sum()])

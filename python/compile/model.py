@@ -1,0 +1,49 @@
+"""L2: the JAX compute graphs AOT-lowered for the rust runtime.
+
+Each exported function composes the L1 Pallas kernels into the graph that
+the rust coordinator executes via PJRT:
+
+* ``analysis_fn``  — batched block analysis (fit + both error estimates)
+  for the SZ3-LR composite predictor selection; one variant per
+  dimensionality with the SZ2 block sides (128 / 12² / 6³ / 4⁴).
+* ``quantize_fn``  — batched regression-block quantization.
+* ``stats_fn``     — field statistics (min/max/sum/sumsq) for metrics.
+
+Shapes are static (PJRT executables are shape-specialized): the runtime
+pads the last batch with zero blocks, whose analysis results are discarded.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.analysis import analyze_blocks
+from .kernels.quantize import quantize_blocks
+from .kernels import ref
+
+# Batch of blocks per executable invocation (runtime pads to this).
+BATCH = 4096
+# SZ2 block sides per dimensionality (must match rust block_side()).
+BLOCK_SHAPES = {
+    1: (128,),
+    2: (12, 12),
+    3: (6, 6, 6),
+    4: (4, 4, 4, 4),
+}
+# Elements per stats invocation.
+STATS_N = 1 << 16
+
+
+def analysis_fn(blocks: jnp.ndarray):
+    """(BATCH, *block_shape) -> (coeffs, lorenzo_err, regression_err)."""
+    return analyze_blocks(blocks, interpret=True)
+
+
+def quantize_fn(blocks: jnp.ndarray, coeffs: jnp.ndarray, eb: jnp.ndarray):
+    """(BATCH, *shape), (BATCH, nd+1), (1,) -> (indices, recovered)."""
+    return quantize_blocks(blocks, coeffs, eb, interpret=True)
+
+
+def stats_fn(x: jnp.ndarray):
+    """(STATS_N,) -> (4,) = [min, max, sum, sumsq]."""
+    return (ref.stats(x),)

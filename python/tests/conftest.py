@@ -1,0 +1,6 @@
+"""Make the build-time `compile` package importable when pytest runs from
+the repo root (`pytest python/tests/`) as well as from `python/`."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))

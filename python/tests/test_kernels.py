@@ -1,0 +1,164 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal of the L1 layer.
+
+Pallas kernels (interpret mode) must match the pure-jnp oracle in ref.py,
+which in turn must match plain numpy least squares. Hypothesis sweeps
+shapes, magnitudes and degenerate inputs.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.analysis import analyze_blocks, TILE
+from compile.kernels.quantize import quantize_blocks
+
+RNG = np.random.default_rng(1234)
+
+
+def random_blocks(batch, shape, scale=1.0, rng=RNG):
+    return (rng.standard_normal((batch,) + shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- ref.py ---
+
+
+class TestReferenceOracle:
+    def test_fit_exact_on_planes(self):
+        # f(i,j,k) = 2i - 1.5j + 0.25k + 7 must be recovered exactly
+        i, j, k = np.meshgrid(np.arange(4), np.arange(5), np.arange(6), indexing="ij")
+        plane = (2.0 * i - 1.5 * j + 0.25 * k + 7.0).astype(np.float32)
+        coeffs = np.asarray(ref.regression_fit(jnp.asarray(plane[None])))
+        np.testing.assert_allclose(coeffs[0], [2.0, -1.5, 0.25, 7.0], atol=1e-4)
+
+    def test_fit_matches_numpy_lstsq(self):
+        blocks = random_blocks(8, (6, 6, 6))
+        coeffs = np.asarray(ref.regression_fit(jnp.asarray(blocks)))
+        # design matrix for one block
+        i, j, k = np.meshgrid(np.arange(6), np.arange(6), np.arange(6), indexing="ij")
+        A = np.stack([i.ravel(), j.ravel(), k.ravel(), np.ones(216)], axis=1)
+        for b in range(8):
+            expect, *_ = np.linalg.lstsq(A, blocks[b].ravel(), rcond=None)
+            np.testing.assert_allclose(coeffs[b], expect, rtol=2e-3, atol=2e-3)
+
+    def test_lorenzo_zero_on_multilinear(self):
+        i, j = np.meshgrid(np.arange(5), np.arange(5), indexing="ij")
+        lin = (3.0 * i + 4.0 * j).astype(np.float32)
+        pred = np.asarray(ref.lorenzo_pred(jnp.asarray(lin[None])))
+        # interior points exact; boundary sees zero padding
+        np.testing.assert_allclose(pred[0, 1:, 1:], lin[1:, 1:], atol=1e-4)
+
+    def test_quantize_respects_bound(self):
+        blocks = random_blocks(4, (6, 6, 6), scale=10.0)
+        coeffs = ref.regression_fit(jnp.asarray(blocks))
+        pred = ref.regression_predict(coeffs, (6, 6, 6))
+        eb = 0.05
+        idx, rec = ref.quantize(jnp.asarray(blocks), pred, eb, 512)
+        err = np.abs(np.asarray(rec) - blocks)
+        assert err.max() <= eb * (1 + 1e-6)
+        # unpredictable entries must be exact
+        unpred = np.asarray(idx) == 0
+        np.testing.assert_array_equal(np.asarray(rec)[unpred], blocks[unpred])
+
+    @given(
+        nd=st.integers(1, 3),
+        scale=st.floats(1e-3, 1e3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_fit_optimality_property(self, nd, scale, seed):
+        # least squares: perturbing any coefficient cannot reduce SSE
+        rng = np.random.default_rng(seed)
+        shape = {1: (16,), 2: (6, 5), 3: (4, 5, 3)}[nd]
+        blocks = random_blocks(2, shape, scale=scale, rng=rng).astype(np.float64)
+        coeffs = np.asarray(ref.regression_fit(jnp.asarray(blocks)))
+        pred = np.asarray(ref.regression_predict(jnp.asarray(coeffs), shape))
+        base = ((blocks - pred) ** 2).sum(axis=tuple(range(1, nd + 1)))
+        for d in range(nd + 1):
+            for delta in (-1e-3 * scale, 1e-3 * scale):
+                c2 = coeffs.copy()
+                c2[:, d] += delta
+                p2 = np.asarray(ref.regression_predict(jnp.asarray(c2), shape))
+                sse2 = ((blocks - p2) ** 2).sum(axis=tuple(range(1, nd + 1)))
+                assert (sse2 >= base - 1e-6 * scale * scale).all()
+
+
+# ------------------------------------------------------- pallas kernels ---
+
+
+class TestAnalysisKernel:
+    @pytest.mark.parametrize("shape", [(128,), (12, 12), (6, 6, 6), (4, 4, 4, 4)])
+    def test_matches_ref(self, shape):
+        blocks = jnp.asarray(random_blocks(TILE * 2, shape, scale=5.0))
+        coeffs, lor, reg = analyze_blocks(blocks)
+        ec, el, er = ref.analyze(blocks)
+        np.testing.assert_allclose(np.asarray(coeffs), np.asarray(ec), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(lor), np.asarray(el), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(reg), np.asarray(er), rtol=1e-5, atol=1e-5)
+
+    def test_zero_blocks(self):
+        blocks = jnp.zeros((TILE, 6, 6, 6), jnp.float32)
+        coeffs, lor, reg = analyze_blocks(blocks)
+        assert np.allclose(np.asarray(coeffs), 0)
+        assert np.allclose(np.asarray(lor), 0)
+        assert np.allclose(np.asarray(reg), 0)
+
+    @given(
+        scale_exp=st.floats(-4, 4),
+        seed=st.integers(0, 2**31 - 1),
+        nd=st.integers(1, 3),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_hypothesis_sweep(self, scale_exp, seed, nd):
+        rng = np.random.default_rng(seed)
+        shape = {1: (128,), 2: (12, 12), 3: (6, 6, 6)}[nd]
+        blocks = jnp.asarray(
+            random_blocks(TILE, shape, scale=10.0**scale_exp, rng=rng)
+        )
+        coeffs, lor, reg = analyze_blocks(blocks)
+        ec, el, er = ref.analyze(blocks)
+        scale = float(jnp.abs(blocks).max()) + 1e-30
+        np.testing.assert_allclose(
+            np.asarray(coeffs), np.asarray(ec), rtol=1e-4, atol=1e-5 * scale
+        )
+        np.testing.assert_allclose(
+            np.asarray(lor), np.asarray(el), rtol=1e-4, atol=1e-5 * scale
+        )
+        np.testing.assert_allclose(
+            np.asarray(reg), np.asarray(er), rtol=1e-4, atol=1e-5 * scale
+        )
+
+
+class TestQuantizeKernel:
+    @pytest.mark.parametrize("shape", [(12, 12), (6, 6, 6)])
+    def test_matches_ref(self, shape):
+        blocks = jnp.asarray(random_blocks(TILE, shape, scale=3.0))
+        coeffs = ref.regression_fit(blocks)
+        eb = jnp.asarray([0.01], jnp.float32)
+        idx, rec = quantize_blocks(blocks, coeffs, eb, radius=512)
+        pred = ref.regression_predict(coeffs, shape)
+        eidx, erec = ref.quantize(blocks, pred, 0.01, 512)
+        # f32 summation order differs between the kernel's plane evaluation
+        # and ref's; indices may flip on exact bin boundaries (~0 of 36k) and
+        # recovered values agree to f32 accuracy.
+        idx_np, eidx_np = np.asarray(idx), np.asarray(eidx)
+        assert (idx_np != eidx_np).mean() < 1e-3
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(erec), rtol=1e-4, atol=1e-6)
+
+    @given(
+        eb_exp=st.floats(-5, -1),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_bound_always_holds(self, eb_exp, seed):
+        rng = np.random.default_rng(seed)
+        blocks = jnp.asarray(random_blocks(TILE, (6, 6, 6), scale=1.0, rng=rng))
+        coeffs = ref.regression_fit(blocks)
+        eb = float(10.0**eb_exp)
+        idx, rec = quantize_blocks(blocks, coeffs, jnp.asarray([eb], jnp.float32), radius=512)
+        err = np.abs(np.asarray(rec) - np.asarray(blocks))
+        assert err.max() <= eb * (1 + 1e-5)
+        unpred = np.asarray(idx) == 0
+        np.testing.assert_array_equal(np.asarray(rec)[unpred], np.asarray(blocks)[unpred])

@@ -1,0 +1,180 @@
+//! Benchmark harness substrate (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive [`Bench`]:
+//! warmup, fixed-time measurement, mean/σ/min reporting, and a CSV-ish
+//! line format the experiment scripts grep. Also hosts the
+//! rate-distortion sweep runner shared by the figure-regeneration benches.
+
+use crate::data::Field;
+use crate::metrics::{self, Metrics};
+use crate::pipeline::{decompress_any, CompressConf, Compressor, ErrorBound};
+use std::time::{Duration, Instant};
+
+/// Timing statistics for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Case label.
+    pub name: String,
+    /// Mean iteration time.
+    pub mean: Duration,
+    /// Standard deviation.
+    pub stddev: Duration,
+    /// Fastest iteration.
+    pub min: Duration,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl std::fmt::Display for Sample {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} mean {:>10.3?}  σ {:>9.3?}  min {:>10.3?}  n={}",
+            self.name, self.mean, self.stddev, self.min, self.iters
+        )
+    }
+}
+
+/// Simple time-budgeted benchmark runner.
+pub struct Bench {
+    /// Warmup budget per case.
+    pub warmup: Duration,
+    /// Measurement budget per case.
+    pub measure: Duration,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: Duration::from_millis(300), measure: Duration::from_secs(2), max_iters: 1000 }
+    }
+}
+
+impl Bench {
+    /// Quick profile for CI-ish runs.
+    pub fn quick() -> Self {
+        Bench { warmup: Duration::from_millis(50), measure: Duration::from_millis(400), max_iters: 50 }
+    }
+
+    /// Run `f` repeatedly and report stats. The closure's return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn run<R, F: FnMut() -> R>(&self, name: &str, mut f: F) -> Sample {
+        let warm_until = Instant::now() + self.warmup;
+        while Instant::now() < warm_until {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::new();
+        let stop = Instant::now() + self.measure;
+        while Instant::now() < stop && times.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        if times.is_empty() {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        let n = times.len();
+        let mean_ns = times.iter().map(|t| t.as_nanos() as f64).sum::<f64>() / n as f64;
+        let var = times
+            .iter()
+            .map(|t| {
+                let d = t.as_nanos() as f64 - mean_ns;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64;
+        Sample {
+            name: name.to_string(),
+            mean: Duration::from_nanos(mean_ns as u64),
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+            min: *times.iter().min().unwrap(),
+            iters: n,
+        }
+    }
+
+    /// Measure throughput in MB/s for a body processing `bytes` per call.
+    pub fn throughput<R, F: FnMut() -> R>(&self, name: &str, bytes: usize, f: F) -> (Sample, f64) {
+        let s = self.run(name, f);
+        let mbs = bytes as f64 / 1e6 / s.mean.as_secs_f64().max(1e-12);
+        (s, mbs)
+    }
+}
+
+/// One point on a rate-distortion curve.
+#[derive(Clone, Debug)]
+pub struct RdPoint {
+    /// Relative (value-range) error bound used.
+    pub rel_eb: f64,
+    /// Quality metrics at that bound.
+    pub metrics: Metrics,
+}
+
+/// Sweep a pipeline over relative error bounds — the generator behind every
+/// rate-distortion figure (Figs. 4, 6, 7).
+pub fn rd_sweep(
+    compressor: &dyn Compressor,
+    field: &Field,
+    rel_bounds: &[f64],
+    radius: u32,
+) -> Vec<RdPoint> {
+    let mut out = Vec::with_capacity(rel_bounds.len());
+    for &rel in rel_bounds {
+        let conf = CompressConf::with_radius(ErrorBound::Rel(rel), radius);
+        let stream = match compressor.compress(field, &conf) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("# {} failed at rel={rel}: {e}", compressor.name());
+                continue;
+            }
+        };
+        let len = stream.len();
+        match decompress_any(&stream) {
+            Ok(dec) => out.push(RdPoint { rel_eb: rel, metrics: metrics::evaluate(field, &dec, len) }),
+            Err(e) => eprintln!("# {} decode failed at rel={rel}: {e}", compressor.name()),
+        }
+    }
+    out
+}
+
+/// Print an RD series in the grep-able format used by EXPERIMENTS.md:
+/// `rd,<figure>,<dataset>,<pipeline>,<rel_eb>,<bitrate>,<psnr>,<ratio>`.
+pub fn print_rd_series(figure: &str, dataset: &str, pipeline: &str, points: &[RdPoint]) {
+    for p in points {
+        println!(
+            "rd,{figure},{dataset},{pipeline},{:.3e},{:.4},{:.2},{:.2}",
+            p.rel_eb, p.metrics.bit_rate, p.metrics.psnr, p.metrics.ratio
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline;
+    use crate::util::prop;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let b = Bench { warmup: Duration::ZERO, measure: Duration::from_millis(30), max_iters: 10 };
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.iters >= 1);
+        assert!(s.min <= s.mean + s.stddev);
+    }
+
+    #[test]
+    fn rd_sweep_monotonic_ratio() {
+        let mut rng = crate::util::rng::Pcg32::seeded(17);
+        let dims = [32usize, 32];
+        let f = Field::f32("t", &dims, prop::smooth_field(&mut rng, &dims)).unwrap();
+        let c = pipeline::by_name("sz3-lr").unwrap();
+        let pts = rd_sweep(c.as_ref(), &f, &[1e-1, 1e-3, 1e-5], 32768);
+        assert_eq!(pts.len(), 3);
+        // looser bound => higher ratio (weak monotonicity with slack)
+        assert!(pts[0].metrics.ratio >= pts[2].metrics.ratio * 0.8);
+        // tighter bound => higher psnr
+        assert!(pts[2].metrics.psnr > pts[0].metrics.psnr);
+    }
+}

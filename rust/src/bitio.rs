@@ -1,0 +1,258 @@
+//! Bit-level I/O substrate.
+//!
+//! MSB-first bit writer/reader used by the Huffman encoders, the arithmetic
+//! coder and the bitplane (unpred-aware) quantizer. Writes accumulate into a
+//! `Vec<u8>`; reads borrow a byte slice.
+
+use crate::error::{Result, SzError};
+
+/// MSB-first bit writer with a 64-bit accumulator (word-wise `put_bits`
+/// instead of bit-serial — the encoder hot path).
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits accumulated in the low end of `acc`, always < 8 after a flush.
+    nbits: u32,
+    acc: u64,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Writer with pre-allocated capacity (bytes).
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bytes), nbits: 0, acc: 0 }
+    }
+
+    #[inline]
+    fn flush_bytes(&mut self) {
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.buf.push((self.acc >> self.nbits) as u8);
+        }
+        self.acc &= (1u64 << self.nbits) - 1;
+    }
+
+    /// Write a single bit (LSB of `bit`).
+    #[inline]
+    pub fn put_bit(&mut self, bit: u32) {
+        self.acc = (self.acc << 1) | (bit & 1) as u64;
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.buf.push(self.acc as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Write the low `n` bits of `value`, MSB first. `n` ≤ 64.
+    #[inline]
+    pub fn put_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        let value = if n == 64 { value } else { value & ((1u64 << n) - 1) };
+        if self.nbits + n <= 64 {
+            self.acc = (self.acc << n) | value;
+            self.nbits += n;
+            self.flush_bytes();
+        } else {
+            // split: high part first (MSB-first order)
+            let hi = n - (64 - self.nbits);
+            self.put_bits(value >> hi, 64 - self.nbits);
+            self.put_bits(value & ((1u64 << hi) - 1), hi);
+        }
+    }
+
+    /// Number of complete bytes written so far (excluding partial byte).
+    pub fn byte_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Total bits written.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush pending bits (zero-padded) and return the byte buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            let pad = 8 - self.nbits;
+            self.buf.push((self.acc << pad) as u8);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next bit index (0 = MSB of buf[0]).
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    /// Reader over `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Total bits available.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8
+    }
+
+    /// Bits consumed so far.
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn get_bit(&mut self) -> Result<u32> {
+        let byte = self.pos >> 3;
+        if byte >= self.buf.len() {
+            return Err(SzError::corrupt("bit stream exhausted"));
+        }
+        let bit = (self.buf[byte] >> (7 - (self.pos & 7))) & 1;
+        self.pos += 1;
+        Ok(bit as u32)
+    }
+
+    /// Read one bit without an exhaustion check (returns 0 past the end).
+    /// The arithmetic decoder relies on an implicit infinite zero tail.
+    #[inline]
+    pub fn get_bit_or_zero(&mut self) -> u32 {
+        let byte = self.pos >> 3;
+        if byte >= self.buf.len() {
+            self.pos += 1;
+            return 0;
+        }
+        let bit = (self.buf[byte] >> (7 - (self.pos & 7))) & 1;
+        self.pos += 1;
+        bit as u32
+    }
+
+    /// Read `n` bits (MSB first) as a u64.
+    #[inline]
+    pub fn get_bits(&mut self, n: u32) -> Result<u64> {
+        debug_assert!(n <= 64);
+        if self.pos + n as usize > self.bit_len() {
+            return Err(SzError::corrupt("bit stream exhausted"));
+        }
+        Ok(self.get_bits_unchecked(n))
+    }
+
+    /// Read `n` ≤ 57 bits without an exhaustion check (zero-padded past the
+    /// end). Word-wise fast path used by the LUT Huffman decoder.
+    #[inline]
+    pub fn get_bits_unchecked(&mut self, n: u32) -> u64 {
+        let v = self.peek_bits(n);
+        self.pos += n as usize;
+        v
+    }
+
+    /// Peek `n` ≤ 57 bits at the cursor (MSB first), zero-padded past the
+    /// end of the buffer.
+    #[inline]
+    pub fn peek_bits(&self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        let byte = self.pos >> 3;
+        let bit = (self.pos & 7) as u32;
+        let mut word = 0u64;
+        // load up to 8 bytes starting at `byte`
+        let avail = self.buf.len().saturating_sub(byte).min(8);
+        for i in 0..avail {
+            word |= (self.buf[byte + i] as u64) << (56 - 8 * i);
+        }
+        (word << bit) >> (64 - n as u64)
+    }
+
+    /// Advance the cursor by `n` bits (after a successful `peek_bits`).
+    #[inline]
+    pub fn skip_bits(&mut self, n: u32) {
+        self.pos += n as usize;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Pcg32};
+
+    #[test]
+    fn roundtrip_bits() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b1011, 4);
+        w.put_bits(0xdead, 16);
+        w.put_bit(1);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(4).unwrap(), 0b1011);
+        assert_eq!(r.get_bits(16).unwrap(), 0xdead);
+        assert_eq!(r.get_bit().unwrap(), 1);
+    }
+
+    #[test]
+    fn empty_reader_errors() {
+        let mut r = BitReader::new(&[]);
+        assert!(r.get_bit().is_err());
+        assert_eq!(r.get_bit_or_zero(), 0);
+    }
+
+    #[test]
+    fn bit_len_tracks() {
+        let mut w = BitWriter::new();
+        for i in 0..13 {
+            w.put_bit(i & 1);
+        }
+        assert_eq!(w.bit_len(), 13);
+        assert_eq!(w.finish().len(), 2);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_bitstrings() {
+        prop::cases(200, 0xb17, |rng| {
+            let n = rng.below(500) + 1;
+            let items: Vec<(u64, u32)> = (0..n)
+                .map(|_| {
+                    let bits = rng.below(33) as u32 + 1;
+                    let v = rng.next_u64() & ((1u64 << bits) - 1).max(1);
+                    (v & if bits == 64 { u64::MAX } else { (1 << bits) - 1 }, bits)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, b) in &items {
+                w.put_bits(v, b);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &(v, b) in &items {
+                assert_eq!(r.get_bits(b).unwrap(), v);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_single_bits() {
+        prop::cases(50, 0xb18, |rng| {
+            let bits: Vec<u32> = (0..rng.below(100) + 1).map(|_| rng.next_u32() & 1).collect();
+            let mut w = BitWriter::new();
+            for &b in &bits {
+                w.put_bit(b);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &b in &bits {
+                assert_eq!(r.get_bit().unwrap(), b);
+            }
+        });
+    }
+
+    #[allow(unused)]
+    fn _use_pcg(_: Pcg32) {}
+}

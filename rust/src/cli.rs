@@ -1,0 +1,137 @@
+//! Tiny CLI argument parser substrate (clap is unavailable offline).
+//!
+//! Grammar: `sz3 <subcommand> [--flag value] [--switch] [positional...]`.
+//! Flags may also be written `--flag=value`. A bare `--switch` is only
+//! recognized when followed by another `--flag` or the end of the line —
+//! `--switch positional` is ambiguous and parses as `--switch=positional`
+//! (write `--switch` last, or use `=` forms, to avoid it).
+
+use crate::error::{Result, SzError};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token.
+    pub subcommand: String,
+    /// `--key value` / `--key=value` pairs.
+    pub flags: HashMap<String, String>,
+    /// Bare `--switch` tokens.
+    pub switches: Vec<String>,
+    /// Remaining positional arguments.
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of argument tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_empty() {
+                out.subcommand = tok;
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Required string flag.
+    pub fn need(&self, key: &str) -> Result<&str> {
+        self.flags
+            .get(key)
+            .map(String::as_str)
+            .ok_or_else(|| SzError::config(format!("missing required --{key}")))
+    }
+
+    /// Optional string flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    /// Optional typed flag with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                SzError::config(format!("--{key}: cannot parse '{v}'"))
+            }),
+        }
+    }
+
+    /// True if `--switch` was passed.
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Parse a `--dims 100,500,500` style flag.
+    pub fn dims(&self, key: &str) -> Result<Vec<usize>> {
+        let raw = self.need(key)?;
+        raw.split(',')
+            .map(|p| {
+                p.trim()
+                    .parse::<usize>()
+                    .map_err(|_| SzError::config(format!("bad dimension '{p}'")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn full_grammar() {
+        let a = parse(&[
+            "compress", "--input", "x.f32", "--dims=4,5", "pos1", "--fast",
+        ]);
+        assert_eq!(a.subcommand, "compress");
+        assert_eq!(a.need("input").unwrap(), "x.f32");
+        assert_eq!(a.dims("dims").unwrap(), vec![4, 5]);
+        assert!(a.has("fast"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+        // ambiguity rule: a switch followed by a bare token consumes it
+        let b = parse(&["x", "--fast", "pos1"]);
+        assert_eq!(b.get("fast"), Some("pos1"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["x", "--eb", "1e-3"]);
+        assert_eq!(a.get_or("eb", 0.0f64).unwrap(), 1e-3);
+        assert_eq!(a.get_or("radius", 32768u32).unwrap(), 32768);
+        assert!(a.get_or::<f64>("eb2", 1.0).is_ok());
+    }
+
+    #[test]
+    fn missing_required_flag_errors() {
+        let a = parse(&["x"]);
+        assert!(a.need("input").is_err());
+        assert!(a.get_or::<u32>("eb", 1).is_ok());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["x", "--lo", "-5"]);
+        assert_eq!(a.get_or("lo", 0i32).unwrap(), -5);
+    }
+}

@@ -1,0 +1,164 @@
+//! Configuration system: JSON parsing substrate plus the typed job config
+//! consumed by the CLI and the streaming coordinator.
+
+pub mod json;
+
+pub use json::Json;
+
+use crate::error::{Result, SzError};
+use crate::pipeline::{CompressConf, ErrorBound};
+
+/// A full compression job description (CLI `--config` file):
+///
+/// ```json
+/// {
+///   "pipeline": "sz3-lr",
+///   "bound": {"mode": "abs", "value": 1e-3},
+///   "radius": 32768,
+///   "workers": 4,
+///   "chunk_elems": 1048576,
+///   "queue_depth": 8,
+///   "use_pjrt": true
+/// }
+/// ```
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    /// Pipeline registry name.
+    pub pipeline: String,
+    /// Error-bound mode + value.
+    pub bound: ErrorBound,
+    /// Quantizer radius.
+    pub radius: u32,
+    /// Coordinator worker threads.
+    pub workers: usize,
+    /// Elements per streamed chunk.
+    pub chunk_elems: usize,
+    /// Bounded queue depth (backpressure window).
+    pub queue_depth: usize,
+    /// Use the PJRT analysis engine when artifacts are present.
+    pub use_pjrt: bool,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            pipeline: "sz3-lr".to_string(),
+            bound: ErrorBound::Rel(1e-3),
+            radius: 32768,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            chunk_elems: 1 << 21,
+            queue_depth: 8,
+            use_pjrt: false,
+        }
+    }
+}
+
+impl JobConfig {
+    /// Parse from a JSON document; unknown keys are rejected to catch typos.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| SzError::config("job config must be a JSON object"))?;
+        let mut cfg = JobConfig::default();
+        for (key, val) in obj {
+            match key.as_str() {
+                "pipeline" => {
+                    cfg.pipeline = val
+                        .as_str()
+                        .ok_or_else(|| SzError::config("pipeline must be a string"))?
+                        .to_string();
+                }
+                "bound" => {
+                    let mode = val
+                        .get("mode")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| SzError::config("bound.mode missing"))?;
+                    let value = val
+                        .get("value")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| SzError::config("bound.value missing"))?;
+                    cfg.bound = match mode {
+                        "abs" => ErrorBound::Abs(value),
+                        "rel" => ErrorBound::Rel(value),
+                        "pwrel" => ErrorBound::PwRel(value),
+                        other => {
+                            return Err(SzError::config(format!("unknown bound mode {other}")))
+                        }
+                    };
+                }
+                "radius" => {
+                    cfg.radius = val
+                        .as_usize()
+                        .ok_or_else(|| SzError::config("radius must be a number"))?
+                        as u32;
+                }
+                "workers" => {
+                    cfg.workers = val
+                        .as_usize()
+                        .ok_or_else(|| SzError::config("workers must be a number"))?
+                        .max(1);
+                }
+                "chunk_elems" => {
+                    cfg.chunk_elems = val
+                        .as_usize()
+                        .ok_or_else(|| SzError::config("chunk_elems must be a number"))?
+                        .max(1024);
+                }
+                "queue_depth" => {
+                    cfg.queue_depth = val
+                        .as_usize()
+                        .ok_or_else(|| SzError::config("queue_depth must be a number"))?
+                        .max(1);
+                }
+                "use_pjrt" => {
+                    cfg.use_pjrt = val
+                        .as_bool()
+                        .ok_or_else(|| SzError::config("use_pjrt must be a bool"))?;
+                }
+                other => {
+                    return Err(SzError::config(format!("unknown config key '{other}'")))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// The per-field compression configuration.
+    pub fn compress_conf(&self) -> CompressConf {
+        CompressConf::with_radius(self.bound, self.radius)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = JobConfig::from_json(
+            r#"{"pipeline": "sz3-interp", "bound": {"mode": "abs", "value": 0.001},
+                "radius": 512, "workers": 2, "chunk_elems": 4096,
+                "queue_depth": 3, "use_pjrt": true}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.pipeline, "sz3-interp");
+        assert_eq!(cfg.bound, ErrorBound::Abs(0.001));
+        assert_eq!(cfg.radius, 512);
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.chunk_elems, 4096);
+        assert!(cfg.use_pjrt);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let cfg = JobConfig::from_json(r#"{"pipeline": "sz3-lr"}"#).unwrap();
+        assert_eq!(cfg.pipeline, "sz3-lr");
+        assert!(cfg.workers >= 1);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(JobConfig::from_json(r#"{"pipelin": "typo"}"#).is_err());
+    }
+}

@@ -1,0 +1,457 @@
+//! L3 streaming coordinator: the data-pipeline face of the framework.
+//!
+//! Scientific simulations emit snapshots field-by-field; the coordinator
+//! turns that stream into bounded-memory parallel compression:
+//!
+//! ```text
+//!  source ──► chunker ──► bounded queue ──► worker pool ──► reorder ──► sink
+//!             (shard       (backpressure)    (N compress     (ordered
+//!              planner)                       workers)        delivery)
+//! ```
+//!
+//! * **Sharding**: fields are split along the slowest axis into chunks of
+//!   ~`chunk_elems` elements; each chunk is an independent compression unit.
+//! * **Backpressure**: the work queue is a bounded `sync_channel`; when
+//!   workers fall behind, the producer blocks instead of buffering the
+//!   whole snapshot (blocked time is reported).
+//! * **Rebalancing**: workers pull from the shared queue (work stealing),
+//!   so a slow shard doesn't idle the pool; per-worker counters expose the
+//!   achieved balance.
+//! * Decompression reverses chunking and verifies shapes.
+
+use crate::data::{Field, FieldValues};
+use crate::error::{Result, SzError};
+use crate::pipeline::{self, CompressConf, Compressor};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One compressed shard of a field.
+#[derive(Clone, Debug)]
+pub struct CompressedChunk {
+    /// Global sequence number (delivery order).
+    pub seq: usize,
+    /// Source field name.
+    pub field: String,
+    /// Index of this chunk within its field.
+    pub chunk_index: usize,
+    /// Number of chunks in the field.
+    pub chunk_count: usize,
+    /// Row range [start, end) along the split axis.
+    pub rows: (usize, usize),
+    /// Full field dims.
+    pub field_dims: Vec<usize>,
+    /// The compressed stream.
+    pub stream: Vec<u8>,
+    /// Uncompressed bytes of this chunk.
+    pub raw_bytes: usize,
+}
+
+/// Aggregated run metrics.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    /// Fields consumed.
+    pub fields: usize,
+    /// Chunks compressed.
+    pub chunks: usize,
+    /// Total uncompressed bytes.
+    pub bytes_in: u64,
+    /// Total compressed bytes.
+    pub bytes_out: u64,
+    /// Wall-clock duration.
+    pub elapsed: Duration,
+    /// Time the producer spent blocked on the full queue (backpressure).
+    pub producer_blocked: Duration,
+    /// Chunks compressed per worker (work-stealing balance).
+    pub per_worker: Vec<usize>,
+}
+
+impl RunReport {
+    /// Overall compression ratio.
+    pub fn ratio(&self) -> f64 {
+        self.bytes_in as f64 / self.bytes_out.max(1) as f64
+    }
+
+    /// End-to-end throughput over uncompressed bytes (MB/s).
+    pub fn throughput_mbs(&self) -> f64 {
+        self.bytes_in as f64 / 1e6 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+impl std::fmt::Display for RunReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} fields, {} chunks: {:.2} MB -> {:.2} MB (ratio {:.2}) in {:.2?} \
+             ({:.1} MB/s, producer blocked {:.2?}, worker balance {:?})",
+            self.fields,
+            self.chunks,
+            self.bytes_in as f64 / 1e6,
+            self.bytes_out as f64 / 1e6,
+            self.ratio(),
+            self.elapsed,
+            self.throughput_mbs(),
+            self.producer_blocked,
+            self.per_worker
+        )
+    }
+}
+
+/// Shard planner: split a field into row ranges of ~`chunk_elems`.
+pub fn plan_chunks(field: &Field, chunk_elems: usize) -> Vec<(usize, usize)> {
+    let dims = field.shape.dims();
+    let row_elems: usize = dims[1..].iter().product::<usize>().max(1);
+    let rows = dims[0];
+    let rows_per_chunk = (chunk_elems / row_elems).clamp(1, rows);
+    let mut out = Vec::new();
+    let mut r = 0;
+    while r < rows {
+        let e = (r + rows_per_chunk).min(rows);
+        out.push((r, e));
+        r = e;
+    }
+    out
+}
+
+fn slice_rows(field: &Field, rows: (usize, usize)) -> Result<Field> {
+    let dims = field.shape.dims();
+    let row_elems: usize = dims[1..].iter().product::<usize>().max(1);
+    let (start, end) = rows;
+    let mut new_dims = dims.to_vec();
+    new_dims[0] = end - start;
+    let a = start * row_elems;
+    let b = end * row_elems;
+    let values = match &field.values {
+        FieldValues::F32(v) => FieldValues::F32(v[a..b].to_vec()),
+        FieldValues::F64(v) => FieldValues::F64(v[a..b].to_vec()),
+        FieldValues::I32(v) => FieldValues::I32(v[a..b].to_vec()),
+    };
+    Field::new(field.name.clone(), &new_dims, values)
+}
+
+/// The streaming compression coordinator.
+pub struct Coordinator {
+    /// Pipeline registry name.
+    pub pipeline: String,
+    /// Per-chunk compression configuration.
+    pub conf: CompressConf,
+    /// Worker threads.
+    pub workers: usize,
+    /// Elements per chunk (shard size).
+    pub chunk_elems: usize,
+    /// Bounded queue depth (backpressure window).
+    pub queue_depth: usize,
+    /// Factory for per-worker compressor instances (lets callers inject a
+    /// PJRT-backed pipeline; defaults to the registry).
+    pub make_compressor: Arc<dyn Fn() -> Box<dyn Compressor> + Send + Sync>,
+}
+
+impl Coordinator {
+    /// Coordinator from a job config (registry pipelines).
+    pub fn from_config(cfg: &crate::config::JobConfig) -> Result<Self> {
+        let name = cfg.pipeline.clone();
+        pipeline::by_name(&name)
+            .ok_or_else(|| SzError::config(format!("unknown pipeline '{name}'")))?;
+        let n2 = name.clone();
+        Ok(Coordinator {
+            pipeline: name,
+            conf: cfg.compress_conf(),
+            workers: cfg.workers,
+            chunk_elems: cfg.chunk_elems,
+            queue_depth: cfg.queue_depth,
+            make_compressor: Arc::new(move || pipeline::by_name(&n2).expect("validated")),
+        })
+    }
+
+    /// Stream `source` through the worker pool; deliver ordered chunks to
+    /// `sink`. Returns aggregate metrics.
+    pub fn run<I, S>(&self, source: I, mut sink: S) -> Result<RunReport>
+    where
+        I: IntoIterator<Item = Field>,
+        S: FnMut(CompressedChunk),
+    {
+        struct Job {
+            seq: usize,
+            field: Arc<Field>,
+            chunk_index: usize,
+            chunk_count: usize,
+            rows: (usize, usize),
+        }
+
+        let started = Instant::now();
+        let (work_tx, work_rx) = sync_channel::<Job>(self.queue_depth);
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let (done_tx, done_rx) = sync_channel::<Result<CompressedChunk>>(self.queue_depth * 2);
+        let worker_counts: Arc<Vec<AtomicU64>> =
+            Arc::new((0..self.workers).map(|_| AtomicU64::new(0)).collect());
+
+        let mut handles = Vec::new();
+        for wid in 0..self.workers {
+            let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&work_rx);
+            let tx = done_tx.clone();
+            let conf = self.conf.clone();
+            let make = Arc::clone(&self.make_compressor);
+            let counts = Arc::clone(&worker_counts);
+            handles.push(std::thread::spawn(move || {
+                let compressor = make();
+                loop {
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(j) => j,
+                        Err(_) => break, // queue closed
+                    };
+                    let result = slice_rows(&job.field, job.rows).and_then(|chunk| {
+                        let raw = chunk.nbytes();
+                        let stream = compressor.compress(&chunk, &conf)?;
+                        Ok(CompressedChunk {
+                            seq: job.seq,
+                            field: job.field.name.clone(),
+                            chunk_index: job.chunk_index,
+                            chunk_count: job.chunk_count,
+                            rows: job.rows,
+                            field_dims: job.field.shape.dims().to_vec(),
+                            stream,
+                            raw_bytes: raw,
+                        })
+                    });
+                    counts[wid].fetch_add(1, Ordering::Relaxed);
+                    if tx.send(result).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        drop(done_tx);
+
+        // producer + ordered sink on this thread: interleave submissions
+        // with draining the done queue (reorder buffer keyed by seq).
+        let mut report = RunReport { per_worker: vec![0; self.workers], ..Default::default() };
+        let mut pending: std::collections::BTreeMap<usize, CompressedChunk> =
+            std::collections::BTreeMap::new();
+        let mut next_deliver = 0usize;
+        let mut first_err: Option<SzError> = None;
+
+        let deliver =
+            |pending: &mut std::collections::BTreeMap<usize, CompressedChunk>,
+             next: &mut usize,
+             report: &mut RunReport,
+             sink: &mut S| {
+                while let Some(chunk) = pending.remove(next) {
+                    report.chunks += 1;
+                    report.bytes_in += chunk.raw_bytes as u64;
+                    report.bytes_out += chunk.stream.len() as u64;
+                    sink(chunk);
+                    *next += 1;
+                }
+            };
+
+        let mut seq = 0usize;
+        for field in source {
+            report.fields += 1;
+            let field = Arc::new(field);
+            let chunks = plan_chunks(&field, self.chunk_elems);
+            let count = chunks.len();
+            for (ci, rows) in chunks.into_iter().enumerate() {
+                let job = Job {
+                    seq,
+                    field: Arc::clone(&field),
+                    chunk_index: ci,
+                    chunk_count: count,
+                    rows,
+                };
+                seq += 1;
+                // drain completions opportunistically to keep queues moving
+                while let Ok(done) = done_rx.try_recv() {
+                    match done {
+                        Ok(c) => {
+                            pending.insert(c.seq, c);
+                        }
+                        Err(e) => {
+                            first_err.get_or_insert(e);
+                        }
+                    }
+                    deliver(&mut pending, &mut next_deliver, &mut report, &mut sink);
+                }
+                let t0 = Instant::now();
+                work_tx
+                    .send(job)
+                    .map_err(|_| SzError::Runtime("worker pool died".into()))?;
+                report.producer_blocked += t0.elapsed();
+            }
+        }
+        drop(work_tx); // close the queue; workers exit when drained
+
+        for done in done_rx.iter() {
+            match done {
+                Ok(c) => {
+                    pending.insert(c.seq, c);
+                }
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+            deliver(&mut pending, &mut next_deliver, &mut report, &mut sink);
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        deliver(&mut pending, &mut next_deliver, &mut report, &mut sink);
+        for (i, c) in worker_counts.iter().enumerate() {
+            report.per_worker[i] = c.load(Ordering::Relaxed) as usize;
+        }
+        report.elapsed = started.elapsed();
+        Ok(report)
+    }
+}
+
+/// Reassemble a field from its ordered chunks (inverse of the chunker).
+pub fn reassemble(chunks: &[CompressedChunk]) -> Result<Field> {
+    if chunks.is_empty() {
+        return Err(SzError::config("no chunks to reassemble"));
+    }
+    let mut sorted: Vec<&CompressedChunk> = chunks.iter().collect();
+    sorted.sort_by_key(|c| c.chunk_index);
+    if sorted.len() != sorted[0].chunk_count {
+        return Err(SzError::corrupt(format!(
+            "field {}: have {} of {} chunks",
+            sorted[0].field,
+            sorted.len(),
+            sorted[0].chunk_count
+        )));
+    }
+    let full_dims = sorted[0].field_dims.clone();
+    let mut fields = Vec::with_capacity(sorted.len());
+    for c in &sorted {
+        fields.push(pipeline::decompress_any(&c.stream)?);
+    }
+    let values = match &fields[0].values {
+        FieldValues::F32(_) => {
+            let mut v = Vec::new();
+            for f in &fields {
+                match &f.values {
+                    FieldValues::F32(x) => v.extend_from_slice(x),
+                    _ => return Err(SzError::corrupt("mixed chunk dtypes")),
+                }
+            }
+            FieldValues::F32(v)
+        }
+        FieldValues::F64(_) => {
+            let mut v = Vec::new();
+            for f in &fields {
+                match &f.values {
+                    FieldValues::F64(x) => v.extend_from_slice(x),
+                    _ => return Err(SzError::corrupt("mixed chunk dtypes")),
+                }
+            }
+            FieldValues::F64(v)
+        }
+        FieldValues::I32(_) => {
+            let mut v = Vec::new();
+            for f in &fields {
+                match &f.values {
+                    FieldValues::I32(x) => v.extend_from_slice(x),
+                    _ => return Err(SzError::corrupt("mixed chunk dtypes")),
+                }
+            }
+            FieldValues::I32(v)
+        }
+    };
+    Field::new(sorted[0].field.clone(), &full_dims, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::ErrorBound;
+    use crate::util::prop;
+    use std::collections::HashMap;
+
+    fn coordinator(pipeline: &str, workers: usize) -> Coordinator {
+        let cfg = crate::config::JobConfig {
+            pipeline: pipeline.into(),
+            bound: ErrorBound::Abs(1e-3),
+            workers,
+            chunk_elems: 4096,
+            queue_depth: 2,
+            ..Default::default()
+        };
+        Coordinator::from_config(&cfg).unwrap()
+    }
+
+    fn fields(n: usize, seed: u64) -> Vec<Field> {
+        let mut rng = crate::util::rng::Pcg32::seeded(seed);
+        (0..n)
+            .map(|i| {
+                let dims = [24usize, 16, 16];
+                Field::f32(format!("f{i}"), &dims, prop::smooth_field(&mut rng, &dims))
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ordered_delivery_and_roundtrip() {
+        let coord = coordinator("sz3-lr", 4);
+        let input = fields(3, 11);
+        let mut chunks: Vec<CompressedChunk> = Vec::new();
+        let report = coord.run(input.clone(), |c| chunks.push(c)).unwrap();
+        assert_eq!(report.fields, 3);
+        assert_eq!(report.chunks, chunks.len());
+        // in-order delivery
+        for (i, c) in chunks.iter().enumerate() {
+            assert_eq!(c.seq, i);
+        }
+        // reassemble and verify bound per field
+        let mut by_field: HashMap<String, Vec<CompressedChunk>> = HashMap::new();
+        for c in chunks {
+            by_field.entry(c.field.clone()).or_default().push(c);
+        }
+        for f in &input {
+            let rec = reassemble(&by_field[&f.name]).unwrap();
+            assert_eq!(rec.shape.dims(), f.shape.dims());
+            for (o, d) in f.values.to_f64_vec().iter().zip(rec.values.to_f64_vec().iter())
+            {
+                assert!((o - d).abs() <= 1e-3 * (1.0 + 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn work_is_distributed() {
+        let coord = coordinator("sz3-lr", 3);
+        let report = coord.run(fields(4, 12), |_| {}).unwrap();
+        let busy = report.per_worker.iter().filter(|&&n| n > 0).count();
+        assert!(busy >= 2, "work stealing should engage ≥2 workers: {:?}", report.per_worker);
+        assert_eq!(report.per_worker.iter().sum::<usize>(), report.chunks);
+    }
+
+    #[test]
+    fn single_worker_deterministic_output() {
+        let coord = coordinator("sz3-interp", 1);
+        let mut out1 = Vec::new();
+        let mut out2 = Vec::new();
+        coord.run(fields(2, 13), |c| out1.push(c.stream)).unwrap();
+        coord.run(fields(2, 13), |c| out2.push(c.stream)).unwrap();
+        assert_eq!(out1, out2);
+    }
+
+    #[test]
+    fn plan_chunks_covers_rows() {
+        let f = fields(1, 14).remove(0);
+        let plan = plan_chunks(&f, 1000);
+        assert_eq!(plan.first().unwrap().0, 0);
+        assert_eq!(plan.last().unwrap().1, f.shape.dims()[0]);
+        for w in plan.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn unknown_pipeline_rejected() {
+        let cfg = crate::config::JobConfig { pipeline: "nope".into(), ..Default::default() };
+        assert!(Coordinator::from_config(&cfg).is_err());
+    }
+}

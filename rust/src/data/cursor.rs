@@ -1,0 +1,194 @@
+//! The multidimensional iterator (paper §6.1.2).
+//!
+//! `NdCursor` walks an N-d buffer in row-major order and exposes neighbor
+//! access with boundary handling — `neighbor(&[-1, -1, -1])` is the paper's
+//! `iterator.move(-1,-1,-1)`. Out-of-range neighbors read as zero, which is
+//! exactly the Lorenzo boundary convention used by SZ.
+//!
+//! During compression the underlying buffer is progressively overwritten
+//! with *decompressed* values, so predictors that read neighbors see the
+//! same values the decompressor will see — the invariant that makes
+//! error-bounded prediction correct.
+
+use super::shape::{Shape, MAX_DIMS};
+use super::Scalar;
+
+/// Row-major cursor over a mutable scalar buffer.
+pub struct NdCursor<'a, T: Scalar> {
+    data: &'a mut [T],
+    shape: &'a Shape,
+    idx: [usize; MAX_DIMS],
+    flat: usize,
+}
+
+impl<'a, T: Scalar> NdCursor<'a, T> {
+    /// Cursor at the origin of `data` shaped by `shape`.
+    pub fn new(data: &'a mut [T], shape: &'a Shape) -> Self {
+        debug_assert_eq!(data.len(), shape.len());
+        NdCursor { data, shape, idx: [0; MAX_DIMS], flat: 0 }
+    }
+
+    /// Number of axes.
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.shape.ndim()
+    }
+
+    /// Current multi-index.
+    #[inline]
+    pub fn index(&self) -> &[usize] {
+        &self.idx[..self.shape.ndim()]
+    }
+
+    /// Current flat offset.
+    #[inline]
+    pub fn flat(&self) -> usize {
+        self.flat
+    }
+
+    /// Value at the cursor.
+    #[inline]
+    pub fn value(&self) -> T {
+        self.data[self.flat]
+    }
+
+    /// Overwrite the value at the cursor (with the decompressed value).
+    #[inline]
+    pub fn set(&mut self, v: T) {
+        self.data[self.flat] = v;
+    }
+
+    /// Value at `idx + off` (one `off` entry per axis); zero outside bounds.
+    #[inline]
+    pub fn neighbor(&self, off: &[isize]) -> T {
+        debug_assert_eq!(off.len(), self.shape.ndim());
+        match self.shape.offset_shifted(self.index(), off) {
+            Some(f) => self.data[f],
+            None => T::zero(),
+        }
+    }
+
+    /// f64 view of [`Self::neighbor`] — predictors compute in f64.
+    #[inline]
+    pub fn neighbor_f64(&self, off: &[isize]) -> f64 {
+        self.neighbor(off).to_f64()
+    }
+
+    /// True if the point at `idx + off` exists (all axes in range).
+    #[inline]
+    pub fn in_bounds(&self, off: &[isize]) -> bool {
+        self.shape.offset_shifted(self.index(), off).is_some()
+    }
+
+    /// Advance one position in row-major order; false after the last point.
+    #[inline]
+    pub fn advance(&mut self) -> bool {
+        let nd = self.shape.ndim();
+        let dims = self.shape.dims();
+        // Fast path: bump the innermost axis.
+        self.idx[nd - 1] += 1;
+        self.flat += 1;
+        if self.idx[nd - 1] < dims[nd - 1] {
+            return true;
+        }
+        self.idx[nd - 1] = 0;
+        for d in (0..nd - 1).rev() {
+            self.idx[d] += 1;
+            if self.idx[d] < dims[d] {
+                return self.flat < self.shape.len();
+            }
+            self.idx[d] = 0;
+        }
+        false
+    }
+
+    /// Jump to an absolute multi-index.
+    pub fn seek(&mut self, idx: &[usize]) {
+        debug_assert_eq!(idx.len(), self.shape.ndim());
+        self.idx[..idx.len()].copy_from_slice(idx);
+        self.flat = self.shape.offset(idx);
+    }
+
+    /// Relative move by per-axis deltas (the paper's `iterator.move(..)`).
+    /// Debug-asserts the target is in bounds.
+    pub fn move_by(&mut self, off: &[isize]) {
+        let target = self
+            .shape
+            .offset_shifted(self.index(), off)
+            .expect("move_by out of bounds");
+        for (d, &o) in off.iter().enumerate() {
+            self.idx[d] = (self.idx[d] as isize + o) as usize;
+        }
+        self.flat = target;
+    }
+
+    /// Immutable access to the whole underlying buffer.
+    pub fn buffer(&self) -> &[T] {
+        self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Result;
+
+    #[test]
+    fn walk_and_neighbors_2d() -> Result<()> {
+        let shape = Shape::new(&[2, 3])?;
+        let mut data: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        let mut c = NdCursor::new(&mut data, &shape);
+        // origin: all backward neighbors are zero-padded
+        assert_eq!(c.neighbor(&[-1, 0]), 0.0);
+        assert_eq!(c.neighbor(&[0, -1]), 0.0);
+        assert!(c.advance()); // (0,1)
+        assert_eq!(c.value(), 1.0);
+        assert_eq!(c.neighbor(&[0, -1]), 0.0); // value at (0,0) = 0.0
+        c.seek(&[1, 2]);
+        assert_eq!(c.value(), 5.0);
+        assert_eq!(c.neighbor(&[-1, 0]), 2.0);
+        assert_eq!(c.neighbor(&[-1, -1]), 1.0);
+        assert_eq!(c.neighbor(&[0, -1]), 4.0);
+        Ok(())
+    }
+
+    #[test]
+    fn advance_visits_every_point_once() -> Result<()> {
+        let shape = Shape::new(&[3, 2, 4])?;
+        let mut data = vec![0f32; 24];
+        let mut c = NdCursor::new(&mut data, &shape);
+        let mut visited = vec![false; 24];
+        loop {
+            assert!(!visited[c.flat()]);
+            visited[c.flat()] = true;
+            if !c.advance() {
+                break;
+            }
+        }
+        assert!(visited.iter().all(|&v| v));
+        Ok(())
+    }
+
+    #[test]
+    fn move_by_matches_paper_example() -> Result<()> {
+        let shape = Shape::new(&[3, 3, 3])?;
+        let mut data: Vec<f32> = (0..27).map(|x| x as f32).collect();
+        let mut c = NdCursor::new(&mut data, &shape);
+        c.seek(&[1, 1, 1]);
+        c.move_by(&[-1, -1, -1]); // upper-left neighbor, as in §6.1.2
+        assert_eq!(c.value(), 0.0);
+        assert_eq!(c.index(), &[0, 0, 0]);
+        Ok(())
+    }
+
+    #[test]
+    fn set_is_visible_to_neighbor_reads() -> Result<()> {
+        let shape = Shape::new(&[1, 4])?;
+        let mut data = vec![1f32, 2.0, 3.0, 4.0];
+        let mut c = NdCursor::new(&mut data, &shape);
+        c.set(10.0);
+        c.advance();
+        assert_eq!(c.neighbor(&[0, -1]), 10.0);
+        Ok(())
+    }
+}

@@ -1,0 +1,161 @@
+//! Owned multidimensional field of scalar data — the unit the coordinator
+//! streams and a pipeline compresses.
+
+use super::shape::Shape;
+use crate::error::{Result, SzError};
+
+/// Type-erased field values. The framework is generic over [`super::Scalar`];
+/// `FieldValues` is the boundary type used by CLI/coordinator/datagen.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FieldValues {
+    /// Single-precision floats.
+    F32(Vec<f32>),
+    /// Double-precision floats.
+    F64(Vec<f64>),
+    /// 32-bit signed integers (e.g. detector counts).
+    I32(Vec<i32>),
+}
+
+impl FieldValues {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            FieldValues::F32(v) => v.len(),
+            FieldValues::F64(v) => v.len(),
+            FieldValues::I32(v) => v.len(),
+        }
+    }
+
+    /// True if no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes of the native representation.
+    pub fn nbytes(&self) -> usize {
+        match self {
+            FieldValues::F32(v) => v.len() * 4,
+            FieldValues::F64(v) => v.len() * 8,
+            FieldValues::I32(v) => v.len() * 4,
+        }
+    }
+
+    /// Datatype tag for stream headers.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            FieldValues::F32(_) => "f32",
+            FieldValues::F64(_) => "f64",
+            FieldValues::I32(_) => "i32",
+        }
+    }
+
+    /// View the values as f64 (copying). Used by metrics.
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            FieldValues::F32(v) => v.iter().map(|&x| x as f64).collect(),
+            FieldValues::F64(v) => v.clone(),
+            FieldValues::I32(v) => v.iter().map(|&x| x as f64).collect(),
+        }
+    }
+}
+
+/// A named multidimensional array of scalars.
+#[derive(Clone, Debug)]
+pub struct Field {
+    /// Field name (e.g. `"ff|ff"`, `"velocity_x"`).
+    pub name: String,
+    /// Shape, slowest-varying axis first.
+    pub shape: Shape,
+    /// Values in row-major order.
+    pub values: FieldValues,
+}
+
+impl Field {
+    /// Build a field, validating shape/value agreement.
+    pub fn new(name: impl Into<String>, dims: &[usize], values: FieldValues) -> Result<Self> {
+        let shape = Shape::new(dims)?;
+        if shape.len() != values.len() {
+            return Err(SzError::Shape(format!(
+                "shape {:?} has {} elems but {} values given",
+                dims,
+                shape.len(),
+                values.len()
+            )));
+        }
+        Ok(Field { name: name.into(), shape, values })
+    }
+
+    /// Convenience f32 constructor.
+    pub fn f32(name: impl Into<String>, dims: &[usize], values: Vec<f32>) -> Result<Self> {
+        Self::new(name, dims, FieldValues::F32(values))
+    }
+
+    /// Convenience f64 constructor.
+    pub fn f64(name: impl Into<String>, dims: &[usize], values: Vec<f64>) -> Result<Self> {
+        Self::new(name, dims, FieldValues::F64(values))
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True if empty (cannot happen for validated fields).
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Native size in bytes (the numerator of compression ratio).
+    pub fn nbytes(&self) -> usize {
+        self.values.nbytes()
+    }
+
+    /// (min, max) of the data, in f64.
+    pub fn value_range(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        match &self.values {
+            FieldValues::F32(v) => {
+                for &x in v {
+                    lo = lo.min(x as f64);
+                    hi = hi.max(x as f64);
+                }
+            }
+            FieldValues::F64(v) => {
+                for &x in v {
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
+            }
+            FieldValues::I32(v) => {
+                for &x in v {
+                    lo = lo.min(x as f64);
+                    hi = hi.max(x as f64);
+                }
+            }
+        }
+        if lo > hi {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_range() {
+        let f = Field::f32("t", &[2, 3], vec![1.0, -2.0, 3.0, 0.5, 0.0, 9.0]).unwrap();
+        assert_eq!(f.len(), 6);
+        assert_eq!(f.nbytes(), 24);
+        assert_eq!(f.value_range(), (-2.0, 9.0));
+    }
+
+    #[test]
+    fn shape_value_mismatch() {
+        assert!(Field::f32("t", &[2, 3], vec![0.0; 5]).is_err());
+    }
+}

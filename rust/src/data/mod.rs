@@ -1,0 +1,109 @@
+//! Data substrate: datatype abstraction, field container, shape/stride math
+//! and the multidimensional iterator (§6.1.2 of the paper).
+//!
+//! The paper's SZ2 comparison point is a codebase with >120 functions
+//! specialized per datatype × dimensionality. SZ3 (and this port) instead
+//! use a single generic implementation: the [`Scalar`] trait abstracts the
+//! element type and [`cursor::NdCursor`] abstracts the dimensionality.
+
+pub mod cursor;
+pub mod field;
+pub mod shape;
+
+pub use cursor::NdCursor;
+pub use field::{Field, FieldValues};
+pub use shape::Shape;
+
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::error::Result;
+
+/// Datatype abstraction: the element types a pipeline can compress.
+///
+/// Mirrors the paper's `template<class T>` datatype abstraction. All
+/// arithmetic used by predictors/quantizers happens in f64 to make the
+/// error-bound guarantee independent of the storage type.
+pub trait Scalar: Copy + Send + Sync + PartialOrd + std::fmt::Debug + 'static {
+    /// Canonical name, stored in stream headers.
+    const NAME: &'static str;
+    /// Size in bytes of the storage representation.
+    const SIZE: usize;
+    /// Convert to f64 for arithmetic.
+    fn to_f64(self) -> f64;
+    /// Convert from f64 (rounding for integer types).
+    fn from_f64(v: f64) -> Self;
+    /// Additive identity.
+    fn zero() -> Self;
+    /// Serialize one value.
+    fn write(self, w: &mut ByteWriter);
+    /// Deserialize one value.
+    fn read(r: &mut ByteReader) -> Result<Self>;
+}
+
+impl Scalar for f32 {
+    const NAME: &'static str = "f32";
+    const SIZE: usize = 4;
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    fn write(self, w: &mut ByteWriter) {
+        w.put_f32(self)
+    }
+    fn read(r: &mut ByteReader) -> Result<Self> {
+        r.get_f32()
+    }
+}
+
+impl Scalar for f64 {
+    const NAME: &'static str = "f64";
+    const SIZE: usize = 8;
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    fn write(self, w: &mut ByteWriter) {
+        w.put_f64(self)
+    }
+    fn read(r: &mut ByteReader) -> Result<Self> {
+        r.get_f64()
+    }
+}
+
+impl Scalar for i32 {
+    const NAME: &'static str = "i32";
+    const SIZE: usize = 4;
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v.round() as i32
+    }
+    #[inline]
+    fn zero() -> Self {
+        0
+    }
+    fn write(self, w: &mut ByteWriter) {
+        w.put_i32(self)
+    }
+    fn read(r: &mut ByteReader) -> Result<Self> {
+        r.get_i32()
+    }
+}

@@ -1,0 +1,132 @@
+//! Shape and stride arithmetic for N-dimensional row-major arrays.
+
+use crate::error::{Result, SzError};
+
+/// Maximum dimensionality supported (matches the paper's 1D–4D, Table 2).
+pub const MAX_DIMS: usize = 4;
+
+/// Row-major array shape with precomputed strides.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape {
+    dims: Vec<usize>,
+    strides: Vec<usize>,
+}
+
+impl Shape {
+    /// Build a shape; dims must be non-empty, each ≥ 1, ≤ [`MAX_DIMS`] axes.
+    pub fn new(dims: &[usize]) -> Result<Self> {
+        if dims.is_empty() || dims.len() > MAX_DIMS {
+            return Err(SzError::Shape(format!(
+                "got {} dims, supported 1..={MAX_DIMS}",
+                dims.len()
+            )));
+        }
+        if dims.iter().any(|&d| d == 0) {
+            return Err(SzError::Shape("zero-length dimension".into()));
+        }
+        let mut strides = vec![1usize; dims.len()];
+        for i in (0..dims.len() - 1).rev() {
+            strides[i] = strides[i + 1] * dims[i + 1];
+        }
+        Ok(Shape { dims: dims.to_vec(), strides })
+    }
+
+    /// Dimensions, slowest-varying first.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> &[usize] {
+        &self.strides
+    }
+
+    /// Number of axes.
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// True for a degenerate empty shape (cannot happen post-`new`).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat offset of a multi-index (debug-checked).
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        idx.iter().zip(self.strides.iter()).map(|(&i, &s)| i * s).sum()
+    }
+
+    /// Flat offset of `idx` shifted by `off`; `None` if out of bounds.
+    #[inline]
+    pub fn offset_shifted(&self, idx: &[usize], off: &[isize]) -> Option<usize> {
+        let mut flat = 0usize;
+        for d in 0..self.dims.len() {
+            let i = idx[d] as isize + off[d];
+            if i < 0 || i >= self.dims[d] as isize {
+                return None;
+            }
+            flat += i as usize * self.strides[d];
+        }
+        Some(flat)
+    }
+
+    /// Increment a multi-index in row-major order. Returns false on wrap.
+    #[inline]
+    pub fn advance(&self, idx: &mut [usize]) -> bool {
+        for d in (0..self.dims.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < self.dims[d] {
+                return true;
+            }
+            idx[d] = 0;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        let s = Shape::new(&[2, 3, 4]).unwrap();
+        assert_eq!(s.strides(), &[12, 4, 1]);
+        assert_eq!(s.len(), 24);
+        assert_eq!(s.offset(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(Shape::new(&[]).is_err());
+        assert!(Shape::new(&[1, 2, 3, 4, 5]).is_err());
+        assert!(Shape::new(&[3, 0]).is_err());
+    }
+
+    #[test]
+    fn shifted_bounds() {
+        let s = Shape::new(&[2, 2]).unwrap();
+        assert_eq!(s.offset_shifted(&[1, 1], &[-1, -1]), Some(0));
+        assert_eq!(s.offset_shifted(&[0, 0], &[-1, 0]), None);
+        assert_eq!(s.offset_shifted(&[1, 1], &[1, 0]), None);
+    }
+
+    #[test]
+    fn advance_covers_all() {
+        let s = Shape::new(&[2, 3]).unwrap();
+        let mut idx = vec![0, 0];
+        let mut count = 1;
+        while s.advance(&mut idx) {
+            count += 1;
+        }
+        assert_eq!(count, 6);
+        assert_eq!(idx, vec![0, 0]);
+    }
+}

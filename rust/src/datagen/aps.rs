@@ -1,0 +1,122 @@
+//! APS ptychography-like stack generator (paper §5 substitution).
+//!
+//! A Dectris Eiger detector records diffraction patterns as the X-ray beam
+//! scans the sample; frames are stacked along time. The properties the
+//! SZ3-APS pipeline keys on, reproduced here:
+//!   * integer photon counts (Poisson statistics),
+//!   * strong frame-to-frame (time) correlation — the beam moves slowly
+//!     relative to the frame rate, so consecutive frames see nearly the
+//!     same diffraction pattern,
+//!   * weak in-frame spatial correlation (speckle + Airy rings),
+//!   * an isolated-sample variant ("chip pillar": compact support, dark
+//!     background) and an extended-sample variant ("flat chip": signal
+//!     across the frame).
+
+use crate::data::Field;
+use crate::util::rng::Pcg32;
+
+/// Sample geometry (the paper's two acquisitions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sample {
+    /// Isolated computer-chip pillar: compact diffraction, dark field.
+    ChipPillar,
+    /// Extended flat chip: structured signal across the detector.
+    FlatChip,
+}
+
+impl Sample {
+    /// Dataset name as in Fig. 6.
+    pub fn name(self) -> &'static str {
+        match self {
+            Sample::ChipPillar => "chip-pillar",
+            Sample::FlatChip => "flat-chip",
+        }
+    }
+}
+
+/// Generate a (time, h, w) stack of diffraction-like Poisson counts.
+pub fn diffraction_stack(sample: Sample, t: usize, h: usize, w: usize, seed: u64) -> Field {
+    let mut rng = Pcg32::new(seed, sample as u64 + 200);
+    // static speckle field (sample structure) — frozen across time
+    let speckle: Vec<f64> =
+        (0..h * w).map(|_| rng.uniform(0.3, 1.7)).collect();
+    let mut out = Vec::with_capacity(t * h * w);
+    let (peak, bg, ring_scale) = match sample {
+        Sample::ChipPillar => (800.0, 0.05, 6.0),
+        Sample::FlatChip => (300.0, 2.0, 3.0),
+    };
+    for ti in 0..t {
+        // slow scan drift: beam position moves smoothly with time
+        let phase = ti as f64 * 0.02;
+        let cy = h as f64 / 2.0 + 1.5 * (phase * 2.0).sin();
+        let cx = w as f64 / 2.0 + 1.5 * (phase * 3.1).cos();
+        let intensity_scale = 1.0 + 0.1 * (phase * 5.0).sin();
+        for y in 0..h {
+            for x in 0..w {
+                let dy = y as f64 - cy;
+                let dx = x as f64 - cx;
+                let r = (dy * dy + dx * dx).sqrt() / (h.min(w) as f64 / ring_scale);
+                // Airy-like ringed falloff modulated by the sample speckle
+                let airy = (-1.2 * r).exp() * (1.0 + 0.5 * (r * 9.0).cos());
+                let lambda =
+                    (peak * airy * speckle[y * w + x] * intensity_scale + bg).max(0.0);
+                out.push(rng.poisson(lambda) as f32);
+            }
+        }
+    }
+    Field::f32(sample.name(), &[t, h, w], out).expect("valid field")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temporal_vs_spatial_corr(f: &Field) -> (f64, f64) {
+        let dims = f.shape.dims();
+        let (t, h, w) = (dims[0], dims[1], dims[2]);
+        let v = f.values.to_f64_vec();
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / v.len() as f64;
+        let mut ct = 0.0;
+        let mut cs = 0.0;
+        let mut nt = 0usize;
+        let mut ns = 0usize;
+        for ti in 0..t - 1 {
+            for y in 0..h {
+                for x in 0..w {
+                    let a = v[(ti * h + y) * w + x] - mean;
+                    let b = v[((ti + 1) * h + y) * w + x] - mean;
+                    ct += a * b;
+                    nt += 1;
+                    if x + 1 < w {
+                        let c = v[(ti * h + y) * w + x + 1] - mean;
+                        cs += a * c;
+                        ns += 1;
+                    }
+                }
+            }
+        }
+        (ct / nt as f64 / var, cs / ns as f64 / var)
+    }
+
+    #[test]
+    fn temporal_correlation_dominates() {
+        // the property §5.2 builds the adaptive pipeline on
+        for sample in [Sample::ChipPillar, Sample::FlatChip] {
+            let f = diffraction_stack(sample, 24, 24, 24, 5);
+            let (ct, cs) = temporal_vs_spatial_corr(&f);
+            assert!(
+                ct > cs + 0.05,
+                "{}: temporal {ct:.3} should exceed spatial {cs:.3}",
+                f.name
+            );
+        }
+    }
+
+    #[test]
+    fn counts_are_integer_valued() {
+        let f = diffraction_stack(Sample::ChipPillar, 4, 16, 16, 6);
+        let v = f.values.to_f64_vec();
+        assert!(v.iter().all(|x| x.fract() == 0.0 && *x >= 0.0));
+    }
+}

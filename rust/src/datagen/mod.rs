@@ -1,0 +1,81 @@
+//! Synthetic dataset generators standing in for the paper's proprietary /
+//! facility data (see DESIGN.md §2 for the substitution rationale).
+//!
+//! * [`gamess`] — ERI-like periodic scaled-pattern streams (paper §4).
+//! * [`aps`] — ptychography-like diffraction stacks (paper §5).
+//! * [`fields`] — the eight-application survey of Table 3 / Figs. 7-8 at
+//!   reduced dimensions, each generator reproducing the correlation
+//!   structure its domain is known for.
+
+pub mod aps;
+pub mod fields;
+pub mod gamess;
+
+use crate::data::Field;
+
+/// A named dataset: a set of fields plus provenance notes.
+pub struct Dataset {
+    /// Registry name (e.g. "nyx").
+    pub name: &'static str,
+    /// Science domain (Table 3 column).
+    pub domain: &'static str,
+    /// Generated fields.
+    pub fields: Vec<Field>,
+    /// What the generator mimics and why it is a valid stand-in.
+    pub notes: &'static str,
+}
+
+impl Dataset {
+    /// Total bytes across fields.
+    pub fn nbytes(&self) -> usize {
+        self.fields.iter().map(|f| f.nbytes()).sum()
+    }
+}
+
+/// Registry of the Table 3 survey datasets (reduced-size stand-ins).
+pub fn survey(seed: u64) -> Vec<Dataset> {
+    vec![
+        fields::hacc(seed),
+        fields::atm(seed),
+        fields::hurricane(seed),
+        fields::nyx(seed),
+        fields::scale_letkf(seed),
+        fields::qmcpack(seed),
+        fields::rtm(seed),
+        fields::miranda(seed),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn survey_has_eight_apps() {
+        let sets = survey(1);
+        assert_eq!(sets.len(), 8);
+        for ds in &sets {
+            assert!(!ds.fields.is_empty(), "{} has no fields", ds.name);
+            for f in &ds.fields {
+                assert!(f.len() > 0);
+                let (lo, hi) = f.value_range();
+                assert!(hi >= lo);
+                assert!(
+                    f.values.to_f64_vec().iter().all(|v| v.is_finite()),
+                    "{}/{} has non-finite values",
+                    ds.name,
+                    f.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = fields::miranda(7);
+        let b = fields::miranda(7);
+        assert_eq!(a.fields[0].values, b.fields[0].values);
+        let c = fields::miranda(8);
+        assert_ne!(a.fields[0].values, c.fields[0].values);
+    }
+}

@@ -1,0 +1,334 @@
+//! Adaptive arithmetic (range) encoder — the FPZIP-style pipeline instance
+//! (paper Fig. 1). Witten–Neal–Cleary style integer arithmetic coding with
+//! an adaptive frequency model backed by a Fenwick tree, so alphabets as
+//! large as the quantizer's full index range stay O(log K) per symbol.
+
+use super::Encoder;
+use crate::bitio::{BitReader, BitWriter};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::error::{Result, SzError};
+
+const CODE_BITS: u32 = 32;
+const TOP: u64 = 1 << CODE_BITS;
+const HALF: u64 = TOP >> 1;
+const QUARTER: u64 = TOP >> 2;
+const THREE_QUARTER: u64 = HALF + QUARTER;
+/// Rescale threshold for the adaptive model.
+const MAX_TOTAL: u64 = 1 << 24;
+
+/// Fenwick (binary indexed) tree over symbol frequencies.
+struct Fenwick {
+    tree: Vec<u64>,
+}
+
+impl Fenwick {
+    fn with_ones(n: usize) -> Self {
+        // Initialize every frequency to 1 (uniform prior) in O(n).
+        let mut tree = vec![0u64; n + 1];
+        for i in 1..=n {
+            tree[i] += 1;
+            let j = i + (i & i.wrapping_neg());
+            if j <= n {
+                let add = tree[i];
+                tree[j] += add;
+            }
+        }
+        Fenwick { tree }
+    }
+
+    fn len(&self) -> usize {
+        self.tree.len() - 1
+    }
+
+    /// Sum of frequencies of symbols < sym.
+    #[inline]
+    fn cum(&self, sym: usize) -> u64 {
+        let mut i = sym;
+        let mut s = 0;
+        while i > 0 {
+            s += self.tree[i];
+            i &= i - 1;
+        }
+        s
+    }
+
+    #[inline]
+    fn add(&mut self, sym: usize, delta: i64) {
+        let mut i = sym + 1;
+        while i < self.tree.len() {
+            self.tree[i] = (self.tree[i] as i64 + delta) as u64;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    fn total(&self) -> u64 {
+        self.cum(self.len())
+    }
+
+    /// Find the symbol whose cumulative interval contains `target`.
+    #[inline]
+    fn find(&self, target: u64) -> usize {
+        let mut pos = 0usize;
+        let mut rem = target;
+        let mut mask = self.tree.len().next_power_of_two() >> 1;
+        while mask > 0 {
+            let next = pos + mask;
+            if next < self.tree.len() && self.tree[next] <= rem {
+                rem -= self.tree[next];
+                pos = next;
+            }
+            mask >>= 1;
+        }
+        pos
+    }
+
+    fn freq(&self, sym: usize) -> u64 {
+        self.cum(sym + 1) - self.cum(sym)
+    }
+
+    /// Halve all frequencies (keeping ≥ 1) — adaptive-model rescale.
+    fn rescale(&mut self) {
+        let n = self.len();
+        let freqs: Vec<u64> = (0..n).map(|s| (self.freq(s) + 1) / 2).collect();
+        let mut tree = vec![0u64; n + 1];
+        for (s, &f) in freqs.iter().enumerate() {
+            let mut i = s + 1;
+            // direct O(n log n) rebuild is fine: rescale is rare
+            while i < tree.len() {
+                tree[i] += f;
+                i += i & i.wrapping_neg();
+            }
+        }
+        self.tree = tree;
+    }
+}
+
+/// Adaptive arithmetic codec.
+#[derive(Default, Clone)]
+pub struct ArithmeticEncoder;
+
+impl ArithmeticEncoder {
+    /// New encoder instance.
+    pub fn new() -> Self {
+        ArithmeticEncoder
+    }
+}
+
+struct RangeEncoder {
+    low: u64,
+    high: u64,
+    pending: u64,
+    bw: BitWriter,
+}
+
+impl RangeEncoder {
+    fn new() -> Self {
+        RangeEncoder { low: 0, high: TOP - 1, pending: 0, bw: BitWriter::new() }
+    }
+
+    #[inline]
+    fn emit(&mut self, bit: u32) {
+        self.bw.put_bit(bit);
+        while self.pending > 0 {
+            self.bw.put_bit(1 - bit);
+            self.pending -= 1;
+        }
+    }
+
+    #[inline]
+    fn encode(&mut self, cum_lo: u64, cum_hi: u64, total: u64) {
+        let range = self.high - self.low + 1;
+        self.high = self.low + range * cum_hi / total - 1;
+        self.low += range * cum_lo / total;
+        loop {
+            if self.high < HALF {
+                self.emit(0);
+            } else if self.low >= HALF {
+                self.emit(1);
+                self.low -= HALF;
+                self.high -= HALF;
+            } else if self.low >= QUARTER && self.high < THREE_QUARTER {
+                self.pending += 1;
+                self.low -= QUARTER;
+                self.high -= QUARTER;
+            } else {
+                break;
+            }
+            self.low <<= 1;
+            self.high = (self.high << 1) | 1;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        self.pending += 1;
+        if self.low < QUARTER {
+            self.emit(0);
+        } else {
+            self.emit(1);
+        }
+        self.bw.finish()
+    }
+}
+
+struct RangeDecoder<'a> {
+    low: u64,
+    high: u64,
+    code: u64,
+    br: BitReader<'a>,
+}
+
+impl<'a> RangeDecoder<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        let mut br = BitReader::new(buf);
+        let mut code = 0u64;
+        for _ in 0..CODE_BITS {
+            code = (code << 1) | br.get_bit_or_zero() as u64;
+        }
+        RangeDecoder { low: 0, high: TOP - 1, code, br }
+    }
+
+    #[inline]
+    fn target(&self, total: u64) -> u64 {
+        let range = self.high - self.low + 1;
+        (((self.code - self.low + 1) * total - 1) / range).min(total - 1)
+    }
+
+    #[inline]
+    fn consume(&mut self, cum_lo: u64, cum_hi: u64, total: u64) {
+        let range = self.high - self.low + 1;
+        self.high = self.low + range * cum_hi / total - 1;
+        self.low += range * cum_lo / total;
+        loop {
+            if self.high < HALF {
+                // nothing
+            } else if self.low >= HALF {
+                self.low -= HALF;
+                self.high -= HALF;
+                self.code -= HALF;
+            } else if self.low >= QUARTER && self.high < THREE_QUARTER {
+                self.low -= QUARTER;
+                self.high -= QUARTER;
+                self.code -= QUARTER;
+            } else {
+                break;
+            }
+            self.low <<= 1;
+            self.high = (self.high << 1) | 1;
+            self.code = (self.code << 1) | self.br.get_bit_or_zero() as u64;
+        }
+    }
+}
+
+impl Encoder for ArithmeticEncoder {
+    fn name(&self) -> &'static str {
+        "arithmetic"
+    }
+
+    fn encode(&self, symbols: &[u32], w: &mut ByteWriter) -> Result<()> {
+        let alphabet = symbols.iter().copied().max().map(|m| m as usize + 1).unwrap_or(1);
+        w.put_varint(alphabet as u64);
+        if symbols.is_empty() {
+            w.put_block(&[]);
+            return Ok(());
+        }
+        let mut model = Fenwick::with_ones(alphabet);
+        let mut enc = RangeEncoder::new();
+        for &s in symbols {
+            let s = s as usize;
+            let lo = model.cum(s);
+            let hi = lo + model.freq(s);
+            let total = model.total();
+            enc.encode(lo, hi, total);
+            model.add(s, 32);
+            if model.total() > MAX_TOTAL {
+                model.rescale();
+            }
+        }
+        w.put_block(&enc.finish());
+        Ok(())
+    }
+
+    fn decode(&self, r: &mut ByteReader, n: usize) -> Result<Vec<u32>> {
+        let alphabet = r.get_varint()? as usize;
+        let payload = r.get_block()?;
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if alphabet == 0 {
+            return Err(SzError::corrupt("arithmetic: empty alphabet"));
+        }
+        let mut model = Fenwick::with_ones(alphabet);
+        let mut dec = RangeDecoder::new(payload);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let total = model.total();
+            let target = dec.target(total);
+            let s = model.find(target);
+            let lo = model.cum(s);
+            let hi = lo + model.freq(s);
+            dec.consume(lo, hi, total);
+            out.push(s as u32);
+            model.add(s, 32);
+            if model.total() > MAX_TOTAL {
+                model.rescale();
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoder::test_support::{peaked_symbols, roundtrip};
+    use crate::encoder::HuffmanEncoder;
+    use crate::util::{prop, rng::Pcg32};
+
+    #[test]
+    fn fenwick_ops() {
+        let mut f = Fenwick::with_ones(10);
+        assert_eq!(f.total(), 10);
+        assert_eq!(f.cum(5), 5);
+        f.add(3, 7);
+        assert_eq!(f.freq(3), 8);
+        assert_eq!(f.cum(4), 11);
+        assert_eq!(f.find(3), 3);
+        assert_eq!(f.find(4), 3); // inside symbol 3's widened interval
+        assert_eq!(f.find(11), 4);
+        f.rescale();
+        assert_eq!(f.freq(3), 4);
+        assert_eq!(f.freq(0), 1);
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        let e = ArithmeticEncoder::new();
+        roundtrip(&e, &[]);
+        roundtrip(&e, &[0]);
+        roundtrip(&e, &[5, 5, 5, 5, 5]);
+        roundtrip(&e, &[0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        prop::cases(40, 0xa41, |rng| {
+            let n = rng.below(1500) + 1;
+            let alpha = rng.below(700) + 1;
+            let syms: Vec<u32> = (0..n).map(|_| rng.below(alpha) as u32).collect();
+            let e = ArithmeticEncoder::new();
+            roundtrip(&e, &syms);
+        });
+    }
+
+    #[test]
+    fn beats_huffman_on_very_skewed_data() {
+        // Arithmetic coding crosses the 1-bit/symbol floor that Huffman hits.
+        let mut rng = Pcg32::seeded(6);
+        let syms = peaked_symbols(&mut rng, 30000, 32, 0.3);
+        let ar = ArithmeticEncoder::new();
+        let hf = HuffmanEncoder::new();
+        let sa = roundtrip(&ar, &syms);
+        let sh = roundtrip(&hf, &syms);
+        assert!(sa < sh, "arithmetic {sa} >= huffman {sh}");
+    }
+}

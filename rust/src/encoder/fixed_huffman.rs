@@ -1,0 +1,138 @@
+//! Fixed (predefined-tree) Huffman encoder — the SZ-Pastri variation
+//! (paper §3.2): instead of building a tree from observed frequencies, both
+//! sides derive the same canonical code from a parametric prior, eliminating
+//! tree-construction time and table storage.
+//!
+//! The prior models quantization indices as a two-sided geometric
+//! distribution centered on the quantizer's zero-error bin (`center`), which
+//! is what linear-scaling quantization of a good predictor produces.
+
+use super::huffman::{canonical_codes, code_lengths, CanonicalDecoder};
+use super::Encoder;
+use crate::bitio::{BitReader, BitWriter};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::error::{Result, SzError};
+
+/// Huffman codec with a predefined geometric-prior tree.
+#[derive(Clone)]
+pub struct FixedHuffmanEncoder {
+    center: u32,
+    alphabet: u32,
+    lens: Vec<u32>,
+    codes: Vec<u64>,
+}
+
+impl FixedHuffmanEncoder {
+    /// Build the fixed code for a quantizer with the given `radius`
+    /// (alphabet = `2 * radius`, center bin = `radius`).
+    pub fn new(radius: u32) -> Self {
+        let radius = radius.max(1);
+        Self::with_alphabet(radius, 2 * radius)
+    }
+
+    /// Build the fixed code with an explicit alphabet size.
+    pub fn with_alphabet(center: u32, alphabet: u32) -> Self {
+        let alphabet = alphabet.max(center + 1).max(2);
+        // Two-sided geometric prior: freq(s) ∝ r^{|s-center|}, floor 1 so
+        // every symbol is encodable; mass halves every 2 bins. The 2^24
+        // scale caps the code depth at ~24 + log2(alphabet) < 64 bits.
+        let mut freqs = vec![0u64; alphabet as usize];
+        for (s, f) in freqs.iter_mut().enumerate() {
+            let d = (s as i64 - center as i64).unsigned_abs();
+            let shift = (d / 2).min(23) as u32;
+            *f = (1u64 << 24) >> shift;
+        }
+        let lens = code_lengths(&freqs);
+        let (codes, _) = canonical_codes(&lens);
+        FixedHuffmanEncoder { center, alphabet, lens, codes }
+    }
+}
+
+impl Encoder for FixedHuffmanEncoder {
+    fn name(&self) -> &'static str {
+        "fixed_huffman"
+    }
+
+    fn encode(&self, symbols: &[u32], w: &mut ByteWriter) -> Result<()> {
+        // Only the parameters are stored — the tree is derived on load.
+        w.put_varint(self.center as u64);
+        w.put_varint(self.alphabet as u64);
+        let mut bw = BitWriter::with_capacity(symbols.len() / 2);
+        for &s in symbols {
+            if s >= self.alphabet {
+                return Err(SzError::config(format!(
+                    "symbol {s} outside fixed alphabet {}",
+                    self.alphabet
+                )));
+            }
+            bw.put_bits(self.codes[s as usize], self.lens[s as usize]);
+        }
+        w.put_block(&bw.finish());
+        Ok(())
+    }
+
+    fn decode(&self, r: &mut ByteReader, n: usize) -> Result<Vec<u32>> {
+        let center = r.get_varint()? as u32;
+        let alphabet = r.get_varint()? as u32;
+        let table = if center == self.center && alphabet == self.alphabet {
+            None // reuse our own tables
+        } else {
+            Some(FixedHuffmanEncoder::with_alphabet(center, alphabet))
+        };
+        let lens = table.as_ref().map(|t| &t.lens).unwrap_or(&self.lens);
+        let dec = CanonicalDecoder::from_lengths(lens)?;
+        let payload = r.get_block()?;
+        let mut br = BitReader::new(payload);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(dec.decode_one(&mut br)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoder::test_support::{peaked_symbols, roundtrip};
+    use crate::encoder::HuffmanEncoder;
+    use crate::util::{prop, rng::Pcg32};
+
+    #[test]
+    fn roundtrip_basic() {
+        let e = FixedHuffmanEncoder::new(64);
+        roundtrip(&e, &[64, 64, 63, 65, 0, 127, 64]);
+        roundtrip(&e, &[]);
+    }
+
+    #[test]
+    fn prop_roundtrip_within_alphabet() {
+        prop::cases(60, 0xf1, |rng| {
+            let radius = rng.below(200) as u32 + 2;
+            let e = FixedHuffmanEncoder::new(radius);
+            let n = rng.below(2000) + 1;
+            let syms: Vec<u32> = (0..n).map(|_| rng.below(2 * radius as usize) as u32).collect();
+            roundtrip(&e, &syms);
+        });
+    }
+
+    #[test]
+    fn rejects_out_of_alphabet() {
+        let e = FixedHuffmanEncoder::new(4);
+        let mut w = crate::byteio::ByteWriter::new();
+        assert!(e.encode(&[100], &mut w).is_err());
+    }
+
+    #[test]
+    fn close_to_adaptive_on_geometric_data() {
+        // On data matching the prior, the fixed tree should be within ~15%
+        // of the adaptive Huffman (which additionally pays table storage).
+        let mut rng = Pcg32::seeded(4);
+        let syms = peaked_symbols(&mut rng, 30000, 512, 4.0);
+        let fixed = FixedHuffmanEncoder::new(512);
+        let adaptive = HuffmanEncoder::new();
+        let sf = roundtrip(&fixed, &syms);
+        let sa = roundtrip(&adaptive, &syms);
+        assert!((sf as f64) < sa as f64 * 1.25, "fixed {sf} vs adaptive {sa}");
+    }
+}

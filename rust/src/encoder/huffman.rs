@@ -1,0 +1,337 @@
+//! Canonical Huffman encoder (paper §3.2 "Huffman encoder").
+//!
+//! Builds a length-limited-free Huffman code from symbol frequencies,
+//! converts it to canonical form, and serializes only the per-symbol code
+//! lengths (RLE-compressed) — the decoder reconstructs identical codes.
+
+use super::Encoder;
+use crate::bitio::{BitReader, BitWriter};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::error::{Result, SzError};
+use std::collections::BinaryHeap;
+use std::cmp::Reverse;
+
+/// Canonical Huffman codec.
+#[derive(Default, Clone)]
+pub struct HuffmanEncoder;
+
+impl HuffmanEncoder {
+    /// New encoder instance.
+    pub fn new() -> Self {
+        HuffmanEncoder
+    }
+}
+
+/// Compute Huffman code lengths for `freqs` (0-frequency symbols get len 0).
+pub fn code_lengths(freqs: &[u64]) -> Vec<u32> {
+    let mut lens = vec![0u32; freqs.len()];
+    let present: Vec<usize> = (0..freqs.len()).filter(|&i| freqs[i] > 0).collect();
+    match present.len() {
+        0 => return lens,
+        1 => {
+            lens[present[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+    // Node arena: leaves then internals; parent links for length recovery.
+    let n = present.len();
+    let mut parent = vec![usize::MAX; 2 * n - 1];
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = present
+        .iter()
+        .enumerate()
+        .map(|(node, &sym)| Reverse((freqs[sym], node)))
+        .collect();
+    let mut next = n;
+    while heap.len() > 1 {
+        let Reverse((fa, a)) = heap.pop().unwrap();
+        let Reverse((fb, b)) = heap.pop().unwrap();
+        parent[a] = next;
+        parent[b] = next;
+        heap.push(Reverse((fa + fb, next)));
+        next += 1;
+    }
+    for (node, &sym) in present.iter().enumerate() {
+        let mut len = 0u32;
+        let mut p = node;
+        while parent[p] != usize::MAX {
+            p = parent[p];
+            len += 1;
+        }
+        lens[sym] = len;
+    }
+    lens
+}
+
+/// Assign canonical codes from lengths: symbols sorted by (len, symbol).
+/// Returns (codes, max_len). Codes are stored in the low `len` bits.
+/// Codes are u64: deep trees from very skewed priors can exceed 32 bits.
+pub fn canonical_codes(lens: &[u32]) -> (Vec<u64>, u32) {
+    let max_len = lens.iter().copied().max().unwrap_or(0);
+    debug_assert!(max_len <= 64, "huffman depth {max_len} exceeds 64 bits");
+    let mut count = vec![0u64; max_len as usize + 1];
+    for &l in lens {
+        if l > 0 {
+            count[l as usize] += 1;
+        }
+    }
+    let mut first = vec![0u64; max_len as usize + 2];
+    let mut code = 0u64;
+    for l in 1..=max_len as usize {
+        code = (code + count[l - 1]) << 1;
+        first[l] = code;
+    }
+    let mut next = first.clone();
+    let mut codes = vec![0u64; lens.len()];
+    for (sym, &l) in lens.iter().enumerate() {
+        if l > 0 {
+            codes[sym] = next[l as usize];
+            next[l as usize] += 1;
+        }
+    }
+    (codes, max_len)
+}
+
+/// Serialize code lengths: varint count then RLE pairs (len, run).
+fn save_lengths(lens: &[u32], w: &mut ByteWriter) {
+    w.put_varint(lens.len() as u64);
+    let mut i = 0;
+    while i < lens.len() {
+        let l = lens[i];
+        let mut run = 1usize;
+        while i + run < lens.len() && lens[i + run] == l {
+            run += 1;
+        }
+        w.put_varint(l as u64);
+        w.put_varint(run as u64);
+        i += run;
+    }
+}
+
+fn load_lengths(r: &mut ByteReader) -> Result<Vec<u32>> {
+    let n = r.get_varint()? as usize;
+    if n > (1 << 28) {
+        return Err(SzError::corrupt("huffman table too large"));
+    }
+    let mut lens = Vec::with_capacity(n);
+    while lens.len() < n {
+        let l = r.get_varint()? as u32;
+        let run = r.get_varint()? as usize;
+        if lens.len() + run > n || l > 64 {
+            return Err(SzError::corrupt("bad huffman length RLE"));
+        }
+        lens.extend(std::iter::repeat(l).take(run));
+    }
+    Ok(lens)
+}
+
+/// Canonical Huffman decoder: a one-level lookup table resolves codes up
+/// to [`LUT_BITS`] in a single peek (covers ~all symbols of peaked
+/// quantization-index streams); longer codes fall back to the canonical
+/// per-length scan.
+pub struct CanonicalDecoder {
+    max_len: u32,
+    first_code: Vec<u64>,
+    first_idx: Vec<u32>,
+    symbols: Vec<u32>,
+    count: Vec<u64>,
+    /// `lut[prefix] = (symbol << 8) | code_len`, 0 = not in table.
+    lut: Vec<u32>,
+}
+
+/// Width of the decode lookup table.
+const LUT_BITS: u32 = 11;
+
+impl CanonicalDecoder {
+    /// Build decode tables from code lengths.
+    pub fn from_lengths(lens: &[u32]) -> Result<Self> {
+        let max_len = lens.iter().copied().max().unwrap_or(0);
+        if max_len > 64 {
+            return Err(SzError::corrupt("huffman depth exceeds 64 bits"));
+        }
+        let mut count = vec![0u64; max_len as usize + 1];
+        for &l in lens {
+            if l > 0 {
+                count[l as usize] += 1;
+            }
+        }
+        let mut first_code = vec![0u64; max_len as usize + 2];
+        let mut first_idx = vec![0u32; max_len as usize + 2];
+        let mut code = 0u64;
+        let mut idx = 0u32;
+        for l in 1..=max_len as usize {
+            code = (code + count[l - 1]) << 1;
+            first_code[l] = code;
+            first_idx[l] = idx;
+            idx += count[l] as u32;
+        }
+        // symbols in canonical order: sorted by (len, symbol)
+        let mut order: Vec<u32> = (0..lens.len() as u32).filter(|&s| lens[s as usize] > 0).collect();
+        order.sort_by_key(|&s| (lens[s as usize], s));
+        // build the fast table: every LUT_BITS prefix of a short code maps
+        // to (symbol, len)
+        let mut lut = vec![0u32; 1 << LUT_BITS];
+        for &sym in &order {
+            let l = lens[sym as usize];
+            if l > LUT_BITS {
+                continue;
+            }
+            // canonical code for sym
+            let idx_in_len = {
+                // position of sym among same-length symbols
+                let mut i = 0u32;
+                for &s2 in &order {
+                    if lens[s2 as usize] == l {
+                        if s2 == sym {
+                            break;
+                        }
+                        i += 1;
+                    }
+                }
+                i
+            };
+            let code = first_code[l as usize] + idx_in_len as u64;
+            let shift = LUT_BITS - l;
+            let base = (code << shift) as usize;
+            let entry = (sym << 8) | l;
+            for e in lut.iter_mut().skip(base).take(1 << shift) {
+                *e = entry;
+            }
+        }
+        Ok(CanonicalDecoder { max_len, first_code, first_idx, symbols: order, count, lut })
+    }
+
+    /// Decode one symbol (LUT fast path, canonical-scan fallback).
+    #[inline]
+    pub fn decode_one(&self, br: &mut BitReader) -> Result<u32> {
+        let entry = self.lut[br.peek_bits(LUT_BITS) as usize];
+        if entry != 0 {
+            let len = entry & 0xff;
+            br.skip_bits(len);
+            if br.bit_pos() > br.bit_len() {
+                return Err(SzError::corrupt("huffman stream exhausted"));
+            }
+            return Ok(entry >> 8);
+        }
+        let mut code = 0u64;
+        for l in 1..=self.max_len as usize {
+            code = (code << 1) | br.get_bit()? as u64;
+            if self.count[l] > 0 {
+                let offset = code.wrapping_sub(self.first_code[l]);
+                if offset < self.count[l] {
+                    return Ok(self.symbols[(self.first_idx[l] + offset as u32) as usize]);
+                }
+            }
+        }
+        Err(SzError::corrupt("invalid huffman code"))
+    }
+}
+
+impl Encoder for HuffmanEncoder {
+    fn name(&self) -> &'static str {
+        "huffman"
+    }
+
+    fn encode(&self, symbols: &[u32], w: &mut ByteWriter) -> Result<()> {
+        if symbols.is_empty() {
+            w.put_varint(0);
+            return Ok(());
+        }
+        let max_sym = *symbols.iter().max().unwrap() as usize;
+        let mut freqs = vec![0u64; max_sym + 1];
+        for &s in symbols {
+            freqs[s as usize] += 1;
+        }
+        let lens = code_lengths(&freqs);
+        let (codes, _) = canonical_codes(&lens);
+        save_lengths(&lens, w);
+        let mut bw = BitWriter::with_capacity(symbols.len() / 2);
+        for &s in symbols {
+            let l = lens[s as usize];
+            bw.put_bits(codes[s as usize], l);
+        }
+        w.put_block(&bw.finish());
+        Ok(())
+    }
+
+    fn decode(&self, r: &mut ByteReader, n: usize) -> Result<Vec<u32>> {
+        if n == 0 {
+            let _ = r.get_varint()?;
+            return Ok(Vec::new());
+        }
+        // load_lengths reads the same leading varint written by save_lengths.
+        let lens = load_lengths(r)?;
+        let dec = CanonicalDecoder::from_lengths(&lens)?;
+        let payload = r.get_block()?;
+        let mut br = BitReader::new(payload);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(dec.decode_one(&mut br)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoder::test_support::{peaked_symbols, roundtrip};
+    use crate::util::{prop, rng::Pcg32};
+
+    #[test]
+    fn empty_and_singleton() {
+        let e = HuffmanEncoder::new();
+        roundtrip(&e, &[]);
+        roundtrip(&e, &[7]);
+        roundtrip(&e, &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn skewed_stream_compresses() {
+        let mut rng = Pcg32::seeded(2);
+        let syms = peaked_symbols(&mut rng, 20000, 128, 3.0);
+        let e = HuffmanEncoder::new();
+        let size = roundtrip(&e, &syms);
+        // ~20k symbols in ~10 distinct values: must beat 1 byte/symbol easily
+        assert!(size < 20000, "huffman size {size}");
+    }
+
+    #[test]
+    fn code_lengths_kraft_inequality() {
+        prop::cases(100, 0x6bff, |rng| {
+            let k = rng.below(300) + 2;
+            let freqs: Vec<u64> = (0..k).map(|_| rng.below(1000) as u64).collect();
+            let lens = code_lengths(&freqs);
+            let kraft: f64 = lens
+                .iter()
+                .filter(|&&l| l > 0)
+                .map(|&l| 2f64.powi(-(l as i32)))
+                .sum();
+            if lens.iter().filter(|&&l| l > 0).count() > 1 {
+                assert!((kraft - 1.0).abs() < 1e-9, "kraft {kraft}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_random_streams() {
+        prop::cases(60, 0x4aff, |rng| {
+            let n = rng.below(3000) + 1;
+            let alpha = rng.below(500) + 1;
+            let syms: Vec<u32> = (0..n).map(|_| rng.below(alpha) as u32).collect();
+            let e = HuffmanEncoder::new();
+            roundtrip(&e, &syms);
+        });
+    }
+
+    #[test]
+    fn near_entropy_on_uniform() {
+        let mut rng = Pcg32::seeded(9);
+        let syms: Vec<u32> = (0..1 << 14).map(|_| rng.below(256) as u32).collect();
+        let e = HuffmanEncoder::new();
+        let size = roundtrip(&e, &syms);
+        // entropy = 8 bits/symbol; canonical huffman should be within 2%
+        let bits_per_sym = size as f64 * 8.0 / syms.len() as f64;
+        assert!(bits_per_sym < 8.4, "bits/sym {bits_per_sym}");
+    }
+}

@@ -1,0 +1,73 @@
+//! Encoder stage (paper §3.2, Appendix A.4): lossless entropy coding of the
+//! quantization indices produced by the quantizer.
+//!
+//! Instances: canonical [`huffman::HuffmanEncoder`] (SZ default), the
+//! [`fixed_huffman::FixedHuffmanEncoder`] with a predefined tree (SZ-Pastri,
+//! APS pipeline), an adaptive [`arithmetic::ArithmeticEncoder`] (FPZIP-style)
+//! and a [`raw::RawEncoder`] bypass.
+
+pub mod arithmetic;
+pub mod fixed_huffman;
+pub mod huffman;
+pub mod raw;
+
+pub use arithmetic::ArithmeticEncoder;
+pub use fixed_huffman::FixedHuffmanEncoder;
+pub use huffman::HuffmanEncoder;
+pub use raw::RawEncoder;
+
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::error::Result;
+
+/// Entropy coder over quantization indices.
+///
+/// `encode` writes both the codebook metadata (the paper's `save`) and the
+/// coded payload into `w`; `decode` reads them back. An encoder must
+/// round-trip any `&[u32]` exactly.
+pub trait Encoder: Send + Sync {
+    /// Instance name (for configs and stream headers).
+    fn name(&self) -> &'static str;
+    /// Encode `symbols` into `w` (metadata + payload).
+    fn encode(&self, symbols: &[u32], w: &mut ByteWriter) -> Result<()>;
+    /// Decode exactly `n` symbols from `r`.
+    fn decode(&self, r: &mut ByteReader, n: usize) -> Result<Vec<u32>>;
+}
+
+/// Construct a boxed encoder instance by name.
+pub fn by_name(name: &str, radius: u32) -> Option<Box<dyn Encoder>> {
+    match name {
+        "huffman" => Some(Box::new(HuffmanEncoder::new())),
+        "fixed_huffman" => Some(Box::new(FixedHuffmanEncoder::new(radius))),
+        "arithmetic" => Some(Box::new(ArithmeticEncoder::new())),
+        "raw" => Some(Box::new(RawEncoder::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Round-trip `symbols` through `enc` and assert equality; returns the
+    /// encoded size for ratio checks.
+    pub fn roundtrip(enc: &dyn Encoder, symbols: &[u32]) -> usize {
+        let mut w = ByteWriter::new();
+        enc.encode(symbols, &mut w).expect("encode");
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        let back = enc.decode(&mut r, symbols.len()).expect("decode");
+        assert_eq!(back, symbols, "encoder {} failed roundtrip", enc.name());
+        buf.len()
+    }
+
+    /// Quantization-like symbol stream: peaked around `center`.
+    pub fn peaked_symbols(rng: &mut Pcg32, n: usize, center: u32, spread: f64) -> Vec<u32> {
+        (0..n)
+            .map(|_| {
+                let d = (rng.normal() * spread).round() as i64;
+                (center as i64 + d).max(0) as u32
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,75 @@
+//! Raw (bypass) encoder: fixed-width bit packing with no entropy model.
+//! Used by speed-first pipelines (paper §6.2, SZ3-Truncation bypasses
+//! encoding entirely) and as a baseline in the encoder ablation bench.
+
+use super::Encoder;
+use crate::bitio::{BitReader, BitWriter};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::error::Result;
+
+/// Fixed-width bit-packing codec.
+#[derive(Default, Clone)]
+pub struct RawEncoder;
+
+impl RawEncoder {
+    /// New instance.
+    pub fn new() -> Self {
+        RawEncoder
+    }
+}
+
+impl Encoder for RawEncoder {
+    fn name(&self) -> &'static str {
+        "raw"
+    }
+
+    fn encode(&self, symbols: &[u32], w: &mut ByteWriter) -> Result<()> {
+        let max = symbols.iter().copied().max().unwrap_or(0);
+        let width = 32 - max.leading_zeros().min(31); // 1..=32, 0 if max==0
+        let width = width.max(1);
+        w.put_u8(width as u8);
+        let mut bw = BitWriter::with_capacity(symbols.len() * width as usize / 8 + 1);
+        for &s in symbols {
+            bw.put_bits(s as u64, width);
+        }
+        w.put_block(&bw.finish());
+        Ok(())
+    }
+
+    fn decode(&self, r: &mut ByteReader, n: usize) -> Result<Vec<u32>> {
+        let width = r.get_u8()? as u32;
+        let payload = r.get_block()?;
+        let mut br = BitReader::new(payload);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(br.get_bits(width)? as u32);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoder::test_support::roundtrip;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_edges() {
+        let e = RawEncoder::new();
+        roundtrip(&e, &[]);
+        roundtrip(&e, &[0, 0, 0]);
+        roundtrip(&e, &[u32::MAX, 0, 1]);
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        prop::cases(80, 0x7a3, |rng| {
+            let n = rng.below(2000);
+            let shift = rng.below(32) as u32;
+            let syms: Vec<u32> = (0..n).map(|_| rng.next_u32() >> shift).collect();
+            let e = RawEncoder::new();
+            roundtrip(&e, &syms);
+        });
+    }
+}

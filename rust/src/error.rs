@@ -1,0 +1,40 @@
+//! Error types for the SZ3 framework.
+
+use thiserror::Error;
+
+/// Unified error type for compression, decompression and runtime failures.
+#[derive(Debug, Error)]
+pub enum SzError {
+    /// The compressed stream is malformed or truncated.
+    #[error("corrupt stream: {0}")]
+    Corrupt(String),
+    /// A pipeline was configured with incompatible modules or parameters.
+    #[error("invalid configuration: {0}")]
+    Config(String),
+    /// Data shape does not match what the pipeline expects.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    /// Underlying lossless backend failed.
+    #[error("lossless backend: {0}")]
+    Lossless(String),
+    /// PJRT/XLA runtime failure (artifact load, compile, execute).
+    #[error("runtime: {0}")]
+    Runtime(String),
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, SzError>;
+
+impl SzError {
+    /// Helper for corrupt-stream errors.
+    pub fn corrupt(msg: impl Into<String>) -> Self {
+        SzError::Corrupt(msg.into())
+    }
+    /// Helper for configuration errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        SzError::Config(msg.into())
+    }
+}

@@ -1,0 +1,61 @@
+//! # SZ3 — a modular framework for composing prediction-based
+//! # error-bounded lossy compressors
+//!
+//! Rust + JAX + Pallas reproduction of *SZ3: A Modular Framework for
+//! Composing Prediction-Based Error-Bounded Lossy Compressors* (Liang,
+//! Zhao, Di, et al., 2021), structured as three layers:
+//!
+//! * **L3 (this crate)** — the modular compression framework
+//!   (preprocessor → predictor → quantizer → encoder → lossless), the
+//!   composed pipelines (SZ3-LR, SZ3-Interp, SZ3-Truncation, SZ3-Pastri,
+//!   SZ3-APS), and a streaming coordinator for multi-field scientific
+//!   snapshots.
+//! * **L2/L1 (python/compile, build-time only)** — the block-analysis
+//!   compute hot-spot (regression fit + predictor-error estimation)
+//!   expressed in JAX/Pallas and AOT-lowered to HLO text.
+//! * **runtime** — loads `artifacts/*.hlo.txt` through PJRT (`xla` crate)
+//!   and serves batched block analysis to the L3 hot path. Python never
+//!   runs at request time.
+//!
+//! Quickstart (`no_run`: rustdoc does not apply the workspace rpath flags,
+//! so doctest binaries cannot locate libxla_extension's bundled libstdc++
+//! in this image — the same code runs as `examples/quickstart.rs` and is
+//! covered by the test suite):
+//! ```no_run
+//! use sz3::data::Field;
+//! use sz3::pipeline::{by_name, decompress_any, CompressConf, ErrorBound};
+//!
+//! let values: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.01).sin()).collect();
+//! let field = Field::f32("wave", &[64, 64], values).unwrap();
+//! let pipeline = by_name("sz3-lr").unwrap();
+//! let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+//! let stream = pipeline.compress(&field, &conf).unwrap();
+//! let restored = decompress_any(&stream).unwrap();
+//! assert_eq!(restored.shape.dims(), field.shape.dims());
+//! ```
+
+pub mod bench_harness;
+pub mod bitio;
+pub mod byteio;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod datagen;
+pub mod encoder;
+pub mod error;
+pub mod lossless;
+pub mod metrics;
+pub mod pipeline;
+pub mod predictor;
+pub mod preprocessor;
+pub mod quantizer;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Result, SzError};
+
+/// Crate version.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

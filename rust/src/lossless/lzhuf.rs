@@ -1,0 +1,211 @@
+//! From-scratch gzip-class lossless backend: LZ77 (hash-chain match finder,
+//! 64 KiB window) followed by canonical Huffman coding of the token and
+//! distance streams. Built so the framework has a fully self-contained
+//! lossless stage independent of external libraries.
+//!
+//! Stream layout:
+//!   varint original_len
+//!   varint n_tokens
+//!   huffman(tokens)    — 0..=255 literal byte; 256+k match of length 4+k
+//!   huffman(dist_hi)   — one per match: distance high byte
+//!   huffman(dist_lo)   — one per match: distance low byte
+
+use super::Lossless;
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::encoder::{Encoder, HuffmanEncoder};
+use crate::error::{Result, SzError};
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = 4 + 255; // length symbol fits in 256..=511
+const WINDOW: usize = 1 << 16;
+const HASH_BITS: u32 = 15;
+
+/// LZ77 + Huffman backend.
+#[derive(Clone)]
+pub struct LzHuf {
+    /// Max hash-chain probes per position (speed/ratio knob).
+    pub max_chain: usize,
+}
+
+impl Default for LzHuf {
+    fn default() -> Self {
+        LzHuf { max_chain: 32 }
+    }
+}
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
+    (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+impl LzHuf {
+    /// Tokenize `data` into (tokens, distances).
+    fn tokenize(&self, data: &[u8]) -> (Vec<u32>, Vec<u32>) {
+        let n = data.len();
+        let mut tokens = Vec::with_capacity(n / 2);
+        let mut dists = Vec::new();
+        if n < MIN_MATCH {
+            tokens.extend(data.iter().map(|&b| b as u32));
+            return (tokens, dists);
+        }
+        let mut head = vec![usize::MAX; 1 << HASH_BITS];
+        let mut prev = vec![usize::MAX; n];
+        let mut i = 0usize;
+        while i < n {
+            let mut best_len = 0usize;
+            let mut best_dist = 0usize;
+            if i + MIN_MATCH <= n {
+                let h = hash4(data, i);
+                let mut cand = head[h];
+                let mut chain = self.max_chain;
+                while cand != usize::MAX && chain > 0 && i - cand <= WINDOW {
+                    // candidate match length
+                    let limit = (n - i).min(MAX_MATCH);
+                    let mut l = 0usize;
+                    while l < limit && data[cand + l] == data[i + l] {
+                        l += 1;
+                    }
+                    if l > best_len {
+                        best_len = l;
+                        best_dist = i - cand;
+                        if l >= limit {
+                            break;
+                        }
+                    }
+                    cand = prev[cand];
+                    chain -= 1;
+                }
+                prev[i] = head[h];
+                head[h] = i;
+            }
+            if best_len >= MIN_MATCH {
+                tokens.push(256 + (best_len - MIN_MATCH) as u32);
+                dists.push(best_dist as u32);
+                // insert hash entries for covered positions (sparsely for speed)
+                let end = i + best_len;
+                let mut j = i + 1;
+                while j < end && j + MIN_MATCH <= n {
+                    let h = hash4(data, j);
+                    prev[j] = head[h];
+                    head[h] = j;
+                    j += 1;
+                }
+                i = end;
+            } else {
+                tokens.push(data[i] as u32);
+                i += 1;
+            }
+        }
+        (tokens, dists)
+    }
+}
+
+impl Lossless for LzHuf {
+    fn name(&self) -> &'static str {
+        "lzhuf"
+    }
+
+    fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let (tokens, dists) = self.tokenize(data);
+        let huff = HuffmanEncoder::new();
+        let mut w = ByteWriter::new();
+        w.put_varint(data.len() as u64);
+        w.put_varint(tokens.len() as u64);
+        huff.encode(&tokens, &mut w)?;
+        let hi: Vec<u32> = dists.iter().map(|&d| d >> 8).collect();
+        let lo: Vec<u32> = dists.iter().map(|&d| d & 0xff).collect();
+        huff.encode(&hi, &mut w)?;
+        huff.encode(&lo, &mut w)?;
+        Ok(w.finish())
+    }
+
+    fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let mut r = ByteReader::new(data);
+        let orig_len = r.get_varint()? as usize;
+        let n_tokens = r.get_varint()? as usize;
+        let huff = HuffmanEncoder::new();
+        let tokens = huff.decode(&mut r, n_tokens)?;
+        let n_matches = tokens.iter().filter(|&&t| t >= 256).count();
+        let hi = huff.decode(&mut r, n_matches)?;
+        let lo = huff.decode(&mut r, n_matches)?;
+        let mut out = Vec::with_capacity(orig_len);
+        let mut m = 0usize;
+        for &t in &tokens {
+            if t < 256 {
+                out.push(t as u8);
+            } else {
+                let len = MIN_MATCH + (t - 256) as usize;
+                let dist = ((hi[m] << 8) | lo[m]) as usize;
+                m += 1;
+                if dist == 0 || dist > out.len() {
+                    return Err(SzError::corrupt("lzhuf: bad match distance"));
+                }
+                let start = out.len() - dist;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+        }
+        if out.len() != orig_len {
+            return Err(SzError::corrupt(format!(
+                "lzhuf: expected {orig_len} bytes, produced {}",
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lossless::test_support::roundtrip;
+    use crate::util::prop;
+
+    #[test]
+    fn overlapping_match_copies() {
+        // "aaaaaaaa..." forces dist=1 overlapping copies (RLE-via-LZ).
+        let l = LzHuf::default();
+        let data = vec![b'a'; 5000];
+        let size = roundtrip(&l, &data);
+        assert!(size < 100, "run of a's should collapse, got {size}");
+    }
+
+    #[test]
+    fn text_like_data_compresses() {
+        let l = LzHuf::default();
+        let data: Vec<u8> = "the quick brown fox jumps over the lazy dog. "
+            .repeat(200)
+            .into_bytes();
+        let size = roundtrip(&l, &data);
+        assert!(size < data.len() / 5, "got {size} of {}", data.len());
+    }
+
+    #[test]
+    fn prop_roundtrip_structured_and_random() {
+        prop::cases(25, 0x12f, |rng| {
+            let l = LzHuf::default();
+            let n = rng.below(40000);
+            roundtrip(&l, &prop::vec_u8(rng, n % 5000));
+            roundtrip(&l, &prop::compressible_u8(rng, n));
+        });
+    }
+
+    #[test]
+    fn max_match_boundary() {
+        let l = LzHuf::default();
+        for n in [MIN_MATCH - 1, MIN_MATCH, MAX_MATCH, MAX_MATCH + 1, 2 * MAX_MATCH + 3] {
+            let data = vec![0x5au8; n];
+            roundtrip(&l, &data);
+        }
+    }
+
+    #[test]
+    fn corrupt_stream_rejected() {
+        let l = LzHuf::default();
+        let c = l.compress(b"hello world hello world hello world").unwrap();
+        assert!(l.decompress(&c[..c.len() / 2]).is_err());
+    }
+}

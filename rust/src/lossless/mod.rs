@@ -1,0 +1,183 @@
+//! Lossless-compressor stage (paper §3.2, Appendix A.5): shrinks the byte
+//! stream produced by the encoder stage.
+//!
+//! Per the paper this module "acts mainly as a proxy of state-of-the-art
+//! lossless compression libraries": [`ZstdLossless`] and [`GzipLossless`]
+//! proxy the vendored `zstd`/`flate2` backends. Additionally this repo
+//! implements its own gzip-class backend from scratch ([`lzhuf::LzHuf`]),
+//! a fast byte-RLE ([`rle::Rle`]) and a [`Bypass`] (the paper's "module
+//! bypass" speed/ratio tradeoff).
+
+pub mod lzhuf;
+pub mod rle;
+
+pub use lzhuf::LzHuf;
+pub use rle::Rle;
+
+use crate::error::{Result, SzError};
+
+/// Lossless byte-stream compressor (paper Appendix A.5).
+pub trait Lossless: Send + Sync {
+    /// Instance name for configs and stream headers.
+    fn name(&self) -> &'static str;
+    /// Compress `data`.
+    fn compress(&self, data: &[u8]) -> Result<Vec<u8>>;
+    /// Decompress `data` (inverse of [`Self::compress`]).
+    fn decompress(&self, data: &[u8]) -> Result<Vec<u8>>;
+}
+
+/// Identity backend — the paper's module bypass.
+#[derive(Default, Clone)]
+pub struct Bypass;
+
+impl Lossless for Bypass {
+    fn name(&self) -> &'static str {
+        "bypass"
+    }
+    fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        Ok(data.to_vec())
+    }
+    fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        Ok(data.to_vec())
+    }
+}
+
+/// Proxy to the zstd library (the paper's default lossless stage).
+#[derive(Clone)]
+pub struct ZstdLossless {
+    /// zstd compression level (paper uses the default, 3).
+    pub level: i32,
+}
+
+impl Default for ZstdLossless {
+    fn default() -> Self {
+        ZstdLossless { level: 3 }
+    }
+}
+
+impl Lossless for ZstdLossless {
+    fn name(&self) -> &'static str {
+        "zstd"
+    }
+    fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        zstd::bulk::compress(data, self.level)
+            .map_err(|e| SzError::Lossless(format!("zstd compress: {e}")))
+    }
+    fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        zstd::stream::decode_all(data)
+            .map_err(|e| SzError::Lossless(format!("zstd decompress: {e}")))
+    }
+}
+
+/// Proxy to GZIP/DEFLATE via flate2.
+#[derive(Clone)]
+pub struct GzipLossless {
+    /// Deflate level 0-9.
+    pub level: u32,
+}
+
+impl Default for GzipLossless {
+    fn default() -> Self {
+        GzipLossless { level: 6 }
+    }
+}
+
+impl Lossless for GzipLossless {
+    fn name(&self) -> &'static str {
+        "gzip"
+    }
+    fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        use std::io::Write;
+        let mut enc = flate2::write::ZlibEncoder::new(
+            Vec::new(),
+            flate2::Compression::new(self.level),
+        );
+        enc.write_all(data)?;
+        enc.finish().map_err(|e| SzError::Lossless(format!("gzip: {e}")))
+    }
+    fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        use std::io::Read;
+        let mut dec = flate2::read::ZlibDecoder::new(data);
+        let mut out = Vec::new();
+        dec.read_to_end(&mut out)?;
+        Ok(out)
+    }
+}
+
+/// Construct a boxed lossless backend by name.
+pub fn by_name(name: &str) -> Option<Box<dyn Lossless>> {
+    match name {
+        "bypass" | "none" => Some(Box::new(Bypass)),
+        "zstd" => Some(Box::new(ZstdLossless::default())),
+        "gzip" => Some(Box::new(GzipLossless::default())),
+        "lzhuf" => Some(Box::new(LzHuf::default())),
+        "rle" => Some(Box::new(Rle)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+
+    pub fn roundtrip(l: &dyn Lossless, data: &[u8]) -> usize {
+        let c = l.compress(data).expect("compress");
+        let d = l.decompress(&c).expect("decompress");
+        assert_eq!(d, data, "lossless {} failed roundtrip", l.name());
+        c.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::roundtrip;
+    use super::*;
+    use crate::util::prop;
+
+    fn backends() -> Vec<Box<dyn Lossless>> {
+        ["bypass", "zstd", "gzip", "lzhuf", "rle"]
+            .iter()
+            .map(|n| by_name(n).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn all_backends_roundtrip_edges() {
+        for b in backends() {
+            roundtrip(b.as_ref(), &[]);
+            roundtrip(b.as_ref(), &[0]);
+            roundtrip(b.as_ref(), &[1, 2, 3, 4, 5]);
+            roundtrip(b.as_ref(), &vec![7u8; 10000]);
+        }
+    }
+
+    #[test]
+    fn prop_all_backends_roundtrip_random() {
+        prop::cases(15, 0x10f, |rng| {
+            let n = rng.below(20000);
+            let data = prop::vec_u8(rng, n);
+            for b in backends() {
+                roundtrip(b.as_ref(), &data);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_all_backends_roundtrip_compressible() {
+        prop::cases(15, 0x110, |rng| {
+            let n = rng.below(30000) + 100;
+            let data = prop::compressible_u8(rng, n);
+            for b in backends() {
+                let size = roundtrip(b.as_ref(), &data);
+                if b.name() == "zstd" || b.name() == "gzip" || b.name() == "lzhuf" {
+                    assert!(size < data.len(), "{} did not compress motif data", b.name());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn unknown_backend_is_none() {
+        assert!(by_name("nope").is_none());
+    }
+}

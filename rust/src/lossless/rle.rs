@@ -1,0 +1,137 @@
+//! Byte run-length backend — the fast path for streams dominated by runs
+//! (e.g. the zero-heavy bitplane output of the unpred-aware quantizer).
+//!
+//! Format: records of `control` byte —
+//!   `c < 128`  : copy the next `c + 1` literal bytes
+//!   `c >= 128` : repeat the next byte `c - 128 + RUN_MIN` times
+
+use super::Lossless;
+use crate::error::{Result, SzError};
+
+const RUN_MIN: usize = 4;
+const RUN_MAX: usize = 127 + RUN_MIN; // 131
+const LIT_MAX: usize = 128;
+
+/// Byte RLE codec.
+#[derive(Default, Clone)]
+pub struct Rle;
+
+impl Lossless for Rle {
+    fn name(&self) -> &'static str {
+        "rle"
+    }
+
+    fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(data.len() / 4 + 16);
+        let n = data.len();
+        let mut i = 0usize;
+        let mut lit_start = 0usize;
+        let flush_literals = |out: &mut Vec<u8>, from: usize, to: usize, data: &[u8]| {
+            let mut s = from;
+            while s < to {
+                let take = (to - s).min(LIT_MAX);
+                out.push((take - 1) as u8);
+                out.extend_from_slice(&data[s..s + take]);
+                s += take;
+            }
+        };
+        while i < n {
+            // measure run at i
+            let b = data[i];
+            let mut run = 1usize;
+            while i + run < n && data[i + run] == b && run < RUN_MAX {
+                run += 1;
+            }
+            if run >= RUN_MIN {
+                flush_literals(&mut out, lit_start, i, data);
+                out.push((128 + (run - RUN_MIN)) as u8);
+                out.push(b);
+                i += run;
+                lit_start = i;
+            } else {
+                i += run;
+            }
+        }
+        flush_literals(&mut out, lit_start, n, data);
+        Ok(out)
+    }
+
+    fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(data.len() * 2);
+        let mut i = 0usize;
+        while i < data.len() {
+            let c = data[i] as usize;
+            i += 1;
+            if c < 128 {
+                let take = c + 1;
+                if i + take > data.len() {
+                    return Err(SzError::corrupt("rle: truncated literal block"));
+                }
+                out.extend_from_slice(&data[i..i + take]);
+                i += take;
+            } else {
+                if i >= data.len() {
+                    return Err(SzError::corrupt("rle: truncated run"));
+                }
+                let count = c - 128 + RUN_MIN;
+                let b = data[i];
+                i += 1;
+                out.extend(std::iter::repeat(b).take(count));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lossless::test_support::roundtrip;
+    use crate::util::prop;
+
+    #[test]
+    fn zero_heavy_stream_collapses() {
+        let mut data = vec![0u8; 8192];
+        data[100] = 9;
+        data[5000] = 3;
+        let size = roundtrip(&Rle, &data);
+        assert!(size < 200, "rle size {size}");
+    }
+
+    #[test]
+    fn run_length_boundaries() {
+        for n in [1, RUN_MIN - 1, RUN_MIN, RUN_MAX, RUN_MAX + 1, 3 * RUN_MAX + 2] {
+            roundtrip(&Rle, &vec![0xeeu8; n]);
+        }
+    }
+
+    #[test]
+    fn literal_block_boundaries() {
+        // strictly alternating bytes => pure literals
+        for n in [1, LIT_MAX - 1, LIT_MAX, LIT_MAX + 1, 3 * LIT_MAX] {
+            let data: Vec<u8> = (0..n).map(|i| (i % 7) as u8).collect();
+            roundtrip(&Rle, &data);
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        prop::cases(100, 0x41e, |rng| {
+            let n = rng.below(4000);
+            // biased toward runs
+            let mut data = Vec::with_capacity(n);
+            while data.len() < n {
+                let b = rng.next_u32() as u8 % 4;
+                let run = rng.below(20) + 1;
+                data.extend(std::iter::repeat(b).take(run.min(n - data.len())));
+            }
+            roundtrip(&Rle, &data);
+        });
+    }
+
+    #[test]
+    fn corrupt_stream_rejected() {
+        assert!(Rle.decompress(&[5, 1, 2]).is_err()); // literal block needs 6 bytes
+        assert!(Rle.decompress(&[200]).is_err()); // run missing byte
+    }
+}

@@ -1,0 +1,325 @@
+//! `sz3` — leader binary: compress/decompress files, stream synthetic
+//! datasets through the coordinator, inspect streams, and run the
+//! paper-figure harness subcommands.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+use sz3::cli::Args;
+use sz3::config::JobConfig;
+use sz3::coordinator::Coordinator;
+use sz3::data::{Field, FieldValues};
+use sz3::pipeline::{self, CompressConf, ErrorBound, PastriCompressor};
+use sz3::runtime::{PjrtAnalyzer, PjrtEngine, PjrtService};
+
+const USAGE: &str = "\
+sz3 — modular prediction-based error-bounded lossy compression (SZ3 reproduction)
+
+USAGE:
+  sz3 compress   --input raw.bin --dims 100,500,500 --dtype f32
+                 [--pipeline sz3-lr] [--abs EB | --rel EB | --pwrel EB]
+                 [--radius N] --out file.sz3
+  sz3 decompress --input file.sz3 --out raw.bin
+  sz3 info       --input file.sz3
+  sz3 serve      [--config job.json] [--dataset nyx|all] [--out dir]
+  sz3 datasets                              # Table 3 registry
+  sz3 pipelines                             # registry names
+  sz3 quant-hist [--field ff|ff] [--eb 1e-10] [--radius 64]   # Fig. 3
+  sz3 version
+
+Raw input files are flat little-endian arrays of --dtype covering --dims.";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_bound(a: &Args) -> Result<ErrorBound> {
+    if let Some(v) = a.get("abs") {
+        return Ok(ErrorBound::Abs(v.parse()?));
+    }
+    if let Some(v) = a.get("rel") {
+        return Ok(ErrorBound::Rel(v.parse()?));
+    }
+    if let Some(v) = a.get("pwrel") {
+        return Ok(ErrorBound::PwRel(v.parse()?));
+    }
+    Ok(ErrorBound::Rel(1e-3))
+}
+
+fn read_raw_field(path: &str, dims: &[usize], dtype: &str, name: &str) -> Result<Field> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    let n: usize = dims.iter().product();
+    let values = match dtype {
+        "f32" => {
+            if bytes.len() != n * 4 {
+                bail!("{path}: expected {} bytes for f32 {:?}, found {}", n * 4, dims, bytes.len());
+            }
+            FieldValues::F32(
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            )
+        }
+        "f64" => {
+            if bytes.len() != n * 8 {
+                bail!("{path}: expected {} bytes for f64 {:?}, found {}", n * 8, dims, bytes.len());
+            }
+            FieldValues::F64(
+                bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
+            )
+        }
+        "i32" => {
+            if bytes.len() != n * 4 {
+                bail!("{path}: expected {} bytes for i32 {:?}, found {}", n * 4, dims, bytes.len());
+            }
+            FieldValues::I32(
+                bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            )
+        }
+        other => bail!("unsupported --dtype {other}"),
+    };
+    Ok(Field::new(name, dims, values)?)
+}
+
+fn write_raw_field(path: &str, field: &Field) -> Result<()> {
+    let mut out = Vec::with_capacity(field.nbytes());
+    match &field.values {
+        FieldValues::F32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+        FieldValues::F64(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+        FieldValues::I32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let a = Args::parse(argv)?;
+    match a.subcommand.as_str() {
+        "compress" => cmd_compress(&a),
+        "decompress" => cmd_decompress(&a),
+        "info" => cmd_info(&a),
+        "serve" => cmd_serve(&a),
+        "datasets" => cmd_datasets(),
+        "pipelines" => cmd_pipelines(),
+        "quant-hist" => cmd_quant_hist(&a),
+        "version" => {
+            println!("sz3 {}", sz3::version());
+            Ok(())
+        }
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand '{other}'\n\n{USAGE}")),
+    }
+}
+
+fn cmd_compress(a: &Args) -> Result<()> {
+    let dims = a.dims("dims")?;
+    let dtype = a.get("dtype").unwrap_or("f32");
+    let input = a.need("input")?;
+    let out = a.need("out")?;
+    let pipeline_name = a.get("pipeline").unwrap_or("sz3-lr");
+    let stem = Path::new(input).file_stem().and_then(|s| s.to_str()).unwrap_or("field");
+    let field = read_raw_field(input, &dims, dtype, stem)?;
+    let conf = CompressConf::with_radius(parse_bound(a)?, a.get_or("radius", 32768u32)?);
+    let c = pipeline::by_name(pipeline_name)
+        .ok_or_else(|| anyhow!("unknown pipeline '{pipeline_name}' (see `sz3 pipelines`)"))?;
+    let t0 = std::time::Instant::now();
+    let stream = c.compress(&field, &conf)?;
+    let dt = t0.elapsed();
+    std::fs::write(out, &stream)?;
+    let ratio = field.nbytes() as f64 / stream.len() as f64;
+    println!(
+        "{}: {} -> {} bytes (ratio {:.2}) in {:.2?} ({:.1} MB/s)",
+        pipeline_name,
+        field.nbytes(),
+        stream.len(),
+        ratio,
+        dt,
+        field.nbytes() as f64 / 1e6 / dt.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_decompress(a: &Args) -> Result<()> {
+    let input = a.need("input")?;
+    let out = a.need("out")?;
+    let stream = std::fs::read(input)?;
+    let t0 = std::time::Instant::now();
+    let field = pipeline::decompress_any(&stream)?;
+    let dt = t0.elapsed();
+    write_raw_field(out, &field)?;
+    println!(
+        "{}: {:?} {} -> {} bytes in {:.2?} ({:.1} MB/s)",
+        field.name,
+        field.shape.dims(),
+        stream.len(),
+        field.nbytes(),
+        dt,
+        field.nbytes() as f64 / 1e6 / dt.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_info(a: &Args) -> Result<()> {
+    let stream = std::fs::read(a.need("input")?)?;
+    let h = pipeline::peek_header(&stream)?;
+    println!(
+        "pipeline={} field={} dtype={} dims={:?} elems={} stream_bytes={}",
+        h.pipeline,
+        h.field_name,
+        h.dtype,
+        h.dims,
+        h.len(),
+        stream.len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let cfg = match a.get("config") {
+        Some(path) => JobConfig::from_json(&std::fs::read_to_string(path)?)?,
+        None => JobConfig::default(),
+    };
+    let dataset = a.get("dataset").unwrap_or("nyx");
+    let seed = a.get_or("seed", 42u64)?;
+    let sets = sz3::datagen::survey(seed);
+    let selected: Vec<_> = if dataset == "all" {
+        sets
+    } else {
+        sets.into_iter().filter(|d| d.name == dataset).collect()
+    };
+    if selected.is_empty() {
+        bail!("unknown dataset '{dataset}' (see `sz3 datasets`)");
+    }
+    let mut coord = Coordinator::from_config(&cfg)?;
+    // PJRT-backed analysis for the blockwise pipelines when requested.
+    if cfg.use_pjrt && (cfg.pipeline == "sz3-lr" || cfg.pipeline == "sz3-lr-s") {
+        let dir = PjrtEngine::default_dir();
+        if PjrtEngine::available(&dir) {
+            let service = PjrtService::start(&dir)?;
+            eprintln!(
+                "using PJRT analysis engine ({}, dims {:?})",
+                service.platform, service.dims
+            );
+            let specialized = cfg.pipeline == "sz3-lr-s";
+            coord.make_compressor = Arc::new(move || {
+                let base = if specialized {
+                    pipeline::BlockCompressor::sz3_lr_s()
+                } else {
+                    pipeline::BlockCompressor::sz3_lr()
+                };
+                Box::new(
+                    base.with_analyzer(Arc::new(PjrtAnalyzer::new(service.clone()))),
+                )
+            });
+        } else {
+            eprintln!("use_pjrt requested but no artifacts at {dir:?}; native analysis");
+        }
+    }
+    let out_dir = a.get("out").map(|s| s.to_string());
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+    }
+    for ds in selected {
+        println!("== dataset {} ({}) ==", ds.name, ds.domain);
+        let mut sink_err = None;
+        let report = coord.run(ds.fields, |chunk| {
+            if let Some(dir) = &out_dir {
+                let path = format!(
+                    "{dir}/{}.{:04}.sz3",
+                    chunk.field.replace(['|', '/'], "_"),
+                    chunk.chunk_index
+                );
+                if let Err(e) = std::fs::write(&path, &chunk.stream) {
+                    sink_err.get_or_insert(e);
+                }
+            }
+        })?;
+        if let Some(e) = sink_err {
+            return Err(e.into());
+        }
+        println!("{report}");
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("{:<12} {:<18} {:>7} {:>16} {:>10}  notes", "name", "domain", "fields", "dims", "size");
+    for ds in sz3::datagen::survey(42) {
+        let dims = ds.fields[0].shape.dims().to_vec();
+        println!(
+            "{:<12} {:<18} {:>7} {:>16} {:>9.1}MB  {}",
+            ds.name,
+            ds.domain,
+            ds.fields.len(),
+            format!("{dims:?}"),
+            ds.nbytes() as f64 / 1e6,
+            &ds.notes[..ds.notes.len().min(48)]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pipelines() -> Result<()> {
+    for name in [
+        "sz3-lr",
+        "sz3-lr-s",
+        "sz3-interp",
+        "sz3-truncation",
+        "sz3-pastri",
+        "sz-pastri",
+        "sz-pastri-zstd",
+        "sz3-aps",
+        "lorenzo-1d",
+        "fpzip-like",
+    ] {
+        println!("{name}");
+    }
+    Ok(())
+}
+
+/// Fig. 3: quantization-integer histograms for the Pastri pipeline.
+fn cmd_quant_hist(a: &Args) -> Result<()> {
+    let field_name = a.get("field").unwrap_or("ff|ff");
+    let eb = a.get_or("eb", 1e-10f64)?;
+    let radius = a.get_or("radius", 64u32)?;
+    let n = a.get_or("n", 200_000usize)?;
+    let class = match field_name {
+        "ff|ff" => sz3::datagen::gamess::EriClass::FfFf,
+        "ff|dd" => sz3::datagen::gamess::EriClass::FfDd,
+        "dd|dd" => sz3::datagen::gamess::EriClass::DdDd,
+        other => bail!("unknown GAMESS field '{other}'"),
+    };
+    let field = sz3::datagen::gamess::eri_field(class, n, a.get_or("seed", 42u64)?);
+    let conf = CompressConf::with_radius(ErrorBound::Abs(eb), radius);
+    let c = PastriCompressor::sz3();
+    let (_, streams) = c.compress_instrumented(&field, &conf)?;
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    for (label, idx) in ["data", "pattern", "scale"].iter().zip(streams.iter()) {
+        let mut hist = vec![0u64; (2 * radius) as usize + 1];
+        let top = hist.len() - 1;
+        for &i in idx {
+            hist[(i as usize).min(top)] += 1;
+        }
+        let unpred = hist[0];
+        writeln!(
+            out,
+            "# {label}: {} indices, {} unpredictable ({:.1}%)",
+            idx.len(),
+            unpred,
+            100.0 * unpred as f64 / idx.len().max(1) as f64
+        )?;
+        for (bin, &count) in hist.iter().enumerate().skip(1) {
+            if count > 0 {
+                writeln!(out, "hist,{label},{},{}", bin as i64 - radius as i64, count)?;
+            }
+        }
+    }
+    Ok(())
+}

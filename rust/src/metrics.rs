@@ -1,0 +1,83 @@
+//! Compression-quality metrics: PSNR, bit rate, max error — the quantities
+//! on the axes of every rate-distortion figure in the paper.
+
+use crate::data::Field;
+
+/// Quality/size metrics for one (original, decompressed, stream) triple.
+#[derive(Clone, Copy, Debug)]
+pub struct Metrics {
+    /// Compression ratio = original bytes / compressed bytes.
+    pub ratio: f64,
+    /// Bit rate = bits per element in the compressed representation
+    /// (`bits/cr` in the paper's definition).
+    pub bit_rate: f64,
+    /// Peak signal-to-noise ratio (dB); infinite for lossless.
+    pub psnr: f64,
+    /// Maximum absolute pointwise error.
+    pub max_err: f64,
+    /// Mean squared error.
+    pub mse: f64,
+    /// Value range of the original data.
+    pub range: f64,
+}
+
+/// Compute metrics for a compressed stream.
+pub fn evaluate(original: &Field, decompressed: &Field, stream_len: usize) -> Metrics {
+    let o = original.values.to_f64_vec();
+    let d = decompressed.values.to_f64_vec();
+    assert_eq!(o.len(), d.len(), "metrics: length mismatch");
+    let n = o.len().max(1);
+    let mut mse = 0.0;
+    let mut max_err = 0.0f64;
+    for (a, b) in o.iter().zip(d.iter()) {
+        let e = a - b;
+        mse += e * e;
+        max_err = max_err.max(e.abs());
+    }
+    mse /= n as f64;
+    let (lo, hi) = original.value_range();
+    let range = hi - lo;
+    let psnr = if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        20.0 * (range.max(f64::MIN_POSITIVE)).log10() - 10.0 * mse.log10()
+    };
+    let bits = original.nbytes() as f64 * 8.0 / n as f64;
+    let ratio = original.nbytes() as f64 / stream_len.max(1) as f64;
+    Metrics { ratio, bit_rate: bits / ratio, psnr, max_err, mse, range }
+}
+
+impl std::fmt::Display for Metrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ratio={:.2} bitrate={:.3} psnr={:.2}dB maxerr={:.3e}",
+            self.ratio, self.bit_rate, self.psnr, self.max_err
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lossless_gives_infinite_psnr() {
+        let f = Field::f32("x", &[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let m = evaluate(&f, &f, 8);
+        assert!(m.psnr.is_infinite());
+        assert_eq!(m.max_err, 0.0);
+        assert_eq!(m.ratio, 2.0);
+        assert_eq!(m.bit_rate, 16.0);
+    }
+
+    #[test]
+    fn psnr_matches_hand_computation() {
+        let a = Field::f32("a", &[2], vec![0.0, 10.0]).unwrap();
+        let b = Field::f32("b", &[2], vec![1.0, 9.0]).unwrap();
+        let m = evaluate(&a, &b, 4);
+        // mse = 1, range = 10 => psnr = 20*log10(10) = 20
+        assert!((m.psnr - 20.0).abs() < 1e-9);
+        assert_eq!(m.max_err, 1.0);
+    }
+}

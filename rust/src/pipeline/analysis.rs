@@ -1,0 +1,199 @@
+//! Block-analysis abstraction: the compute hot-spot of the SZ3-LR pipeline
+//! (regression fit + Lorenzo/regression error estimation per block),
+//! factored behind a trait so it can run either natively in Rust
+//! ([`NativeAnalyzer`]) or on the AOT-compiled XLA executable produced by
+//! the L2 JAX model (`runtime::PjrtAnalyzer`). Both must compute the same
+//! math — `python/compile/kernels/ref.py` is the shared oracle.
+
+use crate::error::Result;
+use crate::predictor::composite::CompositeSelector;
+use crate::predictor::regression::RegressionFit;
+
+/// Raw per-block analysis results (no selection policy applied).
+#[derive(Clone, Debug)]
+pub struct RawAnalysis {
+    /// Mean |Lorenzo residual| on original data (no noise correction).
+    pub lorenzo_err: f64,
+    /// Mean |regression residual|.
+    pub regression_err: f64,
+    /// Fitted hyperplane coefficients (slopes then intercept).
+    pub coeffs: Vec<f64>,
+}
+
+/// Batched analysis of equally-shaped blocks.
+pub trait BlockAnalyzer: Send + Sync {
+    /// Analyze `blocks` (concatenated row-major blocks, each of shape
+    /// `dims`). Returns one [`RawAnalysis`] per block.
+    fn analyze_batch(&self, blocks: &[f64], dims: &[usize]) -> Result<Vec<RawAnalysis>>;
+
+    /// Human-readable backend name (for logs/metrics).
+    fn backend(&self) -> &'static str;
+}
+
+/// Pure-Rust analyzer (reference implementation and fallback).
+#[derive(Default, Clone)]
+pub struct NativeAnalyzer;
+
+impl BlockAnalyzer for NativeAnalyzer {
+    fn analyze_batch(&self, blocks: &[f64], dims: &[usize]) -> Result<Vec<RawAnalysis>> {
+        let block_len: usize = dims.iter().product();
+        debug_assert_eq!(blocks.len() % block_len, 0);
+        let mut out = Vec::with_capacity(blocks.len() / block_len);
+        for chunk in blocks.chunks_exact(block_len) {
+            out.push(match dims.len() {
+                3 => analyze_block_3d(chunk, dims),
+                2 => analyze_block_2d(chunk, dims),
+                _ => {
+                    let fit = RegressionFit::fit(chunk, dims);
+                    let regression_err = fit.mean_abs_error(chunk, dims);
+                    let lorenzo_err = CompositeSelector::lorenzo_block_error(chunk, dims);
+                    RawAnalysis { lorenzo_err, regression_err, coeffs: fit.coeffs }
+                }
+            });
+        }
+        Ok(out)
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Dimension-specialized 3-D analysis: identical math to the generic path
+/// (verified by `batch_matches_single_block_math`), direct indexing.
+fn analyze_block_3d(b: &[f64], dims: &[usize]) -> RawAnalysis {
+    let (n0, n1, n2) = (dims[0], dims[1], dims[2]);
+    let n = (n0 * n1 * n2) as f64;
+    let (c0, c1, c2) =
+        ((n0 as f64 - 1.0) / 2.0, (n1 as f64 - 1.0) / 2.0, (n2 as f64 - 1.0) / 2.0);
+    let s0 = n1 * n2;
+    let s1 = n2;
+    // fused pass: fit sums + lorenzo residuals
+    let (mut sum, mut sz, mut sy, mut sx, mut lor) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for z in 0..n0 {
+        let zc = z as f64 - c0;
+        for y in 0..n1 {
+            let yc = y as f64 - c1;
+            let base = z * s0 + y * s1;
+            for x in 0..n2 {
+                let v = b[base + x];
+                sum += v;
+                sz += zc * v;
+                sy += yc * v;
+                sx += (x as f64 - c2) * v;
+                let flat = base + x;
+                let pred = if z > 0 && y > 0 && x > 0 {
+                    b[flat - 1] + b[flat - s1] + b[flat - s0] - b[flat - s1 - 1]
+                        - b[flat - s0 - 1]
+                        - b[flat - s0 - s1]
+                        + b[flat - s0 - s1 - 1]
+                } else {
+                    let at = |dz: usize, dy: usize, dx: usize| -> f64 {
+                        if (dz == 1 && z == 0) || (dy == 1 && y == 0) || (dx == 1 && x == 0)
+                        {
+                            0.0
+                        } else {
+                            b[flat - dz * s0 - dy * s1 - dx]
+                        }
+                    };
+                    at(0, 0, 1) + at(0, 1, 0) + at(1, 0, 0) - at(0, 1, 1) - at(1, 0, 1)
+                        - at(1, 1, 0)
+                        + at(1, 1, 1)
+                };
+                lor += (v - pred).abs();
+            }
+        }
+    }
+    let denom = |nd: usize| n * ((nd * nd) as f64 - 1.0) / 12.0;
+    let b0 = sz / denom(n0);
+    let b1 = sy / denom(n1);
+    let b2 = sx / denom(n2);
+    let b3 = sum / n - b0 * c0 - b1 * c1 - b2 * c2;
+    // second pass: regression residual
+    let mut reg = 0.0;
+    for z in 0..n0 {
+        let pz = b0 * z as f64 + b3;
+        for y in 0..n1 {
+            let pzy = pz + b1 * y as f64;
+            let base = z * s0 + y * s1;
+            for x in 0..n2 {
+                reg += (b[base + x] - (pzy + b2 * x as f64)).abs();
+            }
+        }
+    }
+    RawAnalysis {
+        lorenzo_err: lor / n,
+        regression_err: reg / n,
+        coeffs: vec![b0, b1, b2, b3],
+    }
+}
+
+/// Dimension-specialized 2-D analysis.
+fn analyze_block_2d(b: &[f64], dims: &[usize]) -> RawAnalysis {
+    let (n0, n1) = (dims[0], dims[1]);
+    let n = (n0 * n1) as f64;
+    let (c0, c1) = ((n0 as f64 - 1.0) / 2.0, (n1 as f64 - 1.0) / 2.0);
+    let (mut sum, mut sy, mut sx, mut lor) = (0.0, 0.0, 0.0, 0.0);
+    for y in 0..n0 {
+        let yc = y as f64 - c0;
+        let base = y * n1;
+        for x in 0..n1 {
+            let v = b[base + x];
+            sum += v;
+            sy += yc * v;
+            sx += (x as f64 - c1) * v;
+            let flat = base + x;
+            let pred = if y > 0 && x > 0 {
+                b[flat - 1] + b[flat - n1] - b[flat - n1 - 1]
+            } else if y > 0 {
+                b[flat - n1]
+            } else if x > 0 {
+                b[flat - 1]
+            } else {
+                0.0
+            };
+            lor += (v - pred).abs();
+        }
+    }
+    let denom = |nd: usize| n * ((nd * nd) as f64 - 1.0) / 12.0;
+    let b0 = sy / denom(n0);
+    let b1 = sx / denom(n1);
+    let b2 = sum / n - b0 * c0 - b1 * c1;
+    let mut reg = 0.0;
+    for y in 0..n0 {
+        let py = b0 * y as f64 + b2;
+        let base = y * n1;
+        for x in 0..n1 {
+            reg += (b[base + x] - (py + b1 * x as f64)).abs();
+        }
+    }
+    RawAnalysis { lorenzo_err: lor / n, regression_err: reg / n, coeffs: vec![b0, b1, b2] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn batch_matches_single_block_math() {
+        prop::cases(20, 0xaa1, |rng| {
+            let dims = [6usize, 6, 6];
+            let nb = rng.below(5) + 1;
+            let blocks: Vec<f64> =
+                (0..nb * 216).map(|_| rng.uniform(-10.0, 10.0)).collect();
+            let res = NativeAnalyzer.analyze_batch(&blocks, &dims).unwrap();
+            assert_eq!(res.len(), nb);
+            for (b, r) in blocks.chunks_exact(216).zip(&res) {
+                let fit = RegressionFit::fit(b, &dims);
+                for (a, c) in fit.coeffs.iter().zip(&r.coeffs) {
+                    assert!((a - c).abs() <= 1e-12 * a.abs().max(1.0), "{a} vs {c}");
+                }
+                let reg = fit.mean_abs_error(b, &dims);
+                assert!((reg - r.regression_err).abs() <= 1e-12 * reg.max(1.0));
+                let lor = CompositeSelector::lorenzo_block_error(b, &dims);
+                assert!((lor - r.lorenzo_err).abs() <= 1e-12 * lor.max(1.0));
+            }
+        });
+    }
+}

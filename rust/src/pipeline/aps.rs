@@ -1,0 +1,169 @@
+//! SZ3-APS (paper §5): the adaptive pipeline for APS ptychography stacks.
+//!
+//! The data is a time stack of diffraction frames with strong temporal and
+//! weak spatial correlation. The pipeline switches on the error bound:
+//!
+//! * `eb >= 0.5` — high-bound regime: the 3-D blockwise Lorenzo⊕regression
+//!   compressor exploits what multidimensional correlation there is.
+//! * `eb < 0.5` — near-lossless regime: transpose time-last, treat the
+//!   field as y·x 1-D time series, 1-D Lorenzo + unpred-aware quantizer +
+//!   fixed Huffman + zstd. For integer-valued detector counts the bin-width-1
+//!   quantization recovers values *exactly*, so decompression noise is zero
+//!   (the paper's lossless/infinite-PSNR case) — exactly why the generic
+//!   SZ2.1 noise estimate mis-selects regression here (§5.3).
+
+use super::block::BlockCompressor;
+use super::point::{PredictorKind, PreprocessorKind, QuantizerKind, SzCompressor};
+use super::{CompressConf, Compressor, ErrorBound, StreamHeader};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::{Field, FieldValues};
+use crate::error::{Result, SzError};
+use crate::preprocessor::{Preprocessor, Transpose};
+
+/// Adaptive APS compressor.
+pub struct ApsCompressor {
+    /// Error-bound threshold that flips the pipeline (paper: 0.5).
+    pub switch_eb: f64,
+}
+
+impl Default for ApsCompressor {
+    fn default() -> Self {
+        ApsCompressor { switch_eb: 0.5 }
+    }
+}
+
+fn is_integer_valued(field: &Field) -> bool {
+    match &field.values {
+        FieldValues::I32(_) => true,
+        FieldValues::F32(v) => v.iter().all(|x| x.fract() == 0.0 && x.abs() < 1e7),
+        FieldValues::F64(v) => v.iter().all(|x| x.fract() == 0.0 && x.abs() < 1e15),
+    }
+}
+
+fn time_series_pipeline() -> SzCompressor {
+    SzCompressor::custom(
+        "aps-inner-1d",
+        PreprocessorKind::Linearize,
+        PredictorKind::Lorenzo(1),
+        QuantizerKind::UnpredAware,
+        "fixed_huffman",
+        "zstd",
+    )
+}
+
+impl Compressor for ApsCompressor {
+    fn name(&self) -> &'static str {
+        "sz3-aps"
+    }
+
+    fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {
+        let eb = conf.bound.to_abs(field)?;
+        let mut w = ByteWriter::new();
+        StreamHeader::for_field(self.name(), field).write(&mut w);
+        if eb < self.switch_eb && field.shape.ndim() >= 2 {
+            // near-lossless regime: transpose time-last + 1-D Lorenzo
+            w.put_u8(1);
+            let mut tfield = field.clone();
+            let mut tconf = conf.clone();
+            let perm: Vec<usize> = (1..field.shape.ndim()).chain([0]).collect();
+            let tr = Transpose::new(perm);
+            let state = tr.process(&mut tfield, &mut tconf)?;
+            w.put_block(&state);
+            // integer-valued counts: bin width 1 recovers exactly; keep the
+            // user's bound otherwise.
+            let eff_eb = if is_integer_valued(&tfield) { 0.5 } else { eb };
+            let inner_conf = CompressConf::with_radius(ErrorBound::Abs(eff_eb), conf.radius);
+            let inner = time_series_pipeline().compress(&tfield, &inner_conf)?;
+            w.put_block(&inner);
+        } else {
+            // high-bound regime: 3-D blockwise Lorenzo⊕regression
+            w.put_u8(0);
+            let inner = BlockCompressor::sz3_lr()
+                .compress(field, &CompressConf::with_radius(ErrorBound::Abs(eb), conf.radius))?;
+            w.put_block(&inner);
+        }
+        Ok(w.finish())
+    }
+
+    fn decompress(&self, stream: &[u8]) -> Result<Field> {
+        let mut r = ByteReader::new(stream);
+        let header = StreamHeader::read(&mut r)?;
+        let mode = r.get_u8()?;
+        match mode {
+            1 => {
+                let state = r.get_block()?.to_vec();
+                let inner = r.get_block()?;
+                let mut field = time_series_pipeline().decompress(inner)?;
+                // postprocess with any Transpose instance: the permutation
+                // travels in the state bytes
+                Transpose::new(vec![0]).postprocess(&mut field, &state)?;
+                field.name = header.field_name;
+                Ok(field)
+            }
+            0 => {
+                let inner = r.get_block()?;
+                let mut field = BlockCompressor::sz3_lr().decompress(inner)?;
+                field.name = header.field_name;
+                Ok(field)
+            }
+            _ => Err(SzError::corrupt("aps: unknown mode")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::test_support::roundtrip_bound_check;
+    use crate::util::rng::Pcg32;
+
+    /// Miniature APS-like stack: (time, y, x) Poisson counts of a decaying
+    /// radial pattern that drifts slowly in time.
+    pub fn aps_like(rng: &mut Pcg32, t: usize, h: usize, w: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(t * h * w);
+        for ti in 0..t {
+            let drift = (ti as f64 * 0.01).sin() * 2.0;
+            for y in 0..h {
+                for x in 0..w {
+                    let dy = y as f64 - h as f64 / 2.0 + drift;
+                    let dx = x as f64 - w as f64 / 2.0;
+                    let r2 = (dy * dy + dx * dx) / (h as f64 * w as f64 / 16.0);
+                    let intensity = 400.0 * (-r2).exp() + 0.2;
+                    out.push(rng.poisson(intensity) as f32);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn near_lossless_mode_is_exact_on_counts() {
+        let mut rng = Pcg32::seeded(61);
+        let data = aps_like(&mut rng, 16, 12, 12);
+        let f = Field::f32("pillar", &[16, 12, 12], data.clone()).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(0.1)); // < 0.5 => mode 1
+        let c = ApsCompressor::default();
+        let stream = c.compress(&f, &conf).unwrap();
+        let out = c.decompress(&stream).unwrap();
+        assert_eq!(out.values, f.values, "integer counts must be exact");
+    }
+
+    #[test]
+    fn high_bound_mode_roundtrips() {
+        let mut rng = Pcg32::seeded(62);
+        let data = aps_like(&mut rng, 12, 12, 12);
+        let f = Field::f32("chip", &[12, 12, 12], data).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(4.0)); // >= 0.5 => mode 0
+        roundtrip_bound_check(&ApsCompressor::default(), &f, &conf);
+    }
+
+    #[test]
+    fn non_integer_data_respects_user_bound_in_mode_1() {
+        let mut rng = Pcg32::seeded(63);
+        let data: Vec<f32> =
+            aps_like(&mut rng, 8, 8, 8).iter().map(|&x| x + 0.25).collect();
+        let f = Field::f32("frac", &[8, 8, 8], data).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(0.05));
+        roundtrip_bound_check(&ApsCompressor::default(), &f, &conf);
+    }
+}

@@ -1,0 +1,495 @@
+//! Blockwise composite compressor — SZ3-LR (paper §6.2), the SZ3 port of
+//! SZ2 [8]: the field is partitioned into fixed-size blocks (6³ in 3-D,
+//! 12² in 2-D, 128 in 1-D); each block is analyzed (regression fit +
+//! Lorenzo/regression error estimates) and the better predictor is chosen
+//! per block. Analysis is batched behind [`BlockAnalyzer`] so it can run on
+//! the PJRT executable compiled from the L2 JAX model.
+
+use super::analysis::{BlockAnalyzer, NativeAnalyzer, RawAnalysis};
+use super::block_fast;
+use super::{CompressConf, Compressor, StreamHeader};
+use crate::bitio::{BitReader, BitWriter};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::{Field, FieldValues, NdCursor, Scalar, Shape};
+use crate::encoder::{Encoder, HuffmanEncoder};
+use crate::error::{Result, SzError};
+use crate::lossless::{self};
+use crate::predictor::{CompositeChoice, LorenzoPredictor, Predictor, RegressionFit};
+use crate::quantizer::{LinearQuantizer, Quantizer};
+use std::sync::Arc;
+
+/// Block side length per dimensionality (SZ2 conventions).
+pub fn block_side(ndim: usize) -> usize {
+    match ndim {
+        1 => 128,
+        2 => 12,
+        3 => 6,
+        _ => 4,
+    }
+}
+
+/// SZ2-style blockwise Lorenzo⊕regression compressor.
+pub struct BlockCompressor {
+    name: &'static str,
+    /// Batched analysis backend (native or PJRT).
+    pub analyzer: Arc<dyn BlockAnalyzer>,
+    /// Lossless backend name.
+    pub lossless: &'static str,
+    /// Skip the Lorenzo decompression-noise correction (SZ3-APS mode).
+    pub assume_noiseless: bool,
+    /// Use the dimension-specialized prediction codecs (SZ3-LR-s, §6.2)
+    /// instead of the generic multidimensional iterator.
+    pub specialized: bool,
+}
+
+impl BlockCompressor {
+    /// SZ3-LR: iterator-based predictor module (paper §6.2).
+    pub fn sz3_lr() -> Self {
+        BlockCompressor {
+            name: "sz3-lr",
+            analyzer: Arc::new(NativeAnalyzer),
+            lossless: "zstd",
+            assume_noiseless: false,
+            specialized: false,
+        }
+    }
+
+    /// SZ3-LR-s: same logic, dimension-specialized codecs (paper §6.2).
+    pub fn sz3_lr_s() -> Self {
+        BlockCompressor { name: "sz3-lr-s", specialized: true, ..Self::sz3_lr() }
+    }
+
+    /// Replace the analysis backend (e.g. with the PJRT engine).
+    pub fn with_analyzer(mut self, a: Arc<dyn BlockAnalyzer>) -> Self {
+        self.analyzer = a;
+        self
+    }
+
+    fn compress_typed<T: Scalar>(
+        &self,
+        values: &mut [T],
+        shape: &Shape,
+        eb: f64,
+        radius: u32,
+        w: &mut ByteWriter,
+    ) -> Result<()> {
+        let nd = shape.ndim();
+        let dims = shape.dims().to_vec();
+        let side = block_side(nd);
+        let nblocks_per_dim: Vec<usize> = dims.iter().map(|&d| d.div_ceil(side)).collect();
+        let total_blocks: usize = nblocks_per_dim.iter().product();
+        let lorenzo = LorenzoPredictor::new(nd);
+        let noise = if self.assume_noiseless {
+            0.0
+        } else {
+            LorenzoPredictor::noise_factor(nd) * eb
+        };
+
+        // ---- Pass 1: batched analysis of all *full* blocks ----
+        let full_dims = vec![side; nd];
+        let block_len: usize = full_dims.iter().product();
+        let mut full_blocks_data: Vec<f64> = Vec::new();
+        let mut block_origins: Vec<Vec<usize>> = Vec::with_capacity(total_blocks);
+        let mut is_full: Vec<bool> = Vec::with_capacity(total_blocks);
+        let mut bidx = vec![0usize; nd];
+        for _ in 0..total_blocks {
+            let origin: Vec<usize> = bidx.iter().map(|&b| b * side).collect();
+            let full = origin.iter().zip(&dims).all(|(&o, &d)| o + side <= d);
+            if full {
+                // extract block values (original data) as f64
+                extract_block(values, shape, &origin, &full_dims, &mut full_blocks_data);
+            }
+            block_origins.push(origin);
+            is_full.push(full);
+            // advance block grid index
+            for d in (0..nd).rev() {
+                bidx[d] += 1;
+                if bidx[d] < nblocks_per_dim[d] {
+                    break;
+                }
+                bidx[d] = 0;
+            }
+        }
+        let analyses: Vec<RawAnalysis> = if full_blocks_data.is_empty() {
+            Vec::new()
+        } else {
+            self.analyzer.analyze_batch(&full_blocks_data, &full_dims)?
+        };
+        debug_assert_eq!(analyses.len() * block_len, full_blocks_data.len());
+
+        // ---- Pass 2: per-block selection + prediction + quantization ----
+        let mut quantizer = LinearQuantizer::<T>::with_radius(eb, radius);
+        let mut indices: Vec<u32> = Vec::with_capacity(shape.len());
+        let mut selections = BitWriter::new();
+        let mut coeff_ints: Vec<i64> = Vec::new();
+        let use_fast = self.specialized && block_fast::supports(nd);
+        let mut next_analysis = 0usize;
+        let scratch_block: Vec<f64> = Vec::with_capacity(block_len);
+        for (origin, &full) in block_origins.iter().zip(&is_full) {
+            let bdims: Vec<usize> =
+                origin.iter().zip(&dims).map(|(&o, &d)| side.min(d - o)).collect();
+            // choice: full blocks use batched analysis; partial blocks
+            // always use Lorenzo (as SZ2 does for irregular remainders).
+            let choice = if full {
+                let a = &analyses[next_analysis];
+                next_analysis += 1;
+                if a.lorenzo_err + noise <= a.regression_err {
+                    CompositeChoice::Lorenzo
+                } else {
+                    CompositeChoice::Regression
+                }
+            } else {
+                CompositeChoice::Lorenzo
+            };
+            let fit = match choice {
+                CompositeChoice::Regression => {
+                    let a = &analyses[next_analysis - 1];
+                    let raw = RegressionFit { coeffs: a.coeffs.clone() };
+                    let (q, rec) = raw.quantize(eb, side);
+                    coeff_ints.extend_from_slice(&q);
+                    selections.put_bit(1);
+                    Some(rec)
+                }
+                CompositeChoice::Lorenzo => {
+                    selections.put_bit(0);
+                    None
+                }
+            };
+            let _ = &scratch_block; // kept for API stability
+            if use_fast {
+                // dimension-specialized codec (SZ3-LR-s, §6.2)
+                match nd {
+                    3 => block_fast::compress_block_3d(
+                        values, &dims, origin, &bdims, fit.as_ref(), &mut quantizer,
+                        &mut indices,
+                    ),
+                    _ => block_fast::compress_block_2d(
+                        values, &dims, origin, &bdims, fit.as_ref(), &mut quantizer,
+                        &mut indices,
+                    ),
+                }
+                continue;
+            }
+            // generic multidimensional-iterator walk (SZ3-LR)
+            let mut cursor = NdCursor::new(values, shape);
+            let mut lidx = vec![0usize; nd];
+            let mut gidx = vec![0usize; nd];
+            loop {
+                for d in 0..nd {
+                    gidx[d] = origin[d] + lidx[d];
+                }
+                cursor.seek(&gidx);
+                let pred = match &fit {
+                    Some(f) => f.predict(&lidx),
+                    None => lorenzo.predict(&cursor),
+                };
+                let (qi, rec) = quantizer.quantize(cursor.value(), pred);
+                indices.push(qi);
+                cursor.set(rec);
+                // advance local index
+                let mut done = true;
+                for d in (0..nd).rev() {
+                    lidx[d] += 1;
+                    if lidx[d] < bdims[d] {
+                        done = false;
+                        break;
+                    }
+                    lidx[d] = 0;
+                }
+                if done {
+                    break;
+                }
+            }
+        }
+
+        // ---- Serialize ----
+        let ll = lossless::by_name(self.lossless)
+            .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
+        let mut inner = ByteWriter::new();
+        inner.put_varint(total_blocks as u64);
+        inner.put_block(&selections.finish());
+        inner.put_varint(coeff_ints.len() as u64);
+        RegressionFit::save_quantized(&coeff_ints, &mut inner);
+        quantizer.save(&mut inner)?;
+        HuffmanEncoder::new().encode(&indices, &mut inner)?;
+        let packed = ll.compress(&inner.finish())?;
+        w.put_block(&packed);
+        Ok(())
+    }
+
+    fn decompress_typed<T: Scalar>(
+        &self,
+        shape: &Shape,
+        radius: u32,
+        r: &mut ByteReader,
+    ) -> Result<Vec<T>> {
+        let nd = shape.ndim();
+        let dims = shape.dims().to_vec();
+        let side = block_side(nd);
+        let nblocks_per_dim: Vec<usize> = dims.iter().map(|&d| d.div_ceil(side)).collect();
+        let total_blocks: usize = nblocks_per_dim.iter().product();
+
+        let ll = lossless::by_name(self.lossless)
+            .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
+        let inner = ll.decompress(r.get_block()?)?;
+        let mut ir = ByteReader::new(&inner);
+        let stored_blocks = ir.get_varint()? as usize;
+        if stored_blocks != total_blocks {
+            return Err(SzError::corrupt("block count mismatch"));
+        }
+        let sel_bytes = ir.get_block()?.to_vec();
+        let n_coeffs = ir.get_varint()? as usize;
+        let coeff_ints = RegressionFit::load_quantized(n_coeffs, &mut ir)?;
+        let mut quantizer = LinearQuantizer::<T>::with_radius(1.0, radius);
+        quantizer.load(&mut ir)?;
+        let eb = quantizer.eb();
+        let indices = HuffmanEncoder::new().decode(&mut ir, shape.len())?;
+
+        let lorenzo = LorenzoPredictor::new(nd);
+        let mut values = vec![T::zero(); shape.len()];
+        let use_fast = self.specialized && block_fast::supports(nd);
+        let mut selections = BitReader::new(&sel_bytes);
+        let mut coeff_pos = 0usize;
+        let mut qpos = 0usize;
+        let mut bidx = vec![0usize; nd];
+        for _ in 0..total_blocks {
+            let origin: Vec<usize> = bidx.iter().map(|&b| b * side).collect();
+            let full = origin.iter().zip(&dims).all(|(&o, &d)| o + side <= d);
+            let bdims: Vec<usize> =
+                origin.iter().zip(&dims).map(|(&o, &d)| side.min(d - o)).collect();
+            let use_regression = selections.get_bit()? == 1;
+            if use_regression && !full {
+                return Err(SzError::corrupt("regression on partial block"));
+            }
+            let fit = if use_regression {
+                if coeff_pos + nd + 1 > coeff_ints.len() {
+                    return Err(SzError::corrupt("coefficient stream exhausted"));
+                }
+                let q = &coeff_ints[coeff_pos..coeff_pos + nd + 1];
+                coeff_pos += nd + 1;
+                Some(RegressionFit::dequantize(q, eb, side))
+            } else {
+                None
+            };
+            if use_fast {
+                match nd {
+                    3 => block_fast::decompress_block_3d(
+                        &mut values, &dims, &origin, &bdims, fit.as_ref(),
+                        &mut quantizer, &indices, &mut qpos,
+                    ),
+                    _ => block_fast::decompress_block_2d(
+                        &mut values, &dims, &origin, &bdims, fit.as_ref(),
+                        &mut quantizer, &indices, &mut qpos,
+                    ),
+                }
+            } else {
+                let mut cursor = NdCursor::new(&mut values, shape);
+                let mut lidx = vec![0usize; nd];
+                let mut gidx = vec![0usize; nd];
+                loop {
+                    for d in 0..nd {
+                        gidx[d] = origin[d] + lidx[d];
+                    }
+                    cursor.seek(&gidx);
+                    let pred = match &fit {
+                        Some(f) => f.predict(&lidx),
+                        None => lorenzo.predict(&cursor),
+                    };
+                    let rec = quantizer.recover(pred, indices[qpos]);
+                    qpos += 1;
+                    cursor.set(rec);
+                    let mut done = true;
+                    for d in (0..nd).rev() {
+                        lidx[d] += 1;
+                        if lidx[d] < bdims[d] {
+                            done = false;
+                            break;
+                        }
+                        lidx[d] = 0;
+                    }
+                    if done {
+                        break;
+                    }
+                }
+            }
+            for d in (0..nd).rev() {
+                bidx[d] += 1;
+                if bidx[d] < nblocks_per_dim[d] {
+                    break;
+                }
+                bidx[d] = 0;
+            }
+        }
+        Ok(values)
+    }
+}
+
+/// Extract one block (f64) from a typed buffer into `out`.
+fn extract_block<T: Scalar>(
+    values: &[T],
+    shape: &Shape,
+    origin: &[usize],
+    bdims: &[usize],
+    out: &mut Vec<f64>,
+) {
+    let nd = shape.ndim();
+    let strides = shape.strides();
+    let base: usize = origin.iter().zip(strides).map(|(&o, &s)| o * s).sum();
+    match nd {
+        3 => {
+            // hot path: direct triple loop, contiguous inner axis
+            let (s0, s1) = (strides[0], strides[1]);
+            for z in 0..bdims[0] {
+                for y in 0..bdims[1] {
+                    let row = base + z * s0 + y * s1;
+                    out.extend(values[row..row + bdims[2]].iter().map(|v| v.to_f64()));
+                }
+            }
+        }
+        2 => {
+            let s0 = strides[0];
+            for y in 0..bdims[0] {
+                let row = base + y * s0;
+                out.extend(values[row..row + bdims[1]].iter().map(|v| v.to_f64()));
+            }
+        }
+        1 => out.extend(values[base..base + bdims[0]].iter().map(|v| v.to_f64())),
+        _ => {
+            let mut lidx = vec![0usize; nd];
+            let n: usize = bdims.iter().product();
+            for _ in 0..n {
+                let off: usize = lidx.iter().zip(strides).map(|(&l, &s)| l * s).sum();
+                out.push(values[base + off].to_f64());
+                for d in (0..nd).rev() {
+                    lidx[d] += 1;
+                    if lidx[d] < bdims[d] {
+                        break;
+                    }
+                    lidx[d] = 0;
+                }
+            }
+        }
+    }
+}
+
+impl Compressor for BlockCompressor {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {
+        let eb = conf.bound.to_abs(field)?;
+        let mut w = ByteWriter::new();
+        StreamHeader::for_field(self.name, field).write(&mut w);
+        w.put_u32(conf.radius);
+        match &field.values {
+            FieldValues::F32(v) => {
+                let mut buf = v.clone();
+                self.compress_typed::<f32>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+            }
+            FieldValues::F64(v) => {
+                let mut buf = v.clone();
+                self.compress_typed::<f64>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+            }
+            FieldValues::I32(v) => {
+                let mut buf = v.clone();
+                self.compress_typed::<i32>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+            }
+        }
+        Ok(w.finish())
+    }
+
+    fn decompress(&self, stream: &[u8]) -> Result<Field> {
+        let mut r = ByteReader::new(stream);
+        let header = StreamHeader::read(&mut r)?;
+        let radius = r.get_u32()?;
+        let shape = Shape::new(&header.dims)?;
+        let values = match header.dtype.as_str() {
+            "f32" => FieldValues::F32(self.decompress_typed::<f32>(&shape, radius, &mut r)?),
+            "f64" => FieldValues::F64(self.decompress_typed::<f64>(&shape, radius, &mut r)?),
+            "i32" => FieldValues::I32(self.decompress_typed::<i32>(&shape, radius, &mut r)?),
+            other => return Err(SzError::corrupt(format!("unknown dtype {other}"))),
+        };
+        Field::new(header.field_name, &header.dims, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::test_support::roundtrip_bound_check;
+    use crate::pipeline::ErrorBound;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_3d_smooth() {
+        let mut rng = crate::util::rng::Pcg32::seeded(31);
+        let dims = [20usize, 20, 20];
+        let data = prop::smooth_field(&mut rng, &dims);
+        let f = Field::f32("cube", &dims, data).unwrap();
+        for eb in [1e-1, 1e-3, 1e-5] {
+            let conf = CompressConf::new(ErrorBound::Rel(eb));
+            let ratio = roundtrip_bound_check(&BlockCompressor::sz3_lr(), &f, &conf);
+            assert!(ratio > 1.0, "eb {eb} ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_partial_blocks() {
+        // dims not divisible by block side
+        let mut rng = crate::util::rng::Pcg32::seeded(32);
+        for dims in [vec![7usize, 13], vec![5usize, 6, 11], vec![131usize]] {
+            let data = prop::smooth_field(&mut rng, &dims);
+            let f = Field::f32("odd", &dims, data).unwrap();
+            let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+            roundtrip_bound_check(&BlockCompressor::sz3_lr(), &f, &conf);
+        }
+    }
+
+    #[test]
+    fn regression_wins_on_noisy_planes_at_high_eb() {
+        // Construct data where regression should be selected: steep plane +
+        // noise, compressed at high eb.
+        let dims = [24usize, 24, 24];
+        let mut rng = crate::util::rng::Pcg32::seeded(33);
+        let mut vals = Vec::with_capacity(24 * 24 * 24);
+        for i in 0..24 {
+            for j in 0..24 {
+                for k in 0..24 {
+                    vals.push(
+                        (3.0 * i as f64 - 2.0 * j as f64 + k as f64
+                            + rng.normal() * 0.05) as f32,
+                    );
+                }
+            }
+        }
+        let f = Field::f32("plane", &dims, vals).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(0.5));
+        let ratio = roundtrip_bound_check(&BlockCompressor::sz3_lr(), &f, &conf);
+        assert!(ratio > 20.0, "plane data should compress hard, got {ratio}");
+    }
+
+    #[test]
+    fn prop_bound_holds_1d_2d_3d_4d() {
+        prop::cases(12, 0xb10c, |rng| {
+            let nd = rng.below(4) + 1;
+            let dims: Vec<usize> = (0..nd).map(|_| rng.below(12) + 5).collect();
+            let data = prop::smooth_field(rng, &dims);
+            let f = Field::f32("nd", &dims, data).unwrap();
+            let eb = 10f64.powf(rng.uniform(-5.0, -1.0));
+            let conf = CompressConf::new(ErrorBound::Abs(eb));
+            roundtrip_bound_check(&BlockCompressor::sz3_lr(), &f, &conf);
+        });
+    }
+
+    #[test]
+    fn f64_fields() {
+        let mut rng = crate::util::rng::Pcg32::seeded(35);
+        let dims = [16usize, 16];
+        let data: Vec<f64> =
+            prop::smooth_field(&mut rng, &dims).iter().map(|&x| x as f64).collect();
+        let f = Field::f64("dbl", &dims, data).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(1e-8));
+        roundtrip_bound_check(&BlockCompressor::sz3_lr(), &f, &conf);
+    }
+}

@@ -1,0 +1,313 @@
+//! SZ3-Interp (paper §6.2): interpolation-based prediction [17]. Data is
+//! decompressed level-by-level on dyadic grids: each level halves the
+//! stride and predicts the new points by linear or cubic spline
+//! interpolation *along one axis at a time* from already-recovered points.
+//!
+//! Compared with Lorenzo, interpolation has no error-accumulation chain and
+//! stores no per-block coefficients, which is why it dominates at low bit
+//! rates (paper Fig. 7).
+
+use super::{CompressConf, Compressor, StreamHeader};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::{Field, FieldValues, Scalar, Shape};
+use crate::encoder::{Encoder, HuffmanEncoder};
+use crate::error::{Result, SzError};
+use crate::lossless;
+use crate::quantizer::{LinearQuantizer, Quantizer};
+
+/// Interpolation basis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InterpMode {
+    /// Midpoint average of the two stride-neighbors.
+    Linear,
+    /// 4-point cubic spline `(9(b+c) - (a+d)) / 16`.
+    Cubic,
+}
+
+/// Level-by-level interpolation compressor.
+pub struct InterpCompressor {
+    /// Interpolation basis (cubic by default, as in [17]).
+    pub mode: InterpMode,
+    /// Lossless backend name.
+    pub lossless: &'static str,
+}
+
+impl Default for InterpCompressor {
+    fn default() -> Self {
+        InterpCompressor { mode: InterpMode::Cubic, lossless: "zstd" }
+    }
+}
+
+/// Visit every point of the dyadic interpolation schedule exactly once.
+/// Calls `f(flat_index, dim, stride)` for each predicted point; the anchor
+/// (index 0) is visited first with `dim = usize::MAX, stride = 0`.
+fn traverse<F: FnMut(usize, usize, usize)>(shape: &Shape, mut f: F) {
+    let dims = shape.dims();
+    let strides = shape.strides();
+    let nd = dims.len();
+    let max_dim = *dims.iter().max().unwrap();
+    let mut levels = 0u32;
+    while (1usize << levels) < max_dim {
+        levels += 1;
+    }
+    f(0, usize::MAX, 0);
+    let mut idx = vec![0usize; nd];
+    for level in (1..=levels.max(1)).rev() {
+        let s = 1usize << (level - 1);
+        for dim in 0..nd {
+            // iterate points with idx[dim] ≡ s (mod 2s); dims before `dim`
+            // at any multiple of s; dims after at multiples of 2s.
+            idx.iter_mut().for_each(|v| *v = 0);
+            idx[dim] = s;
+            if idx[dim] >= dims[dim] {
+                continue;
+            }
+            'outer: loop {
+                let flat: usize = idx.iter().zip(strides).map(|(&i, &st)| i * st).sum();
+                f(flat, dim, s);
+                // advance: innermost axis last, respecting per-axis steps
+                for d in (0..nd).rev() {
+                    let step = if d == dim {
+                        2 * s
+                    } else if d < dim {
+                        s
+                    } else {
+                        2 * s
+                    };
+                    idx[d] += step;
+                    if idx[d] < dims[d] {
+                        continue 'outer;
+                    }
+                    idx[d] = if d == dim { s } else { 0 };
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Predict the value at `flat` by interpolating along `dim` with `stride`.
+#[inline]
+fn interp_predict<T: Scalar>(
+    buf: &[T],
+    dims: &[usize],
+    strides: &[usize],
+    flat: usize,
+    dim: usize,
+    stride: usize,
+    mode: InterpMode,
+) -> f64 {
+    if dim == usize::MAX {
+        return 0.0; // anchor
+    }
+    let pos = flat / strides[dim] % dims[dim];
+    let len = dims[dim];
+    let st = strides[dim];
+    let has = |k: isize| -> bool {
+        let p = pos as isize + k * stride as isize;
+        p >= 0 && (p as usize) < len
+    };
+    let at = |k: isize| -> f64 {
+        let off = (flat as isize + k * (stride * st) as isize) as usize;
+        buf[off].to_f64()
+    };
+    let lo = has(-1);
+    let hi = has(1);
+    match (lo, hi) {
+        (true, true) => {
+            if mode == InterpMode::Cubic && has(-3) && has(3) {
+                (9.0 * (at(-1) + at(1)) - (at(-3) + at(3))) / 16.0
+            } else {
+                0.5 * (at(-1) + at(1))
+            }
+        }
+        (true, false) => at(-1),
+        (false, true) => at(1),
+        (false, false) => 0.0,
+    }
+}
+
+impl InterpCompressor {
+    fn compress_typed<T: Scalar>(
+        &self,
+        values: &mut [T],
+        shape: &Shape,
+        eb: f64,
+        radius: u32,
+        w: &mut ByteWriter,
+    ) -> Result<()> {
+        let mut quantizer = LinearQuantizer::<T>::with_radius(eb, radius);
+        let mut indices = Vec::with_capacity(shape.len());
+        let dims = shape.dims().to_vec();
+        let strides = shape.strides().to_vec();
+        let mode = self.mode;
+        // Safety: traverse visits disjoint indices; we mutate through a raw
+        // pointer because the closure needs &buf for neighbor reads and
+        // writes to the visited cell only.
+        let buf_ptr = values.as_mut_ptr();
+        let buf_len = values.len();
+        traverse(shape, |flat, dim, stride| {
+            // The shared view is dropped before the single-cell write, so the
+            // raw-pointer accesses never alias a live reference.
+            let (pred, cur) = {
+                let buf = unsafe { std::slice::from_raw_parts(buf_ptr, buf_len) };
+                (interp_predict(buf, &dims, &strides, flat, dim, stride, mode), buf[flat])
+            };
+            let (qi, rec) = quantizer.quantize(cur, pred);
+            indices.push(qi);
+            unsafe { *buf_ptr.add(flat) = rec };
+        });
+        debug_assert_eq!(indices.len(), shape.len());
+        let ll = lossless::by_name(self.lossless)
+            .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
+        let mut inner = ByteWriter::new();
+        inner.put_u8(match self.mode {
+            InterpMode::Linear => 0,
+            InterpMode::Cubic => 1,
+        });
+        quantizer.save(&mut inner)?;
+        HuffmanEncoder::new().encode(&indices, &mut inner)?;
+        w.put_block(&ll.compress(&inner.finish())?);
+        Ok(())
+    }
+
+    fn decompress_typed<T: Scalar>(
+        &self,
+        shape: &Shape,
+        radius: u32,
+        r: &mut ByteReader,
+    ) -> Result<Vec<T>> {
+        let ll = lossless::by_name(self.lossless)
+            .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
+        let inner = ll.decompress(r.get_block()?)?;
+        let mut ir = ByteReader::new(&inner);
+        let mode = match ir.get_u8()? {
+            0 => InterpMode::Linear,
+            1 => InterpMode::Cubic,
+            _ => return Err(SzError::corrupt("bad interp mode")),
+        };
+        let mut quantizer = LinearQuantizer::<T>::with_radius(1.0, radius);
+        quantizer.load(&mut ir)?;
+        let indices = HuffmanEncoder::new().decode(&mut ir, shape.len())?;
+        let mut values = vec![T::zero(); shape.len()];
+        let dims = shape.dims().to_vec();
+        let strides = shape.strides().to_vec();
+        let buf_ptr = values.as_mut_ptr();
+        let buf_len = values.len();
+        let mut pos = 0usize;
+        traverse(shape, |flat, dim, stride| {
+            let pred = {
+                let buf = unsafe { std::slice::from_raw_parts(buf_ptr, buf_len) };
+                interp_predict(buf, &dims, &strides, flat, dim, stride, mode)
+            };
+            let rec = quantizer.recover(pred, indices[pos]);
+            pos += 1;
+            unsafe { *buf_ptr.add(flat) = rec };
+        });
+        Ok(values)
+    }
+}
+
+impl Compressor for InterpCompressor {
+    fn name(&self) -> &'static str {
+        "sz3-interp"
+    }
+
+    fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {
+        let eb = conf.bound.to_abs(field)?;
+        let mut w = ByteWriter::new();
+        StreamHeader::for_field(self.name(), field).write(&mut w);
+        w.put_u32(conf.radius);
+        match &field.values {
+            FieldValues::F32(v) => {
+                let mut buf = v.clone();
+                self.compress_typed::<f32>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+            }
+            FieldValues::F64(v) => {
+                let mut buf = v.clone();
+                self.compress_typed::<f64>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+            }
+            FieldValues::I32(v) => {
+                let mut buf = v.clone();
+                self.compress_typed::<i32>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+            }
+        }
+        Ok(w.finish())
+    }
+
+    fn decompress(&self, stream: &[u8]) -> Result<Field> {
+        let mut r = ByteReader::new(stream);
+        let header = StreamHeader::read(&mut r)?;
+        let radius = r.get_u32()?;
+        let shape = Shape::new(&header.dims)?;
+        let values = match header.dtype.as_str() {
+            "f32" => FieldValues::F32(self.decompress_typed::<f32>(&shape, radius, &mut r)?),
+            "f64" => FieldValues::F64(self.decompress_typed::<f64>(&shape, radius, &mut r)?),
+            "i32" => FieldValues::I32(self.decompress_typed::<i32>(&shape, radius, &mut r)?),
+            other => return Err(SzError::corrupt(format!("unknown dtype {other}"))),
+        };
+        Field::new(header.field_name, &header.dims, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::test_support::roundtrip_bound_check;
+    use crate::pipeline::ErrorBound;
+    use crate::util::prop;
+
+    #[test]
+    fn traverse_covers_every_point_once() {
+        for dims in [vec![1usize], vec![7usize], vec![8usize, 8], vec![5usize, 9, 3],
+                     vec![2usize, 2, 2, 2], vec![16usize, 1, 5]] {
+            let shape = Shape::new(&dims).unwrap();
+            let mut seen = vec![0u32; shape.len()];
+            traverse(&shape, |flat, _, _| seen[flat] += 1);
+            assert!(
+                seen.iter().all(|&c| c == 1),
+                "dims {dims:?}: coverage {:?}",
+                seen.iter().filter(|&&c| c != 1).count()
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_smooth_beats_lr_at_low_bitrate() {
+        let mut rng = crate::util::rng::Pcg32::seeded(41);
+        let dims = [32usize, 32, 32];
+        let data = prop::smooth_field(&mut rng, &dims);
+        let f = Field::f32("cube", &dims, data).unwrap();
+        let conf = CompressConf::new(ErrorBound::Rel(1e-2)); // high eb / low bitrate
+        let ri = roundtrip_bound_check(&InterpCompressor::default(), &f, &conf);
+        let rl = roundtrip_bound_check(&super::super::BlockCompressor::sz3_lr(), &f, &conf);
+        assert!(
+            ri > rl * 0.8,
+            "interp should be competitive at low bitrate: interp {ri} lr {rl}"
+        );
+    }
+
+    #[test]
+    fn linear_mode_roundtrip() {
+        let mut rng = crate::util::rng::Pcg32::seeded(42);
+        let dims = [50usize, 40];
+        let data = prop::smooth_field(&mut rng, &dims);
+        let f = Field::f32("lin", &dims, data).unwrap();
+        let c = InterpCompressor { mode: InterpMode::Linear, lossless: "zstd" };
+        let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+        roundtrip_bound_check(&c, &f, &conf);
+    }
+
+    #[test]
+    fn prop_bound_holds_arbitrary_dims() {
+        prop::cases(15, 0x1e7, |rng| {
+            let nd = rng.below(3) + 1;
+            let dims: Vec<usize> = (0..nd).map(|_| rng.below(20) + 1).collect();
+            let data = prop::smooth_field(rng, &dims);
+            let f = Field::f32("nd", &dims, data).unwrap();
+            let eb = 10f64.powf(rng.uniform(-5.0, -1.0));
+            let conf = CompressConf::new(ErrorBound::Abs(eb));
+            roundtrip_bound_check(&InterpCompressor::default(), &f, &conf);
+        });
+    }
+}

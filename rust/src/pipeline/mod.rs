@@ -1,0 +1,288 @@
+//! Compression-pipeline composition (paper §3.3, Algorithm 1).
+//!
+//! A pipeline = preprocessor → predictor → quantizer → encoder → lossless.
+//! [`point::SzCompressor`] is the literal Algorithm 1 over any point
+//! predictor; [`block::BlockCompressor`] is the SZ2-style blockwise
+//! composite (SZ3-LR); [`interp::InterpCompressor`] is SZ3-Interp;
+//! [`truncation::TruncationCompressor`] is SZ3-Truncation;
+//! [`pastri::PastriCompressor`] is SZ-Pastri/SZ3-Pastri (§4);
+//! [`aps::ApsCompressor`] is the adaptive APS pipeline (§5).
+//!
+//! Every compressed stream begins with a common header (pipeline name,
+//! dtype, shape), so [`decompress_any`] can dispatch to the right pipeline.
+
+pub mod analysis;
+pub mod aps;
+pub mod block;
+mod block_fast;
+pub mod interp;
+pub mod pastri;
+pub mod point;
+pub mod truncation;
+
+pub use analysis::{BlockAnalyzer, NativeAnalyzer};
+pub use aps::ApsCompressor;
+pub use block::BlockCompressor;
+pub use interp::InterpCompressor;
+pub use pastri::PastriCompressor;
+pub use point::SzCompressor;
+pub use truncation::TruncationCompressor;
+
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::Field;
+use crate::error::{Result, SzError};
+
+/// Error-bound mode (user requirement).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ErrorBound {
+    /// Absolute: `|x' - x| <= eb`.
+    Abs(f64),
+    /// Value-range relative: `|x' - x| <= rel * (max - min)`.
+    Rel(f64),
+    /// Pointwise relative: `|x'/x - 1| <= rel` (via log transform).
+    PwRel(f64),
+}
+
+impl ErrorBound {
+    /// Resolve to an absolute bound for the given field.
+    pub fn to_abs(self, field: &Field) -> Result<f64> {
+        match self {
+            ErrorBound::Abs(e) if e > 0.0 => Ok(e),
+            ErrorBound::Rel(r) if r > 0.0 => {
+                let (lo, hi) = field.value_range();
+                let range = (hi - lo).max(f64::MIN_POSITIVE);
+                Ok(r * range)
+            }
+            ErrorBound::PwRel(_) => Err(SzError::config(
+                "pointwise-relative bound requires the log-transform preprocessor",
+            )),
+            _ => Err(SzError::config("error bound must be positive")),
+        }
+    }
+}
+
+/// Compression configuration handed to a pipeline.
+#[derive(Clone, Debug)]
+pub struct CompressConf {
+    /// Requested error bound.
+    pub bound: ErrorBound,
+    /// Quantizer index radius (alphabet = 2·radius).
+    pub radius: u32,
+}
+
+impl CompressConf {
+    /// Config with the default SZ radius.
+    pub fn new(bound: ErrorBound) -> Self {
+        CompressConf { bound, radius: 32768 }
+    }
+
+    /// Config with an explicit radius.
+    pub fn with_radius(bound: ErrorBound, radius: u32) -> Self {
+        CompressConf { bound, radius }
+    }
+}
+
+/// A composed error-bounded lossy compressor (the paper's
+/// `SZ_Compressor<T, N, Preprocessor, Predictor, Quantizer, Encoder,
+/// Lossless>` — Appendix A.6).
+pub trait Compressor: Send + Sync {
+    /// Pipeline name (stored in the stream header).
+    fn name(&self) -> &'static str;
+    /// Compress `field` under `conf`.
+    fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>>;
+    /// Decompress a stream produced by this pipeline.
+    fn decompress(&self, stream: &[u8]) -> Result<Field>;
+}
+
+const MAGIC: &[u8; 4] = b"SZ3R";
+const VERSION: u8 = 1;
+
+/// Common stream header.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamHeader {
+    /// Pipeline name that produced the stream.
+    pub pipeline: String,
+    /// Field name.
+    pub field_name: String,
+    /// Element dtype tag ("f32"/"f64"/"i32").
+    pub dtype: String,
+    /// Dimensions.
+    pub dims: Vec<usize>,
+}
+
+impl StreamHeader {
+    /// Build a header for `field` under `pipeline`.
+    pub fn for_field(pipeline: &str, field: &Field) -> Self {
+        StreamHeader {
+            pipeline: pipeline.to_string(),
+            field_name: field.name.clone(),
+            dtype: field.values.dtype().to_string(),
+            dims: field.shape.dims().to_vec(),
+        }
+    }
+
+    /// Serialize the header.
+    pub fn write(&self, w: &mut ByteWriter) {
+        w.put_bytes(MAGIC);
+        w.put_u8(VERSION);
+        w.put_str(&self.pipeline);
+        w.put_str(&self.field_name);
+        w.put_str(&self.dtype);
+        w.put_varint(self.dims.len() as u64);
+        for &d in &self.dims {
+            w.put_varint(d as u64);
+        }
+    }
+
+    /// Parse a header.
+    pub fn read(r: &mut ByteReader) -> Result<Self> {
+        let magic = r.get_bytes(4)?;
+        if magic != MAGIC {
+            return Err(SzError::corrupt("bad magic"));
+        }
+        let ver = r.get_u8()?;
+        if ver != VERSION {
+            return Err(SzError::corrupt(format!("unsupported version {ver}")));
+        }
+        let pipeline = r.get_str()?;
+        let field_name = r.get_str()?;
+        let dtype = r.get_str()?;
+        let nd = r.get_varint()? as usize;
+        let mut dims = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            dims.push(r.get_varint()? as usize);
+        }
+        Ok(StreamHeader { pipeline, field_name, dtype, dims })
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// True for degenerate headers.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Peek the header of a compressed stream without decompressing.
+pub fn peek_header(stream: &[u8]) -> Result<StreamHeader> {
+    StreamHeader::read(&mut ByteReader::new(stream))
+}
+
+/// Construct a pipeline by registry name with default modules.
+///
+/// Known names: `sz3-lr`, `sz3-lr-s`, `sz3-interp`, `sz3-truncation`,
+/// `sz3-pastri`, `sz-pastri`, `sz-pastri-zstd`, `sz3-aps`, `lorenzo-1d`,
+/// `fpzip-like`.
+pub fn by_name(name: &str) -> Option<Box<dyn Compressor>> {
+    match name {
+        "sz3-lr" => Some(Box::new(BlockCompressor::sz3_lr())),
+        "sz3-lr-s" => Some(Box::new(BlockCompressor::sz3_lr_s())),
+        "sz3-interp" => Some(Box::new(InterpCompressor::default())),
+        "sz3-truncation" => Some(Box::new(TruncationCompressor::default())),
+        "sz3-pastri" => Some(Box::new(PastriCompressor::sz3())),
+        "sz-pastri" => Some(Box::new(PastriCompressor::sz())),
+        "sz-pastri-zstd" => Some(Box::new(PastriCompressor::sz_with_zstd())),
+        "sz3-aps" => Some(Box::new(ApsCompressor::default())),
+        "lorenzo-1d" => Some(Box::new(SzCompressor::lorenzo_1d())),
+        "fpzip-like" => Some(Box::new(SzCompressor::fpzip_like())),
+        _ => None,
+    }
+}
+
+/// Decompress any stream by dispatching on its header's pipeline name.
+pub fn decompress_any(stream: &[u8]) -> Result<Field> {
+    let header = peek_header(stream)?;
+    let pipeline = by_name(&header.pipeline).ok_or_else(|| {
+        SzError::corrupt(format!("unknown pipeline '{}' in stream", header.pipeline))
+    })?;
+    pipeline.decompress(stream)
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::data::FieldValues;
+
+    /// Compress + decompress + verify error bound on every element.
+    /// Returns compression ratio.
+    pub fn roundtrip_bound_check(
+        c: &dyn Compressor,
+        field: &Field,
+        conf: &CompressConf,
+    ) -> f64 {
+        let stream = c.compress(field, conf).expect("compress");
+        let out = decompress_any(&stream).expect("decompress");
+        assert_eq!(out.shape.dims(), field.shape.dims(), "{}: dims", c.name());
+        let abs = match conf.bound {
+            ErrorBound::PwRel(_) => f64::NAN, // checked separately
+            b => b.to_abs(field).unwrap(),
+        };
+        let orig = field.values.to_f64_vec();
+        let dec = out.values.to_f64_vec();
+        match conf.bound {
+            ErrorBound::PwRel(r) => {
+                for (i, (o, d)) in orig.iter().zip(dec.iter()).enumerate() {
+                    if *o == 0.0 {
+                        assert_eq!(*d, 0.0, "{}: zero not preserved at {i}", c.name());
+                    } else {
+                        let rel = (d / o - 1.0).abs();
+                        assert!(
+                            rel <= r * (1.0 + 1e-9),
+                            "{}: rel err {rel} > {r} at {i}",
+                            c.name()
+                        );
+                    }
+                }
+            }
+            _ => {
+                for (i, (o, d)) in orig.iter().zip(dec.iter()).enumerate() {
+                    let err = (o - d).abs();
+                    assert!(
+                        err <= abs * (1.0 + 1e-12),
+                        "{}: err {err} > bound {abs} at {i} (orig {o} dec {d})",
+                        c.name()
+                    );
+                }
+            }
+        }
+        // dtype must be preserved
+        match (&field.values, &out.values) {
+            (FieldValues::F32(_), FieldValues::F32(_))
+            | (FieldValues::F64(_), FieldValues::F64(_))
+            | (FieldValues::I32(_), FieldValues::I32(_)) => {}
+            _ => panic!("{}: dtype changed", c.name()),
+        }
+        field.nbytes() as f64 / stream.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let f = Field::f32("abc", &[3, 4], vec![0.0; 12]).unwrap();
+        let h = StreamHeader::for_field("sz3-lr", &f);
+        let mut w = ByteWriter::new();
+        h.write(&mut w);
+        let buf = w.finish();
+        let h2 = StreamHeader::read(&mut ByteReader::new(&buf)).unwrap();
+        assert_eq!(h, h2);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(peek_header(b"NOPE....").is_err());
+    }
+
+    #[test]
+    fn rel_bound_resolves_via_range() {
+        let f = Field::f32("x", &[2], vec![0.0, 10.0]).unwrap();
+        let b = ErrorBound::Rel(1e-2).to_abs(&f).unwrap();
+        assert!((b - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,220 @@
+//! SZ3-Truncation (paper §6.2): the speed-first pipeline. Keeps the `k`
+//! most-significant bytes of every float and discards the rest, bypassing
+//! prediction, quantization and encoding entirely (the paper's "module
+//! bypass" tradeoff). ~GB/s throughput, low ratio, and an error bound that
+//! follows from the IEEE-754 mantissa truncation.
+//!
+//! Note: truncation provides a *relative*-style guarantee (mantissa bits),
+//! so `compress` derives the per-field worst-case absolute error and
+//! refuses configurations it cannot honor. The byte planes are stored
+//! plane-major (all byte-0s, then byte-1s, ...) which helps the optional
+//! lossless stage.
+
+use super::{CompressConf, Compressor, StreamHeader};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::{Field, FieldValues};
+use crate::error::{Result, SzError};
+use crate::lossless;
+
+/// Byte-truncation compressor.
+pub struct TruncationCompressor {
+    /// How many most-significant bytes to keep (1..=3 for f32, 1..=7 f64).
+    /// `None` = derive the smallest k that satisfies the requested bound.
+    pub keep_bytes: Option<usize>,
+    /// Optional lossless stage ("bypass" for max speed, the default).
+    pub lossless: &'static str,
+}
+
+impl Default for TruncationCompressor {
+    fn default() -> Self {
+        TruncationCompressor { keep_bytes: None, lossless: "bypass" }
+    }
+}
+
+/// Worst-case absolute error of keeping `keep` of `total` bytes, given the
+/// largest exponent present in the data: dropping `b` low bytes of the
+/// mantissa changes the value by < 2^(8b) ulps.
+fn truncation_abs_error(max_abs: f64, total: usize, keep: usize) -> f64 {
+    if max_abs == 0.0 {
+        return 0.0;
+    }
+    let dropped_bits = 8 * (total - keep) as i32;
+    let mant_bits = if total == 4 { 23 } else { 52 };
+    let exp = max_abs.log2().floor();
+    // ulp at max exponent * 2^dropped_bits
+    (exp - mant_bits as f64 + dropped_bits as f64).exp2()
+}
+
+impl TruncationCompressor {
+    fn pick_keep(&self, field: &Field, conf: &CompressConf) -> Result<usize> {
+        let total = match &field.values {
+            FieldValues::F32(_) | FieldValues::I32(_) => 4,
+            FieldValues::F64(_) => 8,
+        };
+        if let Some(k) = self.keep_bytes {
+            if k == 0 || k > total {
+                return Err(SzError::config(format!("keep_bytes {k} invalid for {total}-byte data")));
+            }
+            return Ok(k);
+        }
+        let eb = conf.bound.to_abs(field)?;
+        let (lo, hi) = field.value_range();
+        let max_abs = lo.abs().max(hi.abs());
+        let integer = matches!(field.values, FieldValues::I32(_));
+        for k in 1..total {
+            // integers: dropping b low bytes changes the value by < 2^(8b)
+            let err = if integer {
+                (8.0 * (total - k) as f64).exp2()
+            } else {
+                truncation_abs_error(max_abs, total, k)
+            };
+            if err <= eb {
+                return Ok(k);
+            }
+        }
+        Ok(total) // lossless fallback: keep everything
+    }
+}
+
+/// Split `bytes_per` per-value bytes into plane-major order keeping `keep`.
+fn to_planes(raw: &[u8], bytes_per: usize, keep: usize) -> Vec<u8> {
+    let n = raw.len() / bytes_per;
+    let mut out = Vec::with_capacity(n * keep);
+    // plane 0 = most significant byte (little-endian: index bytes_per-1)
+    for p in 0..keep {
+        let b = bytes_per - 1 - p;
+        for i in 0..n {
+            out.push(raw[i * bytes_per + b]);
+        }
+    }
+    out
+}
+
+fn from_planes(planes: &[u8], n: usize, bytes_per: usize, keep: usize) -> Vec<u8> {
+    let mut raw = vec![0u8; n * bytes_per];
+    for p in 0..keep {
+        let b = bytes_per - 1 - p;
+        for i in 0..n {
+            raw[i * bytes_per + b] = planes[p * n + i];
+        }
+    }
+    raw
+}
+
+impl Compressor for TruncationCompressor {
+    fn name(&self) -> &'static str {
+        "sz3-truncation"
+    }
+
+    fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {
+        let keep = self.pick_keep(field, conf)?;
+        let mut w = ByteWriter::new();
+        StreamHeader::for_field(self.name(), field).write(&mut w);
+        let (raw, bytes_per): (Vec<u8>, usize) = match &field.values {
+            FieldValues::F32(v) => {
+                (v.iter().flat_map(|x| x.to_le_bytes()).collect(), 4)
+            }
+            FieldValues::F64(v) => {
+                (v.iter().flat_map(|x| x.to_le_bytes()).collect(), 8)
+            }
+            FieldValues::I32(v) => {
+                (v.iter().flat_map(|x| x.to_le_bytes()).collect(), 4)
+            }
+        };
+        w.put_u8(keep as u8);
+        w.put_str(self.lossless);
+        let planes = to_planes(&raw, bytes_per, keep);
+        let ll = lossless::by_name(self.lossless)
+            .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
+        w.put_block(&ll.compress(&planes)?);
+        Ok(w.finish())
+    }
+
+    fn decompress(&self, stream: &[u8]) -> Result<Field> {
+        let mut r = ByteReader::new(stream);
+        let header = StreamHeader::read(&mut r)?;
+        let keep = r.get_u8()? as usize;
+        let ll_name = r.get_str()?;
+        let ll = lossless::by_name(&ll_name)
+            .ok_or_else(|| SzError::corrupt(format!("unknown lossless {ll_name}")))?;
+        let planes = ll.decompress(r.get_block()?)?;
+        let n = header.len();
+        let values = match header.dtype.as_str() {
+            "f32" => {
+                let raw = from_planes(&planes, n, 4, keep);
+                FieldValues::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            "f64" => {
+                let raw = from_planes(&planes, n, 8, keep);
+                FieldValues::F64(
+                    raw.chunks_exact(8)
+                        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            "i32" => {
+                let raw = from_planes(&planes, n, 4, keep);
+                FieldValues::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            other => return Err(SzError::corrupt(format!("unknown dtype {other}"))),
+        };
+        Field::new(header.field_name, &header.dims, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{decompress_any, ErrorBound};
+    use crate::util::prop;
+
+    #[test]
+    fn keep_all_is_lossless() {
+        let vals = vec![1.5f32, -2.25, 3.0e-8, 1e20];
+        let f = Field::f32("x", &[4], vals.clone()).unwrap();
+        let c = TruncationCompressor { keep_bytes: Some(4), lossless: "bypass" };
+        let conf = CompressConf::new(ErrorBound::Abs(1e-30));
+        let out = decompress_any(&c.compress(&f, &conf).unwrap()).unwrap();
+        assert_eq!(out.values, f.values);
+    }
+
+    #[test]
+    fn derived_keep_respects_bound() {
+        prop::cases(40, 0x77c, |rng| {
+            let n = rng.below(500) + 1;
+            let vals: Vec<f32> = (0..n).map(|_| rng.uniform(-100.0, 100.0) as f32).collect();
+            let f = Field::f32("t", &[n], vals.clone()).unwrap();
+            let eb = 10f64.powf(rng.uniform(-4.0, 1.0));
+            let conf = CompressConf::new(ErrorBound::Abs(eb));
+            let c = TruncationCompressor::default();
+            let out = decompress_any(&c.compress(&f, &conf).unwrap()).unwrap();
+            let dec = out.values.to_f64_vec();
+            for (o, d) in vals.iter().zip(dec.iter()) {
+                assert!(
+                    (*o as f64 - d).abs() <= eb,
+                    "err {} > {eb}",
+                    (*o as f64 - d).abs()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn ratio_is_bytes_fraction() {
+        let vals: Vec<f32> = (0..10000).map(|i| i as f32).collect();
+        let f = Field::f32("r", &[10000], vals).unwrap();
+        let c = TruncationCompressor { keep_bytes: Some(2), lossless: "bypass" };
+        let conf = CompressConf::new(ErrorBound::Abs(1e9));
+        let stream = c.compress(&f, &conf).unwrap();
+        let ratio = f.nbytes() as f64 / stream.len() as f64;
+        assert!(ratio > 1.9 && ratio < 2.1, "ratio {ratio}");
+    }
+}

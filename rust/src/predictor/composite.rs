@@ -1,0 +1,204 @@
+//! Composite predictor selection (paper §3.2): the "multialgorithm" design
+//! of SZ2 [8], generalized in SZ3 as an estimation criterion. For each data
+//! block the selector compares the estimated error of the Lorenzo predictor
+//! against the regression fit and picks the better one.
+//!
+//! Lorenzo's estimate is computed on *original* neighbors plus a
+//! decompression-noise correction of `noise_factor(ndim) · eb` per point
+//! (the statistical approach of [8]/[15]) — precisely the mis-estimation
+//! SZ3-APS fixes by switching pipelines when eb is small (paper §5.2).
+
+use super::lorenzo::LorenzoPredictor;
+use super::regression::RegressionFit;
+
+/// Outcome of per-block predictor selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompositeChoice {
+    /// Use the Lorenzo predictor for this block.
+    Lorenzo,
+    /// Use the regression hyperplane for this block.
+    Regression,
+}
+
+/// Per-block Lorenzo-vs-regression selector.
+pub struct CompositeSelector {
+    ndim: usize,
+    /// When true, skip the noise correction (used by SZ3-APS near-lossless
+    /// mode, where decompression noise is provably ~0).
+    pub assume_noiseless: bool,
+}
+
+/// Result of analyzing one block: both error estimates and the choice.
+#[derive(Clone, Debug)]
+pub struct BlockAnalysis {
+    /// Mean |error| estimate for Lorenzo (incl. noise correction).
+    pub lorenzo_err: f64,
+    /// Mean |error| estimate for the regression plane.
+    pub regression_err: f64,
+    /// The fitted plane (unquantized).
+    pub fit: RegressionFit,
+    /// Selected predictor.
+    pub choice: CompositeChoice,
+}
+
+impl CompositeSelector {
+    /// Selector for `ndim`-dimensional blocks.
+    pub fn new(ndim: usize) -> Self {
+        CompositeSelector { ndim, assume_noiseless: false }
+    }
+
+    /// Estimate the mean |Lorenzo residual| over a block of original data
+    /// (order-1, all points, zero padding outside the block). This matches
+    /// the L1 kernel `lorenzo_est.py`.
+    pub fn lorenzo_block_error(block: &[f64], dims: &[usize]) -> f64 {
+        let nd = dims.len();
+        let strides = {
+            let mut s = vec![1usize; nd];
+            for i in (0..nd - 1).rev() {
+                s[i] = s[i + 1] * dims[i + 1];
+            }
+            s
+        };
+        let mut idx = vec![0usize; nd];
+        let mut sum = 0.0;
+        for (flat, &x) in block.iter().enumerate() {
+            // inclusion-exclusion over backward neighbors inside the block
+            let mut pred = 0.0;
+            let nsubsets = 1usize << nd;
+            'subset: for s in 1..nsubsets {
+                let mut off = flat;
+                for d in 0..nd {
+                    if s >> d & 1 == 1 {
+                        if idx[d] == 0 {
+                            continue 'subset; // zero padding
+                        }
+                        off -= strides[d];
+                    }
+                }
+                let sign = if (s.count_ones() & 1) == 1 { 1.0 } else { -1.0 };
+                pred += sign * block[off];
+            }
+            sum += (x - pred).abs();
+            for d in (0..nd).rev() {
+                idx[d] += 1;
+                if idx[d] < dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        sum / block.len() as f64
+    }
+
+    /// Analyze one block: fit regression, estimate both errors, choose.
+    pub fn analyze(&self, block: &[f64], dims: &[usize], eb: f64) -> BlockAnalysis {
+        debug_assert_eq!(dims.len(), self.ndim);
+        let fit = RegressionFit::fit(block, dims);
+        let regression_err = fit.mean_abs_error(block, dims);
+        let mut lorenzo_err = Self::lorenzo_block_error(block, dims);
+        if !self.assume_noiseless {
+            lorenzo_err += LorenzoPredictor::noise_factor(self.ndim) * eb;
+        }
+        let choice = if lorenzo_err <= regression_err {
+            CompositeChoice::Lorenzo
+        } else {
+            CompositeChoice::Regression
+        };
+        BlockAnalysis { lorenzo_err, regression_err, fit, choice }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Pcg32};
+
+    #[test]
+    fn planes_prefer_regression_at_high_eb() {
+        // A noisy plane: regression fits it exactly; Lorenzo pays the noise
+        // correction at high eb => regression wins.
+        let dims = [6usize, 6, 6];
+        let mut rng = Pcg32::seeded(3);
+        let block: Vec<f64> = {
+            let mut out = Vec::new();
+            for i in 0..6 {
+                for j in 0..6 {
+                    for k in 0..6 {
+                        out.push(
+                            i as f64 + 2.0 * j as f64 - k as f64 + rng.normal() * 0.01,
+                        );
+                    }
+                }
+            }
+            out
+        };
+        let sel = CompositeSelector::new(3);
+        let high = sel.analyze(&block, &dims, 1.0);
+        assert_eq!(high.choice, CompositeChoice::Regression);
+        // At tiny eb the noise term vanishes; Lorenzo's residual on a plane
+        // is ~the noise scale too, so selection flips when regression's
+        // residual (also ~noise) exceeds lorenzo's — here they're close, so
+        // just check the noise term moved the estimate.
+        let low = sel.analyze(&block, &dims, 1e-9);
+        assert!(low.lorenzo_err < high.lorenzo_err);
+    }
+
+    #[test]
+    fn rough_data_prefers_lorenzo_at_low_eb() {
+        // Smooth-but-curved data: plane fit has bias, Lorenzo tracks locally.
+        let dims = [8usize, 8];
+        let mut block = vec![0.0f64; 64];
+        for i in 0..8 {
+            for j in 0..8 {
+                block[i * 8 + j] = ((i * i) as f64 * 0.5) + ((j * j) as f64 * 0.3);
+            }
+        }
+        let sel = CompositeSelector::new(2);
+        let a = sel.analyze(&block, &dims, 1e-6);
+        assert_eq!(a.choice, CompositeChoice::Lorenzo);
+    }
+
+    #[test]
+    fn lorenzo_block_error_zero_on_multilinear() {
+        let dims = [5usize, 5];
+        let mut block = vec![0.0f64; 25];
+        for i in 0..5 {
+            for j in 0..5 {
+                block[i * 5 + j] = 3.0 * i as f64 + 4.0 * j as f64;
+            }
+        }
+        // interior points predict exactly; boundary rows/cols see zero
+        // padding, so error concentrates there
+        let err = CompositeSelector::lorenzo_block_error(&block, &dims);
+        let interior_only: f64 = {
+            let mut s = 0.0;
+            for i in 1..5 {
+                for j in 1..5 {
+                    let pred =
+                        block[(i - 1) * 5 + j] + block[i * 5 + j - 1] - block[(i - 1) * 5 + j - 1];
+                    s += (block[i * 5 + j] - pred).abs();
+                }
+            }
+            s
+        };
+        assert!(interior_only < 1e-10);
+        assert!(err > 0.0); // boundary contribution
+    }
+
+    #[test]
+    fn prop_analysis_consistent(){
+        prop::cases(30, 0xc0e, |rng| {
+            let dims = [6usize, 6];
+            let block: Vec<f64> = (0..36).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let sel = CompositeSelector::new(2);
+            let a = sel.analyze(&block, &dims, 0.1);
+            let better = if a.lorenzo_err <= a.regression_err {
+                CompositeChoice::Lorenzo
+            } else {
+                CompositeChoice::Regression
+            };
+            assert_eq!(a.choice, better);
+            assert!(a.lorenzo_err >= 0.0 && a.regression_err >= 0.0);
+        });
+    }
+}

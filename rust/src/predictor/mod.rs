@@ -1,0 +1,61 @@
+//! Predictor stage (paper §3.2, Appendix A.2): value prediction for data
+//! decorrelation.
+//!
+//! Point predictors ([`lorenzo::LorenzoPredictor`], [`ZeroPredictor`]) drive
+//! the generic point-by-point compressor. Block-scoped prediction — the
+//! regression hyperplane ([`regression`]) and the Lorenzo-vs-regression
+//! composite selection ([`composite`]) — powers the SZ2-style block
+//! compressor, and periodic-pattern prediction lives in the Pastri pipeline.
+
+pub mod composite;
+pub mod lorenzo;
+pub mod regression;
+
+pub use composite::{CompositeChoice, CompositeSelector};
+pub use lorenzo::LorenzoPredictor;
+pub use regression::RegressionFit;
+
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::{NdCursor, Scalar};
+use crate::error::Result;
+
+/// Point predictor: predicts the value at the cursor from already
+/// decompressed neighbors.
+pub trait Predictor<T: Scalar>: Send {
+    /// Instance name for configs and stream headers.
+    fn name(&self) -> &'static str;
+
+    /// Predicted value at the cursor (f64 domain). Must depend only on
+    /// neighbors at strictly earlier row-major positions (which hold
+    /// decompressed values) so compression and decompression agree.
+    fn predict(&self, c: &NdCursor<T>) -> f64;
+
+    /// Estimated |error| if this predictor were used at the cursor,
+    /// evaluated on original data (used for predictor selection).
+    fn estimate_error(&self, c: &NdCursor<T>) -> f64 {
+        (c.value().to_f64() - self.predict(c)).abs()
+    }
+
+    /// Persist predictor metadata (paper's `save`). Default: stateless.
+    fn save(&self, _w: &mut ByteWriter) -> Result<()> {
+        Ok(())
+    }
+
+    /// Restore predictor metadata (paper's `load`). Default: stateless.
+    fn load(&mut self, _r: &mut ByteReader) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Trivial predictor: always predicts zero. Baseline / anchor-point use.
+#[derive(Default, Clone)]
+pub struct ZeroPredictor;
+
+impl<T: Scalar> Predictor<T> for ZeroPredictor {
+    fn name(&self) -> &'static str {
+        "zero"
+    }
+    fn predict(&self, _c: &NdCursor<T>) -> f64 {
+        0.0
+    }
+}

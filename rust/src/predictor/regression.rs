@@ -1,0 +1,225 @@
+//! Regression-based predictor (paper §3.2, SZ2 [8]): fits a hyperplane
+//! `f(i) = Σ_d b_d · i_d + b_n` to each block of original data and predicts
+//! from the plane. Unlike Lorenzo it never reads decompressed neighbors, so
+//! it carries no decompression noise — which is why it wins at high error
+//! bounds.
+//!
+//! The closed-form fit exploits the regular grid: after centering each
+//! coordinate, the normal equations diagonalize, so each slope is an
+//! independent weighted sum. This exact computation is mirrored by the L1
+//! Pallas kernel (`python/compile/kernels/regression.py`); the Rust path is
+//! the reference/fallback and must stay bit-compatible with `ref.py`.
+
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::error::Result;
+
+/// A fitted (and possibly coefficient-quantized) hyperplane for one block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegressionFit {
+    /// Per-axis slopes then intercept: `coeffs[d]` for axis `d`,
+    /// `coeffs[ndim]` is the constant term (value at local origin).
+    pub coeffs: Vec<f64>,
+}
+
+impl RegressionFit {
+    /// Fit a hyperplane to one block.
+    ///
+    /// `block`: row-major values of the block; `dims`: block dimensions.
+    pub fn fit(block: &[f64], dims: &[usize]) -> Self {
+        let nd = dims.len();
+        let n: usize = dims.iter().product();
+        debug_assert_eq!(block.len(), n);
+        let mean = block.iter().sum::<f64>() / n as f64;
+        let mut slopes = vec![0.0; nd];
+        // Σ_i (i_d - c_d) * x_i for each axis, with c_d = (n_d - 1)/2.
+        let mut idx = vec![0usize; nd];
+        let mut sums = vec![0.0; nd];
+        for &x in block {
+            for d in 0..nd {
+                sums[d] += (idx[d] as f64 - (dims[d] as f64 - 1.0) / 2.0) * x;
+            }
+            // advance row-major index
+            for d in (0..nd).rev() {
+                idx[d] += 1;
+                if idx[d] < dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        for d in 0..nd {
+            let nd_f = dims[d] as f64;
+            // Σ (i - c)^2 over the grid = N/n_d * n_d(n_d^2-1)/12
+            let denom = n as f64 * (nd_f * nd_f - 1.0) / 12.0;
+            slopes[d] = if denom > 0.0 { sums[d] / denom } else { 0.0 };
+        }
+        let intercept =
+            mean - slopes.iter().zip(dims).map(|(b, &d)| b * (d as f64 - 1.0) / 2.0).sum::<f64>();
+        let mut coeffs = slopes;
+        coeffs.push(intercept);
+        RegressionFit { coeffs }
+    }
+
+    /// Predicted value at local block index `idx`.
+    #[inline]
+    pub fn predict(&self, idx: &[usize]) -> f64 {
+        let nd = self.coeffs.len() - 1;
+        let mut v = self.coeffs[nd];
+        for d in 0..nd {
+            v += self.coeffs[d] * idx[d] as f64;
+        }
+        v
+    }
+
+    /// Mean |residual| of the fit over the block (selection criterion input).
+    pub fn mean_abs_error(&self, block: &[f64], dims: &[usize]) -> f64 {
+        let nd = dims.len();
+        let mut idx = vec![0usize; nd];
+        let mut sum = 0.0;
+        for &x in block {
+            sum += (x - self.predict(&idx)).abs();
+            let mut d = nd;
+            while d > 0 {
+                d -= 1;
+                idx[d] += 1;
+                if idx[d] < dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        sum / block.len() as f64
+    }
+
+    /// Quantize coefficients so compressor and decompressor share the exact
+    /// same plane. Slopes use step `eb / (2·B·nd)`, intercept `eb / 2` —
+    /// the induced prediction perturbation stays well under `eb`, and the
+    /// quantizer downstream still enforces the bound regardless.
+    pub fn quantize(&self, eb: f64, block_side: usize) -> (Vec<i64>, RegressionFit) {
+        let nd = self.coeffs.len() - 1;
+        let slope_step = (eb / (2.0 * block_side as f64 * nd.max(1) as f64)).max(1e-300);
+        let icpt_step = (eb / 2.0).max(1e-300);
+        let mut q = Vec::with_capacity(nd + 1);
+        let mut rec = Vec::with_capacity(nd + 1);
+        for d in 0..nd {
+            let qi = (self.coeffs[d] / slope_step).round();
+            // clamp to i64-safe magnitude; huge coeffs mean terrible fit and
+            // regression will lose selection anyway
+            let qi = qi.clamp(-9e17, 9e17) as i64;
+            q.push(qi);
+            rec.push(qi as f64 * slope_step);
+        }
+        let qi = (self.coeffs[nd] / icpt_step).round().clamp(-9e17, 9e17) as i64;
+        q.push(qi);
+        rec.push(qi as f64 * icpt_step);
+        (q, RegressionFit { coeffs: rec })
+    }
+
+    /// Rebuild the dequantized plane from stored integers.
+    pub fn dequantize(q: &[i64], eb: f64, block_side: usize) -> RegressionFit {
+        let nd = q.len() - 1;
+        let slope_step = (eb / (2.0 * block_side as f64 * nd.max(1) as f64)).max(1e-300);
+        let icpt_step = (eb / 2.0).max(1e-300);
+        let mut coeffs = Vec::with_capacity(q.len());
+        for &qi in &q[..nd] {
+            coeffs.push(qi as f64 * slope_step);
+        }
+        coeffs.push(q[nd] as f64 * icpt_step);
+        RegressionFit { coeffs }
+    }
+
+    /// Serialize quantized coefficients (zig-zag varints).
+    pub fn save_quantized(q: &[i64], w: &mut ByteWriter) {
+        for &v in q {
+            let zz = ((v << 1) ^ (v >> 63)) as u64;
+            w.put_varint(zz);
+        }
+    }
+
+    /// Deserialize `n` quantized coefficients.
+    pub fn load_quantized(n: usize, r: &mut ByteReader) -> Result<Vec<i64>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let zz = r.get_varint()?;
+            out.push(((zz >> 1) as i64) ^ -((zz & 1) as i64));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn exact_on_planes() {
+        let dims = [4usize, 5, 6];
+        let n: usize = dims.iter().product();
+        let mut block = vec![0.0; n];
+        let mut idx = [0usize; 3];
+        for v in block.iter_mut() {
+            *v = 2.0 * idx[0] as f64 - 1.5 * idx[1] as f64 + 0.25 * idx[2] as f64 + 7.0;
+            for d in (0..3).rev() {
+                idx[d] += 1;
+                if idx[d] < dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        let fit = RegressionFit::fit(&block, &dims);
+        assert!((fit.coeffs[0] - 2.0).abs() < 1e-10);
+        assert!((fit.coeffs[1] + 1.5).abs() < 1e-10);
+        assert!((fit.coeffs[2] - 0.25).abs() < 1e-10);
+        assert!((fit.coeffs[3] - 7.0).abs() < 1e-10);
+        assert!(fit.mean_abs_error(&block, &dims) < 1e-10);
+    }
+
+    #[test]
+    fn quantize_roundtrip_bitexact() {
+        let fit = RegressionFit { coeffs: vec![0.123456, -9.87, 1e-7, 3.0] };
+        let (q, rec) = fit.quantize(1e-3, 6);
+        let mut w = ByteWriter::new();
+        RegressionFit::save_quantized(&q, &mut w);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        let q2 = RegressionFit::load_quantized(q.len(), &mut r).unwrap();
+        assert_eq!(q, q2);
+        let rec2 = RegressionFit::dequantize(&q2, 1e-3, 6);
+        assert_eq!(rec, rec2); // bit-exact shared plane
+    }
+
+    #[test]
+    fn prop_fit_is_least_squares_optimal() {
+        // Perturbing any coefficient must not reduce the sum of squares.
+        prop::cases(40, 0xf17, |rng| {
+            let dims = [rng.below(5) + 2, rng.below(5) + 2];
+            let n = dims[0] * dims[1];
+            let block: Vec<f64> = (0..n).map(|_| rng.uniform(-10.0, 10.0)).collect();
+            let fit = RegressionFit::fit(&block, &dims);
+            let sse = |f: &RegressionFit| {
+                let mut idx = [0usize; 2];
+                let mut s = 0.0;
+                for &x in &block {
+                    let e = x - f.predict(&idx);
+                    s += e * e;
+                    idx[1] += 1;
+                    if idx[1] == dims[1] {
+                        idx[1] = 0;
+                        idx[0] += 1;
+                    }
+                }
+                s
+            };
+            let base = sse(&fit);
+            for d in 0..3 {
+                for delta in [-1e-3, 1e-3] {
+                    let mut f2 = fit.clone();
+                    f2.coeffs[d] += delta;
+                    assert!(sse(&f2) >= base - 1e-9);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,204 @@
+//! Logarithmic-transform preprocessor ([20], paper §3.2): converts a
+//! pointwise-relative error bound into an absolute bound by moving data to
+//! the log domain: if `|x'/x - 1| <= r` is required, compressing
+//! `ln|x|` with absolute bound `ln(1 + r)` achieves it.
+//!
+//! Signs and exact zeros don't survive `ln|x|`, so they are recorded as
+//! bitmaps in the preprocessor state and re-applied by `postprocess`.
+//! Magnitudes below `zero_threshold` are treated as zeros (their relative
+//! error is meaningless at denormal scale).
+
+use super::Preprocessor;
+use crate::bitio::{BitReader, BitWriter};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::{Field, FieldValues};
+use crate::error::{Result, SzError};
+use crate::pipeline::{CompressConf, ErrorBound};
+
+/// Pointwise-relative → absolute bound preprocessor.
+#[derive(Clone, Debug)]
+pub struct LogTransform {
+    /// Magnitudes below this are stored as exact zeros.
+    pub zero_threshold: f64,
+}
+
+impl Default for LogTransform {
+    fn default() -> Self {
+        LogTransform { zero_threshold: 1e-300 }
+    }
+}
+
+impl Preprocessor for LogTransform {
+    fn name(&self) -> &'static str {
+        "log_transform"
+    }
+
+    fn process(&self, field: &mut Field, conf: &mut CompressConf) -> Result<Vec<u8>> {
+        let rel = match conf.bound {
+            ErrorBound::PwRel(r) => r,
+            _ => {
+                return Err(SzError::config(
+                    "log_transform requires a pointwise-relative bound",
+                ))
+            }
+        };
+        if rel <= 0.0 {
+            return Err(SzError::config("relative bound must be positive"));
+        }
+        let mut signs = BitWriter::new();
+        let mut zeros = BitWriter::new();
+        let n = field.len();
+        // placeholder for zeros in log domain: the min log value seen - 4eb
+        let abs_eb = (1.0 + rel).ln();
+        let mut transform = |vals: &mut Vec<f64>| {
+            let mut min_log = f64::INFINITY;
+            for v in vals.iter() {
+                if v.abs() >= self.zero_threshold {
+                    min_log = min_log.min(v.abs().ln());
+                }
+            }
+            if !min_log.is_finite() {
+                min_log = 0.0;
+            }
+            let fill = min_log - 4.0 * abs_eb;
+            for v in vals.iter_mut() {
+                let is_zero = v.abs() < self.zero_threshold;
+                zeros.put_bit(is_zero as u32);
+                signs.put_bit((*v < 0.0) as u32);
+                *v = if is_zero { fill } else { v.abs().ln() };
+            }
+        };
+        match &mut field.values {
+            FieldValues::F64(v) => transform(v),
+            FieldValues::F32(v) => {
+                let mut tmp: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+                transform(&mut tmp);
+                *v = tmp.iter().map(|&x| x as f32).collect();
+            }
+            FieldValues::I32(_) => {
+                return Err(SzError::config("log_transform expects floating-point data"))
+            }
+        }
+        conf.bound = ErrorBound::Abs(abs_eb);
+        let mut w = ByteWriter::new();
+        w.put_f64(rel);
+        w.put_varint(n as u64);
+        w.put_block(&signs.finish());
+        w.put_block(&zeros.finish());
+        Ok(w.finish())
+    }
+
+    fn postprocess(&self, field: &mut Field, state: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(state);
+        let _rel = r.get_f64()?;
+        let n = r.get_varint()? as usize;
+        if n != field.len() {
+            return Err(SzError::corrupt("log_transform: state/field length mismatch"));
+        }
+        let sign_bytes = r.get_block()?;
+        let zero_bytes = r.get_block()?;
+        let mut signs = BitReader::new(sign_bytes);
+        let mut zeros = BitReader::new(zero_bytes);
+        let mut untransform = |vals: &mut Vec<f64>| -> Result<()> {
+            for v in vals.iter_mut() {
+                let zero = zeros.get_bit()? == 1;
+                let neg = signs.get_bit()? == 1;
+                *v = if zero {
+                    0.0
+                } else {
+                    let m = v.exp();
+                    if neg {
+                        -m
+                    } else {
+                        m
+                    }
+                };
+            }
+            Ok(())
+        };
+        match &mut field.values {
+            FieldValues::F64(v) => untransform(v)?,
+            FieldValues::F32(v) => {
+                let mut tmp: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+                untransform(&mut tmp)?;
+                *v = tmp.iter().map(|&x| x as f32).collect();
+            }
+            FieldValues::I32(_) => {
+                return Err(SzError::config("log_transform expects floating-point data"))
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn relative_bound_becomes_absolute() {
+        let mut f = Field::f64("x", &[4], vec![1.0, -2.0, 0.0, 1e5]).unwrap();
+        let mut conf = CompressConf::new(ErrorBound::PwRel(0.01));
+        let t = LogTransform::default();
+        let st = t.process(&mut f, &mut conf).unwrap();
+        match conf.bound {
+            ErrorBound::Abs(eb) => assert!((eb - 1.01f64.ln()).abs() < 1e-12),
+            _ => panic!("bound not converted"),
+        }
+        t.postprocess(&mut f, &st).unwrap();
+        let vals = f.values.to_f64_vec();
+        assert!((vals[0] - 1.0).abs() < 1e-9);
+        assert!((vals[1] + 2.0).abs() < 1e-9);
+        assert_eq!(vals[2], 0.0);
+        assert!((vals[3] - 1e5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn prop_log_roundtrip_preserves_relative_bound() {
+        // Full loop: transform, perturb log values within abs_eb (simulating
+        // a compressor at the bound), untransform, check pointwise relative.
+        prop::cases(40, 0x106, |rng| {
+            let rel = 10f64.powf(rng.uniform(-4.0, -1.0));
+            let n = rng.below(200) + 1;
+            let vals: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.below(10) == 0 {
+                        0.0
+                    } else {
+                        let mag = 10f64.powf(rng.uniform(-5.0, 5.0));
+                        if rng.below(2) == 0 {
+                            -mag
+                        } else {
+                            mag
+                        }
+                    }
+                })
+                .collect();
+            let mut f = Field::f64("x", &[n], vals.clone()).unwrap();
+            let mut conf = CompressConf::new(ErrorBound::PwRel(rel));
+            let t = LogTransform::default();
+            let st = t.process(&mut f, &mut conf).unwrap();
+            let abs_eb = match conf.bound {
+                ErrorBound::Abs(e) => e,
+                _ => unreachable!(),
+            };
+            // adversarial perturbation at the bound
+            if let FieldValues::F64(v) = &mut f.values {
+                for (i, x) in v.iter_mut().enumerate() {
+                    *x += if i % 2 == 0 { abs_eb } else { -abs_eb };
+                }
+            }
+            t.postprocess(&mut f, &st).unwrap();
+            let out = f.values.to_f64_vec();
+            for (o, d) in vals.iter().zip(out.iter()) {
+                if *o == 0.0 {
+                    assert_eq!(*d, 0.0);
+                } else {
+                    let r = (d / o - 1.0).abs();
+                    assert!(r <= rel * (1.0 + 1e-9), "rel err {r} > {rel}");
+                }
+            }
+        });
+    }
+}

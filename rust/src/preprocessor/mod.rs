@@ -1,0 +1,112 @@
+//! Preprocessor stage (paper §3.2, Appendix A.1): transforms the input (and
+//! the compression configuration) before prediction.
+//!
+//! Instances: [`Identity`] (bypass), [`LogTransform`] (pointwise-relative →
+//! absolute error bounds, [20]), [`Transpose`] (APS layout change, §5.2) and
+//! [`Linearize`] (treat N-d data as 1-d — also how unstructured grids enter
+//! the framework, §1).
+
+pub mod log_transform;
+pub mod transpose;
+
+pub use log_transform::LogTransform;
+pub use transpose::Transpose;
+
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::Field;
+use crate::error::Result;
+use crate::pipeline::CompressConf;
+
+/// In-place data/conf transform applied before compression and reversed
+/// after decompression. `process` returns serialized state which travels in
+/// the stream and is handed back to `postprocess`.
+pub trait Preprocessor: Send + Sync {
+    /// Instance name for configs and stream headers.
+    fn name(&self) -> &'static str;
+
+    /// Transform `field` in place, possibly adjusting `conf` (e.g. a
+    /// pointwise-relative bound becomes an absolute bound in log space).
+    /// Returns opaque state bytes for `postprocess`.
+    fn process(&self, field: &mut Field, conf: &mut CompressConf) -> Result<Vec<u8>>;
+
+    /// Reverse the transform on the decompressed field.
+    fn postprocess(&self, field: &mut Field, state: &[u8]) -> Result<()>;
+}
+
+/// No-op preprocessor (the paper's module bypass).
+#[derive(Default, Clone)]
+pub struct Identity;
+
+impl Preprocessor for Identity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+    fn process(&self, _field: &mut Field, _conf: &mut CompressConf) -> Result<Vec<u8>> {
+        Ok(Vec::new())
+    }
+    fn postprocess(&self, _field: &mut Field, _state: &[u8]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Reshape to 1-D (keeps the value order, drops dimensional structure).
+/// The paper notes some 3-D datasets compress better treated as 1-D/2-D.
+#[derive(Default, Clone)]
+pub struct Linearize;
+
+impl Preprocessor for Linearize {
+    fn name(&self) -> &'static str {
+        "linearize"
+    }
+
+    fn process(&self, field: &mut Field, _conf: &mut CompressConf) -> Result<Vec<u8>> {
+        let mut w = ByteWriter::new();
+        let dims = field.shape.dims().to_vec();
+        w.put_varint(dims.len() as u64);
+        for d in &dims {
+            w.put_varint(*d as u64);
+        }
+        *field = Field::new(field.name.clone(), &[field.len()], field.values.clone())?;
+        Ok(w.finish())
+    }
+
+    fn postprocess(&self, field: &mut Field, state: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(state);
+        let nd = r.get_varint()? as usize;
+        let mut dims = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            dims.push(r.get_varint()? as usize);
+        }
+        *field = Field::new(field.name.clone(), &dims, field.values.clone())?;
+        Ok(())
+    }
+}
+
+/// Construct a boxed preprocessor by name (with default parameters).
+pub fn by_name(name: &str) -> Option<Box<dyn Preprocessor>> {
+    match name {
+        "identity" => Some(Box::new(Identity)),
+        "linearize" => Some(Box::new(Linearize)),
+        "log" | "log_transform" => Some(Box::new(LogTransform::default())),
+        "transpose" => None, // needs an explicit permutation
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::ErrorBound;
+
+    #[test]
+    fn linearize_roundtrip() {
+        let mut f = Field::f32("x", &[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let orig = f.clone();
+        let mut conf = CompressConf::new(ErrorBound::Abs(0.1));
+        let st = Linearize.process(&mut f, &mut conf).unwrap();
+        assert_eq!(f.shape.dims(), &[6]);
+        Linearize.postprocess(&mut f, &st).unwrap();
+        assert_eq!(f.shape.dims(), orig.shape.dims());
+        assert_eq!(f.values, orig.values);
+    }
+}

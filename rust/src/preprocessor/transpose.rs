@@ -1,0 +1,186 @@
+//! Axis-permutation preprocessor (paper §5.2): the APS pipeline transposes
+//! the `(time, y, x)` diffraction stack so the strongly-correlated time axis
+//! becomes the fastest-varying one, turning the field into `y·x` contiguous
+//! 1-D time series for the 1-D Lorenzo predictor.
+
+use super::Preprocessor;
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::{Field, FieldValues, Shape};
+use crate::error::{Result, SzError};
+use crate::pipeline::CompressConf;
+
+/// Permutes axes of a field. `perm[i]` gives the source axis for output
+/// axis `i` (so `perm = [1, 2, 0]` moves axis 0 last).
+#[derive(Clone, Debug)]
+pub struct Transpose {
+    /// Output-axis → source-axis mapping.
+    pub perm: Vec<usize>,
+}
+
+impl Transpose {
+    /// New transpose with the given permutation.
+    pub fn new(perm: Vec<usize>) -> Self {
+        Transpose { perm }
+    }
+
+    /// The APS permutation for 3-D stacks: time-first → time-last.
+    pub fn time_last() -> Self {
+        Transpose { perm: vec![1, 2, 0] }
+    }
+
+    fn validate(&self, nd: usize) -> Result<()> {
+        let mut seen = vec![false; nd];
+        if self.perm.len() != nd {
+            return Err(SzError::Shape(format!(
+                "perm {:?} does not match ndim {nd}",
+                self.perm
+            )));
+        }
+        for &p in &self.perm {
+            if p >= nd || seen[p] {
+                return Err(SzError::Shape(format!("invalid permutation {:?}", self.perm)));
+            }
+            seen[p] = true;
+        }
+        Ok(())
+    }
+}
+
+fn permute_generic<T: Copy>(
+    data: &[T],
+    dims: &[usize],
+    perm: &[usize],
+) -> (Vec<T>, Vec<usize>) {
+    let nd = dims.len();
+    let src_shape = Shape::new(dims).expect("validated");
+    let out_dims: Vec<usize> = perm.iter().map(|&p| dims[p]).collect();
+    let out_shape = Shape::new(&out_dims).expect("validated");
+    let mut out = Vec::with_capacity(data.len());
+    let mut idx = vec![0usize; nd]; // output index
+    let mut src_idx = vec![0usize; nd];
+    for _ in 0..data.len() {
+        for (o, &p) in perm.iter().enumerate() {
+            src_idx[p] = idx[o];
+        }
+        out.push(data[src_shape.offset(&src_idx)]);
+        out_shape.advance(&mut idx);
+    }
+    (out, out_dims)
+}
+
+fn apply_perm(field: &Field, perm: &[usize]) -> Result<Field> {
+    let dims = field.shape.dims();
+    let (values, out_dims) = match &field.values {
+        FieldValues::F32(v) => {
+            let (o, d) = permute_generic(v, dims, perm);
+            (FieldValues::F32(o), d)
+        }
+        FieldValues::F64(v) => {
+            let (o, d) = permute_generic(v, dims, perm);
+            (FieldValues::F64(o), d)
+        }
+        FieldValues::I32(v) => {
+            let (o, d) = permute_generic(v, dims, perm);
+            (FieldValues::I32(o), d)
+        }
+    };
+    Field::new(field.name.clone(), &out_dims, values)
+}
+
+impl Preprocessor for Transpose {
+    fn name(&self) -> &'static str {
+        "transpose"
+    }
+
+    fn process(&self, field: &mut Field, _conf: &mut CompressConf) -> Result<Vec<u8>> {
+        self.validate(field.shape.ndim())?;
+        *field = apply_perm(field, &self.perm)?;
+        let mut w = ByteWriter::new();
+        w.put_varint(self.perm.len() as u64);
+        for &p in &self.perm {
+            w.put_varint(p as u64);
+        }
+        Ok(w.finish())
+    }
+
+    fn postprocess(&self, field: &mut Field, state: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(state);
+        let nd = r.get_varint()? as usize;
+        let mut perm = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            perm.push(r.get_varint()? as usize);
+        }
+        // inverse permutation
+        let mut inv = vec![0usize; nd];
+        for (o, &p) in perm.iter().enumerate() {
+            inv[p] = o;
+        }
+        *field = apply_perm(field, &inv)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{CompressConf, ErrorBound};
+    use crate::util::prop;
+
+    #[test]
+    fn transpose_2d() {
+        let mut f = Field::f32("m", &[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let mut conf = CompressConf::new(ErrorBound::Abs(1.0));
+        let t = Transpose::new(vec![1, 0]);
+        let st = t.process(&mut f, &mut conf).unwrap();
+        assert_eq!(f.shape.dims(), &[3, 2]);
+        assert_eq!(f.values, FieldValues::F32(vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]));
+        t.postprocess(&mut f, &st).unwrap();
+        assert_eq!(f.values, FieldValues::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+    }
+
+    #[test]
+    fn time_last_roundtrip() {
+        let vals: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let mut f = Field::f32("aps", &[4, 2, 3], vals.clone()).unwrap();
+        let orig = f.clone();
+        let mut conf = CompressConf::new(ErrorBound::Abs(1.0));
+        let t = Transpose::time_last();
+        let st = t.process(&mut f, &mut conf).unwrap();
+        assert_eq!(f.shape.dims(), &[2, 3, 4]);
+        t.postprocess(&mut f, &st).unwrap();
+        assert_eq!(f.values, orig.values);
+        assert_eq!(f.shape.dims(), orig.shape.dims());
+    }
+
+    #[test]
+    fn rejects_bad_perm() {
+        let mut f = Field::f32("m", &[2, 2], vec![0.0; 4]).unwrap();
+        let mut conf = CompressConf::new(ErrorBound::Abs(1.0));
+        assert!(Transpose::new(vec![0, 0]).process(&mut f, &mut conf).is_err());
+        assert!(Transpose::new(vec![0]).process(&mut f, &mut conf).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_perms() {
+        prop::cases(40, 0x7a2, |rng| {
+            let nd = rng.below(3) + 2;
+            let dims: Vec<usize> = (0..nd).map(|_| rng.below(5) + 1).collect();
+            let n: usize = dims.iter().product();
+            let vals: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let mut f = Field::f32("p", &dims, vals.clone()).unwrap();
+            let orig = f.clone();
+            // random permutation via Fisher-Yates
+            let mut perm: Vec<usize> = (0..nd).collect();
+            for i in (1..nd).rev() {
+                let j = rng.below(i + 1);
+                perm.swap(i, j);
+            }
+            let t = Transpose::new(perm);
+            let mut conf = CompressConf::new(ErrorBound::Abs(1.0));
+            let st = t.process(&mut f, &mut conf).unwrap();
+            t.postprocess(&mut f, &st).unwrap();
+            assert_eq!(f.values, orig.values);
+            assert_eq!(f.shape.dims(), orig.shape.dims());
+        });
+    }
+}

@@ -1,0 +1,224 @@
+//! Element-wise quantizer (paper §3.2, cpSZ [21]): a per-point error bound,
+//! enabling feature-preserving compression — points near critical features
+//! get tight bounds, smooth regions get relaxed ones.
+//!
+//! Bounds are described by a [`BoundsMap`]: a piecewise-constant map from
+//! flat index ranges to bounds. The map is serialized with the stream so
+//! compressor and decompressor walk identical bounds.
+
+use super::{Quantizer, UNPREDICTABLE};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::Scalar;
+use crate::error::{Result, SzError};
+
+/// Piecewise-constant per-point error bounds over flat indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoundsMap {
+    /// (run_length, bound) segments covering the field in order.
+    pub segments: Vec<(usize, f64)>,
+}
+
+impl BoundsMap {
+    /// Uniform bound over `n` points.
+    pub fn uniform(n: usize, eb: f64) -> Self {
+        BoundsMap { segments: vec![(n, eb)] }
+    }
+
+    /// Total points covered.
+    pub fn len(&self) -> usize {
+        self.segments.iter().map(|&(n, _)| n).sum()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    /// Smallest bound in the map (used for alphabet sizing).
+    pub fn min_bound(&self) -> f64 {
+        self.segments.iter().map(|&(_, b)| b).fold(f64::INFINITY, f64::min)
+    }
+
+    fn save(&self, w: &mut ByteWriter) {
+        w.put_varint(self.segments.len() as u64);
+        for &(n, b) in &self.segments {
+            w.put_varint(n as u64);
+            w.put_f64(b);
+        }
+    }
+
+    fn load(r: &mut ByteReader) -> Result<Self> {
+        let k = r.get_varint()? as usize;
+        let mut segments = Vec::with_capacity(k);
+        for _ in 0..k {
+            let n = r.get_varint()? as usize;
+            let b = r.get_f64()?;
+            if b <= 0.0 {
+                return Err(SzError::corrupt("elementwise: non-positive bound"));
+            }
+            segments.push((n, b));
+        }
+        Ok(BoundsMap { segments })
+    }
+}
+
+/// Walks a [`BoundsMap`] while quantizing point-by-point.
+pub struct ElementwiseQuantizer<T: Scalar> {
+    map: BoundsMap,
+    seg: usize,
+    seg_pos: usize,
+    radius: u32,
+    unpred: Vec<T>,
+    replay: usize,
+}
+
+impl<T: Scalar> ElementwiseQuantizer<T> {
+    /// New quantizer over `map` with index radius `radius`.
+    pub fn new(map: BoundsMap, radius: u32) -> Self {
+        assert!(!map.is_empty(), "bounds map must be non-empty");
+        ElementwiseQuantizer {
+            map,
+            seg: 0,
+            seg_pos: 0,
+            radius: radius.max(1),
+            unpred: Vec::new(),
+            replay: 0,
+        }
+    }
+
+    /// Current point's bound, advancing the walk.
+    #[inline]
+    fn next_bound(&mut self) -> f64 {
+        // Clamp at the last segment if walked past the declared coverage.
+        let (len, b) = self.map.segments[self.seg.min(self.map.segments.len() - 1)];
+        self.seg_pos += 1;
+        if self.seg_pos >= len && self.seg + 1 < self.map.segments.len() {
+            self.seg += 1;
+            self.seg_pos = 0;
+        }
+        b
+    }
+
+    fn rewind(&mut self) {
+        self.seg = 0;
+        self.seg_pos = 0;
+    }
+}
+
+impl<T: Scalar> Quantizer<T> for ElementwiseQuantizer<T> {
+    fn name(&self) -> &'static str {
+        "elementwise"
+    }
+
+    #[inline]
+    fn quantize(&mut self, data: T, pred: f64) -> (u32, T) {
+        let eb = self.next_bound();
+        let diff = data.to_f64() - pred;
+        let q = (diff / (2.0 * eb)).round();
+        if q.abs() < self.radius as f64 {
+            let rec = T::from_f64(pred + q * 2.0 * eb);
+            if (rec.to_f64() - data.to_f64()).abs() <= eb {
+                return ((q as i64 + self.radius as i64) as u32, rec);
+            }
+        }
+        self.unpred.push(data);
+        (UNPREDICTABLE, data)
+    }
+
+    #[inline]
+    fn recover(&mut self, pred: f64, index: u32) -> T {
+        let eb = self.next_bound();
+        if index == UNPREDICTABLE {
+            // corrupt streams may request more unpredictables than stored;
+            // degrade to zero rather than panic (decode already yields junk)
+            let v = self.unpred.get(self.replay).copied().unwrap_or_else(T::zero);
+            self.replay += 1;
+            v
+        } else {
+            let q = index as i64 - self.radius as i64;
+            T::from_f64(pred + q as f64 * 2.0 * eb)
+        }
+    }
+
+    fn index_range(&self) -> u32 {
+        2 * self.radius
+    }
+
+    fn save(&self, w: &mut ByteWriter) -> Result<()> {
+        self.map.save(w);
+        w.put_u32(self.radius);
+        w.put_varint(self.unpred.len() as u64);
+        for &v in &self.unpred {
+            v.write(w);
+        }
+        Ok(())
+    }
+
+    fn load(&mut self, r: &mut ByteReader) -> Result<()> {
+        self.map = BoundsMap::load(r)?;
+        self.radius = r.get_u32()?;
+        let n = r.get_varint()? as usize;
+        self.unpred.clear();
+        for _ in 0..n {
+            self.unpred.push(T::read(r)?);
+        }
+        self.replay = 0;
+        self.rewind();
+        Ok(())
+    }
+
+    fn reset(&mut self) {
+        self.unpred.clear();
+        self.replay = 0;
+        self.rewind();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantizer::test_support::roundtrip_check;
+    use crate::util::prop;
+
+    #[test]
+    fn per_segment_bounds_respected() {
+        let map = BoundsMap { segments: vec![(10, 1e-6), (10, 1.0)] };
+        let data: Vec<f64> = (0..20).map(|i| i as f64 * 0.1).collect();
+        let preds: Vec<f64> = data.iter().map(|&d| d + 0.4).collect();
+        let bounds: Vec<f64> =
+            (0..20).map(|i| if i < 10 { 1e-6 } else { 1.0 }).collect();
+        let mut q = ElementwiseQuantizer::<f64>::new(map, 512);
+        roundtrip_check(&mut q, &data, &preds, &bounds);
+    }
+
+    #[test]
+    fn prop_random_segment_maps() {
+        prop::cases(60, 0xe1e, |rng| {
+            let nseg = rng.below(6) + 1;
+            let mut segments = Vec::new();
+            let mut bounds = Vec::new();
+            for _ in 0..nseg {
+                let len = rng.below(50) + 1;
+                let eb = 10f64.powf(rng.uniform(-6.0, 0.5));
+                segments.push((len, eb));
+                bounds.extend(std::iter::repeat(eb).take(len));
+            }
+            let n = bounds.len();
+            let data: Vec<f64> = (0..n).map(|_| rng.uniform(-10.0, 10.0)).collect();
+            let preds: Vec<f64> =
+                data.iter().map(|&d| d + rng.normal() * 0.5).collect();
+            let mut q = ElementwiseQuantizer::<f64>::new(
+                BoundsMap { segments },
+                1024,
+            );
+            roundtrip_check(&mut q, &data, &preds, &bounds);
+        });
+    }
+
+    #[test]
+    fn uniform_map_helpers() {
+        let m = BoundsMap::uniform(100, 0.5);
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.min_bound(), 0.5);
+    }
+}

@@ -1,0 +1,184 @@
+//! Linear-scaling quantizer (paper §3.2): equal-sized bins of width
+//! `2 * eb`; the residual maps to the index of the containing bin. This is
+//! the quantizer of SZ1.4/SZ2 and the default in most pipelines.
+
+use super::{Quantizer, UNPREDICTABLE};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::Scalar;
+use crate::error::{Result, SzError};
+
+/// Linear-scaling quantizer with absolute error bound `eb`.
+pub struct LinearQuantizer<T: Scalar> {
+    eb: f64,
+    radius: u32,
+    /// Exactly-stored unpredictable values (compression side appends,
+    /// decompression side replays).
+    unpred: Vec<T>,
+    replay: usize,
+}
+
+impl<T: Scalar> LinearQuantizer<T> {
+    /// Default index radius (2^15 bins each side), as in SZ2.
+    pub const DEFAULT_RADIUS: u32 = 32768;
+
+    /// New quantizer with error bound `eb` and default radius.
+    pub fn new(eb: f64) -> Self {
+        Self::with_radius(eb, Self::DEFAULT_RADIUS)
+    }
+
+    /// New quantizer with explicit radius (`index_range = 2 * radius`).
+    pub fn with_radius(eb: f64, radius: u32) -> Self {
+        assert!(eb > 0.0, "error bound must be positive");
+        LinearQuantizer { eb, radius: radius.max(1), unpred: Vec::new(), replay: 0 }
+    }
+
+    /// The configured error bound.
+    pub fn eb(&self) -> f64 {
+        self.eb
+    }
+
+    /// Number of values stored as unpredictable so far.
+    pub fn unpredictable_count(&self) -> usize {
+        self.unpred.len()
+    }
+}
+
+impl<T: Scalar> Quantizer<T> for LinearQuantizer<T> {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    #[inline]
+    fn quantize(&mut self, data: T, pred: f64) -> (u32, T) {
+        let diff = data.to_f64() - pred;
+        let q = (diff / (2.0 * self.eb)).round();
+        if q.abs() < self.radius as f64 {
+            let decomp = pred + q * 2.0 * self.eb;
+            // Floating-point safety net: verify the bound holds on the value
+            // the decompressor will actually materialize (including any
+            // rounding from the f64 -> T conversion); otherwise store exactly.
+            let rec = T::from_f64(decomp);
+            if (rec.to_f64() - data.to_f64()).abs() <= self.eb {
+                return ((q as i64 + self.radius as i64) as u32, rec);
+            }
+        }
+        self.unpred.push(data);
+        (UNPREDICTABLE, data)
+    }
+
+    #[inline]
+    fn recover(&mut self, pred: f64, index: u32) -> T {
+        if index == UNPREDICTABLE {
+            // corrupt streams may request more unpredictables than stored;
+            // degrade to zero rather than panic (decode already yields junk)
+            let v = self.unpred.get(self.replay).copied().unwrap_or_else(T::zero);
+            self.replay += 1;
+            v
+        } else {
+            let q = index as i64 - self.radius as i64;
+            T::from_f64(pred + q as f64 * 2.0 * self.eb)
+        }
+    }
+
+    fn index_range(&self) -> u32 {
+        2 * self.radius
+    }
+
+    fn save(&self, w: &mut ByteWriter) -> Result<()> {
+        w.put_f64(self.eb);
+        w.put_u32(self.radius);
+        w.put_varint(self.unpred.len() as u64);
+        for &v in &self.unpred {
+            v.write(w);
+        }
+        Ok(())
+    }
+
+    fn load(&mut self, r: &mut ByteReader) -> Result<()> {
+        self.eb = r.get_f64()?;
+        self.radius = r.get_u32()?;
+        if self.eb <= 0.0 || self.radius == 0 {
+            return Err(SzError::corrupt("linear quantizer: bad params"));
+        }
+        let n = r.get_varint()? as usize;
+        self.unpred.clear();
+        self.unpred.reserve(n);
+        for _ in 0..n {
+            self.unpred.push(T::read(r)?);
+        }
+        self.replay = 0;
+        Ok(())
+    }
+
+    fn reset(&mut self) {
+        self.unpred.clear();
+        self.replay = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantizer::test_support::roundtrip_check;
+    use crate::util::prop;
+
+    #[test]
+    fn exact_on_zero_residual() {
+        let mut q = LinearQuantizer::<f32>::new(0.1);
+        let (idx, rec) = q.quantize(5.0, 5.0);
+        assert_eq!(idx, LinearQuantizer::<f32>::DEFAULT_RADIUS);
+        assert!((rec - 5.0).abs() <= 0.1);
+    }
+
+    #[test]
+    fn far_residual_is_unpredictable_and_exact() {
+        let mut q = LinearQuantizer::<f32>::with_radius(1e-6, 8);
+        let (idx, rec) = q.quantize(1000.0, 0.0);
+        assert_eq!(idx, UNPREDICTABLE);
+        assert_eq!(rec, 1000.0);
+        assert_eq!(q.unpredictable_count(), 1);
+    }
+
+    #[test]
+    fn integer_data_half_eb_is_lossless() {
+        // The APS trick: eb = 0.5 (bin width 1) on integer-valued data
+        // recovers exactly.
+        let mut q = LinearQuantizer::<f32>::new(0.5);
+        for (d, p) in [(7.0f32, 3.0f64), (0.0, 2.0), (-12.0, -5.0), (100.0, 98.0)] {
+            let (_, rec) = q.quantize(d, p);
+            assert_eq!(rec, d);
+        }
+    }
+
+    #[test]
+    fn prop_error_bound_holds() {
+        prop::cases(100, 0x11a, |rng| {
+            let eb = 10f64.powf(rng.uniform(-8.0, 1.0));
+            let n = rng.below(500) + 1;
+            let data: Vec<f64> = (0..n).map(|_| rng.uniform(-1e3, 1e3)).collect();
+            let preds: Vec<f64> = data
+                .iter()
+                .map(|&d| d + rng.normal() * eb * 10.0_f64.powf(rng.uniform(-1.0, 3.0)))
+                .collect();
+            let bounds = vec![eb; n];
+            let mut q = LinearQuantizer::<f64>::with_radius(eb, 256);
+            roundtrip_check(&mut q, &data, &preds, &bounds);
+        });
+    }
+
+    #[test]
+    fn prop_f32_storage_error_bound() {
+        prop::cases(50, 0x11b, |rng| {
+            let eb = 10f64.powf(rng.uniform(-4.0, 0.0));
+            let n = rng.below(300) + 1;
+            let data: Vec<f32> = (0..n).map(|_| rng.uniform(-100.0, 100.0) as f32).collect();
+            let preds: Vec<f64> =
+                data.iter().map(|&d| d as f64 + rng.normal() * eb * 3.0).collect();
+            // The safety check validates the bound on the materialized f32,
+            // so the exact bound must hold even with f32 storage rounding.
+            let bounds = vec![eb; n];
+            let mut q = LinearQuantizer::<f32>::new(eb);
+            roundtrip_check(&mut q, &data, &preds, &bounds);
+        });
+    }
+}

@@ -1,0 +1,243 @@
+//! Log-scale quantizer (paper §3.2, NUMARCK-style [35]): bin widths grow
+//! geometrically away from the zero-residual bin, up to the linear cap of
+//! `2 * eb`. Small residuals land in narrower bins, producing a more
+//! centralized error distribution; no bin ever exceeds `2 * eb`, so the
+//! absolute error bound is still respected everywhere.
+
+use super::{Quantizer, UNPREDICTABLE};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::Scalar;
+use crate::error::{Result, SzError};
+
+/// Geometric-then-linear binned quantizer.
+pub struct LogScaleQuantizer<T: Scalar> {
+    eb: f64,
+    /// Width of the central bin relative to `2*eb` (0 < alpha <= 1).
+    alpha: f64,
+    /// Geometric growth per bin (> 1).
+    gamma: f64,
+    radius: u32,
+    /// Bin boundaries for positive residuals: bin k covers
+    /// [bounds[k], bounds[k+1]), k in 0..radius-1. bounds[0] = half central.
+    bounds: Vec<f64>,
+    centers: Vec<f64>,
+    unpred: Vec<T>,
+    replay: usize,
+}
+
+impl<T: Scalar> LogScaleQuantizer<T> {
+    /// New quantizer with default shape parameters (alpha=0.25, gamma=1.5).
+    pub fn new(eb: f64, radius: u32) -> Self {
+        Self::with_shape(eb, radius, 0.25, 1.5)
+    }
+
+    /// Fully parameterized constructor.
+    pub fn with_shape(eb: f64, radius: u32, alpha: f64, gamma: f64) -> Self {
+        assert!(eb > 0.0 && alpha > 0.0 && alpha <= 1.0 && gamma > 1.0);
+        let mut q = LogScaleQuantizer {
+            eb,
+            alpha,
+            gamma,
+            radius: radius.max(2),
+            bounds: Vec::new(),
+            centers: Vec::new(),
+            unpred: Vec::new(),
+            replay: 0,
+        };
+        q.rebuild_tables();
+        q
+    }
+
+    fn rebuild_tables(&mut self) {
+        let r = self.radius as usize;
+        let cap = 2.0 * self.eb;
+        let mut bounds = Vec::with_capacity(r + 1);
+        let mut centers = Vec::with_capacity(r);
+        // central bin is symmetric around 0 with half-width alpha*eb
+        let mut lo = self.alpha * self.eb;
+        bounds.push(lo);
+        let mut width = self.alpha * cap;
+        for _ in 0..r {
+            width = (width * self.gamma).min(cap);
+            let hi = lo + width;
+            centers.push(0.5 * (lo + hi));
+            bounds.push(hi);
+            lo = hi;
+        }
+        self.bounds = bounds;
+        self.centers = centers;
+    }
+
+    /// Find the positive-side bin for |diff|; None if beyond the last bin.
+    #[inline]
+    fn find_bin(&self, mag: f64) -> Option<usize> {
+        if mag >= *self.bounds.last().unwrap() {
+            return None;
+        }
+        // binary search over boundaries
+        let mut lo = 0usize;
+        let mut hi = self.bounds.len() - 1;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if mag < self.bounds[mid] {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        // bin index: 0 means below bounds[0] (central), else k. The outermost
+        // bin (lo == radius) is rejected so the signed index never reaches
+        // -radius, which would collide with UNPREDICTABLE (index 0).
+        if lo >= self.radius as usize {
+            None
+        } else {
+            Some(lo)
+        }
+    }
+
+    fn index_to_residual(&self, index: u32) -> f64 {
+        let r = self.radius as i64;
+        let k = index as i64 - r; // signed bin, 0 = central
+        match k.cmp(&0) {
+            std::cmp::Ordering::Equal => 0.0,
+            std::cmp::Ordering::Greater => self.centers[(k - 1) as usize],
+            std::cmp::Ordering::Less => -self.centers[(-k - 1) as usize],
+        }
+    }
+}
+
+impl<T: Scalar> Quantizer<T> for LogScaleQuantizer<T> {
+    fn name(&self) -> &'static str {
+        "log_scale"
+    }
+
+    #[inline]
+    fn quantize(&mut self, data: T, pred: f64) -> (u32, T) {
+        let diff = data.to_f64() - pred;
+        let mag = diff.abs();
+        if let Some(bin) = self.find_bin(mag) {
+            let k = bin as i64; // 0 = central
+            let signed = if diff < 0.0 { -k } else { k };
+            let index = (signed + self.radius as i64) as u32;
+            let rec = T::from_f64(pred + self.index_to_residual(index));
+            if (rec.to_f64() - data.to_f64()).abs() <= self.eb {
+                return (index, rec);
+            }
+        }
+        self.unpred.push(data);
+        (UNPREDICTABLE, data)
+    }
+
+    #[inline]
+    fn recover(&mut self, pred: f64, index: u32) -> T {
+        if index == UNPREDICTABLE {
+            // corrupt streams may request more unpredictables than stored;
+            // degrade to zero rather than panic (decode already yields junk)
+            let v = self.unpred.get(self.replay).copied().unwrap_or_else(T::zero);
+            self.replay += 1;
+            v
+        } else {
+            T::from_f64(pred + self.index_to_residual(index))
+        }
+    }
+
+    fn index_range(&self) -> u32 {
+        2 * self.radius
+    }
+
+    fn save(&self, w: &mut ByteWriter) -> Result<()> {
+        w.put_f64(self.eb);
+        w.put_f64(self.alpha);
+        w.put_f64(self.gamma);
+        w.put_u32(self.radius);
+        w.put_varint(self.unpred.len() as u64);
+        for &v in &self.unpred {
+            v.write(w);
+        }
+        Ok(())
+    }
+
+    fn load(&mut self, r: &mut ByteReader) -> Result<()> {
+        self.eb = r.get_f64()?;
+        self.alpha = r.get_f64()?;
+        self.gamma = r.get_f64()?;
+        self.radius = r.get_u32()?;
+        if self.eb <= 0.0 || !(0.0..=1.0).contains(&self.alpha) || self.gamma <= 1.0 {
+            return Err(SzError::corrupt("log_scale quantizer: bad params"));
+        }
+        self.rebuild_tables();
+        let n = r.get_varint()? as usize;
+        self.unpred.clear();
+        for _ in 0..n {
+            self.unpred.push(T::read(r)?);
+        }
+        self.replay = 0;
+        Ok(())
+    }
+
+    fn reset(&mut self) {
+        self.unpred.clear();
+        self.replay = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantizer::test_support::roundtrip_check;
+    use crate::util::prop;
+
+    #[test]
+    fn bin_widths_capped_at_2eb() {
+        let q = LogScaleQuantizer::<f64>::new(0.5, 64);
+        for k in 1..q.bounds.len() {
+            let w = q.bounds[k] - q.bounds[k - 1];
+            assert!(w <= 2.0 * 0.5 + 1e-12, "bin {k} width {w}");
+        }
+    }
+
+    #[test]
+    fn small_residuals_get_smaller_error() {
+        let mut q = LogScaleQuantizer::<f64>::new(1.0, 64);
+        // residual 0.3 with eb=1.0: central/early bins -> error well under eb
+        let (_, rec) = q.quantize(10.3, 10.0);
+        assert!((rec - 10.3).abs() < 0.5);
+    }
+
+    #[test]
+    fn prop_error_bound_holds() {
+        prop::cases(80, 0x10c, |rng| {
+            let eb = 10f64.powf(rng.uniform(-6.0, 1.0));
+            let n = rng.below(400) + 1;
+            let data: Vec<f64> = (0..n).map(|_| rng.uniform(-50.0, 50.0)).collect();
+            let preds: Vec<f64> =
+                data.iter().map(|&d| d + rng.normal() * eb * 5.0).collect();
+            let bounds = vec![eb; n];
+            let mut q = LogScaleQuantizer::<f64>::new(eb, 128);
+            roundtrip_check(&mut q, &data, &preds, &bounds);
+        });
+    }
+
+    #[test]
+    fn more_centralized_than_linear() {
+        // With the same radius, log-scale should produce smaller mean |error|
+        // on small residuals than linear's uniform bins.
+        use crate::quantizer::LinearQuantizer;
+        use crate::util::rng::Pcg32;
+        let eb = 1.0;
+        let mut rng = Pcg32::seeded(15);
+        let mut sum_log = 0.0;
+        let mut sum_lin = 0.0;
+        let mut qlog = LogScaleQuantizer::<f64>::new(eb, 128);
+        let mut qlin = LinearQuantizer::<f64>::with_radius(eb, 128);
+        for _ in 0..2000 {
+            let pred = rng.uniform(-10.0, 10.0);
+            let d = pred + rng.normal() * 0.3; // small residuals
+            let (_, r1) = qlog.quantize(d, pred);
+            let (_, r2) = qlin.quantize(d, pred);
+            sum_log += (r1 - d).abs();
+            sum_lin += (r2 - d).abs();
+        }
+        assert!(sum_log < sum_lin, "log {sum_log} vs lin {sum_lin}");
+    }
+}

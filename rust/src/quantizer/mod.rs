@@ -1,0 +1,107 @@
+//! Quantizer stage (paper §3.2, Appendix A.3) — the *only* module that
+//! introduces error, hence the module that owns the error-bound guarantee.
+//!
+//! Contract: for every point, `|recovered - original| <= bound(point)`.
+//! Values that cannot be represented within the index range are
+//! "unpredictable" (index 0) and are reproduced from a side store.
+//!
+//! Instances: [`linear::LinearQuantizer`] (SZ's linear-scaling quantizer),
+//! [`log_scale::LogScaleQuantizer`] (centralized error distribution),
+//! [`elementwise::ElementwiseQuantizer`] (per-point bounds, cpSZ-style) and
+//! [`unpred_aware::UnpredAwareQuantizer`] (bitplane-coded unpredictables,
+//! the SZ3-Pastri contribution of paper §4.2).
+
+pub mod elementwise;
+pub mod linear;
+pub mod log_scale;
+pub mod unpred_aware;
+
+pub use elementwise::{BoundsMap, ElementwiseQuantizer};
+pub use linear::LinearQuantizer;
+pub use log_scale::LogScaleQuantizer;
+pub use unpred_aware::UnpredAwareQuantizer;
+
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::Scalar;
+use crate::error::Result;
+
+/// Index reserved for unpredictable points.
+pub const UNPREDICTABLE: u32 = 0;
+
+/// Error-controlled quantizer over prediction residuals.
+///
+/// Stateful within one field: the unpredictable store accumulates during
+/// compression (`quantize`) and is replayed in the same order during
+/// decompression (`recover`). `save`/`load` persist the store plus the
+/// quantizer parameters, mirroring the paper's interface.
+pub trait Quantizer<T: Scalar>: Send {
+    /// Instance name for configs and stream headers.
+    fn name(&self) -> &'static str;
+
+    /// Quantize `data` against prediction `pred` (f64 domain). Returns the
+    /// quantization index and the recovered value the decompressor will see
+    /// (which the caller writes back so later predictions are consistent).
+    fn quantize(&mut self, data: T, pred: f64) -> (u32, T);
+
+    /// Recover the value for `index` given prediction `pred`.
+    fn recover(&mut self, pred: f64, index: u32) -> T;
+
+    /// Number of representable indices (encoder alphabet hint), 2*radius.
+    fn index_range(&self) -> u32;
+
+    /// Persist parameters + unpredictable store.
+    fn save(&self, w: &mut ByteWriter) -> Result<()>;
+
+    /// Restore parameters + unpredictable store (resets replay position).
+    fn load(&mut self, r: &mut ByteReader) -> Result<()>;
+
+    /// Clear per-field state (call between fields).
+    fn reset(&mut self);
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::byteio::{ByteReader, ByteWriter};
+
+    /// Drive a quantizer through compress + save + load + recover over a
+    /// (data, pred) sequence and assert the per-point error bound `bounds`.
+    pub fn roundtrip_check<T: Scalar, Q: Quantizer<T>>(
+        q: &mut Q,
+        data: &[T],
+        preds: &[f64],
+        bounds: &[f64],
+    ) {
+        assert_eq!(data.len(), preds.len());
+        q.reset();
+        let mut indices = Vec::with_capacity(data.len());
+        let mut recovered_c = Vec::with_capacity(data.len());
+        for (&d, &p) in data.iter().zip(preds) {
+            let (idx, rec) = q.quantize(d, p);
+            indices.push(idx);
+            recovered_c.push(rec);
+        }
+        let mut w = ByteWriter::new();
+        q.save(&mut w).unwrap();
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        q.load(&mut r).unwrap();
+        for (i, (&p, &idx)) in preds.iter().zip(indices.iter()).enumerate() {
+            let rec = q.recover(p, idx);
+            assert_eq!(
+                rec.to_f64(),
+                recovered_c[i].to_f64(),
+                "{}: compress/decompress recovery diverged at {i}",
+                q.name()
+            );
+            let err = (rec.to_f64() - data[i].to_f64()).abs();
+            assert!(
+                err <= bounds[i] * (1.0 + 1e-12),
+                "{}: error {err} > bound {} at {i} (data {:?} pred {p})",
+                q.name(),
+                bounds[i],
+                data[i]
+            );
+        }
+    }
+}

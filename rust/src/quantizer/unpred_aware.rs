@@ -1,0 +1,302 @@
+//! Unpred-aware quantizer — the SZ3-Pastri contribution (paper §4.2).
+//!
+//! Predictable points behave exactly like the linear-scaling quantizer. The
+//! difference is the treatment of *unpredictable* points: instead of storing
+//! them verbatim (SZ-Pastri's truncation), the prediction difference has its
+//! exponent aligned to the error bound (`q = round(diff / eb)`, so
+//! `|recovered - original| <= eb/2`) and the resulting integers are recorded
+//! **bitplane-major**, most-significant plane first. Because most
+//! unpredictable magnitudes are small, high planes are runs of zeros — not
+//! smaller at this stage, but highly compressible by the lossless stage,
+//! which is where the paper's Table 1 gains come from.
+
+use super::{Quantizer, UNPREDICTABLE};
+use crate::bitio::{BitReader, BitWriter};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::Scalar;
+use crate::error::{Result, SzError};
+
+/// Largest exponent-aligned magnitude stored in bitplanes; larger residuals
+/// (or values whose storage-type rounding would break the bound) escape to
+/// exact storage.
+const MAG_CAP: f64 = (1u64 << 50) as f64;
+
+struct UnpredRecord<T> {
+    /// None => bitplane-coded (sign, magnitude); Some => exact escape.
+    exact: Option<T>,
+    sign: bool,
+    mag: u64,
+}
+
+/// Linear quantizer with bitplane-coded unpredictable storage.
+pub struct UnpredAwareQuantizer<T: Scalar> {
+    eb: f64,
+    radius: u32,
+    /// `true` (default): bitplane/plane-major storage (SZ3-Pastri).
+    /// `false`: value-major storage — equivalent in size before lossless,
+    /// mimicking SZ-Pastri's truncation layout (the Table 1 ablation).
+    pub plane_major: bool,
+    records: Vec<UnpredRecord<T>>,
+    replay: usize,
+}
+
+impl<T: Scalar> UnpredAwareQuantizer<T> {
+    /// New quantizer with error bound `eb` and index radius `radius`.
+    pub fn new(eb: f64, radius: u32) -> Self {
+        assert!(eb > 0.0);
+        UnpredAwareQuantizer {
+            eb,
+            radius: radius.max(1),
+            plane_major: true,
+            records: Vec::new(),
+            replay: 0,
+        }
+    }
+
+    /// Value-major (truncation-layout) variant.
+    pub fn value_major(eb: f64, radius: u32) -> Self {
+        UnpredAwareQuantizer { plane_major: false, ..Self::new(eb, radius) }
+    }
+
+    /// Number of unpredictable points so far.
+    pub fn unpredictable_count(&self) -> usize {
+        self.records.len()
+    }
+
+    fn record_value(&self, rec: &UnpredRecord<T>, pred: f64) -> T {
+        match rec.exact {
+            Some(v) => v,
+            None => {
+                let diff = rec.mag as f64 * self.eb;
+                T::from_f64(if rec.sign { pred - diff } else { pred + diff })
+            }
+        }
+    }
+}
+
+impl<T: Scalar> Quantizer<T> for UnpredAwareQuantizer<T> {
+    fn name(&self) -> &'static str {
+        "unpred_aware"
+    }
+
+    #[inline]
+    fn quantize(&mut self, data: T, pred: f64) -> (u32, T) {
+        let diff = data.to_f64() - pred;
+        let q = (diff / (2.0 * self.eb)).round();
+        if q.abs() < self.radius as f64 {
+            let rec = T::from_f64(pred + q * 2.0 * self.eb);
+            if (rec.to_f64() - data.to_f64()).abs() <= self.eb {
+                return ((q as i64 + self.radius as i64) as u32, rec);
+            }
+        }
+        // Unpredictable: exponent-aligned integer, bitplane-stored.
+        let qm = (diff / self.eb).round();
+        let record = if qm.abs() < MAG_CAP {
+            UnpredRecord { exact: None, sign: qm < 0.0, mag: qm.abs() as u64 }
+        } else {
+            UnpredRecord { exact: Some(data), sign: false, mag: 0 }
+        };
+        let rec = self.record_value(&record, pred);
+        let record = if (rec.to_f64() - data.to_f64()).abs() <= self.eb {
+            record
+        } else {
+            // storage-type rounding broke the bound: escape to exact
+            UnpredRecord { exact: Some(data), sign: false, mag: 0 }
+        };
+        let rec = self.record_value(&record, pred);
+        self.records.push(record);
+        (UNPREDICTABLE, rec)
+    }
+
+    #[inline]
+    fn recover(&mut self, pred: f64, index: u32) -> T {
+        if index == UNPREDICTABLE {
+            // corrupt streams may overrun the store; degrade to pred
+            let Some(rec) = self.records.get(self.replay) else {
+                self.replay += 1;
+                return T::from_f64(pred);
+            };
+            self.replay += 1;
+            self.record_value(rec, pred)
+        } else {
+            let q = index as i64 - self.radius as i64;
+            T::from_f64(pred + q as f64 * 2.0 * self.eb)
+        }
+    }
+
+    fn index_range(&self) -> u32 {
+        2 * self.radius
+    }
+
+    fn save(&self, w: &mut ByteWriter) -> Result<()> {
+        w.put_f64(self.eb);
+        w.put_u32(self.radius);
+        let n = self.records.len();
+        w.put_varint(n as u64);
+        if n == 0 {
+            return Ok(());
+        }
+        // escape plane + sign plane
+        let mut bw = BitWriter::with_capacity(n / 4 + 1);
+        for r in &self.records {
+            bw.put_bit(r.exact.is_some() as u32);
+        }
+        for r in &self.records {
+            bw.put_bit(r.sign as u32);
+        }
+        // magnitudes: either bitplane-major (MSB plane first — the embedded
+        // encoding of §4.2) or value-major (truncation layout). Same size,
+        // very different compressibility downstream.
+        let max_mag = self.records.iter().map(|r| r.mag).max().unwrap_or(0);
+        let nbits = 64 - max_mag.leading_zeros();
+        w.put_u8(nbits as u8);
+        w.put_u8(self.plane_major as u8);
+        if self.plane_major {
+            for plane in (0..nbits).rev() {
+                for r in &self.records {
+                    bw.put_bit(((r.mag >> plane) & 1) as u32);
+                }
+            }
+        } else {
+            for r in &self.records {
+                bw.put_bits(r.mag, nbits);
+            }
+        }
+        w.put_block(&bw.finish());
+        // exact escapes, in order
+        for r in &self.records {
+            if let Some(v) = r.exact {
+                v.write(w);
+            }
+        }
+        Ok(())
+    }
+
+    fn load(&mut self, r: &mut ByteReader) -> Result<()> {
+        self.eb = r.get_f64()?;
+        self.radius = r.get_u32()?;
+        if self.eb <= 0.0 || self.radius == 0 {
+            return Err(SzError::corrupt("unpred_aware: bad params"));
+        }
+        let n = r.get_varint()? as usize;
+        self.records.clear();
+        self.replay = 0;
+        if n == 0 {
+            return Ok(());
+        }
+        let nbits = r.get_u8()? as u32;
+        let plane_major = r.get_u8()? == 1;
+        self.plane_major = plane_major;
+        let planes = r.get_block()?;
+        let mut br = BitReader::new(planes);
+        let mut escapes = Vec::with_capacity(n);
+        for _ in 0..n {
+            escapes.push(br.get_bit()? == 1);
+        }
+        let mut signs = Vec::with_capacity(n);
+        for _ in 0..n {
+            signs.push(br.get_bit()? == 1);
+        }
+        let mut mags = vec![0u64; n];
+        if plane_major {
+            for _ in 0..nbits {
+                for m in mags.iter_mut() {
+                    *m = (*m << 1) | br.get_bit()? as u64;
+                }
+            }
+        } else {
+            for m in mags.iter_mut() {
+                *m = br.get_bits(nbits)?;
+            }
+        }
+        let mut records = Vec::with_capacity(n);
+        for i in 0..n {
+            let exact = if escapes[i] { Some(T::read(r)?) } else { None };
+            records.push(UnpredRecord { exact, sign: signs[i], mag: mags[i] });
+        }
+        self.records = records;
+        Ok(())
+    }
+
+    fn reset(&mut self) {
+        self.records.clear();
+        self.replay = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantizer::test_support::roundtrip_check;
+    use crate::util::prop;
+
+    #[test]
+    fn unpredictables_respect_half_eb() {
+        let eb = 1e-3;
+        let mut q = UnpredAwareQuantizer::<f64>::new(eb, 4); // tiny radius
+        let (idx, rec) = q.quantize(100.0, 0.0); // far out of range
+        assert_eq!(idx, UNPREDICTABLE);
+        assert!((rec - 100.0).abs() <= eb / 2.0 + 1e-15);
+    }
+
+    #[test]
+    fn bitplane_store_smaller_after_lossless_than_truncation() {
+        // The §4.2 claim: bitplane order doesn't shrink the raw size but
+        // makes it far more compressible. Compare zstd(bitplanes) against
+        // zstd(exact f64 storage) for small-magnitude unpredictables.
+        use crate::lossless::{Lossless, ZstdLossless};
+        use crate::util::rng::Pcg32;
+        let eb = 1e-6;
+        let mut rng = Pcg32::seeded(77);
+        let mut q = UnpredAwareQuantizer::<f64>::new(eb, 2);
+        let mut exact_bytes = ByteWriter::new();
+        for _ in 0..4000 {
+            let pred = 0.0;
+            let d = rng.normal() * 40.0 * eb; // unpredictable at radius 2
+            q.quantize(d, pred);
+            exact_bytes.put_f64(d);
+        }
+        let mut w = ByteWriter::new();
+        q.save(&mut w).unwrap();
+        let z = ZstdLossless::default();
+        let bp = z.compress(&w.finish()).unwrap().len();
+        let ex = z.compress(&exact_bytes.finish()).unwrap().len();
+        assert!(bp * 2 < ex, "bitplane {bp} not much smaller than exact {ex}");
+    }
+
+    #[test]
+    fn prop_error_bound_holds_mixed() {
+        prop::cases(60, 0x0b1, |rng| {
+            let eb = 10f64.powf(rng.uniform(-8.0, 0.0));
+            let n = rng.below(400) + 1;
+            let data: Vec<f64> = (0..n).map(|_| rng.uniform(-100.0, 100.0)).collect();
+            // predictions mostly good, sometimes terrible => mixed streams
+            let preds: Vec<f64> = data
+                .iter()
+                .map(|&d| {
+                    if rng.below(4) == 0 {
+                        rng.uniform(-100.0, 100.0)
+                    } else {
+                        d + rng.normal() * eb
+                    }
+                })
+                .collect();
+            let bounds = vec![eb; n];
+            let mut q = UnpredAwareQuantizer::<f64>::new(eb, 64);
+            roundtrip_check(&mut q, &data, &preds, &bounds);
+        });
+    }
+
+    #[test]
+    fn prop_f32_and_huge_magnitudes() {
+        prop::cases(30, 0x0b2, |rng| {
+            let eb = 1e-12; // force MAG_CAP escapes
+            let n = rng.below(100) + 1;
+            let data: Vec<f32> = (0..n).map(|_| rng.uniform(-1e6, 1e6) as f32).collect();
+            let preds: Vec<f64> = (0..n).map(|_| rng.uniform(-1e6, 1e6)).collect();
+            let bounds = vec![eb; n];
+            let mut q = UnpredAwareQuantizer::<f32>::new(eb, 16);
+            roundtrip_check(&mut q, &data, &preds, &bounds);
+        });
+    }
+}

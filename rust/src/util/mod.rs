@@ -1,0 +1,4 @@
+//! Utility substrates: PRNG and property-testing helpers.
+
+pub mod prop;
+pub mod rng;

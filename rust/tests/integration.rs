@@ -1,0 +1,227 @@
+//! Cross-module integration tests: full pipelines over realistic datagen
+//! workloads, stream format stability, coordinator + runtime composition,
+//! and the paper's qualitative claims as executable assertions.
+
+use sz3::coordinator::{reassemble, CompressedChunk, Coordinator};
+use sz3::config::JobConfig;
+use sz3::data::{Field, FieldValues};
+use sz3::metrics;
+use sz3::pipeline::{
+    self, decompress_any, peek_header, CompressConf, Compressor, ErrorBound,
+};
+use sz3::util::rng::Pcg32;
+use std::collections::HashMap;
+
+fn check_bound(field: &Field, restored: &Field, abs: f64, label: &str) {
+    for (i, (o, d)) in field
+        .values
+        .to_f64_vec()
+        .iter()
+        .zip(restored.values.to_f64_vec())
+        .enumerate()
+    {
+        assert!(
+            (o - d).abs() <= abs * (1.0 + 1e-12),
+            "{label}: |{o} - {d}| > {abs} at {i}"
+        );
+    }
+}
+
+#[test]
+fn every_registry_pipeline_roundtrips_every_survey_dataset() {
+    // The composability x generality matrix: all registered pipelines on
+    // all eight survey applications (first field each, truncated rows to
+    // keep runtime sane).
+    let names = ["sz3-lr", "sz3-lr-s", "sz3-interp", "sz3-truncation", "lorenzo-1d", "fpzip-like"];
+    for ds in sz3::datagen::survey(7) {
+        let field = {
+            // take a slice of the first field to bound runtime
+            let f = &ds.fields[0];
+            let dims = f.shape.dims();
+            let keep = dims[0].min(12);
+            let row: usize = dims[1..].iter().product::<usize>().max(1);
+            let mut nd = dims.to_vec();
+            nd[0] = keep;
+            match &f.values {
+                FieldValues::F32(v) => {
+                    Field::f32(f.name.clone(), &nd, v[..keep * row].to_vec()).unwrap()
+                }
+                FieldValues::F64(v) => {
+                    Field::f64(f.name.clone(), &nd, v[..keep * row].to_vec()).unwrap()
+                }
+                FieldValues::I32(v) => Field::new(
+                    f.name.clone(),
+                    &nd,
+                    FieldValues::I32(v[..keep * row].to_vec()),
+                )
+                .unwrap(),
+            }
+        };
+        let abs = ErrorBound::Rel(1e-3).to_abs(&field).unwrap();
+        for name in names {
+            let c = pipeline::by_name(name).unwrap();
+            let conf = CompressConf::new(ErrorBound::Abs(abs));
+            let stream = c.compress(&field, &conf).unwrap();
+            // header carries the right identity for dispatch
+            let h = peek_header(&stream).unwrap();
+            assert_eq!(h.pipeline, name);
+            // preprocessors may reshape (e.g. linearize), but never resize
+            assert_eq!(h.len(), field.len());
+            let out = decompress_any(&stream).unwrap();
+            assert_eq!(out.shape.dims(), field.shape.dims(), "{name} shape restore");
+            check_bound(&field, &out, abs, &format!("{name}/{}", ds.name));
+        }
+    }
+}
+
+#[test]
+fn paper_claim_interp_beats_lr_on_smooth_low_bitrate() {
+    // Fig. 7 Miranda: at low bitrate (high eb) interpolation wins clearly.
+    let ds = sz3::datagen::fields::miranda(42);
+    let field = &ds.fields[0];
+    let conf = CompressConf::new(ErrorBound::Rel(1e-2));
+    let ratio = |name: &str| {
+        let c = pipeline::by_name(name).unwrap();
+        let s = c.compress(field, &conf).unwrap();
+        field.nbytes() as f64 / s.len() as f64
+    };
+    let interp = ratio("sz3-interp");
+    let lr = ratio("sz3-lr");
+    assert!(
+        interp > lr,
+        "interp {interp:.2} should beat lr {lr:.2} on smooth data at low bitrate"
+    );
+}
+
+#[test]
+fn paper_claim_truncation_fastest_lowest_quality() {
+    let ds = sz3::datagen::fields::nyx(42);
+    let field = &ds.fields[0];
+    let conf = CompressConf::new(ErrorBound::Rel(1e-3));
+    let mut ratios = HashMap::new();
+    for name in ["sz3-truncation", "sz3-lr", "sz3-interp"] {
+        let c = pipeline::by_name(name).unwrap();
+        let stream = c.compress(field, &conf).unwrap();
+        let out = decompress_any(&stream).unwrap();
+        let m = metrics::evaluate(field, &out, stream.len());
+        ratios.insert(name, m.ratio);
+    }
+    assert!(
+        ratios["sz3-truncation"] < ratios["sz3-lr"]
+            && ratios["sz3-truncation"] < ratios["sz3-interp"],
+        "truncation should have the worst ratio: {ratios:?}"
+    );
+}
+
+#[test]
+fn coordinator_streams_gamess_through_pastri() {
+    // Cross-module: datagen -> coordinator -> pastri pipeline -> reassembly.
+    let cfg = JobConfig {
+        pipeline: "sz3-pastri".into(),
+        bound: ErrorBound::Abs(1e-8),
+        radius: 64,
+        workers: 2,
+        chunk_elems: 1 << 16,
+        queue_depth: 2,
+        use_pjrt: false,
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let fields = sz3::datagen::gamess::gamess_dataset(1 << 17, 3);
+    let originals = fields.clone();
+    let mut by_field: HashMap<String, Vec<CompressedChunk>> = HashMap::new();
+    let report = coord
+        .run(fields, |c| by_field.entry(c.field.clone()).or_default().push(c))
+        .unwrap();
+    assert_eq!(report.fields, 3);
+    assert!(report.ratio() > 1.0);
+    for f in &originals {
+        let rec = reassemble(&by_field[&f.name]).unwrap();
+        check_bound(f, &rec, 1e-8, &f.name);
+    }
+}
+
+#[test]
+fn stream_is_self_describing_across_pipelines() {
+    // decompress_any must route purely on the stream, with no side channel.
+    let mut rng = Pcg32::seeded(5);
+    let dims = [16usize, 16, 16];
+    let f = Field::f32("x", &dims, sz3::util::prop::smooth_field(&mut rng, &dims)).unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(1e-2));
+    let mut streams = Vec::new();
+    for name in ["sz3-lr", "sz3-interp", "sz3-truncation", "fpzip-like"] {
+        streams.push(pipeline::by_name(name).unwrap().compress(&f, &conf).unwrap());
+    }
+    // shuffle decode order
+    for s in streams.iter().rev() {
+        let out = decompress_any(s).unwrap();
+        check_bound(&f, &out, 1e-2, "self-describing");
+    }
+}
+
+#[test]
+fn corrupt_streams_error_not_panic() {
+    let mut rng = Pcg32::seeded(6);
+    let dims = [32usize, 32];
+    let f = Field::f32("x", &dims, sz3::util::prop::smooth_field(&mut rng, &dims)).unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+    let stream = pipeline::by_name("sz3-lr").unwrap().compress(&f, &conf).unwrap();
+    // truncations at many offsets must produce Err, never panic
+    for cut in [5usize, 20, stream.len() / 2, stream.len() - 3] {
+        let r = std::panic::catch_unwind(|| decompress_any(&stream[..cut]));
+        match r {
+            Ok(Err(_)) => {}
+            Ok(Ok(_)) => panic!("truncated stream decoded 'successfully'"),
+            Err(_) => panic!("decode panicked on truncated stream (cut={cut})"),
+        }
+    }
+    // single-byte corruption in the body: Err or bound-violating output are
+    // both detectable; panics are not acceptable
+    let mut bad = stream.clone();
+    let idx = bad.len() - 10;
+    bad[idx] ^= 0xff;
+    let r = std::panic::catch_unwind(|| decompress_any(&bad));
+    assert!(r.is_ok(), "decode panicked on corrupt body");
+}
+
+#[test]
+fn aps_adaptive_tracks_best_baseline() {
+    // §5.3: the adaptive pipeline should be within a whisker of the best
+    // fixed pipeline on BOTH sides of the switch point.
+    use sz3::datagen::aps::{diffraction_stack, Sample};
+    let field = diffraction_stack(Sample::ChipPillar, 48, 24, 24, 9);
+    for eb in [0.2, 4.0] {
+        let conf = CompressConf::new(ErrorBound::Abs(eb));
+        let size = |name: &str| {
+            pipeline::by_name(name).unwrap().compress(&field, &conf).unwrap().len()
+        };
+        let aps = size("sz3-aps");
+        let best_fixed = size("sz3-lr").min(size("lorenzo-1d"));
+        assert!(
+            (aps as f64) <= best_fixed as f64 * 1.10,
+            "eb={eb}: adaptive {aps} should track best fixed {best_fixed}"
+        );
+    }
+}
+
+#[test]
+fn pwrel_bound_via_log_transform_pipeline() {
+    use sz3::preprocessor::{LogTransform, Preprocessor};
+    let mut rng = Pcg32::seeded(8);
+    let n = 4096;
+    let vals: Vec<f64> =
+        (0..n).map(|_| 10f64.powf(rng.uniform(-6.0, 6.0)) * if rng.below(2) == 0 { -1.0 } else { 1.0 }).collect();
+    let mut field = Field::f64("w", &[n], vals.clone()).unwrap();
+    let rel = 1e-2;
+    let mut conf = CompressConf::new(ErrorBound::PwRel(rel));
+    let t = LogTransform::default();
+    let state = t.process(&mut field, &mut conf).unwrap();
+    let c = pipeline::by_name("lorenzo-1d").unwrap();
+    let stream = c.compress(&field, &conf).unwrap();
+    let mut out = decompress_any(&stream).unwrap();
+    t.postprocess(&mut out, &state).unwrap();
+    for (o, d) in vals.iter().zip(out.values.to_f64_vec()) {
+        if *o != 0.0 {
+            assert!((d / o - 1.0).abs() <= rel * (1.0 + 1e-9));
+        }
+    }
+}
