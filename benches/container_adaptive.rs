@@ -1,0 +1,72 @@
+//! Container + adaptive-selection bench: the coordinator's native `SZ3C`
+//! artifact path (pack, parallel decompress) with a fixed pipeline vs
+//! per-chunk best-fit selection, on a heterogeneous multi-regime workload
+//! where no single pipeline fits every chunk. Expect the adaptive run to
+//! match or beat the best fixed pipeline's ratio while keeping container
+//! decompression parallel across the worker pool.
+//!
+//! Output: `cont,<mode>,<ratio>,<compress_mbs>,<decompress_mbs>,<mix>`
+
+use sz3::bench_harness::container_roundtrip;
+use sz3::config::JobConfig;
+use sz3::coordinator::Coordinator;
+use sz3::data::Field;
+use sz3::pipeline::ErrorBound;
+use sz3::util::rng::Pcg32;
+
+fn workload(seed: u64, nz: usize) -> Vec<Field> {
+    let (ny, nx) = (48usize, 48);
+    let mut rng = Pcg32::seeded(seed);
+    let mut vals = Vec::with_capacity(nz * ny * nx);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let v = if (z / 3) % 3 == 0 {
+                    (0.6 * (z as f64 * 0.11).sin() + 0.5 * (y as f64 * 0.07).cos()
+                        + 0.4 * (x as f64 * 0.05).sin()) as f32
+                } else if (z / 3) % 3 == 1 {
+                    (0.5 * z as f64 - 0.3 * y as f64 + 0.2 * x as f64
+                        + rng.normal() * 0.02) as f32
+                } else {
+                    rng.uniform(-300.0, 300.0) as f32
+                };
+                vals.push(v);
+            }
+        }
+    }
+    vec![Field::f32("hetero", &[nz, ny, nx], vals).unwrap()]
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let nz = if quick { 48 } else { 144 };
+    println!("# container + adaptive selection bench (quick={quick})");
+    println!("cont,mode,ratio,compress_mbs,decompress_mbs,mix");
+    for (mode, pipeline, adaptive) in [
+        ("fixed-lr", "sz3-lr", false),
+        ("fixed-interp", "sz3-interp", false),
+        ("fixed-truncation", "sz3-truncation", false),
+        ("adaptive", "sz3-lr", true),
+    ] {
+        let cfg = JobConfig {
+            pipeline: pipeline.into(),
+            bound: ErrorBound::Abs(0.2),
+            workers: 4,
+            chunk_elems: 48 * 48 * 3, // one regime stripe per chunk
+            queue_depth: 4,
+            adaptive,
+            ..Default::default()
+        };
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let run = container_roundtrip(&coord, workload(42, nz)).unwrap();
+        let mix: Vec<String> =
+            run.per_pipeline.iter().map(|(p, n)| format!("{p}x{n}")).collect();
+        println!(
+            "cont,{mode},{:.2},{:.1},{:.1},{}",
+            run.ratio(),
+            run.report.throughput_mbs(),
+            run.decompress_mbs(),
+            mix.join("|")
+        );
+    }
+}

@@ -9,7 +9,7 @@ use sz3::datagen::aps::{diffraction_stack, Sample};
 use sz3::metrics;
 use sz3::pipeline::{self, decompress_any, CompressConf, ErrorBound};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     for sample in [Sample::ChipPillar, Sample::FlatChip] {
         let field = diffraction_stack(sample, 96, 48, 48, 42);
         println!(

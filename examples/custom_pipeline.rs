@@ -38,7 +38,7 @@ impl<T: Scalar> Predictor<T> for NeighborMean {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut rng = Pcg32::seeded(3);
 
     // ---------- 1. pointwise-relative bound via log transform ----------

@@ -8,7 +8,7 @@ use std::time::Instant;
 use sz3::datagen::gamess;
 use sz3::pipeline::{decompress_any, CompressConf, Compressor, ErrorBound, PastriCompressor};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let eb = 1e-10; // the domain scientists' requirement (Table 1)
     let n = 1 << 21; // ~16 MB per field (f64)
     println!("GAMESS ERI-like data, absolute error bound {eb:.0e}, {n} doubles/field\n");

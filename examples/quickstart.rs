@@ -8,7 +8,7 @@ use sz3::metrics;
 use sz3::pipeline::{by_name, decompress_any, CompressConf, ErrorBound};
 use sz3::util::rng::Pcg32;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // A smooth 3-D field (stand-in for one simulation snapshot variable).
     let dims = [64usize, 64, 64];
     let mut rng = Pcg32::seeded(7);

@@ -17,7 +17,7 @@ use sz3::metrics;
 use sz3::pipeline::{self, ErrorBound};
 use sz3::runtime::{PjrtAnalyzer, PjrtEngine, PjrtService};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let rel_eb = 1e-3;
     let cfg = JobConfig {
         pipeline: "sz3-lr".into(),

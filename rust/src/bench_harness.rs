@@ -5,7 +5,10 @@
 //! line format the experiment scripts grep. Also hosts the
 //! rate-distortion sweep runner shared by the figure-regeneration benches.
 
+use crate::container;
+use crate::coordinator::Coordinator;
 use crate::data::Field;
+use crate::error::{Result, SzError};
 use crate::metrics::{self, Metrics};
 use crate::pipeline::{decompress_any, CompressConf, Compressor, ErrorBound};
 use std::time::{Duration, Instant};
@@ -139,6 +142,68 @@ pub fn rd_sweep(
     out
 }
 
+/// Outcome of one coordinator → container → parallel-decompress round trip.
+#[derive(Clone, Debug)]
+pub struct ContainerRun {
+    /// Compression-side coordinator report.
+    pub report: crate::coordinator::RunReport,
+    /// Container artifact size in bytes.
+    pub artifact_bytes: usize,
+    /// Wall-clock of the parallel decompression fan-out.
+    pub decompress_wall: Duration,
+    /// Chunk counts per pipeline (the adaptive-selection mix).
+    pub per_pipeline: Vec<(String, usize)>,
+}
+
+impl ContainerRun {
+    /// End-to-end ratio over the container artifact (index included).
+    pub fn ratio(&self) -> f64 {
+        self.report.bytes_in as f64 / self.artifact_bytes.max(1) as f64
+    }
+
+    /// Decompression throughput over uncompressed bytes (MB/s).
+    pub fn decompress_mbs(&self) -> f64 {
+        self.report.bytes_in as f64 / 1e6 / self.decompress_wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Drive `fields` through the coordinator into a container, decompress it
+/// across `coord.workers` threads, and verify every field's shape and name
+/// roundtripped. The workhorse behind the container benches.
+pub fn container_roundtrip(coord: &Coordinator, fields: Vec<Field>) -> Result<ContainerRun> {
+    let shapes: Vec<(String, Vec<usize>)> = fields
+        .iter()
+        .map(|f| (f.name.clone(), f.shape.dims().to_vec()))
+        .collect();
+    let (artifact, report) = coord.run_to_container(fields)?;
+    let per_pipeline: Vec<(String, usize)> =
+        report.per_pipeline.iter().map(|(p, &n)| (p.clone(), n)).collect();
+    let t0 = Instant::now();
+    let decoded = container::decompress_container(&artifact, coord.workers)?;
+    let decompress_wall = t0.elapsed();
+    if decoded.len() != shapes.len() {
+        return Err(SzError::corrupt(format!(
+            "container returned {} of {} fields",
+            decoded.len(),
+            shapes.len()
+        )));
+    }
+    for (f, (name, dims)) in decoded.iter().zip(&shapes) {
+        if f.name != *name || f.shape.dims() != dims.as_slice() {
+            return Err(SzError::corrupt(format!(
+                "field {name}: roundtrip shape {:?} != {dims:?}",
+                f.shape.dims()
+            )));
+        }
+    }
+    Ok(ContainerRun {
+        artifact_bytes: artifact.len(),
+        report,
+        decompress_wall,
+        per_pipeline,
+    })
+}
+
 /// Print an RD series in the grep-able format used by EXPERIMENTS.md:
 /// `rd,<figure>,<dataset>,<pipeline>,<rel_eb>,<bitrate>,<psnr>,<ratio>`.
 pub fn print_rd_series(figure: &str, dataset: &str, pipeline: &str, points: &[RdPoint]) {
@@ -162,6 +227,25 @@ mod tests {
         let s = b.run("noop", || 1 + 1);
         assert!(s.iters >= 1);
         assert!(s.min <= s.mean + s.stddev);
+    }
+
+    #[test]
+    fn container_roundtrip_verifies_shapes() {
+        let cfg = crate::config::JobConfig {
+            pipeline: "sz3-lr".into(),
+            bound: ErrorBound::Abs(1e-3),
+            workers: 2,
+            chunk_elems: 2048,
+            queue_depth: 2,
+            ..Default::default()
+        };
+        let coord = crate::coordinator::Coordinator::from_config(&cfg).unwrap();
+        let mut rng = crate::util::rng::Pcg32::seeded(19);
+        let dims = [16usize, 16, 16];
+        let f = Field::f32("cube", &dims, prop::smooth_field(&mut rng, &dims)).unwrap();
+        let run = container_roundtrip(&coord, vec![f]).unwrap();
+        assert!(run.ratio() > 1.0);
+        assert_eq!(run.per_pipeline, vec![("sz3-lr".to_string(), run.report.chunks)]);
     }
 
     #[test]

@@ -78,6 +78,18 @@ impl Args {
         self.switches.iter().any(|s| s == switch)
     }
 
+    /// Parse an optional comma-separated list flag
+    /// (`--candidates sz3-lr,sz3-interp`). Empty items are dropped.
+    pub fn list(&self, key: &str) -> Option<Vec<String>> {
+        self.flags.get(key).map(|raw| {
+            raw.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+    }
+
     /// Parse a `--dims 100,500,500` style flag.
     pub fn dims(&self, key: &str) -> Result<Vec<usize>> {
         let raw = self.need(key)?;
@@ -133,5 +145,15 @@ mod tests {
     fn negative_numbers_as_values() {
         let a = parse(&["x", "--lo", "-5"]);
         assert_eq!(a.get_or("lo", 0i32).unwrap(), -5);
+    }
+
+    #[test]
+    fn list_flag_splits_and_trims() {
+        let a = parse(&["x", "--candidates", "sz3-lr, sz3-interp,,sz3-truncation"]);
+        assert_eq!(
+            a.list("candidates").unwrap(),
+            vec!["sz3-lr", "sz3-interp", "sz3-truncation"]
+        );
+        assert!(a.list("missing").is_none());
     }
 }

@@ -18,7 +18,9 @@ use crate::pipeline::{CompressConf, ErrorBound};
 ///   "workers": 4,
 ///   "chunk_elems": 1048576,
 ///   "queue_depth": 8,
-///   "use_pjrt": true
+///   "use_pjrt": true,
+///   "adaptive": true,
+///   "candidates": ["sz3-lr", "sz3-interp", "sz3-truncation"]
 /// }
 /// ```
 #[derive(Clone, Debug)]
@@ -37,6 +39,12 @@ pub struct JobConfig {
     pub queue_depth: usize,
     /// Use the PJRT analysis engine when artifacts are present.
     pub use_pjrt: bool,
+    /// Pick the best-fit registry pipeline per chunk (container runs record
+    /// the choice in the chunk index).
+    pub adaptive: bool,
+    /// Candidate pipelines for adaptive selection; empty means the
+    /// selector's default set.
+    pub candidates: Vec<String>,
 }
 
 impl Default for JobConfig {
@@ -45,10 +53,12 @@ impl Default for JobConfig {
             pipeline: "sz3-lr".to_string(),
             bound: ErrorBound::Rel(1e-3),
             radius: 32768,
-            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            workers: crate::util::default_workers(),
             chunk_elems: 1 << 21,
             queue_depth: 8,
             use_pjrt: false,
+            adaptive: false,
+            candidates: Vec::new(),
         }
     }
 }
@@ -116,6 +126,24 @@ impl JobConfig {
                         .as_bool()
                         .ok_or_else(|| SzError::config("use_pjrt must be a bool"))?;
                 }
+                "adaptive" => {
+                    cfg.adaptive = val
+                        .as_bool()
+                        .ok_or_else(|| SzError::config("adaptive must be a bool"))?;
+                }
+                "candidates" => {
+                    let arr = val
+                        .as_arr()
+                        .ok_or_else(|| SzError::config("candidates must be an array"))?;
+                    cfg.candidates = arr
+                        .iter()
+                        .map(|v| {
+                            v.as_str().map(str::to_string).ok_or_else(|| {
+                                SzError::config("candidates entries must be strings")
+                            })
+                        })
+                        .collect::<Result<Vec<String>>>()?;
+                }
                 other => {
                     return Err(SzError::config(format!("unknown config key '{other}'")))
                 }
@@ -160,5 +188,19 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(JobConfig::from_json(r#"{"pipelin": "typo"}"#).is_err());
+    }
+
+    #[test]
+    fn adaptive_and_candidates_parse() {
+        let cfg = JobConfig::from_json(
+            r#"{"adaptive": true, "candidates": ["sz3-lr", "sz3-truncation"]}"#,
+        )
+        .unwrap();
+        assert!(cfg.adaptive);
+        assert_eq!(cfg.candidates, vec!["sz3-lr", "sz3-truncation"]);
+        assert!(JobConfig::from_json(r#"{"candidates": [1]}"#).is_err());
+        assert!(JobConfig::from_json(r#"{"adaptive": "yes"}"#).is_err());
+        // defaults stay off
+        assert!(!JobConfig::from_json(r#"{}"#).unwrap().adaptive);
     }
 }

@@ -1,0 +1,387 @@
+//! Per-chunk adaptive pipeline selection (the paper's best-fit predictor
+//! criterion, §3 contribution 2, lifted from block level to chunk level —
+//! cf. Tao et al., "Optimizing Lossy Compression Rate-Distortion from
+//! Automatic Online Selection between SZ and ZFP").
+//!
+//! The selector samples full analysis blocks from a chunk, reuses
+//! [`BlockAnalyzer`] (native or PJRT) for the Lorenzo/regression error
+//! estimates, adds cheap first/second-difference estimates for the 1-D and
+//! interpolation predictors, and maps each candidate registry pipeline to
+//! a predicted-residual proxy. The winner is recorded per chunk in the
+//! container index so decompression dispatches without re-analysis.
+//!
+//! Truncation is not prediction-based: it is selected only when every
+//! predictor's estimated residual stays above a fixed fraction of the
+//! chunk's value range (prediction would save < ~3 bits/element over raw
+//! bit truncation, so the cheaper pipeline wins at equal quality).
+
+use crate::data::{Field, FieldValues};
+use crate::error::{Result, SzError};
+use crate::pipeline::analysis::{BlockAnalyzer, NativeAnalyzer};
+use crate::pipeline::block::block_side;
+use crate::pipeline::{self, CompressConf};
+use crate::predictor::LorenzoPredictor;
+use std::sync::Arc;
+
+/// Predictor-error estimates measured on a chunk sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChunkSignals {
+    /// Mean |Lorenzo residual| over sampled full blocks.
+    pub lorenzo_err: f64,
+    /// Mean |regression residual| over sampled full blocks.
+    pub regression_err: f64,
+    /// Mean |first difference| along the innermost axis (1-D Lorenzo proxy).
+    pub first_diff_err: f64,
+    /// Mean |second difference| along the innermost axis (interpolation
+    /// residual proxy: midpoint interpolation error ≈ half the curvature).
+    pub curvature_err: f64,
+    /// Chunk value range (max - min).
+    pub range: f64,
+    /// Absolute error bound resolved for this chunk.
+    pub eb: f64,
+}
+
+/// Outcome of selecting a pipeline for one chunk.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    /// Winning registry pipeline name.
+    pub pipeline: String,
+    /// The signals the decision was based on.
+    pub signals: ChunkSignals,
+}
+
+/// Chunk-granularity best-fit pipeline selector.
+pub struct AdaptiveChunkSelector {
+    candidates: Vec<String>,
+    analyzer: Arc<dyn BlockAnalyzer>,
+    /// Cap on sampled analysis blocks per chunk (keeps selection overhead
+    /// a small fraction of compression time on large chunks).
+    pub max_blocks: usize,
+}
+
+/// Prediction beats truncation only when its estimated residual is below
+/// this fraction of the value range (≈ 2.7 bits/element of headroom).
+const UNPREDICTABLE_FRACTION: f64 = 0.15;
+
+impl AdaptiveChunkSelector {
+    /// Default candidate set: the three fixed pipelines the paper composes
+    /// plus the linearized 1-D path.
+    pub const DEFAULT_CANDIDATES: &'static [&'static str] =
+        &["sz3-lr", "sz3-interp", "lorenzo-1d", "sz3-truncation"];
+
+    /// Selector over the default candidates with native analysis.
+    pub fn new() -> Self {
+        Self::from_names(Self::DEFAULT_CANDIDATES.iter().map(|s| s.to_string()))
+            .expect("default candidates are registered")
+    }
+
+    /// Selector over explicit registry names; every name is validated
+    /// against the pipeline registry up front.
+    pub fn from_names<I: IntoIterator<Item = String>>(names: I) -> Result<Self> {
+        let candidates: Vec<String> = names.into_iter().collect();
+        if candidates.is_empty() {
+            return Err(SzError::config("adaptive selection needs ≥ 1 candidate"));
+        }
+        for name in &candidates {
+            if pipeline::by_name(name).is_none() {
+                return Err(SzError::config(format!(
+                    "unknown candidate pipeline '{name}'"
+                )));
+            }
+        }
+        Ok(AdaptiveChunkSelector {
+            candidates,
+            analyzer: Arc::new(NativeAnalyzer),
+            max_blocks: 256,
+        })
+    }
+
+    /// Replace the analysis backend (e.g. with the PJRT engine).
+    pub fn with_analyzer(mut self, a: Arc<dyn BlockAnalyzer>) -> Self {
+        self.analyzer = a;
+        self
+    }
+
+    /// The candidate registry names.
+    pub fn candidates(&self) -> &[String] {
+        &self.candidates
+    }
+
+    /// Measure predictor-error signals on a sample of `field`.
+    pub fn signals(&self, field: &Field, conf: &CompressConf) -> Result<ChunkSignals> {
+        let (lo, hi) = field.value_range();
+        let range = hi - lo;
+        // one O(n) scan serves both the range signal and the Rel bound
+        let eb = conf.bound.to_abs_with_range(|| (lo, hi))?;
+        // copy only the sampled rows out (not the whole chunk): selection
+        // runs on the compression hot path, and a full f64 materialization
+        // of a 2^21-element chunk would dwarf the max_blocks cap
+        let push_range = |out: &mut Vec<f64>, start: usize, len: usize| match &field.values {
+            FieldValues::F32(v) => {
+                out.extend(v[start..start + len].iter().map(|&x| x as f64))
+            }
+            FieldValues::F64(v) => out.extend_from_slice(&v[start..start + len]),
+            FieldValues::I32(v) => {
+                out.extend(v[start..start + len].iter().map(|&x| x as f64))
+            }
+        };
+        let dims = field.shape.dims();
+        let nd = dims.len();
+        let side = block_side(nd);
+        let strides = field.shape.strides();
+
+        let mut signals = ChunkSignals { range, eb, ..Default::default() };
+        // Analysis blocks shrink to the chunk: coordinator shards are often
+        // only a few rows deep along the slow axis, and demanding a full
+        // `side`-cube there would push every such chunk onto a degenerate
+        // path that never runs the BlockAnalyzer.
+        let bdims: Vec<usize> = dims.iter().map(|&d| side.min(d)).collect();
+        if field.len() < 4 {
+            // too small for any fit: flat first/second differences double
+            // as the Lorenzo and regression proxies
+            let mut vals = Vec::with_capacity(field.len());
+            push_range(&mut vals, 0, field.len());
+            let (fd, cv) = diff_errors(&vals);
+            signals.first_diff_err = fd;
+            signals.curvature_err = cv;
+            signals.lorenzo_err = fd;
+            signals.regression_err = fd.max(cv);
+            return Ok(signals);
+        }
+
+        // evenly subsample the block grid up to max_blocks
+        let blocks_per_dim: Vec<usize> =
+            dims.iter().zip(&bdims).map(|(&d, &b)| d / b).collect();
+        let total_full: usize = blocks_per_dim.iter().product();
+        let take = total_full.min(self.max_blocks.max(1));
+        let step = total_full as f64 / take as f64;
+        let block_len: usize = bdims.iter().product();
+        let inner = bdims[nd - 1];
+        let mut buf: Vec<f64> = Vec::with_capacity(take * block_len);
+        for k in 0..take {
+            let flat_block = (k as f64 * step) as usize;
+            // decode the block grid index, then the element origin
+            let mut rem = flat_block;
+            let mut origin = vec![0usize; nd];
+            for d in (0..nd).rev() {
+                origin[d] = (rem % blocks_per_dim[d]) * bdims[d];
+                rem /= blocks_per_dim[d];
+            }
+            // extract the block row-major; the innermost axis is contiguous
+            let base: usize = origin.iter().zip(strides).map(|(&o, &s)| o * s).sum();
+            let outer: usize = block_len / inner;
+            let mut lidx = vec![0usize; nd.saturating_sub(1)];
+            for _ in 0..outer {
+                let off: usize = lidx
+                    .iter()
+                    .zip(strides.iter())
+                    .map(|(&l, &s)| l * s)
+                    .sum();
+                push_range(&mut buf, base + off, inner);
+                for d in (0..lidx.len()).rev() {
+                    lidx[d] += 1;
+                    if lidx[d] < bdims[d] {
+                        break;
+                    }
+                    lidx[d] = 0;
+                }
+            }
+        }
+        // diff-based proxies over the sampled contiguous rows
+        let mut fd_sum = 0.0;
+        let mut fd_n = 0usize;
+        let mut cv_sum = 0.0;
+        let mut cv_n = 0usize;
+        for row in buf.chunks_exact(inner.max(1)) {
+            for w in row.windows(2) {
+                fd_sum += (w[1] - w[0]).abs();
+                fd_n += 1;
+            }
+            for w in row.windows(3) {
+                cv_sum += (w[2] - 2.0 * w[1] + w[0]).abs();
+                cv_n += 1;
+            }
+        }
+        signals.first_diff_err = fd_sum / fd_n.max(1) as f64;
+        signals.curvature_err = if cv_n > 0 {
+            cv_sum / cv_n as f64
+        } else {
+            signals.first_diff_err
+        };
+
+        // size-1 axes carry no variance (the regression fit's denominator
+        // would vanish); squeezing them out leaves the same row-major
+        // buffer, so the analyzer sees an equivalent lower-rank block
+        let analysis_dims: Vec<usize> =
+            bdims.iter().copied().filter(|&b| b >= 2).collect();
+        if analysis_dims.is_empty() {
+            signals.lorenzo_err = signals.first_diff_err;
+            signals.regression_err = signals.first_diff_err.max(signals.curvature_err);
+            return Ok(signals);
+        }
+        let analyses = self.analyzer.analyze_batch(&buf, &analysis_dims)?;
+        let n = analyses.len().max(1) as f64;
+        signals.lorenzo_err = analyses.iter().map(|a| a.lorenzo_err).sum::<f64>() / n;
+        signals.regression_err =
+            analyses.iter().map(|a| a.regression_err).sum::<f64>() / n;
+        Ok(signals)
+    }
+
+    /// Pick the best-fit candidate for `field` under `conf`.
+    pub fn select(&self, field: &Field, conf: &CompressConf) -> Result<Selection> {
+        let signals = self.signals(field, conf)?;
+        let nd = field.shape.ndim();
+        let noise = LorenzoPredictor::noise_factor(nd) * signals.eb;
+        let noise_1d = LorenzoPredictor::noise_factor(1) * signals.eb;
+        // estimated mean |residual| if the chunk ran through each candidate
+        let proxy = |name: &str| -> Option<f64> {
+            match name {
+                "sz3-lr" | "sz3-lr-s" => {
+                    Some((signals.lorenzo_err + noise).min(signals.regression_err))
+                }
+                "lorenzo-1d" => Some(signals.first_diff_err + noise_1d),
+                "sz3-interp" => Some(0.5 * signals.curvature_err),
+                _ => None, // no residual model (pastri/aps/truncation/...)
+            }
+        };
+        let mut best: Option<(&str, f64)> = None;
+        for name in &self.candidates {
+            if let Some(e) = proxy(name) {
+                if best.map(|(_, b)| e < b).unwrap_or(true) {
+                    best = Some((name.as_str(), e));
+                }
+            }
+        }
+        let winner = match best {
+            // unpredictable data: every predictor leaves residuals near the
+            // raw value range, so prediction buys almost nothing over plain
+            // bit truncation — take the cheaper pipeline if it is a candidate
+            Some((_, e))
+                if e > UNPREDICTABLE_FRACTION * signals.range
+                    && self.candidates.iter().any(|c| c == "sz3-truncation") =>
+            {
+                "sz3-truncation"
+            }
+            Some((name, _)) => name,
+            // no candidate has a residual model: keep the user's first choice
+            None => self.candidates[0].as_str(),
+        };
+        Ok(Selection { pipeline: winner.to_string(), signals })
+    }
+}
+
+impl Default for AdaptiveChunkSelector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Mean |first difference| and |second difference| of a flat sequence.
+fn diff_errors(vals: &[f64]) -> (f64, f64) {
+    let mut fd = 0.0;
+    for w in vals.windows(2) {
+        fd += (w[1] - w[0]).abs();
+    }
+    let mut cv = 0.0;
+    for w in vals.windows(3) {
+        cv += (w[2] - 2.0 * w[1] + w[0]).abs();
+    }
+    let fd = fd / (vals.len().saturating_sub(1)).max(1) as f64;
+    let cv = if vals.len() >= 3 {
+        cv / (vals.len() - 2) as f64
+    } else {
+        fd
+    };
+    (fd, cv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::ErrorBound;
+    use crate::util::rng::Pcg32;
+
+    fn conf() -> CompressConf {
+        CompressConf::new(ErrorBound::Abs(0.5))
+    }
+
+    #[test]
+    fn unknown_candidate_rejected() {
+        assert!(AdaptiveChunkSelector::from_names(vec!["nope".to_string()]).is_err());
+        assert!(AdaptiveChunkSelector::from_names(Vec::<String>::new()).is_err());
+    }
+
+    #[test]
+    fn white_noise_selects_truncation() {
+        let mut rng = Pcg32::seeded(21);
+        let dims = [16usize, 24, 24];
+        let vals: Vec<f32> =
+            (0..16 * 24 * 24).map(|_| rng.uniform(-1000.0, 1000.0) as f32).collect();
+        let f = Field::f32("noise", &dims, vals).unwrap();
+        let sel = AdaptiveChunkSelector::new();
+        let s = sel.select(&f, &conf()).unwrap();
+        assert_eq!(s.pipeline, "sz3-truncation", "signals: {:?}", s.signals);
+    }
+
+    #[test]
+    fn smooth_data_selects_a_predictor() {
+        let mut rng = Pcg32::seeded(22);
+        let dims = [16usize, 24, 24];
+        let vals = crate::util::prop::smooth_field(&mut rng, &dims);
+        let f = Field::f32("smooth", &dims, vals).unwrap();
+        let sel = AdaptiveChunkSelector::new();
+        let s = sel.select(&f, &CompressConf::new(ErrorBound::Abs(1e-3))).unwrap();
+        assert_ne!(s.pipeline, "sz3-truncation", "signals: {:?}", s.signals);
+    }
+
+    #[test]
+    fn constant_chunk_stays_prediction_based() {
+        let f = Field::f32("flat", &[8, 12, 12], vec![3.5; 8 * 12 * 12]).unwrap();
+        let sel = AdaptiveChunkSelector::new();
+        let s = sel.select(&f, &CompressConf::new(ErrorBound::Rel(1e-3))).unwrap();
+        assert_ne!(s.pipeline, "sz3-truncation");
+    }
+
+    #[test]
+    fn thin_chunks_still_use_block_analysis() {
+        // coordinator shards are often only a few rows deep (< block side
+        // along the slow axis); selection must not degrade to the flat-diff
+        // fallback there — noise must still route to truncation and smooth
+        // data to a predictor
+        let mut rng = Pcg32::seeded(24);
+        let dims = [2usize, 64, 64];
+        let noisy: Vec<f32> =
+            (0..2 * 64 * 64).map(|_| rng.uniform(-1000.0, 1000.0) as f32).collect();
+        let sel = AdaptiveChunkSelector::new();
+        let f = Field::f32("thin-noise", &dims, noisy).unwrap();
+        let s = sel.select(&f, &conf()).unwrap();
+        assert_eq!(s.pipeline, "sz3-truncation", "signals: {:?}", s.signals);
+        let smooth = crate::util::prop::smooth_field(&mut rng, &dims);
+        let f = Field::f32("thin-smooth", &dims, smooth).unwrap();
+        let s = sel.select(&f, &CompressConf::new(ErrorBound::Abs(1e-3))).unwrap();
+        assert_ne!(s.pipeline, "sz3-truncation", "signals: {:?}", s.signals);
+    }
+
+    #[test]
+    fn tiny_chunk_does_not_panic() {
+        let f = Field::f32("tiny", &[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let sel = AdaptiveChunkSelector::new();
+        let s = sel.select(&f, &conf()).unwrap();
+        assert!(pipeline::by_name(&s.pipeline).is_some());
+    }
+
+    #[test]
+    fn truncation_needs_to_be_a_candidate() {
+        let mut rng = Pcg32::seeded(23);
+        let dims = [16usize, 24, 24];
+        let vals: Vec<f32> =
+            (0..16 * 24 * 24).map(|_| rng.uniform(-1000.0, 1000.0) as f32).collect();
+        let f = Field::f32("noise", &dims, vals).unwrap();
+        let sel = AdaptiveChunkSelector::from_names(
+            ["sz3-lr", "sz3-interp"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let s = sel.select(&f, &conf()).unwrap();
+        assert!(s.pipeline == "sz3-lr" || s.pipeline == "sz3-interp");
+    }
+}

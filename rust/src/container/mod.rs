@@ -1,0 +1,527 @@
+//! Chunked container format (`SZ3C`) — the coordinator's native artifact.
+//!
+//! The streaming coordinator shards fields into row-range chunks and
+//! compresses each independently (possibly through a *different* pipeline
+//! per chunk, see [`AdaptiveChunkSelector`]). This module packs those
+//! chunks into one self-describing artifact and fans them back out across
+//! a worker pool for parallel decompression.
+//!
+//! # Format (version 1)
+//!
+//! ```text
+//! magic   4 bytes  "SZ3C"
+//! version u8       1
+//! chunks  varint   number of chunk-index entries
+//! fields  varint   number of distinct fields (informational)
+//! entry × chunks:
+//!     field        str     source field name
+//!     chunk_index  varint  position of this chunk within its field
+//!     chunk_count  varint  chunks in the field
+//!     row_start    varint  } [start, end) along the split (slowest) axis
+//!     row_end      varint  }
+//!     ndim         varint  ≤ data::shape::MAX_DIMS
+//!     dims[ndim]   varint  full field dims
+//!     pipeline     str     registry pipeline that compressed the chunk
+//!     offset       varint  payload-relative byte offset of the stream
+//!     len          varint  stream length in bytes
+//! payload_len varint
+//! payload     bytes   concatenated per-chunk `SZ3R` streams
+//! ```
+//!
+//! Every chunk stream is itself a complete self-describing `SZ3R` stream,
+//! so the index's `pipeline` name is a dispatch/statistics shortcut that is
+//! cross-checked against the inner header during decompression. All index
+//! integers are validated against the buffer (dim-count cap, row-range
+//! sanity, offset bounds) before any allocation is sized from them.
+
+pub mod adaptive;
+
+pub use adaptive::{AdaptiveChunkSelector, ChunkSignals, Selection};
+
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::coordinator::CompressedChunk;
+use crate::data::{Field, FieldValues};
+use crate::error::{Result, SzError};
+use crate::pipeline;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Container magic (distinct from the per-stream `SZ3R`).
+pub const CONTAINER_MAGIC: &[u8; 4] = b"SZ3C";
+const VERSION: u8 = 1;
+
+/// True if `stream` starts with the container magic.
+pub fn is_container(stream: &[u8]) -> bool {
+    stream.len() >= 4 && &stream[..4] == CONTAINER_MAGIC
+}
+
+/// One chunk-index entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkEntry {
+    /// Source field name.
+    pub field: String,
+    /// Position of this chunk within its field.
+    pub chunk_index: usize,
+    /// Chunks in the field.
+    pub chunk_count: usize,
+    /// Row range [start, end) along the split axis.
+    pub rows: (usize, usize),
+    /// Full field dims.
+    pub field_dims: Vec<usize>,
+    /// Registry pipeline that compressed this chunk.
+    pub pipeline: String,
+    /// Payload-relative byte offset of the chunk stream.
+    pub offset: usize,
+    /// Chunk stream length in bytes.
+    pub len: usize,
+}
+
+/// Parsed container index.
+#[derive(Clone, Debug, Default)]
+pub struct ContainerIndex {
+    /// Chunk entries in delivery (seq) order.
+    pub entries: Vec<ChunkEntry>,
+}
+
+impl ContainerIndex {
+    /// Distinct field names in order of first appearance.
+    pub fn field_names(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for e in &self.entries {
+            if !out.contains(&e.field.as_str()) {
+                out.push(&e.field);
+            }
+        }
+        out
+    }
+
+    /// Chunk counts per pipeline name (sorted by name).
+    pub fn per_pipeline(&self) -> Vec<(String, usize)> {
+        let mut map = std::collections::BTreeMap::new();
+        for e in &self.entries {
+            *map.entry(e.pipeline.clone()).or_insert(0usize) += 1;
+        }
+        map.into_iter().collect()
+    }
+}
+
+/// Pack ordered coordinator chunks into a container artifact.
+///
+/// All chunks of a field must carry the same `field_dims`/`chunk_count`
+/// (the coordinator guarantees this); ordering within the buffer is free
+/// since decompression sorts by `chunk_index`.
+pub fn pack(chunks: &[CompressedChunk]) -> Result<Vec<u8>> {
+    // Reject chunk sets that could never decode — duplicate chunk indices
+    // (two source fields sharing a name) or a count that disagrees with
+    // the declared chunk_count — instead of emitting a poison artifact.
+    let mut fields: Vec<&str> = Vec::new();
+    let mut seen: std::collections::HashMap<&str, (usize, Vec<bool>)> =
+        std::collections::HashMap::new();
+    for c in chunks {
+        if !fields.contains(&c.field.as_str()) {
+            fields.push(&c.field);
+        }
+        let (count, got) = seen
+            .entry(&c.field)
+            .or_insert_with(|| (c.chunk_count, vec![false; c.chunk_count]));
+        if c.chunk_count != *count || c.chunk_index >= *count {
+            return Err(SzError::config(format!(
+                "field '{}': chunk {}/{} disagrees with count {count}",
+                c.field, c.chunk_index, c.chunk_count
+            )));
+        }
+        if std::mem::replace(&mut got[c.chunk_index], true) {
+            return Err(SzError::config(format!(
+                "field '{}': duplicate chunk index {} (two source fields \
+                 with the same name?)",
+                c.field, c.chunk_index
+            )));
+        }
+    }
+    for (name, (count, got)) in &seen {
+        if got.iter().filter(|&&g| g).count() != *count {
+            return Err(SzError::config(format!(
+                "field '{name}': packed {} of {count} chunks",
+                got.iter().filter(|&&g| g).count()
+            )));
+        }
+    }
+    let mut w = ByteWriter::new();
+    w.put_bytes(CONTAINER_MAGIC);
+    w.put_u8(VERSION);
+    w.put_varint(chunks.len() as u64);
+    w.put_varint(fields.len() as u64);
+    let mut offset = 0usize;
+    for c in chunks {
+        w.put_str(&c.field);
+        w.put_varint(c.chunk_index as u64);
+        w.put_varint(c.chunk_count as u64);
+        w.put_varint(c.rows.0 as u64);
+        w.put_varint(c.rows.1 as u64);
+        w.put_varint(c.field_dims.len() as u64);
+        for &d in &c.field_dims {
+            w.put_varint(d as u64);
+        }
+        w.put_str(&c.pipeline);
+        w.put_varint(offset as u64);
+        w.put_varint(c.stream.len() as u64);
+        offset += c.stream.len();
+    }
+    w.put_varint(offset as u64);
+    for c in chunks {
+        w.put_bytes(&c.stream);
+    }
+    Ok(w.finish())
+}
+
+/// Parse and validate the chunk index; returns the index and the payload.
+pub fn read_index(stream: &[u8]) -> Result<(ContainerIndex, &[u8])> {
+    let mut r = ByteReader::new(stream);
+    let magic = r.get_bytes(4)?;
+    if magic != CONTAINER_MAGIC {
+        return Err(SzError::corrupt("bad container magic"));
+    }
+    let ver = r.get_u8()?;
+    if ver != VERSION {
+        return Err(SzError::corrupt(format!("unsupported container version {ver}")));
+    }
+    let n_chunks = r.get_varint()? as usize;
+    // Every entry consumes ≥ 1 byte, so the remaining length bounds the
+    // plausible entry count — reject before growing any allocation.
+    if n_chunks > r.remaining() {
+        return Err(SzError::corrupt(format!(
+            "chunk count {n_chunks} exceeds container size"
+        )));
+    }
+    let _n_fields = r.get_varint()?;
+    let mut entries = Vec::new();
+    for _ in 0..n_chunks {
+        let field = r.get_str()?;
+        let chunk_index = r.get_varint()? as usize;
+        let chunk_count = r.get_varint()? as usize;
+        let row_start = r.get_varint()? as usize;
+        let row_end = r.get_varint()? as usize;
+        let nd = r.get_varint()? as usize;
+        if nd == 0 || nd > crate::data::shape::MAX_DIMS {
+            return Err(SzError::corrupt(format!(
+                "index dim count {nd} outside 1..={}",
+                crate::data::shape::MAX_DIMS
+            )));
+        }
+        let mut field_dims = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            field_dims.push(r.get_varint()? as usize);
+        }
+        let pipeline = r.get_str()?;
+        let offset = r.get_varint()? as usize;
+        let len = r.get_varint()? as usize;
+        if chunk_count == 0 || chunk_index >= chunk_count {
+            return Err(SzError::corrupt(format!(
+                "chunk index {chunk_index} outside count {chunk_count}"
+            )));
+        }
+        if row_start >= row_end || row_end > field_dims[0] {
+            return Err(SzError::corrupt(format!(
+                "row range [{row_start}, {row_end}) invalid for {} rows",
+                field_dims[0]
+            )));
+        }
+        entries.push(ChunkEntry {
+            field,
+            chunk_index,
+            chunk_count,
+            rows: (row_start, row_end),
+            field_dims,
+            pipeline,
+            offset,
+            len,
+        });
+    }
+    let payload_len = r.get_varint()? as usize;
+    let payload = r.get_bytes(payload_len)?;
+    for e in &entries {
+        let end = e
+            .offset
+            .checked_add(e.len)
+            .ok_or_else(|| SzError::corrupt("chunk extent overflows"))?;
+        if end > payload.len() {
+            return Err(SzError::corrupt(format!(
+                "chunk [{}..{end}) outside payload of {} bytes",
+                e.offset,
+                payload.len()
+            )));
+        }
+    }
+    Ok((ContainerIndex { entries }, payload))
+}
+
+/// Decompress a container: fan chunks out across `workers` threads (each
+/// chunk dispatched on its index pipeline, cross-checked against the inner
+/// stream header), then reassemble fields with shape verification.
+/// Fields are returned in order of first appearance in the index.
+pub fn decompress_container(stream: &[u8], workers: usize) -> Result<Vec<Field>> {
+    let (index, payload) = read_index(stream)?;
+    decompress_indexed(&index, payload, workers)
+}
+
+/// Decompress a container whose exactly-one field is wanted (the
+/// [`crate::pipeline::decompress_any`] path); parses the index once for
+/// both the field-count check and the decode.
+pub fn decompress_single_field(stream: &[u8], workers: usize) -> Result<Field> {
+    let (index, payload) = read_index(stream)?;
+    let n = index.field_names().len();
+    if n != 1 {
+        return Err(SzError::config(format!(
+            "container holds {n} fields; use container::decompress_container"
+        )));
+    }
+    decompress_indexed(&index, payload, workers)?
+        .pop()
+        .ok_or_else(|| SzError::corrupt("container decoded no fields"))
+}
+
+fn decompress_indexed(
+    index: &ContainerIndex,
+    payload: &[u8],
+    workers: usize,
+) -> Result<Vec<Field>> {
+    let n = index.entries.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+
+    // parallel fan-out: workers pull entry indices from a shared counter
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<Result<Field>>>> = Mutex::new((0..n).map(|_| None).collect());
+    let decode_one = |e: &ChunkEntry| -> Result<Field> {
+        let chunk_stream = &payload[e.offset..e.offset + e.len];
+        let compressor = pipeline::by_name(&e.pipeline).ok_or_else(|| {
+            SzError::corrupt(format!("unknown pipeline '{}' in chunk index", e.pipeline))
+        })?;
+        let header = pipeline::peek_header(chunk_stream)?;
+        if header.pipeline != e.pipeline {
+            return Err(SzError::corrupt(format!(
+                "index pipeline '{}' disagrees with stream header '{}'",
+                e.pipeline, header.pipeline
+            )));
+        }
+        let field = compressor.decompress(chunk_stream)?;
+        let mut expect = e.field_dims.clone();
+        expect[0] = e.rows.1 - e.rows.0;
+        if field.shape.dims() != expect.as_slice() {
+            return Err(SzError::corrupt(format!(
+                "chunk {} of {}: decoded dims {:?}, index says {:?}",
+                e.chunk_index,
+                e.field,
+                field.shape.dims(),
+                expect
+            )));
+        }
+        Ok(field)
+    };
+    let pool = workers.clamp(1, n);
+    std::thread::scope(|s| {
+        for _ in 0..pool {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = decode_one(&index.entries[i]);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    let decoded: Vec<Field> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|slot| slot.expect("every slot filled by the pool"))
+        .collect::<Result<_>>()?;
+
+    // group (entry, field) pairs per field, in order of first appearance
+    let names: Vec<String> =
+        index.field_names().into_iter().map(str::to_string).collect();
+    let mut out = Vec::with_capacity(names.len());
+    for name in names {
+        let mut parts: Vec<(&ChunkEntry, &Field)> = index
+            .entries
+            .iter()
+            .zip(&decoded)
+            .filter(|(e, _)| e.field == name)
+            .collect();
+        parts.sort_by_key(|(e, _)| e.chunk_index);
+        out.push(stitch(&name, &parts)?);
+    }
+    Ok(out)
+}
+
+/// Reassemble one field from its decoded chunks, verifying the index is
+/// internally consistent (count, dims agreement, contiguous row coverage).
+fn stitch(name: &str, parts: &[(&ChunkEntry, &Field)]) -> Result<Field> {
+    let (first, _) = parts[0];
+    if parts.len() != first.chunk_count {
+        return Err(SzError::corrupt(format!(
+            "field {name}: have {} of {} chunks",
+            parts.len(),
+            first.chunk_count
+        )));
+    }
+    let dims = first.field_dims.clone();
+    let mut next_row = 0usize;
+    for (i, (e, _)) in parts.iter().enumerate() {
+        if e.chunk_index != i || e.field_dims != dims || e.chunk_count != first.chunk_count {
+            return Err(SzError::corrupt(format!(
+                "field {name}: inconsistent chunk metadata at {i}"
+            )));
+        }
+        if e.rows.0 != next_row {
+            return Err(SzError::corrupt(format!(
+                "field {name}: row gap at chunk {i} (expected start {next_row}, got {})",
+                e.rows.0
+            )));
+        }
+        next_row = e.rows.1;
+    }
+    if next_row != dims[0] {
+        return Err(SzError::corrupt(format!(
+            "field {name}: chunks cover {next_row} of {} rows",
+            dims[0]
+        )));
+    }
+    let values = FieldValues::concat(parts.iter().map(|(_, f)| &f.values))?;
+    // Field::new re-verifies dims-vs-values agreement (shape verification)
+    Field::new(name, &dims, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::JobConfig;
+    use crate::coordinator::Coordinator;
+    use crate::pipeline::ErrorBound;
+    use crate::util::{prop, rng::Pcg32};
+
+    fn sample_chunks(n_fields: usize) -> Vec<CompressedChunk> {
+        let cfg = JobConfig {
+            pipeline: "sz3-lr".into(),
+            bound: ErrorBound::Abs(1e-3),
+            workers: 2,
+            chunk_elems: 512, // 3 rows of 12x12 per chunk -> 4 chunks per field
+            queue_depth: 2,
+            ..Default::default()
+        };
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let mut rng = Pcg32::seeded(91);
+        let fields: Vec<Field> = (0..n_fields)
+            .map(|i| {
+                let dims = [10usize, 12, 12];
+                Field::f32(format!("f{i}"), &dims, prop::smooth_field(&mut rng, &dims))
+                    .unwrap()
+            })
+            .collect();
+        let mut chunks = Vec::new();
+        coord.run(fields, |c| chunks.push(c)).unwrap();
+        chunks
+    }
+
+    #[test]
+    fn index_roundtrips() {
+        let chunks = sample_chunks(2);
+        let packed = pack(&chunks).unwrap();
+        assert!(is_container(&packed));
+        let (index, payload) = read_index(&packed).unwrap();
+        assert_eq!(index.entries.len(), chunks.len());
+        assert_eq!(index.field_names(), vec!["f0", "f1"]);
+        let total: usize = chunks.iter().map(|c| c.stream.len()).sum();
+        assert_eq!(payload.len(), total);
+        for (e, c) in index.entries.iter().zip(&chunks) {
+            assert_eq!(e.field, c.field);
+            assert_eq!(e.rows, c.rows);
+            assert_eq!(e.pipeline, c.pipeline);
+            assert_eq!(&payload[e.offset..e.offset + e.len], &c.stream[..]);
+        }
+    }
+
+    #[test]
+    fn container_decompress_matches_per_chunk_decode() {
+        let chunks = sample_chunks(2);
+        let packed = pack(&chunks).unwrap();
+        let fields = decompress_container(&packed, 4).unwrap();
+        assert_eq!(fields.len(), 2);
+        for f in &fields {
+            assert_eq!(f.shape.dims(), &[10, 12, 12]);
+        }
+    }
+
+    #[test]
+    fn empty_container_roundtrips() {
+        let packed = pack(&[]).unwrap();
+        assert!(decompress_container(&packed, 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn corrupt_containers_error_not_panic() {
+        let chunks = sample_chunks(1);
+        let packed = pack(&chunks).unwrap();
+        // truncations at many offsets
+        for cut in [4usize, 6, packed.len() / 3, packed.len() - 2] {
+            let r = std::panic::catch_unwind(|| decompress_container(&packed[..cut], 2));
+            match r {
+                Ok(Err(_)) => {}
+                Ok(Ok(_)) => panic!("truncated container decoded (cut={cut})"),
+                Err(_) => panic!("panic on truncated container (cut={cut})"),
+            }
+        }
+        // adversarial chunk count
+        let mut bad = packed.clone();
+        bad[5] = 0xff; // first byte of the chunk-count varint
+        bad[6] = 0xff;
+        let r = std::panic::catch_unwind(|| decompress_container(&bad, 2));
+        assert!(matches!(r, Ok(Err(_))), "huge chunk count must error cleanly");
+    }
+
+    #[test]
+    fn incomplete_or_colliding_chunk_sets_rejected_at_pack() {
+        let mut chunks = sample_chunks(1);
+        assert!(chunks.len() > 1, "need multiple chunks");
+        // missing chunk: the artifact could never decode, refuse to emit it
+        let dropped = chunks.pop().unwrap();
+        let err = pack(&chunks).unwrap_err();
+        assert!(err.to_string().contains("chunks"), "{err}");
+        // duplicate chunk index (two source fields sharing a name)
+        chunks.push(dropped.clone());
+        chunks.push(dropped);
+        let err = pack(&chunks).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn missing_chunk_detected_on_decode() {
+        // hand-craft an index claiming 4 chunks but carrying only the
+        // first, bypassing pack()'s validation: stitch() must refuse
+        let c = sample_chunks(1).remove(0);
+        assert_eq!((c.chunk_count, c.rows), (4, (0, 3)));
+        let mut w = ByteWriter::new();
+        w.put_bytes(CONTAINER_MAGIC);
+        w.put_u8(1);
+        w.put_varint(1); // one entry…
+        w.put_varint(1);
+        w.put_str(&c.field);
+        w.put_varint(c.chunk_index as u64);
+        w.put_varint(c.chunk_count as u64); // …of a declared four
+        w.put_varint(c.rows.0 as u64);
+        w.put_varint(c.rows.1 as u64);
+        w.put_varint(c.field_dims.len() as u64);
+        for &d in &c.field_dims {
+            w.put_varint(d as u64);
+        }
+        w.put_str(&c.pipeline);
+        w.put_varint(0);
+        w.put_varint(c.stream.len() as u64);
+        w.put_varint(c.stream.len() as u64);
+        w.put_bytes(&c.stream);
+        let err = decompress_container(&w.finish(), 2).unwrap_err();
+        assert!(err.to_string().contains("chunks"), "{err}");
+    }
+}

@@ -17,11 +17,19 @@
 //! * **Rebalancing**: workers pull from the shared queue (work stealing),
 //!   so a slow shard doesn't idle the pool; per-worker counters expose the
 //!   achieved balance.
-//! * Decompression reverses chunking and verifies shapes.
+//! * **Adaptive selection**: with a [`AdaptiveChunkSelector`] installed,
+//!   each worker picks the best-fit registry pipeline per chunk (paper §3
+//!   contribution 2 at chunk granularity); the choice is recorded on the
+//!   chunk and lands in the container index.
+//! * [`Coordinator::run_to_container`] packs the ordered chunks into the
+//!   self-describing `SZ3C` artifact; [`crate::container`] fans it back
+//!   out for parallel decompression with shape verification.
 
+use crate::container::{self, AdaptiveChunkSelector};
 use crate::data::{Field, FieldValues};
 use crate::error::{Result, SzError};
 use crate::pipeline::{self, CompressConf, Compressor};
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
@@ -42,6 +50,9 @@ pub struct CompressedChunk {
     pub rows: (usize, usize),
     /// Full field dims.
     pub field_dims: Vec<usize>,
+    /// Registry pipeline that compressed this chunk (fixed or adaptively
+    /// selected); recorded in the container index for per-chunk dispatch.
+    pub pipeline: String,
     /// The compressed stream.
     pub stream: Vec<u8>,
     /// Uncompressed bytes of this chunk.
@@ -65,6 +76,8 @@ pub struct RunReport {
     pub producer_blocked: Duration,
     /// Chunks compressed per worker (work-stealing balance).
     pub per_worker: Vec<usize>,
+    /// Chunks per pipeline name (interesting under adaptive selection).
+    pub per_pipeline: BTreeMap<String, usize>,
 }
 
 impl RunReport {
@@ -94,15 +107,30 @@ impl std::fmt::Display for RunReport {
             self.throughput_mbs(),
             self.producer_blocked,
             self.per_worker
-        )
+        )?;
+        if self.per_pipeline.len() > 1 {
+            write!(f, " pipelines {:?}", self.per_pipeline)?;
+        }
+        Ok(())
     }
 }
 
 /// Shard planner: split a field into row ranges of ~`chunk_elems`.
-pub fn plan_chunks(field: &Field, chunk_elems: usize) -> Vec<(usize, usize)> {
+/// Degenerate shapes (no axes, zero-length rows) are rejected instead of
+/// panicking on the unchecked `dims[0]` access this used to do.
+pub fn plan_chunks(field: &Field, chunk_elems: usize) -> Result<Vec<(usize, usize)>> {
     let dims = field.shape.dims();
-    let row_elems: usize = dims[1..].iter().product::<usize>().max(1);
+    if dims.is_empty() {
+        return Err(SzError::config("cannot chunk a 0-dimensional field"));
+    }
     let rows = dims[0];
+    let row_elems: usize = dims[1..].iter().product::<usize>().max(1);
+    if rows == 0 || row_elems == 0 || field.len() == 0 {
+        return Err(SzError::config(format!(
+            "cannot chunk empty field '{}' with dims {dims:?}",
+            field.name
+        )));
+    }
     let rows_per_chunk = (chunk_elems / row_elems).clamp(1, rows);
     let mut out = Vec::new();
     let mut r = 0;
@@ -111,13 +139,18 @@ pub fn plan_chunks(field: &Field, chunk_elems: usize) -> Vec<(usize, usize)> {
         out.push((r, e));
         r = e;
     }
-    out
+    Ok(out)
 }
 
 fn slice_rows(field: &Field, rows: (usize, usize)) -> Result<Field> {
     let dims = field.shape.dims();
-    let row_elems: usize = dims[1..].iter().product::<usize>().max(1);
     let (start, end) = rows;
+    if dims.is_empty() || start >= end || end > dims[0] {
+        return Err(SzError::config(format!(
+            "row slice [{start}, {end}) invalid for dims {dims:?}"
+        )));
+    }
+    let row_elems: usize = dims[1..].iter().product::<usize>().max(1);
     let mut new_dims = dims.to_vec();
     new_dims[0] = end - start;
     let a = start * row_elems;
@@ -132,7 +165,7 @@ fn slice_rows(field: &Field, rows: (usize, usize)) -> Result<Field> {
 
 /// The streaming compression coordinator.
 pub struct Coordinator {
-    /// Pipeline registry name.
+    /// Pipeline registry name (the fixed pipeline when no selector is set).
     pub pipeline: String,
     /// Per-chunk compression configuration.
     pub conf: CompressConf,
@@ -145,6 +178,9 @@ pub struct Coordinator {
     /// Factory for per-worker compressor instances (lets callers inject a
     /// PJRT-backed pipeline; defaults to the registry).
     pub make_compressor: Arc<dyn Fn() -> Box<dyn Compressor> + Send + Sync>,
+    /// Per-chunk best-fit pipeline selection; when set, each worker picks a
+    /// registry pipeline per chunk instead of using `make_compressor`.
+    pub selector: Option<Arc<AdaptiveChunkSelector>>,
 }
 
 impl Coordinator {
@@ -153,6 +189,16 @@ impl Coordinator {
         let name = cfg.pipeline.clone();
         pipeline::by_name(&name)
             .ok_or_else(|| SzError::config(format!("unknown pipeline '{name}'")))?;
+        let selector = if cfg.adaptive {
+            let sel = if cfg.candidates.is_empty() {
+                AdaptiveChunkSelector::new()
+            } else {
+                AdaptiveChunkSelector::from_names(cfg.candidates.iter().cloned())?
+            };
+            Some(Arc::new(sel))
+        } else {
+            None
+        };
         let n2 = name.clone();
         Ok(Coordinator {
             pipeline: name,
@@ -161,6 +207,7 @@ impl Coordinator {
             chunk_elems: cfg.chunk_elems,
             queue_depth: cfg.queue_depth,
             make_compressor: Arc::new(move || pipeline::by_name(&n2).expect("validated")),
+            selector,
         })
     }
 
@@ -192,9 +239,14 @@ impl Coordinator {
             let tx = done_tx.clone();
             let conf = self.conf.clone();
             let make = Arc::clone(&self.make_compressor);
+            let selector = self.selector.clone();
             let counts = Arc::clone(&worker_counts);
             handles.push(std::thread::spawn(move || {
-                let compressor = make();
+                // fixed mode uses one compressor per worker; adaptive mode
+                // bypasses it, instantiating pipelines on demand into a
+                // per-worker cache so repeated selections reuse the instance
+                let compressor = if selector.is_none() { Some(make()) } else { None };
+                let mut cache: HashMap<String, Box<dyn Compressor>> = HashMap::new();
                 loop {
                     let job = match rx.lock().unwrap().recv() {
                         Ok(j) => j,
@@ -202,7 +254,25 @@ impl Coordinator {
                     };
                     let result = slice_rows(&job.field, job.rows).and_then(|chunk| {
                         let raw = chunk.nbytes();
-                        let stream = compressor.compress(&chunk, &conf)?;
+                        let (stream, used) = match &selector {
+                            Some(sel) => {
+                                let name = sel.select(&chunk, &conf)?.pipeline;
+                                if !cache.contains_key(&name) {
+                                    let c = pipeline::by_name(&name).ok_or_else(|| {
+                                        SzError::config(format!(
+                                            "selector chose unknown pipeline '{name}'"
+                                        ))
+                                    })?;
+                                    cache.insert(name.clone(), c);
+                                }
+                                (cache[&name].compress(&chunk, &conf)?, name)
+                            }
+                            None => {
+                                let c =
+                                    compressor.as_ref().expect("fixed-mode compressor");
+                                (c.compress(&chunk, &conf)?, c.name().to_string())
+                            }
+                        };
                         Ok(CompressedChunk {
                             seq: job.seq,
                             field: job.field.name.clone(),
@@ -210,6 +280,7 @@ impl Coordinator {
                             chunk_count: job.chunk_count,
                             rows: job.rows,
                             field_dims: job.field.shape.dims().to_vec(),
+                            pipeline: used,
                             stream,
                             raw_bytes: raw,
                         })
@@ -226,13 +297,12 @@ impl Coordinator {
         // producer + ordered sink on this thread: interleave submissions
         // with draining the done queue (reorder buffer keyed by seq).
         let mut report = RunReport { per_worker: vec![0; self.workers], ..Default::default() };
-        let mut pending: std::collections::BTreeMap<usize, CompressedChunk> =
-            std::collections::BTreeMap::new();
+        let mut pending: BTreeMap<usize, CompressedChunk> = BTreeMap::new();
         let mut next_deliver = 0usize;
         let mut first_err: Option<SzError> = None;
 
         let deliver =
-            |pending: &mut std::collections::BTreeMap<usize, CompressedChunk>,
+            |pending: &mut BTreeMap<usize, CompressedChunk>,
              next: &mut usize,
              report: &mut RunReport,
              sink: &mut S| {
@@ -240,6 +310,7 @@ impl Coordinator {
                     report.chunks += 1;
                     report.bytes_in += chunk.raw_bytes as u64;
                     report.bytes_out += chunk.stream.len() as u64;
+                    *report.per_pipeline.entry(chunk.pipeline.clone()).or_insert(0) += 1;
                     sink(chunk);
                     *next += 1;
                 }
@@ -249,7 +320,13 @@ impl Coordinator {
         for field in source {
             report.fields += 1;
             let field = Arc::new(field);
-            let chunks = plan_chunks(&field, self.chunk_elems);
+            let chunks = match plan_chunks(&field, self.chunk_elems) {
+                Ok(c) => c,
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                    break;
+                }
+            };
             let count = chunks.len();
             for (ci, rows) in chunks.into_iter().enumerate() {
                 let job = Job {
@@ -305,6 +382,20 @@ impl Coordinator {
         report.elapsed = started.elapsed();
         Ok(report)
     }
+
+    /// Stream `source` through the pool and pack the ordered chunks into a
+    /// self-describing `SZ3C` container (the coordinator's native artifact;
+    /// see [`crate::container`] for the format and the parallel
+    /// decompression path).
+    pub fn run_to_container<I>(&self, source: I) -> Result<(Vec<u8>, RunReport)>
+    where
+        I: IntoIterator<Item = Field>,
+    {
+        let mut chunks: Vec<CompressedChunk> = Vec::new();
+        let report = self.run(source, |c| chunks.push(c))?;
+        let artifact = container::pack(&chunks)?;
+        Ok((artifact, report))
+    }
 }
 
 /// Reassemble a field from its ordered chunks (inverse of the chunker).
@@ -327,38 +418,7 @@ pub fn reassemble(chunks: &[CompressedChunk]) -> Result<Field> {
     for c in &sorted {
         fields.push(pipeline::decompress_any(&c.stream)?);
     }
-    let values = match &fields[0].values {
-        FieldValues::F32(_) => {
-            let mut v = Vec::new();
-            for f in &fields {
-                match &f.values {
-                    FieldValues::F32(x) => v.extend_from_slice(x),
-                    _ => return Err(SzError::corrupt("mixed chunk dtypes")),
-                }
-            }
-            FieldValues::F32(v)
-        }
-        FieldValues::F64(_) => {
-            let mut v = Vec::new();
-            for f in &fields {
-                match &f.values {
-                    FieldValues::F64(x) => v.extend_from_slice(x),
-                    _ => return Err(SzError::corrupt("mixed chunk dtypes")),
-                }
-            }
-            FieldValues::F64(v)
-        }
-        FieldValues::I32(_) => {
-            let mut v = Vec::new();
-            for f in &fields {
-                match &f.values {
-                    FieldValues::I32(x) => v.extend_from_slice(x),
-                    _ => return Err(SzError::corrupt("mixed chunk dtypes")),
-                }
-            }
-            FieldValues::I32(v)
-        }
-    };
+    let values = FieldValues::concat(fields.iter().map(|f| &f.values))?;
     Field::new(sorted[0].field.clone(), &full_dims, values)
 }
 
@@ -400,9 +460,11 @@ mod tests {
         let report = coord.run(input.clone(), |c| chunks.push(c)).unwrap();
         assert_eq!(report.fields, 3);
         assert_eq!(report.chunks, chunks.len());
+        assert_eq!(report.per_pipeline.get("sz3-lr"), Some(&chunks.len()));
         // in-order delivery
         for (i, c) in chunks.iter().enumerate() {
             assert_eq!(c.seq, i);
+            assert_eq!(c.pipeline, "sz3-lr");
         }
         // reassemble and verify bound per field
         let mut by_field: HashMap<String, Vec<CompressedChunk>> = HashMap::new();
@@ -441,7 +503,7 @@ mod tests {
     #[test]
     fn plan_chunks_covers_rows() {
         let f = fields(1, 14).remove(0);
-        let plan = plan_chunks(&f, 1000);
+        let plan = plan_chunks(&f, 1000).unwrap();
         assert_eq!(plan.first().unwrap().0, 0);
         assert_eq!(plan.last().unwrap().1, f.shape.dims()[0]);
         for w in plan.windows(2) {
@@ -453,5 +515,32 @@ mod tests {
     fn unknown_pipeline_rejected() {
         let cfg = crate::config::JobConfig { pipeline: "nope".into(), ..Default::default() };
         assert!(Coordinator::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn adaptive_config_validates_candidates() {
+        let cfg = crate::config::JobConfig {
+            adaptive: true,
+            candidates: vec!["sz3-lr".into(), "bogus".into()],
+            ..Default::default()
+        };
+        assert!(Coordinator::from_config(&cfg).is_err());
+        let cfg = crate::config::JobConfig { adaptive: true, ..Default::default() };
+        assert!(Coordinator::from_config(&cfg).unwrap().selector.is_some());
+    }
+
+    #[test]
+    fn run_to_container_roundtrips() {
+        let coord = coordinator("sz3-lr", 2);
+        let input = fields(2, 15);
+        let (artifact, report) = coord.run_to_container(input.clone()).unwrap();
+        assert!(crate::container::is_container(&artifact));
+        assert_eq!(report.fields, 2);
+        let out = crate::container::decompress_container(&artifact, 4).unwrap();
+        assert_eq!(out.len(), 2);
+        for (f, o) in input.iter().zip(&out) {
+            assert_eq!(f.shape.dims(), o.shape.dims());
+            assert_eq!(f.name, o.name);
+        }
     }
 }

@@ -57,6 +57,28 @@ impl FieldValues {
             FieldValues::I32(v) => v.iter().map(|&x| x as f64).collect(),
         }
     }
+
+    /// Concatenate same-dtype value buffers in order (the chunk-reassembly
+    /// path shared by `coordinator::reassemble` and the container format).
+    pub fn concat<'a, I>(parts: I) -> Result<FieldValues>
+    where
+        I: IntoIterator<Item = &'a FieldValues>,
+    {
+        let mut it = parts.into_iter();
+        let first = it
+            .next()
+            .ok_or_else(|| SzError::config("no values to concatenate"))?;
+        let mut out = first.clone();
+        for p in it {
+            match (&mut out, p) {
+                (FieldValues::F32(v), FieldValues::F32(x)) => v.extend_from_slice(x),
+                (FieldValues::F64(v), FieldValues::F64(x)) => v.extend_from_slice(x),
+                (FieldValues::I32(v), FieldValues::I32(x)) => v.extend_from_slice(x),
+                _ => return Err(SzError::corrupt("mixed chunk dtypes")),
+            }
+        }
+        Ok(out)
+    }
 }
 
 /// A named multidimensional array of scalars.

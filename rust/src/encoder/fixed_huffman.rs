@@ -82,6 +82,14 @@ impl Encoder for FixedHuffmanEncoder {
         let lens = table.as_ref().map(|t| &t.lens).unwrap_or(&self.lens);
         let dec = CanonicalDecoder::from_lengths(lens)?;
         let payload = r.get_block()?;
+        // canonical codes are ≥ 1 bit each (see huffman.rs): bound the
+        // requested symbol count by the payload bits before allocating
+        if n > payload.len().saturating_mul(8) {
+            return Err(SzError::corrupt(format!(
+                "{n} symbols exceed {}-byte huffman payload",
+                payload.len()
+            )));
+        }
         let mut br = BitReader::new(payload);
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {

@@ -263,6 +263,15 @@ impl Encoder for HuffmanEncoder {
         let lens = load_lengths(r)?;
         let dec = CanonicalDecoder::from_lengths(&lens)?;
         let payload = r.get_block()?;
+        // every canonical code is ≥ 1 bit, so a corrupt header demanding
+        // more symbols than the payload has bits is rejected before the
+        // output allocation is sized from it
+        if n > payload.len().saturating_mul(8) {
+            return Err(SzError::corrupt(format!(
+                "{n} symbols exceed {}-byte huffman payload",
+                payload.len()
+            )));
+        }
         let mut br = BitReader::new(payload);
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {

@@ -1,28 +1,50 @@
 //! Error types for the SZ3 framework.
-
-use thiserror::Error;
+//!
+//! Hand-rolled `Display`/`Error` impls (thiserror is unavailable offline).
 
 /// Unified error type for compression, decompression and runtime failures.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum SzError {
     /// The compressed stream is malformed or truncated.
-    #[error("corrupt stream: {0}")]
     Corrupt(String),
     /// A pipeline was configured with incompatible modules or parameters.
-    #[error("invalid configuration: {0}")]
     Config(String),
     /// Data shape does not match what the pipeline expects.
-    #[error("shape mismatch: {0}")]
     Shape(String),
     /// Underlying lossless backend failed.
-    #[error("lossless backend: {0}")]
     Lossless(String),
     /// PJRT/XLA runtime failure (artifact load, compile, execute).
-    #[error("runtime: {0}")]
     Runtime(String),
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for SzError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SzError::Corrupt(m) => write!(f, "corrupt stream: {m}"),
+            SzError::Config(m) => write!(f, "invalid configuration: {m}"),
+            SzError::Shape(m) => write!(f, "shape mismatch: {m}"),
+            SzError::Lossless(m) => write!(f, "lossless backend: {m}"),
+            SzError::Runtime(m) => write!(f, "runtime: {m}"),
+            SzError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for SzError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SzError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SzError {
+    fn from(e: std::io::Error) -> Self {
+        SzError::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -36,5 +58,22 @@ impl SzError {
     /// Helper for configuration errors.
     pub fn config(msg: impl Into<String>) -> Self {
         SzError::Config(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        assert_eq!(SzError::corrupt("bad magic").to_string(), "corrupt stream: bad magic");
+        assert_eq!(SzError::config("no").to_string(), "invalid configuration: no");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let e: SzError = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

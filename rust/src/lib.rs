@@ -39,6 +39,7 @@ pub mod bitio;
 pub mod byteio;
 pub mod cli;
 pub mod config;
+pub mod container;
 pub mod coordinator;
 pub mod data;
 pub mod datagen;

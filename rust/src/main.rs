@@ -1,17 +1,25 @@
-//! `sz3` — leader binary: compress/decompress files, stream synthetic
-//! datasets through the coordinator, inspect streams, and run the
-//! paper-figure harness subcommands.
+//! `sz3` — leader binary: compress/decompress files and chunked
+//! containers, stream synthetic datasets through the coordinator, inspect
+//! streams, and run the paper-figure harness subcommands.
 
-use anyhow::{anyhow, bail, Context, Result};
 use std::io::Write;
 use std::path::Path;
 use std::sync::Arc;
 use sz3::cli::Args;
 use sz3::config::JobConfig;
+use sz3::container;
 use sz3::coordinator::Coordinator;
 use sz3::data::{Field, FieldValues};
 use sz3::pipeline::{self, CompressConf, ErrorBound, PastriCompressor};
 use sz3::runtime::{PjrtAnalyzer, PjrtEngine, PjrtService};
+
+/// CLI-level result (anyhow is unavailable offline; `SzError`, I/O and
+/// parse errors all box into the common error object).
+type CliResult<T = ()> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+fn err(msg: String) -> Box<dyn std::error::Error> {
+    msg.into()
+}
 
 const USAGE: &str = "\
 sz3 — modular prediction-based error-bounded lossy compression (SZ3 reproduction)
@@ -19,26 +27,31 @@ sz3 — modular prediction-based error-bounded lossy compression (SZ3 reproducti
 USAGE:
   sz3 compress   --input raw.bin --dims 100,500,500 --dtype f32
                  [--pipeline sz3-lr] [--abs EB | --rel EB | --pwrel EB]
-                 [--radius N] --out file.sz3
-  sz3 decompress --input file.sz3 --out raw.bin
+                 [--radius N] [--container] [--adaptive]
+                 [--candidates a,b,c] [--chunk-elems N] [--workers N]
+                 --out file.sz3
+  sz3 decompress --input file.sz3 --out raw.bin [--workers N]
   sz3 info       --input file.sz3
   sz3 serve      [--config job.json] [--dataset nyx|all] [--out dir]
+                 [--container] [--adaptive]
   sz3 datasets                              # Table 3 registry
   sz3 pipelines                             # registry names
   sz3 quant-hist [--field ff|ff] [--eb 1e-10] [--radius 64]   # Fig. 3
   sz3 version
 
-Raw input files are flat little-endian arrays of --dtype covering --dims.";
+Raw input files are flat little-endian arrays of --dtype covering --dims.
+--container packs coordinator chunks into one SZ3C artifact; --adaptive
+picks the best-fit pipeline per chunk (recorded in the chunk index).";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(args) {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
 
-fn parse_bound(a: &Args) -> Result<ErrorBound> {
+fn parse_bound(a: &Args) -> CliResult<ErrorBound> {
     if let Some(v) = a.get("abs") {
         return Ok(ErrorBound::Abs(v.parse()?));
     }
@@ -51,51 +64,56 @@ fn parse_bound(a: &Args) -> Result<ErrorBound> {
     Ok(ErrorBound::Rel(1e-3))
 }
 
-fn read_raw_field(path: &str, dims: &[usize], dtype: &str, name: &str) -> Result<Field> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+fn read_raw_field(path: &str, dims: &[usize], dtype: &str, name: &str) -> CliResult<Field> {
+    let bytes =
+        std::fs::read(path).map_err(|e| err(format!("reading {path}: {e}")))?;
     let n: usize = dims.iter().product();
+    let expect = |size: usize| -> CliResult<()> {
+        if bytes.len() != n * size {
+            return Err(err(format!(
+                "{path}: expected {} bytes for {dtype} {dims:?}, found {}",
+                n * size,
+                bytes.len()
+            )));
+        }
+        Ok(())
+    };
     let values = match dtype {
         "f32" => {
-            if bytes.len() != n * 4 {
-                bail!("{path}: expected {} bytes for f32 {:?}, found {}", n * 4, dims, bytes.len());
-            }
+            expect(4)?;
             FieldValues::F32(
                 bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
             )
         }
         "f64" => {
-            if bytes.len() != n * 8 {
-                bail!("{path}: expected {} bytes for f64 {:?}, found {}", n * 8, dims, bytes.len());
-            }
+            expect(8)?;
             FieldValues::F64(
                 bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
             )
         }
         "i32" => {
-            if bytes.len() != n * 4 {
-                bail!("{path}: expected {} bytes for i32 {:?}, found {}", n * 4, dims, bytes.len());
-            }
+            expect(4)?;
             FieldValues::I32(
                 bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
             )
         }
-        other => bail!("unsupported --dtype {other}"),
+        other => return Err(err(format!("unsupported --dtype {other}"))),
     };
     Ok(Field::new(name, dims, values)?)
 }
 
-fn write_raw_field(path: &str, field: &Field) -> Result<()> {
+fn write_raw_field(path: &str, field: &Field) -> CliResult {
     let mut out = Vec::with_capacity(field.nbytes());
     match &field.values {
         FieldValues::F32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
         FieldValues::F64(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
         FieldValues::I32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
     }
-    std::fs::write(path, out).with_context(|| format!("writing {path}"))?;
+    std::fs::write(path, out).map_err(|e| err(format!("writing {path}: {e}")))?;
     Ok(())
 }
 
-fn run(argv: Vec<String>) -> Result<()> {
+fn run(argv: Vec<String>) -> CliResult {
     let a = Args::parse(argv)?;
     match a.subcommand.as_str() {
         "compress" => cmd_compress(&a),
@@ -113,11 +131,45 @@ fn run(argv: Vec<String>) -> Result<()> {
             println!("{USAGE}");
             Ok(())
         }
-        other => Err(anyhow!("unknown subcommand '{other}'\n\n{USAGE}")),
+        other => Err(err(format!("unknown subcommand '{other}'\n\n{USAGE}"))),
     }
 }
 
-fn cmd_compress(a: &Args) -> Result<()> {
+/// Job config assembled from compress/serve flags (shared coordinator path).
+fn job_config_from_flags(a: &Args, pipeline: &str, bound: ErrorBound) -> CliResult<JobConfig> {
+    let mut cfg = JobConfig {
+        pipeline: pipeline.to_string(),
+        bound,
+        ..Default::default()
+    };
+    cfg.radius = a.get_or("radius", cfg.radius)?;
+    cfg.workers = a.get_or("workers", cfg.workers)?.max(1);
+    cfg.chunk_elems = a.get_or("chunk-elems", cfg.chunk_elems)?;
+    if cfg.chunk_elems < 1024 {
+        // reject rather than silently clamp: the chunk count drives the
+        // adaptive pipeline mix, so a quietly adjusted shard size would
+        // produce a different artifact than the user asked for
+        return Err(err(format!(
+            "--chunk-elems {} below the 1024-element minimum",
+            cfg.chunk_elems
+        )));
+    }
+    cfg.queue_depth = a.get_or("queue-depth", cfg.queue_depth)?.max(1);
+    cfg.adaptive = a.has("adaptive");
+    if let Some(c) = a.list("candidates") {
+        if c.is_empty() {
+            return Err(err(
+                "--candidates given but names no pipelines (e.g. --candidates sz3-lr,sz3-interp)"
+                    .to_string(),
+            ));
+        }
+        cfg.candidates = c;
+        cfg.adaptive = true;
+    }
+    Ok(cfg)
+}
+
+fn cmd_compress(a: &Args) -> CliResult {
     let dims = a.dims("dims")?;
     let dtype = a.get("dtype").unwrap_or("f32");
     let input = a.need("input")?;
@@ -125,31 +177,88 @@ fn cmd_compress(a: &Args) -> Result<()> {
     let pipeline_name = a.get("pipeline").unwrap_or("sz3-lr");
     let stem = Path::new(input).file_stem().and_then(|s| s.to_str()).unwrap_or("field");
     let field = read_raw_field(input, &dims, dtype, stem)?;
-    let conf = CompressConf::with_radius(parse_bound(a)?, a.get_or("radius", 32768u32)?);
-    let c = pipeline::by_name(pipeline_name)
-        .ok_or_else(|| anyhow!("unknown pipeline '{pipeline_name}' (see `sz3 pipelines`)"))?;
+    let raw_bytes = field.nbytes();
+    let bound = parse_bound(a)?;
     let t0 = std::time::Instant::now();
-    let stream = c.compress(&field, &conf)?;
+    let (stream, label) = if a.has("container") || a.has("adaptive") || a.get("candidates").is_some()
+    {
+        // coordinator path: shard + (optionally) per-chunk best-fit
+        // pipelines; the field moves in, so no second copy is held
+        let cfg = job_config_from_flags(a, pipeline_name, bound)?;
+        let coord = Coordinator::from_config(&cfg)?;
+        let (artifact, report) = coord.run_to_container(vec![field])?;
+        let label = if cfg.adaptive {
+            let mix: Vec<String> = report
+                .per_pipeline
+                .iter()
+                .map(|(p, n)| format!("{p}×{n}"))
+                .collect();
+            format!("container[{}]", mix.join(" "))
+        } else {
+            format!("container[{pipeline_name}×{}]", report.chunks)
+        };
+        (artifact, label)
+    } else {
+        let conf = CompressConf::with_radius(bound, a.get_or("radius", 32768u32)?);
+        let c = pipeline::by_name(pipeline_name).ok_or_else(|| {
+            err(format!("unknown pipeline '{pipeline_name}' (see `sz3 pipelines`)"))
+        })?;
+        (c.compress(&field, &conf)?, pipeline_name.to_string())
+    };
     let dt = t0.elapsed();
     std::fs::write(out, &stream)?;
-    let ratio = field.nbytes() as f64 / stream.len() as f64;
+    let ratio = raw_bytes as f64 / stream.len() as f64;
     println!(
         "{}: {} -> {} bytes (ratio {:.2}) in {:.2?} ({:.1} MB/s)",
-        pipeline_name,
-        field.nbytes(),
+        label,
+        raw_bytes,
         stream.len(),
         ratio,
         dt,
-        field.nbytes() as f64 / 1e6 / dt.as_secs_f64()
+        raw_bytes as f64 / 1e6 / dt.as_secs_f64()
     );
     Ok(())
 }
 
-fn cmd_decompress(a: &Args) -> Result<()> {
+fn cmd_decompress(a: &Args) -> CliResult {
     let input = a.need("input")?;
     let out = a.need("out")?;
     let stream = std::fs::read(input)?;
     let t0 = std::time::Instant::now();
+    if container::is_container(&stream) {
+        // symmetric with compress: --workers caps the decode fan-out too
+        let workers = a.get_or("workers", sz3::util::default_workers())?.max(1);
+        let fields = container::decompress_container(&stream, workers)?;
+        let dt = t0.elapsed();
+        let total: usize = fields.iter().map(Field::nbytes).sum();
+        match fields.len() {
+            1 => write_raw_field(out, &fields[0])?,
+            _ => {
+                // multi-field container: one raw file per field; sanitized
+                // names that collide ("ff|dd" vs "ff/dd") get an index
+                // suffix instead of silently overwriting each other
+                let mut used = std::collections::HashSet::new();
+                for (i, f) in fields.iter().enumerate() {
+                    let safe = f.name.replace(['|', '/'], "_");
+                    let path = if used.insert(safe.clone()) {
+                        format!("{out}.{safe}")
+                    } else {
+                        format!("{out}.{safe}.{i}")
+                    };
+                    write_raw_field(&path, f)?;
+                }
+            }
+        }
+        println!(
+            "container: {} fields, {} -> {} bytes in {:.2?} ({:.1} MB/s)",
+            fields.len(),
+            stream.len(),
+            total,
+            dt,
+            total as f64 / 1e6 / dt.as_secs_f64()
+        );
+        return Ok(());
+    }
     let field = pipeline::decompress_any(&stream)?;
     let dt = t0.elapsed();
     write_raw_field(out, &field)?;
@@ -165,8 +274,34 @@ fn cmd_decompress(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info(a: &Args) -> Result<()> {
+fn cmd_info(a: &Args) -> CliResult {
     let stream = std::fs::read(a.need("input")?)?;
+    if container::is_container(&stream) {
+        let (index, payload) = container::read_index(&stream)?;
+        println!(
+            "container: {} chunks, {} fields, payload {} bytes",
+            index.entries.len(),
+            index.field_names().len(),
+            payload.len()
+        );
+        for (p, n) in index.per_pipeline() {
+            println!("  pipeline {p}: {n} chunks");
+        }
+        for e in &index.entries {
+            println!(
+                "  {}[{}/{}] rows {}..{} dims {:?} via {} ({} bytes)",
+                e.field,
+                e.chunk_index + 1,
+                e.chunk_count,
+                e.rows.0,
+                e.rows.1,
+                e.field_dims,
+                e.pipeline,
+                e.len
+            );
+        }
+        return Ok(());
+    }
     let h = pipeline::peek_header(&stream)?;
     println!(
         "pipeline={} field={} dtype={} dims={:?} elems={} stream_bytes={}",
@@ -180,11 +315,14 @@ fn cmd_info(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(a: &Args) -> Result<()> {
-    let cfg = match a.get("config") {
+fn cmd_serve(a: &Args) -> CliResult {
+    let mut cfg = match a.get("config") {
         Some(path) => JobConfig::from_json(&std::fs::read_to_string(path)?)?,
         None => JobConfig::default(),
     };
+    if a.has("adaptive") {
+        cfg.adaptive = true;
+    }
     let dataset = a.get("dataset").unwrap_or("nyx");
     let seed = a.get_or("seed", 42u64)?;
     let sets = sz3::datagen::survey(seed);
@@ -194,29 +332,51 @@ fn cmd_serve(a: &Args) -> Result<()> {
         sets.into_iter().filter(|d| d.name == dataset).collect()
     };
     if selected.is_empty() {
-        bail!("unknown dataset '{dataset}' (see `sz3 datasets`)");
+        return Err(err(format!("unknown dataset '{dataset}' (see `sz3 datasets`)")));
     }
     let mut coord = Coordinator::from_config(&cfg)?;
-    // PJRT-backed analysis for the blockwise pipelines when requested.
-    if cfg.use_pjrt && (cfg.pipeline == "sz3-lr" || cfg.pipeline == "sz3-lr-s") {
+    // PJRT-backed analysis when requested: in adaptive mode the worker pool
+    // dispatches per chunk through the registry (make_compressor is
+    // bypassed), so PJRT backs the *selector's* block analysis instead of
+    // the fixed pipeline's — the log says which.
+    if cfg.use_pjrt
+        && (cfg.adaptive || cfg.pipeline == "sz3-lr" || cfg.pipeline == "sz3-lr-s")
+    {
         let dir = PjrtEngine::default_dir();
         if PjrtEngine::available(&dir) {
             let service = PjrtService::start(&dir)?;
-            eprintln!(
-                "using PJRT analysis engine ({}, dims {:?})",
-                service.platform, service.dims
-            );
-            let specialized = cfg.pipeline == "sz3-lr-s";
-            coord.make_compressor = Arc::new(move || {
-                let base = if specialized {
-                    pipeline::BlockCompressor::sz3_lr_s()
-                } else {
-                    pipeline::BlockCompressor::sz3_lr()
-                };
-                Box::new(
-                    base.with_analyzer(Arc::new(PjrtAnalyzer::new(service.clone()))),
-                )
-            });
+            if cfg.adaptive {
+                eprintln!(
+                    "using PJRT analysis engine for adaptive chunk selection ({}, dims {:?})",
+                    service.platform, service.dims
+                );
+                // rebuild the selector from_config installed, keeping its
+                // candidate set (single source of truth) but routing block
+                // analysis through PJRT
+                let base = coord.selector.take().expect("adaptive config sets a selector");
+                let sel = container::AdaptiveChunkSelector::from_names(
+                    base.candidates().iter().cloned(),
+                )?;
+                coord.selector = Some(Arc::new(
+                    sel.with_analyzer(Arc::new(PjrtAnalyzer::new(service))),
+                ));
+            } else {
+                eprintln!(
+                    "using PJRT analysis engine ({}, dims {:?})",
+                    service.platform, service.dims
+                );
+                let specialized = cfg.pipeline == "sz3-lr-s";
+                coord.make_compressor = Arc::new(move || {
+                    let base = if specialized {
+                        pipeline::BlockCompressor::sz3_lr_s()
+                    } else {
+                        pipeline::BlockCompressor::sz3_lr()
+                    };
+                    Box::new(
+                        base.with_analyzer(Arc::new(PjrtAnalyzer::new(service.clone()))),
+                    )
+                });
+            }
         } else {
             eprintln!("use_pjrt requested but no artifacts at {dir:?}; native analysis");
         }
@@ -225,8 +385,19 @@ fn cmd_serve(a: &Args) -> Result<()> {
     if let Some(d) = &out_dir {
         std::fs::create_dir_all(d)?;
     }
+    let as_container = a.has("container");
     for ds in selected {
         println!("== dataset {} ({}) ==", ds.name, ds.domain);
+        if as_container {
+            // one self-describing SZ3C artifact per dataset
+            let name = ds.name;
+            let (artifact, report) = coord.run_to_container(ds.fields)?;
+            if let Some(dir) = &out_dir {
+                std::fs::write(format!("{dir}/{name}.sz3c"), &artifact)?;
+            }
+            println!("{report}");
+            continue;
+        }
         let mut sink_err = None;
         let report = coord.run(ds.fields, |chunk| {
             if let Some(dir) = &out_dir {
@@ -248,7 +419,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_datasets() -> Result<()> {
+fn cmd_datasets() -> CliResult {
     println!("{:<12} {:<18} {:>7} {:>16} {:>10}  notes", "name", "domain", "fields", "dims", "size");
     for ds in sz3::datagen::survey(42) {
         let dims = ds.fields[0].shape.dims().to_vec();
@@ -265,7 +436,7 @@ fn cmd_datasets() -> Result<()> {
     Ok(())
 }
 
-fn cmd_pipelines() -> Result<()> {
+fn cmd_pipelines() -> CliResult {
     for name in [
         "sz3-lr",
         "sz3-lr-s",
@@ -284,7 +455,7 @@ fn cmd_pipelines() -> Result<()> {
 }
 
 /// Fig. 3: quantization-integer histograms for the Pastri pipeline.
-fn cmd_quant_hist(a: &Args) -> Result<()> {
+fn cmd_quant_hist(a: &Args) -> CliResult {
     let field_name = a.get("field").unwrap_or("ff|ff");
     let eb = a.get_or("eb", 1e-10f64)?;
     let radius = a.get_or("radius", 64u32)?;
@@ -293,7 +464,7 @@ fn cmd_quant_hist(a: &Args) -> Result<()> {
         "ff|ff" => sz3::datagen::gamess::EriClass::FfFf,
         "ff|dd" => sz3::datagen::gamess::EriClass::FfDd,
         "dd|dd" => sz3::datagen::gamess::EriClass::DdDd,
-        other => bail!("unknown GAMESS field '{other}'"),
+        other => return Err(err(format!("unknown GAMESS field '{other}'"))),
     };
     let field = sz3::datagen::gamess::eri_field(class, n, a.get_or("seed", 42u64)?);
     let conf = CompressConf::with_radius(ErrorBound::Abs(eb), radius);

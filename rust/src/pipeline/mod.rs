@@ -46,12 +46,39 @@ pub enum ErrorBound {
 impl ErrorBound {
     /// Resolve to an absolute bound for the given field.
     pub fn to_abs(self, field: &Field) -> Result<f64> {
+        self.to_abs_with_range(|| field.value_range())
+    }
+
+    /// Resolve to an absolute bound given a (lazily computed) value range —
+    /// lets callers that already scanned the data avoid a second pass.
+    pub fn to_abs_with_range<F: FnOnce() -> (f64, f64)>(self, value_range: F) -> Result<f64> {
         match self {
             ErrorBound::Abs(e) if e > 0.0 => Ok(e),
             ErrorBound::Rel(r) if r > 0.0 => {
-                let (lo, hi) = field.value_range();
-                let range = (hi - lo).max(f64::MIN_POSITIVE);
-                Ok(r * range)
+                let (lo, hi) = value_range();
+                let range = hi - lo;
+                if range > 0.0 {
+                    // Deliberately unclamped: for a tiny-but-positive range
+                    // the user's bound is satisfiable and must be honored —
+                    // a subnormal eb only degrades ratio (the quantizer's
+                    // safety net falls back to storing values exactly),
+                    // whereas clamping it up would violate the bound.
+                    Ok(r * range)
+                } else {
+                    // Constant field: the range is zero, so the literal bound
+                    // (r·0) is unsatisfiable as stated. Scaling by
+                    // f64::MIN_POSITIVE used to produce a subnormal bound
+                    // whose reciprocal overflows the quantizer (every value
+                    // became "unpredictable"). Substitute a vanishing
+                    // fraction of the value magnitude: small enough that
+                    // every pipeline stays effectively exact (in particular
+                    // sz3-truncation's per-byte errors are ulp-scale,
+                    // ≈ mag·1.2e-7 for f32, so it keeps all bytes rather
+                    // than spending the slack), large enough to stay a
+                    // normal float with a finite quantizer step.
+                    let mag = lo.abs().max(hi.abs());
+                    Ok((r * mag * 1e-6).max(1e-150))
+                }
             }
             ErrorBound::PwRel(_) => Err(SzError::config(
                 "pointwise-relative bound requires the log-transform preprocessor",
@@ -96,6 +123,11 @@ pub trait Compressor: Send + Sync {
 
 const MAGIC: &[u8; 4] = b"SZ3R";
 const VERSION: u8 = 1;
+
+/// Upper bound on the element count a stream header may declare (2^40
+/// elements ≈ 4 TB of f32). Real fields sit far below this; corrupt
+/// headers above it are rejected before any allocation is sized from them.
+pub const MAX_HEADER_ELEMS: usize = 1 << 40;
 
 /// Common stream header.
 #[derive(Clone, Debug, PartialEq)]
@@ -147,10 +179,31 @@ impl StreamHeader {
         let pipeline = r.get_str()?;
         let field_name = r.get_str()?;
         let dtype = r.get_str()?;
+        // Adversarial hardening: `nd` and the dims are attacker-controlled.
+        // Cap the dimension count before allocating, reject zero-length axes,
+        // and bound the element count with overflow-checked arithmetic so a
+        // corrupt header cannot drive huge downstream allocations.
         let nd = r.get_varint()? as usize;
+        if nd == 0 || nd > crate::data::shape::MAX_DIMS {
+            return Err(SzError::corrupt(format!(
+                "dim count {nd} outside 1..={}",
+                crate::data::shape::MAX_DIMS
+            )));
+        }
         let mut dims = Vec::with_capacity(nd);
+        let mut elems = 1usize;
         for _ in 0..nd {
-            dims.push(r.get_varint()? as usize);
+            let d = r.get_varint()? as usize;
+            if d == 0 {
+                return Err(SzError::corrupt("zero-length dimension in header"));
+            }
+            elems = elems
+                .checked_mul(d)
+                .filter(|&e| e <= MAX_HEADER_ELEMS)
+                .ok_or_else(|| {
+                    SzError::corrupt(format!("element count overflows cap {MAX_HEADER_ELEMS}"))
+                })?;
+            dims.push(d);
         }
         Ok(StreamHeader { pipeline, field_name, dtype, dims })
     }
@@ -192,8 +245,20 @@ pub fn by_name(name: &str) -> Option<Box<dyn Compressor>> {
     }
 }
 
-/// Decompress any stream by dispatching on its header's pipeline name.
+/// Decompress any artifact by dispatching on its magic: chunked containers
+/// (`SZ3C`, see [`crate::container`]) holding a single field decompress in
+/// parallel and reassemble; single streams (`SZ3R`) dispatch on the
+/// header's pipeline name. Multi-field containers must go through
+/// [`crate::container::decompress_container`], which returns all fields.
 pub fn decompress_any(stream: &[u8]) -> Result<Field> {
+    if crate::container::is_container(stream) {
+        // parses the index once, rejects multi-field containers before any
+        // chunk is decompressed, then fans out across the worker pool
+        return crate::container::decompress_single_field(
+            stream,
+            crate::util::default_workers(),
+        );
+    }
     let header = peek_header(stream)?;
     let pipeline = by_name(&header.pipeline).ok_or_else(|| {
         SzError::corrupt(format!("unknown pipeline '{}' in stream", header.pipeline))
@@ -284,5 +349,90 @@ mod tests {
         let f = Field::f32("x", &[2], vec![0.0, 10.0]).unwrap();
         let b = ErrorBound::Rel(1e-2).to_abs(&f).unwrap();
         assert!((b - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_bound_on_constant_field_is_not_subnormal() {
+        // zero range used to resolve to r * f64::MIN_POSITIVE — a subnormal
+        // whose reciprocal overflows the quantizer's bin computation.
+        for c in [0.0f32, 7.25, -3.0e-3] {
+            let f = Field::f32("c", &[64], vec![c; 64]).unwrap();
+            let b = ErrorBound::Rel(1e-3).to_abs(&f).unwrap();
+            assert!(b >= 1e-150, "bound {b} is degenerate for constant {c}");
+            assert!((1.0 / (2.0 * b)).is_finite(), "quantizer step overflows");
+        }
+        // magnitude-relative: scales with the constant, at a vanishing
+        // fraction (1e-6) so no pipeline spends the slack as real error
+        let f = Field::f64("big", &[8], vec![1e9; 8]).unwrap();
+        let b = ErrorBound::Rel(1e-3).to_abs(&f).unwrap();
+        assert!((b - 1.0).abs() <= 1e-9);
+    }
+
+    #[test]
+    fn constant_field_truncation_stays_exact_under_rel_bound() {
+        // zero-range data must not lose mantissa bits: the substituted
+        // bound sits far below truncation's smallest per-byte error, so
+        // pick_keep falls back to keeping every byte
+        let f = Field::f32("flat", &[64], vec![1e9; 64]).unwrap();
+        let conf = CompressConf::new(ErrorBound::Rel(1e-3));
+        let c = by_name("sz3-truncation").unwrap();
+        let out = decompress_any(&c.compress(&f, &conf).unwrap()).unwrap();
+        assert_eq!(out.values, f.values);
+    }
+
+    #[test]
+    fn constant_field_roundtrips_under_rel_bound() {
+        for name in ["sz3-lr", "sz3-interp", "lorenzo-1d"] {
+            let f = Field::f32("flat", &[16, 16], vec![42.5; 256]).unwrap();
+            let conf = CompressConf::new(ErrorBound::Rel(1e-3));
+            let ratio = test_support::roundtrip_bound_check(
+                by_name(name).unwrap().as_ref(),
+                &f,
+                &conf,
+            );
+            assert!(ratio > 4.0, "{name}: constant field should compress hard, got {ratio}");
+        }
+    }
+
+    fn header_with_dims_raw(nd: u64, dims: &[u64]) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_bytes(MAGIC);
+        w.put_u8(VERSION);
+        w.put_str("sz3-lr");
+        w.put_str("f");
+        w.put_str("f32");
+        w.put_varint(nd);
+        for &d in dims {
+            w.put_varint(d);
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn adversarial_dim_count_rejected() {
+        // huge nd varint must not drive a huge Vec::with_capacity
+        let buf = header_with_dims_raw(u64::MAX >> 1, &[]);
+        assert!(StreamHeader::read(&mut ByteReader::new(&buf)).is_err());
+        let buf = header_with_dims_raw(5, &[1, 1, 1, 1, 1]);
+        assert!(StreamHeader::read(&mut ByteReader::new(&buf)).is_err());
+        let buf = header_with_dims_raw(0, &[]);
+        assert!(StreamHeader::read(&mut ByteReader::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn adversarial_dims_product_rejected() {
+        // element-count overflow via dims product
+        let buf = header_with_dims_raw(2, &[u64::MAX >> 8, u64::MAX >> 8]);
+        assert!(StreamHeader::read(&mut ByteReader::new(&buf)).is_err());
+        // above the element cap without overflowing usize
+        let buf = header_with_dims_raw(2, &[1 << 30, 1 << 30]);
+        assert!(StreamHeader::read(&mut ByteReader::new(&buf)).is_err());
+        // zero-length axis
+        let buf = header_with_dims_raw(2, &[4, 0]);
+        assert!(StreamHeader::read(&mut ByteReader::new(&buf)).is_err());
+        // sane dims still parse
+        let buf = header_with_dims_raw(2, &[4, 8]);
+        let h = StreamHeader::read(&mut ByteReader::new(&buf)).unwrap();
+        assert_eq!(h.dims, vec![4, 8]);
     }
 }

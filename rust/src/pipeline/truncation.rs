@@ -139,6 +139,28 @@ impl Compressor for TruncationCompressor {
             .ok_or_else(|| SzError::corrupt(format!("unknown lossless {ll_name}")))?;
         let planes = ll.decompress(r.get_block()?)?;
         let n = header.len();
+        let bytes_per = match header.dtype.as_str() {
+            "f32" | "i32" => 4,
+            "f64" => 8,
+            other => return Err(SzError::corrupt(format!("unknown dtype {other}"))),
+        };
+        if keep == 0 || keep > bytes_per {
+            return Err(SzError::corrupt(format!(
+                "keep {keep} invalid for {bytes_per}-byte data"
+            )));
+        }
+        // Cross-check the header's element count against the decoded
+        // payload before sizing any allocation from it: `to_planes` always
+        // emits exactly keep·n bytes, so anything else is corruption.
+        let expect = n
+            .checked_mul(keep)
+            .ok_or_else(|| SzError::corrupt("plane size overflows"))?;
+        if planes.len() != expect {
+            return Err(SzError::corrupt(format!(
+                "{} plane bytes for {n} elements × {keep} kept",
+                planes.len()
+            )));
+        }
         let values = match header.dtype.as_str() {
             "f32" => {
                 let raw = from_planes(&planes, n, 4, keep);
@@ -205,6 +227,26 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn inflated_dims_error_not_panic() {
+        // corrupt header claiming more elements than the payload carries
+        // used to index past the decoded planes (or attempt a huge alloc)
+        let vals: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let f = Field::f32("x", &[64], vals).unwrap();
+        let c = TruncationCompressor::default();
+        let stream = c.compress(&f, &CompressConf::new(ErrorBound::Abs(0.5))).unwrap();
+        let mut r = ByteReader::new(&stream);
+        let mut h = StreamHeader::read(&mut r).unwrap();
+        let body = stream[r.pos()..].to_vec();
+        for dims in [vec![65usize], vec![63], vec![1 << 30]] {
+            h.dims = dims;
+            let mut w = ByteWriter::new();
+            h.write(&mut w);
+            w.put_bytes(&body);
+            assert!(decompress_any(&w.finish()).is_err());
+        }
     }
 
     #[test]

@@ -1,0 +1,159 @@
+//! Dependency-free stand-in for the PJRT runtime (default build).
+//!
+//! Mirrors the public surface of the feature-gated [`super::pjrt`] module
+//! so binaries, examples and benches compile without the `xla` crate.
+//! `available()` is always `false`, the constructors return
+//! [`SzError::Runtime`], and [`PjrtAnalyzer`] delegates to the native
+//! analyzer — callers that probe availability first never hit an error.
+
+use crate::error::{Result, SzError};
+use crate::pipeline::analysis::{BlockAnalyzer, NativeAnalyzer, RawAnalysis};
+use std::path::{Path, PathBuf};
+
+fn unavailable(ctx: &str) -> SzError {
+    SzError::Runtime(format!(
+        "{ctx}: built without the 'pjrt' feature (xla crate unavailable offline)"
+    ))
+}
+
+/// Stub artifact engine: reports artifacts as unavailable.
+pub struct PjrtEngine {
+    /// Block batch per invocation (mirrors the real engine's field).
+    pub batch: usize,
+    /// Elements per stats invocation.
+    pub stats_n: usize,
+}
+
+impl PjrtEngine {
+    /// Default artifact directory (`$SZ3_ARTIFACTS` or `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SZ3_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Always `false` in the stub: the PJRT backend cannot run.
+    pub fn available(_dir: &Path) -> bool {
+        false
+    }
+
+    /// Always an error in the stub.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        Err(unavailable("PjrtEngine::load"))
+    }
+
+    /// PJRT platform name (for logs).
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Dimensionalities with a compiled analysis executable (none).
+    pub fn analysis_dims(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// True if `dims` matches an artifact block shape (never, in the stub).
+    pub fn supports_block(&self, _dims: &[usize]) -> bool {
+        false
+    }
+
+    /// Batched analysis — unreachable in practice (`load` always fails).
+    pub fn analyze(&self, _blocks: &[f64], _dims: &[usize]) -> Result<Vec<RawAnalysis>> {
+        Err(unavailable("PjrtEngine::analyze"))
+    }
+
+    /// Stats artifact — unreachable in practice (`load` always fails).
+    pub fn stats(&self, _x: &[f64]) -> Result<(f64, f64, f64, f64)> {
+        Err(unavailable("PjrtEngine::stats"))
+    }
+}
+
+/// Stub service handle. `start` always fails; the fields exist so callers
+/// that log `service.platform` / `service.dims` after a successful start
+/// compile unchanged.
+#[derive(Clone)]
+pub struct PjrtService {
+    /// PJRT platform name.
+    pub platform: String,
+    /// Dimensionalities with compiled analysis artifacts.
+    pub dims: Vec<usize>,
+}
+
+impl PjrtService {
+    /// Always an error in the stub.
+    pub fn start(_dir: &Path) -> Result<PjrtService> {
+        Err(unavailable("PjrtService::start"))
+    }
+
+    /// True if `dims` matches an artifact block shape (never, in the stub).
+    pub fn supports_block(&self, _dims: &[usize]) -> bool {
+        false
+    }
+
+    /// Remote batched analysis — falls back to the native analyzer so any
+    /// handle that somehow exists still produces correct results.
+    pub fn analyze(&self, blocks: &[f64], dims: &[usize]) -> Result<Vec<RawAnalysis>> {
+        NativeAnalyzer.analyze_batch(blocks, dims)
+    }
+
+    /// Remote stats — computed natively.
+    pub fn stats(&self, x: &[f64]) -> Result<(f64, f64, f64, f64)> {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for &v in x {
+            lo = lo.min(v);
+            hi = hi.max(v);
+            sum += v;
+            sumsq += v * v;
+        }
+        Ok((lo, hi, sum, sumsq))
+    }
+}
+
+/// [`BlockAnalyzer`] with the PJRT surface; delegates to the native
+/// analyzer in the stub build.
+pub struct PjrtAnalyzer {
+    fallback: NativeAnalyzer,
+}
+
+impl PjrtAnalyzer {
+    /// Wrap a service handle (ignored in the stub).
+    pub fn new(_service: PjrtService) -> Self {
+        PjrtAnalyzer { fallback: NativeAnalyzer }
+    }
+}
+
+impl BlockAnalyzer for PjrtAnalyzer {
+    fn analyze_batch(&self, blocks: &[f64], dims: &[usize]) -> Result<Vec<RawAnalysis>> {
+        self.fallback.analyze_batch(blocks, dims)
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!PjrtEngine::available(&PjrtEngine::default_dir()));
+        assert!(PjrtEngine::load(Path::new("artifacts")).is_err());
+        assert!(PjrtService::start(Path::new("artifacts")).is_err());
+    }
+
+    #[test]
+    fn stub_analyzer_matches_native() {
+        let blocks: Vec<f64> = (0..128).map(|i| (i as f64 * 0.1).sin()).collect();
+        let svc = PjrtService { platform: "x".into(), dims: vec![] };
+        let a = PjrtAnalyzer::new(svc);
+        let got = a.analyze_batch(&blocks, &[128]).unwrap();
+        let want = NativeAnalyzer.analyze_batch(&blocks, &[128]).unwrap();
+        assert_eq!(got.len(), want.len());
+        assert_eq!(got[0].coeffs, want[0].coeffs);
+    }
+}

@@ -2,3 +2,10 @@
 
 pub mod prop;
 pub mod rng;
+
+/// Default worker-thread count: one per available core, 4 when the
+/// parallelism cannot be queried. Shared by the coordinator config and the
+/// parallel container-decompression entry points.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}

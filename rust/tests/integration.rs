@@ -123,7 +123,7 @@ fn coordinator_streams_gamess_through_pastri() {
         workers: 2,
         chunk_elems: 1 << 16,
         queue_depth: 2,
-        use_pjrt: false,
+        ..Default::default()
     };
     let coord = Coordinator::from_config(&cfg).unwrap();
     let fields = sz3::datagen::gamess::gamess_dataset(1 << 17, 3);
@@ -200,6 +200,139 @@ fn aps_adaptive_tracks_best_baseline() {
             (aps as f64) <= best_fixed as f64 * 1.10,
             "eb={eb}: adaptive {aps} should track best fixed {best_fixed}"
         );
+    }
+}
+
+/// Acceptance: a heterogeneous field compressed via
+/// `Coordinator::run_to_container` with adaptive selection roundtrips
+/// bit-shape-exact through `decompress_any`, different chunks select
+/// different pipelines, and every element respects the error bound.
+#[test]
+fn adaptive_container_mixes_pipelines_and_respects_bound() {
+    let (nz, ny, nx) = (32usize, 24, 24);
+    let mut rng = Pcg32::seeded(77);
+    let mut vals = Vec::with_capacity(nz * ny * nx);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                if z < nz / 2 {
+                    // smooth half: low-frequency structure, tiny residuals
+                    vals.push(
+                        (0.5 * ((z as f32) * 0.20).sin()
+                            + 0.5 * ((y as f32) * 0.15).cos()
+                            + 0.3 * ((x as f32) * 0.10).sin()) as f32,
+                    );
+                } else {
+                    // unpredictable half: white noise across the full range
+                    vals.push(rng.uniform(-500.0, 500.0) as f32);
+                }
+            }
+        }
+    }
+    let field = Field::f32("hetero", &[nz, ny, nx], vals).unwrap();
+    let eb = 0.25;
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Abs(eb),
+        workers: 4,
+        chunk_elems: ny * nx * 8, // 8 rows per chunk -> 4 chunks, pure halves
+        queue_depth: 2,
+        adaptive: true,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let (artifact, report) = coord.run_to_container(vec![field.clone()]).unwrap();
+    assert_eq!(report.chunks, 4);
+    assert!(sz3::container::is_container(&artifact));
+
+    // the chunk index must record a heterogeneous pipeline mix
+    let (index, _) = sz3::container::read_index(&artifact).unwrap();
+    assert_eq!(index.entries.len(), 4);
+    let mix = index.per_pipeline();
+    assert!(
+        mix.len() >= 2,
+        "heterogeneous field should select ≥2 pipelines, got {mix:?}"
+    );
+    assert!(
+        mix.iter().any(|(p, _)| p == "sz3-truncation"),
+        "noise chunks should pick truncation: {mix:?}"
+    );
+    for e in &index.entries {
+        if e.rows.1 <= nz / 2 {
+            assert_ne!(
+                e.pipeline, "sz3-truncation",
+                "smooth rows {:?} must use a predictor",
+                e.rows
+            );
+        }
+    }
+
+    // single-field containers decode through the common entry point
+    let out = decompress_any(&artifact).unwrap();
+    assert_eq!(out.shape.dims(), field.shape.dims(), "bit-shape-exact dims");
+    assert!(matches!(out.values, FieldValues::F32(_)), "dtype preserved");
+    check_bound(&field, &out, eb, "adaptive-container");
+}
+
+#[test]
+fn coordinator_edge_cases_roundtrip() {
+    // (a) field smaller than one chunk, workers > chunks
+    let mut rng = Pcg32::seeded(81);
+    let small_dims = [4usize, 8, 8];
+    let small = Field::f32("small", &small_dims, sz3::util::prop::smooth_field(&mut rng, &small_dims)).unwrap();
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Abs(1e-3),
+        workers: 8,
+        chunk_elems: 1 << 20,
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let (artifact, report) = coord.run_to_container(vec![small.clone()]).unwrap();
+    assert_eq!(report.chunks, 1, "field smaller than one chunk stays whole");
+    let out = decompress_any(&artifact).unwrap();
+    assert_eq!(out.shape.dims(), small.shape.dims());
+    check_bound(&small, &out, 1e-3, "small-field");
+
+    // (b) non-divisible row split: 10 rows at 3 rows/chunk -> 3+3+3+1
+    let odd_dims = [10usize, 12, 12];
+    let odd = Field::f32("odd", &odd_dims, sz3::util::prop::smooth_field(&mut rng, &odd_dims)).unwrap();
+    let cfg = JobConfig { chunk_elems: 3 * 144, workers: 2, bound: ErrorBound::Abs(1e-3), ..cfg };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let mut rows = Vec::new();
+    let (artifact, report) = {
+        let mut chunks = Vec::new();
+        let report = coord.run(vec![odd.clone()], |c| chunks.push(c)).unwrap();
+        for c in &chunks {
+            rows.push(c.rows);
+        }
+        (sz3::container::pack(&chunks).unwrap(), report)
+    };
+    assert_eq!(report.chunks, 4);
+    assert_eq!(rows, vec![(0, 3), (3, 6), (6, 9), (9, 10)]);
+    let out = decompress_any(&artifact).unwrap();
+    assert_eq!(out.shape.dims(), odd.shape.dims());
+    check_bound(&odd, &out, 1e-3, "odd-split");
+
+    // (c) multi-field containers refuse the single-field entry point but
+    // decode through the container API
+    let two = vec![small.clone(), odd.clone()];
+    let (artifact, _) = coord.run_to_container(two).unwrap();
+    assert!(decompress_any(&artifact).is_err());
+    let fields = sz3::container::decompress_container(&artifact, 4).unwrap();
+    assert_eq!(fields.len(), 2);
+
+    // (d) degenerate shapes are rejected at the public boundary (the shard
+    // planner used to index dims[0] unchecked)
+    assert!(Field::f32("empty", &[], vec![]).is_err());
+    assert!(Field::f32("zero", &[0], vec![]).is_err());
+    assert!(sz3::coordinator::plan_chunks(&small, 0).is_ok(), "tiny budget clamps to 1 row");
+
+    // (e) truncated containers error, never panic
+    for cut in [3usize, 9, artifact.len() / 2] {
+        let r = std::panic::catch_unwind(|| decompress_any(&artifact[..cut]));
+        assert!(matches!(r, Ok(Err(_))), "cut={cut} must error cleanly");
     }
 }
 
