@@ -1,0 +1,103 @@
+//! Indexed-seek ROI bench: region extraction through the random-access
+//! container reader vs whole-container decompression, over in-memory and
+//! file-backed sources, cold and cache-warm. Also emits the machine-
+//! readable `BENCH_PR2.json` perf summary (compress / decompress /
+//! ROI-read throughput) for the CI trend line.
+//!
+//! Output: `roi,<case>,<mbs>,<chunks_decoded>,<bytes_fetched>`
+
+use sz3::bench_harness::{Bench, PerfSummary};
+use sz3::config::JobConfig;
+use sz3::container;
+use sz3::coordinator::Coordinator;
+use sz3::data::Field;
+use sz3::pipeline::ErrorBound;
+use sz3::reader::{ContainerReader, FileSource, PrefetchSource};
+use sz3::util::prop;
+use sz3::util::rng::Pcg32;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let nz = if quick { 96 } else { 384 };
+    let (ny, nx) = (64usize, 64);
+    println!("# reader ROI bench (quick={quick})");
+
+    let mut rng = Pcg32::seeded(1042);
+    let dims = [nz, ny, nx];
+    let field = Field::f32("snapshot", &dims, prop::smooth_field(&mut rng, &dims)).unwrap();
+    let raw_bytes = field.nbytes();
+
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Abs(1e-3),
+        workers: 4,
+        chunk_elems: ny * nx * 8, // 8 rows per chunk
+        queue_depth: 4,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let mut summary = PerfSummary::new();
+
+    // compress throughput (coordinator -> v2 container)
+    let t0 = std::time::Instant::now();
+    let (artifact, report) = coord.run_to_container(vec![field]).unwrap();
+    let compress_mbs = raw_bytes as f64 / 1e6 / t0.elapsed().as_secs_f64().max(1e-9);
+    let chunks = report.chunks;
+    println!("# {} chunks, artifact {} bytes (ratio {:.2})", chunks, artifact.len(), report.ratio());
+    summary.record("compress_mbs", compress_mbs);
+    summary.record("ratio", report.ratio());
+
+    // full parallel decompression (batch path, through the reader)
+    let (_, full_mbs) = bench.throughput("decompress_container(full)", raw_bytes, || {
+        container::decompress_container(&artifact, cfg.workers).unwrap()
+    });
+    summary.record("decompress_mbs", full_mbs);
+    println!("roi,full,{full_mbs:.1},{chunks},{}", artifact.len());
+
+    // ROI covering one chunk: cold reader per iteration (slice source)
+    let roi = 2 * 8..3 * 8; // exactly chunk 2
+    let roi_bytes = (roi.end - roi.start) * ny * nx * 4;
+    let (_, cold_mbs) = bench.throughput("read_region(cold, slice)", roi_bytes, || {
+        let r = ContainerReader::from_slice(&artifact).unwrap();
+        r.read_region("snapshot", roi.clone()).unwrap()
+    });
+    {
+        let r = ContainerReader::from_slice(&artifact).unwrap();
+        r.read_region("snapshot", roi.clone()).unwrap();
+        let s = r.stats();
+        println!("roi,cold_slice,{cold_mbs:.1},{},{}", s.chunks_decoded, s.bytes_fetched);
+        summary.record("roi_cold_mbs", cold_mbs);
+    }
+
+    // ROI with a warm LRU cache: the serve-path steady state
+    let warm_reader = ContainerReader::from_slice(&artifact)
+        .unwrap()
+        .with_chunk_cache(16);
+    warm_reader.read_region("snapshot", roi.clone()).unwrap();
+    let (_, warm_mbs) = bench.throughput("read_region(warm cache)", roi_bytes, || {
+        warm_reader.read_region("snapshot", roi.clone()).unwrap()
+    });
+    let s = warm_reader.stats();
+    println!("roi,warm_cache,{warm_mbs:.1},{},{}", s.chunks_decoded, s.bytes_fetched);
+    summary.record("roi_warm_mbs", warm_mbs);
+
+    // ROI through a prefetching file source: the on-disk serving shape
+    let path = std::env::temp_dir().join(format!("sz3_reader_roi_{}.sz3c", std::process::id()));
+    std::fs::write(&path, &artifact).unwrap();
+    let (_, file_mbs) = bench.throughput("read_region(cold, file)", roi_bytes, || {
+        let src = PrefetchSource::new(
+            Box::new(FileSource::open(&path).unwrap()),
+            1 << 20,
+        );
+        let r = ContainerReader::new(Box::new(src)).unwrap();
+        r.read_region("snapshot", roi.clone()).unwrap()
+    });
+    println!("roi,cold_file,{file_mbs:.1},1,-");
+    summary.record("roi_file_mbs", file_mbs);
+    let _ = std::fs::remove_file(&path);
+
+    summary.write_json("BENCH_PR2.json").unwrap();
+    println!("# perf summary written to BENCH_PR2.json");
+    println!("{}", summary.to_json());
+}

@@ -204,6 +204,60 @@ pub fn container_roundtrip(coord: &Coordinator, fields: Vec<Field>) -> Result<Co
     })
 }
 
+/// Machine-readable perf summary the bench targets emit (e.g.
+/// `BENCH_PR2.json`): a flat metric → value map in insertion order, so CI
+/// can diff throughput trajectories across PRs without parsing the human
+/// bench lines. Hand-rolled JSON (serde is unavailable offline).
+#[derive(Clone, Debug, Default)]
+pub struct PerfSummary {
+    metrics: Vec<(String, f64)>,
+}
+
+impl PerfSummary {
+    /// Empty summary.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record (or overwrite) one metric, conventionally a throughput in
+    /// MB/s or a unitless ratio; the name should say which
+    /// (`compress_mbs`, `roi_warm_mbs`, `ratio`).
+    pub fn record(&mut self, name: &str, value: f64) {
+        match self.metrics.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v = value,
+            None => self.metrics.push((name.to_string(), value)),
+        }
+    }
+
+    /// Metrics recorded so far.
+    pub fn metrics(&self) -> &[(String, f64)] {
+        &self.metrics
+    }
+
+    /// Serialize as a JSON object. Non-finite values (a bench that failed
+    /// to produce a rate) serialize as null, which JSON parsers accept and
+    /// trend tooling treats as a gap.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        for (i, (name, value)) in self.metrics.iter().enumerate() {
+            let sep = if i + 1 == self.metrics.len() { "" } else { "," };
+            if value.is_finite() {
+                out.push_str(&format!("  \"{name}\": {value:.4}{sep}\n"));
+            } else {
+                out.push_str(&format!("  \"{name}\": null{sep}\n"));
+            }
+        }
+        out.push('}');
+        out
+    }
+
+    /// Write the JSON summary to `path`.
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json() + "\n")?;
+        Ok(())
+    }
+}
+
 /// Print an RD series in the grep-able format used by EXPERIMENTS.md:
 /// `rd,<figure>,<dataset>,<pipeline>,<rel_eb>,<bitrate>,<psnr>,<ratio>`.
 pub fn print_rd_series(figure: &str, dataset: &str, pipeline: &str, points: &[RdPoint]) {
@@ -246,6 +300,25 @@ mod tests {
         let run = container_roundtrip(&coord, vec![f]).unwrap();
         assert!(run.ratio() > 1.0);
         assert_eq!(run.per_pipeline, vec![("sz3-lr".to_string(), run.report.chunks)]);
+    }
+
+    #[test]
+    fn perf_summary_json_is_well_formed() {
+        let mut s = PerfSummary::new();
+        s.record("compress_mbs", 123.456);
+        s.record("roi_cold_mbs", 7.0);
+        s.record("compress_mbs", 200.0); // overwrite keeps position
+        s.record("broken", f64::NAN);
+        let json = s.to_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"compress_mbs\": 200.0000"));
+        assert!(json.contains("\"roi_cold_mbs\": 7.0000"));
+        assert!(json.contains("\"broken\": null"));
+        // the overwritten key appears exactly once
+        assert_eq!(json.matches("compress_mbs").count(), 1);
+        // reuse the crate's own JSON parser as the well-formedness oracle
+        let parsed = crate::config::Json::parse(&json).unwrap();
+        assert!(parsed.get("compress_mbs").is_some());
     }
 
     #[test]

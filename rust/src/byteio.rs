@@ -254,6 +254,18 @@ mod tests {
     }
 
     #[test]
+    fn exhaustion_errors_are_recognizable() {
+        // the reader's incremental index-probe loop retries exactly these;
+        // lock the message shape `take` emits to the classifier
+        let mut r = ByteReader::new(&[1, 2]);
+        assert!(r.get_u32().unwrap_err().is_exhaustion());
+        let mut r = ByteReader::new(&[0xff; 2]);
+        assert!(r.get_varint().unwrap_err().is_exhaustion());
+        assert!(!SzError::corrupt("bad magic").is_exhaustion());
+        assert!(!SzError::corrupt("varint overflow").is_exhaustion());
+    }
+
+    #[test]
     fn prop_varint_roundtrip() {
         prop::cases(300, 0x5eed, |rng| {
             let v = rng.next_u64() >> (rng.below(64) as u32);

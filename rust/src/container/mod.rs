@@ -3,14 +3,15 @@
 //! The streaming coordinator shards fields into row-range chunks and
 //! compresses each independently (possibly through a *different* pipeline
 //! per chunk, see [`AdaptiveChunkSelector`]). This module packs those
-//! chunks into one self-describing artifact and fans them back out across
-//! a worker pool for parallel decompression.
+//! chunks into one self-describing artifact; [`crate::reader`] fans them
+//! back out — in parallel for whole-container decompression, or chunk by
+//! chunk for indexed-seek region reads.
 //!
-//! # Format (version 1)
+//! # Format
 //!
 //! ```text
 //! magic   4 bytes  "SZ3C"
-//! version u8       1
+//! version u8       1 or 2
 //! chunks  varint   number of chunk-index entries
 //! fields  varint   number of distinct fields (informational)
 //! entry × chunks:
@@ -24,15 +25,24 @@
 //!     pipeline     str     registry pipeline that compressed the chunk
 //!     offset       varint  payload-relative byte offset of the stream
 //!     len          varint  stream length in bytes
+//!     crc32        u32 LE  (v2 only) CRC-32/IEEE of the chunk stream
 //! payload_len varint
 //! payload     bytes   concatenated per-chunk `SZ3R` streams
 //! ```
 //!
+//! v2 (current) adds a per-chunk CRC-32 to every index entry, verified on
+//! every payload fetch by the reader; v1 artifacts (no checksum) remain
+//! fully readable. The full byte-level specification lives in
+//! `docs/CONTAINER.md`.
+//!
 //! Every chunk stream is itself a complete self-describing `SZ3R` stream,
 //! so the index's `pipeline` name is a dispatch/statistics shortcut that is
 //! cross-checked against the inner header during decompression. All index
-//! integers are validated against the buffer (dim-count cap, row-range
-//! sanity, offset bounds) before any allocation is sized from them.
+//! integers are validated against the declared payload extent (dim-count
+//! cap, row-range sanity, offset bounds) before any allocation is sized
+//! from them — [`read_index_meta`] needs only an index-covering *prefix*
+//! of the artifact, which is what lets [`crate::reader::ContainerReader`]
+//! open a multi-GB container without loading its payload.
 
 pub mod adaptive;
 
@@ -40,15 +50,18 @@ pub use adaptive::{AdaptiveChunkSelector, ChunkSignals, Selection};
 
 use crate::byteio::{ByteReader, ByteWriter};
 use crate::coordinator::CompressedChunk;
-use crate::data::{Field, FieldValues};
+use crate::data::Field;
 use crate::error::{Result, SzError};
-use crate::pipeline;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::util::crc32::crc32;
 
 /// Container magic (distinct from the per-stream `SZ3R`).
 pub const CONTAINER_MAGIC: &[u8; 4] = b"SZ3C";
-const VERSION: u8 = 1;
+/// Original index layout (no per-chunk checksum).
+pub const VERSION_V1: u8 = 1;
+/// Adds a CRC-32 per chunk-index entry, verified on every fetch.
+pub const VERSION_V2: u8 = 2;
+/// The version [`pack`] writes.
+pub const CURRENT_VERSION: u8 = VERSION_V2;
 
 /// True if `stream` starts with the container magic.
 pub fn is_container(stream: &[u8]) -> bool {
@@ -74,6 +87,8 @@ pub struct ChunkEntry {
     pub offset: usize,
     /// Chunk stream length in bytes.
     pub len: usize,
+    /// CRC-32 of the chunk stream (`None` for v1 containers).
+    pub crc32: Option<u32>,
 }
 
 /// Parsed container index.
@@ -95,7 +110,9 @@ impl ContainerIndex {
         out
     }
 
-    /// Chunk counts per pipeline name (sorted by name).
+    /// Chunk counts per pipeline name, deterministically ordered (sorted by
+    /// pipeline name via `BTreeMap`) so `sz3 info` output and tests are
+    /// stable across runs regardless of worker scheduling.
     pub fn per_pipeline(&self) -> Vec<(String, usize)> {
         let mut map = std::collections::BTreeMap::new();
         for e in &self.entries {
@@ -105,12 +122,41 @@ impl ContainerIndex {
     }
 }
 
-/// Pack ordered coordinator chunks into a container artifact.
+/// Index metadata parsed from an artifact *prefix*: everything before the
+/// payload bytes. Unlike [`read_index`], producing this does not require
+/// the payload to be present, so seekable sources can fetch chunks lazily.
+#[derive(Clone, Debug)]
+pub struct IndexMeta {
+    /// The parsed chunk index.
+    pub index: ContainerIndex,
+    /// Container format version (1 or 2).
+    pub version: u8,
+    /// Absolute byte offset where the payload begins.
+    pub payload_offset: usize,
+    /// Declared payload length in bytes.
+    pub payload_len: u64,
+}
+
+/// Pack ordered coordinator chunks into a container artifact (current
+/// version, with per-chunk CRC-32).
 ///
 /// All chunks of a field must carry the same `field_dims`/`chunk_count`
 /// (the coordinator guarantees this); ordering within the buffer is free
 /// since decompression sorts by `chunk_index`.
 pub fn pack(chunks: &[CompressedChunk]) -> Result<Vec<u8>> {
+    pack_version(chunks, CURRENT_VERSION)
+}
+
+/// Pack in the legacy v1 layout (no checksums). Kept for compatibility
+/// testing and for producing artifacts older readers understand.
+pub fn pack_v1(chunks: &[CompressedChunk]) -> Result<Vec<u8>> {
+    pack_version(chunks, VERSION_V1)
+}
+
+fn pack_version(chunks: &[CompressedChunk], version: u8) -> Result<Vec<u8>> {
+    if version != VERSION_V1 && version != VERSION_V2 {
+        return Err(SzError::config(format!("cannot pack container version {version}")));
+    }
     // Reject chunk sets that could never decode — duplicate chunk indices
     // (two source fields sharing a name) or a count that disagrees with
     // the declared chunk_count — instead of emitting a poison artifact.
@@ -148,7 +194,7 @@ pub fn pack(chunks: &[CompressedChunk]) -> Result<Vec<u8>> {
     }
     let mut w = ByteWriter::new();
     w.put_bytes(CONTAINER_MAGIC);
-    w.put_u8(VERSION);
+    w.put_u8(version);
     w.put_varint(chunks.len() as u64);
     w.put_varint(fields.len() as u64);
     let mut offset = 0usize;
@@ -165,6 +211,9 @@ pub fn pack(chunks: &[CompressedChunk]) -> Result<Vec<u8>> {
         w.put_str(&c.pipeline);
         w.put_varint(offset as u64);
         w.put_varint(c.stream.len() as u64);
+        if version >= VERSION_V2 {
+            w.put_u32(crc32(&c.stream));
+        }
         offset += c.stream.len();
     }
     w.put_varint(offset as u64);
@@ -174,23 +223,30 @@ pub fn pack(chunks: &[CompressedChunk]) -> Result<Vec<u8>> {
     Ok(w.finish())
 }
 
-/// Parse and validate the chunk index; returns the index and the payload.
-pub fn read_index(stream: &[u8]) -> Result<(ContainerIndex, &[u8])> {
-    let mut r = ByteReader::new(stream);
+/// Parse and validate the chunk index from an artifact prefix; the payload
+/// bytes need not be present. Chunk extents are validated against the
+/// *declared* payload length, so a lazily-fetching reader can trust the
+/// offsets before it has read a single payload byte.
+pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
+    let mut r = ByteReader::new(prefix);
     let magic = r.get_bytes(4)?;
     if magic != CONTAINER_MAGIC {
         return Err(SzError::corrupt("bad container magic"));
     }
-    let ver = r.get_u8()?;
-    if ver != VERSION {
-        return Err(SzError::corrupt(format!("unsupported container version {ver}")));
+    let version = r.get_u8()?;
+    if version != VERSION_V1 && version != VERSION_V2 {
+        return Err(SzError::corrupt(format!("unsupported container version {version}")));
     }
     let n_chunks = r.get_varint()? as usize;
     // Every entry consumes ≥ 1 byte, so the remaining length bounds the
-    // plausible entry count — reject before growing any allocation.
+    // plausible entry count — reject before growing any allocation. The
+    // exhaustion-shaped message matters: on a short *prefix* of a valid
+    // large index this is a retry-with-more-bytes condition
+    // (`SzError::is_exhaustion`), not a verdict of corruption.
     if n_chunks > r.remaining() {
         return Err(SzError::corrupt(format!(
-            "chunk count {n_chunks} exceeds container size"
+            "need {n_chunks} index entries, have {} bytes",
+            r.remaining()
         )));
     }
     let _n_fields = r.get_varint()?;
@@ -215,6 +271,7 @@ pub fn read_index(stream: &[u8]) -> Result<(ContainerIndex, &[u8])> {
         let pipeline = r.get_str()?;
         let offset = r.get_varint()? as usize;
         let len = r.get_varint()? as usize;
+        let crc = if version >= VERSION_V2 { Some(r.get_u32()?) } else { None };
         if chunk_count == 0 || chunk_index >= chunk_count {
             return Err(SzError::corrupt(format!(
                 "chunk index {chunk_index} outside count {chunk_count}"
@@ -235,163 +292,70 @@ pub fn read_index(stream: &[u8]) -> Result<(ContainerIndex, &[u8])> {
             pipeline,
             offset,
             len,
+            crc32: crc,
         });
     }
-    let payload_len = r.get_varint()? as usize;
-    let payload = r.get_bytes(payload_len)?;
+    let payload_len = r.get_varint()?;
+    let payload_offset = r.pos();
     for e in &entries {
         let end = e
             .offset
             .checked_add(e.len)
             .ok_or_else(|| SzError::corrupt("chunk extent overflows"))?;
-        if end > payload.len() {
+        if end as u64 > payload_len {
             return Err(SzError::corrupt(format!(
-                "chunk [{}..{end}) outside payload of {} bytes",
-                e.offset,
-                payload.len()
+                "chunk [{}..{end}) outside payload of {payload_len} bytes",
+                e.offset
             )));
         }
     }
-    Ok((ContainerIndex { entries }, payload))
+    Ok(IndexMeta { index: ContainerIndex { entries }, version, payload_offset, payload_len })
 }
 
-/// Decompress a container: fan chunks out across `workers` threads (each
-/// chunk dispatched on its index pipeline, cross-checked against the inner
-/// stream header), then reassemble fields with shape verification.
-/// Fields are returned in order of first appearance in the index.
+/// Parse and validate the chunk index of a fully-resident artifact;
+/// returns the index and the payload slice. Reads both v1 and v2.
+pub fn read_index(stream: &[u8]) -> Result<(ContainerIndex, &[u8])> {
+    let meta = read_index_meta(stream)?;
+    let avail = stream.len() - meta.payload_offset;
+    if meta.payload_len > avail as u64 {
+        return Err(SzError::corrupt(format!(
+            "need {} payload bytes, have {avail}",
+            meta.payload_len
+        )));
+    }
+    let payload =
+        &stream[meta.payload_offset..meta.payload_offset + meta.payload_len as usize];
+    Ok((meta.index, payload))
+}
+
+/// Decompress a fully-resident container: routed through
+/// [`crate::reader::ContainerReader`] (the single seek/verify/decode code
+/// path — chunks fan out across `workers` threads, every v2 chunk is
+/// CRC-checked, each stream's inner header is cross-checked against the
+/// index, and fields reassemble with shape verification). Fields are
+/// returned in order of first appearance in the index.
 pub fn decompress_container(stream: &[u8], workers: usize) -> Result<Vec<Field>> {
-    let (index, payload) = read_index(stream)?;
-    decompress_indexed(&index, payload, workers)
+    crate::reader::ContainerReader::from_slice(stream)?
+        .with_workers(workers)
+        .read_all()
 }
 
 /// Decompress a container whose exactly-one field is wanted (the
 /// [`crate::pipeline::decompress_any`] path); parses the index once for
 /// both the field-count check and the decode.
 pub fn decompress_single_field(stream: &[u8], workers: usize) -> Result<Field> {
-    let (index, payload) = read_index(stream)?;
-    let n = index.field_names().len();
+    let reader =
+        crate::reader::ContainerReader::from_slice(stream)?.with_workers(workers);
+    let n = reader.field_names().len();
     if n != 1 {
         return Err(SzError::config(format!(
             "container holds {n} fields; use container::decompress_container"
         )));
     }
-    decompress_indexed(&index, payload, workers)?
+    reader
+        .read_all()?
         .pop()
         .ok_or_else(|| SzError::corrupt("container decoded no fields"))
-}
-
-fn decompress_indexed(
-    index: &ContainerIndex,
-    payload: &[u8],
-    workers: usize,
-) -> Result<Vec<Field>> {
-    let n = index.entries.len();
-    if n == 0 {
-        return Ok(Vec::new());
-    }
-
-    // parallel fan-out: workers pull entry indices from a shared counter
-    let next = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<Result<Field>>>> = Mutex::new((0..n).map(|_| None).collect());
-    let decode_one = |e: &ChunkEntry| -> Result<Field> {
-        let chunk_stream = &payload[e.offset..e.offset + e.len];
-        let compressor = pipeline::by_name(&e.pipeline).ok_or_else(|| {
-            SzError::corrupt(format!("unknown pipeline '{}' in chunk index", e.pipeline))
-        })?;
-        let header = pipeline::peek_header(chunk_stream)?;
-        if header.pipeline != e.pipeline {
-            return Err(SzError::corrupt(format!(
-                "index pipeline '{}' disagrees with stream header '{}'",
-                e.pipeline, header.pipeline
-            )));
-        }
-        let field = compressor.decompress(chunk_stream)?;
-        let mut expect = e.field_dims.clone();
-        expect[0] = e.rows.1 - e.rows.0;
-        if field.shape.dims() != expect.as_slice() {
-            return Err(SzError::corrupt(format!(
-                "chunk {} of {}: decoded dims {:?}, index says {:?}",
-                e.chunk_index,
-                e.field,
-                field.shape.dims(),
-                expect
-            )));
-        }
-        Ok(field)
-    };
-    let pool = workers.clamp(1, n);
-    std::thread::scope(|s| {
-        for _ in 0..pool {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = decode_one(&index.entries[i]);
-                slots.lock().unwrap()[i] = Some(r);
-            });
-        }
-    });
-    let decoded: Vec<Field> = slots
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|slot| slot.expect("every slot filled by the pool"))
-        .collect::<Result<_>>()?;
-
-    // group (entry, field) pairs per field, in order of first appearance
-    let names: Vec<String> =
-        index.field_names().into_iter().map(str::to_string).collect();
-    let mut out = Vec::with_capacity(names.len());
-    for name in names {
-        let mut parts: Vec<(&ChunkEntry, &Field)> = index
-            .entries
-            .iter()
-            .zip(&decoded)
-            .filter(|(e, _)| e.field == name)
-            .collect();
-        parts.sort_by_key(|(e, _)| e.chunk_index);
-        out.push(stitch(&name, &parts)?);
-    }
-    Ok(out)
-}
-
-/// Reassemble one field from its decoded chunks, verifying the index is
-/// internally consistent (count, dims agreement, contiguous row coverage).
-fn stitch(name: &str, parts: &[(&ChunkEntry, &Field)]) -> Result<Field> {
-    let (first, _) = parts[0];
-    if parts.len() != first.chunk_count {
-        return Err(SzError::corrupt(format!(
-            "field {name}: have {} of {} chunks",
-            parts.len(),
-            first.chunk_count
-        )));
-    }
-    let dims = first.field_dims.clone();
-    let mut next_row = 0usize;
-    for (i, (e, _)) in parts.iter().enumerate() {
-        if e.chunk_index != i || e.field_dims != dims || e.chunk_count != first.chunk_count {
-            return Err(SzError::corrupt(format!(
-                "field {name}: inconsistent chunk metadata at {i}"
-            )));
-        }
-        if e.rows.0 != next_row {
-            return Err(SzError::corrupt(format!(
-                "field {name}: row gap at chunk {i} (expected start {next_row}, got {})",
-                e.rows.0
-            )));
-        }
-        next_row = e.rows.1;
-    }
-    if next_row != dims[0] {
-        return Err(SzError::corrupt(format!(
-            "field {name}: chunks cover {next_row} of {} rows",
-            dims[0]
-        )));
-    }
-    let values = FieldValues::concat(parts.iter().map(|(_, f)| &f.values))?;
-    // Field::new re-verifies dims-vs-values agreement (shape verification)
-    Field::new(name, &dims, values)
 }
 
 #[cfg(test)]
@@ -439,8 +403,40 @@ mod tests {
             assert_eq!(e.field, c.field);
             assert_eq!(e.rows, c.rows);
             assert_eq!(e.pipeline, c.pipeline);
+            assert_eq!(e.crc32, Some(crc32(&c.stream)));
             assert_eq!(&payload[e.offset..e.offset + e.len], &c.stream[..]);
         }
+    }
+
+    #[test]
+    fn v1_packs_without_checksums_and_still_reads() {
+        let chunks = sample_chunks(1);
+        let packed = pack_v1(&chunks).unwrap();
+        let meta = read_index_meta(&packed).unwrap();
+        assert_eq!(meta.version, VERSION_V1);
+        assert!(meta.index.entries.iter().all(|e| e.crc32.is_none()));
+        let fields = decompress_container(&packed, 2).unwrap();
+        assert_eq!(fields.len(), 1);
+        assert_eq!(fields[0].shape.dims(), &[10, 12, 12]);
+    }
+
+    #[test]
+    fn index_meta_parses_from_prefix_only() {
+        let chunks = sample_chunks(1);
+        let packed = pack(&chunks).unwrap();
+        let meta = read_index_meta(&packed).unwrap();
+        assert_eq!(meta.version, VERSION_V2);
+        // the payload is NOT needed: a prefix ending right at payload_offset
+        // parses identically
+        let prefix = &packed[..meta.payload_offset];
+        let m2 = read_index_meta(prefix).unwrap();
+        assert_eq!(m2.payload_offset, meta.payload_offset);
+        assert_eq!(m2.payload_len, meta.payload_len);
+        assert_eq!(m2.index.entries, meta.index.entries);
+        assert_eq!(
+            meta.payload_offset as u64 + meta.payload_len,
+            packed.len() as u64
+        );
     }
 
     #[test]
@@ -458,6 +454,33 @@ mod tests {
     fn empty_container_roundtrips() {
         let packed = pack(&[]).unwrap();
         assert!(decompress_container(&packed, 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn per_pipeline_deterministically_sorted() {
+        let index = ContainerIndex {
+            entries: ["zzz", "aaa", "mmm", "aaa"]
+                .iter()
+                .enumerate()
+                .map(|(i, p)| ChunkEntry {
+                    field: "f".into(),
+                    chunk_index: i,
+                    chunk_count: 4,
+                    rows: (i, i + 1),
+                    field_dims: vec![4],
+                    pipeline: p.to_string(),
+                    offset: 0,
+                    len: 0,
+                    crc32: None,
+                })
+                .collect(),
+        };
+        let mix = index.per_pipeline();
+        assert_eq!(
+            mix,
+            vec![("aaa".into(), 2), ("mmm".into(), 1), ("zzz".into(), 1)],
+            "per_pipeline must be sorted by name, independent of entry order"
+        );
     }
 
     #[test]
@@ -498,8 +521,9 @@ mod tests {
 
     #[test]
     fn missing_chunk_detected_on_decode() {
-        // hand-craft an index claiming 4 chunks but carrying only the
-        // first, bypassing pack()'s validation: stitch() must refuse
+        // hand-craft a v1 index claiming 4 chunks but carrying only the
+        // first, bypassing pack()'s validation: coverage validation in the
+        // reader must refuse
         let c = sample_chunks(1).remove(0);
         assert_eq!((c.chunk_count, c.rows), (4, (0, 3)));
         let mut w = ByteWriter::new();

@@ -142,7 +142,10 @@ pub fn plan_chunks(field: &Field, chunk_elems: usize) -> Result<Vec<(usize, usiz
     Ok(out)
 }
 
-fn slice_rows(field: &Field, rows: (usize, usize)) -> Result<Field> {
+/// Copy out rows `[start, end)` of a field along the split (slowest) axis —
+/// the chunker's slicing primitive, shared with the reader's
+/// region-assembly path.
+pub fn slice_rows(field: &Field, rows: (usize, usize)) -> Result<Field> {
     let dims = field.shape.dims();
     let (start, end) = rows;
     if dims.is_empty() || start >= end || end > dims[0] {

@@ -59,6 +59,14 @@ impl SzError {
     pub fn config(msg: impl Into<String>) -> Self {
         SzError::Config(msg.into())
     }
+    /// True for buffer-exhaustion errors (`ByteReader`'s "need N bytes,
+    /// have M" shape, also used by the container index's entry-count
+    /// bound): the parse failed because the *buffer* ended, not because
+    /// the bytes were invalid. Incremental readers retry these with a
+    /// longer prefix and fail fast on everything else.
+    pub fn is_exhaustion(&self) -> bool {
+        matches!(self, SzError::Corrupt(m) if m.starts_with("need ") && m.contains(" bytes"))
+    }
 }
 
 #[cfg(test)]

@@ -51,6 +51,7 @@ pub mod pipeline;
 pub mod predictor;
 pub mod preprocessor;
 pub mod quantizer;
+pub mod reader;
 pub mod runtime;
 pub mod util;
 

@@ -1,0 +1,149 @@
+//! LRU cache of decoded chunks keyed by `(field, chunk_index)` — the
+//! serve-path accelerator: repeated region queries over the same hot
+//! chunks skip fetch, CRC, and decode entirely.
+//!
+//! Implementation: a `HashMap` of entries stamped with a monotonically
+//! increasing access tick; eviction scans for the minimum tick. O(n) per
+//! eviction is deliberate — capacities are tens of chunks, and the scan is
+//! trivially cheaper than a decode it stands in for.
+
+use crate::data::Field;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Cache key: (field name, chunk index within the field).
+pub type ChunkKey = (String, usize);
+
+struct Inner {
+    tick: u64,
+    map: HashMap<ChunkKey, (u64, Arc<Field>)>,
+}
+
+/// Bounded LRU over decoded chunks. Capacity 0 disables caching (every
+/// `get` misses, `insert` is a no-op) — the whole-container decompression
+/// path uses that so batch decodes don't hoard memory.
+pub struct ChunkCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl ChunkCache {
+    /// Cache holding at most `capacity` decoded chunks.
+    pub fn new(capacity: usize) -> Self {
+        ChunkCache {
+            capacity,
+            inner: Mutex::new(Inner { tick: 0, map: HashMap::new() }),
+        }
+    }
+
+    /// Maximum entries.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True if nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up a decoded chunk, refreshing its recency on hit. Capacity 0
+    /// returns immediately — the batch decode path must not funnel every
+    /// worker through the cache mutex for lookups that can never hit.
+    pub fn get(&self, key: &ChunkKey) -> Option<Arc<Field>> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let (stamp, field) = inner.map.get_mut(key)?;
+        *stamp = tick;
+        Some(Arc::clone(field))
+    }
+
+    /// Insert a decoded chunk, evicting the least-recently-used entry when
+    /// over capacity.
+    pub fn insert(&self, key: ChunkKey, field: Arc<Field>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(key, (tick, field));
+        while inner.map.len() > self.capacity {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map over capacity");
+            inner.map.remove(&oldest);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn field(tag: usize) -> Arc<Field> {
+        Arc::new(Field::f32(format!("f{tag}"), &[1], vec![tag as f32]).unwrap())
+    }
+
+    fn key(i: usize) -> ChunkKey {
+        ("f".to_string(), i)
+    }
+
+    #[test]
+    fn hit_miss_and_capacity() {
+        let c = ChunkCache::new(2);
+        assert!(c.get(&key(0)).is_none());
+        c.insert(key(0), field(0));
+        c.insert(key(1), field(1));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key(0)).is_some());
+        // inserting a third evicts the LRU — key 1, since key 0 was touched
+        c.insert(key(2), field(2));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key(1)).is_none(), "LRU entry evicted");
+        assert!(c.get(&key(0)).is_some());
+        assert!(c.get(&key(2)).is_some());
+    }
+
+    #[test]
+    fn get_refreshes_recency() {
+        let c = ChunkCache::new(3);
+        for i in 0..3 {
+            c.insert(key(i), field(i));
+        }
+        // touch 0 and 1; inserting 3 must evict 2
+        c.get(&key(0));
+        c.get(&key(1));
+        c.insert(key(3), field(3));
+        assert!(c.get(&key(2)).is_none());
+        assert!(c.get(&key(0)).is_some() && c.get(&key(1)).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let c = ChunkCache::new(0);
+        c.insert(key(0), field(0));
+        assert!(c.is_empty());
+        assert!(c.get(&key(0)).is_none());
+    }
+
+    #[test]
+    fn reinsert_same_key_does_not_grow() {
+        let c = ChunkCache::new(2);
+        for _ in 0..10 {
+            c.insert(key(7), field(7));
+        }
+        assert_eq!(c.len(), 1);
+    }
+}

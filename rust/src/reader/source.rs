@@ -1,0 +1,269 @@
+//! Byte sources the [`super::ContainerReader`] fetches chunk payloads
+//! through: a fully-resident slice, a seekable file (`Read + Seek`), and a
+//! read-ahead wrapper for sequential scan patterns.
+//!
+//! The trait is deliberately positional (`read_at`) rather than streaming:
+//! region reads jump straight to the chunks overlapping the request, and a
+//! positional interface keeps the source stateless from the reader's point
+//! of view, so concurrent decode workers can fetch independently.
+
+use crate::error::{Result, SzError};
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Random-access byte source for container payload fetches.
+pub trait ChunkSource: Send + Sync {
+    /// Total artifact length in bytes.
+    fn len(&self) -> u64;
+
+    /// Fill `buf` from absolute byte `offset`; errors if the range is not
+    /// fully available.
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()>;
+
+    /// True for zero-length sources.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Diagnostic label ("slice", "file", "prefetch").
+    fn kind(&self) -> &'static str;
+}
+
+/// In-memory artifact: the whole container is resident, `read_at` copies a
+/// subrange. The zero-setup source behind
+/// [`super::ContainerReader::from_slice`].
+pub struct SliceSource<'a> {
+    data: &'a [u8],
+}
+
+impl<'a> SliceSource<'a> {
+    /// Source over a resident artifact.
+    pub fn new(data: &'a [u8]) -> Self {
+        SliceSource { data }
+    }
+}
+
+impl ChunkSource for SliceSource<'_> {
+    fn len(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let end = offset
+            .checked_add(buf.len() as u64)
+            .filter(|&e| e <= self.data.len() as u64)
+            .ok_or_else(|| {
+                SzError::corrupt(format!(
+                    "read [{offset}, +{}) past end of {}-byte source",
+                    buf.len(),
+                    self.data.len()
+                ))
+            })?;
+        buf.copy_from_slice(&self.data[offset as usize..end as usize]);
+        Ok(())
+    }
+
+    fn kind(&self) -> &'static str {
+        "slice"
+    }
+}
+
+/// Seekable-stream artifact (`std::io::{Read, Seek}`): only the index and
+/// the requested chunks are ever read, so a multi-GB container never has
+/// to be resident. A `Mutex` serializes the seek+read pairs; decode work
+/// dominates fetch time, so workers rarely contend.
+pub struct FileSource<F> {
+    inner: Mutex<F>,
+    len: u64,
+}
+
+impl<F: Read + Seek + Send> FileSource<F> {
+    /// Wrap a seekable stream (file, `Cursor`, ...); measures its length
+    /// with one end-seek.
+    pub fn new(mut stream: F) -> Result<Self> {
+        let len = stream.seek(SeekFrom::End(0))?;
+        Ok(FileSource { inner: Mutex::new(stream), len })
+    }
+}
+
+impl FileSource<std::fs::File> {
+    /// Open a container file for indexed-seek reads.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        Self::new(std::fs::File::open(path)?)
+    }
+}
+
+impl<F: Read + Seek + Send> ChunkSource for FileSource<F> {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        if offset
+            .checked_add(buf.len() as u64)
+            .map(|e| e > self.len)
+            .unwrap_or(true)
+        {
+            return Err(SzError::corrupt(format!(
+                "read [{offset}, +{}) past end of {}-byte source",
+                buf.len(),
+                self.len
+            )));
+        }
+        let mut f = self.inner.lock().unwrap();
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)?;
+        Ok(())
+    }
+
+    fn kind(&self) -> &'static str {
+        "file"
+    }
+}
+
+/// Read-ahead wrapper: every miss fetches `window`-sized blocks from the
+/// inner source, so sequential chunk walks (full-field reads, checksum
+/// verification) issue one underlying read per window instead of one per
+/// chunk. Random ROI probes simply miss through at no extra cost beyond
+/// over-reading up to one window.
+pub struct PrefetchSource<'a> {
+    inner: Box<dyn ChunkSource + 'a>,
+    window: usize,
+    buffer: Mutex<Option<(u64, Vec<u8>)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<'a> PrefetchSource<'a> {
+    /// Default read-ahead window (1 MiB).
+    pub const DEFAULT_WINDOW: usize = 1 << 20;
+
+    /// Wrap `inner` with a read-ahead window of `window` bytes (min 4 KiB).
+    pub fn new(inner: Box<dyn ChunkSource + 'a>, window: usize) -> Self {
+        PrefetchSource {
+            inner,
+            window: window.max(4096),
+            buffer: Mutex::new(None),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// (buffer hits, buffer misses) so far.
+    pub fn hit_miss(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+impl ChunkSource for PrefetchSource<'_> {
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let want = buf.len() as u64;
+        let end = offset.checked_add(want).ok_or_else(|| {
+            SzError::corrupt("prefetch read range overflows")
+        })?;
+        if end > self.inner.len() {
+            return Err(SzError::corrupt(format!(
+                "read [{offset}, +{want}) past end of {}-byte source",
+                self.inner.len()
+            )));
+        }
+        let mut guard = self.buffer.lock().unwrap();
+        if let Some((base, data)) = guard.as_ref() {
+            if offset >= *base && end <= base + data.len() as u64 {
+                let lo = (offset - base) as usize;
+                buf.copy_from_slice(&data[lo..lo + buf.len()]);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // over-read a full window only when this miss extends a sequential
+        // walk (or is the very first read); random probes — e.g. a
+        // parallel ROI decode fetching chunks out of order — get exactly
+        // what they asked for, so prefetch never multiplies their I/O
+        let sequential = match guard.as_ref() {
+            None => true,
+            Some((base, data)) => offset == base + data.len() as u64,
+        };
+        let fetch = if sequential {
+            (self.window as u64)
+                .max(want)
+                .min(self.inner.len() - offset) as usize
+        } else {
+            want as usize
+        };
+        let mut data = vec![0u8; fetch];
+        self.inner.read_at(offset, &mut data)?;
+        buf.copy_from_slice(&data[..buf.len()]);
+        *guard = Some((offset, data));
+        Ok(())
+    }
+
+    fn kind(&self) -> &'static str {
+        "prefetch"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn bytes(n: usize) -> Vec<u8> {
+        (0..n).map(|i| (i * 7 % 251) as u8).collect()
+    }
+
+    #[test]
+    fn slice_source_reads_and_bounds_checks() {
+        let data = bytes(100);
+        let s = SliceSource::new(&data);
+        assert_eq!(s.len(), 100);
+        let mut buf = [0u8; 10];
+        s.read_at(5, &mut buf).unwrap();
+        assert_eq!(&buf[..], &data[5..15]);
+        assert!(s.read_at(95, &mut buf).is_err());
+        assert!(s.read_at(u64::MAX - 3, &mut buf).is_err());
+    }
+
+    #[test]
+    fn file_source_over_cursor_matches_slice() {
+        let data = bytes(4096);
+        let f = FileSource::new(Cursor::new(data.clone())).unwrap();
+        assert_eq!(f.len(), 4096);
+        let mut buf = [0u8; 64];
+        f.read_at(1000, &mut buf).unwrap();
+        assert_eq!(&buf[..], &data[1000..1064]);
+        assert!(f.read_at(4090, &mut buf).is_err(), "past-end read must fail");
+    }
+
+    #[test]
+    fn prefetch_turns_sequential_reads_into_window_fetches() {
+        let data = bytes(64 * 1024);
+        let p = PrefetchSource::new(Box::new(SliceSource::new(&data)), 16 * 1024);
+        let mut buf = [0u8; 1024];
+        for i in 0..32 {
+            p.read_at(i * 1024, &mut buf).unwrap();
+            assert_eq!(&buf[..], &data[(i as usize) * 1024..][..1024]);
+        }
+        let (hits, misses) = p.hit_miss();
+        assert_eq!(hits + misses, 32);
+        assert!(misses <= 3, "32 KiB walked in 16 KiB windows: misses {misses}");
+        assert!(hits >= 28, "sequential walk should hit the window: hits {hits}");
+    }
+
+    #[test]
+    fn prefetch_bounds_checked_before_fetch() {
+        let data = bytes(1000);
+        let p = PrefetchSource::new(Box::new(SliceSource::new(&data)), 1 << 20);
+        let mut buf = [0u8; 100];
+        // window larger than the source clamps instead of erroring
+        p.read_at(950, &mut buf[..50]).unwrap();
+        assert!(p.read_at(950, &mut buf).is_err());
+    }
+}

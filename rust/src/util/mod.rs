@@ -1,5 +1,6 @@
-//! Utility substrates: PRNG and property-testing helpers.
+//! Utility substrates: PRNG, property-testing helpers, and CRC-32.
 
+pub mod crc32;
 pub mod prop;
 pub mod rng;
 
@@ -8,4 +9,57 @@ pub mod rng;
 /// parallel container-decompression entry points.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(i)` for every `i in 0..n` across up to `workers` scoped threads
+/// pulling indices from a shared counter (work stealing) — the fan-out
+/// shape shared by the reader's parallel decode and checksum-verify
+/// paths. With one worker (or one item) `f` runs inline, thread-free.
+/// Results are the closure's business (collect into a mutexed slot
+/// vector, fold into an atomic, ...).
+pub fn par_for_each<F: Fn(usize) + Sync>(n: usize, workers: usize, f: F) {
+    if n == 0 {
+        return;
+    }
+    let pool = workers.clamp(1, n);
+    if pool == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..pool {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_for_each_visits_every_index_once() {
+        for workers in [1usize, 3, 16] {
+            let n = 97;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            par_for_each(n, workers, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "workers={workers}: every index exactly once"
+            );
+        }
+        par_for_each(0, 4, |_| panic!("no items, no calls"));
+    }
 }

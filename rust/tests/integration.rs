@@ -336,6 +336,117 @@ fn coordinator_edge_cases_roundtrip() {
     }
 }
 
+/// Acceptance: extracting a 1-chunk ROI from a many-chunk container
+/// decodes only the overlapping chunks (asserted via the reader's decode
+/// counters) and returns bit-identical data to slicing the full
+/// `decompress_container` output; v2 containers round-trip with CRC
+/// verification on, and v1 artifacts remain decodable.
+#[test]
+fn reader_roi_decodes_only_overlapping_chunks() {
+    use sz3::coordinator::slice_rows;
+    use sz3::reader::ContainerReader;
+
+    // 40 rows of 20x20, 4 rows/chunk -> 10 chunks
+    let dims = [40usize, 20, 20];
+    let mut rng = Pcg32::seeded(314);
+    let field =
+        Field::f32("vol", &dims, sz3::util::prop::smooth_field(&mut rng, &dims)).unwrap();
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Abs(1e-3),
+        workers: 4,
+        chunk_elems: 20 * 20 * 4,
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let (artifact, report) = coord.run_to_container(vec![field.clone()]).unwrap();
+    assert_eq!(report.chunks, 10);
+
+    // v2 with a CRC per chunk, verified end to end
+    let meta = sz3::container::read_index_meta(&artifact).unwrap();
+    assert_eq!(meta.version, sz3::container::VERSION_V2);
+    assert!(meta.index.entries.iter().all(|e| e.crc32.is_some()));
+
+    let full = sz3::container::decompress_container(&artifact, 4).unwrap().remove(0);
+    check_bound(&field, &full, 1e-3, "v2-roundtrip");
+
+    // 1-chunk ROI: exactly rows 12..16 = chunk 3
+    let reader = ContainerReader::from_slice(&artifact).unwrap().with_workers(4);
+    let region = reader.read_region("vol", 12..16).unwrap();
+    let stats = reader.stats();
+    assert_eq!(stats.chunks_decoded, 1, "1-chunk ROI must decode exactly 1 of 10");
+    assert_eq!(stats.crc_verified, 1, "every fetch is CRC-checked on v2");
+    assert_eq!(
+        region.values,
+        slice_rows(&full, (12, 16)).unwrap().values,
+        "ROI must be bit-identical to slicing the full decode"
+    );
+
+    // boundary-spanning ROI: rows 14..22 overlaps chunks 3, 4, 5
+    let reader = ContainerReader::from_slice(&artifact).unwrap().with_workers(4);
+    let region = reader.read_region("vol", 14..22).unwrap();
+    assert_eq!(reader.stats().chunks_decoded, 3);
+    assert_eq!(region.values, slice_rows(&full, (14, 22)).unwrap().values);
+
+    // v1 artifacts (no checksum) remain decodable through the same path
+    let mut chunks = Vec::new();
+    coord.run(vec![field.clone()], |c| chunks.push(c)).unwrap();
+    let v1 = sz3::container::pack_v1(&chunks).unwrap();
+    let old = decompress_any(&v1).unwrap();
+    check_bound(&field, &old, 1e-3, "v1-roundtrip");
+    let reader = ContainerReader::from_slice(&v1).unwrap();
+    assert_eq!(reader.version(), sz3::container::VERSION_V1);
+    let region = reader.read_region("vol", 12..16).unwrap();
+    assert_eq!(region.values, slice_rows(&full, (12, 16)).unwrap().values);
+    assert_eq!(reader.stats().crc_verified, 0);
+}
+
+#[test]
+fn extract_cli_shape_file_backed_roi_with_cache() {
+    // The `sz3 extract` shape end to end: container on disk, file-backed
+    // reader, repeated ROI queries hitting the warm-chunk cache.
+    use sz3::reader::{ContainerReader, FileSource, PrefetchSource};
+
+    let dims = [32usize, 16, 16];
+    let mut rng = Pcg32::seeded(99);
+    let field =
+        Field::f32("t", &dims, sz3::util::prop::smooth_field(&mut rng, &dims)).unwrap();
+    let cfg = JobConfig {
+        pipeline: "sz3-interp".into(),
+        bound: ErrorBound::Abs(1e-3),
+        workers: 2,
+        chunk_elems: 16 * 16 * 4, // 8 chunks
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let (artifact, _) = coord.run_to_container(vec![field]).unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("sz3_it_extract_{}.sz3c", std::process::id()));
+    std::fs::write(&path, &artifact).unwrap();
+
+    let src = PrefetchSource::new(Box::new(FileSource::open(&path).unwrap()), 1 << 16);
+    let reader = ContainerReader::new(Box::new(src))
+        .unwrap()
+        .with_workers(2)
+        .with_chunk_cache(4);
+    let a = reader.read_region("t", 10..14).unwrap();
+    let cold = reader.stats();
+    assert_eq!(cold.chunks_decoded, 2, "rows 10..14 span chunks 8..12 and 12..16");
+    assert!(
+        cold.bytes_fetched < artifact.len() as u64,
+        "ROI must not fetch the whole artifact"
+    );
+    let b = reader.read_region("t", 10..14).unwrap();
+    let warm = reader.stats();
+    assert_eq!(a.values, b.values);
+    assert_eq!(warm.chunks_decoded, cold.chunks_decoded, "warm read re-decodes nothing");
+    assert!(warm.cache_hits > cold.cache_hits);
+
+    let _ = std::fs::remove_file(&path);
+}
+
 #[test]
 fn pwrel_bound_via_log_transform_pipeline() {
     use sz3::preprocessor::{LogTransform, Preprocessor};
