@@ -73,7 +73,7 @@ fn main() {
     // ROI with a warm LRU cache: the serve-path steady state
     let warm_reader = ContainerReader::from_slice(&artifact)
         .unwrap()
-        .with_chunk_cache(16);
+        .with_cache_bytes(64 << 20);
     warm_reader.read_region("snapshot", roi.clone()).unwrap();
     let (_, warm_mbs) = bench.throughput("read_region(warm cache)", roi_bytes, || {
         warm_reader.read_region("snapshot", roi.clone()).unwrap()

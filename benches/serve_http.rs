@@ -1,0 +1,141 @@
+//! HTTP serving bench: ROI request latency and throughput over loopback
+//! through `sz3::server`, cold (first touch of each chunk, cache empty)
+//! vs warm (every chunk resident in the shared byte-budgeted cache).
+//! Exact client-observed percentiles — p50/p99 are computed from the raw
+//! per-request sample vector, not the server's bucketed histogram — and
+//! the machine-readable `BENCH_PR3.json` perf summary for the CI trend
+//! line. The PR's acceptance bar lives here: warm p50 must come in below
+//! cold p50.
+//!
+//! Output: `serve,<case>,<p50_us>,<p99_us>,<rps>,<mbs>`
+
+use sz3::bench_harness::PerfSummary;
+use sz3::config::JobConfig;
+use sz3::coordinator::Coordinator;
+use sz3::data::Field;
+use sz3::pipeline::ErrorBound;
+use sz3::server::{self, ArtifactStore, HttpClient, StoreOptions};
+use sz3::util::prop;
+use sz3::util::rng::Pcg32;
+use std::time::Instant;
+
+/// Exact percentile over raw latency samples (µs).
+fn percentile_us(samples: &mut [u64], q: f64) -> u64 {
+    samples.sort_unstable();
+    if samples.is_empty() {
+        return 0;
+    }
+    let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+    samples[idx]
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let nz = if quick { 96 } else { 256 };
+    let (ny, nx) = (64usize, 64);
+    let rows_per_chunk = 8;
+    let warm_passes = if quick { 3 } else { 10 };
+    println!("# serve_http bench (quick={quick})");
+
+    // one artifact: nz x 64 x 64, 8 rows per chunk
+    let mut rng = Pcg32::seeded(7042);
+    let dims = [nz, ny, nx];
+    let field = Field::f32("snapshot", &dims, prop::smooth_field(&mut rng, &dims)).unwrap();
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Abs(1e-3),
+        workers: 4,
+        chunk_elems: ny * nx * rows_per_chunk,
+        queue_depth: 4,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let (artifact, report) = coord.run_to_container(vec![field]).unwrap();
+    let n_chunks = report.chunks;
+    println!("# artifact: {} bytes, {} chunks (ratio {:.2})", artifact.len(), n_chunks, report.ratio());
+
+    let dir = std::env::temp_dir().join(format!("sz3_bench_http_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("snapshot.sz3c"), &artifact).unwrap();
+
+    // cache big enough to hold the full decoded artifact: the warm pass
+    // measures the serve path, not eviction churn
+    let store = ArtifactStore::open_dir(
+        &dir,
+        &StoreOptions { cache_bytes: 256 << 20, workers: 2, verify: false },
+    )
+    .unwrap();
+    let handle = server::serve(store, "127.0.0.1:0", 4).unwrap();
+    let addr = handle.addr();
+    let mut summary = PerfSummary::new();
+
+    // one ROI target per chunk, each spanning exactly one chunk
+    let targets: Vec<String> = (0..n_chunks)
+        .map(|c| {
+            format!(
+                "/v1/artifacts/snapshot/fields/snapshot?rows={}..{}",
+                c * rows_per_chunk,
+                (c + 1) * rows_per_chunk
+            )
+        })
+        .collect();
+    let roi_bytes = rows_per_chunk * ny * nx * 4;
+
+    {
+        let mut client = HttpClient::connect(addr).unwrap();
+
+        // -- cold: first touch of every chunk decodes it ------------------
+        let mut cold = Vec::with_capacity(targets.len());
+        for t in &targets {
+            let t0 = Instant::now();
+            let resp = client.get(t).unwrap();
+            cold.push(t0.elapsed().as_micros() as u64);
+            assert_eq!(resp.status, 200);
+            assert_eq!(resp.body.len(), roi_bytes);
+        }
+        let cold_p50 = percentile_us(&mut cold, 0.50);
+        let cold_p99 = percentile_us(&mut cold, 0.99);
+        println!("serve,cold,{cold_p50},{cold_p99},-,-");
+        summary.record("serve_cold_p50_us", cold_p50 as f64);
+        summary.record("serve_cold_p99_us", cold_p99 as f64);
+
+        // -- warm: every chunk resident, repeated passes ------------------
+        let mut warm = Vec::with_capacity(targets.len() * warm_passes);
+        let wall = Instant::now();
+        for _ in 0..warm_passes {
+            for t in &targets {
+                let t0 = Instant::now();
+                let resp = client.get(t).unwrap();
+                warm.push(t0.elapsed().as_micros() as u64);
+                assert_eq!(resp.status, 200);
+            }
+        }
+        let wall = wall.elapsed().as_secs_f64().max(1e-9);
+        let n_warm = warm.len();
+        let warm_p50 = percentile_us(&mut warm, 0.50);
+        let warm_p99 = percentile_us(&mut warm, 0.99);
+        let rps = n_warm as f64 / wall;
+        let mbs = (n_warm * roi_bytes) as f64 / 1e6 / wall;
+        println!("serve,warm,{warm_p50},{warm_p99},{rps:.0},{mbs:.1}");
+        summary.record("serve_warm_p50_us", warm_p50 as f64);
+        summary.record("serve_warm_p99_us", warm_p99 as f64);
+        summary.record("serve_warm_rps", rps);
+        summary.record("serve_warm_mbs", mbs);
+
+        // the acceptance bar: the cache must make repeat queries cheaper
+        assert!(
+            warm_p50 < cold_p50,
+            "warm p50 {warm_p50}µs must beat cold p50 {cold_p50}µs"
+        );
+
+        // server-side view for the log: decodes happened once, hits after
+        let resp = client.get("/statsz").unwrap();
+        println!("# statsz: {}", resp.text().unwrap());
+    } // drop the client connection before shutting the server down
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    summary.write_json("BENCH_PR3.json").unwrap();
+    println!("# perf summary written to BENCH_PR3.json");
+    println!("{}", summary.to_json());
+}

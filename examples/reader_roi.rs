@@ -49,7 +49,7 @@ fn main() {
     let reader = ContainerReader::open_path(&path)
         .unwrap()
         .with_workers(4)
-        .with_chunk_cache(16);
+        .with_cache_bytes(64 << 20);
     println!(
         "opened v{} container: fields {:?}, {} chunks, {} bytes fetched so far",
         reader.version(),

@@ -1,0 +1,125 @@
+//! End-to-end HTTP serving walkthrough: compress a two-field snapshot
+//! into an `SZ3C` artifact, publish it with the in-process server
+//! (`sz3 serve-http`'s engine), then act as a remote client — list the
+//! catalog, read metadata, pull a region of interest, fetch a raw
+//! compressed chunk and decode it locally, and finally check `/statsz`
+//! to see the shared byte-budgeted cache doing its job.
+//!
+//! Run: `cargo run --release --example serve_http`
+
+use sz3::config::{JobConfig, Json};
+use sz3::coordinator::Coordinator;
+use sz3::data::Field;
+use sz3::pipeline::{self, ErrorBound};
+use sz3::server::{self, ArtifactStore, HttpClient, StoreOptions};
+use sz3::util::prop;
+use sz3::util::rng::Pcg32;
+
+fn main() {
+    // -- produce an artifact the way `sz3 compress --container` would ------
+    let dims = [48usize, 32, 32];
+    let mut rng = Pcg32::seeded(99);
+    let fields = vec![
+        Field::f32("density", &dims, prop::smooth_field(&mut rng, &dims)).unwrap(),
+        Field::f32("energy", &dims, prop::smooth_field(&mut rng, &dims)).unwrap(),
+    ];
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Abs(1e-3),
+        workers: 4,
+        chunk_elems: 32 * 32 * 6, // 6 rows per chunk -> 8 chunks per field
+        queue_depth: 4,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let (artifact, report) = coord.run_to_container(fields).unwrap();
+    println!("compressed: {report}");
+
+    let dir = std::env::temp_dir().join(format!("sz3_example_http_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("snapshot.sz3c"), &artifact).unwrap();
+
+    // -- publish: artifacts open once, CRC-verified, behind one cache ------
+    let store = ArtifactStore::open_dir(
+        &dir,
+        &StoreOptions { cache_bytes: 32 << 20, workers: 4, verify: true },
+    )
+    .unwrap();
+    let handle = server::serve(store, "127.0.0.1:0", 2).unwrap();
+    let addr = handle.addr();
+    println!("serving on http://{addr}");
+
+    {
+        let mut client = HttpClient::connect(addr).unwrap();
+
+        // -- list the catalog ----------------------------------------------
+        let resp = client.get("/v1/artifacts").unwrap();
+        println!("GET /v1/artifacts -> {} {}", resp.status, resp.text().unwrap());
+
+        // -- metadata: dims, dtype, chunk map ------------------------------
+        let resp = client.get("/v1/artifacts/snapshot").unwrap();
+        let meta = Json::parse(resp.text().unwrap()).unwrap();
+        let f0 = &meta.get("fields").unwrap().as_arr().unwrap()[0];
+        let f0_dims: Vec<usize> = f0
+            .get("dims")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        println!(
+            "GET /v1/artifacts/snapshot -> field '{}' dims {:?} in {} chunks",
+            f0.get("name").unwrap().as_str().unwrap(),
+            f0_dims,
+            f0.get("chunks").unwrap().as_usize().unwrap()
+        );
+
+        // -- region of interest: rows 10..22 of one field ------------------
+        let resp = client
+            .get("/v1/artifacts/snapshot/fields/density?rows=10..22")
+            .unwrap();
+        println!(
+            "GET .../fields/density?rows=10..22 -> {} bytes, dims [{}], dtype {}",
+            resp.body.len(),
+            resp.header("x-sz3-dims").unwrap(),
+            resp.header("x-sz3-dtype").unwrap()
+        );
+        assert_eq!(resp.body.len(), 12 * 32 * 32 * 4);
+
+        // a second, overlapping read comes from the warm cache
+        let resp2 = client
+            .get("/v1/artifacts/snapshot/fields/density?rows=12..18")
+            .unwrap();
+        assert_eq!(resp2.status, 200);
+
+        // -- raw chunk passthrough: decode client-side ---------------------
+        let resp = client.get("/v1/artifacts/snapshot/raw?chunk=0").unwrap();
+        let chunk = pipeline::decompress_any(&resp.body).unwrap();
+        println!(
+            "GET .../raw?chunk=0 -> {} compressed bytes via {}, decoded locally to {:?}",
+            resp.body.len(),
+            resp.header("x-sz3-pipeline").unwrap(),
+            chunk.shape.dims()
+        );
+
+        // -- observability --------------------------------------------------
+        let resp = client.get("/statsz").unwrap();
+        let stats = Json::parse(resp.text().unwrap()).unwrap();
+        let snap = stats.get("artifacts").unwrap().get("snapshot").unwrap();
+        println!(
+            "GET /statsz -> decoded {} chunks, {} cache hits, cache holds {} bytes",
+            snap.get("chunks_decoded").unwrap().as_usize().unwrap(),
+            snap.get("cache_hits").unwrap().as_usize().unwrap(),
+            stats.get("cache").unwrap().get("bytes").unwrap().as_usize().unwrap()
+        );
+        assert!(
+            snap.get("cache_hits").unwrap().as_usize().unwrap() >= 1,
+            "overlapping reads must hit the warm cache"
+        );
+    }
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("done: server drained and shut down cleanly");
+}

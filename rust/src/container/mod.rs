@@ -5,7 +5,9 @@
 //! per chunk, see [`AdaptiveChunkSelector`]). This module packs those
 //! chunks into one self-describing artifact; [`crate::reader`] fans them
 //! back out — in parallel for whole-container decompression, or chunk by
-//! chunk for indexed-seek region reads.
+//! chunk for indexed-seek region reads — and [`crate::server`] publishes
+//! artifacts over HTTP range queries (`sz3 serve-http`, API contract in
+//! `docs/SERVE.md`).
 //!
 //! # Format
 //!

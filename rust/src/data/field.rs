@@ -58,6 +58,25 @@ impl FieldValues {
         }
     }
 
+    /// Serialize the values as flat little-endian bytes — the raw on-disk
+    /// and on-wire layout shared by `sz3 decompress`/`extract` output
+    /// files and the HTTP server's region responses.
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.nbytes());
+        match self {
+            FieldValues::F32(v) => {
+                v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes()))
+            }
+            FieldValues::F64(v) => {
+                v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes()))
+            }
+            FieldValues::I32(v) => {
+                v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes()))
+            }
+        }
+        out
+    }
+
     /// Concatenate same-dtype value buffers in order (the chunk-reassembly
     /// path shared by `coordinator::reassemble` and the container format).
     pub fn concat<'a, I>(parts: I) -> Result<FieldValues>
@@ -179,5 +198,21 @@ mod tests {
     #[test]
     fn shape_value_mismatch() {
         assert!(Field::f32("t", &[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn le_bytes_roundtrip_every_dtype() {
+        let f32s = FieldValues::F32(vec![1.5, -2.25]);
+        assert_eq!(
+            f32s.to_le_bytes(),
+            [1.5f32.to_le_bytes(), (-2.25f32).to_le_bytes()].concat()
+        );
+        let i32s = FieldValues::I32(vec![7, -9]);
+        assert_eq!(
+            i32s.to_le_bytes(),
+            [7i32.to_le_bytes(), (-9i32).to_le_bytes()].concat()
+        );
+        let f64s = FieldValues::F64(vec![3.0]);
+        assert_eq!(f64s.to_le_bytes().len(), f64s.nbytes());
     }
 }

@@ -17,6 +17,16 @@
 //!   and serves batched block analysis to the L3 hot path. Python never
 //!   runs at request time.
 //!
+//! On top of the compression framework sits the **serving stack**: the
+//! [`container`] module packs coordinator output into self-describing
+//! chunked `SZ3C` artifacts (per-chunk CRC-32, per-chunk pipeline
+//! selection); [`reader`] opens them for indexed-seek region reads with
+//! a byte-budgeted decoded-chunk cache; and [`server`] publishes a
+//! directory of artifacts over HTTP range queries (`sz3 serve-http`).
+//! Architecture notes live in `docs/ARCHITECTURE.md`, the container
+//! byte layout in `docs/CONTAINER.md`, and the HTTP API contract in
+//! `docs/SERVE.md`.
+//!
 //! Quickstart (`no_run`: rustdoc does not apply the workspace rpath flags,
 //! so doctest binaries cannot locate libxla_extension's bundled libstdc++
 //! in this image — the same code runs as `examples/quickstart.rs` and is
@@ -53,6 +63,7 @@ pub mod preprocessor;
 pub mod quantizer;
 pub mod reader;
 pub mod runtime;
+pub mod server;
 pub mod util;
 
 pub use error::{Result, SzError};

@@ -32,10 +32,13 @@ USAGE:
                  --out file.sz3
   sz3 decompress --input file.sz3 --out raw.bin [--workers N]
   sz3 extract    --input file.sz3c --out raw.bin [--field NAME]
-                 [--rows A..B] [--workers N] [--cache N] [--prefetch-kb N]
+                 [--rows A..B] [--workers N] [--cache-mb MB]
+                 [--prefetch-kb N]
   sz3 info       --input file.sz3
   sz3 serve      [--config job.json] [--dataset nyx|all] [--out dir]
                  [--container] [--adaptive]
+  sz3 serve-http --dir artifacts/ [--addr 127.0.0.1:8080] [--threads N]
+                 [--cache-mb MB] [--workers N] [--no-verify]
   sz3 datasets                              # Table 3 registry
   sz3 pipelines                             # registry names
   sz3 quant-hist [--field ff|ff] [--eb 1e-10] [--radius 64]   # Fig. 3
@@ -46,7 +49,12 @@ Raw input files are flat little-endian arrays of --dtype covering --dims.
 picks the best-fit pipeline per chunk (recorded in the chunk index).
 extract seeks straight to the chunks overlapping --rows (half-open, along
 the slowest axis) and decodes only those, CRC-checking each fetch on v2
-containers — the whole artifact is never loaded.";
+containers — the whole artifact is never loaded. --cache-mb budgets the
+decoded-chunk LRU in megabytes (0 disables; --cache is a deprecated
+alias for --cache-mb and now also takes megabytes, not entries).
+serve-http publishes every .sz3c under --dir over HTTP range queries
+(list/meta/ROI/raw-chunk endpoints, /healthz, /statsz) with one shared
+--cache-mb byte budget across all artifacts; see docs/SERVE.md.";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -108,13 +116,10 @@ fn read_raw_field(path: &str, dims: &[usize], dtype: &str, name: &str) -> CliRes
 }
 
 fn write_raw_field(path: &str, field: &Field) -> CliResult {
-    let mut out = Vec::with_capacity(field.nbytes());
-    match &field.values {
-        FieldValues::F32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
-        FieldValues::F64(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
-        FieldValues::I32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
-    }
-    std::fs::write(path, out).map_err(|e| err(format!("writing {path}: {e}")))?;
+    // the same flat little-endian layout the HTTP server's region
+    // responses use, so `curl` output and `extract` output interchange
+    std::fs::write(path, field.values.to_le_bytes())
+        .map_err(|e| err(format!("writing {path}: {e}")))?;
     Ok(())
 }
 
@@ -126,6 +131,7 @@ fn run(argv: Vec<String>) -> CliResult {
         "extract" => cmd_extract(&a),
         "info" => cmd_info(&a),
         "serve" => cmd_serve(&a),
+        "serve-http" => cmd_serve_http(&a),
         "datasets" => cmd_datasets(),
         "pipelines" => cmd_pipelines(),
         "quant-hist" => cmd_quant_hist(&a),
@@ -280,26 +286,32 @@ fn cmd_decompress(a: &Args) -> CliResult {
     Ok(())
 }
 
-/// Parse an `A..B` half-open row range.
-fn parse_rows(spec: &str) -> CliResult<std::ops::Range<usize>> {
-    let (a, b) = spec
-        .split_once("..")
-        .ok_or_else(|| err(format!("--rows '{spec}' is not of the form A..B")))?;
-    let start: usize =
-        a.trim().parse().map_err(|_| err(format!("bad row start '{a}'")))?;
-    let end: usize =
-        b.trim().parse().map_err(|_| err(format!("bad row end '{b}'")))?;
-    Ok(start..end)
-}
-
 /// Indexed-seek ROI extraction: open the container through a seekable file
 /// source, decode only the chunks overlapping the requested rows, and
 /// report exactly how little was fetched and decoded.
+/// `--cache-mb` with the deprecated `--cache` alias: both are megabytes
+/// of decoded-chunk cache budget now that the LRU accounts bytes (the
+/// pre-byte-budget `--cache` counted entries).
+fn cache_budget_bytes(a: &Args, default_mb: usize) -> CliResult<usize> {
+    let mb = if a.get("cache-mb").is_some() {
+        a.get_or("cache-mb", default_mb)?
+    } else if a.get("cache").is_some() {
+        eprintln!(
+            "warning: --cache is deprecated (it used to count entries); \
+             interpreting as --cache-mb (megabytes)"
+        );
+        a.get_or("cache", default_mb)?
+    } else {
+        default_mb
+    };
+    Ok(mb.saturating_mul(1 << 20))
+}
+
 fn cmd_extract(a: &Args) -> CliResult {
     let input = a.need("input")?;
     let out = a.need("out")?;
     let workers = a.get_or("workers", sz3::util::default_workers())?.max(1);
-    let cache = a.get_or("cache", 16usize)?;
+    let cache_bytes = cache_budget_bytes(a, 32)?;
     let prefetch_kb = a.get_or("prefetch-kb", 0usize)?;
     let source: Box<dyn sz3::reader::ChunkSource> = {
         let file = sz3::reader::FileSource::open(input)?;
@@ -311,7 +323,7 @@ fn cmd_extract(a: &Args) -> CliResult {
     };
     let reader = sz3::reader::ContainerReader::new(source)?
         .with_workers(workers)
-        .with_chunk_cache(cache);
+        .with_cache_bytes(cache_bytes);
     let field = match a.get("field") {
         Some(f) => f.to_string(),
         None => {
@@ -329,7 +341,9 @@ fn cmd_extract(a: &Args) -> CliResult {
     };
     let dims = reader.field_dims(&field)?.to_vec();
     let rows = match a.get("rows") {
-        Some(spec) => parse_rows(spec)?,
+        // the shared A..B grammar (sz3::util::parse_rows) — the HTTP
+        // ROI endpoint parses the same spec with the same code
+        Some(spec) => sz3::util::parse_rows(spec).map_err(|m| err(format!("--rows: {m}")))?,
         None => 0..dims[0],
     };
     let t0 = std::time::Instant::now();
@@ -524,6 +538,44 @@ fn cmd_serve(a: &Args) -> CliResult {
         }
         println!("{report}");
     }
+    Ok(())
+}
+
+/// Serve a directory of `SZ3C` artifacts over HTTP range queries (see
+/// `docs/SERVE.md` for the API contract). Blocks until killed.
+fn cmd_serve_http(a: &Args) -> CliResult {
+    let dir = a.need("dir")?;
+    let addr = a.get("addr").unwrap_or("127.0.0.1:8080");
+    let threads = a.get_or("threads", 4usize)?.max(1);
+    let opts = sz3::server::StoreOptions {
+        cache_bytes: cache_budget_bytes(a, 256)?,
+        workers: a.get_or("workers", sz3::util::default_workers())?.max(1),
+        verify: !a.has("no-verify"),
+    };
+    let verify = opts.verify;
+    let store = sz3::server::ArtifactStore::open_dir(dir, &opts)?;
+    for art in store.artifacts() {
+        let fields: Vec<&str> =
+            art.fields.iter().map(|f| f.name.as_str()).collect();
+        println!(
+            "artifact '{}': v{}, {} bytes, fields {:?}{}",
+            art.id,
+            art.reader.version(),
+            art.file_bytes,
+            fields,
+            if verify { " (crc-verified)" } else { "" }
+        );
+    }
+    let handle = sz3::server::serve(store, addr, threads)?;
+    println!(
+        "serving {} artifact(s) on http://{} ({} threads, cache budget {} MB)",
+        handle.store().artifacts().len(),
+        handle.addr(),
+        threads,
+        handle.store().cache().budget() >> 20
+    );
+    println!("try: curl http://{}/v1/artifacts", handle.addr());
+    handle.run_forever();
     Ok(())
 }
 

@@ -1,44 +1,73 @@
-//! LRU cache of decoded chunks keyed by `(field, chunk_index)` — the
-//! serve-path accelerator: repeated region queries over the same hot
-//! chunks skip fetch, CRC, and decode entirely.
+//! Byte-budgeted LRU cache of decoded chunks keyed by `(scope+field,
+//! chunk_index)` — the serve-path accelerator: repeated region queries
+//! over the same hot chunks skip fetch, CRC, and decode entirely.
+//!
+//! Accounting is by **bytes, not entries**: every cached chunk is charged
+//! its decoded payload size plus a fixed per-entry overhead, and inserts
+//! evict least-recently-used entries until the total charge fits the
+//! budget again. One budget therefore governs real memory no matter how
+//! chunk sizes vary across artifacts — which is what lets the HTTP server
+//! share a single process-wide cache (`--cache-mb`) across every open
+//! [`crate::reader::ContainerReader`]. Chunks larger than the whole
+//! budget are served but never cached.
 //!
 //! Implementation: a `HashMap` of entries stamped with a monotonically
 //! increasing access tick; eviction scans for the minimum tick. O(n) per
-//! eviction is deliberate — capacities are tens of chunks, and the scan is
-//! trivially cheaper than a decode it stands in for.
+//! eviction is deliberate — budgets hold tens to hundreds of chunks, and
+//! the scan is trivially cheaper than a decode it stands in for.
 
 use crate::data::Field;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-/// Cache key: (field name, chunk index within the field).
+/// Cache key: (scoped field name, chunk index within the field). Readers
+/// sharing one cache prefix the field name with a scope (see
+/// [`crate::reader::ContainerReader::with_shared_cache`]) so identical
+/// field names in different artifacts cannot collide.
 pub type ChunkKey = (String, usize);
+
+/// Fixed per-entry charge on top of the decoded payload: map slot, access
+/// stamp, `Arc` bookkeeping. A round number — the point is that thousands
+/// of tiny chunks cannot sneak past a small byte budget for free.
+const ENTRY_OVERHEAD: usize = 96;
+
+struct Entry {
+    stamp: u64,
+    cost: usize,
+    field: Arc<Field>,
+}
 
 struct Inner {
     tick: u64,
-    map: HashMap<ChunkKey, (u64, Arc<Field>)>,
+    bytes: usize,
+    map: HashMap<ChunkKey, Entry>,
 }
 
-/// Bounded LRU over decoded chunks. Capacity 0 disables caching (every
-/// `get` misses, `insert` is a no-op) — the whole-container decompression
-/// path uses that so batch decodes don't hoard memory.
+/// Bounded byte-budget LRU over decoded chunks. Budget 0 disables caching
+/// (every `get` misses, `insert` is a no-op) — the whole-container
+/// decompression path uses that so batch decodes don't hoard memory.
 pub struct ChunkCache {
-    capacity: usize,
+    budget: usize,
     inner: Mutex<Inner>,
 }
 
 impl ChunkCache {
-    /// Cache holding at most `capacity` decoded chunks.
-    pub fn new(capacity: usize) -> Self {
+    /// Cache charging decoded chunks against a budget of `budget` bytes.
+    pub fn new(budget: usize) -> Self {
         ChunkCache {
-            capacity,
-            inner: Mutex::new(Inner { tick: 0, map: HashMap::new() }),
+            budget,
+            inner: Mutex::new(Inner { tick: 0, bytes: 0, map: HashMap::new() }),
         }
     }
 
-    /// Maximum entries.
-    pub fn capacity(&self) -> usize {
-        self.capacity
+    /// The byte budget (0 = caching disabled).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes currently charged (decoded payloads + per-entry overhead).
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
     }
 
     /// Entries currently held.
@@ -51,39 +80,55 @@ impl ChunkCache {
         self.len() == 0
     }
 
-    /// Look up a decoded chunk, refreshing its recency on hit. Capacity 0
+    /// What caching `field` under `key` would charge against the budget.
+    pub fn entry_cost(key: &ChunkKey, field: &Field) -> usize {
+        field.nbytes() + key.0.len() + ENTRY_OVERHEAD
+    }
+
+    /// Look up a decoded chunk, refreshing its recency on hit. Budget 0
     /// returns immediately — the batch decode path must not funnel every
     /// worker through the cache mutex for lookups that can never hit.
     pub fn get(&self, key: &ChunkKey) -> Option<Arc<Field>> {
-        if self.capacity == 0 {
+        if self.budget == 0 {
             return None;
         }
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
-        let (stamp, field) = inner.map.get_mut(key)?;
-        *stamp = tick;
-        Some(Arc::clone(field))
+        let e = inner.map.get_mut(key)?;
+        e.stamp = tick;
+        Some(Arc::clone(&e.field))
     }
 
-    /// Insert a decoded chunk, evicting the least-recently-used entry when
-    /// over capacity.
+    /// Insert a decoded chunk, evicting least-recently-used entries until
+    /// the byte charge fits the budget. A chunk whose own cost exceeds the
+    /// entire budget is not cached (and evicts any stale entry under the
+    /// same key rather than leaving it to serve outdated bytes).
     pub fn insert(&self, key: ChunkKey, field: Arc<Field>) {
-        if self.capacity == 0 {
+        if self.budget == 0 {
             return;
         }
+        let cost = Self::entry_cost(&key, &field);
         let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes -= old.cost;
+        }
+        if cost > self.budget {
+            return;
+        }
         inner.tick += 1;
-        let tick = inner.tick;
-        inner.map.insert(key, (tick, field));
-        while inner.map.len() > self.capacity {
+        let stamp = inner.tick;
+        inner.bytes += cost;
+        inner.map.insert(key, Entry { stamp, cost, field });
+        while inner.bytes > self.budget {
             let oldest = inner
                 .map
                 .iter()
-                .min_by_key(|(_, (stamp, _))| *stamp)
+                .min_by_key(|(_, e)| e.stamp)
                 .map(|(k, _)| k.clone())
-                .expect("non-empty map over capacity");
-            inner.map.remove(&oldest);
+                .expect("bytes > budget implies a non-empty map");
+            let evicted = inner.map.remove(&oldest).expect("key just observed");
+            inner.bytes -= evicted.cost;
         }
     }
 }
@@ -92,58 +137,100 @@ impl ChunkCache {
 mod tests {
     use super::*;
 
-    fn field(tag: usize) -> Arc<Field> {
-        Arc::new(Field::f32(format!("f{tag}"), &[1], vec![tag as f32]).unwrap())
+    /// A field charging exactly `4 * n` payload bytes.
+    fn field(tag: usize, n: usize) -> Arc<Field> {
+        Arc::new(Field::f32(format!("f{tag}"), &[n], vec![tag as f32; n]).unwrap())
     }
 
     fn key(i: usize) -> ChunkKey {
         ("f".to_string(), i)
     }
 
+    /// Cost of one `field(_, n)` entry under `key(_)`.
+    fn cost(n: usize) -> usize {
+        ChunkCache::entry_cost(&key(0), &field(0, n))
+    }
+
     #[test]
-    fn hit_miss_and_capacity() {
-        let c = ChunkCache::new(2);
+    fn hit_miss_and_byte_budget() {
+        // room for exactly two 1024-element chunks, not three
+        let c = ChunkCache::new(2 * cost(1024) + cost(1024) / 2);
         assert!(c.get(&key(0)).is_none());
-        c.insert(key(0), field(0));
-        c.insert(key(1), field(1));
+        c.insert(key(0), field(0, 1024));
+        c.insert(key(1), field(1, 1024));
         assert_eq!(c.len(), 2);
+        assert_eq!(c.bytes(), 2 * cost(1024));
         assert!(c.get(&key(0)).is_some());
         // inserting a third evicts the LRU — key 1, since key 0 was touched
-        c.insert(key(2), field(2));
+        c.insert(key(2), field(2, 1024));
         assert_eq!(c.len(), 2);
         assert!(c.get(&key(1)).is_none(), "LRU entry evicted");
         assert!(c.get(&key(0)).is_some());
         assert!(c.get(&key(2)).is_some());
+        assert!(c.bytes() <= c.budget(), "charge never exceeds the budget");
     }
 
     #[test]
     fn get_refreshes_recency() {
-        let c = ChunkCache::new(3);
+        let c = ChunkCache::new(3 * cost(256));
         for i in 0..3 {
-            c.insert(key(i), field(i));
+            c.insert(key(i), field(i, 256));
         }
         // touch 0 and 1; inserting 3 must evict 2
         c.get(&key(0));
         c.get(&key(1));
-        c.insert(key(3), field(3));
+        c.insert(key(3), field(3, 256));
         assert!(c.get(&key(2)).is_none());
         assert!(c.get(&key(0)).is_some() && c.get(&key(1)).is_some());
     }
 
     #[test]
-    fn zero_capacity_disables_caching() {
+    fn zero_budget_disables_caching() {
         let c = ChunkCache::new(0);
-        c.insert(key(0), field(0));
+        c.insert(key(0), field(0, 8));
         assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
         assert!(c.get(&key(0)).is_none());
     }
 
     #[test]
+    fn oversized_entry_is_served_but_not_cached() {
+        let c = ChunkCache::new(cost(64));
+        // a small chunk fits ...
+        c.insert(key(0), field(0, 64));
+        assert_eq!(c.len(), 1);
+        // ... a chunk bigger than the whole budget does not, and does not
+        // wipe unrelated residents
+        c.insert(key(1), field(1, 4096));
+        assert!(c.get(&key(1)).is_none());
+        assert!(c.get(&key(0)).is_some());
+        // but it does retire a stale resident under its own key
+        c.insert(key(0), field(9, 4096));
+        assert!(c.get(&key(0)).is_none());
+        assert_eq!(c.bytes(), 0);
+    }
+
+    #[test]
     fn reinsert_same_key_does_not_grow() {
-        let c = ChunkCache::new(2);
+        let c = ChunkCache::new(10 * cost(128));
         for _ in 0..10 {
-            c.insert(key(7), field(7));
+            c.insert(key(7), field(7, 128));
         }
         assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), cost(128));
+    }
+
+    #[test]
+    fn eviction_frees_enough_for_mixed_sizes() {
+        let c = ChunkCache::new(cost(100) + cost(200) + cost(400));
+        c.insert(key(0), field(0, 100));
+        c.insert(key(1), field(1, 200));
+        c.insert(key(2), field(2, 400));
+        assert_eq!(c.len(), 3);
+        // one large insert evicts as many LRU entries as its size demands
+        c.insert(key(3), field(3, 650));
+        assert!(c.bytes() <= c.budget());
+        assert!(c.get(&key(3)).is_some());
+        assert!(c.get(&key(0)).is_none(), "oldest evicted first");
     }
 }

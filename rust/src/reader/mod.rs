@@ -11,8 +11,13 @@
 //!   decodes only the chunks overlapping a row range (in parallel, the
 //!   same scoped worker-pool pattern as the coordinator) and assembles
 //!   exactly the requested sub-field.
-//! * **Decoded-chunk LRU cache** — keyed by `(field, chunk_index)`, so
-//!   repeated serve-path queries hit warm chunks instead of re-decoding.
+//! * **Decoded-chunk LRU cache** — keyed by `(field, chunk_index)` and
+//!   budgeted in **bytes** ([`ChunkCache`]), so repeated serve-path
+//!   queries hit warm chunks instead of re-decoding. A cache can be
+//!   private to one reader ([`ContainerReader::with_cache_bytes`]) or
+//!   shared, scope-prefixed, across every artifact a server holds open
+//!   ([`ContainerReader::with_shared_cache`] — the `sz3 serve-http`
+//!   deployment shape, one `--cache-mb` knob for the whole process).
 //! * **Integrity on every fetch** — v2 containers carry a CRC-32 per
 //!   chunk, verified before any byte reaches a decoder; the inner `SZ3R`
 //!   header's pipeline name is cross-checked against the index; decoded
@@ -86,8 +91,12 @@ pub struct ContainerReader<'a> {
     fields: Vec<FieldMeta>,
     version: u8,
     payload_offset: u64,
+    payload_len: u64,
     workers: usize,
-    cache: ChunkCache,
+    cache: Arc<ChunkCache>,
+    /// Prefix prepended to field names in cache keys so artifacts sharing
+    /// one cache cannot collide (empty for a private cache).
+    cache_scope: String,
     counters: Counters,
 }
 
@@ -149,8 +158,10 @@ impl<'a> ContainerReader<'a> {
             fields,
             version: meta.version,
             payload_offset: meta.payload_offset as u64,
+            payload_len: meta.payload_len,
             workers: crate::util::default_workers(),
-            cache: ChunkCache::new(0),
+            cache: Arc::new(ChunkCache::new(0)),
+            cache_scope: String::new(),
             counters: Counters::default(),
         })
     }
@@ -172,15 +183,45 @@ impl<'a> ContainerReader<'a> {
         self
     }
 
-    /// Enable the decoded-chunk LRU cache with room for `chunks` entries.
-    pub fn with_chunk_cache(mut self, chunks: usize) -> Self {
-        self.cache = ChunkCache::new(chunks);
+    /// Enable a private decoded-chunk LRU cache with a budget of `bytes`
+    /// (decoded payload bytes plus a small per-entry overhead; 0 disables).
+    pub fn with_cache_bytes(mut self, bytes: usize) -> Self {
+        self.cache = Arc::new(ChunkCache::new(bytes));
+        self.cache_scope = String::new();
         self
+    }
+
+    /// Attach a cache shared with other readers, namespaced by `scope`
+    /// (typically the artifact id) so identical field names in different
+    /// artifacts occupy distinct entries. This is how `sz3 serve-http`
+    /// puts every open artifact behind one process-wide `--cache-mb`
+    /// budget.
+    pub fn with_shared_cache(mut self, cache: Arc<ChunkCache>, scope: &str) -> Self {
+        self.cache = cache;
+        self.cache_scope = if scope.is_empty() {
+            String::new()
+        } else {
+            // unit separator: cannot appear in a scope id derived from a
+            // file stem, so "a" + field "b" never aliases scope "ab"
+            format!("{scope}\u{1f}")
+        };
+        self
+    }
+
+    /// The decoded-chunk cache this reader charges against.
+    pub fn cache(&self) -> &Arc<ChunkCache> {
+        &self.cache
     }
 
     /// Container format version (1 or 2).
     pub fn version(&self) -> u8 {
         self.version
+    }
+
+    /// Total payload bytes (the concatenated compressed chunk streams,
+    /// excluding the index).
+    pub fn payload_bytes(&self) -> u64 {
+        self.payload_len
     }
 
     /// The parsed chunk index.
@@ -258,9 +299,9 @@ impl<'a> ContainerReader<'a> {
     /// stream header) → decode → dims check → cache insert.
     fn decode_entry(&self, id: usize) -> Result<Arc<Field>> {
         let e = &self.index.entries[id];
-        // only pay the key's String clone when a cache is actually on
-        let key: Option<ChunkKey> = (self.cache.capacity() > 0)
-            .then(|| (e.field.clone(), e.chunk_index));
+        // only pay the key's String build when a cache is actually on
+        let key: Option<ChunkKey> = (self.cache.budget() > 0)
+            .then(|| (format!("{}{}", self.cache_scope, e.field), e.chunk_index));
         if let Some(k) = &key {
             if let Some(hit) = self.cache.get(k) {
                 self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -296,6 +337,20 @@ impl<'a> ContainerReader<'a> {
             self.cache.insert(k, Arc::clone(&field));
         }
         Ok(field)
+    }
+
+    /// Fetch the compressed payload bytes of index entry `entry_id`
+    /// (position in [`Self::index`]`().entries`) without decoding —
+    /// CRC-verified on v2 containers. The passthrough behind the HTTP
+    /// server's `/raw` endpoint, where clients decode on their side.
+    pub fn chunk_payload(&self, entry_id: usize) -> Result<Vec<u8>> {
+        let e = self.index.entries.get(entry_id).ok_or_else(|| {
+            SzError::config(format!(
+                "chunk {entry_id} out of range ({} index entries)",
+                self.index.entries.len()
+            ))
+        })?;
+        self.fetch_verified(e)
     }
 
     /// Decode the given entry ids across the worker pool
@@ -562,7 +617,7 @@ mod tests {
         let artifact = sample_container(1);
         let r = ContainerReader::from_slice(&artifact)
             .unwrap()
-            .with_chunk_cache(8);
+            .with_cache_bytes(1 << 20);
         let a = r.read_region("f0", 0..6).unwrap();
         let cold = r.stats();
         assert_eq!(cold.chunks_decoded, 2);
@@ -669,6 +724,63 @@ mod tests {
         let s = r.stats();
         assert_eq!(s.crc_verified, 0);
         assert!(s.chunks_decoded >= 2);
+    }
+
+    #[test]
+    fn shared_cache_scopes_artifacts_apart() {
+        // two artifacts with an identically-named field share one cache;
+        // the scope prefix must keep their chunks from aliasing
+        let a = sample_container(1);
+        let b = {
+            let cfg = JobConfig {
+                pipeline: "sz3-lr".into(),
+                bound: ErrorBound::Abs(1e-3),
+                workers: 2,
+                chunk_elems: 3 * 144,
+                queue_depth: 2,
+                ..Default::default()
+            };
+            let coord = Coordinator::from_config(&cfg).unwrap();
+            let mut rng = Pcg32::seeded(777); // different data, same name/shape
+            let dims = [24usize, 12, 12];
+            let f =
+                Field::f32("f0", &dims, prop::smooth_field(&mut rng, &dims)).unwrap();
+            let (artifact, _) = coord.run_to_container(vec![f]).unwrap();
+            artifact
+        };
+        let shared = Arc::new(ChunkCache::new(8 << 20));
+        let ra = ContainerReader::from_slice(&a)
+            .unwrap()
+            .with_shared_cache(Arc::clone(&shared), "a");
+        let rb = ContainerReader::from_slice(&b)
+            .unwrap()
+            .with_shared_cache(Arc::clone(&shared), "b");
+        let va = ra.read_region("f0", 0..3).unwrap();
+        let vb = rb.read_region("f0", 0..3).unwrap();
+        assert_ne!(va.values, vb.values, "distinct artifacts hold distinct data");
+        assert_eq!(shared.len(), 2, "one scoped entry per artifact");
+        // warm replays stay scoped: each reader hits its own entry
+        assert_eq!(ra.read_region("f0", 0..3).unwrap().values, va.values);
+        assert_eq!(rb.read_region("f0", 0..3).unwrap().values, vb.values);
+        assert_eq!(ra.stats().cache_hits, 1);
+        assert_eq!(rb.stats().cache_hits, 1);
+    }
+
+    #[test]
+    fn chunk_payload_passthrough_matches_index() {
+        let artifact = sample_container(1);
+        let meta = container::read_index_meta(&artifact).unwrap();
+        let r = ContainerReader::from_slice(&artifact).unwrap();
+        let e = &meta.index.entries[2];
+        let bytes = r.chunk_payload(2).unwrap();
+        assert_eq!(bytes.len(), e.len);
+        let expect = &artifact[meta.payload_offset + e.offset..][..e.len];
+        assert_eq!(bytes.as_slice(), expect, "raw compressed stream, byte for byte");
+        assert_eq!(r.stats().chunks_decoded, 0, "passthrough must not decode");
+        assert!(r.stats().crc_verified >= 1, "v2 passthrough still CRC-checks");
+        assert!(r.chunk_payload(999).is_err(), "out-of-range entry id");
+        // payload extent accessor agrees with the parsed meta
+        assert_eq!(r.payload_bytes(), meta.payload_len);
     }
 
     #[test]

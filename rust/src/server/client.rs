@@ -1,0 +1,103 @@
+//! Minimal blocking HTTP/1.1 client for exercising the serve layer —
+//! benches, examples, and the loopback integration tests all drive the
+//! server through this instead of each hand-rolling socket I/O. Supports
+//! exactly what the server emits: status line, headers, `Content-Length`
+//! framed bodies, keep-alive connection reuse.
+
+use crate::error::{Result, SzError};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// A parsed HTTP response.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    /// Status code.
+    pub status: u16,
+    /// Headers with lowercased names.
+    pub headers: Vec<(String, String)>,
+    /// Body bytes (exactly `Content-Length` of them).
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    /// Value of header `name` (lowercase), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 (for the JSON endpoints).
+    pub fn text(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| SzError::corrupt("response body is not UTF-8"))
+    }
+}
+
+/// One keep-alive connection to a server.
+pub struct HttpClient {
+    stream: BufReader<TcpStream>,
+}
+
+impl HttpClient {
+    /// Connect to `addr`.
+    pub fn connect(addr: SocketAddr) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| SzError::config(format!("connecting {addr}: {e}")))?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(HttpClient { stream: BufReader::new(stream) })
+    }
+
+    /// Issue `GET target` on this connection and read the full response.
+    pub fn get(&mut self, target: &str) -> Result<HttpResponse> {
+        let request = format!(
+            "GET {target} HTTP/1.1\r\nHost: sz3\r\nConnection: keep-alive\r\n\r\n"
+        );
+        self.stream.get_mut().write_all(request.as_bytes())?;
+        self.stream.get_mut().flush()?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> Result<HttpResponse> {
+        let mut line = String::new();
+        if self.stream.read_line(&mut line)? == 0 {
+            return Err(SzError::corrupt("server closed before the status line"));
+        }
+        let line = line.trim_end_matches(['\r', '\n']);
+        let mut parts = line.splitn(3, ' ');
+        let (proto, code) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+        if !proto.starts_with("HTTP/1.") {
+            return Err(SzError::corrupt(format!("bad status line '{line}'")));
+        }
+        let status: u16 = code
+            .parse()
+            .map_err(|_| SzError::corrupt(format!("bad status code '{code}'")))?;
+        let mut headers: Vec<(String, String)> = Vec::new();
+        loop {
+            let mut h = String::new();
+            if self.stream.read_line(&mut h)? == 0 {
+                return Err(SzError::corrupt("server closed mid-headers"));
+            }
+            let h = h.trim_end_matches(['\r', '\n']);
+            if h.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = h.split_once(':') {
+                headers
+                    .push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+            }
+        }
+        let len: usize = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .and_then(|(_, v)| v.parse().ok())
+            .ok_or_else(|| SzError::corrupt("response without content-length"))?;
+        let mut body = vec![0u8; len];
+        self.stream.read_exact(&mut body)?;
+        Ok(HttpResponse { status, headers, body })
+    }
+}
+
+/// One-shot convenience: fresh connection, single GET, drop.
+pub fn get_once(addr: SocketAddr, target: &str) -> Result<HttpResponse> {
+    HttpClient::connect(addr)?.get(target)
+}

@@ -1,0 +1,558 @@
+//! Endpoint handlers: route a parsed [`Request`] against an
+//! [`ArtifactStore`], producing JSON metadata, raw ROI bytes, or the
+//! uniform error body. Pure functions over `(&store, &request)` — no
+//! sockets — so the 404/416/400 matrix is unit-testable without binding a
+//! port, and the connection loop stays a thin shell.
+//!
+//! Status-code contract (specified in `docs/SERVE.md`): unknown
+//! artifact/field/chunk → **404**; syntactically valid but out-of-bounds
+//! or empty row ranges → **416** with a `Content-Range: rows */total`
+//! header; malformed parameters → **400**; reader-level failures (e.g. a
+//! chunk failing CRC under an active request) → **500**.
+
+use super::http::{json_escape, Request, Response};
+use super::stats::ServerStats;
+use super::ArtifactStore;
+use crate::data::FieldValues;
+use crate::util::parse_rows;
+use std::time::Instant;
+
+/// Route `req`, answer it, and record its latency under the endpoint
+/// label — the single entry point the connection loop calls.
+pub fn dispatch(store: &ArtifactStore, stats: &ServerStats, req: &Request) -> Response {
+    let t0 = Instant::now();
+    let (label, resp) = route(store, stats, req);
+    stats.record(label, t0.elapsed());
+    resp
+}
+
+/// Match the request path to a handler; returns the endpoint label used
+/// for latency accounting alongside the response.
+pub fn route(
+    store: &ArtifactStore,
+    stats: &ServerStats,
+    req: &Request,
+) -> (&'static str, Response) {
+    if req.method != "GET" && req.method != "HEAD" {
+        let resp = Response::error(405, &format!("method {} not allowed", req.method))
+            .with_header("Allow", "GET, HEAD");
+        return ("other", resp);
+    }
+    let segs = req.segments();
+    let segs: Vec<&str> = segs.iter().map(String::as_str).collect();
+    match segs.as_slice() {
+        ["healthz"] => ("healthz", healthz(store, stats)),
+        ["statsz"] => ("statsz", statsz(store, stats)),
+        ["v1", "artifacts"] => ("list", list(store)),
+        ["v1", "artifacts", id] => ("meta", meta(store, id)),
+        ["v1", "artifacts", id, "fields", name] => ("roi", roi(store, req, id, name)),
+        ["v1", "artifacts", id, "raw"] => ("raw", raw(store, req, id)),
+        _ => ("other", Response::error(404, &format!("no route for {}", req.path))),
+    }
+}
+
+fn healthz(store: &ArtifactStore, stats: &ServerStats) -> Response {
+    Response::json(
+        200,
+        format!(
+            "{{\"status\":\"ok\",\"artifacts\":{},\"uptime_s\":{:.1}}}",
+            store.artifacts().len(),
+            stats.uptime_s()
+        ),
+    )
+}
+
+fn list(store: &ArtifactStore) -> Response {
+    let items: Vec<String> = store
+        .artifacts()
+        .iter()
+        .map(|a| {
+            let names: Vec<String> = a
+                .fields
+                .iter()
+                .map(|f| format!("\"{}\"", json_escape(&f.name)))
+                .collect();
+            format!(
+                "{{\"id\":\"{}\",\"version\":{},\"file_bytes\":{},\"payload_bytes\":{},\
+                 \"fields\":[{}],\"chunks\":{}}}",
+                json_escape(&a.id),
+                a.reader.version(),
+                a.file_bytes,
+                a.reader.payload_bytes(),
+                names.join(","),
+                a.reader.index().entries.len()
+            )
+        })
+        .collect();
+    Response::json(200, format!("{{\"artifacts\":[{}]}}", items.join(",")))
+}
+
+fn meta(store: &ArtifactStore, id: &str) -> Response {
+    let art = match store.get(id) {
+        Some(a) => a,
+        None => return Response::error(404, &format!("unknown artifact '{id}'")),
+    };
+    let mut fields = Vec::new();
+    for f in &art.fields {
+        // chunk map ordered by chunk_index; `entry` is the global index
+        // ordinal a client passes to `/raw?chunk=N`
+        let mut entries: Vec<(usize, &crate::container::ChunkEntry)> = art
+            .reader
+            .index()
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.field == f.name)
+            .collect();
+        entries.sort_by_key(|(_, e)| e.chunk_index);
+        let map: Vec<String> = entries
+            .iter()
+            .map(|(entry_id, e)| {
+                format!(
+                    "{{\"chunk\":{},\"entry\":{},\"rows\":[{},{}],\"pipeline\":\"{}\",\
+                     \"bytes\":{},\"crc32\":{}}}",
+                    e.chunk_index,
+                    entry_id,
+                    e.rows.0,
+                    e.rows.1,
+                    json_escape(&e.pipeline),
+                    e.len,
+                    match e.crc32 {
+                        Some(c) => c.to_string(),
+                        None => "null".to_string(),
+                    }
+                )
+            })
+            .collect();
+        fields.push(format!(
+            "{{\"name\":\"{}\",\"dtype\":\"{}\",\"dims\":{},\"chunks\":{},\
+             \"chunk_map\":[{}]}}",
+            json_escape(&f.name),
+            json_escape(&f.dtype),
+            dims_json(&f.dims),
+            f.chunks,
+            map.join(",")
+        ));
+    }
+    Response::json(
+        200,
+        format!(
+            "{{\"id\":\"{}\",\"version\":{},\"file_bytes\":{},\"payload_bytes\":{},\
+             \"fields\":[{}]}}",
+            json_escape(&art.id),
+            art.reader.version(),
+            art.file_bytes,
+            art.reader.payload_bytes(),
+            fields.join(",")
+        ),
+    )
+}
+
+fn roi(store: &ArtifactStore, req: &Request, id: &str, name: &str) -> Response {
+    let art = match store.get(id) {
+        Some(a) => a,
+        None => return Response::error(404, &format!("unknown artifact '{id}'")),
+    };
+    let field = match art.fields.iter().find(|f| f.name == name) {
+        Some(f) => f,
+        None => {
+            let have: Vec<&str> =
+                art.fields.iter().map(|f| f.name.as_str()).collect();
+            return Response::error(
+                404,
+                &format!("artifact '{id}' has no field '{name}' (holds {have:?})"),
+            );
+        }
+    };
+    let total = field.dims[0];
+    let rows = match req.query_param("rows") {
+        None => 0..total,
+        Some(spec) => match parse_rows(spec) {
+            Ok(r) => r,
+            Err(msg) => return Response::error(400, &msg),
+        },
+    };
+    if rows.start >= rows.end || rows.end > total {
+        return Response::error(
+            416,
+            &format!(
+                "rows {}..{} unsatisfiable for field '{name}' with {total} rows",
+                rows.start, rows.end
+            ),
+        )
+        .with_header("Content-Range", format!("rows */{total}"));
+    }
+    let format = req.query_param("format").unwrap_or("f32");
+    if format == "f32" && field.dtype != "f32" {
+        return Response::error(
+            400,
+            &format!(
+                "field '{name}' is {}; request format=raw or format=json",
+                field.dtype
+            ),
+        );
+    }
+    if !matches!(format, "f32" | "raw" | "json") {
+        return Response::error(
+            400,
+            &format!("unknown format '{format}' (expected f32, raw, or json)"),
+        );
+    }
+    let region = match art.reader.read_region(name, rows.clone()) {
+        Ok(r) => r,
+        Err(e) => return Response::error(500, &e.to_string()),
+    };
+    let dims = region.shape.dims().to_vec();
+    let resp = match format {
+        "json" => Response::json(
+            200,
+            format!(
+                "{{\"artifact\":\"{}\",\"field\":\"{}\",\"rows\":[{},{}],\
+                 \"dims\":{},\"dtype\":\"{}\",\"values\":{}}}",
+                json_escape(id),
+                json_escape(name),
+                rows.start,
+                rows.end,
+                dims_json(&dims),
+                region.values.dtype(),
+                values_json(&region.values)
+            ),
+        ),
+        // "f32" | "raw": the exact little-endian bytes `read_region`
+        // produces — bit-identical to `sz3 extract` output
+        _ => Response::octets(region.values.to_le_bytes()),
+    };
+    resp.with_header("X-SZ3-Dims", dims_csv(&dims))
+        .with_header("X-SZ3-Dtype", region.values.dtype())
+        .with_header("X-SZ3-Rows", format!("{}..{}", rows.start, rows.end))
+}
+
+fn raw(store: &ArtifactStore, req: &Request, id: &str) -> Response {
+    let art = match store.get(id) {
+        Some(a) => a,
+        None => return Response::error(404, &format!("unknown artifact '{id}'")),
+    };
+    let spec = match req.query_param("chunk") {
+        Some(s) => s,
+        None => return Response::error(400, "missing required ?chunk=N"),
+    };
+    let n: usize = match spec.parse() {
+        Ok(n) => n,
+        Err(_) => return Response::error(400, &format!("bad chunk index '{spec}'")),
+    };
+    let entry = match art.reader.index().entries.get(n) {
+        Some(e) => e.clone(),
+        None => {
+            return Response::error(
+                404,
+                &format!(
+                    "chunk {n} out of range ({} entries; see the meta endpoint's \
+                     chunk_map.entry)",
+                    art.reader.index().entries.len()
+                ),
+            )
+        }
+    };
+    match art.reader.chunk_payload(n) {
+        Ok(bytes) => {
+            let mut resp = Response::octets(bytes)
+                .with_header("X-SZ3-Field", entry.field.clone())
+                .with_header("X-SZ3-Chunk", entry.chunk_index.to_string())
+                .with_header("X-SZ3-Pipeline", entry.pipeline.clone())
+                .with_header(
+                    "X-SZ3-Rows",
+                    format!("{}..{}", entry.rows.0, entry.rows.1),
+                );
+            if let Some(c) = entry.crc32 {
+                resp = resp.with_header("X-SZ3-Crc32", format!("{c:#010x}"));
+            }
+            resp
+        }
+        Err(e) => Response::error(500, &e.to_string()),
+    }
+}
+
+fn statsz(store: &ArtifactStore, stats: &ServerStats) -> Response {
+    let cache = store.cache();
+    let artifacts: Vec<String> = store
+        .artifacts()
+        .iter()
+        .map(|a| {
+            // request-driven counters only: the startup CRC sweep and
+            // dtype peeks are baselined out
+            let s = a.request_stats();
+            format!(
+                "\"{}\":{{\"chunks_fetched\":{},\"bytes_fetched\":{},\
+                 \"crc_verified\":{},\"chunks_decoded\":{},\"cache_hits\":{}}}",
+                json_escape(&a.id),
+                s.chunks_fetched,
+                s.bytes_fetched,
+                s.crc_verified,
+                s.chunks_decoded,
+                s.cache_hits
+            )
+        })
+        .collect();
+    let endpoints: Vec<String> = stats
+        .summaries()
+        .iter()
+        .map(|(label, s)| {
+            format!(
+                "\"{label}\":{{\"count\":{},\"mean_us\":{},\"p50_us\":{},\
+                 \"p99_us\":{},\"max_us\":{}}}",
+                s.count, s.mean_us, s.p50_us, s.p99_us, s.max_us
+            )
+        })
+        .collect();
+    Response::json(
+        200,
+        format!(
+            "{{\"uptime_s\":{:.1},\
+             \"cache\":{{\"budget_bytes\":{},\"bytes\":{},\"entries\":{}}},\
+             \"artifacts\":{{{}}},\"endpoints\":{{{}}}}}",
+            stats.uptime_s(),
+            cache.budget(),
+            cache.bytes(),
+            cache.len(),
+            artifacts.join(","),
+            endpoints.join(",")
+        ),
+    )
+}
+
+fn dims_json(dims: &[usize]) -> String {
+    let parts: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    format!("[{}]", parts.join(","))
+}
+
+fn dims_csv(dims: &[usize]) -> String {
+    let parts: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    parts.join(",")
+}
+
+/// Values as a JSON number array; non-finite floats (possible in source
+/// data, not representable in JSON) serialize as `null`.
+fn values_json(values: &FieldValues) -> String {
+    fn float<T: std::fmt::Display + Copy>(out: &mut String, x: T, finite: bool) {
+        if finite {
+            out.push_str(&x.to_string());
+        } else {
+            out.push_str("null");
+        }
+    }
+    let mut out = String::from("[");
+    match values {
+        FieldValues::F32(v) => {
+            for (i, x) in v.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                float(&mut out, *x, x.is_finite());
+            }
+        }
+        FieldValues::F64(v) => {
+            for (i, x) in v.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                float(&mut out, *x, x.is_finite());
+            }
+        }
+        FieldValues::I32(v) => {
+            for (i, x) in v.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&x.to_string());
+            }
+        }
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{JobConfig, Json};
+    use crate::coordinator::Coordinator;
+    use crate::data::Field;
+    use crate::pipeline::ErrorBound;
+    use crate::reader::{ContainerReader, FileSource};
+    use crate::util::{prop, rng::Pcg32};
+    use std::io::Cursor;
+
+    /// Store with one artifact "demo": 24×12×12, 3 rows/chunk → 8 chunks.
+    fn demo_store() -> (ArtifactStore, Vec<u8>) {
+        let cfg = JobConfig {
+            pipeline: "sz3-lr".into(),
+            bound: ErrorBound::Abs(1e-3),
+            workers: 2,
+            chunk_elems: 3 * 144,
+            queue_depth: 2,
+            ..Default::default()
+        };
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let mut rng = Pcg32::seeded(4242);
+        let dims = [24usize, 12, 12];
+        let field =
+            Field::f32("density", &dims, prop::smooth_field(&mut rng, &dims)).unwrap();
+        let (artifact, _) = coord.run_to_container(vec![field]).unwrap();
+        let mut store = ArtifactStore::new(8 << 20);
+        let reader = ContainerReader::new(Box::new(
+            FileSource::new(Cursor::new(artifact.clone())).unwrap(),
+        ))
+        .unwrap()
+        .with_workers(2);
+        let len = artifact.len() as u64;
+        store.register("demo".to_string(), reader, len).unwrap();
+        (store, artifact)
+    }
+
+    fn get(store: &ArtifactStore, target: &str) -> Response {
+        let stats = ServerStats::new();
+        dispatch(store, &stats, &Request::get(target))
+    }
+
+    #[test]
+    fn list_and_meta_describe_the_artifact() {
+        let (store, _) = demo_store();
+        let resp = get(&store, "/v1/artifacts");
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let arts = j.get("artifacts").unwrap().as_arr().unwrap();
+        assert_eq!(arts.len(), 1);
+        assert_eq!(arts[0].get("id").unwrap().as_str(), Some("demo"));
+        assert_eq!(arts[0].get("chunks").unwrap().as_usize(), Some(8));
+
+        let resp = get(&store, "/v1/artifacts/demo");
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let fields = j.get("fields").unwrap().as_arr().unwrap();
+        assert_eq!(fields.len(), 1);
+        let f = &fields[0];
+        assert_eq!(f.get("name").unwrap().as_str(), Some("density"));
+        assert_eq!(f.get("dtype").unwrap().as_str(), Some("f32"));
+        assert_eq!(f.get("chunks").unwrap().as_usize(), Some(8));
+        let map = f.get("chunk_map").unwrap().as_arr().unwrap();
+        assert_eq!(map.len(), 8);
+        assert_eq!(map[0].get("rows").unwrap().as_arr().unwrap().len(), 2);
+        assert!(map[0].get("crc32").unwrap().as_f64().is_some(), "v2 carries crcs");
+    }
+
+    #[test]
+    fn roi_bytes_match_read_region_exactly() {
+        let (store, artifact) = demo_store();
+        let resp = get(&store, "/v1/artifacts/demo/fields/density?rows=7..11");
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("X-SZ3-Dims"), Some("4,12,12"));
+        assert_eq!(resp.header("X-SZ3-Dtype"), Some("f32"));
+        // the acceptance bar: exactly the bytes read_region produces
+        let oracle = ContainerReader::from_slice(&artifact)
+            .unwrap()
+            .read_region("density", 7..11)
+            .unwrap();
+        assert_eq!(resp.body, oracle.values.to_le_bytes());
+        // and only the overlapping chunks were decoded for it
+        let served = store.get("demo").unwrap().reader.stats();
+        assert_eq!(served.chunks_decoded, 2, "rows 7..11 span 2 of 8 chunks");
+    }
+
+    #[test]
+    fn roi_json_format_parses_and_matches() {
+        let (store, artifact) = demo_store();
+        let resp =
+            get(&store, "/v1/artifacts/demo/fields/density?rows=0..1&format=json");
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("dtype").unwrap().as_str(), Some("f32"));
+        let vals = j.get("values").unwrap().as_arr().unwrap();
+        assert_eq!(vals.len(), 144);
+        let oracle = ContainerReader::from_slice(&artifact)
+            .unwrap()
+            .read_region("density", 0..1)
+            .unwrap();
+        if let FieldValues::F32(v) = &oracle.values {
+            assert!((vals[0].as_f64().unwrap() - v[0] as f64).abs() < 1e-6);
+        } else {
+            panic!("demo field is f32");
+        }
+    }
+
+    #[test]
+    fn error_matrix_404_416_400_405() {
+        let (store, _) = demo_store();
+        // unknown artifact / field / route
+        assert_eq!(get(&store, "/v1/artifacts/nope").status, 404);
+        assert_eq!(get(&store, "/v1/artifacts/nope/fields/density").status, 404);
+        assert_eq!(get(&store, "/v1/artifacts/demo/fields/nope").status, 404);
+        assert_eq!(get(&store, "/v2/artifacts").status, 404);
+        // unsatisfiable ranges: out of bounds, empty, inverted
+        for bad in ["9..99", "5..5", "9..7", "24..30"] {
+            let resp =
+                get(&store, &format!("/v1/artifacts/demo/fields/density?rows={bad}"));
+            assert_eq!(resp.status, 416, "rows={bad}");
+            assert_eq!(resp.header("Content-Range"), Some("rows */24"));
+        }
+        // malformed parameters
+        for bad in ["abc", "1..x", "1-5", ""] {
+            let resp =
+                get(&store, &format!("/v1/artifacts/demo/fields/density?rows={bad}"));
+            assert_eq!(resp.status, 400, "rows={bad}");
+        }
+        let resp = get(&store, "/v1/artifacts/demo/fields/density?format=xml");
+        assert_eq!(resp.status, 400);
+        // raw chunk errors
+        assert_eq!(get(&store, "/v1/artifacts/demo/raw").status, 400);
+        assert_eq!(get(&store, "/v1/artifacts/demo/raw?chunk=zap").status, 400);
+        assert_eq!(get(&store, "/v1/artifacts/demo/raw?chunk=99").status, 404);
+        // method guard
+        let stats = ServerStats::new();
+        let mut post = Request::get("/v1/artifacts");
+        post.method = "POST".to_string();
+        let resp = dispatch(&store, &stats, &post);
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("Allow"), Some("GET, HEAD"));
+        // every error body is the uniform JSON shape
+        let resp = get(&store, "/v1/artifacts/nope");
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("error").unwrap().get("status").unwrap().as_usize(), Some(404));
+    }
+
+    #[test]
+    fn raw_chunk_passthrough_with_provenance_headers() {
+        let (store, artifact) = demo_store();
+        let resp = get(&store, "/v1/artifacts/demo/raw?chunk=3");
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("X-SZ3-Field"), Some("density"));
+        assert!(resp.header("X-SZ3-Pipeline").is_some());
+        assert!(resp.header("X-SZ3-Crc32").is_some(), "v2 chunk carries its crc");
+        let oracle = ContainerReader::from_slice(&artifact).unwrap();
+        assert_eq!(resp.body, oracle.chunk_payload(3).unwrap());
+        // the payload is a self-describing SZ3R stream a client can decode
+        let decoded = crate::pipeline::decompress_any(&resp.body).unwrap();
+        assert_eq!(decoded.shape.dims()[1..], [12, 12]);
+    }
+
+    #[test]
+    fn statsz_reflects_cache_hits_on_repeat_queries() {
+        let (store, _) = demo_store();
+        let stats = ServerStats::new();
+        let req = Request::get("/v1/artifacts/demo/fields/density?rows=0..3");
+        dispatch(&store, &stats, &req);
+        dispatch(&store, &stats, &req);
+        let resp = dispatch(&store, &stats, &Request::get("/statsz"));
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let demo = j.get("artifacts").unwrap().get("demo").unwrap();
+        assert_eq!(demo.get("chunks_decoded").unwrap().as_usize(), Some(1));
+        assert_eq!(demo.get("cache_hits").unwrap().as_usize(), Some(1));
+        let roi = j.get("endpoints").unwrap().get("roi").unwrap();
+        assert_eq!(roi.get("count").unwrap().as_usize(), Some(2));
+        assert!(j.get("cache").unwrap().get("bytes").unwrap().as_usize().unwrap() > 0);
+        // healthz is alive too
+        let resp = dispatch(&store, &stats, &Request::get("/healthz"));
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+    }
+}

@@ -1,0 +1,514 @@
+//! Minimal HTTP/1.1 substrate (hyper/axum are unavailable offline): a
+//! bounded request parser over any `BufRead`, and a response type that
+//! writes status line, headers, `Content-Length`, and body.
+//!
+//! Scope is deliberately narrow — exactly what the artifact-serving
+//! endpoints need: `GET`/`HEAD` only, no request bodies, no chunked
+//! transfer, percent-decoding for paths and query strings, keep-alive by
+//! default with `Connection: close` honored. Limits (request-line and
+//! header sizes, header count) are enforced before any allocation is
+//! sized from untrusted input, mirroring how the container index parser
+//! treats its bytes.
+
+use crate::error::{Result, SzError};
+use std::io::{BufRead, Read, Write};
+
+/// Request line length cap (bytes, CRLF included).
+const MAX_LINE: usize = 8192;
+/// Maximum number of headers accepted.
+const MAX_HEADERS: usize = 64;
+/// Largest request body we silently drain (requests with bodies are not
+/// part of the API; anything larger is rejected outright).
+const MAX_DRAIN_BODY: usize = 1 << 20;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone, Default)]
+pub struct Request {
+    /// Request method, uppercase as received (`GET`, `HEAD`, ...).
+    pub method: String,
+    /// Path component of the target, percent-**encoded** as received —
+    /// split into segments first, then decode each (see
+    /// [`Request::segments`]) so an encoded `/` inside a field name does
+    /// not change the route shape.
+    pub path: String,
+    /// Decoded query parameters in order of appearance.
+    pub query: Vec<(String, String)>,
+    /// Headers with lowercased names, values trimmed.
+    pub headers: Vec<(String, String)>,
+    /// True when the request (or its HTTP version) asks to close the
+    /// connection after the response.
+    pub close: bool,
+}
+
+impl Request {
+    /// Build a GET request from a target like `/v1/artifacts?x=1` — the
+    /// entry point handler unit tests and benches use to exercise routing
+    /// without a socket.
+    pub fn get(target: &str) -> Request {
+        let (path, query) = parse_target(target);
+        Request { method: "GET".to_string(), path, query, ..Default::default() }
+    }
+
+    /// First value of query parameter `key`, if present.
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        self.query.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Value of header `key` (lowercase), if present.
+    pub fn header(&self, key: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Percent-decoded path segments (empty segments dropped, so
+    /// `/v1//artifacts/` and `/v1/artifacts` route identically).
+    pub fn segments(&self) -> Vec<String> {
+        self.path
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| percent_decode(s, false))
+            .collect()
+    }
+}
+
+/// Read one CRLF-terminated line with the byte cap enforced *while*
+/// reading: a newline-free flood errors out at `cap` bytes instead of
+/// buffering unbounded input. `Ok(None)` is EOF before any byte.
+fn read_line_capped<R: BufRead>(r: &mut R, cap: usize) -> std::io::Result<Option<String>> {
+    let mut line = String::new();
+    let n = r.by_ref().take(cap as u64).read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if n >= cap && !line.ends_with('\n') {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "line exceeds the size cap",
+        ));
+    }
+    Ok(Some(line))
+}
+
+/// Read one request from `r`. `Ok(None)` means the connection ended
+/// cleanly (EOF before a request line, or an idle-timeout/reset while
+/// waiting for one); errors mean a malformed request the caller should
+/// answer with 400 and close on.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>> {
+    let mut line = String::new();
+    // tolerate stray blank lines between pipelined requests (RFC 9112 §2.2)
+    for _ in 0..4 {
+        match read_line_capped(r, MAX_LINE) {
+            Ok(None) => return Ok(None),
+            Ok(Some(l)) => line = l,
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                return Err(SzError::config("request line too long"))
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::UnexpectedEof
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::ConnectionAborted
+                ) =>
+            {
+                return Ok(None)
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if !line.trim_end_matches(['\r', '\n']).is_empty() {
+            break;
+        }
+    }
+    let request_line = line.trim_end_matches(['\r', '\n']).to_string();
+    let mut parts = request_line.split_whitespace();
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => (m, t, v),
+            _ => {
+                return Err(SzError::config(format!(
+                    "malformed request line '{request_line}'"
+                )))
+            }
+        };
+    if !target.starts_with('/') {
+        return Err(SzError::config(format!("request target '{target}' not a path")));
+    }
+    let http10 = match version {
+        "HTTP/1.1" => false,
+        "HTTP/1.0" => true,
+        other => {
+            return Err(SzError::config(format!("unsupported version '{other}'")))
+        }
+    };
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let h = match read_line_capped(r, MAX_LINE) {
+            Ok(None) => {
+                return Err(SzError::corrupt("connection closed mid-headers"))
+            }
+            Ok(Some(l)) => l,
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                return Err(SzError::config("header line too long"))
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let h = h.trim_end_matches(['\r', '\n']);
+        if h.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(SzError::config("too many headers"));
+        }
+        let (name, value) = h
+            .split_once(':')
+            .ok_or_else(|| SzError::config(format!("malformed header '{h}'")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    // the API has no body-carrying endpoints; drain small strays so a
+    // keep-alive connection stays framed, reject anything big
+    let content_length: usize = match headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+    {
+        Some((_, v)) => v
+            .parse()
+            .map_err(|_| SzError::config(format!("bad content-length '{v}'")))?,
+        None => 0,
+    };
+    if content_length > MAX_DRAIN_BODY {
+        return Err(SzError::config(format!(
+            "request body of {content_length} bytes not accepted"
+        )));
+    }
+    if content_length > 0 {
+        let mut sink = vec![0u8; content_length];
+        std::io::Read::read_exact(r, &mut sink)?;
+    }
+    let connection = headers
+        .iter()
+        .find(|(k, _)| k == "connection")
+        .map(|(_, v)| v.to_ascii_lowercase());
+    let close = match connection.as_deref() {
+        Some("close") => true,
+        Some("keep-alive") => false,
+        _ => http10, // 1.1 defaults to keep-alive, 1.0 to close
+    };
+    let (path, query) = parse_target(target);
+    Ok(Some(Request {
+        method: method.to_string(),
+        path,
+        query,
+        headers,
+        close,
+    }))
+}
+
+/// Split a request target into its raw path and decoded query pairs.
+pub fn parse_target(target: &str) -> (String, Vec<(String, String)>) {
+    let (path, q) = target.split_once('?').unwrap_or((target, ""));
+    let query = q
+        .split('&')
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            let (k, v) = p.split_once('=').unwrap_or((p, ""));
+            (percent_decode(k, true), percent_decode(v, true))
+        })
+        .collect();
+    (path.to_string(), query)
+}
+
+/// Percent-decode `s`; `+` decodes to space only in query strings.
+/// Malformed escapes pass through literally rather than failing the whole
+/// request — the path simply won't match any artifact.
+pub fn percent_decode(s: &str, plus_as_space: bool) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'%' if i + 2 < b.len() => {
+                let hex = |c: u8| (c as char).to_digit(16);
+                match (hex(b[i + 1]), hex(b[i + 2])) {
+                    (Some(hi), Some(lo)) => {
+                        out.push((hi * 16 + lo) as u8);
+                        i += 3;
+                    }
+                    _ => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' if plus_as_space => {
+                out.push(b' ');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// One HTTP response: status, extra headers, body. `Content-Length` and
+/// `Connection` are emitted by [`Response::write_to`]; everything else
+/// (including `Content-Type`) lives in `headers`.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// Response headers (`Content-Type` included).
+    pub headers: Vec<(String, String)>,
+    /// Response body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// JSON response with the given pre-serialized body.
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            headers: vec![("Content-Type".to_string(), "application/json".to_string())],
+            body: body.into_bytes(),
+        }
+    }
+
+    /// Binary response (`application/octet-stream`).
+    pub fn octets(body: Vec<u8>) -> Response {
+        Response {
+            status: 200,
+            headers: vec![(
+                "Content-Type".to_string(),
+                "application/octet-stream".to_string(),
+            )],
+            body,
+        }
+    }
+
+    /// Error response with the API's uniform JSON error body:
+    /// `{"error":{"status":N,"message":"..."}}`.
+    pub fn error(status: u16, message: &str) -> Response {
+        Response::json(
+            status,
+            format!(
+                "{{\"error\":{{\"status\":{status},\"message\":\"{}\"}}}}",
+                json_escape(message)
+            ),
+        )
+    }
+
+    /// Append a header (builder style). Header values may derive from
+    /// artifact-controlled strings (field and pipeline names), so CR/LF
+    /// are stripped — a crafted container cannot split the response
+    /// stream or inject headers.
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Response {
+        let value: String = value
+            .into()
+            .chars()
+            .filter(|c| *c != '\r' && *c != '\n')
+            .collect();
+        self.headers.push((name.to_string(), value));
+        self
+    }
+
+    /// First value of header `name` (case-insensitive), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Serialize onto `w`. `head_only` suppresses the body (HEAD
+    /// semantics: full headers, `Content-Length` of the would-be body).
+    pub fn write_to(
+        &self,
+        w: &mut impl Write,
+        close: bool,
+        head_only: bool,
+    ) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nServer: sz3\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            self.status,
+            status_text(self.status),
+            self.body.len(),
+            if close { "close" } else { "keep-alive" }
+        );
+        for (k, v) in &self.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        if !head_only {
+            w.write_all(&self.body)?;
+        }
+        w.flush()
+    }
+}
+
+/// Reason phrase for the status codes the API emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        204 => "No Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        416 => "Range Not Satisfiable",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        _ => "Unknown",
+    }
+}
+
+/// Escape `s` for embedding inside a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<Request>> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_request_line_query_and_headers() {
+        let r = parse(
+            "GET /v1/artifacts/nyx/fields/density?rows=3..9&format=json HTTP/1.1\r\n\
+             Host: localhost\r\nX-Thing: a b \r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(
+            r.segments(),
+            vec!["v1", "artifacts", "nyx", "fields", "density"]
+        );
+        assert_eq!(r.query_param("rows"), Some("3..9"));
+        assert_eq!(r.query_param("format"), Some("json"));
+        assert_eq!(r.header("x-thing"), Some("a b"));
+        assert!(!r.close, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn percent_decoding_segments_and_query() {
+        let r = parse(
+            "GET /v1/artifacts/run%201/fields/ff%7Cff?note=a+b%21 HTTP/1.1\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        let segs = r.segments();
+        assert_eq!(segs[2], "run 1");
+        assert_eq!(segs[4], "ff|ff");
+        assert_eq!(r.query_param("note"), Some("a b!"));
+        // malformed escapes pass through instead of failing the request
+        assert_eq!(percent_decode("100%", false), "100%");
+        assert_eq!(percent_decode("%zz", false), "%zz");
+    }
+
+    #[test]
+    fn eof_and_close_semantics() {
+        assert!(parse("").unwrap().is_none(), "clean EOF is not an error");
+        let r = parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(r.close);
+        let r = parse("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(r.close, "HTTP/1.0 defaults to close");
+        let r = parse("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!r.close);
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(parse("GET\r\n\r\n").is_err(), "short request line");
+        assert!(parse("GET noslash HTTP/1.1\r\n\r\n").is_err());
+        assert!(parse("GET / HTTP/2\r\n\r\n").is_err(), "unsupported version");
+        assert!(parse("GET / HTTP/1.1\r\nbadheader\r\n\r\n").is_err());
+        assert!(
+            parse("GET / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n").is_err(),
+            "oversized body rejected"
+        );
+        assert!(parse("GET / HTTP/1.1\r\nHost: x\r\n").is_err(), "eof mid-headers");
+        // newline-free floods error at the cap instead of buffering forever
+        let flood = format!("GET /{} HTTP/1.1", "a".repeat(3 * MAX_LINE));
+        assert!(parse(&flood).is_err(), "unbounded request line rejected");
+        let flood = format!("GET / HTTP/1.1\r\nX-H: {}", "b".repeat(3 * MAX_LINE));
+        assert!(parse(&flood).is_err(), "unbounded header line rejected");
+    }
+
+    #[test]
+    fn header_values_cannot_split_responses() {
+        let resp = Response::json(200, "{}".to_string())
+            .with_header("X-SZ3-Field", "ff\r\nX-Evil: 1\r\n\r\nHTTP/1.1 200 OK");
+        assert_eq!(resp.header("X-SZ3-Field"), Some("ffX-Evil: 1HTTP/1.1 200 OK"));
+        let mut buf = Vec::new();
+        resp.write_to(&mut buf, true, false).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(
+            !text.contains("\r\nX-Evil"),
+            "injected text must not start a header line of its own"
+        );
+        assert_eq!(text.matches("\r\n\r\n").count(), 1, "exactly one head/body boundary");
+    }
+
+    #[test]
+    fn response_serializes_with_length_and_connection() {
+        let resp = Response::json(200, "{\"ok\":true}".to_string())
+            .with_header("X-SZ3-Dims", "4,12");
+        let mut buf = Vec::new();
+        resp.write_to(&mut buf, false, false).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.contains("X-SZ3-Dims: 4,12\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+        // HEAD keeps the headers, drops the body
+        let mut buf = Vec::new();
+        resp.write_to(&mut buf, true, true).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n"));
+    }
+
+    #[test]
+    fn error_body_is_uniform_json() {
+        let resp = Response::error(416, "rows 9..99 outside \"t\"");
+        let body = String::from_utf8(resp.body.clone()).unwrap();
+        assert_eq!(
+            body,
+            "{\"error\":{\"status\":416,\"message\":\"rows 9..99 outside \\\"t\\\"\"}}"
+        );
+        // the crate's own JSON parser accepts it
+        let parsed = crate::config::Json::parse(&body).unwrap();
+        let err = parsed.get("error").unwrap();
+        assert_eq!(err.get("status").unwrap().as_usize(), Some(416));
+    }
+}

@@ -1,0 +1,382 @@
+//! HTTP range-query serving layer over the random-access container
+//! reader — the network front of the serve path.
+//!
+//! `sz3 serve-http` publishes a directory of `SZ3C` artifacts over a
+//! dependency-free HTTP/1.1 server: a std [`std::net::TcpListener`]
+//! accept loop feeding a fixed [`pool::ThreadPool`] of connection
+//! workers (hyper/axum/tokio are unavailable offline, and the endpoints
+//! are simple enough that a bounded hand-rolled server is the honest
+//! cost). Each artifact is opened **once** through
+//! [`crate::reader::ContainerReader`] and held for the server's
+//! lifetime; all readers charge decoded chunks against one shared
+//! byte-budgeted [`crate::reader::ChunkCache`], so a single `--cache-mb`
+//! knob bounds the whole process no matter how many artifacts are
+//! registered.
+//!
+//! # Endpoints
+//!
+//! | route | purpose |
+//! |---|---|
+//! | `GET /v1/artifacts` | list registered artifacts |
+//! | `GET /v1/artifacts/{id}` | index/metadata JSON (fields, dims, chunk map) |
+//! | `GET /v1/artifacts/{id}/fields/{name}?rows=A..B&format=f32\|raw\|json` | ROI extraction — decodes only overlapping chunks |
+//! | `GET /v1/artifacts/{id}/raw?chunk=N` | compressed chunk passthrough for client-side decode |
+//! | `GET /healthz` | liveness |
+//! | `GET /statsz` | [`crate::reader::ReadStats`] per artifact + per-endpoint latency |
+//!
+//! The full API contract (query params, status codes, error body, cache
+//! semantics, `curl` examples) is specified in `docs/SERVE.md`.
+//!
+//! # Concurrency shape
+//!
+//! `--threads` HTTP workers each own at most one connection at a time
+//! (keep-alive supported; idle connections close after a read timeout).
+//! A region request fans out chunk decodes across the reader's own
+//! worker pool, so one request can still use many cores while the HTTP
+//! pool bounds how many requests execute at once. Readers are shared
+//! (`&ContainerReader` across threads) — chunk fetches, CRC checks,
+//! decodes, and cache probes are all `&self` operations backed by
+//! atomics/mutexes, a property the concurrent-access integration test
+//! pins down.
+
+pub mod client;
+pub mod handlers;
+pub mod http;
+pub mod pool;
+pub mod stats;
+
+pub use client::{HttpClient, HttpResponse};
+pub use http::{Request, Response};
+pub use stats::{LatencySummary, ServerStats};
+
+use crate::error::{Result, SzError};
+use crate::pipeline;
+use crate::reader::{ChunkCache, ContainerReader};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-connection read timeout: a keep-alive connection idle this long is
+/// closed, which also bounds how long shutdown can wait on a worker.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// How a directory of artifacts is opened into an [`ArtifactStore`].
+#[derive(Clone, Debug)]
+pub struct StoreOptions {
+    /// Shared decoded-chunk cache budget in bytes (0 disables caching).
+    pub cache_bytes: usize,
+    /// Per-reader decode fan-out (chunks decoded in parallel per request).
+    pub workers: usize,
+    /// CRC-verify every chunk of every artifact before publishing it —
+    /// the reader-era serve path's "never publish a corrupt artifact"
+    /// rule, now at server startup.
+    pub verify: bool,
+}
+
+impl Default for StoreOptions {
+    fn default() -> Self {
+        StoreOptions {
+            cache_bytes: 64 << 20,
+            workers: crate::util::default_workers(),
+            verify: true,
+        }
+    }
+}
+
+/// Per-field metadata surfaced by the list/meta endpoints without
+/// decoding anything at request time.
+pub struct FieldInfo {
+    /// Field name.
+    pub name: String,
+    /// Full dims, slowest axis first.
+    pub dims: Vec<usize>,
+    /// Element dtype tag ("f32"/"f64"/"i32"), peeked from the field's
+    /// first chunk header at registration.
+    pub dtype: String,
+    /// Chunk count.
+    pub chunks: usize,
+}
+
+/// One registered artifact: id (file stem), an open reader, and metadata
+/// captured at registration.
+pub struct Artifact {
+    /// Artifact id — the file stem, as it appears in URLs.
+    pub id: String,
+    /// The open indexed-seek reader (shared by all request threads).
+    pub reader: ContainerReader<'static>,
+    /// On-disk artifact size in bytes.
+    pub file_bytes: u64,
+    /// Per-field metadata in first-appearance order.
+    pub fields: Vec<FieldInfo>,
+    /// Reader counters as of registration (startup CRC sweep + dtype
+    /// peeks). `/statsz` subtracts this so its numbers reflect
+    /// request-driven traffic only.
+    baseline: crate::reader::ReadStats,
+}
+
+impl Artifact {
+    /// Reader counters attributable to requests (registration-time
+    /// verification and header peeks subtracted out).
+    pub fn request_stats(&self) -> crate::reader::ReadStats {
+        let s = self.reader.stats();
+        let b = self.baseline;
+        crate::reader::ReadStats {
+            chunks_fetched: s.chunks_fetched.saturating_sub(b.chunks_fetched),
+            bytes_fetched: s.bytes_fetched.saturating_sub(b.bytes_fetched),
+            crc_verified: s.crc_verified.saturating_sub(b.crc_verified),
+            chunks_decoded: s.chunks_decoded.saturating_sub(b.chunks_decoded),
+            cache_hits: s.cache_hits.saturating_sub(b.cache_hits),
+        }
+    }
+}
+
+/// Every artifact the server holds open, plus the shared chunk cache they
+/// all charge against.
+pub struct ArtifactStore {
+    artifacts: Vec<Artifact>,
+    cache: Arc<ChunkCache>,
+}
+
+impl ArtifactStore {
+    /// Empty store with a shared cache of `cache_bytes`.
+    pub fn new(cache_bytes: usize) -> ArtifactStore {
+        ArtifactStore {
+            artifacts: Vec::new(),
+            cache: Arc::new(ChunkCache::new(cache_bytes)),
+        }
+    }
+
+    /// Open every `*.sz3c` file under `dir` (non-recursive), id'd by file
+    /// stem, sorted by id. With `opts.verify`, every chunk of every
+    /// artifact is CRC-checked before the store is returned — a corrupt
+    /// artifact fails startup instead of surfacing as a 500 later.
+    pub fn open_dir(dir: impl AsRef<Path>, opts: &StoreOptions) -> Result<ArtifactStore> {
+        let dir = dir.as_ref();
+        let mut store = ArtifactStore::new(opts.cache_bytes);
+        let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.extension().and_then(|e| e.to_str()) == Some("sz3c")
+                    && p.is_file()
+            })
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            return Err(SzError::config(format!(
+                "no .sz3c artifacts under {}",
+                dir.display()
+            )));
+        }
+        for path in paths {
+            let id = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .ok_or_else(|| {
+                    SzError::config(format!("unusable artifact name {}", path.display()))
+                })?
+                .to_string();
+            let file_bytes = std::fs::metadata(&path)?.len();
+            let reader = ContainerReader::open_path(&path)?.with_workers(opts.workers);
+            if opts.verify {
+                reader.verify_checksums().map_err(|e| {
+                    SzError::corrupt(format!("artifact '{id}' failed verification: {e}"))
+                })?;
+            }
+            store.register(id, reader, file_bytes)?;
+        }
+        Ok(store)
+    }
+
+    /// Register an already-open reader under `id`, attaching it to the
+    /// shared cache (scoped by id). Duplicate ids are rejected.
+    pub fn register(
+        &mut self,
+        id: String,
+        reader: ContainerReader<'static>,
+        file_bytes: u64,
+    ) -> Result<()> {
+        if self.get(&id).is_some() {
+            return Err(SzError::config(format!("duplicate artifact id '{id}'")));
+        }
+        let reader = reader.with_shared_cache(Arc::clone(&self.cache), &id);
+        let mut fields = Vec::new();
+        for name in reader.field_names().into_iter().map(str::to_string) {
+            let dims = reader.field_dims(&name)?.to_vec();
+            let chunks = reader.field_chunks(&name)?;
+            // dtype lives only in the inner stream headers: peek the
+            // field's first chunk once at registration, never per request
+            let first = reader
+                .index()
+                .entries
+                .iter()
+                .position(|e| e.field == name && e.chunk_index == 0)
+                .ok_or_else(|| {
+                    SzError::corrupt(format!("field '{name}' has no chunk 0"))
+                })?;
+            let head = reader.chunk_payload(first)?;
+            let dtype = pipeline::peek_header(&head)?.dtype;
+            fields.push(FieldInfo { name, dims, dtype, chunks });
+        }
+        // snapshot after the verify sweep and dtype peeks so /statsz can
+        // report request-driven counters only
+        let baseline = reader.stats();
+        self.artifacts.push(Artifact { id, reader, file_bytes, fields, baseline });
+        self.artifacts.sort_by(|a, b| a.id.cmp(&b.id));
+        Ok(())
+    }
+
+    /// Look up an artifact by id.
+    pub fn get(&self, id: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.id == id)
+    }
+
+    /// All artifacts, sorted by id.
+    pub fn artifacts(&self) -> &[Artifact] {
+        &self.artifacts
+    }
+
+    /// The shared decoded-chunk cache.
+    pub fn cache(&self) -> &Arc<ChunkCache> {
+        &self.cache
+    }
+}
+
+/// Handle to a running server: address, live stats/store access, and
+/// deterministic shutdown.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    store: Arc<ArtifactStore>,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The artifact store the server answers from.
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// Live latency/endpoint stats.
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Stop accepting, drain queued connections, join every worker.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    /// Block until the accept loop exits (it doesn't, short of `shutdown`
+    /// from another thread or process death) — the CLI's foreground mode.
+    pub fn run_forever(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_and_join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:8080`, port 0 for ephemeral) and serve
+/// `store` on `threads` connection workers until the returned handle is
+/// shut down.
+pub fn serve(store: ArtifactStore, addr: &str, threads: usize) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| SzError::config(format!("binding {addr}: {e}")))?;
+    let local = listener.local_addr()?;
+    let store = Arc::new(store);
+    let stats = Arc::new(ServerStats::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let store = Arc::clone(&store);
+        let stats = Arc::clone(&stats);
+        let stop = Arc::clone(&stop);
+        std::thread::Builder::new()
+            .name("sz3-http-accept".to_string())
+            .spawn(move || {
+                let pool = pool::ThreadPool::new(threads);
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match conn {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    let store = Arc::clone(&store);
+                    let stats = Arc::clone(&stats);
+                    let stop = Arc::clone(&stop);
+                    pool.execute(move || {
+                        handle_connection(stream, &store, &stats, &stop)
+                    });
+                }
+                // pool drops here: queued connections drain, workers join
+            })
+            .map_err(|e| SzError::config(format!("spawning accept thread: {e}")))?
+    };
+    Ok(ServerHandle { addr: local, store, stats, stop, accept: Some(accept) })
+}
+
+/// Serve one connection: keep-alive request loop with an idle timeout,
+/// closing on parse errors (after a 400) or `Connection: close`.
+fn handle_connection(
+    stream: TcpStream,
+    store: &ArtifactStore,
+    stats: &ServerStats,
+    stop: &AtomicBool,
+) {
+    let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => break, // clean EOF or idle timeout
+            Err(e) => {
+                let resp = Response::error(400, &e.to_string());
+                let _ = resp.write_to(&mut writer, true, false);
+                break;
+            }
+        };
+        let close = req.close;
+        let head_only = req.method == "HEAD";
+        let resp = handlers::dispatch(store, stats, &req);
+        if resp.write_to(&mut writer, close, head_only).is_err() {
+            break;
+        }
+        if close {
+            break;
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Fixed-size worker thread pool over an `mpsc` channel — the connection
+//! executor behind [`super::serve`] (a thread-per-connection model would
+//! let a connection flood exhaust the process; a fixed pool makes
+//! `--threads` the concurrency ceiling).
+//!
+//! Jobs queue in the channel when all workers are busy, so accepted
+//! connections are never dropped, only delayed. Dropping the pool closes
+//! the channel and joins every worker, which is what gives the server a
+//! deterministic shutdown: queued connections finish, then the threads
+//! exit.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed pool of named worker threads pulling jobs from a shared queue.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `threads` workers (at least one).
+    pub fn new(threads: usize) -> ThreadPool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("sz3-http-{i}"))
+                    .spawn(move || loop {
+                        // hold the lock only for the dequeue, not the job
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn http worker thread")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Worker count.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job; runs as soon as a worker frees up. No-op after the
+    /// pool has begun shutting down.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Box::new(job));
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; workers drain then exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_job_and_joins_on_drop() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(3);
+            assert_eq!(pool.size(), 3);
+            for _ in 0..50 {
+                let hits = Arc::clone(&hits);
+                pool.execute(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop joins: all queued jobs must have run
+        assert_eq!(hits.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let (tx, rx) = channel();
+        pool.execute(move || tx.send(7usize).unwrap());
+        assert_eq!(rx.recv().unwrap(), 7);
+    }
+}

@@ -1,0 +1,203 @@
+//! Per-endpoint latency accounting for `/statsz`: lock-free atomic
+//! counters plus a power-of-two-bucket histogram per endpoint, from which
+//! p50/p99 are estimated. Buckets are log₂-spaced in microseconds (bucket
+//! *i* covers `[2^i, 2^(i+1))` µs), so the histogram is 26 fixed `u64`s
+//! per endpoint — no allocation, no mutex, safe to hammer from every
+//! worker thread. Quantiles report a bucket's upper bound, i.e. they are
+//! conservative to within 2×, which is plenty to see a cold/warm split or
+//! a tail blowing up.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Histogram bucket count: bucket 25 tops out at ~67 s, far beyond any
+/// sane request.
+const N_BUCKETS: usize = 26;
+
+/// Latency accumulator for one endpoint.
+#[derive(Default)]
+pub struct LatencyStats {
+    count: AtomicU64,
+    total_us: AtomicU64,
+    max_us: AtomicU64,
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+/// Point-in-time summary of one endpoint's latency distribution.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LatencySummary {
+    /// Requests recorded.
+    pub count: u64,
+    /// Mean latency in microseconds.
+    pub mean_us: u64,
+    /// Estimated median (upper bucket bound), microseconds.
+    pub p50_us: u64,
+    /// Estimated 99th percentile (upper bucket bound), microseconds.
+    pub p99_us: u64,
+    /// Slowest request observed, microseconds.
+    pub max_us: u64,
+}
+
+impl LatencyStats {
+    /// Record one request's latency.
+    pub fn record(&self, elapsed: Duration) {
+        let us = elapsed.as_micros().min(u64::MAX as u128) as u64;
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+        let idx = if us <= 1 {
+            0
+        } else {
+            ((63 - us.leading_zeros()) as usize).min(N_BUCKETS - 1)
+        };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Upper bound (µs) of the bucket containing quantile `q` (0..=1).
+    fn quantile_us(&self, q: f64, counts: &[u64; N_BUCKETS], total: u64) -> u64 {
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the distribution. Counters advance concurrently, so the
+    /// summary is approximate during traffic — fine for observability.
+    pub fn summary(&self) -> LatencySummary {
+        let count = self.count.load(Ordering::Relaxed);
+        let total = self.total_us.load(Ordering::Relaxed);
+        let mut counts = [0u64; N_BUCKETS];
+        for (slot, b) in counts.iter_mut().zip(self.buckets.iter()) {
+            *slot = b.load(Ordering::Relaxed);
+        }
+        let histo_total: u64 = counts.iter().sum();
+        LatencySummary {
+            count,
+            mean_us: if count == 0 { 0 } else { total / count },
+            p50_us: self.quantile_us(0.50, &counts, histo_total),
+            p99_us: self.quantile_us(0.99, &counts, histo_total),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Endpoint labels tracked by [`ServerStats`] — one slot per API surface
+/// plus a catch-all for unmatched routes.
+pub const ENDPOINTS: [&str; 7] =
+    ["list", "meta", "roi", "raw", "healthz", "statsz", "other"];
+
+/// All endpoint latency slots plus the server start instant.
+pub struct ServerStats {
+    slots: Vec<LatencyStats>,
+    started: std::time::Instant,
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerStats {
+    /// Fresh stats, uptime starting now.
+    pub fn new() -> ServerStats {
+        ServerStats {
+            slots: ENDPOINTS.iter().map(|_| LatencyStats::default()).collect(),
+            started: std::time::Instant::now(),
+        }
+    }
+
+    /// Record a request against `label` (unknown labels fold into
+    /// `"other"`).
+    pub fn record(&self, label: &str, elapsed: Duration) {
+        let idx = ENDPOINTS
+            .iter()
+            .position(|&e| e == label)
+            .unwrap_or(ENDPOINTS.len() - 1);
+        self.slots[idx].record(elapsed);
+    }
+
+    /// Summary for one endpoint label.
+    pub fn summary(&self, label: &str) -> LatencySummary {
+        let idx = ENDPOINTS
+            .iter()
+            .position(|&e| e == label)
+            .unwrap_or(ENDPOINTS.len() - 1);
+        self.slots[idx].summary()
+    }
+
+    /// (label, summary) for every endpoint, in [`ENDPOINTS`] order.
+    pub fn summaries(&self) -> Vec<(&'static str, LatencySummary)> {
+        ENDPOINTS
+            .iter()
+            .zip(self.slots.iter())
+            .map(|(&label, s)| (label, s.summary()))
+            .collect()
+    }
+
+    /// Seconds since the stats (≈ the server) started.
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes_quantiles() {
+        let s = LatencyStats::default();
+        // 99 fast requests (~100µs) and one slow outlier (~50ms)
+        for _ in 0..99 {
+            s.record(Duration::from_micros(100));
+        }
+        s.record(Duration::from_millis(50));
+        let sum = s.summary();
+        assert_eq!(sum.count, 100);
+        assert_eq!(sum.max_us, 50_000);
+        // 100µs lands in bucket [64,128) → p50 reports 128
+        assert_eq!(sum.p50_us, 128);
+        assert!(
+            sum.p99_us <= 256,
+            "p99 still inside the fast band at 99/100: {}",
+            sum.p99_us
+        );
+        assert!(sum.mean_us >= 100 && sum.mean_us < 1000);
+        // the outlier is visible one step further out
+        assert!(s.quantile_us(1.0, &snapshot(&s), 100) >= 50_000 || sum.max_us >= 50_000);
+    }
+
+    fn snapshot(s: &LatencyStats) -> [u64; N_BUCKETS] {
+        let mut counts = [0u64; N_BUCKETS];
+        for (slot, b) in counts.iter_mut().zip(s.buckets.iter()) {
+            *slot = b.load(Ordering::Relaxed);
+        }
+        counts
+    }
+
+    #[test]
+    fn empty_stats_are_all_zero() {
+        let s = LatencyStats::default();
+        assert_eq!(s.summary(), LatencySummary::default());
+    }
+
+    #[test]
+    fn server_stats_routes_labels() {
+        let s = ServerStats::new();
+        s.record("roi", Duration::from_micros(300));
+        s.record("nonsense", Duration::from_micros(10));
+        assert_eq!(s.summary("roi").count, 1);
+        assert_eq!(s.summary("other").count, 1);
+        assert_eq!(s.summary("raw").count, 0);
+        assert_eq!(s.summaries().len(), ENDPOINTS.len());
+    }
+}

@@ -11,6 +11,21 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Parse an `A..B` half-open row-range spec — the one grammar shared by
+/// `sz3 extract --rows` and the HTTP ROI endpoint's `?rows=` parameter,
+/// so the CLI and the server can never drift apart. Returns a plain
+/// message on failure; callers wrap it in their own error type (CLI
+/// error vs HTTP 400 body).
+pub fn parse_rows(spec: &str) -> std::result::Result<std::ops::Range<usize>, String> {
+    let (a, b) = spec
+        .split_once("..")
+        .ok_or_else(|| format!("rows '{spec}' is not of the form A..B"))?;
+    let start: usize =
+        a.trim().parse().map_err(|_| format!("bad row start '{a}'"))?;
+    let end: usize = b.trim().parse().map_err(|_| format!("bad row end '{b}'"))?;
+    Ok(start..end)
+}
+
 /// Run `f(i)` for every `i in 0..n` across up to `workers` scoped threads
 /// pulling indices from a shared counter (work stealing) — the fan-out
 /// shape shared by the reader's parallel decode and checksum-verify
@@ -61,5 +76,16 @@ mod tests {
             );
         }
         par_for_each(0, 4, |_| panic!("no items, no calls"));
+    }
+
+    #[test]
+    fn parse_rows_grammar() {
+        assert_eq!(parse_rows("3..9"), Ok(3..9));
+        assert_eq!(parse_rows(" 0 .. 24 "), Ok(0..24));
+        assert_eq!(parse_rows("9..7"), Ok(9..7), "inversion is the caller's check");
+        assert!(parse_rows("abc").is_err());
+        assert!(parse_rows("1..x").is_err());
+        assert!(parse_rows("1-5").is_err());
+        assert!(parse_rows("").is_err());
     }
 }

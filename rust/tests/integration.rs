@@ -430,7 +430,7 @@ fn extract_cli_shape_file_backed_roi_with_cache() {
     let reader = ContainerReader::new(Box::new(src))
         .unwrap()
         .with_workers(2)
-        .with_chunk_cache(4);
+        .with_cache_bytes(4 << 20);
     let a = reader.read_region("t", 10..14).unwrap();
     let cold = reader.stats();
     assert_eq!(cold.chunks_decoded, 2, "rows 10..14 span chunks 8..12 and 12..16");
@@ -468,4 +468,191 @@ fn pwrel_bound_via_log_transform_pipeline() {
             assert!((d / o - 1.0).abs() <= rel * (1.0 + 1e-9));
         }
     }
+}
+
+#[test]
+fn concurrent_overlapping_roi_reads_through_one_shared_reader() {
+    // The serve-path concurrency contract: N threads hammering one shared
+    // reader with overlapping ROIs must all see bit-identical results,
+    // and the counters must stay exactly consistent (every chunk touch is
+    // either a cache hit or a decode, never both, never neither).
+    use std::sync::Arc;
+    use sz3::reader::ContainerReader;
+
+    let dims = [32usize, 16, 16];
+    let mut rng = Pcg32::seeded(314);
+    let field =
+        Field::f32("t", &dims, sz3::util::prop::smooth_field(&mut rng, &dims)).unwrap();
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Abs(1e-3),
+        workers: 2,
+        chunk_elems: 16 * 16 * 4, // 4 rows per chunk -> 8 chunks
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let (artifact, _) = coord.run_to_container(vec![field]).unwrap();
+    let full = sz3::container::decompress_container(&artifact, 2).unwrap().remove(0);
+
+    // overlapping windows: rois[i] = i..i+6 clamped into 0..32
+    let rois: Vec<std::ops::Range<usize>> =
+        (0..16).map(|i| (i * 2)..((i * 2 + 6).min(32))).collect();
+    let expected: Vec<Vec<u8>> = rois
+        .iter()
+        .map(|r| {
+            sz3::coordinator::slice_rows(&full, (r.start, r.end))
+                .unwrap()
+                .values
+                .to_le_bytes()
+        })
+        .collect();
+    // each ROI of 6 rows at 4 rows/chunk touches 2 or 3 chunks
+    let touches: usize = rois
+        .iter()
+        .map(|r| (0..8).filter(|c| c * 4 < r.end && (c + 1) * 4 > r.start).count())
+        .sum();
+
+    let reader = Arc::new(
+        ContainerReader::from_slice(&artifact)
+            .unwrap()
+            .with_workers(2)
+            .with_cache_bytes(16 << 20),
+    );
+    let n_threads = 8;
+    std::thread::scope(|s| {
+        for t in 0..n_threads {
+            let reader = Arc::clone(&reader);
+            let rois = &rois;
+            let expected = &expected;
+            s.spawn(move || {
+                // every thread walks all ROIs, phase-shifted so cold
+                // decodes and warm hits interleave across threads
+                for k in 0..rois.len() {
+                    let i = (k + t * 3) % rois.len();
+                    let got = reader.read_region("t", rois[i].clone()).unwrap();
+                    assert_eq!(
+                        got.values.to_le_bytes(),
+                        expected[i],
+                        "thread {t} roi {i} diverged"
+                    );
+                }
+            });
+        }
+    });
+
+    let s = reader.stats();
+    let total_touches = (touches * n_threads) as u64;
+    assert_eq!(
+        s.cache_hits + s.chunks_decoded,
+        total_touches,
+        "every chunk touch is exactly one hit or one decode"
+    );
+    assert!(s.chunks_decoded >= 8, "each of the 8 chunks decoded at least once");
+    assert!(
+        s.cache_hits > s.chunks_decoded,
+        "warm traffic must dominate: {} hits vs {} decodes",
+        s.cache_hits,
+        s.chunks_decoded
+    );
+    assert_eq!(s.chunks_fetched, s.chunks_decoded, "fetch only to decode");
+    assert_eq!(s.crc_verified, s.chunks_fetched, "v2 verifies every fetch");
+}
+
+#[test]
+fn http_server_loopback_full_round_trip() {
+    // list -> meta -> ROI -> raw over a real loopback socket, plus the
+    // statsz cache-hit acceptance check from the issue.
+    use sz3::config::Json;
+    use sz3::reader::ContainerReader;
+    use sz3::server::{self, ArtifactStore, HttpClient, StoreOptions};
+
+    let dims = [24usize, 12, 12];
+    let mut rng = Pcg32::seeded(2718);
+    let field = Field::f32(
+        "density",
+        &dims,
+        sz3::util::prop::smooth_field(&mut rng, &dims),
+    )
+    .unwrap();
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Abs(1e-3),
+        workers: 2,
+        chunk_elems: 3 * 144, // 8 chunks
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let (artifact, _) = coord.run_to_container(vec![field]).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("sz3_it_http_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("nyx.sz3c"), &artifact).unwrap();
+
+    let store = ArtifactStore::open_dir(
+        &dir,
+        &StoreOptions { cache_bytes: 8 << 20, workers: 2, verify: true },
+    )
+    .unwrap();
+    let handle = server::serve(store, "127.0.0.1:0", 2).unwrap();
+    let addr = handle.addr();
+    {
+        let mut client = HttpClient::connect(addr).unwrap();
+
+        // list
+        let resp = client.get("/v1/artifacts").unwrap();
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(resp.text().unwrap()).unwrap();
+        let arts = j.get("artifacts").unwrap().as_arr().unwrap();
+        assert_eq!(arts[0].get("id").unwrap().as_str(), Some("nyx"));
+
+        // meta
+        let resp = client.get("/v1/artifacts/nyx").unwrap();
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(resp.text().unwrap()).unwrap();
+        let f = &j.get("fields").unwrap().as_arr().unwrap()[0];
+        assert_eq!(f.get("name").unwrap().as_str(), Some("density"));
+        assert_eq!(f.get("chunks").unwrap().as_usize(), Some(8));
+
+        // ROI: exactly the bytes read_region produces
+        let resp = client.get("/v1/artifacts/nyx/fields/density?rows=7..11").unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("x-sz3-dims"), Some("4,12,12"));
+        let oracle = ContainerReader::from_slice(&artifact)
+            .unwrap()
+            .read_region("density", 7..11)
+            .unwrap();
+        assert_eq!(resp.body, oracle.values.to_le_bytes());
+        assert_eq!(resp.body.len(), 4 * 12 * 12 * 4, "content-length framing");
+
+        // raw chunk passthrough matches the local reader byte for byte
+        let resp = client.get("/v1/artifacts/nyx/raw?chunk=0").unwrap();
+        assert_eq!(resp.status, 200);
+        let local = ContainerReader::from_slice(&artifact).unwrap();
+        assert_eq!(resp.body, local.chunk_payload(0).unwrap());
+
+        // error paths over the wire
+        assert_eq!(client.get("/v1/artifacts/none").unwrap().status, 404);
+        assert_eq!(
+            client.get("/v1/artifacts/nyx/fields/density?rows=90..99").unwrap().status,
+            416
+        );
+        assert_eq!(
+            client.get("/v1/artifacts/nyx/fields/density?rows=oops").unwrap().status,
+            400
+        );
+
+        // repeat the ROI: statsz must show the warm-cache hit
+        client.get("/v1/artifacts/nyx/fields/density?rows=7..11").unwrap();
+        let resp = client.get("/statsz").unwrap();
+        let j = Json::parse(resp.text().unwrap()).unwrap();
+        let nyx = j.get("artifacts").unwrap().get("nyx").unwrap();
+        assert!(nyx.get("cache_hits").unwrap().as_usize().unwrap() >= 2);
+        let roi = j.get("endpoints").unwrap().get("roi").unwrap();
+        assert!(roi.get("count").unwrap().as_usize().unwrap() >= 4);
+        assert!(roi.get("p99_us").unwrap().as_f64().unwrap() > 0.0);
+    } // client drops -> connection closes -> worker frees
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }
