@@ -1,0 +1,165 @@
+//! Series delta bench: pack a smoothly-evolving time series into one v3
+//! container with and without snapshot delta mode, assert the acceptance
+//! criteria (delta beats direct on total bytes; every snapshot's
+//! `read_region_at` is bit-identical to the independent standalone
+//! decode), and measure snapshot-ROI latency cold vs cache-warm. Emits
+//! the machine-readable `BENCH_PR4.json` perf summary.
+//!
+//! Output: `series,<case>,<value>`
+
+use sz3::bench_harness::{Bench, PerfSummary};
+use sz3::config::JobConfig;
+use sz3::container::fixtures::{reference_decode, smooth_series};
+use sz3::coordinator::{Coordinator, Snapshot};
+use sz3::data::Field;
+use sz3::pipeline::ErrorBound;
+use sz3::reader::ContainerReader;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let nz = if quick { 48 } else { 128 };
+    let (ny, nx) = (48usize, 48);
+    let steps = 4usize;
+    println!("# series delta bench (quick={quick})");
+
+    // a smoothly-evolving series: fixed seed, slow drift so consecutive
+    // snapshots stay correlated (the shared deterministic builder)
+    let dims = [nz, ny, nx];
+    let snapshot_fields: Vec<Field> = smooth_series(4042, &dims, steps, 0.02, "rho")
+        .into_iter()
+        .map(|mut s| s.fields.remove(0))
+        .collect();
+    let raw_bytes: usize = snapshot_fields.iter().map(Field::nbytes).sum();
+
+    let eb = 1e-3;
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Abs(eb),
+        workers: 4,
+        chunk_elems: ny * nx * 8, // 8 rows per chunk
+        queue_depth: 4,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let series = |fields: &[Field]| -> Vec<Snapshot> {
+        fields
+            .iter()
+            .enumerate()
+            .map(|(t, f)| Snapshot::new(format!("t{t}"), vec![f.clone()]))
+            .collect()
+    };
+
+    let mut summary = PerfSummary::new();
+
+    // pack: direct vs delta
+    let t0 = std::time::Instant::now();
+    let (direct, _) =
+        coord.run_series_to_container(series(&snapshot_fields), false).unwrap();
+    let direct_secs = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let (delta, rep) =
+        coord.run_series_to_container(series(&snapshot_fields), true).unwrap();
+    let delta_secs = t0.elapsed().as_secs_f64();
+    println!("series,direct_bytes,{}", direct.len());
+    println!("series,delta_bytes,{}", delta.len());
+    println!("series,delta_chunks,{}", rep.delta_chunks);
+    println!("# {rep}");
+    summary.record("series_direct_ratio", raw_bytes as f64 / direct.len() as f64);
+    summary.record("series_delta_ratio", raw_bytes as f64 / delta.len() as f64);
+    summary.record("series_delta_savings", rep.delta_savings());
+    summary.record("series_pack_direct_mbs", raw_bytes as f64 / 1e6 / direct_secs.max(1e-9));
+    summary.record("series_pack_delta_mbs", raw_bytes as f64 / 1e6 / delta_secs.max(1e-9));
+
+    // ACCEPTANCE: a smoothly-evolving 3+ snapshot series must pack
+    // smaller with delta mode than direct
+    assert!(rep.delta_chunks > 0, "smooth series must select delta chunks");
+    assert!(
+        delta.len() < direct.len(),
+        "delta container ({} bytes) must beat direct ({} bytes)",
+        delta.len(),
+        direct.len()
+    );
+
+    // ACCEPTANCE: every snapshot read back from either container is
+    // bit-identical to the standalone decode of that snapshot.
+    // (a) direct container vs standalone compress/decompress;
+    // (b) delta container vs the independent reference decoder
+    //     (pipeline-level chain resolution, no ContainerReader).
+    let direct_reader = ContainerReader::from_slice(&direct).unwrap().with_workers(4);
+    let delta_reader = ContainerReader::from_slice(&delta).unwrap().with_workers(4);
+    let reference = reference_decode(&delta).unwrap();
+    for (t, field) in snapshot_fields.iter().enumerate() {
+        let (standalone, _) = coord.run_to_container(vec![field.clone()]).unwrap();
+        let lone = sz3::container::decompress_container(&standalone, 4)
+            .unwrap()
+            .remove(0);
+        let from_direct = direct_reader.read_field_at(t, "rho").unwrap();
+        assert_eq!(
+            from_direct.values.to_le_bytes(),
+            lone.values.to_le_bytes(),
+            "direct snapshot {t} != standalone decode"
+        );
+        let from_delta = delta_reader.read_field_at(t, "rho").unwrap();
+        let (_, _, oracle) = reference
+            .iter()
+            .find(|(s, f, _)| *s == t && f == "rho")
+            .expect("reference holds every snapshot");
+        assert_eq!(
+            &from_delta.values.to_le_bytes(),
+            oracle,
+            "delta snapshot {t} != independent reference decode"
+        );
+        // and the reconstruction respects the error bound end to end
+        // (1% slack: baseline+residual adds one f32 rounding, ~½ulp)
+        for (o, d) in field
+            .values
+            .to_f64_vec()
+            .iter()
+            .zip(from_delta.values.to_f64_vec())
+        {
+            assert!((o - d).abs() <= eb * 1.01, "bound at snapshot {t}");
+        }
+    }
+    println!("# acceptance checks passed");
+
+    // ROI latency on the last snapshot (longest delta chain): cold
+    // reader per iteration vs a byte-budget-cache-warm reader
+    let last = steps - 1;
+    let roi = 2 * 8..3 * 8; // exactly one chunk
+    let roi_bytes = (roi.end - roi.start) * ny * nx * 4;
+    let (s, cold_mbs) = bench.throughput("read_region_at(cold, delta chain)", roi_bytes, || {
+        let r = ContainerReader::from_slice(&delta).unwrap();
+        r.read_region_at(last, "rho", roi.clone()).unwrap()
+    });
+    println!("series,roi_cold_ms,{:.3}", s.mean.as_secs_f64() * 1e3);
+    summary.record("series_roi_cold_mbs", cold_mbs);
+    summary.record("series_roi_cold_ms", s.mean.as_secs_f64() * 1e3);
+
+    let warm_reader = ContainerReader::from_slice(&delta)
+        .unwrap()
+        .with_cache_bytes(64 << 20);
+    warm_reader.read_region_at(last, "rho", roi.clone()).unwrap();
+    let (s, warm_mbs) = bench.throughput("read_region_at(warm cache)", roi_bytes, || {
+        warm_reader.read_region_at(last, "rho", roi.clone()).unwrap()
+    });
+    println!("series,roi_warm_ms,{:.3}", s.mean.as_secs_f64() * 1e3);
+    summary.record("series_roi_warm_mbs", warm_mbs);
+    summary.record("series_roi_warm_ms", s.mean.as_secs_f64() * 1e3);
+    let rs = warm_reader.stats();
+    println!(
+        "# warm reader: {} decodes, {} cache hits, {} delta resolutions",
+        rs.chunks_decoded, rs.cache_hits, rs.delta_applied
+    );
+
+    // snapshot-0 ROI for comparison (no chain to resolve)
+    let (_, first_mbs) = bench.throughput("read_region_at(cold, snapshot 0)", roi_bytes, || {
+        let r = ContainerReader::from_slice(&delta).unwrap();
+        r.read_region_at(0, "rho", roi.clone()).unwrap()
+    });
+    summary.record("series_roi_s0_mbs", first_mbs);
+
+    summary.write_json("BENCH_PR4.json").unwrap();
+    println!("# perf summary written to BENCH_PR4.json");
+    println!("{}", summary.to_json());
+}

@@ -1,0 +1,39 @@
+//! Golden-fixture generator: materialize the deterministic format-
+//! compatibility corpus (`sz3::container::fixtures::golden_set`) under
+//! `rust/tests/fixtures/`, one `.sz3c` artifact per container version
+//! plus the expected decoded bytes of every `(snapshot, field)`.
+//!
+//! Run after any intentional format change, review the diff, and commit
+//! the result — the compat suite (`cargo test --test compat`) then locks
+//! decoding of the committed artifacts bit-for-bit. Re-running on an
+//! unchanged tree must be a no-op (the corpus is fully seeded).
+//!
+//! ```text
+//! cargo run --release --example gen_fixtures
+//! ```
+
+use std::path::PathBuf;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures");
+    std::fs::create_dir_all(&dir).expect("create fixtures dir");
+    let set = sz3::container::fixtures::golden_set().expect("build corpus");
+    for fx in &set {
+        let path = dir.join(fx.artifact_file());
+        let existed = path.exists()
+            && std::fs::read(&path).map(|old| old == fx.artifact).unwrap_or(false);
+        std::fs::write(&path, &fx.artifact).expect("write artifact");
+        println!(
+            "{} ({} bytes){}",
+            path.display(),
+            fx.artifact.len(),
+            if existed { " [unchanged]" } else { "" }
+        );
+        for (snapshot, field, bytes) in &fx.expected {
+            let path = dir.join(fx.expected_file(*snapshot, field));
+            std::fs::write(&path, bytes).expect("write expected decode");
+            println!("{} ({} bytes)", path.display(), bytes.len());
+        }
+    }
+    println!("{} fixtures written to {}", set.len(), dir.display());
+}

@@ -1,0 +1,109 @@
+//! Snapshot delta arithmetic: residual fields against a decoded baseline.
+//!
+//! A v3 series container may store snapshot *k*'s chunks as error-bounded
+//! residuals against the **decoded** snapshot *k−1* baseline (never the
+//! original — the decoder only ever has the decoded baseline, so deltaing
+//! against anything else would let error accumulate across the chain).
+//! [`residual`] builds the field a delta chunk compresses; [`apply`]
+//! reconstructs the snapshot from baseline + decoded residual. Both sides
+//! of the chain — the series packer computing next-snapshot baselines and
+//! the reader resolving delta chunks — call the *same* two functions, so
+//! their reconstructions agree bit for bit.
+//!
+//! Float residuals are computed in f64 and rounded once back to the
+//! field's own dtype; the rounding is bounded by one ulp of the residual
+//! magnitude, orders of magnitude below any practical error bound (the
+//! residual compressor's bound dominates). Integer residuals use wrapping
+//! arithmetic and are exactly invertible.
+
+use crate::data::{Field, FieldValues};
+use crate::error::{Result, SzError};
+
+fn check_pair(a: &Field, b: &Field, what: &str) -> Result<()> {
+    if a.shape.dims() != b.shape.dims() {
+        return Err(SzError::Shape(format!(
+            "{what}: dims {:?} vs baseline {:?}",
+            a.shape.dims(),
+            b.shape.dims()
+        )));
+    }
+    if a.values.dtype() != b.values.dtype() {
+        return Err(SzError::Shape(format!(
+            "{what}: dtype {} vs baseline {}",
+            a.values.dtype(),
+            b.values.dtype()
+        )));
+    }
+    Ok(())
+}
+
+/// Residual field `original − baseline`, same name/dims/dtype as
+/// `original` — the input a delta chunk's compressor sees.
+pub fn residual(original: &Field, baseline: &Field) -> Result<Field> {
+    check_pair(original, baseline, "delta residual")?;
+    let values = match (&original.values, &baseline.values) {
+        (FieldValues::F32(a), FieldValues::F32(b)) => FieldValues::F32(
+            a.iter().zip(b).map(|(&x, &y)| (x as f64 - y as f64) as f32).collect(),
+        ),
+        (FieldValues::F64(a), FieldValues::F64(b)) => {
+            FieldValues::F64(a.iter().zip(b).map(|(&x, &y)| x - y).collect())
+        }
+        (FieldValues::I32(a), FieldValues::I32(b)) => {
+            FieldValues::I32(a.iter().zip(b).map(|(&x, &y)| x.wrapping_sub(y)).collect())
+        }
+        _ => unreachable!("dtype equality checked above"),
+    };
+    Field::new(original.name.clone(), original.shape.dims(), values)
+}
+
+/// Reconstruct `baseline + residual` — the inverse of [`residual`] modulo
+/// the residual compressor's error bound. Keeps the residual's name (the
+/// source field name the packer recorded).
+pub fn apply(baseline: &Field, residual: &Field) -> Result<Field> {
+    check_pair(residual, baseline, "delta apply")?;
+    let values = match (&baseline.values, &residual.values) {
+        (FieldValues::F32(b), FieldValues::F32(r)) => FieldValues::F32(
+            b.iter().zip(r).map(|(&y, &d)| (y as f64 + d as f64) as f32).collect(),
+        ),
+        (FieldValues::F64(b), FieldValues::F64(r)) => {
+            FieldValues::F64(b.iter().zip(r).map(|(&y, &d)| y + d).collect())
+        }
+        (FieldValues::I32(b), FieldValues::I32(r)) => {
+            FieldValues::I32(b.iter().zip(r).map(|(&y, &d)| y.wrapping_add(d)).collect())
+        }
+        _ => unreachable!("dtype equality checked above"),
+    };
+    Field::new(residual.name.clone(), residual.shape.dims(), values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_then_apply_roundtrips_floats() {
+        let a = Field::f32("x", &[2, 3], vec![1.0, 2.5, -3.0, 0.0, 7.25, -0.5]).unwrap();
+        let b = Field::f32("x", &[2, 3], vec![1.5, 2.0, -2.0, 0.5, 7.0, -1.0]).unwrap();
+        let r = residual(&a, &b).unwrap();
+        let out = apply(&b, &r).unwrap();
+        assert_eq!(out.values, a.values, "exact residual must reconstruct exactly");
+    }
+
+    #[test]
+    fn integer_residuals_wrap_exactly() {
+        let a = Field::new("i", &[3], FieldValues::I32(vec![i32::MAX, -7, 0])).unwrap();
+        let b = Field::new("i", &[3], FieldValues::I32(vec![-1, 5, i32::MIN])).unwrap();
+        let r = residual(&a, &b).unwrap();
+        assert_eq!(apply(&b, &r).unwrap().values, a.values);
+    }
+
+    #[test]
+    fn mismatched_pairs_rejected() {
+        let a = Field::f32("x", &[4], vec![0.0; 4]).unwrap();
+        let b = Field::f32("x", &[2, 2], vec![0.0; 4]).unwrap();
+        assert!(residual(&a, &b).is_err(), "dims must match");
+        let c = Field::f64("x", &[4], vec![0.0; 4]).unwrap();
+        assert!(residual(&a, &c).is_err(), "dtypes must match");
+        assert!(apply(&a, &c).is_err());
+    }
+}

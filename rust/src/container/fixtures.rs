@@ -1,0 +1,205 @@
+//! Deterministic golden-fixture corpus for format-compatibility testing.
+//!
+//! [`golden_set`] builds one tiny artifact per container version (v1, v2,
+//! v3, and a v3 delta series) from fixed-seed data, together with the
+//! expected decoded bytes of every `(snapshot, field)` — computed by
+//! [`reference_decode`], a deliberately independent re-implementation of
+//! the decode semantics that never touches [`crate::reader`]. The compat
+//! suite (`rust/tests/compat.rs`) asserts the real reader agrees with the
+//! reference bit for bit, and `examples/gen_fixtures.rs` materializes the
+//! corpus under `rust/tests/fixtures/` so committed artifacts lock the
+//! byte format against future bumps.
+//!
+//! Everything here is seeded and single-valued: two builds of the corpus
+//! on any machine produce identical bytes (the repo already pins
+//! compression determinism in `coordinator::tests`).
+
+use super::delta;
+use crate::config::JobConfig;
+use crate::coordinator::{Coordinator, Snapshot};
+use crate::data::Field;
+use crate::error::{Result, SzError};
+use crate::pipeline::{self, ErrorBound};
+use crate::util::{prop, rng::Pcg32};
+use std::collections::HashMap;
+
+/// One corpus entry: a packed artifact plus its expected decode.
+pub struct Fixture {
+    /// File stem under `rust/tests/fixtures/` (e.g. `"v1"`).
+    pub name: &'static str,
+    /// The packed container bytes.
+    pub artifact: Vec<u8>,
+    /// Expected decoded output per `(snapshot, field)`, as the
+    /// little-endian bytes `FieldValues::to_le_bytes` produces.
+    pub expected: Vec<(usize, String, Vec<u8>)>,
+}
+
+impl Fixture {
+    /// File name of the artifact (`<name>.sz3c`).
+    pub fn artifact_file(&self) -> String {
+        format!("{}.sz3c", self.name)
+    }
+
+    /// File name of one expected-decode blob (`<name>.s<snap>.<field>.bin`).
+    pub fn expected_file(&self, snapshot: usize, field: &str) -> String {
+        format!("{}.s{snapshot}.{field}.bin", self.name)
+    }
+}
+
+/// Deterministic smoothly-drifting series: snapshot *t* holds
+/// `base + drift_scale · t · drift` for two fixed-seed smooth fields,
+/// tagged `t0..tN`. The shape every series test and bench exercises —
+/// consecutive snapshots stay correlated, so delta mode has something to
+/// win on — shared here so the construction exists exactly once.
+pub fn smooth_series(
+    seed: u64,
+    dims: &[usize],
+    steps: usize,
+    drift_scale: f32,
+    field: &str,
+) -> Vec<Snapshot> {
+    let mut rng = Pcg32::seeded(seed);
+    let base = prop::smooth_field(&mut rng, dims);
+    let drift = prop::smooth_field(&mut rng, dims);
+    (0..steps)
+        .map(|t| {
+            let vals: Vec<f32> = base
+                .iter()
+                .zip(&drift)
+                .map(|(&b, &d)| b + drift_scale * t as f32 * d)
+                .collect();
+            Snapshot::new(
+                format!("t{t}"),
+                vec![Field::f32(field, dims, vals).expect("valid fixture dims")],
+            )
+        })
+        .collect()
+}
+
+fn corpus_coordinator() -> Coordinator {
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Abs(1e-3),
+        workers: 1,
+        chunk_elems: 2 * 36, // dims [8,6,6]: 2 rows per chunk -> 4 chunks
+        queue_depth: 2,
+        ..Default::default()
+    };
+    Coordinator::from_config(&cfg).expect("corpus pipeline is registered")
+}
+
+/// Build the whole corpus. Infallible in practice; errors only surface if
+/// the compression stack itself is broken.
+pub fn golden_set() -> Result<Vec<Fixture>> {
+    let dims = [8usize, 6, 6];
+    // a 3-step smoothly-drifting series so the corpus exercises the
+    // snapshot table and at least one delta chunk; its first snapshot
+    // doubles as the single-snapshot v1/v2/v3 fixture field
+    let series = smooth_series(20260730, &dims, 3, 0.01, "a");
+    let field = series[0].fields[0].clone();
+
+    let coord = corpus_coordinator();
+    let mut chunks = Vec::new();
+    coord.run(vec![field], |c| chunks.push(c))?;
+
+    let mut out = Vec::new();
+    for (name, artifact) in [
+        ("v1", super::pack_v1(&chunks)?),
+        ("v2", super::pack_v2(&chunks)?),
+        ("v3", super::pack(&chunks)?),
+    ] {
+        let expected = reference_decode(&artifact)?;
+        out.push(Fixture { name, artifact, expected });
+    }
+
+    let (artifact, _) = coord.run_series_to_container(series, true)?;
+    let expected = reference_decode(&artifact)?;
+    out.push(Fixture { name: "v3-series", artifact, expected });
+    Ok(out)
+}
+
+/// Decode a fully-resident container **without** [`crate::reader`]: parse
+/// the index, decompress every chunk stream straight off the payload in
+/// snapshot order, resolve delta chunks against the previously decoded
+/// `(snapshot − 1, field, chunk_index)` baseline, and concatenate per
+/// field. This is the compat suite's oracle — two independent decode
+/// implementations must agree bit for bit.
+pub fn reference_decode(artifact: &[u8]) -> Result<Vec<(usize, String, Vec<u8>)>> {
+    let (index, payload) = super::read_index(artifact)?;
+    let mut ids: Vec<usize> = (0..index.entries.len()).collect();
+    ids.sort_by_key(|&i| {
+        let e = &index.entries[i];
+        (e.snapshot, e.field.clone(), e.chunk_index)
+    });
+    let mut decoded: HashMap<(usize, &str, usize), Field> = HashMap::new();
+    for &i in &ids {
+        let e = &index.entries[i];
+        let raw = pipeline::decompress_any(&payload[e.offset..e.offset + e.len])?;
+        let field = if e.delta {
+            let b = decoded
+                .get(&(e.snapshot - 1, e.field.as_str(), e.chunk_index))
+                .ok_or_else(|| {
+                    SzError::corrupt(format!(
+                        "fixture chunk {} of '{}' has no baseline",
+                        e.chunk_index, e.field
+                    ))
+                })?;
+            delta::apply(b, &raw)?
+        } else {
+            raw
+        };
+        decoded.insert((e.snapshot, e.field.as_str(), e.chunk_index), field);
+    }
+    // assemble (snapshot, field) outputs in snapshot-major first-appearance
+    // order, matching the reader's read_all
+    let mut groups: Vec<(usize, String)> = Vec::new();
+    for &i in &ids {
+        let e = &index.entries[i];
+        let key = (e.snapshot, e.field.clone());
+        if !groups.contains(&key) {
+            groups.push(key);
+        }
+    }
+    let mut out = Vec::new();
+    for (snapshot, name) in groups {
+        let mut parts: Vec<(usize, &Field)> = decoded
+            .iter()
+            .filter(|((s, f, _), _)| *s == snapshot && *f == name)
+            .map(|((_, _, ci), field)| (*ci, field))
+            .collect();
+        parts.sort_by_key(|(ci, _)| *ci);
+        let mut bytes = Vec::new();
+        for (_, f) in parts {
+            bytes.extend_from_slice(&f.values.to_le_bytes());
+        }
+        out.push((snapshot, name, bytes));
+    }
+    Ok(out)
+}
+
+/// Re-slice a reference decode into the rows a region read would return —
+/// lets tests compare `read_region_at` against the oracle without going
+/// through the reader twice.
+pub fn reference_region(
+    artifact: &[u8],
+    snapshot: usize,
+    field: &str,
+    rows: std::ops::Range<usize>,
+) -> Result<Vec<u8>> {
+    let (index, _) = super::read_index(artifact)?;
+    let dims = index
+        .entries
+        .iter()
+        .find(|e| e.snapshot == snapshot && e.field == field)
+        .map(|e| e.field_dims.clone())
+        .ok_or_else(|| SzError::config(format!("no field '{field}'")))?;
+    let full = reference_decode(artifact)?
+        .into_iter()
+        .find(|(s, f, _)| *s == snapshot && f == field)
+        .map(|(_, _, bytes)| bytes)
+        .expect("field located above");
+    // reconstruct an f32/f64/i32-agnostic slice via byte arithmetic: the
+    // per-row byte count divides the total evenly
+    let row_bytes = full.len() / dims[0];
+    Ok(full[rows.start * row_bytes..rows.end * row_bytes].to_vec())
+}

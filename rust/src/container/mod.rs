@@ -13,9 +13,11 @@
 //!
 //! ```text
 //! magic   4 bytes  "SZ3C"
-//! version u8       1 or 2
+//! version u8       1, 2 or 3
 //! chunks  varint   number of chunk-index entries
 //! fields  varint   number of distinct fields (informational)
+//! snaps   varint   (v3 only) snapshot-table length
+//! tag × snaps str  (v3 only) per-snapshot timestamp tag (may be empty)
 //! entry × chunks:
 //!     field        str     source field name
 //!     chunk_index  varint  position of this chunk within its field
@@ -27,15 +29,28 @@
 //!     pipeline     str     registry pipeline that compressed the chunk
 //!     offset       varint  payload-relative byte offset of the stream
 //!     len          varint  stream length in bytes
-//!     crc32        u32 LE  (v2 only) CRC-32/IEEE of the chunk stream
+//!     crc32        u32 LE  (v2+) CRC-32/IEEE of the chunk stream
+//!     snapshot     varint  (v3 only) snapshot-table index of this chunk
+//!     flags        u8      (v3 only) bit 0: delta — the stream holds
+//!                          residuals against the decoded (snapshot−1,
+//!                          field, chunk_index) baseline
 //! payload_len varint
+//! index_crc32 u32 LE  (v3 only) CRC-32/IEEE of every byte above
 //! payload     bytes   concatenated per-chunk `SZ3R` streams
 //! ```
 //!
-//! v2 (current) adds a per-chunk CRC-32 to every index entry, verified on
-//! every payload fetch by the reader; v1 artifacts (no checksum) remain
-//! fully readable. The full byte-level specification lives in
-//! `docs/CONTAINER.md`.
+//! v2 adds a per-chunk CRC-32 to every index entry, verified on every
+//! payload fetch by the reader. v3 (current) adds the **snapshot axis**:
+//! a tag table plus a per-entry snapshot id and delta flag, so one
+//! artifact holds a whole time series and snapshot *k* chunks may be
+//! stored as error-bounded residuals against the decoded snapshot *k−1*
+//! baseline (see [`delta`] and
+//! [`crate::coordinator::Coordinator::run_series_to_container`]) — plus
+//! an **index checksum** verified at parse time, so a flipped index byte
+//! (a delta flag, a snapshot id) errors instead of silently decoding
+//! wrong data. v1 and v2 artifacts remain fully readable — they parse as
+//! a single untagged snapshot 0 with no delta chunks. The full
+//! byte-level specification lives in `docs/CONTAINER.md`.
 //!
 //! Every chunk stream is itself a complete self-describing `SZ3R` stream,
 //! so the index's `pipeline` name is a dispatch/statistics shortcut that is
@@ -47,6 +62,8 @@
 //! open a multi-GB container without loading its payload.
 
 pub mod adaptive;
+pub mod delta;
+pub mod fixtures;
 
 pub use adaptive::{AdaptiveChunkSelector, ChunkSignals, Selection};
 
@@ -62,8 +79,15 @@ pub const CONTAINER_MAGIC: &[u8; 4] = b"SZ3C";
 pub const VERSION_V1: u8 = 1;
 /// Adds a CRC-32 per chunk-index entry, verified on every fetch.
 pub const VERSION_V2: u8 = 2;
+/// Adds the snapshot axis: a tag table plus a per-entry snapshot id and
+/// delta flag for multi-snapshot time-series artifacts.
+pub const VERSION_V3: u8 = 3;
 /// The version [`pack`] writes.
-pub const CURRENT_VERSION: u8 = VERSION_V2;
+pub const CURRENT_VERSION: u8 = VERSION_V3;
+
+/// Entry flag bit: the chunk stream holds residuals against the decoded
+/// `(snapshot − 1, field, chunk_index)` baseline.
+const FLAG_DELTA: u8 = 1;
 
 /// True if `stream` starts with the container magic.
 pub fn is_container(stream: &[u8]) -> bool {
@@ -91,6 +115,11 @@ pub struct ChunkEntry {
     pub len: usize,
     /// CRC-32 of the chunk stream (`None` for v1 containers).
     pub crc32: Option<u32>,
+    /// Snapshot this chunk belongs to (always 0 for v1/v2 artifacts).
+    pub snapshot: usize,
+    /// True if the stream holds residuals against the decoded
+    /// `(snapshot − 1, field, chunk_index)` baseline (v3 only).
+    pub delta: bool,
 }
 
 /// Parsed container index.
@@ -98,9 +127,30 @@ pub struct ChunkEntry {
 pub struct ContainerIndex {
     /// Chunk entries in delivery (seq) order.
     pub entries: Vec<ChunkEntry>,
+    /// Per-snapshot timestamp tags, indexed by snapshot id. v1/v2
+    /// artifacts parse as a single untagged snapshot.
+    pub snapshots: Vec<String>,
 }
 
 impl ContainerIndex {
+    /// Number of snapshots the artifact holds (1 for v1/v2).
+    pub fn snapshot_count(&self) -> usize {
+        self.snapshots.len()
+    }
+
+    /// Chunk counts per snapshot as `(total, delta)` pairs, indexed by
+    /// snapshot id.
+    pub fn per_snapshot(&self) -> Vec<(usize, usize)> {
+        let mut out = vec![(0usize, 0usize); self.snapshots.len()];
+        for e in &self.entries {
+            if let Some(slot) = out.get_mut(e.snapshot) {
+                slot.0 += 1;
+                slot.1 += e.delta as usize;
+            }
+        }
+        out
+    }
+
     /// Distinct field names in order of first appearance.
     pub fn field_names(&self) -> Vec<&str> {
         let mut out: Vec<&str> = Vec::new();
@@ -131,7 +181,7 @@ impl ContainerIndex {
 pub struct IndexMeta {
     /// The parsed chunk index.
     pub index: ContainerIndex,
-    /// Container format version (1 or 2).
+    /// Container format version (1, 2 or 3).
     pub version: u8,
     /// Absolute byte offset where the payload begins.
     pub payload_offset: usize,
@@ -140,37 +190,68 @@ pub struct IndexMeta {
 }
 
 /// Pack ordered coordinator chunks into a container artifact (current
-/// version, with per-chunk CRC-32).
+/// version). Snapshot tags default to empty strings, one per snapshot id
+/// the chunks reference; use [`pack_series`] to name them.
 ///
-/// All chunks of a field must carry the same `field_dims`/`chunk_count`
-/// (the coordinator guarantees this); ordering within the buffer is free
-/// since decompression sorts by `chunk_index`.
+/// All chunks of a `(snapshot, field)` must carry the same
+/// `field_dims`/`chunk_count` (the coordinator guarantees this); ordering
+/// within the buffer is free since decompression sorts by `chunk_index`.
 pub fn pack(chunks: &[CompressedChunk]) -> Result<Vec<u8>> {
-    pack_version(chunks, CURRENT_VERSION)
+    let snaps = chunks.iter().map(|c| c.snapshot + 1).max().unwrap_or(1);
+    pack_with(chunks, CURRENT_VERSION, &vec![String::new(); snaps])
+}
+
+/// Pack a multi-snapshot series with explicit per-snapshot tags (v3).
+pub fn pack_series(chunks: &[CompressedChunk], tags: &[String]) -> Result<Vec<u8>> {
+    pack_with(chunks, VERSION_V3, tags)
 }
 
 /// Pack in the legacy v1 layout (no checksums). Kept for compatibility
 /// testing and for producing artifacts older readers understand.
 pub fn pack_v1(chunks: &[CompressedChunk]) -> Result<Vec<u8>> {
-    pack_version(chunks, VERSION_V1)
+    pack_with(chunks, VERSION_V1, &[String::new()])
 }
 
-fn pack_version(chunks: &[CompressedChunk], version: u8) -> Result<Vec<u8>> {
-    if version != VERSION_V1 && version != VERSION_V2 {
+/// Pack in the legacy v2 layout (CRC-32 per chunk, no snapshot axis).
+pub fn pack_v2(chunks: &[CompressedChunk]) -> Result<Vec<u8>> {
+    pack_with(chunks, VERSION_V2, &[String::new()])
+}
+
+fn pack_with(chunks: &[CompressedChunk], version: u8, tags: &[String]) -> Result<Vec<u8>> {
+    if version < VERSION_V1 || version > VERSION_V3 {
         return Err(SzError::config(format!("cannot pack container version {version}")));
     }
+    if tags.is_empty() {
+        return Err(SzError::config("container needs ≥ 1 snapshot tag"));
+    }
+    if version < VERSION_V3 {
+        if tags.len() > 1 || chunks.iter().any(|c| c.snapshot != 0 || c.delta) {
+            return Err(SzError::config(format!(
+                "container v{version} cannot encode snapshots or delta chunks"
+            )));
+        }
+    }
     // Reject chunk sets that could never decode — duplicate chunk indices
-    // (two source fields sharing a name) or a count that disagrees with
-    // the declared chunk_count — instead of emitting a poison artifact.
+    // (two source fields sharing a name), a count that disagrees with the
+    // declared chunk_count, or a delta chunk with no baseline — instead of
+    // emitting a poison artifact.
     let mut fields: Vec<&str> = Vec::new();
-    let mut seen: std::collections::HashMap<&str, (usize, Vec<bool>)> =
+    let mut seen: std::collections::HashMap<(usize, &str), (usize, Vec<bool>)> =
         std::collections::HashMap::new();
     for c in chunks {
         if !fields.contains(&c.field.as_str()) {
             fields.push(&c.field);
         }
+        if c.snapshot >= tags.len() {
+            return Err(SzError::config(format!(
+                "field '{}': snapshot {} outside the {}-entry snapshot table",
+                c.field,
+                c.snapshot,
+                tags.len()
+            )));
+        }
         let (count, got) = seen
-            .entry(&c.field)
+            .entry((c.snapshot, &c.field))
             .or_insert_with(|| (c.chunk_count, vec![false; c.chunk_count]));
         if c.chunk_count != *count || c.chunk_index >= *count {
             return Err(SzError::config(format!(
@@ -186,12 +267,41 @@ fn pack_version(chunks: &[CompressedChunk], version: u8) -> Result<Vec<u8>> {
             )));
         }
     }
-    for (name, (count, got)) in &seen {
+    for ((snap, name), (count, got)) in &seen {
         if got.iter().filter(|&&g| g).count() != *count {
             return Err(SzError::config(format!(
-                "field '{name}': packed {} of {count} chunks",
+                "snapshot {snap} field '{name}': packed {} of {count} chunks",
                 got.iter().filter(|&&g| g).count()
             )));
+        }
+    }
+    for c in chunks {
+        if !c.delta {
+            continue;
+        }
+        if c.snapshot == 0 {
+            return Err(SzError::config(format!(
+                "field '{}': snapshot 0 cannot be delta-encoded (no baseline)",
+                c.field
+            )));
+        }
+        let baseline = chunks.iter().find(|b| {
+            b.snapshot == c.snapshot - 1
+                && b.field == c.field
+                && b.chunk_index == c.chunk_index
+        });
+        match baseline {
+            Some(b) if b.rows == c.rows && b.field_dims == c.field_dims => {}
+            _ => {
+                return Err(SzError::config(format!(
+                    "field '{}': delta chunk {} of snapshot {} has no matching \
+                     baseline in snapshot {}",
+                    c.field,
+                    c.chunk_index,
+                    c.snapshot,
+                    c.snapshot - 1
+                )))
+            }
         }
     }
     let mut w = ByteWriter::new();
@@ -199,6 +309,12 @@ fn pack_version(chunks: &[CompressedChunk], version: u8) -> Result<Vec<u8>> {
     w.put_u8(version);
     w.put_varint(chunks.len() as u64);
     w.put_varint(fields.len() as u64);
+    if version >= VERSION_V3 {
+        w.put_varint(tags.len() as u64);
+        for t in tags {
+            w.put_str(t);
+        }
+    }
     let mut offset = 0usize;
     for c in chunks {
         w.put_str(&c.field);
@@ -216,13 +332,25 @@ fn pack_version(chunks: &[CompressedChunk], version: u8) -> Result<Vec<u8>> {
         if version >= VERSION_V2 {
             w.put_u32(crc32(&c.stream));
         }
+        if version >= VERSION_V3 {
+            w.put_varint(c.snapshot as u64);
+            w.put_u8(if c.delta { FLAG_DELTA } else { 0 });
+        }
         offset += c.stream.len();
     }
     w.put_varint(offset as u64);
-    for c in chunks {
-        w.put_bytes(&c.stream);
+    let mut bytes = w.finish();
+    if version >= VERSION_V3 {
+        // v3: checksum the whole index (magic through payload_len) so a
+        // flipped snapshot id, delta flag, or tag byte can never decode
+        // silently-wrong data — the per-chunk CRCs only cover payloads
+        let c = crc32(&bytes);
+        bytes.extend_from_slice(&c.to_le_bytes());
     }
-    Ok(w.finish())
+    for c in chunks {
+        bytes.extend_from_slice(&c.stream);
+    }
+    Ok(bytes)
 }
 
 /// Parse and validate the chunk index from an artifact prefix; the payload
@@ -236,7 +364,7 @@ pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
         return Err(SzError::corrupt("bad container magic"));
     }
     let version = r.get_u8()?;
-    if version != VERSION_V1 && version != VERSION_V2 {
+    if version < VERSION_V1 || version > VERSION_V3 {
         return Err(SzError::corrupt(format!("unsupported container version {version}")));
     }
     let n_chunks = r.get_varint()? as usize;
@@ -252,6 +380,27 @@ pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
         )));
     }
     let _n_fields = r.get_varint()?;
+    let snapshots = if version >= VERSION_V3 {
+        let n_snaps = r.get_varint()? as usize;
+        if n_snaps == 0 {
+            return Err(SzError::corrupt("v3 container declares no snapshots"));
+        }
+        if n_snaps > r.remaining() {
+            return Err(SzError::corrupt(format!(
+                "need {n_snaps} snapshot tags, have {} bytes",
+                r.remaining()
+            )));
+        }
+        let mut tags = Vec::with_capacity(n_snaps);
+        for _ in 0..n_snaps {
+            tags.push(r.get_str()?);
+        }
+        tags
+    } else {
+        // v1/v2: a single implicit untagged snapshot, so every caller can
+        // treat the snapshot axis uniformly
+        vec![String::new()]
+    };
     let mut entries = Vec::new();
     for _ in 0..n_chunks {
         let field = r.get_str()?;
@@ -274,6 +423,30 @@ pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
         let offset = r.get_varint()? as usize;
         let len = r.get_varint()? as usize;
         let crc = if version >= VERSION_V2 { Some(r.get_u32()?) } else { None };
+        let (snapshot, delta) = if version >= VERSION_V3 {
+            let snapshot = r.get_varint()? as usize;
+            let flags = r.get_u8()?;
+            if flags & !FLAG_DELTA != 0 {
+                return Err(SzError::corrupt(format!(
+                    "unknown chunk flags {flags:#04x}"
+                )));
+            }
+            if snapshot >= snapshots.len() {
+                return Err(SzError::corrupt(format!(
+                    "chunk snapshot {snapshot} outside the {}-entry table",
+                    snapshots.len()
+                )));
+            }
+            let delta = flags & FLAG_DELTA != 0;
+            if delta && snapshot == 0 {
+                return Err(SzError::corrupt(
+                    "snapshot 0 chunk flagged delta (no baseline exists)",
+                ));
+            }
+            (snapshot, delta)
+        } else {
+            (0, false)
+        };
         if chunk_count == 0 || chunk_index >= chunk_count {
             return Err(SzError::corrupt(format!(
                 "chunk index {chunk_index} outside count {chunk_count}"
@@ -295,9 +468,21 @@ pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
             offset,
             len,
             crc32: crc,
+            snapshot,
+            delta,
         });
     }
     let payload_len = r.get_varint()?;
+    if version >= VERSION_V3 {
+        let covered = r.pos();
+        let got = r.get_u32()?;
+        let expect = crc32(&prefix[..covered]);
+        if got != expect {
+            return Err(SzError::corrupt(format!(
+                "index crc32 mismatch (stored {got:#010x}, computed {expect:#010x})"
+            )));
+        }
+    }
     let payload_offset = r.pos();
     for e in &entries {
         let end = e
@@ -311,11 +496,81 @@ pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
             )));
         }
     }
-    Ok(IndexMeta { index: ContainerIndex { entries }, version, payload_offset, payload_len })
+    Ok(IndexMeta {
+        index: ContainerIndex { entries, snapshots },
+        version,
+        payload_offset,
+        payload_len,
+    })
+}
+
+/// Human-readable artifact summary — the exact lines `sz3 info` prints.
+/// Living in the library (not `main.rs`) lets a test lock the v1/v2
+/// output byte-for-byte across format bumps.
+pub fn describe(meta: &IndexMeta) -> String {
+    use std::fmt::Write as _;
+    let index = &meta.index;
+    let mut out = String::new();
+    if meta.version >= VERSION_V3 {
+        let _ = writeln!(
+            out,
+            "container v{}: {} chunks, {} fields, {} snapshots, payload {} \
+             bytes, per-chunk crc32",
+            meta.version,
+            index.entries.len(),
+            index.field_names().len(),
+            index.snapshot_count(),
+            meta.payload_len,
+        );
+        for (id, ((total, delta), tag)) in
+            index.per_snapshot().iter().zip(&index.snapshots).enumerate()
+        {
+            let label =
+                if tag.is_empty() { String::new() } else { format!(" '{tag}'") };
+            let _ = writeln!(
+                out,
+                "  snapshot {id}{label}: {total} chunks, {delta} delta"
+            );
+        }
+    } else {
+        let _ = writeln!(
+            out,
+            "container v{}: {} chunks, {} fields, payload {} bytes{}",
+            meta.version,
+            index.entries.len(),
+            index.field_names().len(),
+            meta.payload_len,
+            if meta.version >= VERSION_V2 { ", per-chunk crc32" } else { ", no checksums" }
+        );
+    }
+    for (p, n) in index.per_pipeline() {
+        let _ = writeln!(out, "  pipeline {p}: {n} chunks");
+    }
+    for e in &index.entries {
+        let prefix = if meta.version >= VERSION_V3 {
+            format!("s{} ", e.snapshot)
+        } else {
+            String::new()
+        };
+        let _ = writeln!(
+            out,
+            "  {prefix}{}[{}/{}] rows {}..{} dims {:?} via {} ({} bytes){}",
+            e.field,
+            e.chunk_index + 1,
+            e.chunk_count,
+            e.rows.0,
+            e.rows.1,
+            e.field_dims,
+            e.pipeline,
+            e.len,
+            if e.delta { ", delta" } else { "" }
+        );
+    }
+    out
 }
 
 /// Parse and validate the chunk index of a fully-resident artifact;
-/// returns the index and the payload slice. Reads both v1 and v2.
+/// returns the index and the payload slice. Reads v1 through v3.
 pub fn read_index(stream: &[u8]) -> Result<(ContainerIndex, &[u8])> {
     let meta = read_index_meta(stream)?;
     let avail = stream.len() - meta.payload_offset;
@@ -348,6 +603,12 @@ pub fn decompress_container(stream: &[u8], workers: usize) -> Result<Vec<Field>>
 pub fn decompress_single_field(stream: &[u8], workers: usize) -> Result<Field> {
     let reader =
         crate::reader::ContainerReader::from_slice(stream)?.with_workers(workers);
+    let snaps = reader.snapshot_count();
+    if snaps != 1 {
+        return Err(SzError::config(format!(
+            "container holds {snaps} snapshots; use container::decompress_container"
+        )));
+    }
     let n = reader.field_names().len();
     if n != 1 {
         return Err(SzError::config(format!(
@@ -427,7 +688,8 @@ mod tests {
         let chunks = sample_chunks(1);
         let packed = pack(&chunks).unwrap();
         let meta = read_index_meta(&packed).unwrap();
-        assert_eq!(meta.version, VERSION_V2);
+        assert_eq!(meta.version, VERSION_V3);
+        assert_eq!(meta.index.snapshots, vec![String::new()]);
         // the payload is NOT needed: a prefix ending right at payload_offset
         // parses identically
         let prefix = &packed[..meta.payload_offset];
@@ -474,8 +736,11 @@ mod tests {
                     offset: 0,
                     len: 0,
                     crc32: None,
+                    snapshot: 0,
+                    delta: false,
                 })
                 .collect(),
+            snapshots: vec![String::new()],
         };
         let mix = index.per_pipeline();
         assert_eq!(
@@ -519,6 +784,99 @@ mod tests {
         chunks.push(dropped);
         let err = pack(&chunks).unwrap_err();
         assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn v3_series_index_roundtrips_snapshot_table() {
+        // two snapshots of the same field: snapshot 1 flagged delta
+        let base = sample_chunks(1);
+        let mut chunks = base.clone();
+        for c in base {
+            chunks.push(CompressedChunk { snapshot: 1, delta: true, ..c });
+        }
+        let tags = vec!["t0".to_string(), "t1".to_string()];
+        let packed = pack_series(&chunks, &tags).unwrap();
+        let meta = read_index_meta(&packed).unwrap();
+        assert_eq!(meta.version, VERSION_V3);
+        assert_eq!(meta.index.snapshots, tags);
+        assert_eq!(meta.index.snapshot_count(), 2);
+        let per = meta.index.per_snapshot();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0], (4, 0), "snapshot 0: 4 direct chunks");
+        assert_eq!(per[1], (4, 4), "snapshot 1: 4 delta chunks");
+        for e in &meta.index.entries {
+            assert_eq!(e.delta, e.snapshot == 1);
+        }
+    }
+
+    #[test]
+    fn pack_rejects_unencodable_snapshot_layouts() {
+        let base = sample_chunks(1);
+        // legacy versions cannot encode the snapshot axis
+        let mut series = base.clone();
+        series.push(CompressedChunk { snapshot: 1, ..base[0].clone() });
+        assert!(pack_v1(&base).is_ok());
+        assert!(pack_v2(&base).is_ok());
+        let err = pack_with(&series, VERSION_V2, &[String::new()]).unwrap_err();
+        assert!(err.to_string().contains("cannot encode"), "{err}");
+        // snapshot id outside the tag table
+        let err = pack_series(&series, &["only".to_string()]).unwrap_err();
+        assert!(err.to_string().contains("snapshot table"), "{err}");
+        // delta on snapshot 0
+        let mut bad = base.clone();
+        bad[0].delta = true;
+        let err = pack(&bad).unwrap_err();
+        assert!(err.to_string().contains("no baseline"), "{err}");
+        // delta with a baseline whose rows disagree
+        let mut chunks = base.clone();
+        for c in &base {
+            let mut d = c.clone();
+            d.snapshot = 1;
+            d.delta = true;
+            chunks.push(d);
+        }
+        chunks.last_mut().unwrap().rows = (0, 1);
+        let err =
+            pack_series(&chunks, &[String::new(), String::new()]).unwrap_err();
+        assert!(err.to_string().contains("matching baseline"), "{err}");
+    }
+
+    #[test]
+    fn describe_output_is_byte_stable_for_legacy_versions() {
+        // regression lock: the v3 format bump must not change what
+        // `sz3 info` prints for v1/v2 artifacts
+        let chunks: Vec<CompressedChunk> = sample_chunks(1)
+            .into_iter()
+            .map(|c| CompressedChunk { stream: vec![0u8; 10], ..c })
+            .collect();
+        let v1 = describe(&read_index_meta(&pack_v1(&chunks).unwrap()).unwrap());
+        assert!(
+            v1.starts_with(
+                "container v1: 4 chunks, 1 fields, payload 40 bytes, no checksums\n"
+            ),
+            "{v1}"
+        );
+        let v2 = describe(&read_index_meta(&pack_v2(&chunks).unwrap()).unwrap());
+        assert!(
+            v2.starts_with(
+                "container v2: 4 chunks, 1 fields, payload 40 bytes, per-chunk crc32\n"
+            ),
+            "{v2}"
+        );
+        for out in [&v1, &v2] {
+            assert!(out.contains("  pipeline sz3-lr: 4 chunks\n"), "{out}");
+            assert!(
+                out.contains("  f0[1/4] rows 0..3 dims [10, 12, 12] via sz3-lr (10 bytes)\n"),
+                "{out}"
+            );
+            assert!(!out.contains("snapshot"), "legacy info must not mention snapshots");
+            assert!(!out.contains("delta"), "{out}");
+        }
+        // v3 output is snapshot-aware
+        let v3 = describe(&read_index_meta(&pack(&chunks).unwrap()).unwrap());
+        assert!(v3.contains("1 snapshots"), "{v3}");
+        assert!(v3.contains("  snapshot 0: 4 chunks, 0 delta\n"), "{v3}");
+        assert!(v3.contains("  s0 f0[1/4]"), "{v3}");
     }
 
     #[test]

@@ -25,6 +25,10 @@
 //!   self-describing `SZ3C` artifact; [`crate::container`] fans it back
 //!   out for parallel decompression with shape verification.
 
+pub mod series;
+
+pub use series::{SeriesReport, Snapshot};
+
 use crate::container::{self, AdaptiveChunkSelector};
 use crate::data::{Field, FieldValues};
 use crate::error::{Result, SzError};
@@ -57,6 +61,13 @@ pub struct CompressedChunk {
     pub stream: Vec<u8>,
     /// Uncompressed bytes of this chunk.
     pub raw_bytes: usize,
+    /// Snapshot this chunk belongs to (0 outside series packing; see
+    /// [`Coordinator::run_series_to_container`]).
+    pub snapshot: usize,
+    /// True if `stream` compresses residuals against the decoded
+    /// `(snapshot − 1, field, chunk_index)` baseline instead of the data
+    /// itself.
+    pub delta: bool,
 }
 
 /// Aggregated run metrics.
@@ -286,6 +297,8 @@ impl Coordinator {
                             pipeline: used,
                             stream,
                             raw_bytes: raw,
+                            snapshot: 0,
+                            delta: false,
                         })
                     });
                     counts[wid].fetch_add(1, Ordering::Relaxed);

@@ -1,0 +1,459 @@
+//! Multi-snapshot series packing: N timesteps of the same fields into one
+//! v3 `SZ3C` artifact, with an optional per-chunk **snapshot delta mode**.
+//!
+//! Scientific producers emit the same fields across many timesteps, and
+//! consecutive snapshots are usually highly correlated — the residual
+//! between timestep *k* and the *decoded* timestep *k−1* spans a far
+//! smaller value range than the data itself, so compressing the residual
+//! under the same error bound costs fewer bits (cf. the temporal
+//! dimension exploited by arXiv:1706.03791). Divergent regions are the
+//! exception: where the field changed shape between steps, the residual
+//! is *noisier* than the data and delta would pay for a bad baseline.
+//!
+//! [`Coordinator::run_series_to_container`] therefore decides **per
+//! chunk**: every snapshot is compressed directly through the normal
+//! worker pool (adaptive selection included), snapshots after the first
+//! are *also* compressed as residual fields, and each chunk keeps
+//! whichever stream is smaller — so delta mode can only shrink the
+//! payload, never grow it. The chosen representation is recorded in the
+//! v3 chunk index (`delta` flag) and resolved transparently by
+//! [`crate::reader::ContainerReader::read_region_at`].
+//!
+//! Residuals are always taken against the **decoded** previous snapshot
+//! (the exact bytes a reader reconstructs, delta chunks included), so the
+//! error bound never accumulates across the chain: reconstruction error
+//! at snapshot *k* is the residual compressor's own error, not a sum over
+//! *k* steps.
+
+use super::{slice_rows, CompressedChunk, Coordinator, RunReport};
+use crate::container::{self, delta};
+use crate::data::{Field, FieldValues};
+use crate::error::{Result, SzError};
+use crate::pipeline::{CompressConf, ErrorBound};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// One timestep of a series: a tag (timestamp, step id, …) and the
+/// snapshot's fields. Every snapshot of a series must carry the same
+/// field names, dims, and dtypes.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Timestamp tag recorded in the v3 snapshot table (may be empty).
+    pub tag: String,
+    /// The snapshot's fields.
+    pub fields: Vec<Field>,
+}
+
+impl Snapshot {
+    /// Snapshot from a tag and fields.
+    pub fn new(tag: impl Into<String>, fields: Vec<Field>) -> Self {
+        Snapshot { tag: tag.into(), fields }
+    }
+}
+
+/// Aggregated metrics of a series packing run.
+#[derive(Clone, Debug, Default)]
+pub struct SeriesReport {
+    /// Per-snapshot coordinator reports (the direct compression pass).
+    pub snapshots: Vec<RunReport>,
+    /// Chunks stored direct.
+    pub direct_chunks: usize,
+    /// Chunks stored as snapshot residuals.
+    pub delta_chunks: usize,
+    /// Payload bytes had every chunk been stored direct.
+    pub direct_bytes: u64,
+    /// Payload bytes actually stored (≤ `direct_bytes` by construction).
+    pub stored_bytes: u64,
+}
+
+impl SeriesReport {
+    /// Fraction of the direct payload saved by delta mode (0 when delta
+    /// never won or was disabled).
+    pub fn delta_savings(&self) -> f64 {
+        if self.direct_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.stored_bytes as f64 / self.direct_bytes as f64
+    }
+}
+
+impl std::fmt::Display for SeriesReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} snapshots, {} chunks ({} delta): {:.2} MB stored vs {:.2} MB \
+             direct ({:.1}% saved)",
+            self.snapshots.len(),
+            self.direct_chunks + self.delta_chunks,
+            self.delta_chunks,
+            self.stored_bytes as f64 / 1e6,
+            self.direct_bytes as f64 / 1e6,
+            100.0 * self.delta_savings()
+        )
+    }
+}
+
+/// `(name, dims, dtype)` signature a series holds constant across steps.
+fn signature(fields: &[Field]) -> Vec<(String, Vec<usize>, &'static str)> {
+    fields
+        .iter()
+        .map(|f| (f.name.clone(), f.shape.dims().to_vec(), f.values.dtype()))
+        .collect()
+}
+
+/// Decode one snapshot's *chosen* chunks back into full fields — the
+/// baseline the next snapshot's residuals are taken against. Uses the
+/// same [`delta::apply`] the reader uses, so packer and reader baselines
+/// agree bit for bit.
+fn decode_snapshot(
+    chunks: &[CompressedChunk],
+    prev: &HashMap<String, Field>,
+    workers: usize,
+) -> Result<HashMap<String, Field>> {
+    let slots: Mutex<Vec<Option<Result<Field>>>> =
+        Mutex::new((0..chunks.len()).map(|_| None).collect());
+    crate::util::par_for_each(chunks.len(), workers, |i| {
+        let c = &chunks[i];
+        let r = (|| {
+            let raw = crate::pipeline::decompress_any(&c.stream)?;
+            if !c.delta {
+                return Ok(raw);
+            }
+            let base_full = prev.get(&c.field).ok_or_else(|| {
+                SzError::config(format!("delta chunk of '{}' has no baseline", c.field))
+            })?;
+            delta::apply(&slice_rows(base_full, c.rows)?, &raw)
+        })();
+        slots.lock().unwrap()[i] = Some(r);
+    });
+    let decoded: Vec<Field> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|s| s.expect("every slot filled by the pool"))
+        .collect::<Result<_>>()?;
+    let mut out = HashMap::new();
+    let mut order: Vec<&str> = Vec::new();
+    for c in chunks {
+        if !order.contains(&c.field.as_str()) {
+            order.push(&c.field);
+        }
+    }
+    for name in order {
+        let mut parts: Vec<(usize, &Field)> = chunks
+            .iter()
+            .zip(&decoded)
+            .filter(|(c, _)| c.field == name)
+            .map(|(c, d)| (c.chunk_index, d))
+            .collect();
+        parts.sort_by_key(|(i, _)| *i);
+        let dims = chunks
+            .iter()
+            .find(|c| c.field == name)
+            .expect("name from this chunk set")
+            .field_dims
+            .clone();
+        let values = FieldValues::concat(parts.iter().map(|(_, d)| &d.values))?;
+        out.insert(name.to_string(), Field::new(name, &dims, values)?);
+    }
+    Ok(out)
+}
+
+impl Coordinator {
+    /// A coordinator sharing this one's pipeline/pool configuration but
+    /// compressing under `conf` — how the series packer pins a resolved
+    /// absolute bound for a delta snapshot's two passes.
+    fn with_conf(&self, conf: CompressConf) -> Coordinator {
+        Coordinator {
+            pipeline: self.pipeline.clone(),
+            conf,
+            workers: self.workers,
+            chunk_elems: self.chunk_elems,
+            queue_depth: self.queue_depth,
+            make_compressor: Arc::clone(&self.make_compressor),
+            selector: self.selector.clone(),
+        }
+    }
+
+    /// Stream a whole time series through the worker pool and pack it
+    /// into one v3 `SZ3C` artifact with a snapshot table. With `delta`
+    /// enabled, every snapshot after the first is additionally compressed
+    /// as residuals against the decoded previous snapshot, and each chunk
+    /// keeps whichever stream is smaller (recorded per chunk in the
+    /// index) — see the module docs for the error-bound argument.
+    ///
+    /// Bound semantics under delta: a relative (`Rel`) bound is resolved
+    /// to an **absolute** bound against each snapshot's *original* fields
+    /// (the tightest across the snapshot's fields) before either pass
+    /// runs — resolving it against a residual field would scale the
+    /// tolerance by the residual's range, not the data's, and silently
+    /// loosen the promise. Pointwise-relative (`PwRel`) bounds are
+    /// incompatible with additive residuals and are rejected.
+    pub fn run_series_to_container(
+        &self,
+        series: Vec<Snapshot>,
+        delta: bool,
+    ) -> Result<(Vec<u8>, SeriesReport)> {
+        if series.is_empty() {
+            return Err(SzError::config("series needs ≥ 1 snapshot"));
+        }
+        if delta && matches!(self.conf.bound, ErrorBound::PwRel(_)) {
+            return Err(SzError::config(
+                "snapshot delta mode cannot honor a pointwise-relative bound \
+                 (residuals are additive); use --abs/--rel or --no-delta",
+            ));
+        }
+        let sig = signature(&series[0].fields);
+        let n_snaps = series.len();
+        let mut all: Vec<CompressedChunk> = Vec::new();
+        let mut tags: Vec<String> = Vec::new();
+        let mut prev: HashMap<String, Field> = HashMap::new();
+        let mut report = SeriesReport::default();
+        for (s, snap) in series.into_iter().enumerate() {
+            if signature(&snap.fields) != sig {
+                return Err(SzError::config(format!(
+                    "snapshot {s} ('{}') does not match the series field \
+                     signature (same names, dims, dtypes, in order)",
+                    snap.tag
+                )));
+            }
+            // in delta mode a Rel bound is pinned to an absolute one
+            // resolved against the snapshot's original fields, so the
+            // residual pass cannot re-resolve it against residual ranges
+            let pinned: Option<Coordinator> = match (delta, self.conf.bound) {
+                (true, ErrorBound::Rel(_)) => {
+                    let mut abs = f64::INFINITY;
+                    for f in &snap.fields {
+                        abs = abs.min(self.conf.bound.to_abs(f)?);
+                    }
+                    let mut conf = self.conf.clone();
+                    conf.bound = ErrorBound::Abs(abs);
+                    Some(self.with_conf(conf))
+                }
+                _ => None,
+            };
+            let coord: &Coordinator = pinned.as_ref().unwrap_or(self);
+            // residual inputs are built before `run` consumes the originals
+            let resid_input: Option<Vec<Field>> = if delta && s > 0 {
+                Some(
+                    snap.fields
+                        .iter()
+                        .map(|f| delta::residual(f, &prev[&f.name]))
+                        .collect::<Result<_>>()?,
+                )
+            } else {
+                None
+            };
+            let mut direct: Vec<CompressedChunk> = Vec::new();
+            let run_report = coord.run(snap.fields, |c| direct.push(c))?;
+            report.snapshots.push(run_report);
+            let chosen: Vec<CompressedChunk> = match resid_input {
+                Some(ri) => {
+                    let mut resid: Vec<CompressedChunk> = Vec::new();
+                    coord.run(ri, |c| resid.push(c))?;
+                    if resid.len() != direct.len() {
+                        return Err(SzError::Runtime(
+                            "residual pass produced a different chunking than \
+                             the direct pass"
+                                .into(),
+                        ));
+                    }
+                    direct
+                        .into_iter()
+                        .zip(resid)
+                        .map(|(d, r)| {
+                            if r.field != d.field
+                                || r.chunk_index != d.chunk_index
+                                || r.rows != d.rows
+                            {
+                                return Err(SzError::Runtime(
+                                    "residual chunking diverged from direct".into(),
+                                ));
+                            }
+                            report.direct_bytes += d.stream.len() as u64;
+                            let c = if r.stream.len() < d.stream.len() {
+                                report.delta_chunks += 1;
+                                CompressedChunk { snapshot: s, delta: true, ..r }
+                            } else {
+                                report.direct_chunks += 1;
+                                CompressedChunk { snapshot: s, ..d }
+                            };
+                            report.stored_bytes += c.stream.len() as u64;
+                            Ok(c)
+                        })
+                        .collect::<Result<_>>()?
+                }
+                None => direct
+                    .into_iter()
+                    .map(|c| {
+                        report.direct_bytes += c.stream.len() as u64;
+                        report.stored_bytes += c.stream.len() as u64;
+                        report.direct_chunks += 1;
+                        CompressedChunk { snapshot: s, ..c }
+                    })
+                    .collect(),
+            };
+            if delta && s + 1 < n_snaps {
+                // the next snapshot deltas against what a reader would
+                // reconstruct, never against the lossy-compressed original
+                // (skipped for the last snapshot — nothing deltas against it)
+                prev = decode_snapshot(&chosen, &prev, self.workers)?;
+            }
+            all.extend(chosen);
+            tags.push(snap.tag);
+        }
+        let artifact = container::pack_series(&all, &tags)?;
+        Ok((artifact, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::JobConfig;
+
+    const EB: f64 = 1e-3;
+
+    fn coordinator() -> Coordinator {
+        let cfg = JobConfig {
+            pipeline: "sz3-lr".into(),
+            bound: ErrorBound::Abs(EB),
+            workers: 2,
+            chunk_elems: 4 * 144, // 4 rows of 12x12 per chunk
+            queue_depth: 2,
+            ..Default::default()
+        };
+        Coordinator::from_config(&cfg).unwrap()
+    }
+
+    /// A smoothly-evolving series: base field plus a slow per-step drift.
+    fn smooth_series(steps: usize) -> Vec<Snapshot> {
+        crate::container::fixtures::smooth_series(404, &[16, 12, 12], steps, 0.01, "rho")
+    }
+
+    #[test]
+    fn delta_mode_never_beats_direct_on_bytes_and_stays_bounded() {
+        let coord = coordinator();
+        let series = smooth_series(4);
+        let originals: Vec<Field> =
+            series.iter().map(|s| s.fields[0].clone()).collect();
+        let (with_delta, rep) =
+            coord.run_series_to_container(series.clone(), true).unwrap();
+        let (without, _) = coord.run_series_to_container(series, false).unwrap();
+        assert!(rep.delta_chunks > 0, "smooth drift must pick delta: {rep}");
+        assert!(rep.stored_bytes <= rep.direct_bytes);
+        assert!(
+            with_delta.len() < without.len(),
+            "delta {} bytes must beat direct {} bytes",
+            with_delta.len(),
+            without.len()
+        );
+        // every snapshot reconstructs within the bound (delta chains do
+        // not accumulate error); the 1% slack absorbs the one extra f32
+        // rounding a baseline+residual reconstruction performs (~½ulp of
+        // the value, orders below eb) — real accumulation would be ~2× eb
+        let reader = crate::reader::ContainerReader::from_slice(&with_delta)
+            .unwrap()
+            .with_workers(2);
+        assert_eq!(reader.snapshot_count(), 4);
+        for (t, orig) in originals.iter().enumerate() {
+            let out = reader.read_field_at(t, "rho").unwrap();
+            for (o, d) in
+                orig.values.to_f64_vec().iter().zip(out.values.to_f64_vec())
+            {
+                assert!((o - d).abs() <= EB * 1.01, "snapshot {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_mode_pins_relative_bounds_and_rejects_pwrel() {
+        // a Rel bound must resolve against the ORIGINAL data, not the
+        // residual's (much smaller) range — otherwise delta chunks would
+        // quietly get a looser tolerance than the user asked for
+        let rel = 1e-3;
+        let cfg = JobConfig {
+            pipeline: "sz3-lr".into(),
+            bound: ErrorBound::Rel(rel),
+            workers: 2,
+            chunk_elems: 4 * 144,
+            queue_depth: 2,
+            ..Default::default()
+        };
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let series = smooth_series(3);
+        let originals: Vec<Field> =
+            series.iter().map(|s| s.fields[0].clone()).collect();
+        let (artifact, _) = coord.run_series_to_container(series, true).unwrap();
+        let reader =
+            crate::reader::ContainerReader::from_slice(&artifact).unwrap();
+        for (t, orig) in originals.iter().enumerate() {
+            let (lo, hi) = orig.value_range();
+            let abs = rel * (hi - lo);
+            let out = reader.read_field_at(t, "rho").unwrap();
+            for (o, d) in
+                orig.values.to_f64_vec().iter().zip(out.values.to_f64_vec())
+            {
+                assert!(
+                    (o - d).abs() <= abs * 1.01,
+                    "snapshot {t}: rel bound must hold against the original range"
+                );
+            }
+        }
+        // pointwise-relative bounds are incompatible with additive
+        // residuals and must be rejected up front in delta mode
+        let cfg = JobConfig { bound: ErrorBound::PwRel(1e-2), ..cfg };
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let err = coord
+            .run_series_to_container(smooth_series(2), true)
+            .unwrap_err();
+        assert!(err.to_string().contains("pointwise"), "{err}");
+    }
+
+    #[test]
+    fn direct_series_snapshots_match_standalone_compression_bitwise() {
+        // without delta, every snapshot's chunks are exactly what
+        // run_to_container would produce for that snapshot alone
+        let coord = coordinator();
+        let series = smooth_series(3);
+        let originals: Vec<Field> =
+            series.iter().map(|s| s.fields[0].clone()).collect();
+        let (artifact, rep) = coord.run_series_to_container(series, false).unwrap();
+        assert_eq!(rep.delta_chunks, 0);
+        let reader =
+            crate::reader::ContainerReader::from_slice(&artifact).unwrap();
+        for (t, orig) in originals.iter().enumerate() {
+            let (standalone, _) =
+                coord.run_to_container(vec![orig.clone()]).unwrap();
+            let lone = crate::container::decompress_container(&standalone, 2)
+                .unwrap()
+                .remove(0);
+            let from_series = reader.read_field_at(t, "rho").unwrap();
+            assert_eq!(
+                from_series.values, lone.values,
+                "snapshot {t} must be bit-identical to standalone"
+            );
+        }
+    }
+
+    #[test]
+    fn mismatched_snapshots_and_empty_series_rejected() {
+        let coord = coordinator();
+        assert!(coord.run_series_to_container(vec![], true).is_err());
+        let mut series = smooth_series(2);
+        series[1].fields[0].name = "other".into();
+        let err = coord.run_series_to_container(series, true).unwrap_err();
+        assert!(err.to_string().contains("signature"), "{err}");
+    }
+
+    #[test]
+    fn single_snapshot_series_is_a_plain_v3_container() {
+        let coord = coordinator();
+        let series = smooth_series(1);
+        let orig = series[0].fields[0].clone();
+        let (artifact, rep) = coord.run_series_to_container(series, true).unwrap();
+        assert_eq!(rep.delta_chunks, 0, "nothing to delta against");
+        let out = crate::pipeline::decompress_any(&artifact).unwrap();
+        assert_eq!(out.shape.dims(), orig.shape.dims());
+    }
+}

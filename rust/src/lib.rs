@@ -20,9 +20,12 @@
 //! On top of the compression framework sits the **serving stack**: the
 //! [`container`] module packs coordinator output into self-describing
 //! chunked `SZ3C` artifacts (per-chunk CRC-32, per-chunk pipeline
-//! selection); [`reader`] opens them for indexed-seek region reads with
-//! a byte-budgeted decoded-chunk cache; and [`server`] publishes a
-//! directory of artifacts over HTTP range queries (`sz3 serve-http`).
+//! selection, and — since v3 — a snapshot axis with per-chunk delta
+//! encoding for whole time series in one artifact); [`reader`] opens
+//! them for indexed-seek region reads at any snapshot with a
+//! byte-budgeted decoded-chunk cache; and [`server`] publishes a
+//! directory of artifacts over HTTP range queries (`sz3 serve-http`,
+//! `?snapshot=K`).
 //! Architecture notes live in `docs/ARCHITECTURE.md`, the container
 //! byte layout in `docs/CONTAINER.md`, and the HTTP API contract in
 //! `docs/SERVE.md`.

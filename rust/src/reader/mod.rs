@@ -18,10 +18,16 @@
 //!   shared, scope-prefixed, across every artifact a server holds open
 //!   ([`ContainerReader::with_shared_cache`] — the `sz3 serve-http`
 //!   deployment shape, one `--cache-mb` knob for the whole process).
-//! * **Integrity on every fetch** — v2 containers carry a CRC-32 per
+//! * **Integrity on every fetch** — v2+ containers carry a CRC-32 per
 //!   chunk, verified before any byte reaches a decoder; the inner `SZ3R`
 //!   header's pipeline name is cross-checked against the index; decoded
 //!   dims are verified against the declared row range.
+//! * **Snapshot axis** — v3 series artifacts expose
+//!   [`ContainerReader::snapshot_count`] / `snapshot_tags`, and
+//!   [`ContainerReader::read_region_at`] reads any timestep; chunks
+//!   stored as snapshot residuals are resolved by walking the delta
+//!   chain back to the nearest cached or direct ancestor (baseline links
+//!   validated once at open), so a warm cache answers in one hop.
 //!
 //! This is the *single* seek/verify/decode path:
 //! [`crate::container::decompress_container`] and
@@ -58,6 +64,7 @@ struct Counters {
     crc_verified: AtomicU64,
     chunks_decoded: AtomicU64,
     cache_hits: AtomicU64,
+    delta_applied: AtomicU64,
 }
 
 /// Snapshot of a reader's counters.
@@ -73,11 +80,15 @@ pub struct ReadStats {
     pub chunks_decoded: u64,
     /// Decodes avoided by the warm-chunk cache.
     pub cache_hits: u64,
+    /// Delta chunks resolved against their snapshot baseline (0 outside
+    /// v3 series artifacts).
+    pub delta_applied: u64,
 }
 
-/// Per-field view assembled from the index at open time: entry ids sorted
-/// by chunk position, with coverage already validated.
+/// Per-`(snapshot, field)` view assembled from the index at open time:
+/// entry ids sorted by chunk position, with coverage already validated.
 struct FieldMeta {
+    snapshot: usize,
     name: String,
     dims: Vec<usize>,
     /// Indices into `index.entries`, sorted by `chunk_index`.
@@ -89,6 +100,9 @@ pub struct ContainerReader<'a> {
     source: Box<dyn ChunkSource + 'a>,
     index: ContainerIndex,
     fields: Vec<FieldMeta>,
+    /// For each entry: the entry id of its delta baseline — `Some` exactly
+    /// when the entry is delta-flagged, resolved and validated at open.
+    baseline_of: Vec<Option<usize>>,
     version: u8,
     payload_offset: u64,
     payload_len: u64,
@@ -120,7 +134,7 @@ impl<'a> ContainerReader<'a> {
         if &head[..4] != container::CONTAINER_MAGIC {
             return Err(SzError::corrupt("bad container magic"));
         }
-        if head[4] != container::VERSION_V1 && head[4] != container::VERSION_V2 {
+        if head[4] < container::VERSION_V1 || head[4] > container::VERSION_V3 {
             return Err(SzError::corrupt(format!(
                 "unsupported container version {}",
                 head[4]
@@ -151,11 +165,12 @@ impl<'a> ContainerReader<'a> {
                  source holds {total}"
             )));
         }
-        let fields = validate_coverage(&meta.index)?;
+        let (fields, baseline_of) = validate_coverage(&meta.index)?;
         Ok(ContainerReader {
             source,
             index: meta.index,
             fields,
+            baseline_of,
             version: meta.version,
             payload_offset: meta.payload_offset as u64,
             payload_len: meta.payload_len,
@@ -213,7 +228,7 @@ impl<'a> ContainerReader<'a> {
         &self.cache
     }
 
-    /// Container format version (1 or 2).
+    /// Container format version (1, 2 or 3).
     pub fn version(&self) -> u8 {
         self.version
     }
@@ -234,19 +249,45 @@ impl<'a> ContainerReader<'a> {
         self.source.kind()
     }
 
-    /// Field names in order of first appearance in the index.
+    /// Number of snapshots the artifact holds (1 for v1/v2 containers).
+    pub fn snapshot_count(&self) -> usize {
+        self.index.snapshot_count()
+    }
+
+    /// Per-snapshot timestamp tags, indexed by snapshot id (a single
+    /// empty tag for v1/v2 containers).
+    pub fn snapshot_tags(&self) -> &[String] {
+        &self.index.snapshots
+    }
+
+    /// Field names of snapshot `snapshot`, in order of first appearance.
+    pub fn field_names_at(&self, snapshot: usize) -> Vec<&str> {
+        self.fields
+            .iter()
+            .filter(|f| f.snapshot == snapshot)
+            .map(|f| f.name.as_str())
+            .collect()
+    }
+
+    /// Field names of the first snapshot, in order of first appearance —
+    /// the whole index for v1/v2 containers.
     pub fn field_names(&self) -> Vec<&str> {
-        self.fields.iter().map(|f| f.name.as_str()).collect()
+        self.field_names_at(0)
     }
 
-    /// Full dims of `field`.
+    /// Full dims of `field` (first snapshot).
     pub fn field_dims(&self, field: &str) -> Result<&[usize]> {
-        Ok(&self.field_meta(field)?.dims)
+        Ok(&self.field_meta(0, field)?.dims)
     }
 
-    /// Number of chunks `field` is sharded into.
+    /// Full dims of `field` at snapshot `snapshot`.
+    pub fn field_dims_at(&self, snapshot: usize, field: &str) -> Result<&[usize]> {
+        Ok(&self.field_meta(snapshot, field)?.dims)
+    }
+
+    /// Number of chunks `field` is sharded into (first snapshot).
     pub fn field_chunks(&self, field: &str) -> Result<usize> {
-        Ok(self.field_meta(field)?.entry_ids.len())
+        Ok(self.field_meta(0, field)?.entry_ids.len())
     }
 
     /// Snapshot of the decode/fetch counters.
@@ -257,16 +298,26 @@ impl<'a> ContainerReader<'a> {
             crc_verified: self.counters.crc_verified.load(Ordering::Relaxed),
             chunks_decoded: self.counters.chunks_decoded.load(Ordering::Relaxed),
             cache_hits: self.counters.cache_hits.load(Ordering::Relaxed),
+            delta_applied: self.counters.delta_applied.load(Ordering::Relaxed),
         }
     }
 
-    fn field_meta(&self, field: &str) -> Result<&FieldMeta> {
-        self.fields.iter().find(|f| f.name == field).ok_or_else(|| {
-            SzError::config(format!(
-                "container has no field '{field}' (holds {:?})",
-                self.field_names()
-            ))
-        })
+    fn field_meta(&self, snapshot: usize, field: &str) -> Result<&FieldMeta> {
+        if snapshot >= self.snapshot_count() {
+            return Err(SzError::config(format!(
+                "snapshot {snapshot} out of range ({} snapshots)",
+                self.snapshot_count()
+            )));
+        }
+        self.fields
+            .iter()
+            .find(|f| f.snapshot == snapshot && f.name == field)
+            .ok_or_else(|| {
+                SzError::config(format!(
+                    "snapshot {snapshot} has no field '{field}' (holds {:?})",
+                    self.field_names_at(snapshot)
+                ))
+            })
     }
 
     /// Fetch one chunk's payload bytes, CRC-verified when the index
@@ -294,20 +345,24 @@ impl<'a> ContainerReader<'a> {
         Ok(buf)
     }
 
-    /// Decode one index entry: cache lookup, else fetch → verify →
-    /// dispatch on the index pipeline (cross-checked against the inner
-    /// stream header) → decode → dims check → cache insert.
-    fn decode_entry(&self, id: usize) -> Result<Arc<Field>> {
+    /// Cache key of entry `id` — `None` when caching is off. The key
+    /// embeds the snapshot id (unit-separated from the field name) so a
+    /// series' identically-named fields occupy distinct entries.
+    fn cache_key(&self, id: usize) -> Option<ChunkKey> {
         let e = &self.index.entries[id];
         // only pay the key's String build when a cache is actually on
-        let key: Option<ChunkKey> = (self.cache.budget() > 0)
-            .then(|| (format!("{}{}", self.cache_scope, e.field), e.chunk_index));
-        if let Some(k) = &key {
-            if let Some(hit) = self.cache.get(k) {
-                self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
-                return Ok(hit);
-            }
-        }
+        (self.cache.budget() > 0).then(|| {
+            (
+                format!("{}{}\u{1e}{}", self.cache_scope, e.snapshot, e.field),
+                e.chunk_index,
+            )
+        })
+    }
+
+    /// Fetch → verify → dispatch on the index pipeline (cross-checked
+    /// against the inner stream header) → decode → dims check. For a
+    /// delta entry this yields the *residual* field, not the snapshot.
+    fn decode_stream(&self, e: &ChunkEntry) -> Result<Field> {
         let stream = self.fetch_verified(e)?;
         let compressor = pipeline::by_name(&e.pipeline).ok_or_else(|| {
             SzError::corrupt(format!("unknown pipeline '{}' in chunk index", e.pipeline))
@@ -332,11 +387,52 @@ impl<'a> ContainerReader<'a> {
             )));
         }
         self.counters.chunks_decoded.fetch_add(1, Ordering::Relaxed);
-        let field = Arc::new(field);
-        if let Some(k) = key {
-            self.cache.insert(k, Arc::clone(&field));
-        }
         Ok(field)
+    }
+
+    /// Reconstruct entry `baseline + residual` and count the resolution.
+    fn apply_delta(&self, baseline: &Field, residual: &Field) -> Result<Field> {
+        self.counters.delta_applied.fetch_add(1, Ordering::Relaxed);
+        container::delta::apply(baseline, residual)
+    }
+
+    /// Decode one index entry into its reconstructed snapshot data:
+    /// cache lookup, else walk the delta chain back to the nearest cached
+    /// or direct ancestor, then roll forward applying residuals, caching
+    /// every level on the way (so a warm cache resolves chains in one
+    /// hop). Iterative on purpose — chain depth equals the snapshot
+    /// count, which must not become a stack depth.
+    fn decode_entry(&self, id: usize) -> Result<Arc<Field>> {
+        let mut chain: Vec<usize> = Vec::new();
+        let mut base: Option<Arc<Field>> = None;
+        let mut cur = Some(id);
+        while let Some(c) = cur {
+            if let Some(k) = self.cache_key(c) {
+                if let Some(hit) = self.cache.get(&k) {
+                    self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    base = Some(hit);
+                    break;
+                }
+            }
+            chain.push(c);
+            // None exactly when entry `c` is direct — the chain ends
+            cur = self.baseline_of[c];
+        }
+        for &c in chain.iter().rev() {
+            let e = &self.index.entries[c];
+            let decoded = self.decode_stream(e)?;
+            let field = if e.delta {
+                let b = base.as_ref().expect("baseline validated at open");
+                Arc::new(self.apply_delta(b, &decoded)?)
+            } else {
+                Arc::new(decoded)
+            };
+            if let Some(k) = self.cache_key(c) {
+                self.cache.insert(k, Arc::clone(&field));
+            }
+            base = Some(field);
+        }
+        Ok(base.expect("chain is non-empty or the cache hit"))
     }
 
     /// Fetch the compressed payload bytes of index entry `entry_id`
@@ -375,12 +471,26 @@ impl<'a> ContainerReader<'a> {
             .collect()
     }
 
-    /// Extract rows `[rows.start, rows.end)` of `field`, decoding only the
-    /// chunks that overlap the request. The result is exactly the
-    /// requested sub-field (dims `[rows.len(), ...rest]`), bit-identical
-    /// to slicing a full decompression.
+    /// Extract rows `[rows.start, rows.end)` of `field` at snapshot 0 —
+    /// see [`Self::read_region_at`]. For v1/v2 containers this is the
+    /// whole artifact; for a series it reads the first snapshot.
     pub fn read_region(&self, field: &str, rows: Range<usize>) -> Result<Field> {
-        let fm = self.field_meta(field)?;
+        self.read_region_at(0, field, rows)
+    }
+
+    /// Extract rows `[rows.start, rows.end)` of `field` at snapshot
+    /// `snapshot`, decoding only the chunks that overlap the request
+    /// (resolving delta chains through the decoded-chunk cache). The
+    /// result is exactly the requested sub-field (dims
+    /// `[rows.len(), ...rest]`), bit-identical to slicing a full
+    /// decompression of that snapshot.
+    pub fn read_region_at(
+        &self,
+        snapshot: usize,
+        field: &str,
+        rows: Range<usize>,
+    ) -> Result<Field> {
+        let fm = self.field_meta(snapshot, field)?;
         let total_rows = fm.dims[0];
         if rows.start >= rows.end {
             return Err(SzError::config(format!(
@@ -430,23 +540,87 @@ impl<'a> ContainerReader<'a> {
         Field::new(fm.name.clone(), &dims, values)
     }
 
-    /// Read one full field (all its chunks, in parallel).
+    /// Read one full field at snapshot 0 (all its chunks, in parallel).
     pub fn read_field(&self, field: &str) -> Result<Field> {
-        let total_rows = self.field_meta(field)?.dims[0];
-        self.read_region(field, 0..total_rows)
+        self.read_field_at(0, field)
     }
 
-    /// Read every field: one parallel fan-out over all chunks, then
-    /// per-field reassembly in order of first appearance. The batch path
-    /// behind [`crate::container::decompress_container`].
+    /// Read one full field at snapshot `snapshot`.
+    pub fn read_field_at(&self, snapshot: usize, field: &str) -> Result<Field> {
+        let total_rows = self.field_meta(snapshot, field)?.dims[0];
+        self.read_region_at(snapshot, field, 0..total_rows)
+    }
+
+    /// Read every field of every snapshot: chunks are grouped into delta
+    /// chains (same field + chunk position across snapshots) and the
+    /// chains fan out across the worker pool, so each compressed stream
+    /// is decoded exactly once even when no cache is attached. Fields
+    /// come back snapshot-major, in order of first appearance — the batch
+    /// path behind [`crate::container::decompress_container`].
     pub fn read_all(&self) -> Result<Vec<Field>> {
-        let all_ids: Vec<usize> = (0..self.index.entries.len()).collect();
-        let decoded = self.decode_many(&all_ids)?;
+        let n = self.index.entries.len();
+        // chain = entry ids sharing (field, chunk_index), snapshot order;
+        // within a chain each entry's baseline is an earlier element
+        let mut chains: Vec<Vec<usize>> = Vec::new();
+        {
+            let mut chain_of: std::collections::HashMap<(&str, usize), usize> =
+                std::collections::HashMap::new();
+            let mut ordered: Vec<&FieldMeta> = self.fields.iter().collect();
+            ordered.sort_by_key(|f| f.snapshot);
+            for fm in ordered {
+                for &id in &fm.entry_ids {
+                    let e = &self.index.entries[id];
+                    match chain_of.entry((e.field.as_str(), e.chunk_index)) {
+                        std::collections::hash_map::Entry::Occupied(o) => {
+                            chains[*o.get()].push(id)
+                        }
+                        std::collections::hash_map::Entry::Vacant(v) => {
+                            v.insert(chains.len());
+                            chains.push(vec![id]);
+                        }
+                    }
+                }
+            }
+        }
+        let slots: Mutex<Vec<Option<Result<Arc<Field>>>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        crate::util::par_for_each(chains.len(), self.workers, |ci| {
+            let mut prev: Option<Arc<Field>> = None;
+            for &id in &chains[ci] {
+                let e = &self.index.entries[id];
+                let r = self.decode_stream(e).and_then(|decoded| {
+                    if e.delta {
+                        let b = prev.as_ref().expect("baseline validated at open");
+                        Ok(Arc::new(self.apply_delta(b, &decoded)?))
+                    } else {
+                        Ok(Arc::new(decoded))
+                    }
+                });
+                let ok = r.is_ok();
+                prev = r.as_ref().ok().map(Arc::clone);
+                slots.lock().unwrap()[id] = Some(r);
+                if !ok {
+                    break; // the rest of the chain cannot resolve
+                }
+            }
+        });
+        let mut slot_vec = slots.into_inner().unwrap();
         let mut out = Vec::with_capacity(self.fields.len());
         for fm in &self.fields {
-            let values = FieldValues::concat(
-                fm.entry_ids.iter().map(|&id| &decoded[id].values),
-            )?;
+            let mut parts = Vec::with_capacity(fm.entry_ids.len());
+            for &id in &fm.entry_ids {
+                match slot_vec[id].take() {
+                    Some(Ok(f)) => parts.push(f),
+                    Some(Err(e)) => return Err(e),
+                    None => {
+                        return Err(SzError::corrupt(format!(
+                            "chunk {} of '{}' left undecoded (broken delta chain)",
+                            self.index.entries[id].chunk_index, fm.name
+                        )))
+                    }
+                }
+            }
+            let values = FieldValues::concat(parts.iter().map(|f| &f.values))?;
             out.push(Field::new(fm.name.clone(), &fm.dims, values)?);
         }
         Ok(out)
@@ -477,22 +651,34 @@ impl<'a> ContainerReader<'a> {
     }
 }
 
-/// Validate per-field chunk coverage once at open time: every field's
-/// chunks must be duplicate-free, complete (`chunk_count` of them), agree
-/// on dims, and tile `0..dims[0]` contiguously. Region reads then trust
-/// the index without re-validating per query.
-fn validate_coverage(index: &ContainerIndex) -> Result<Vec<FieldMeta>> {
+/// Validate per-`(snapshot, field)` chunk coverage once at open time:
+/// every field's chunks must be duplicate-free, complete (`chunk_count`
+/// of them), agree on dims, and tile `0..dims[0]` contiguously; every
+/// delta chunk must have a matching baseline chunk (same field, chunk
+/// position, rows, dims) in the previous snapshot. Region reads then
+/// trust the index — and the precomputed baseline links — without
+/// re-validating per query.
+fn validate_coverage(
+    index: &ContainerIndex,
+) -> Result<(Vec<FieldMeta>, Vec<Option<usize>>)> {
     let mut fields: Vec<FieldMeta> = Vec::new();
     for (id, e) in index.entries.iter().enumerate() {
-        match fields.iter_mut().find(|f| f.name == e.field) {
+        match fields
+            .iter_mut()
+            .find(|f| f.snapshot == e.snapshot && f.name == e.field)
+        {
             Some(f) => f.entry_ids.push(id),
             None => fields.push(FieldMeta {
+                snapshot: e.snapshot,
                 name: e.field.clone(),
                 dims: e.field_dims.clone(),
                 entry_ids: vec![id],
             }),
         }
     }
+    // snapshot-major order (stable within a snapshot) so read_all output
+    // and field listings group naturally by timestep
+    fields.sort_by_key(|f| f.snapshot);
     for fm in &mut fields {
         fm.entry_ids.sort_by_key(|&id| index.entries[id].chunk_index);
         let first = &index.entries[fm.entry_ids[0]];
@@ -529,7 +715,41 @@ fn validate_coverage(index: &ContainerIndex) -> Result<Vec<FieldMeta>> {
             )));
         }
     }
-    Ok(fields)
+    let mut baseline_of: Vec<Option<usize>> = vec![None; index.entries.len()];
+    for (id, e) in index.entries.iter().enumerate() {
+        if !e.delta {
+            continue;
+        }
+        // read_index_meta already rejected delta at snapshot 0
+        let prev = fields
+            .iter()
+            .find(|f| f.snapshot + 1 == e.snapshot && f.name == e.field)
+            .ok_or_else(|| {
+                SzError::corrupt(format!(
+                    "delta chunk {} of '{}': snapshot {} has no such field",
+                    e.chunk_index,
+                    e.field,
+                    e.snapshot - 1
+                ))
+            })?;
+        let b_id = *prev.entry_ids.get(e.chunk_index).ok_or_else(|| {
+            SzError::corrupt(format!(
+                "delta chunk {} of '{}': no baseline chunk in snapshot {}",
+                e.chunk_index,
+                e.field,
+                e.snapshot - 1
+            ))
+        })?;
+        let b = &index.entries[b_id];
+        if b.rows != e.rows || b.field_dims != e.field_dims {
+            return Err(SzError::corrupt(format!(
+                "delta chunk {} of '{}': baseline rows {:?} disagree with {:?}",
+                e.chunk_index, e.field, b.rows, e.rows
+            )));
+        }
+        baseline_of[id] = Some(b_id);
+    }
+    Ok((fields, baseline_of))
 }
 
 #[cfg(test)]
@@ -568,7 +788,8 @@ mod tests {
     fn open_reads_index_without_payload_knowledge() {
         let artifact = sample_container(2);
         let r = ContainerReader::from_slice(&artifact).unwrap();
-        assert_eq!(r.version(), container::VERSION_V2);
+        assert_eq!(r.version(), container::VERSION_V3);
+        assert_eq!(r.snapshot_count(), 1, "plain pack is a 1-snapshot artifact");
         assert_eq!(r.field_names(), vec!["f0", "f1"]);
         assert_eq!(r.field_dims("f0").unwrap(), &[24, 12, 12]);
         assert_eq!(r.field_chunks("f0").unwrap(), 8);
@@ -781,6 +1002,107 @@ mod tests {
         assert!(r.chunk_payload(999).is_err(), "out-of-range entry id");
         // payload extent accessor agrees with the parsed meta
         assert_eq!(r.payload_bytes(), meta.payload_len);
+    }
+
+    /// 3-snapshot smoothly-drifting series of one 12-row field, 3 rows
+    /// per chunk → 4 chunks per snapshot, packed with delta mode on.
+    fn sample_series() -> (Vec<u8>, Vec<Field>) {
+        let cfg = JobConfig {
+            pipeline: "sz3-lr".into(),
+            bound: ErrorBound::Abs(1e-3),
+            workers: 2,
+            chunk_elems: 3 * 144,
+            queue_depth: 2,
+            ..Default::default()
+        };
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let snaps =
+            container::fixtures::smooth_series(555, &[12, 12, 12], 3, 0.01, "rho");
+        let originals: Vec<Field> =
+            snaps.iter().map(|s| s.fields[0].clone()).collect();
+        let (artifact, rep) = coord.run_series_to_container(snaps, true).unwrap();
+        assert!(rep.delta_chunks > 0, "sample series must exercise delta: {rep}");
+        (artifact, originals)
+    }
+
+    #[test]
+    fn series_reader_resolves_delta_chains() {
+        let (artifact, originals) = sample_series();
+        let r = ContainerReader::from_slice(&artifact).unwrap().with_workers(2);
+        assert_eq!(r.version(), container::VERSION_V3);
+        assert_eq!(r.snapshot_count(), 3);
+        assert_eq!(r.snapshot_tags(), &["t0", "t1", "t2"]);
+        assert_eq!(r.field_names_at(2), vec!["rho"]);
+        // every snapshot reconstructs within the bound (1% slack for the
+        // one extra f32 rounding of baseline+residual reconstruction)
+        for (t, orig) in originals.iter().enumerate() {
+            let out = r.read_field_at(t, "rho").unwrap();
+            assert_eq!(out.shape.dims(), orig.shape.dims());
+            for (o, d) in
+                orig.values.to_f64_vec().iter().zip(out.values.to_f64_vec())
+            {
+                assert!((o - d).abs() <= 1e-3 * 1.01, "snapshot {t}");
+            }
+        }
+        // an ROI at the last snapshot is bit-identical to slicing the
+        // full snapshot decode, and delta resolution is counted
+        let full = r.read_field_at(2, "rho").unwrap();
+        let r2 = ContainerReader::from_slice(&artifact).unwrap();
+        let roi = r2.read_region_at(2, "rho", 4..8).unwrap();
+        assert_eq!(roi.values, slice_rows(&full, (4, 8)).unwrap().values);
+        // rows 4..8 overlap chunks 1 and 2; if either is delta at the
+        // requested snapshot, its resolution must be counted
+        if artifact_has_delta_at(&artifact, 2, &[1, 2]) {
+            assert!(r2.stats().delta_applied > 0);
+        }
+        // read_all returns every snapshot, snapshot-major, decoding each
+        // stream exactly once
+        let r3 = ContainerReader::from_slice(&artifact).unwrap().with_workers(4);
+        let all = r3.read_all().unwrap();
+        assert_eq!(all.len(), 3);
+        assert_eq!(
+            r3.stats().chunks_decoded,
+            r3.index().entries.len() as u64,
+            "chain-grouped batch decode must decode each entry once"
+        );
+        assert_eq!(all[2].values, full.values);
+        // snapshot bounds checked
+        assert!(r.read_region_at(3, "rho", 0..1).is_err());
+        assert!(r.read_field_at(9, "rho").is_err());
+    }
+
+    fn artifact_has_delta_at(artifact: &[u8], snapshot: usize, chunks: &[usize]) -> bool {
+        container::read_index_meta(artifact)
+            .unwrap()
+            .index
+            .entries
+            .iter()
+            .any(|e| e.snapshot == snapshot && e.delta && chunks.contains(&e.chunk_index))
+    }
+
+    #[test]
+    fn warm_cache_resolves_delta_chain_in_one_hop() {
+        let (artifact, _) = sample_series();
+        let r = ContainerReader::from_slice(&artifact)
+            .unwrap()
+            .with_cache_bytes(8 << 20);
+        r.read_region_at(2, "rho", 0..3).unwrap();
+        let cold = r.stats();
+        assert!(cold.chunks_decoded >= 1);
+        r.read_region_at(2, "rho", 0..3).unwrap();
+        let warm = r.stats();
+        assert_eq!(
+            warm.chunks_decoded, cold.chunks_decoded,
+            "warm chain read must decode nothing new"
+        );
+        assert_eq!(warm.cache_hits, cold.cache_hits + 1);
+        // intermediate snapshots of the chain were cached on the way, so
+        // reading snapshot 1 directly is also warm (if it was on the chain)
+        if cold.delta_applied >= 2 {
+            let before = r.stats();
+            r.read_region_at(1, "rho", 0..3).unwrap();
+            assert_eq!(r.stats().chunks_decoded, before.chunks_decoded);
+        }
     }
 
     #[test]

@@ -74,13 +74,14 @@ fn list(store: &ArtifactStore) -> Response {
                 .collect();
             format!(
                 "{{\"id\":\"{}\",\"version\":{},\"file_bytes\":{},\"payload_bytes\":{},\
-                 \"fields\":[{}],\"chunks\":{}}}",
+                 \"fields\":[{}],\"chunks\":{},\"snapshots\":{}}}",
                 json_escape(&a.id),
                 a.reader.version(),
                 a.file_bytes,
                 a.reader.payload_bytes(),
                 names.join(","),
-                a.reader.index().entries.len()
+                a.reader.index().entries.len(),
+                a.reader.snapshot_count()
             )
         })
         .collect();
@@ -92,10 +93,20 @@ fn meta(store: &ArtifactStore, id: &str) -> Response {
         Some(a) => a,
         None => return Response::error(404, &format!("unknown artifact '{id}'")),
     };
+    let snapshots: Vec<String> = art
+        .reader
+        .snapshot_tags()
+        .iter()
+        .enumerate()
+        .map(|(id, tag)| {
+            format!("{{\"id\":{id},\"tag\":\"{}\"}}", json_escape(tag))
+        })
+        .collect();
     let mut fields = Vec::new();
     for f in &art.fields {
-        // chunk map ordered by chunk_index; `entry` is the global index
-        // ordinal a client passes to `/raw?chunk=N`
+        // chunk map across all snapshots, ordered (snapshot, chunk_index);
+        // `entry` is the global index ordinal a client passes to
+        // `/raw?chunk=N`
         let mut entries: Vec<(usize, &crate::container::ChunkEntry)> = art
             .reader
             .index()
@@ -104,15 +115,18 @@ fn meta(store: &ArtifactStore, id: &str) -> Response {
             .enumerate()
             .filter(|(_, e)| e.field == f.name)
             .collect();
-        entries.sort_by_key(|(_, e)| e.chunk_index);
+        entries.sort_by_key(|(_, e)| (e.snapshot, e.chunk_index));
         let map: Vec<String> = entries
             .iter()
             .map(|(entry_id, e)| {
                 format!(
-                    "{{\"chunk\":{},\"entry\":{},\"rows\":[{},{}],\"pipeline\":\"{}\",\
+                    "{{\"chunk\":{},\"entry\":{},\"snapshot\":{},\"delta\":{},\
+                     \"rows\":[{},{}],\"pipeline\":\"{}\",\
                      \"bytes\":{},\"crc32\":{}}}",
                     e.chunk_index,
                     entry_id,
+                    e.snapshot,
+                    e.delta,
                     e.rows.0,
                     e.rows.1,
                     json_escape(&e.pipeline),
@@ -138,11 +152,12 @@ fn meta(store: &ArtifactStore, id: &str) -> Response {
         200,
         format!(
             "{{\"id\":\"{}\",\"version\":{},\"file_bytes\":{},\"payload_bytes\":{},\
-             \"fields\":[{}]}}",
+             \"snapshots\":[{}],\"fields\":[{}]}}",
             json_escape(&art.id),
             art.reader.version(),
             art.file_bytes,
             art.reader.payload_bytes(),
+            snapshots.join(","),
             fields.join(",")
         ),
     )
@@ -164,6 +179,26 @@ fn roi(store: &ArtifactStore, req: &Request, id: &str, name: &str) -> Response {
             );
         }
     };
+    // ?snapshot=K picks the series timestep (default 0, the only
+    // snapshot in v1/v2 artifacts): malformed → 400, out of range → 404
+    let snapshot: usize = match req.query_param("snapshot") {
+        None => 0,
+        Some(spec) => match spec.parse() {
+            Ok(s) => s,
+            Err(_) => {
+                return Response::error(400, &format!("bad snapshot '{spec}'"))
+            }
+        },
+    };
+    let snapshots = art.reader.snapshot_count();
+    if snapshot >= snapshots {
+        return Response::error(
+            404,
+            &format!(
+                "artifact '{id}' has no snapshot {snapshot} (holds {snapshots})"
+            ),
+        );
+    }
     let total = field.dims[0];
     let rows = match req.query_param("rows") {
         None => 0..total,
@@ -198,7 +233,7 @@ fn roi(store: &ArtifactStore, req: &Request, id: &str, name: &str) -> Response {
             &format!("unknown format '{format}' (expected f32, raw, or json)"),
         );
     }
-    let region = match art.reader.read_region(name, rows.clone()) {
+    let region = match art.reader.read_region_at(snapshot, name, rows.clone()) {
         Ok(r) => r,
         Err(e) => return Response::error(500, &e.to_string()),
     };
@@ -207,10 +242,12 @@ fn roi(store: &ArtifactStore, req: &Request, id: &str, name: &str) -> Response {
         "json" => Response::json(
             200,
             format!(
-                "{{\"artifact\":\"{}\",\"field\":\"{}\",\"rows\":[{},{}],\
+                "{{\"artifact\":\"{}\",\"field\":\"{}\",\"snapshot\":{},\
+                 \"rows\":[{},{}],\
                  \"dims\":{},\"dtype\":\"{}\",\"values\":{}}}",
                 json_escape(id),
                 json_escape(name),
+                snapshot,
                 rows.start,
                 rows.end,
                 dims_json(&dims),
@@ -218,13 +255,14 @@ fn roi(store: &ArtifactStore, req: &Request, id: &str, name: &str) -> Response {
                 values_json(&region.values)
             ),
         ),
-        // "f32" | "raw": the exact little-endian bytes `read_region`
+        // "f32" | "raw": the exact little-endian bytes `read_region_at`
         // produces — bit-identical to `sz3 extract` output
         _ => Response::octets(region.values.to_le_bytes()),
     };
     resp.with_header("X-SZ3-Dims", dims_csv(&dims))
         .with_header("X-SZ3-Dtype", region.values.dtype())
         .with_header("X-SZ3-Rows", format!("{}..{}", rows.start, rows.end))
+        .with_header("X-SZ3-Snapshot", snapshot.to_string())
 }
 
 fn raw(store: &ArtifactStore, req: &Request, id: &str) -> Response {
@@ -259,6 +297,8 @@ fn raw(store: &ArtifactStore, req: &Request, id: &str) -> Response {
                 .with_header("X-SZ3-Field", entry.field.clone())
                 .with_header("X-SZ3-Chunk", entry.chunk_index.to_string())
                 .with_header("X-SZ3-Pipeline", entry.pipeline.clone())
+                .with_header("X-SZ3-Snapshot", entry.snapshot.to_string())
+                .with_header("X-SZ3-Delta", entry.delta.to_string())
                 .with_header(
                     "X-SZ3-Rows",
                     format!("{}..{}", entry.rows.0, entry.rows.1),
@@ -283,13 +323,15 @@ fn statsz(store: &ArtifactStore, stats: &ServerStats) -> Response {
             let s = a.request_stats();
             format!(
                 "\"{}\":{{\"chunks_fetched\":{},\"bytes_fetched\":{},\
-                 \"crc_verified\":{},\"chunks_decoded\":{},\"cache_hits\":{}}}",
+                 \"crc_verified\":{},\"chunks_decoded\":{},\"cache_hits\":{},\
+                 \"delta_applied\":{}}}",
                 json_escape(&a.id),
                 s.chunks_fetched,
                 s.bytes_fetched,
                 s.crc_verified,
                 s.chunks_decoded,
-                s.cache_hits
+                s.cache_hits,
+                s.delta_applied
             )
         })
         .collect();
@@ -532,6 +574,97 @@ mod tests {
         // the payload is a self-describing SZ3R stream a client can decode
         let decoded = crate::pipeline::decompress_any(&resp.body).unwrap();
         assert_eq!(decoded.shape.dims()[1..], [12, 12]);
+    }
+
+    /// Store with one 3-snapshot delta series artifact "ts".
+    fn series_store() -> (ArtifactStore, Vec<u8>) {
+        let cfg = JobConfig {
+            pipeline: "sz3-lr".into(),
+            bound: ErrorBound::Abs(1e-3),
+            workers: 2,
+            chunk_elems: 3 * 144,
+            queue_depth: 2,
+            ..Default::default()
+        };
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let snaps = crate::container::fixtures::smooth_series(
+            616,
+            &[12, 12, 12],
+            3,
+            0.01,
+            "rho",
+        );
+        let (artifact, _) = coord.run_series_to_container(snaps, true).unwrap();
+        let mut store = ArtifactStore::new(8 << 20);
+        let reader = ContainerReader::new(Box::new(
+            FileSource::new(Cursor::new(artifact.clone())).unwrap(),
+        ))
+        .unwrap()
+        .with_workers(2);
+        let len = artifact.len() as u64;
+        store.register("ts".to_string(), reader, len).unwrap();
+        (store, artifact)
+    }
+
+    #[test]
+    fn snapshot_param_contract_and_series_metadata() {
+        let (store, artifact) = series_store();
+        // list advertises the snapshot count
+        let resp = get(&store, "/v1/artifacts");
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let art = &j.get("artifacts").unwrap().as_arr().unwrap()[0];
+        assert_eq!(art.get("snapshots").unwrap().as_usize(), Some(3));
+        // meta lists ids and tags, and the chunk map carries snapshot/delta
+        let resp = get(&store, "/v1/artifacts/ts");
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let snaps = j.get("snapshots").unwrap().as_arr().unwrap();
+        assert_eq!(snaps.len(), 3);
+        assert_eq!(snaps[1].get("id").unwrap().as_usize(), Some(1));
+        assert_eq!(snaps[1].get("tag").unwrap().as_str(), Some("t1"));
+        let map = j.get("fields").unwrap().as_arr().unwrap()[0]
+            .get("chunk_map")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(map.len(), 12, "4 chunks x 3 snapshots");
+        assert!(map[0].get("snapshot").unwrap().as_usize().is_some());
+        // valid snapshots serve the exact read_region_at bytes
+        for snap in 0..3 {
+            let resp = get(
+                &store,
+                &format!("/v1/artifacts/ts/fields/rho?rows=2..7&snapshot={snap}"),
+            );
+            assert_eq!(resp.status, 200, "snapshot={snap}");
+            assert_eq!(resp.header("X-SZ3-Snapshot"), Some(format!("{snap}")).as_deref());
+            let oracle = ContainerReader::from_slice(&artifact)
+                .unwrap()
+                .read_region_at(snap, "rho", 2..7)
+                .unwrap();
+            assert_eq!(resp.body, oracle.values.to_le_bytes(), "snapshot={snap}");
+        }
+        // out of range → 404; malformed → 400
+        assert_eq!(get(&store, "/v1/artifacts/ts/fields/rho?snapshot=3").status, 404);
+        assert_eq!(get(&store, "/v1/artifacts/ts/fields/rho?snapshot=99").status, 404);
+        for bad in ["abc", "-1", "1.5", ""] {
+            let resp =
+                get(&store, &format!("/v1/artifacts/ts/fields/rho?snapshot={bad}"));
+            assert_eq!(resp.status, 400, "snapshot={bad}");
+        }
+        // the default (no param) is snapshot 0 — same bytes
+        let a = get(&store, "/v1/artifacts/ts/fields/rho?rows=0..3");
+        let b = get(&store, "/v1/artifacts/ts/fields/rho?rows=0..3&snapshot=0");
+        assert_eq!(a.body, b.body);
+        // single-snapshot artifacts accept only snapshot=0
+        let (demo, _) = demo_store();
+        assert_eq!(
+            get(&demo, "/v1/artifacts/demo/fields/density?snapshot=0").status,
+            200
+        );
+        assert_eq!(
+            get(&demo, "/v1/artifacts/demo/fields/density?snapshot=1").status,
+            404
+        );
     }
 
     #[test]

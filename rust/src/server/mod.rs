@@ -19,7 +19,7 @@
 //! |---|---|
 //! | `GET /v1/artifacts` | list registered artifacts |
 //! | `GET /v1/artifacts/{id}` | index/metadata JSON (fields, dims, chunk map) |
-//! | `GET /v1/artifacts/{id}/fields/{name}?rows=A..B&format=f32\|raw\|json` | ROI extraction — decodes only overlapping chunks |
+//! | `GET /v1/artifacts/{id}/fields/{name}?rows=A..B&snapshot=K&format=f32\|raw\|json` | ROI extraction — decodes only overlapping chunks of snapshot K (default 0) |
 //! | `GET /v1/artifacts/{id}/raw?chunk=N` | compressed chunk passthrough for client-side decode |
 //! | `GET /healthz` | liveness |
 //! | `GET /statsz` | [`crate::reader::ReadStats`] per artifact + per-endpoint latency |
@@ -129,6 +129,7 @@ impl Artifact {
             crc_verified: s.crc_verified.saturating_sub(b.crc_verified),
             chunks_decoded: s.chunks_decoded.saturating_sub(b.chunks_decoded),
             cache_hits: s.cache_hits.saturating_sub(b.cache_hits),
+            delta_applied: s.delta_applied.saturating_sub(b.delta_applied),
         }
     }
 }
@@ -202,18 +203,42 @@ impl ArtifactStore {
         if self.get(&id).is_some() {
             return Err(SzError::config(format!("duplicate artifact id '{id}'")));
         }
+        // the serve path registers snapshot-0 field metadata once and
+        // validates requests against it, so every snapshot must present
+        // the same fields with the same dims (the series packer always
+        // produces this; a hand-crafted ragged artifact is refused here
+        // instead of surfacing as bogus 416/500s at request time)
+        for snapshot in 1..reader.snapshot_count() {
+            if reader.field_names_at(snapshot) != reader.field_names() {
+                return Err(SzError::config(format!(
+                    "artifact '{id}': snapshot {snapshot} holds fields {:?}, \
+                     snapshot 0 holds {:?} — ragged series are not servable",
+                    reader.field_names_at(snapshot),
+                    reader.field_names()
+                )));
+            }
+            for name in reader.field_names() {
+                if reader.field_dims_at(snapshot, name)? != reader.field_dims(name)? {
+                    return Err(SzError::config(format!(
+                        "artifact '{id}': field '{name}' changes dims at \
+                         snapshot {snapshot} — ragged series are not servable"
+                    )));
+                }
+            }
+        }
         let reader = reader.with_shared_cache(Arc::clone(&self.cache), &id);
         let mut fields = Vec::new();
         for name in reader.field_names().into_iter().map(str::to_string) {
             let dims = reader.field_dims(&name)?.to_vec();
             let chunks = reader.field_chunks(&name)?;
             // dtype lives only in the inner stream headers: peek the
-            // field's first chunk once at registration, never per request
+            // field's first snapshot-0 chunk once at registration, never
+            // per request (snapshot 0 is never delta-encoded)
             let first = reader
                 .index()
                 .entries
                 .iter()
-                .position(|e| e.field == name && e.chunk_index == 0)
+                .position(|e| e.field == name && e.chunk_index == 0 && e.snapshot == 0)
                 .ok_or_else(|| {
                     SzError::corrupt(format!("field '{name}' has no chunk 0"))
                 })?;

@@ -1,0 +1,154 @@
+//! Golden-artifact compatibility suite: every container format version
+//! must keep decoding bit-identically through the current reader.
+//!
+//! Three independent locks (see `rust/tests/fixtures/README.md`):
+//! committed fixture files vs their committed expected bytes, freshly
+//! generated artifacts vs `fixtures::reference_decode` (an independent
+//! decode implementation that never touches `sz3::reader`), and
+//! cross-version bit-identity of the same chunk set packed as v1/v2/v3.
+
+use std::path::PathBuf;
+use sz3::container::{self, fixtures};
+use sz3::reader::ContainerReader;
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures")
+}
+
+/// Decode every `(snapshot, field)` of an artifact through the reader,
+/// returning the same shape `reference_decode` produces.
+fn reader_decode(artifact: &[u8]) -> Vec<(usize, String, Vec<u8>)> {
+    let r = ContainerReader::from_slice(artifact).unwrap().with_workers(2);
+    let mut out = Vec::new();
+    for snapshot in 0..r.snapshot_count() {
+        let names: Vec<String> =
+            r.field_names_at(snapshot).into_iter().map(str::to_string).collect();
+        for name in names {
+            let field = r.read_field_at(snapshot, &name).unwrap();
+            out.push((snapshot, name, field.values.to_le_bytes()));
+        }
+    }
+    out
+}
+
+#[test]
+fn fresh_corpus_decodes_identically_via_reader_and_reference() {
+    for fx in fixtures::golden_set().unwrap() {
+        let via_reader = reader_decode(&fx.artifact);
+        assert_eq!(
+            via_reader, fx.expected,
+            "fixture '{}': reader and reference decode must agree bit-for-bit",
+            fx.name
+        );
+        // spot-check a region against the reference slice on every
+        // snapshot (covers delta-chain ROI resolution on the series)
+        let r = ContainerReader::from_slice(&fx.artifact).unwrap();
+        for snapshot in 0..r.snapshot_count() {
+            let roi = r.read_region_at(snapshot, "a", 3..7).unwrap();
+            let oracle =
+                fixtures::reference_region(&fx.artifact, snapshot, "a", 3..7)
+                    .unwrap();
+            assert_eq!(
+                roi.values.to_le_bytes(),
+                oracle,
+                "fixture '{}' snapshot {snapshot}: region mismatch",
+                fx.name
+            );
+        }
+    }
+}
+
+#[test]
+fn same_chunks_decode_bit_identically_across_versions() {
+    let set = fixtures::golden_set().unwrap();
+    let by_name = |n: &str| {
+        set.iter().find(|f| f.name == n).unwrap_or_else(|| panic!("fixture {n}"))
+    };
+    let (v1, v2, v3) = (by_name("v1"), by_name("v2"), by_name("v3"));
+    assert_eq!(
+        container::read_index_meta(&v1.artifact).unwrap().version,
+        container::VERSION_V1
+    );
+    assert_eq!(
+        container::read_index_meta(&v2.artifact).unwrap().version,
+        container::VERSION_V2
+    );
+    assert_eq!(
+        container::read_index_meta(&v3.artifact).unwrap().version,
+        container::VERSION_V3
+    );
+    let d1 = reader_decode(&v1.artifact);
+    let d2 = reader_decode(&v2.artifact);
+    let d3 = reader_decode(&v3.artifact);
+    assert_eq!(d1, d2, "v1 and v2 must decode identically");
+    assert_eq!(d2, d3, "v2 and v3 must decode identically");
+}
+
+#[test]
+fn committed_fixture_files_decode_unchanged() {
+    let dir = fixtures_dir();
+    let set = fixtures::golden_set().unwrap();
+    let mut verified = 0usize;
+    for fx in &set {
+        let artifact_path = dir.join(fx.artifact_file());
+        if !artifact_path.exists() {
+            // first materialization: bootstrap the committed corpus from
+            // the deterministic generator so the next run locks it
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(&artifact_path, &fx.artifact).unwrap();
+            for (snapshot, field, bytes) in &fx.expected {
+                std::fs::write(dir.join(fx.expected_file(*snapshot, field)), bytes)
+                    .unwrap();
+            }
+            eprintln!(
+                "bootstrapped fixture '{}' ({} bytes) — commit rust/tests/fixtures",
+                fx.name,
+                fx.artifact.len()
+            );
+        }
+        let artifact = std::fs::read(&artifact_path).unwrap();
+        let decoded = reader_decode(&artifact);
+        for (snapshot, field, bytes) in &decoded {
+            let expected_path = dir.join(fx.expected_file(*snapshot, field));
+            assert!(
+                expected_path.exists(),
+                "fixture '{}' missing expected file {}",
+                fx.name,
+                expected_path.display()
+            );
+            let expected = std::fs::read(&expected_path).unwrap();
+            assert_eq!(
+                bytes, &expected,
+                "fixture '{}' (snapshot {snapshot}, field '{field}'): committed \
+                 artifact no longer decodes to its committed bytes — a format or \
+                 codec regression",
+                fx.name
+            );
+            verified += 1;
+        }
+        // the committed artifact must also pass checksum verification
+        let r = ContainerReader::from_slice(&artifact).unwrap();
+        r.verify_checksums().unwrap();
+    }
+    assert!(verified >= set.len(), "every fixture verified at least one field");
+}
+
+#[test]
+fn v3_series_fixture_exposes_snapshot_axis() {
+    let set = fixtures::golden_set().unwrap();
+    let fx = set.iter().find(|f| f.name == "v3-series").unwrap();
+    let r = ContainerReader::from_slice(&fx.artifact).unwrap();
+    assert_eq!(r.version(), container::VERSION_V3);
+    assert_eq!(r.snapshot_count(), 3);
+    assert_eq!(r.snapshot_tags(), &["t0", "t1", "t2"]);
+    let meta = container::read_index_meta(&fx.artifact).unwrap();
+    assert!(
+        meta.index.entries.iter().any(|e| e.delta),
+        "the series fixture must contain at least one delta chunk"
+    );
+    // legacy fixtures carry the implicit single snapshot
+    let v1 = set.iter().find(|f| f.name == "v1").unwrap();
+    let r1 = ContainerReader::from_slice(&v1.artifact).unwrap();
+    assert_eq!(r1.snapshot_count(), 1);
+    assert_eq!(r1.snapshot_tags(), &[String::new()]);
+}

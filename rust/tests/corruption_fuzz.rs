@@ -1,0 +1,167 @@
+//! Deterministic byte-mutation sweep over a packed v3 series container:
+//! every mutated artifact must fail with a clean `SzError` — never a
+//! panic, never silently different decoded data. The v3 index checksum
+//! makes this total for the index region (magic, version, counts, the
+//! snapshot table, every chunk entry, even the tags); the per-chunk
+//! CRC-32 makes it total for the payload.
+
+use sz3::container;
+use sz3::reader::ContainerReader;
+
+/// Decode every `(snapshot, field)` through the reader with one worker
+/// (determinism and simple panic propagation).
+fn decode_all(artifact: &[u8]) -> sz3::error::Result<Vec<(usize, String, Vec<u8>)>> {
+    let r = ContainerReader::from_slice(artifact)?.with_workers(1);
+    let mut out = Vec::new();
+    for snapshot in 0..r.snapshot_count() {
+        let names: Vec<String> =
+            r.field_names_at(snapshot).into_iter().map(str::to_string).collect();
+        for name in names {
+            let field = r.read_field_at(snapshot, &name)?;
+            out.push((snapshot, name, field.values.to_le_bytes()));
+        }
+    }
+    Ok(out)
+}
+
+/// One mutation case: clean error, or bit-identical decode. Returns true
+/// if the mutation was rejected with an error.
+fn check_mutation(
+    artifact: &[u8],
+    baseline: &[(usize, String, Vec<u8>)],
+    pos: usize,
+    mutate: u8,
+    label: &str,
+) -> bool {
+    let mut bad = artifact.to_vec();
+    bad[pos] ^= mutate;
+    if bad[pos] == artifact[pos] {
+        return false; // xor with 0 — not a mutation
+    }
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        decode_all(&bad)
+    }));
+    match caught {
+        Err(_) => panic!("PANIC on {label} byte {pos} xor {mutate:#04x}"),
+        Ok(Err(_)) => true,
+        Ok(Ok(decoded)) => {
+            assert_eq!(
+                &decoded, baseline,
+                "{label} byte {pos} xor {mutate:#04x}: mutation silently \
+                 changed decoded data"
+            );
+            false
+        }
+    }
+}
+
+/// The sweep target: a 3-snapshot delta series (exercises the snapshot
+/// table and delta flags) built from the deterministic fixture corpus.
+fn series_artifact() -> Vec<u8> {
+    container::fixtures::golden_set()
+        .unwrap()
+        .into_iter()
+        .find(|f| f.name == "v3-series")
+        .unwrap()
+        .artifact
+}
+
+#[test]
+fn index_mutation_sweep_never_panics_or_accepts_wrong_data() {
+    let artifact = series_artifact();
+    let baseline = decode_all(&artifact).unwrap();
+    let meta = container::read_index_meta(&artifact).unwrap();
+    let index_end = meta.payload_offset;
+    let mut rejected = 0usize;
+    for pos in 0..index_end {
+        for mutate in [0x01u8, 0x80, 0xff] {
+            // the v3 index checksum covers every byte up to the payload,
+            // so *no* index mutation may decode at all — benign is 0
+            assert!(
+                check_mutation(&artifact, &baseline, pos, mutate, "index"),
+                "index byte {pos} xor {mutate:#04x} was accepted"
+            );
+            rejected += 1;
+        }
+    }
+    assert!(rejected >= 3 * index_end);
+}
+
+#[test]
+fn payload_mutation_sweep_is_always_caught_by_crc() {
+    let artifact = series_artifact();
+    let baseline = decode_all(&artifact).unwrap();
+    let meta = container::read_index_meta(&artifact).unwrap();
+    let payload_start = meta.payload_offset;
+    let payload_len = meta.payload_len as usize;
+    assert_eq!(payload_start + payload_len, artifact.len());
+    // stride through the payload plus both extremes of every chunk
+    let mut positions: Vec<usize> = (0..payload_len).step_by(7).collect();
+    for e in &meta.index.entries {
+        positions.push(e.offset);
+        positions.push(e.offset + e.len - 1);
+    }
+    for pos in positions {
+        let ok = check_mutation(
+            &artifact,
+            &baseline,
+            payload_start + pos,
+            0x40,
+            "payload",
+        );
+        // v3 carries a CRC per chunk: a payload flip can never be benign
+        assert!(ok, "payload byte {pos}: corruption escaped the CRC check");
+    }
+}
+
+#[test]
+fn truncation_sweep_errors_cleanly_at_every_cut() {
+    let artifact = series_artifact();
+    for cut in 0..artifact.len().min(64) {
+        let prefix = &artifact[..cut];
+        let caught = std::panic::catch_unwind(|| {
+            ContainerReader::from_slice(prefix).map(|r| r.read_all())
+        });
+        match caught {
+            Err(_) => panic!("panic on truncation at {cut}"),
+            Ok(Ok(Ok(_))) => panic!("truncated container decoded (cut={cut})"),
+            Ok(_) => {}
+        }
+    }
+    // coarser cuts across the rest of the artifact
+    for cut in (64..artifact.len()).step_by(41) {
+        let prefix = &artifact[..cut];
+        let caught = std::panic::catch_unwind(|| {
+            ContainerReader::from_slice(prefix).map(|r| r.read_all())
+        });
+        match caught {
+            Err(_) => panic!("panic on truncation at {cut}"),
+            Ok(Ok(Ok(_))) => panic!("truncated container decoded (cut={cut})"),
+            Ok(_) => {}
+        }
+    }
+}
+
+#[test]
+fn snapshot_table_specific_mutations_are_validated() {
+    // target the bytes right after the fixed header: chunk count, field
+    // count, snapshot count, then the tag strings — oversized counts and
+    // flag bytes must be rejected structurally, not by allocation failure
+    let artifact = series_artifact();
+    let baseline = decode_all(&artifact).unwrap();
+    // version byte: every other value must be rejected outright
+    for v in [0u8, 4, 9, 0x7f, 0xff] {
+        let mut bad = artifact.clone();
+        bad[4] = v;
+        assert!(
+            ContainerReader::from_slice(&bad).is_err(),
+            "version {v} accepted"
+        );
+    }
+    // saturate the varints of the three leading counts
+    for pos in 5..12 {
+        for mutate in [0x7fu8, 0xff] {
+            check_mutation(&artifact, &baseline, pos, mutate, "header-varint");
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! HTTP status-code contract, table-driven over a real loopback socket:
+//! the `?snapshot=` parameter (valid / out-of-range → 404 / malformed →
+//! 400) layered on the existing 400/404/416 matrix, against a store
+//! holding both a v3 delta series and a plain single-snapshot artifact.
+
+use sz3::config::{JobConfig, Json};
+use sz3::container::fixtures::smooth_series;
+use sz3::coordinator::Coordinator;
+use sz3::pipeline::ErrorBound;
+use sz3::reader::ContainerReader;
+use sz3::server::{self, ArtifactStore, HttpClient, StoreOptions};
+
+/// Build the two artifacts: "series" (3 snapshots, delta on) and "plain"
+/// (one snapshot), both one field "rho" of 12×12×12, 4 chunks/snapshot.
+fn build_artifacts() -> (Vec<u8>, Vec<u8>) {
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        bound: ErrorBound::Abs(1e-3),
+        workers: 2,
+        chunk_elems: 3 * 144,
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let snaps = smooth_series(828, &[12, 12, 12], 3, 0.01, "rho");
+    let plain_field = snaps[0].fields[0].clone();
+    let (series, _) = coord.run_series_to_container(snaps, true).unwrap();
+    let (plain, _) = coord.run_to_container(vec![plain_field]).unwrap();
+    (series, plain)
+}
+
+#[test]
+fn snapshot_and_error_matrix_over_loopback() {
+    let (series, plain) = build_artifacts();
+    let dir =
+        std::env::temp_dir().join(format!("sz3_http_contract_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("series.sz3c"), &series).unwrap();
+    std::fs::write(dir.join("plain.sz3c"), &plain).unwrap();
+
+    let store = ArtifactStore::open_dir(
+        &dir,
+        &StoreOptions { cache_bytes: 8 << 20, workers: 2, verify: true },
+    )
+    .unwrap();
+    let handle = server::serve(store, "127.0.0.1:0", 2).unwrap();
+    let addr = handle.addr();
+    {
+        let mut client = HttpClient::connect(addr).unwrap();
+
+        // table-driven status contract
+        let cases: &[(&str, u16)] = &[
+            // catalog + metadata
+            ("/v1/artifacts", 200),
+            ("/v1/artifacts/series", 200),
+            ("/v1/artifacts/plain", 200),
+            ("/v1/artifacts/none", 404),
+            ("/v2/artifacts", 404),
+            // snapshot parameter: valid
+            ("/v1/artifacts/series/fields/rho?snapshot=0", 200),
+            ("/v1/artifacts/series/fields/rho?snapshot=1", 200),
+            ("/v1/artifacts/series/fields/rho?snapshot=2&rows=2..7", 200),
+            ("/v1/artifacts/plain/fields/rho?snapshot=0", 200),
+            // snapshot parameter: out of range → 404
+            ("/v1/artifacts/series/fields/rho?snapshot=3", 404),
+            ("/v1/artifacts/series/fields/rho?snapshot=99", 404),
+            ("/v1/artifacts/plain/fields/rho?snapshot=1", 404),
+            // snapshot parameter: malformed → 400
+            ("/v1/artifacts/series/fields/rho?snapshot=abc", 400),
+            ("/v1/artifacts/series/fields/rho?snapshot=-1", 400),
+            ("/v1/artifacts/series/fields/rho?snapshot=1.5", 400),
+            ("/v1/artifacts/series/fields/rho?snapshot=", 400),
+            // the existing rows/format matrix still holds with snapshots
+            ("/v1/artifacts/series/fields/rho?rows=9..99&snapshot=1", 416),
+            ("/v1/artifacts/series/fields/rho?rows=5..5", 416),
+            ("/v1/artifacts/series/fields/rho?rows=9..7", 416),
+            ("/v1/artifacts/series/fields/rho?rows=oops", 400),
+            ("/v1/artifacts/series/fields/rho?format=xml", 400),
+            ("/v1/artifacts/series/fields/nope", 404),
+            // raw chunk passthrough
+            ("/v1/artifacts/series/raw?chunk=0", 200),
+            ("/v1/artifacts/series/raw?chunk=999", 404),
+            ("/v1/artifacts/series/raw?chunk=zap", 400),
+            ("/v1/artifacts/series/raw", 400),
+            // liveness
+            ("/healthz", 200),
+            ("/statsz", 200),
+        ];
+        for (target, expect) in cases {
+            let resp = client.get(target).unwrap();
+            assert_eq!(resp.status, *expect, "GET {target}");
+        }
+
+        // 416 keeps its Content-Range header on a snapshot request
+        let resp = client
+            .get("/v1/artifacts/series/fields/rho?rows=9..99&snapshot=1")
+            .unwrap();
+        assert_eq!(resp.header("content-range"), Some("rows */12"));
+
+        // snapshot ROIs serve the exact read_region_at bytes, and each
+        // snapshot's bytes differ (the series actually evolves)
+        let local = ContainerReader::from_slice(&series).unwrap();
+        let mut bodies = Vec::new();
+        for snap in 0..3 {
+            let resp = client
+                .get(&format!("/v1/artifacts/series/fields/rho?rows=2..7&snapshot={snap}"))
+                .unwrap();
+            assert_eq!(resp.status, 200);
+            assert_eq!(resp.header("x-sz3-snapshot"), Some(format!("{snap}")).as_deref());
+            let oracle = local.read_region_at(snap, "rho", 2..7).unwrap();
+            assert_eq!(resp.body, oracle.values.to_le_bytes(), "snapshot {snap}");
+            bodies.push(resp.body);
+        }
+        assert_ne!(bodies[0], bodies[2], "snapshots must hold distinct data");
+
+        // metadata advertises the snapshot axis
+        let resp = client.get("/v1/artifacts/series").unwrap();
+        let j = Json::parse(resp.text().unwrap()).unwrap();
+        let snaps = j.get("snapshots").unwrap().as_arr().unwrap();
+        assert_eq!(snaps.len(), 3);
+        assert_eq!(snaps[2].get("tag").unwrap().as_str(), Some("t2"));
+
+        // statsz reports delta resolutions after series reads
+        let resp = client.get("/statsz").unwrap();
+        let j = Json::parse(resp.text().unwrap()).unwrap();
+        let s = j.get("artifacts").unwrap().get("series").unwrap();
+        assert!(s.get("delta_applied").unwrap().as_usize().is_some());
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -363,9 +363,9 @@ fn reader_roi_decodes_only_overlapping_chunks() {
     let (artifact, report) = coord.run_to_container(vec![field.clone()]).unwrap();
     assert_eq!(report.chunks, 10);
 
-    // v2 with a CRC per chunk, verified end to end
+    // current version with a CRC per chunk, verified end to end
     let meta = sz3::container::read_index_meta(&artifact).unwrap();
-    assert_eq!(meta.version, sz3::container::VERSION_V2);
+    assert_eq!(meta.version, sz3::container::CURRENT_VERSION);
     assert!(meta.index.entries.iter().all(|e| e.crc32.is_some()));
 
     let full = sz3::container::decompress_container(&artifact, 4).unwrap().remove(0);
