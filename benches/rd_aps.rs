@@ -24,7 +24,7 @@ fn main() {
     for sample in [Sample::ChipPillar, Sample::FlatChip] {
         let field = diffraction_stack(sample, t, h, w, 42);
         for name in ["sz3-aps", "sz3-lr", "lorenzo-1d"] {
-            let c = pipeline::by_name(name).unwrap();
+            let c = pipeline::build(name).unwrap();
             for &eb in bounds {
                 let conf = CompressConf::new(ErrorBound::Abs(eb));
                 let stream = match c.compress(&field, &conf) {

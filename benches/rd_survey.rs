@@ -19,7 +19,7 @@ fn main() {
     println!("rd,figure,dataset,pipeline,rel_eb,bitrate,psnr,ratio");
     for ds in sz3::datagen::survey(42) {
         for name in ["sz3-lr", "sz3-interp", "sz3-truncation"] {
-            let c = pipeline::by_name(name).unwrap();
+            let c = pipeline::build(name).unwrap();
             let pts = rd_sweep(c.as_ref(), &ds.fields[0], &bounds, 32768);
             print_rd_series("fig7", ds.name, name, &pts);
         }

@@ -19,7 +19,7 @@ fn main() {
         let field = &ds.fields[0];
         let bytes = field.nbytes();
         for name in pipelines {
-            let c = pipeline::by_name(name).unwrap();
+            let c = pipeline::build(name).unwrap();
             let conf = CompressConf::new(ErrorBound::Rel(1e-3));
             let stream = match c.compress(field, &conf) {
                 Ok(s) => s,

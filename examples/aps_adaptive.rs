@@ -24,7 +24,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         );
         for eb in [0.1, 0.4, 2.0, 8.0] {
             for name in ["sz3-aps", "sz3-lr", "lorenzo-1d"] {
-                let c = pipeline::by_name(name).unwrap();
+                let c = pipeline::build(name).unwrap();
                 let conf = CompressConf::new(ErrorBound::Abs(eb));
                 let stream = c.compress(&field, &conf)?;
                 let out = decompress_any(&stream)?;

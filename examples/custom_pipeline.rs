@@ -54,7 +54,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut conf = CompressConf::new(ErrorBound::PwRel(rel));
     let log = LogTransform::default();
     let state = log.process(&mut field, &mut conf)?;
-    let inner = sz3::pipeline::by_name("lorenzo-1d").unwrap();
+    let inner = sz3::pipeline::build("lorenzo-1d").unwrap();
     let stream = inner.compress(&field, &conf)?;
     let mut restored = sz3::pipeline::decompress_any(&stream)?;
     log.postprocess(&mut restored, &state)?;

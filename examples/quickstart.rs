@@ -5,7 +5,7 @@
 
 use sz3::data::Field;
 use sz3::metrics;
-use sz3::pipeline::{by_name, decompress_any, CompressConf, ErrorBound};
+use sz3::pipeline::{build, decompress_any, CompressConf, ErrorBound};
 use sz3::util::rng::Pcg32;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -16,7 +16,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let field = Field::f32("demo", &dims, values)?;
 
     // Pick a pipeline from the registry and an error bound.
-    let pipeline = by_name("sz3-interp").expect("registered pipeline");
+    let pipeline = build("sz3-interp").expect("registered pipeline");
     let conf = CompressConf::new(ErrorBound::Rel(1e-4));
 
     let stream = pipeline.compress(&field, &conf)?;

@@ -299,7 +299,10 @@ mod tests {
         let f = Field::f32("cube", &dims, prop::smooth_field(&mut rng, &dims)).unwrap();
         let run = container_roundtrip(&coord, vec![f]).unwrap();
         assert!(run.ratio() > 1.0);
-        assert_eq!(run.per_pipeline, vec![("sz3-lr".to_string(), run.report.chunks)]);
+        assert_eq!(
+            run.per_pipeline,
+            vec![(pipeline::canonical("sz3-lr").unwrap(), run.report.chunks)]
+        );
     }
 
     #[test]
@@ -326,7 +329,7 @@ mod tests {
         let mut rng = crate::util::rng::Pcg32::seeded(17);
         let dims = [32usize, 32];
         let f = Field::f32("t", &dims, prop::smooth_field(&mut rng, &dims)).unwrap();
-        let c = pipeline::by_name("sz3-lr").unwrap();
+        let c = pipeline::build("sz3-lr").unwrap();
         let pts = rd_sweep(c.as_ref(), &f, &[1e-1, 1e-3, 1e-5], 32768);
         assert_eq!(pts.len(), 3);
         // looser bound => higher ratio (weak monotonicity with slack)

@@ -25,7 +25,10 @@ use crate::pipeline::{CompressConf, ErrorBound};
 /// ```
 #[derive(Clone, Debug)]
 pub struct JobConfig {
-    /// Pipeline registry name.
+    /// Pipeline — a registry alias (`sz3-lr`, …) or a composed spec like
+    /// `block(lorenzo+regression)/linear/huffman/lzhuf` (see
+    /// `docs/PIPELINES.md`); validated by
+    /// [`crate::coordinator::Coordinator::from_config`].
     pub pipeline: String,
     /// Error-bound mode + value.
     pub bound: ErrorBound,
@@ -42,8 +45,8 @@ pub struct JobConfig {
     /// Pick the best-fit registry pipeline per chunk (container runs record
     /// the choice in the chunk index).
     pub adaptive: bool,
-    /// Candidate pipelines for adaptive selection; empty means the
-    /// selector's default set.
+    /// Candidate pipelines for adaptive selection — aliases or raw specs;
+    /// empty means the selector's default set.
     pub candidates: Vec<String>,
 }
 

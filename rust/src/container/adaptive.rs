@@ -19,7 +19,8 @@ use crate::data::{Field, FieldValues};
 use crate::error::{Result, SzError};
 use crate::pipeline::analysis::{BlockAnalyzer, NativeAnalyzer};
 use crate::pipeline::block::block_side;
-use crate::pipeline::{self, CompressConf};
+use crate::pipeline::spec::{self, PipelineSpec, PreSpec, PredSpec};
+use crate::pipeline::CompressConf;
 use crate::predictor::LorenzoPredictor;
 use std::sync::Arc;
 
@@ -44,15 +45,22 @@ pub struct ChunkSignals {
 /// Outcome of selecting a pipeline for one chunk.
 #[derive(Clone, Debug)]
 pub struct Selection {
-    /// Winning registry pipeline name.
+    /// Winning pipeline as a canonical spec string (what the chunk index
+    /// records and [`crate::pipeline::build`] reconstructs).
     pub pipeline: String,
     /// The signals the decision was based on.
     pub signals: ChunkSignals,
 }
 
-/// Chunk-granularity best-fit pipeline selector.
+/// Chunk-granularity best-fit pipeline selector. Candidates are pipeline
+/// *specs* (raw compositions or registry aliases — anything
+/// [`crate::pipeline::build`] accepts), so the search space is the whole
+/// spec grammar, not a closed name list; the residual proxy keys on each
+/// candidate's predictor family.
 pub struct AdaptiveChunkSelector {
-    candidates: Vec<String>,
+    /// Canonical spec of each candidate, parallel to `specs`.
+    names: Vec<String>,
+    specs: Vec<PipelineSpec>,
     analyzer: Arc<dyn BlockAnalyzer>,
     /// Cap on sampled analysis blocks per chunk (keeps selection overhead
     /// a small fraction of compression time on large chunks).
@@ -75,22 +83,26 @@ impl AdaptiveChunkSelector {
             .expect("default candidates are registered")
     }
 
-    /// Selector over explicit registry names; every name is validated
-    /// against the pipeline registry up front.
+    /// Selector over explicit candidates — registry aliases or raw
+    /// pipeline specs; every entry is parsed and validated up front and
+    /// held in canonical form.
     pub fn from_names<I: IntoIterator<Item = String>>(names: I) -> Result<Self> {
-        let candidates: Vec<String> = names.into_iter().collect();
-        if candidates.is_empty() {
+        let raw: Vec<String> = names.into_iter().collect();
+        if raw.is_empty() {
             return Err(SzError::config("adaptive selection needs ≥ 1 candidate"));
         }
-        for name in &candidates {
-            if pipeline::by_name(name).is_none() {
-                return Err(SzError::config(format!(
-                    "unknown candidate pipeline '{name}'"
-                )));
-            }
+        let mut specs = Vec::with_capacity(raw.len());
+        let mut canon = Vec::with_capacity(raw.len());
+        for name in &raw {
+            let s = spec::resolve(name).map_err(|e| {
+                SzError::config(format!("candidate pipeline '{name}': {e}"))
+            })?;
+            canon.push(s.canonical());
+            specs.push(s);
         }
         Ok(AdaptiveChunkSelector {
-            candidates,
+            names: canon,
+            specs,
             analyzer: Arc::new(NativeAnalyzer),
             max_blocks: 256,
         })
@@ -102,9 +114,9 @@ impl AdaptiveChunkSelector {
         self
     }
 
-    /// The candidate registry names.
+    /// The candidates as canonical spec strings.
     pub fn candidates(&self) -> &[String] {
-        &self.candidates
+        &self.names
     }
 
     /// Measure predictor-error signals on a sample of `field`.
@@ -233,40 +245,49 @@ impl AdaptiveChunkSelector {
         let nd = field.shape.ndim();
         let noise = LorenzoPredictor::noise_factor(nd) * signals.eb;
         let noise_1d = LorenzoPredictor::noise_factor(1) * signals.eb;
-        // estimated mean |residual| if the chunk ran through each candidate
-        let proxy = |name: &str| -> Option<f64> {
-            match name {
-                "sz3-lr" | "sz3-lr-s" => {
+        // estimated mean |residual| if the chunk ran through each candidate,
+        // keyed on the spec's predictor family — any composition over a
+        // modeled predictor participates, however its later stages differ
+        let proxy = |s: &PipelineSpec| -> Option<f64> {
+            match s.pred {
+                PredSpec::Block { .. } => {
                     Some((signals.lorenzo_err + noise).min(signals.regression_err))
                 }
-                "lorenzo-1d" => Some(signals.first_diff_err + noise_1d),
-                "sz3-interp" => Some(0.5 * signals.curvature_err),
-                _ => None, // no residual model (pastri/aps/truncation/...)
+                // the first-difference model describes a *linearized* scan
+                // (the lorenzo-1d shape); an N-d order-1 Lorenzo without
+                // the linearize prefix predicts from multi-axis neighbors,
+                // which this signal does not estimate
+                PredSpec::Lorenzo(1) if s.pre == PreSpec::Linearize => {
+                    Some(signals.first_diff_err + noise_1d)
+                }
+                PredSpec::Interp(_) => Some(0.5 * signals.curvature_err),
+                // no residual model (non-linearized point lorenzo, zero,
+                // pastri, aps, truncation)
+                _ => None,
             }
         };
-        let mut best: Option<(&str, f64)> = None;
-        for name in &self.candidates {
-            if let Some(e) = proxy(name) {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, s) in self.specs.iter().enumerate() {
+            if let Some(e) = proxy(s) {
                 if best.map(|(_, b)| e < b).unwrap_or(true) {
-                    best = Some((name.as_str(), e));
+                    best = Some((i, e));
                 }
             }
         }
-        let winner = match best {
+        let truncation = self
+            .specs
+            .iter()
+            .position(|s| matches!(s.pred, PredSpec::Truncation { .. }));
+        let winner = match (best, truncation) {
             // unpredictable data: every predictor leaves residuals near the
             // raw value range, so prediction buys almost nothing over plain
             // bit truncation — take the cheaper pipeline if it is a candidate
-            Some((_, e))
-                if e > UNPREDICTABLE_FRACTION * signals.range
-                    && self.candidates.iter().any(|c| c == "sz3-truncation") =>
-            {
-                "sz3-truncation"
-            }
-            Some((name, _)) => name,
+            (Some((_, e)), Some(t)) if e > UNPREDICTABLE_FRACTION * signals.range => t,
+            (Some((i, _)), _) => i,
             // no candidate has a residual model: keep the user's first choice
-            None => self.candidates[0].as_str(),
+            (None, _) => 0,
         };
-        Ok(Selection { pipeline: winner.to_string(), signals })
+        Ok(Selection { pipeline: self.names[winner].clone(), signals })
     }
 }
 
@@ -305,10 +326,46 @@ mod tests {
         CompressConf::new(ErrorBound::Abs(0.5))
     }
 
+    /// Canonical spec of a registry alias, for selection assertions.
+    fn canon(alias: &str) -> String {
+        spec::canonical(alias).unwrap()
+    }
+
     #[test]
     fn unknown_candidate_rejected() {
         assert!(AdaptiveChunkSelector::from_names(vec!["nope".to_string()]).is_err());
         assert!(AdaptiveChunkSelector::from_names(Vec::<String>::new()).is_err());
+        // malformed raw specs are rejected with the same path
+        assert!(AdaptiveChunkSelector::from_names(vec![
+            "lorenzo/linear/huffman".to_string()
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn raw_spec_candidates_enter_the_search_space() {
+        // a non-registry composition participates in selection and its
+        // canonical spec is what the selection reports
+        let mut rng = Pcg32::seeded(25);
+        let dims = [16usize, 24, 24];
+        let vals = crate::util::prop::smooth_field(&mut rng, &dims);
+        let f = Field::f32("smooth", &dims, vals).unwrap();
+        let sel = AdaptiveChunkSelector::from_names(
+            ["block(lorenzo+regression)/linear/huffman/lzhuf", "truncation/rle"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let s = sel.select(&f, &CompressConf::new(ErrorBound::Abs(1e-3))).unwrap();
+        assert_eq!(s.pipeline, "block(lorenzo+regression)/linear/huffman/lzhuf");
+        assert!(crate::pipeline::build(&s.pipeline).is_ok());
+        // noise routes to the truncation-family candidate, whatever its
+        // lossless stage
+        let noisy: Vec<f32> =
+            (0..16 * 24 * 24).map(|_| rng.uniform(-1000.0, 1000.0) as f32).collect();
+        let f = Field::f32("noise", &dims, noisy).unwrap();
+        let s = sel.select(&f, &conf()).unwrap();
+        assert_eq!(s.pipeline, "truncation/rle");
     }
 
     #[test]
@@ -320,7 +377,7 @@ mod tests {
         let f = Field::f32("noise", &dims, vals).unwrap();
         let sel = AdaptiveChunkSelector::new();
         let s = sel.select(&f, &conf()).unwrap();
-        assert_eq!(s.pipeline, "sz3-truncation", "signals: {:?}", s.signals);
+        assert_eq!(s.pipeline, canon("sz3-truncation"), "signals: {:?}", s.signals);
     }
 
     #[test]
@@ -331,7 +388,7 @@ mod tests {
         let f = Field::f32("smooth", &dims, vals).unwrap();
         let sel = AdaptiveChunkSelector::new();
         let s = sel.select(&f, &CompressConf::new(ErrorBound::Abs(1e-3))).unwrap();
-        assert_ne!(s.pipeline, "sz3-truncation", "signals: {:?}", s.signals);
+        assert_ne!(s.pipeline, canon("sz3-truncation"), "signals: {:?}", s.signals);
     }
 
     #[test]
@@ -339,7 +396,7 @@ mod tests {
         let f = Field::f32("flat", &[8, 12, 12], vec![3.5; 8 * 12 * 12]).unwrap();
         let sel = AdaptiveChunkSelector::new();
         let s = sel.select(&f, &CompressConf::new(ErrorBound::Rel(1e-3))).unwrap();
-        assert_ne!(s.pipeline, "sz3-truncation");
+        assert_ne!(s.pipeline, canon("sz3-truncation"));
     }
 
     #[test]
@@ -355,11 +412,11 @@ mod tests {
         let sel = AdaptiveChunkSelector::new();
         let f = Field::f32("thin-noise", &dims, noisy).unwrap();
         let s = sel.select(&f, &conf()).unwrap();
-        assert_eq!(s.pipeline, "sz3-truncation", "signals: {:?}", s.signals);
+        assert_eq!(s.pipeline, canon("sz3-truncation"), "signals: {:?}", s.signals);
         let smooth = crate::util::prop::smooth_field(&mut rng, &dims);
         let f = Field::f32("thin-smooth", &dims, smooth).unwrap();
         let s = sel.select(&f, &CompressConf::new(ErrorBound::Abs(1e-3))).unwrap();
-        assert_ne!(s.pipeline, "sz3-truncation", "signals: {:?}", s.signals);
+        assert_ne!(s.pipeline, canon("sz3-truncation"), "signals: {:?}", s.signals);
     }
 
     #[test]
@@ -367,7 +424,7 @@ mod tests {
         let f = Field::f32("tiny", &[3], vec![1.0, 2.0, 3.0]).unwrap();
         let sel = AdaptiveChunkSelector::new();
         let s = sel.select(&f, &conf()).unwrap();
-        assert!(pipeline::by_name(&s.pipeline).is_some());
+        assert!(crate::pipeline::build(&s.pipeline).is_ok());
     }
 
     #[test]
@@ -382,6 +439,10 @@ mod tests {
         )
         .unwrap();
         let s = sel.select(&f, &conf()).unwrap();
-        assert!(s.pipeline == "sz3-lr" || s.pipeline == "sz3-interp");
+        assert!(
+            s.pipeline == canon("sz3-lr") || s.pipeline == canon("sz3-interp"),
+            "{}",
+            s.pipeline
+        );
     }
 }

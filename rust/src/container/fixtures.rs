@@ -112,6 +112,21 @@ pub fn golden_set() -> Result<Vec<Fixture>> {
         out.push(Fixture { name, artifact, expected });
     }
 
+    // a v2 artifact whose chunk index and inner stream headers carry the
+    // legacy *alias* name ("sz3-lr") — exactly what pre-spec releases
+    // wrote — so the container-level alias-fallback decode path stays
+    // locked by the committed corpus, not only by unit tests
+    let legacy_field = series[0].fields[0].clone();
+    let mut legacy = corpus_coordinator();
+    legacy.make_compressor =
+        std::sync::Arc::new(|| Box::new(crate::pipeline::BlockCompressor::sz3_lr()));
+    let mut legacy_chunks = Vec::new();
+    legacy.run(vec![legacy_field], |c| legacy_chunks.push(c))?;
+    debug_assert!(legacy_chunks.iter().all(|c| c.pipeline == "sz3-lr"));
+    let artifact = super::pack_v2(&legacy_chunks)?;
+    let expected = reference_decode(&artifact)?;
+    out.push(Fixture { name: "v2-alias", artifact, expected });
+
     let (artifact, _) = coord.run_series_to_container(series, true)?;
     let expected = reference_decode(&artifact)?;
     out.push(Fixture { name: "v3-series", artifact, expected });

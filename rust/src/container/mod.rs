@@ -26,7 +26,8 @@
 //!     row_end      varint  }
 //!     ndim         varint  ≤ data::shape::MAX_DIMS
 //!     dims[ndim]   varint  full field dims
-//!     pipeline     str     registry pipeline that compressed the chunk
+//!     pipeline     str     canonical pipeline spec that compressed the
+//!                          chunk (legacy artifacts carry registry aliases)
 //!     offset       varint  payload-relative byte offset of the stream
 //!     len          varint  stream length in bytes
 //!     crc32        u32 LE  (v2+) CRC-32/IEEE of the chunk stream
@@ -107,7 +108,9 @@ pub struct ChunkEntry {
     pub rows: (usize, usize),
     /// Full field dims.
     pub field_dims: Vec<usize>,
-    /// Registry pipeline that compressed this chunk.
+    /// Pipeline that compressed this chunk — a canonical spec string
+    /// (registry aliases in legacy artifacts); either form rebuilds
+    /// through [`crate::pipeline::build`].
     pub pipeline: String,
     /// Payload-relative byte offset of the chunk stream.
     pub offset: usize,
@@ -844,11 +847,15 @@ mod tests {
     #[test]
     fn describe_output_is_byte_stable_for_legacy_versions() {
         // regression lock: the v3 format bump must not change what
-        // `sz3 info` prints for v1/v2 artifacts
+        // `sz3 info` prints for v1/v2 artifacts (the pipeline column shows
+        // whatever string the index carries — canonical specs for current
+        // artifacts, registry aliases for truly old ones)
+        let canon = crate::pipeline::canonical("sz3-lr").unwrap();
         let chunks: Vec<CompressedChunk> = sample_chunks(1)
             .into_iter()
             .map(|c| CompressedChunk { stream: vec![0u8; 10], ..c })
             .collect();
+        assert!(chunks.iter().all(|c| c.pipeline == canon));
         let v1 = describe(&read_index_meta(&pack_v1(&chunks).unwrap()).unwrap());
         assert!(
             v1.starts_with(
@@ -864,9 +871,11 @@ mod tests {
             "{v2}"
         );
         for out in [&v1, &v2] {
-            assert!(out.contains("  pipeline sz3-lr: 4 chunks\n"), "{out}");
+            assert!(out.contains(&format!("  pipeline {canon}: 4 chunks\n")), "{out}");
             assert!(
-                out.contains("  f0[1/4] rows 0..3 dims [10, 12, 12] via sz3-lr (10 bytes)\n"),
+                out.contains(&format!(
+                    "  f0[1/4] rows 0..3 dims [10, 12, 12] via {canon} (10 bytes)\n"
+                )),
                 "{out}"
             );
             assert!(!out.contains("snapshot"), "legacy info must not mention snapshots");

@@ -54,8 +54,10 @@ pub struct CompressedChunk {
     pub rows: (usize, usize),
     /// Full field dims.
     pub field_dims: Vec<usize>,
-    /// Registry pipeline that compressed this chunk (fixed or adaptively
-    /// selected); recorded in the container index for per-chunk dispatch.
+    /// Pipeline that compressed this chunk (fixed or adaptively selected),
+    /// as its canonical spec string — recorded in the container index for
+    /// per-chunk dispatch through [`pipeline::build`]. Legacy artifacts
+    /// carry registry aliases here instead, which `build` also resolves.
     pub pipeline: String,
     /// The compressed stream.
     pub stream: Vec<u8>,
@@ -179,7 +181,8 @@ pub fn slice_rows(field: &Field, rows: (usize, usize)) -> Result<Field> {
 
 /// The streaming compression coordinator.
 pub struct Coordinator {
-    /// Pipeline registry name (the fixed pipeline when no selector is set).
+    /// Configured pipeline — a registry alias or raw spec (the fixed
+    /// pipeline when no selector is set).
     pub pipeline: String,
     /// Per-chunk compression configuration.
     pub conf: CompressConf,
@@ -198,11 +201,13 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Coordinator from a job config (registry pipelines).
+    /// Coordinator from a job config. `cfg.pipeline` and `cfg.candidates`
+    /// may be registry aliases or raw pipeline specs — anything
+    /// [`pipeline::build`] accepts.
     pub fn from_config(cfg: &crate::config::JobConfig) -> Result<Self> {
         let name = cfg.pipeline.clone();
-        pipeline::by_name(&name)
-            .ok_or_else(|| SzError::config(format!("unknown pipeline '{name}'")))?;
+        pipeline::build(&name)
+            .map_err(|e| SzError::config(format!("pipeline '{name}': {e}")))?;
         let selector = if cfg.adaptive {
             let sel = if cfg.candidates.is_empty() {
                 AdaptiveChunkSelector::new()
@@ -220,7 +225,9 @@ impl Coordinator {
             workers: cfg.workers,
             chunk_elems: cfg.chunk_elems,
             queue_depth: cfg.queue_depth,
-            make_compressor: Arc::new(move || pipeline::by_name(&n2).expect("validated")),
+            make_compressor: Arc::new(move || {
+                pipeline::build(&n2).expect("validated at from_config")
+            }),
             selector,
         })
     }
@@ -272,9 +279,10 @@ impl Coordinator {
                             Some(sel) => {
                                 let name = sel.select(&chunk, &conf)?.pipeline;
                                 if !cache.contains_key(&name) {
-                                    let c = pipeline::by_name(&name).ok_or_else(|| {
+                                    let c = pipeline::build(&name).map_err(|e| {
                                         SzError::config(format!(
-                                            "selector chose unknown pipeline '{name}'"
+                                            "selector chose unbuildable pipeline \
+                                             '{name}': {e}"
                                         ))
                                     })?;
                                     cache.insert(name.clone(), c);
@@ -476,11 +484,13 @@ mod tests {
         let report = coord.run(input.clone(), |c| chunks.push(c)).unwrap();
         assert_eq!(report.fields, 3);
         assert_eq!(report.chunks, chunks.len());
-        assert_eq!(report.per_pipeline.get("sz3-lr"), Some(&chunks.len()));
+        // chunks record the alias's canonical spec, not the alias itself
+        let canon = pipeline::canonical("sz3-lr").unwrap();
+        assert_eq!(report.per_pipeline.get(&canon), Some(&chunks.len()));
         // in-order delivery
         for (i, c) in chunks.iter().enumerate() {
             assert_eq!(c.seq, i);
-            assert_eq!(c.pipeline, "sz3-lr");
+            assert_eq!(c.pipeline, canon);
         }
         // reassemble and verify bound per field
         let mut by_field: HashMap<String, Vec<CompressedChunk>> = HashMap::new();
@@ -531,6 +541,21 @@ mod tests {
     fn unknown_pipeline_rejected() {
         let cfg = crate::config::JobConfig { pipeline: "nope".into(), ..Default::default() };
         assert!(Coordinator::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn raw_spec_pipeline_through_config() {
+        // a composed spec that matches no registry alias flows through the
+        // coordinator and lands verbatim in every chunk's pipeline field
+        let spec = "block(lorenzo+regression)/linear/huffman/lzhuf";
+        let coord = coordinator(spec, 2);
+        let input = fields(1, 16);
+        let mut chunks: Vec<CompressedChunk> = Vec::new();
+        coord.run(input.clone(), |c| chunks.push(c)).unwrap();
+        assert!(!chunks.is_empty());
+        assert!(chunks.iter().all(|c| c.pipeline == spec), "{:?}", chunks[0].pipeline);
+        let rec = reassemble(&chunks).unwrap();
+        assert_eq!(rec.shape.dims(), input[0].shape.dims());
     }
 
     #[test]

@@ -36,11 +36,13 @@
 //! covered by the test suite):
 //! ```no_run
 //! use sz3::data::Field;
-//! use sz3::pipeline::{by_name, decompress_any, CompressConf, ErrorBound};
+//! use sz3::pipeline::{build, decompress_any, CompressConf, ErrorBound};
 //!
 //! let values: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.01).sin()).collect();
 //! let field = Field::f32("wave", &[64, 64], values).unwrap();
-//! let pipeline = by_name("sz3-lr").unwrap();
+//! // registry alias — or any composed spec, e.g.
+//! // build("block(lorenzo+regression)/linear/huffman/lzhuf")
+//! let pipeline = build("sz3-lr").unwrap();
 //! let conf = CompressConf::new(ErrorBound::Abs(1e-3));
 //! let stream = pipeline.compress(&field, &conf).unwrap();
 //! let restored = decompress_any(&stream).unwrap();

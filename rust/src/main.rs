@@ -26,7 +26,7 @@ sz3 — modular prediction-based error-bounded lossy compression (SZ3 reproducti
 
 USAGE:
   sz3 compress   --input raw.bin --dims 100,500,500 --dtype f32
-                 [--pipeline sz3-lr] [--abs EB | --rel EB | --pwrel EB]
+                 [--pipeline NAME|SPEC] [--abs EB | --rel EB | --pwrel EB]
                  [--radius N] [--container] [--adaptive]
                  [--candidates a,b,c] [--chunk-elems N] [--workers N]
                  --out file.sz3
@@ -43,11 +43,16 @@ USAGE:
   sz3 serve-http --dir artifacts/ [--addr 127.0.0.1:8080] [--threads N]
                  [--cache-mb MB] [--workers N] [--no-verify]
   sz3 datasets                              # Table 3 registry
-  sz3 pipelines                             # registry names
+  sz3 pipelines                             # aliases + stage catalog
   sz3 quant-hist [--field ff|ff] [--eb 1e-10] [--radius 64]   # Fig. 3
   sz3 version
 
 Raw input files are flat little-endian arrays of --dtype covering --dims.
+--pipeline takes a registry alias (sz3-lr, sz3-interp, ...) or a composed
+pipeline spec like 'block(lorenzo+regression)/linear@r512/huffman/lzhuf'
+(quote it — parentheses are shell syntax); `sz3 pipelines` lists every
+alias and stage, docs/PIPELINES.md specifies the grammar. --candidates
+accepts the same names/specs.
 --container packs coordinator chunks into one SZ3C artifact; --adaptive
 picks the best-fit pipeline per chunk (recorded in the chunk index).
 --series packs N timesteps of the same field (one raw file each, same
@@ -292,8 +297,11 @@ fn cmd_compress(a: &Args) -> CliResult {
         (artifact, label)
     } else {
         let conf = CompressConf::with_radius(bound, a.get_or("radius", 32768u32)?);
-        let c = pipeline::by_name(pipeline_name).ok_or_else(|| {
-            err(format!("unknown pipeline '{pipeline_name}' (see `sz3 pipelines`)"))
+        let c = pipeline::build(pipeline_name).map_err(|e| {
+            err(format!(
+                "pipeline '{pipeline_name}': {e} (see `sz3 pipelines` or \
+                 docs/PIPELINES.md)"
+            ))
         })?;
         (c.compress(&field, &conf)?, pipeline_name.to_string())
     };
@@ -505,12 +513,14 @@ fn cmd_serve(a: &Args) -> CliResult {
     }
     let mut coord = Coordinator::from_config(&cfg)?;
     // PJRT-backed analysis when requested: in adaptive mode the worker pool
-    // dispatches per chunk through the registry (make_compressor is
-    // bypassed), so PJRT backs the *selector's* block analysis instead of
-    // the fixed pipeline's — the log says which.
-    if cfg.use_pjrt
-        && (cfg.adaptive || cfg.pipeline == "sz3-lr" || cfg.pipeline == "sz3-lr-s")
-    {
+    // builds pipelines per chunk (make_compressor is bypassed), so PJRT
+    // backs the *selector's* block analysis instead of the fixed
+    // pipeline's — the log says which. The fixed path engages for any
+    // block-family spec (sz3-lr/sz3-lr-s aliases included).
+    let block_spec = pipeline::spec::resolve(&cfg.pipeline)
+        .ok()
+        .filter(|s| s.block_compressor().is_some());
+    if cfg.use_pjrt && (cfg.adaptive || block_spec.is_some()) {
         let dir = PjrtEngine::default_dir();
         if PjrtEngine::available(&dir) {
             let service = PjrtService::start(&dir)?;
@@ -534,15 +544,12 @@ fn cmd_serve(a: &Args) -> CliResult {
                     "using PJRT analysis engine ({}, dims {:?})",
                     service.platform, service.dims
                 );
-                let specialized = cfg.pipeline == "sz3-lr-s";
+                let spec = block_spec.clone().expect("gated on a block-family spec");
                 coord.make_compressor = Arc::new(move || {
-                    let base = if specialized {
-                        pipeline::BlockCompressor::sz3_lr_s()
-                    } else {
-                        pipeline::BlockCompressor::sz3_lr()
-                    };
                     Box::new(
-                        base.with_analyzer(Arc::new(PjrtAnalyzer::new(service.clone()))),
+                        spec.block_compressor()
+                            .expect("block family")
+                            .with_analyzer(Arc::new(PjrtAnalyzer::new(service.clone()))),
                     )
                 });
             }
@@ -661,20 +668,35 @@ fn cmd_datasets() -> CliResult {
 }
 
 fn cmd_pipelines() -> CliResult {
-    for name in [
-        "sz3-lr",
-        "sz3-lr-s",
-        "sz3-interp",
-        "sz3-truncation",
-        "sz3-pastri",
-        "sz-pastri",
-        "sz-pastri-zstd",
-        "sz3-aps",
-        "lorenzo-1d",
-        "fpzip-like",
-    ] {
-        println!("{name}");
+    println!("aliases (each resolves to a canonical pipeline spec):");
+    for (alias, canon) in sz3::pipeline::spec::ALIASES {
+        println!("  {alias:<16} {canon}");
     }
+    println!();
+    println!(
+        "stage catalog — compose any spec as \
+         [preprocessor/]predictor/quantizer/encoder/lossless:"
+    );
+    let mut kind = "";
+    for info in sz3::pipeline::spec::catalog() {
+        if info.kind != kind {
+            kind = info.kind;
+            println!("  {kind}:");
+        }
+        if info.params.is_empty() {
+            println!("    {:<28} {}", info.token, info.summary);
+        } else {
+            println!("    {:<28} {}  [{}]", info.token, info.summary, info.params);
+        }
+    }
+    println!();
+    println!("examples:");
+    println!(
+        "  sz3 compress ... --pipeline \
+         'block(lorenzo+regression)/linear@r512/huffman/lzhuf'"
+    );
+    println!("  sz3 compress ... --pwrel 1e-3 --pipeline 'log/lorenzo/linear/arithmetic/bypass'");
+    println!("grammar and composition recipes: docs/PIPELINES.md");
     Ok(())
 }
 

@@ -22,13 +22,16 @@ use crate::preprocessor::{Preprocessor, Transpose};
 
 /// Adaptive APS compressor.
 pub struct ApsCompressor {
+    /// Stream-header identity (canonical spec for spec-built instances,
+    /// the legacy `sz3-aps` for [`Default`]).
+    pub name: String,
     /// Error-bound threshold that flips the pipeline (paper: 0.5).
     pub switch_eb: f64,
 }
 
 impl Default for ApsCompressor {
     fn default() -> Self {
-        ApsCompressor { switch_eb: 0.5 }
+        ApsCompressor { name: "sz3-aps".to_string(), switch_eb: 0.5 }
     }
 }
 
@@ -52,14 +55,14 @@ fn time_series_pipeline() -> SzCompressor {
 }
 
 impl Compressor for ApsCompressor {
-    fn name(&self) -> &'static str {
-        "sz3-aps"
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {
         let eb = conf.bound.to_abs(field)?;
         let mut w = ByteWriter::new();
-        StreamHeader::for_field(self.name(), field).write(&mut w);
+        StreamHeader::for_field(&self.name, field).write(&mut w);
         if eb < self.switch_eb && field.shape.ndim() >= 2 {
             // near-lossless regime: transpose time-last + 1-D Lorenzo
             w.put_u8(1);

@@ -11,7 +11,7 @@ use super::{CompressConf, Compressor, StreamHeader};
 use crate::bitio::{BitReader, BitWriter};
 use crate::byteio::{ByteReader, ByteWriter};
 use crate::data::{Field, FieldValues, NdCursor, Scalar, Shape};
-use crate::encoder::{Encoder, HuffmanEncoder};
+use crate::encoder::{self, Encoder};
 use crate::error::{Result, SzError};
 use crate::lossless::{self};
 use crate::predictor::{CompositeChoice, LorenzoPredictor, Predictor, RegressionFit};
@@ -30,33 +30,42 @@ pub fn block_side(ndim: usize) -> usize {
 
 /// SZ2-style blockwise Lorenzo⊕regression compressor.
 pub struct BlockCompressor {
-    name: &'static str,
+    /// Stream-header identity (canonical spec for spec-built instances,
+    /// legacy registry name for the historical constructors).
+    pub name: String,
     /// Batched analysis backend (native or PJRT).
     pub analyzer: Arc<dyn BlockAnalyzer>,
+    /// Encoder stage name for the quantization indices.
+    pub encoder: String,
     /// Lossless backend name.
-    pub lossless: &'static str,
+    pub lossless: String,
     /// Skip the Lorenzo decompression-noise correction (SZ3-APS mode).
     pub assume_noiseless: bool,
     /// Use the dimension-specialized prediction codecs (SZ3-LR-s, §6.2)
     /// instead of the generic multidimensional iterator.
     pub specialized: bool,
+    /// Quantizer index-radius override (`None` = use the configured
+    /// [`CompressConf::radius`]); set by `linear@rN` specs.
+    pub radius: Option<u32>,
 }
 
 impl BlockCompressor {
     /// SZ3-LR: iterator-based predictor module (paper §6.2).
     pub fn sz3_lr() -> Self {
         BlockCompressor {
-            name: "sz3-lr",
+            name: "sz3-lr".to_string(),
             analyzer: Arc::new(NativeAnalyzer),
-            lossless: "zstd",
+            encoder: "huffman".to_string(),
+            lossless: "zstd".to_string(),
             assume_noiseless: false,
             specialized: false,
+            radius: None,
         }
     }
 
     /// SZ3-LR-s: same logic, dimension-specialized codecs (paper §6.2).
     pub fn sz3_lr_s() -> Self {
-        BlockCompressor { name: "sz3-lr-s", specialized: true, ..Self::sz3_lr() }
+        BlockCompressor { name: "sz3-lr-s".to_string(), specialized: true, ..Self::sz3_lr() }
     }
 
     /// Replace the analysis backend (e.g. with the PJRT engine).
@@ -203,15 +212,17 @@ impl BlockCompressor {
         }
 
         // ---- Serialize ----
-        let ll = lossless::by_name(self.lossless)
+        let ll = lossless::by_name(&self.lossless)
             .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
+        let enc = encoder::by_name(&self.encoder, radius)
+            .ok_or_else(|| SzError::config(format!("unknown encoder {}", self.encoder)))?;
         let mut inner = ByteWriter::new();
         inner.put_varint(total_blocks as u64);
         inner.put_block(&selections.finish());
         inner.put_varint(coeff_ints.len() as u64);
         RegressionFit::save_quantized(&coeff_ints, &mut inner);
         quantizer.save(&mut inner)?;
-        HuffmanEncoder::new().encode(&indices, &mut inner)?;
+        enc.encode(&indices, &mut inner)?;
         let packed = ll.compress(&inner.finish())?;
         w.put_block(&packed);
         Ok(())
@@ -229,8 +240,10 @@ impl BlockCompressor {
         let nblocks_per_dim: Vec<usize> = dims.iter().map(|&d| d.div_ceil(side)).collect();
         let total_blocks: usize = nblocks_per_dim.iter().product();
 
-        let ll = lossless::by_name(self.lossless)
+        let ll = lossless::by_name(&self.lossless)
             .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
+        let enc = encoder::by_name(&self.encoder, radius)
+            .ok_or_else(|| SzError::config(format!("unknown encoder {}", self.encoder)))?;
         let inner = ll.decompress(r.get_block()?)?;
         let mut ir = ByteReader::new(&inner);
         let stored_blocks = ir.get_varint()? as usize;
@@ -243,7 +256,7 @@ impl BlockCompressor {
         let mut quantizer = LinearQuantizer::<T>::with_radius(1.0, radius);
         quantizer.load(&mut ir)?;
         let eb = quantizer.eb();
-        let indices = HuffmanEncoder::new().decode(&mut ir, shape.len())?;
+        let indices = enc.decode(&mut ir, shape.len())?;
 
         let lorenzo = LorenzoPredictor::new(nd);
         let mut values = vec![T::zero(); shape.len()];
@@ -373,27 +386,28 @@ fn extract_block<T: Scalar>(
 }
 
 impl Compressor for BlockCompressor {
-    fn name(&self) -> &'static str {
-        self.name
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {
         let eb = conf.bound.to_abs(field)?;
+        let radius = self.radius.unwrap_or(conf.radius);
         let mut w = ByteWriter::new();
-        StreamHeader::for_field(self.name, field).write(&mut w);
-        w.put_u32(conf.radius);
+        StreamHeader::for_field(&self.name, field).write(&mut w);
+        w.put_u32(radius);
         match &field.values {
             FieldValues::F32(v) => {
                 let mut buf = v.clone();
-                self.compress_typed::<f32>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+                self.compress_typed::<f32>(&mut buf, &field.shape, eb, radius, &mut w)?
             }
             FieldValues::F64(v) => {
                 let mut buf = v.clone();
-                self.compress_typed::<f64>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+                self.compress_typed::<f64>(&mut buf, &field.shape, eb, radius, &mut w)?
             }
             FieldValues::I32(v) => {
                 let mut buf = v.clone();
-                self.compress_typed::<i32>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+                self.compress_typed::<i32>(&mut buf, &field.shape, eb, radius, &mut w)?
             }
         }
         Ok(w.finish())

@@ -10,7 +10,7 @@
 use super::{CompressConf, Compressor, StreamHeader};
 use crate::byteio::{ByteReader, ByteWriter};
 use crate::data::{Field, FieldValues, Scalar, Shape};
-use crate::encoder::{Encoder, HuffmanEncoder};
+use crate::encoder::{self, Encoder};
 use crate::error::{Result, SzError};
 use crate::lossless;
 use crate::quantizer::{LinearQuantizer, Quantizer};
@@ -26,15 +26,29 @@ pub enum InterpMode {
 
 /// Level-by-level interpolation compressor.
 pub struct InterpCompressor {
+    /// Stream-header identity (canonical spec for spec-built instances,
+    /// the legacy `sz3-interp` for [`Default`]).
+    pub name: String,
     /// Interpolation basis (cubic by default, as in [17]).
     pub mode: InterpMode,
+    /// Encoder stage name for the quantization indices.
+    pub encoder: String,
     /// Lossless backend name.
-    pub lossless: &'static str,
+    pub lossless: String,
+    /// Quantizer index-radius override (`None` = use the configured
+    /// [`CompressConf::radius`]); set by `linear@rN` specs.
+    pub radius: Option<u32>,
 }
 
 impl Default for InterpCompressor {
     fn default() -> Self {
-        InterpCompressor { mode: InterpMode::Cubic, lossless: "zstd" }
+        InterpCompressor {
+            name: "sz3-interp".to_string(),
+            mode: InterpMode::Cubic,
+            encoder: "huffman".to_string(),
+            lossless: "zstd".to_string(),
+            radius: None,
+        }
     }
 }
 
@@ -158,15 +172,17 @@ impl InterpCompressor {
             unsafe { *buf_ptr.add(flat) = rec };
         });
         debug_assert_eq!(indices.len(), shape.len());
-        let ll = lossless::by_name(self.lossless)
+        let ll = lossless::by_name(&self.lossless)
             .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
+        let enc = encoder::by_name(&self.encoder, radius)
+            .ok_or_else(|| SzError::config(format!("unknown encoder {}", self.encoder)))?;
         let mut inner = ByteWriter::new();
         inner.put_u8(match self.mode {
             InterpMode::Linear => 0,
             InterpMode::Cubic => 1,
         });
         quantizer.save(&mut inner)?;
-        HuffmanEncoder::new().encode(&indices, &mut inner)?;
+        enc.encode(&indices, &mut inner)?;
         w.put_block(&ll.compress(&inner.finish())?);
         Ok(())
     }
@@ -177,8 +193,10 @@ impl InterpCompressor {
         radius: u32,
         r: &mut ByteReader,
     ) -> Result<Vec<T>> {
-        let ll = lossless::by_name(self.lossless)
+        let ll = lossless::by_name(&self.lossless)
             .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
+        let enc = encoder::by_name(&self.encoder, radius)
+            .ok_or_else(|| SzError::config(format!("unknown encoder {}", self.encoder)))?;
         let inner = ll.decompress(r.get_block()?)?;
         let mut ir = ByteReader::new(&inner);
         let mode = match ir.get_u8()? {
@@ -188,7 +206,7 @@ impl InterpCompressor {
         };
         let mut quantizer = LinearQuantizer::<T>::with_radius(1.0, radius);
         quantizer.load(&mut ir)?;
-        let indices = HuffmanEncoder::new().decode(&mut ir, shape.len())?;
+        let indices = enc.decode(&mut ir, shape.len())?;
         let mut values = vec![T::zero(); shape.len()];
         let dims = shape.dims().to_vec();
         let strides = shape.strides().to_vec();
@@ -209,27 +227,28 @@ impl InterpCompressor {
 }
 
 impl Compressor for InterpCompressor {
-    fn name(&self) -> &'static str {
-        "sz3-interp"
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {
         let eb = conf.bound.to_abs(field)?;
+        let radius = self.radius.unwrap_or(conf.radius);
         let mut w = ByteWriter::new();
-        StreamHeader::for_field(self.name(), field).write(&mut w);
-        w.put_u32(conf.radius);
+        StreamHeader::for_field(&self.name, field).write(&mut w);
+        w.put_u32(radius);
         match &field.values {
             FieldValues::F32(v) => {
                 let mut buf = v.clone();
-                self.compress_typed::<f32>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+                self.compress_typed::<f32>(&mut buf, &field.shape, eb, radius, &mut w)?
             }
             FieldValues::F64(v) => {
                 let mut buf = v.clone();
-                self.compress_typed::<f64>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+                self.compress_typed::<f64>(&mut buf, &field.shape, eb, radius, &mut w)?
             }
             FieldValues::I32(v) => {
                 let mut buf = v.clone();
-                self.compress_typed::<i32>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+                self.compress_typed::<i32>(&mut buf, &field.shape, eb, radius, &mut w)?
             }
         }
         Ok(w.finish())
@@ -293,7 +312,7 @@ mod tests {
         let dims = [50usize, 40];
         let data = prop::smooth_field(&mut rng, &dims);
         let f = Field::f32("lin", &dims, data).unwrap();
-        let c = InterpCompressor { mode: InterpMode::Linear, lossless: "zstd" };
+        let c = InterpCompressor { mode: InterpMode::Linear, ..Default::default() };
         let conf = CompressConf::new(ErrorBound::Abs(1e-3));
         roundtrip_bound_check(&c, &f, &conf);
     }

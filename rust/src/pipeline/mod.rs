@@ -8,8 +8,15 @@
 //! [`pastri::PastriCompressor`] is SZ-Pastri/SZ3-Pastri (§4);
 //! [`aps::ApsCompressor`] is the adaptive APS pipeline (§5).
 //!
-//! Every compressed stream begins with a common header (pipeline name,
-//! dtype, shape), so [`decompress_any`] can dispatch to the right pipeline.
+//! Every compressed stream begins with a common header (the pipeline's
+//! canonical spec, dtype, shape), so [`decompress_any`] reconstructs the
+//! exact stage stack from the stream alone.
+//!
+//! Pipelines are constructed from declarative **specs** (module [`spec`],
+//! grammar in `docs/PIPELINES.md`): [`build`] accepts either a composition
+//! like `block(lorenzo+regression)/linear/huffman/lzhuf` or one of the
+//! historical registry aliases (`sz3-lr`, …), which resolve to canonical
+//! specs via [`spec::ALIASES`].
 
 pub mod analysis;
 pub mod aps;
@@ -18,6 +25,7 @@ mod block_fast;
 pub mod interp;
 pub mod pastri;
 pub mod point;
+pub mod spec;
 pub mod truncation;
 
 pub use analysis::{BlockAnalyzer, NativeAnalyzer};
@@ -26,6 +34,7 @@ pub use block::BlockCompressor;
 pub use interp::InterpCompressor;
 pub use pastri::PastriCompressor;
 pub use point::SzCompressor;
+pub use spec::{canonical, PipelineBuilder, PipelineSpec};
 pub use truncation::TruncationCompressor;
 
 use crate::byteio::{ByteReader, ByteWriter};
@@ -113,8 +122,10 @@ impl CompressConf {
 /// `SZ_Compressor<T, N, Preprocessor, Predictor, Quantizer, Encoder,
 /// Lossless>` — Appendix A.6).
 pub trait Compressor: Send + Sync {
-    /// Pipeline name (stored in the stream header).
-    fn name(&self) -> &'static str;
+    /// Pipeline identity stored in the stream header — the canonical spec
+    /// for spec-built pipelines ([`build`]), a legacy registry name for
+    /// directly-constructed ones.
+    fn name(&self) -> &str;
     /// Compress `field` under `conf`.
     fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>>;
     /// Decompress a stream produced by this pipeline.
@@ -224,31 +235,36 @@ pub fn peek_header(stream: &[u8]) -> Result<StreamHeader> {
     StreamHeader::read(&mut ByteReader::new(stream))
 }
 
+/// Construct a pipeline from a spec string or registry alias — the
+/// primary construction path. Accepts compositions like
+/// `block(lorenzo+regression)/linear@r512/huffman/lzhuf` (grammar in
+/// [`spec`] / `docs/PIPELINES.md`) and the historical aliases (`sz3-lr`,
+/// `sz3-interp`, …), which resolve through [`spec::ALIASES`] to canonical
+/// specs, so an alias and its canonical spec build bit-identical
+/// compressors.
+pub fn build(name_or_spec: &str) -> Result<Box<dyn Compressor>> {
+    spec::resolve(name_or_spec)?.build()
+}
+
 /// Construct a pipeline by registry name with default modules.
 ///
 /// Known names: `sz3-lr`, `sz3-lr-s`, `sz3-interp`, `sz3-truncation`,
 /// `sz3-pastri`, `sz-pastri`, `sz-pastri-zstd`, `sz3-aps`, `lorenzo-1d`,
 /// `fpzip-like`.
+#[deprecated(
+    note = "use pipeline::build, which accepts both registry aliases and \
+            composable pipeline specs"
+)]
 pub fn by_name(name: &str) -> Option<Box<dyn Compressor>> {
-    match name {
-        "sz3-lr" => Some(Box::new(BlockCompressor::sz3_lr())),
-        "sz3-lr-s" => Some(Box::new(BlockCompressor::sz3_lr_s())),
-        "sz3-interp" => Some(Box::new(InterpCompressor::default())),
-        "sz3-truncation" => Some(Box::new(TruncationCompressor::default())),
-        "sz3-pastri" => Some(Box::new(PastriCompressor::sz3())),
-        "sz-pastri" => Some(Box::new(PastriCompressor::sz())),
-        "sz-pastri-zstd" => Some(Box::new(PastriCompressor::sz_with_zstd())),
-        "sz3-aps" => Some(Box::new(ApsCompressor::default())),
-        "lorenzo-1d" => Some(Box::new(SzCompressor::lorenzo_1d())),
-        "fpzip-like" => Some(Box::new(SzCompressor::fpzip_like())),
-        _ => None,
-    }
+    build(name).ok()
 }
 
 /// Decompress any artifact by dispatching on its magic: chunked containers
 /// (`SZ3C`, see [`crate::container`]) holding a single field decompress in
-/// parallel and reassemble; single streams (`SZ3R`) dispatch on the
-/// header's pipeline name. Multi-field containers must go through
+/// parallel and reassemble; single streams (`SZ3R`) rebuild their stage
+/// stack from the header's pipeline spec (registry aliases written by
+/// older releases keep resolving via [`spec::ALIASES`]). Multi-field
+/// containers must go through
 /// [`crate::container::decompress_container`], which returns all fields.
 pub fn decompress_any(stream: &[u8]) -> Result<Field> {
     if crate::container::is_container(stream) {
@@ -260,8 +276,8 @@ pub fn decompress_any(stream: &[u8]) -> Result<Field> {
         );
     }
     let header = peek_header(stream)?;
-    let pipeline = by_name(&header.pipeline).ok_or_else(|| {
-        SzError::corrupt(format!("unknown pipeline '{}' in stream", header.pipeline))
+    let pipeline = build(&header.pipeline).map_err(|e| {
+        spec::unknown_pipeline_error("stream header", &header.pipeline, &e)
     })?;
     pipeline.decompress(stream)
 }
@@ -375,7 +391,7 @@ mod tests {
         // pick_keep falls back to keeping every byte
         let f = Field::f32("flat", &[64], vec![1e9; 64]).unwrap();
         let conf = CompressConf::new(ErrorBound::Rel(1e-3));
-        let c = by_name("sz3-truncation").unwrap();
+        let c = build("sz3-truncation").unwrap();
         let out = decompress_any(&c.compress(&f, &conf).unwrap()).unwrap();
         assert_eq!(out.values, f.values);
     }
@@ -386,11 +402,56 @@ mod tests {
             let f = Field::f32("flat", &[16, 16], vec![42.5; 256]).unwrap();
             let conf = CompressConf::new(ErrorBound::Rel(1e-3));
             let ratio = test_support::roundtrip_bound_check(
-                by_name(name).unwrap().as_ref(),
+                build(name).unwrap().as_ref(),
                 &f,
                 &conf,
             );
             assert!(ratio > 4.0, "{name}: constant field should compress hard, got {ratio}");
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_by_name_is_a_thin_build_wrapper() {
+        assert!(by_name("sz3-lr").is_some());
+        assert!(by_name("block(lorenzo+regression)/linear/huffman/zstd").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn unknown_pipeline_error_names_nearest_alias() {
+        // a stream whose header names a misspelled pipeline must surface
+        // both the name and the nearest registry alias as a recovery hint
+        let f = Field::f32("x", &[32], (0..32).map(|i| i as f32).collect()).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+        let stream = BlockCompressor::sz3_lr().compress(&f, &conf).unwrap();
+        let mut r = ByteReader::new(&stream);
+        let mut h = StreamHeader::read(&mut r).unwrap();
+        let body = stream[r.pos()..].to_vec();
+        h.pipeline = "sz3-lrr".to_string();
+        let mut w = ByteWriter::new();
+        h.write(&mut w);
+        w.put_bytes(&body);
+        let err = decompress_any(&w.finish()).unwrap_err().to_string();
+        assert!(err.contains("sz3-lrr"), "error must name the bad pipeline: {err}");
+        assert!(err.contains("'sz3-lr'"), "error must hint the nearest alias: {err}");
+    }
+
+    #[test]
+    fn legacy_alias_headers_keep_decoding() {
+        // directly-constructed pipelines still write their legacy registry
+        // names (exactly what pre-spec releases produced); decompress_any
+        // must keep routing them via the alias fallback
+        let f = Field::f32("x", &[16, 16], vec![1.5; 256]).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+        for (stream, legacy) in [
+            (BlockCompressor::sz3_lr().compress(&f, &conf).unwrap(), "sz3-lr"),
+            (InterpCompressor::default().compress(&f, &conf).unwrap(), "sz3-interp"),
+            (SzCompressor::lorenzo_1d().compress(&f, &conf).unwrap(), "lorenzo-1d"),
+        ] {
+            assert_eq!(peek_header(&stream).unwrap().pipeline, legacy);
+            let out = decompress_any(&stream).unwrap();
+            assert_eq!(out.shape.dims(), f.shape.dims(), "{legacy}");
         }
     }
 

@@ -29,11 +29,13 @@ const REPS_PER_BLOCK: usize = 16;
 
 /// PaSTRI-family compressor.
 pub struct PastriCompressor {
-    name: &'static str,
+    /// Stream-header identity (canonical spec for spec-built instances,
+    /// legacy registry names for the historical constructors).
+    pub name: String,
     /// Bitplane (true) vs value-major (false) unpredictable storage.
     pub bitplane_unpred: bool,
     /// Lossless backend name.
-    pub lossless: &'static str,
+    pub lossless: String,
     /// Fixed pattern period; `None` = detect by autocorrelation scan
     /// (the SZ-Pastri preprocessing step, paper §3.2).
     pub period: Option<usize>,
@@ -43,24 +45,28 @@ impl PastriCompressor {
     /// Original SZ-Pastri: truncation-layout unpredictables, no lossless.
     pub fn sz() -> Self {
         PastriCompressor {
-            name: "sz-pastri",
+            name: "sz-pastri".to_string(),
             bitplane_unpred: false,
-            lossless: "bypass",
+            lossless: "bypass".to_string(),
             period: None,
         }
     }
 
     /// SZ-Pastri with a zstd stage appended (Table 1 middle rows).
     pub fn sz_with_zstd() -> Self {
-        PastriCompressor { name: "sz-pastri-zstd", lossless: "zstd", ..Self::sz() }
+        PastriCompressor {
+            name: "sz-pastri-zstd".to_string(),
+            lossless: "zstd".to_string(),
+            ..Self::sz()
+        }
     }
 
     /// SZ3-Pastri: unpred-aware quantizer + lossless stage (paper §4.2).
     pub fn sz3() -> Self {
         PastriCompressor {
-            name: "sz3-pastri",
+            name: "sz3-pastri".to_string(),
             bitplane_unpred: true,
-            lossless: "zstd",
+            lossless: "zstd".to_string(),
             period: None,
         }
     }
@@ -143,7 +149,7 @@ impl PastriCompressor {
     ) -> Result<(Vec<u8>, [Vec<u32>; 3])> {
         let eb = conf.bound.to_abs(field)?;
         let mut w = ByteWriter::new();
-        StreamHeader::for_field(self.name, field).write(&mut w);
+        StreamHeader::for_field(&self.name, field).write(&mut w);
         let streams = match &field.values {
             FieldValues::F32(v) => {
                 self.compress_typed::<f32>(v, eb, conf.radius, &mut w)?
@@ -350,9 +356,9 @@ impl PastriCompressor {
         enc.encode(&data_idx, &mut inner)?;
         enc.encode(&pat_idx, &mut inner)?;
         enc.encode(&scale_idx, &mut inner)?;
-        let ll = lossless::by_name(self.lossless)
+        let ll = lossless::by_name(&self.lossless)
             .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
-        w.put_str(self.lossless);
+        w.put_str(&self.lossless);
         w.put_block(&ll.compress(&inner.finish())?);
         Ok([data_idx, pat_idx, scale_idx])
     }
@@ -426,8 +432,8 @@ impl PastriCompressor {
 }
 
 impl Compressor for PastriCompressor {
-    fn name(&self) -> &'static str {
-        self.name
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {

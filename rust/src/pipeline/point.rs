@@ -95,6 +95,9 @@ pub enum PreprocessorKind {
     Identity,
     /// Reshape to 1-D.
     Linearize,
+    /// Pointwise-relative → absolute bounds via `ln|x|` (spec prefix
+    /// `log/`).
+    Log,
 }
 
 impl PreprocessorKind {
@@ -102,6 +105,9 @@ impl PreprocessorKind {
         match self {
             PreprocessorKind::Identity => Box::new(Identity),
             PreprocessorKind::Linearize => Box::new(Linearize),
+            PreprocessorKind::Log => {
+                Box::new(crate::preprocessor::LogTransform::default())
+            }
         }
     }
 
@@ -109,6 +115,7 @@ impl PreprocessorKind {
         match self {
             PreprocessorKind::Identity => 0,
             PreprocessorKind::Linearize => 1,
+            PreprocessorKind::Log => 2,
         }
     }
 
@@ -116,6 +123,7 @@ impl PreprocessorKind {
         match t {
             0 => Ok(PreprocessorKind::Identity),
             1 => Ok(PreprocessorKind::Linearize),
+            2 => Ok(PreprocessorKind::Log),
             _ => Err(SzError::corrupt("unknown preprocessor tag")),
         }
     }
@@ -123,7 +131,9 @@ impl PreprocessorKind {
 
 /// Composed point-by-point pipeline (Algorithm 1).
 pub struct SzCompressor {
-    name: &'static str,
+    /// Stream-header identity (canonical spec for spec-built instances,
+    /// legacy registry name for the historical constructors).
+    pub name: String,
     /// Preprocessor stage.
     pub preprocessor: PreprocessorKind,
     /// Predictor stage.
@@ -131,22 +141,33 @@ pub struct SzCompressor {
     /// Quantizer stage.
     pub quantizer: QuantizerKind,
     /// Encoder stage (by name: "huffman", "fixed_huffman", "arithmetic", "raw").
-    pub encoder: &'static str,
+    pub encoder: String,
     /// Lossless stage (by name: "zstd", "gzip", "lzhuf", "rle", "bypass").
-    pub lossless: &'static str,
+    pub lossless: String,
+    /// Quantizer index-radius override (`None` = use the configured
+    /// [`CompressConf::radius`]); set by `linear@rN` specs.
+    pub radius: Option<u32>,
 }
 
 impl SzCompressor {
     /// Fully custom composition.
     pub fn custom(
-        name: &'static str,
+        name: impl Into<String>,
         preprocessor: PreprocessorKind,
         predictor: PredictorKind,
         quantizer: QuantizerKind,
-        encoder: &'static str,
-        lossless: &'static str,
+        encoder: impl Into<String>,
+        lossless: impl Into<String>,
     ) -> Self {
-        SzCompressor { name, preprocessor, predictor, quantizer, encoder, lossless }
+        SzCompressor {
+            name: name.into(),
+            preprocessor,
+            predictor,
+            quantizer,
+            encoder: encoder.into(),
+            lossless: lossless.into(),
+            radius: None,
+        }
     }
 
     /// 1-D Lorenzo pipeline (linearized), SZ1.4-flavored.
@@ -184,9 +205,9 @@ impl SzCompressor {
     ) -> Result<()> {
         let predictor: Box<dyn Predictor<T>> = self.predictor.build(shape.ndim());
         let mut quantizer: Box<dyn Quantizer<T>> = self.quantizer.build(eb, radius);
-        let enc = encoder::by_name(self.encoder, radius)
+        let enc = encoder::by_name(&self.encoder, radius)
             .ok_or_else(|| SzError::config(format!("unknown encoder {}", self.encoder)))?;
-        let ll = lossless::by_name(self.lossless)
+        let ll = lossless::by_name(&self.lossless)
             .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
 
         let n = shape.len();
@@ -219,9 +240,9 @@ impl SzCompressor {
         radius: u32,
         r: &mut ByteReader,
     ) -> Result<Vec<T>> {
-        let ll = lossless::by_name(self.lossless)
+        let ll = lossless::by_name(&self.lossless)
             .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
-        let enc = encoder::by_name(self.encoder, radius)
+        let enc = encoder::by_name(&self.encoder, radius)
             .ok_or_else(|| SzError::config(format!("unknown encoder {}", self.encoder)))?;
         let inner = ll.decompress(r.get_block()?)?;
         let mut ir = ByteReader::new(&inner);
@@ -247,8 +268,8 @@ impl SzCompressor {
 }
 
 impl Compressor for SzCompressor {
-    fn name(&self) -> &'static str {
-        self.name
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {
@@ -257,25 +278,27 @@ impl Compressor for SzCompressor {
         let pre = self.preprocessor.build();
         let state = pre.process(&mut field, &mut conf)?;
         let eb = conf.bound.to_abs(&field)?;
+        let radius = self.radius.unwrap_or(conf.radius);
 
         let mut w = ByteWriter::new();
-        StreamHeader::for_field(self.name, &field).write(&mut w);
+        StreamHeader::for_field(&self.name, &field).write(&mut w);
         w.put_u8(self.preprocessor.tag());
         w.put_block(&state);
         w.put_u8(self.quantizer.tag());
-        w.put_u32(conf.radius);
+        w.put_u32(radius);
+        // `field` is already this function's private clone (the
+        // preprocessor mutated it), so quantization can write recovered
+        // values straight into it — no second full-array copy
+        let shape = field.shape.clone();
         match &mut field.values {
             FieldValues::F32(v) => {
-                let mut buf = v.clone();
-                self.compress_typed::<f32>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+                self.compress_typed::<f32>(v, &shape, eb, radius, &mut w)?
             }
             FieldValues::F64(v) => {
-                let mut buf = v.clone();
-                self.compress_typed::<f64>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+                self.compress_typed::<f64>(v, &shape, eb, radius, &mut w)?
             }
             FieldValues::I32(v) => {
-                let mut buf = v.clone();
-                self.compress_typed::<i32>(&mut buf, &field.shape, eb, conf.radius, &mut w)?
+                self.compress_typed::<i32>(v, &shape, eb, radius, &mut w)?
             }
         }
         Ok(w.finish())

@@ -1,0 +1,1568 @@
+//! Declarative pipeline-spec API (paper §3.3): parse, canonicalize, and
+//! build compression pipelines from a stage-composition grammar instead of
+//! a closed registry.
+//!
+//! A spec is a `/`-separated stage list with an optional preprocessor
+//! prefix:
+//!
+//! ```text
+//! [preprocessor/]predictor/quantizer/encoder/lossless
+//! ```
+//!
+//! e.g. `block(lorenzo+regression)/linear@r512/huffman/lzhuf` or
+//! `log/lorenzo/linear/arithmetic/bypass`. The predictor stage determines
+//! the pipeline *family* and with it which later stages apply:
+//!
+//! | predictor token | family | remaining stages |
+//! |---|---|---|
+//! | `lorenzo[@N]`, `zero` | point (Algorithm 1) | quantizer, encoder, lossless |
+//! | `block(lorenzo+regression)[@s]` | SZ2-style blockwise | `linear` quantizer, encoder, lossless |
+//! | `interp(cubic\|linear)` | level-by-level interpolation | `linear` quantizer, encoder, lossless |
+//! | `truncation[@kN]` | byte truncation (module bypass) | lossless |
+//! | `pastri(bitplane\|value)[@pN]` | GAMESS periodic patterns | `fixed_huffman` encoder, lossless |
+//! | `aps[@EB]` | adaptive APS meta-pipeline | (composes its own stages) |
+//!
+//! [`PipelineSpec::parse`] validates a spec, [`PipelineSpec::canonical`]
+//! renders the unique canonical string (parse → canonicalize → parse is a
+//! fixed point), and [`PipelineSpec::build`] constructs the composed
+//! [`Compressor`] whose stream headers carry the canonical spec — so any
+//! composed pipeline is self-describing and
+//! [`crate::pipeline::decompress_any`] reconstructs the exact stage stack
+//! from the header alone. The historical registry names survive as
+//! [`ALIASES`] that resolve to canonical specs ([`resolve`] accepts both),
+//! which is also how streams written by older releases keep decoding.
+//!
+//! The full grammar, stage catalog, and composition recipes live in
+//! `docs/PIPELINES.md`.
+
+use super::aps::ApsCompressor;
+use super::block::BlockCompressor;
+use super::interp::{InterpCompressor, InterpMode};
+use super::pastri::PastriCompressor;
+use super::point::{PredictorKind, PreprocessorKind, QuantizerKind, SzCompressor};
+use super::truncation::TruncationCompressor;
+use super::{CompressConf, Compressor, StreamHeader};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::Field;
+use crate::error::{Result, SzError};
+use crate::preprocessor::{Linearize, LogTransform, Preprocessor};
+
+/// Registry aliases: historical pipeline names and the canonical spec each
+/// resolves to. [`resolve`] consults this table first, so `sz3-lr` and its
+/// canonical spec build bit-identical compressors, and streams whose
+/// headers carry an alias (older artifacts) keep decoding.
+pub const ALIASES: &[(&str, &str)] = &[
+    ("sz3-lr", "block(lorenzo+regression)/linear/huffman/zstd"),
+    ("sz3-lr-s", "block(lorenzo+regression)@s/linear/huffman/zstd"),
+    ("sz3-interp", "interp(cubic)/linear/huffman/zstd"),
+    ("sz3-truncation", "truncation/bypass"),
+    ("sz3-pastri", "pastri(bitplane)/fixed_huffman/zstd"),
+    ("sz-pastri", "pastri(value)/fixed_huffman/bypass"),
+    ("sz-pastri-zstd", "pastri(value)/fixed_huffman/zstd"),
+    ("sz3-aps", "aps"),
+    ("lorenzo-1d", "linearize/lorenzo/linear/huffman/zstd"),
+    ("fpzip-like", "lorenzo/linear/arithmetic/bypass"),
+];
+
+/// Canonical spec for a registry alias, if `name` is one.
+pub fn alias_canonical(name: &str) -> Option<&'static str> {
+    ALIASES.iter().find(|(a, _)| *a == name).map(|(_, s)| *s)
+}
+
+/// The registry alias closest to `name` by edit distance — the recovery
+/// hint for unknown-pipeline errors.
+pub fn nearest_alias(name: &str) -> &'static str {
+    // cap the probe so an adversarially long header string cannot make the
+    // distance computation quadratic in the stream size (byte slice: a
+    // split UTF-8 char only perturbs the distance, never panics)
+    let bytes = name.as_bytes();
+    let probe = &bytes[..bytes.len().min(64)];
+    ALIASES
+        .iter()
+        .map(|(a, _)| (*a, edit_distance(probe, a.as_bytes())))
+        .min_by_key(|&(_, d)| d)
+        .map(|(a, _)| a)
+        .expect("alias table is non-empty")
+}
+
+/// Plain Levenshtein distance (byte granularity is fine for hints).
+fn edit_distance(a: &[u8], b: &[u8]) -> usize {
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Preprocessor stage of a spec (the optional leading token).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreSpec {
+    /// No preprocessing (canonical form omits the token).
+    Identity,
+    /// Reshape to 1-D (`linearize`).
+    Linearize,
+    /// Pointwise-relative → absolute bounds via `ln|x|` (`log`).
+    Log,
+}
+
+/// Predictor stage — determines the pipeline family.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PredSpec {
+    /// Point-family order-N Lorenzo (`lorenzo`, `lorenzo@2`).
+    Lorenzo(u32),
+    /// Point-family always-zero baseline (`zero`).
+    Zero,
+    /// SZ2-style blockwise Lorenzo⊕regression composite
+    /// (`block(lorenzo+regression)`, `@s` = dimension-specialized codecs).
+    Block {
+        /// Use the dimension-specialized prediction codecs (SZ3-LR-s).
+        specialized: bool,
+    },
+    /// Level-by-level interpolation (`interp(cubic)` / `interp(linear)`).
+    Interp(InterpMode),
+    /// Byte truncation (`truncation`, `truncation@k2` pins kept bytes).
+    Truncation {
+        /// Most-significant bytes to keep; `None` derives from the bound.
+        keep: Option<usize>,
+    },
+    /// PaSTRI periodic-pattern prediction (`pastri(bitplane|value)`,
+    /// `@pN` pins the pattern period instead of autocorrelation detection).
+    Pastri {
+        /// Bitplane-coded unpredictables (SZ3-Pastri) vs value-major.
+        bitplane: bool,
+        /// Fixed pattern period; `None` = detect.
+        period: Option<usize>,
+    },
+    /// Adaptive APS meta-pipeline (`aps`, `aps@0.75` sets the switch
+    /// error bound).
+    Aps {
+        /// Error-bound threshold that flips the inner pipeline.
+        switch_eb: f64,
+    },
+}
+
+/// Quantizer stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantSpec {
+    /// Linear-scaling quantizer; `@rN` overrides the configured radius.
+    Linear {
+        /// Index radius override (`None` = use [`CompressConf::radius`]).
+        radius: Option<u32>,
+    },
+    /// Geometric-then-linear binning (`logscale`).
+    LogScale,
+    /// Linear with bitplane-coded unpredictables (`unpred`, §4.2).
+    UnpredAware,
+}
+
+/// Encoder stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EncSpec {
+    /// Canonical per-stream Huffman (`huffman`).
+    Huffman,
+    /// Predefined-tree Huffman (`fixed_huffman`).
+    FixedHuffman,
+    /// Adaptive arithmetic coding (`arithmetic`).
+    Arithmetic,
+    /// Uncoded index passthrough (`raw`).
+    Raw,
+}
+
+impl EncSpec {
+    fn token(self) -> &'static str {
+        match self {
+            EncSpec::Huffman => "huffman",
+            EncSpec::FixedHuffman => "fixed_huffman",
+            EncSpec::Arithmetic => "arithmetic",
+            EncSpec::Raw => "raw",
+        }
+    }
+
+    fn parse(name: &str) -> Option<EncSpec> {
+        match name {
+            "huffman" => Some(EncSpec::Huffman),
+            "fixed_huffman" => Some(EncSpec::FixedHuffman),
+            "arithmetic" => Some(EncSpec::Arithmetic),
+            "raw" => Some(EncSpec::Raw),
+            _ => None,
+        }
+    }
+}
+
+/// Lossless stage tokens (canonical spellings).
+const LOSSLESS_TOKENS: &[&str] = &["zstd", "gzip", "lzhuf", "rle", "bypass"];
+
+fn canon_lossless(name: &str) -> Option<&'static str> {
+    match name {
+        "bypass" | "none" => Some("bypass"),
+        _ => LOSSLESS_TOKENS.iter().find(|&&t| t == name).copied(),
+    }
+}
+
+/// A parsed, validated pipeline spec. Construct via [`PipelineSpec::parse`]
+/// or [`PipelineBuilder`]; hand-built values are re-validated by
+/// [`PipelineSpec::build`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineSpec {
+    /// Optional preprocessor prefix.
+    pub pre: PreSpec,
+    /// Predictor stage (family determiner).
+    pub pred: PredSpec,
+    /// Quantizer stage (`None` for truncation/pastri/aps families).
+    pub quant: Option<QuantSpec>,
+    /// Encoder stage (`None` for truncation/aps families).
+    pub enc: Option<EncSpec>,
+    /// Lossless stage (`None` for the aps family).
+    pub lossless: Option<&'static str>,
+}
+
+/// One parsed stage token: `name`, optional `(arg+arg)` list, optional
+/// `@param` suffix.
+struct Token<'a> {
+    name: &'a str,
+    args: Vec<&'a str>,
+    param: Option<&'a str>,
+    raw: &'a str,
+}
+
+impl<'a> Token<'a> {
+    fn parse(raw: &'a str) -> Result<Token<'a>> {
+        let bad = |why: &str| {
+            SzError::config(format!("stage '{raw}': {why}"))
+        };
+        let (base, param) = if let Some(open) = raw.find('(') {
+            let close = raw.rfind(')').ok_or_else(|| bad("unclosed '('"))?;
+            if close < open {
+                return Err(bad("')' before '('"));
+            }
+            let after = &raw[close + 1..];
+            let param = if after.is_empty() {
+                None
+            } else if let Some(p) = after.strip_prefix('@') {
+                if p.is_empty() {
+                    return Err(bad("empty '@' parameter"));
+                }
+                Some(p)
+            } else {
+                return Err(bad("unexpected text after ')'"));
+            };
+            (&raw[..close + 1], param)
+        } else if let Some(at) = raw.find('@') {
+            let p = &raw[at + 1..];
+            if p.is_empty() {
+                return Err(bad("empty '@' parameter"));
+            }
+            (&raw[..at], Some(p))
+        } else {
+            (raw, None)
+        };
+        let (name, args) = if let Some(open) = base.find('(') {
+            let inner = &base[open + 1..base.len() - 1];
+            if inner.trim().is_empty() {
+                return Err(bad("empty argument list"));
+            }
+            let args: Vec<&str> = inner.split(['+', ',']).map(str::trim).collect();
+            if args.iter().any(|a| a.is_empty()) {
+                return Err(bad("empty argument"));
+            }
+            (&base[..open], args)
+        } else {
+            (base, Vec::new())
+        };
+        if name.is_empty() {
+            return Err(bad("missing stage name"));
+        }
+        Ok(Token { name, args, param, raw })
+    }
+
+    fn no_args(&self) -> Result<()> {
+        if self.args.is_empty() {
+            Ok(())
+        } else {
+            Err(SzError::config(format!(
+                "stage '{}': '{}' takes no argument list",
+                self.raw, self.name
+            )))
+        }
+    }
+
+    fn no_param(&self) -> Result<()> {
+        if self.param.is_none() {
+            Ok(())
+        } else {
+            Err(SzError::config(format!(
+                "stage '{}': '{}' takes no '@' parameter",
+                self.raw, self.name
+            )))
+        }
+    }
+}
+
+const PRE_NAMES: &[&str] = &["identity", "linearize", "log", "log_transform"];
+const PRED_NAMES: &[&str] =
+    &["lorenzo", "zero", "block", "interp", "truncation", "pastri", "aps"];
+
+fn parse_pre(t: &Token) -> Result<PreSpec> {
+    t.no_args()?;
+    t.no_param()?;
+    match t.name {
+        "identity" => Ok(PreSpec::Identity),
+        "linearize" => Ok(PreSpec::Linearize),
+        "log" | "log_transform" => Ok(PreSpec::Log),
+        _ => unreachable!("caller checked PRE_NAMES"),
+    }
+}
+
+fn parse_pred(t: &Token) -> Result<PredSpec> {
+    match t.name {
+        "lorenzo" => {
+            t.no_args()?;
+            let order = match t.param {
+                None => 1,
+                Some(p) => p
+                    .parse::<u32>()
+                    .ok()
+                    .filter(|o| (1..=3).contains(o))
+                    .ok_or_else(|| {
+                        SzError::config(format!(
+                            "stage '{}': lorenzo order must be 1..=3",
+                            t.raw
+                        ))
+                    })?,
+            };
+            Ok(PredSpec::Lorenzo(order))
+        }
+        "zero" => {
+            t.no_args()?;
+            t.no_param()?;
+            Ok(PredSpec::Zero)
+        }
+        "block" => {
+            if t.args != ["lorenzo", "regression"] {
+                return Err(SzError::config(format!(
+                    "stage '{}': the block composite is block(lorenzo+regression)",
+                    t.raw
+                )));
+            }
+            let specialized = match t.param {
+                None => false,
+                Some("s") => true,
+                Some(p) => {
+                    return Err(SzError::config(format!(
+                        "stage '{}': unknown block parameter '@{p}' (only '@s' \
+                         selects the dimension-specialized codecs)",
+                        t.raw
+                    )))
+                }
+            };
+            Ok(PredSpec::Block { specialized })
+        }
+        "interp" => {
+            t.no_param()?;
+            let mode = match t.args.as_slice() {
+                [] | ["cubic"] => InterpMode::Cubic,
+                ["linear"] => InterpMode::Linear,
+                _ => {
+                    return Err(SzError::config(format!(
+                        "stage '{}': interp basis is (cubic) or (linear)",
+                        t.raw
+                    )))
+                }
+            };
+            Ok(PredSpec::Interp(mode))
+        }
+        "truncation" => {
+            t.no_args()?;
+            let keep = match t.param {
+                None => None,
+                Some(p) => Some(
+                    p.strip_prefix('k')
+                        .and_then(|k| k.parse::<usize>().ok())
+                        .filter(|k| (1..=8).contains(k))
+                        .ok_or_else(|| {
+                            SzError::config(format!(
+                                "stage '{}': truncation keep-bytes is @k1..@k8",
+                                t.raw
+                            ))
+                        })?,
+                ),
+            };
+            Ok(PredSpec::Truncation { keep })
+        }
+        "pastri" => {
+            let bitplane = match t.args.as_slice() {
+                [] | ["bitplane"] => true,
+                ["value"] => false,
+                _ => {
+                    return Err(SzError::config(format!(
+                        "stage '{}': pastri unpredictable layout is (bitplane) \
+                         or (value)",
+                        t.raw
+                    )))
+                }
+            };
+            let period = match t.param {
+                None => None,
+                Some(p) => Some(
+                    p.strip_prefix('p')
+                        .and_then(|v| v.parse::<usize>().ok())
+                        .filter(|&v| v >= 1)
+                        .ok_or_else(|| {
+                            SzError::config(format!(
+                                "stage '{}': pastri period is @pN with N >= 1",
+                                t.raw
+                            ))
+                        })?,
+                ),
+            };
+            Ok(PredSpec::Pastri { bitplane, period })
+        }
+        "aps" => {
+            t.no_args()?;
+            let switch_eb = match t.param {
+                None => 0.5,
+                Some(p) => p
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|v| v.is_finite() && *v > 0.0)
+                    .ok_or_else(|| {
+                        SzError::config(format!(
+                            "stage '{}': aps switch bound must be a positive number",
+                            t.raw
+                        ))
+                    })?,
+            };
+            Ok(PredSpec::Aps { switch_eb })
+        }
+        other => Err(SzError::config(format!(
+            "unknown predictor stage '{other}' (known: {})",
+            PRED_NAMES.join(", ")
+        ))),
+    }
+}
+
+fn parse_quant(t: &Token) -> Result<QuantSpec> {
+    t.no_args()?;
+    match t.name {
+        "linear" => {
+            let radius = match t.param {
+                None => None,
+                Some(p) => Some(
+                    p.strip_prefix('r')
+                        .and_then(|r| r.parse::<u32>().ok())
+                        .filter(|&r| (1..=1 << 30).contains(&r))
+                        .ok_or_else(|| {
+                            SzError::config(format!(
+                                "stage '{}': linear radius is @rN with N in \
+                                 1..=2^30",
+                                t.raw
+                            ))
+                        })?,
+                ),
+            };
+            Ok(QuantSpec::Linear { radius })
+        }
+        "logscale" => {
+            t.no_param()?;
+            Ok(QuantSpec::LogScale)
+        }
+        "unpred" | "unpred_aware" => {
+            t.no_param()?;
+            Ok(QuantSpec::UnpredAware)
+        }
+        other => Err(SzError::config(format!(
+            "unknown quantizer stage '{other}' (known: linear, logscale, unpred)"
+        ))),
+    }
+}
+
+fn parse_enc(t: &Token) -> Result<EncSpec> {
+    t.no_args()?;
+    t.no_param()?;
+    EncSpec::parse(t.name).ok_or_else(|| {
+        SzError::config(format!(
+            "unknown encoder stage '{}' (known: huffman, fixed_huffman, \
+             arithmetic, raw)",
+            t.name
+        ))
+    })
+}
+
+fn parse_lossless(t: &Token) -> Result<&'static str> {
+    t.no_args()?;
+    t.no_param()?;
+    canon_lossless(t.name).ok_or_else(|| {
+        SzError::config(format!(
+            "unknown lossless stage '{}' (known: {})",
+            t.name,
+            LOSSLESS_TOKENS.join(", ")
+        ))
+    })
+}
+
+impl PipelineSpec {
+    /// Parse and validate a spec string. Aliases are *not* accepted here —
+    /// use [`resolve`] (or [`crate::pipeline::build`]) for strings that may
+    /// be either.
+    pub fn parse(s: &str) -> Result<PipelineSpec> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err(SzError::config("empty pipeline spec"));
+        }
+        let raw_toks: Vec<&str> = s.split('/').map(str::trim).collect();
+        if raw_toks.iter().any(|t| t.is_empty()) {
+            return Err(SzError::config(format!(
+                "pipeline spec '{s}' has an empty stage (doubled or trailing '/')"
+            )));
+        }
+        let toks: Vec<Token> =
+            raw_toks.iter().map(|t| Token::parse(t)).collect::<Result<_>>()?;
+        let mut i = 0;
+        let pre = if PRE_NAMES.contains(&toks[0].name) {
+            i = 1;
+            parse_pre(&toks[0])?
+        } else {
+            PreSpec::Identity
+        };
+        if i >= toks.len() {
+            return Err(SzError::config(format!(
+                "pipeline spec '{s}' names only a preprocessor; a predictor \
+                 stage must follow (known: {})",
+                PRED_NAMES.join(", ")
+            )));
+        }
+        if PRE_NAMES.contains(&toks[i].name) {
+            return Err(SzError::config(format!(
+                "pipeline spec '{s}': at most one preprocessor prefix"
+            )));
+        }
+        let pred = parse_pred(&toks[i])?;
+        let rest = &toks[i + 1..];
+        let shape_err = |family: &str, expect: &str| {
+            SzError::config(format!(
+                "pipeline spec '{s}': the {family} family takes {expect} after \
+                 the predictor, got {} stage(s)",
+                rest.len()
+            ))
+        };
+        let spec = match pred {
+            PredSpec::Lorenzo(_) | PredSpec::Zero => {
+                if rest.len() != 3 {
+                    return Err(shape_err("point", "quantizer/encoder/lossless"));
+                }
+                PipelineSpec {
+                    pre,
+                    pred,
+                    quant: Some(parse_quant(&rest[0])?),
+                    enc: Some(parse_enc(&rest[1])?),
+                    lossless: Some(parse_lossless(&rest[2])?),
+                }
+            }
+            PredSpec::Block { .. } | PredSpec::Interp(_) => {
+                if rest.len() != 3 {
+                    return Err(shape_err(
+                        if matches!(pred, PredSpec::Block { .. }) {
+                            "block"
+                        } else {
+                            "interp"
+                        },
+                        "quantizer/encoder/lossless",
+                    ));
+                }
+                let quant = parse_quant(&rest[0])?;
+                if !matches!(quant, QuantSpec::Linear { .. }) {
+                    return Err(SzError::config(format!(
+                        "pipeline spec '{s}': the block and interp families \
+                         support only the linear quantizer"
+                    )));
+                }
+                PipelineSpec {
+                    pre,
+                    pred,
+                    quant: Some(quant),
+                    enc: Some(parse_enc(&rest[1])?),
+                    lossless: Some(parse_lossless(&rest[2])?),
+                }
+            }
+            PredSpec::Truncation { .. } => {
+                if rest.len() != 1 {
+                    return Err(shape_err("truncation", "exactly a lossless stage"));
+                }
+                PipelineSpec {
+                    pre,
+                    pred,
+                    quant: None,
+                    enc: None,
+                    lossless: Some(parse_lossless(&rest[0])?),
+                }
+            }
+            PredSpec::Pastri { .. } => {
+                if rest.len() != 2 {
+                    return Err(shape_err("pastri", "encoder/lossless"));
+                }
+                let enc = parse_enc(&rest[0])?;
+                if enc != EncSpec::FixedHuffman {
+                    return Err(SzError::config(format!(
+                        "pipeline spec '{s}': the pastri family supports only \
+                         the fixed_huffman encoder"
+                    )));
+                }
+                PipelineSpec {
+                    pre,
+                    pred,
+                    quant: None,
+                    enc: Some(enc),
+                    lossless: Some(parse_lossless(&rest[1])?),
+                }
+            }
+            PredSpec::Aps { .. } => {
+                if !rest.is_empty() {
+                    return Err(shape_err("aps", "no further stages"));
+                }
+                PipelineSpec { pre, pred, quant: None, enc: None, lossless: None }
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// The unique canonical rendering of this spec.
+    /// `parse(x).canonical()` re-parses to an equal spec (fixed point).
+    pub fn canonical(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        match self.pre {
+            PreSpec::Identity => {}
+            PreSpec::Linearize => parts.push("linearize".into()),
+            PreSpec::Log => parts.push("log".into()),
+        }
+        parts.push(match self.pred {
+            PredSpec::Lorenzo(1) => "lorenzo".into(),
+            PredSpec::Lorenzo(o) => format!("lorenzo@{o}"),
+            PredSpec::Zero => "zero".into(),
+            PredSpec::Block { specialized: false } => {
+                "block(lorenzo+regression)".into()
+            }
+            PredSpec::Block { specialized: true } => {
+                "block(lorenzo+regression)@s".into()
+            }
+            PredSpec::Interp(InterpMode::Cubic) => "interp(cubic)".into(),
+            PredSpec::Interp(InterpMode::Linear) => "interp(linear)".into(),
+            PredSpec::Truncation { keep: None } => "truncation".into(),
+            PredSpec::Truncation { keep: Some(k) } => format!("truncation@k{k}"),
+            PredSpec::Pastri { bitplane, period } => {
+                let base =
+                    if bitplane { "pastri(bitplane)" } else { "pastri(value)" };
+                match period {
+                    None => base.into(),
+                    Some(p) => format!("{base}@p{p}"),
+                }
+            }
+            PredSpec::Aps { switch_eb } => {
+                if switch_eb == 0.5 {
+                    "aps".into()
+                } else {
+                    format!("aps@{switch_eb}")
+                }
+            }
+        });
+        if let Some(q) = self.quant {
+            parts.push(match q {
+                QuantSpec::Linear { radius: None } => "linear".into(),
+                QuantSpec::Linear { radius: Some(r) } => format!("linear@r{r}"),
+                QuantSpec::LogScale => "logscale".into(),
+                QuantSpec::UnpredAware => "unpred".into(),
+            });
+        }
+        if let Some(e) = self.enc {
+            parts.push(e.token().into());
+        }
+        if let Some(l) = self.lossless {
+            parts.push(l.into());
+        }
+        parts.join("/")
+    }
+
+    /// Re-check the family invariants ([`parse`](Self::parse) and
+    /// [`PipelineBuilder`] always produce valid specs; this guards
+    /// hand-built values).
+    pub fn validate(&self) -> Result<()> {
+        let want = |cond: bool, msg: &str| -> Result<()> {
+            if cond {
+                Ok(())
+            } else {
+                Err(SzError::config(format!("invalid pipeline spec: {msg}")))
+            }
+        };
+        // parse/validate symmetry: every parameter the grammar bounds must
+        // be re-bounded here, or a hand-built spec could canonicalize to a
+        // string its own header can never re-parse
+        if let Some(QuantSpec::Linear { radius: Some(r) }) = self.quant {
+            want((1..=1 << 30).contains(&r), "linear radius must be 1..=2^30")?;
+        }
+        match self.pred {
+            PredSpec::Lorenzo(o) => {
+                want((1..=3).contains(&o), "lorenzo order must be 1..=3")?;
+                want(
+                    self.quant.is_some() && self.enc.is_some() && self.lossless.is_some(),
+                    "the point family needs quantizer, encoder, and lossless stages",
+                )
+            }
+            PredSpec::Zero => want(
+                self.quant.is_some() && self.enc.is_some() && self.lossless.is_some(),
+                "the point family needs quantizer, encoder, and lossless stages",
+            ),
+            PredSpec::Block { .. } | PredSpec::Interp(_) => {
+                want(
+                    matches!(self.quant, Some(QuantSpec::Linear { .. })),
+                    "the block and interp families support only the linear quantizer",
+                )?;
+                want(
+                    self.enc.is_some() && self.lossless.is_some(),
+                    "the block and interp families need encoder and lossless stages",
+                )
+            }
+            PredSpec::Truncation { keep } => {
+                want(
+                    keep.map(|k| (1..=8).contains(&k)).unwrap_or(true),
+                    "truncation keep-bytes must be 1..=8",
+                )?;
+                want(
+                    self.quant.is_none() && self.enc.is_none(),
+                    "the truncation family bypasses quantizer and encoder stages",
+                )?;
+                want(self.lossless.is_some(), "truncation needs a lossless stage")
+            }
+            PredSpec::Pastri { period, .. } => {
+                want(
+                    period.map(|p| p >= 1).unwrap_or(true),
+                    "pastri period must be >= 1",
+                )?;
+                want(
+                    self.quant.is_none(),
+                    "the pastri family owns its quantizer (unpred-aware)",
+                )?;
+                want(
+                    matches!(self.enc, Some(EncSpec::FixedHuffman)),
+                    "the pastri family supports only the fixed_huffman encoder",
+                )?;
+                want(self.lossless.is_some(), "pastri needs a lossless stage")
+            }
+            PredSpec::Aps { switch_eb } => {
+                want(
+                    switch_eb.is_finite() && switch_eb > 0.0,
+                    "aps switch bound must be a positive number",
+                )?;
+                want(
+                    self.quant.is_none() && self.enc.is_none() && self.lossless.is_none(),
+                    "the aps family composes its own inner stages",
+                )
+            }
+        }
+    }
+
+    /// Construct the composed compressor. Its [`Compressor::name`] — and
+    /// with it every stream header it writes — is the canonical spec.
+    pub fn build(&self) -> Result<Box<dyn Compressor>> {
+        self.validate()?;
+        if matches!(self.pred, PredSpec::Lorenzo(_) | PredSpec::Zero) {
+            // the point family carries its preprocessor in-stream
+            return Ok(Box::new(self.point_compressor()));
+        }
+        let stripped = PipelineSpec { pre: PreSpec::Identity, ..self.clone() };
+        let stack = stripped.build_stack();
+        if self.pre == PreSpec::Identity {
+            Ok(stack)
+        } else {
+            Ok(Box::new(PreprocessedCompressor {
+                name: self.canonical(),
+                pre: self.pre,
+                inner: stack,
+            }))
+        }
+    }
+
+    /// The point-family compressor for this spec (pre-validated).
+    fn point_compressor(&self) -> SzCompressor {
+        let pre = match self.pre {
+            PreSpec::Identity => PreprocessorKind::Identity,
+            PreSpec::Linearize => PreprocessorKind::Linearize,
+            PreSpec::Log => PreprocessorKind::Log,
+        };
+        let pred = match self.pred {
+            PredSpec::Lorenzo(o) => PredictorKind::Lorenzo(o),
+            PredSpec::Zero => PredictorKind::Zero,
+            _ => unreachable!("point_compressor is gated on the point family"),
+        };
+        let (quant, radius) = match self.quant.expect("validated") {
+            QuantSpec::Linear { radius } => (QuantizerKind::Linear, radius),
+            QuantSpec::LogScale => (QuantizerKind::LogScale, None),
+            QuantSpec::UnpredAware => (QuantizerKind::UnpredAware, None),
+        };
+        SzCompressor {
+            name: self.canonical(),
+            preprocessor: pre,
+            predictor: pred,
+            quantizer: quant,
+            encoder: self.enc.expect("validated").token().to_string(),
+            lossless: self.lossless.expect("validated").to_string(),
+            radius,
+        }
+    }
+
+    /// The non-point family stack, named by this spec's canonical string
+    /// (callers strip the preprocessor first).
+    fn build_stack(&self) -> Box<dyn Compressor> {
+        let name = self.canonical();
+        let radius = match self.quant {
+            Some(QuantSpec::Linear { radius }) => radius,
+            _ => None,
+        };
+        match self.pred {
+            PredSpec::Block { .. } => Box::new(
+                // single construction site for spec-built block pipelines —
+                // the PJRT path reaches the same function
+                self.block_compressor()
+                    .expect("validated block family with no preprocessor"),
+            ),
+            PredSpec::Interp(mode) => Box::new(InterpCompressor {
+                name,
+                mode,
+                encoder: self.enc.expect("validated").token().to_string(),
+                lossless: self.lossless.expect("validated").to_string(),
+                radius,
+            }),
+            PredSpec::Truncation { keep } => Box::new(TruncationCompressor {
+                name,
+                keep_bytes: keep,
+                lossless: self.lossless.expect("validated").to_string(),
+            }),
+            PredSpec::Pastri { bitplane, period } => Box::new(PastriCompressor {
+                name,
+                bitplane_unpred: bitplane,
+                lossless: self.lossless.expect("validated").to_string(),
+                period,
+            }),
+            PredSpec::Aps { switch_eb } => {
+                Box::new(ApsCompressor { name, switch_eb })
+            }
+            PredSpec::Lorenzo(_) | PredSpec::Zero => {
+                unreachable!("point family is built by point_compressor")
+            }
+        }
+    }
+
+    /// The concrete block-family compressor for this spec, when its
+    /// predictor is the blockwise composite and no preprocessor prefix is
+    /// set — lets callers swap in a custom
+    /// [`super::analysis::BlockAnalyzer`] (e.g. PJRT) before boxing.
+    pub fn block_compressor(&self) -> Option<BlockCompressor> {
+        if self.pre != PreSpec::Identity {
+            return None;
+        }
+        match self.pred {
+            PredSpec::Block { specialized } => Some(BlockCompressor {
+                name: self.canonical(),
+                analyzer: std::sync::Arc::new(super::analysis::NativeAnalyzer),
+                encoder: self.enc?.token().to_string(),
+                lossless: (*self.lossless.as_ref()?).to_string(),
+                assume_noiseless: false,
+                specialized,
+                radius: match self.quant {
+                    Some(QuantSpec::Linear { radius }) => radius,
+                    _ => None,
+                },
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Resolve a registry alias or spec string into a validated spec.
+pub fn resolve(name_or_spec: &str) -> Result<PipelineSpec> {
+    if let Some(canon) = alias_canonical(name_or_spec.trim()) {
+        return PipelineSpec::parse(canon);
+    }
+    PipelineSpec::parse(name_or_spec)
+}
+
+/// Canonical spec string for an alias or spec (the exact string
+/// [`PipelineSpec::build`] writes into stream headers).
+pub fn canonical(name_or_spec: &str) -> Result<String> {
+    Ok(resolve(name_or_spec)?.canonical())
+}
+
+/// Uniform corrupt-artifact error for a pipeline string that failed to
+/// resolve — names the offender, carries the parse error, and hints the
+/// nearest registry alias. Shared by [`crate::pipeline::decompress_any`]
+/// and the container reader so the recovery hint cannot drift.
+pub fn unknown_pipeline_error(context: &str, name: &str, err: &SzError) -> SzError {
+    SzError::corrupt(format!(
+        "{context} names unknown pipeline '{name}' ({err}); nearest known \
+         alias is '{}' — `sz3 pipelines` lists aliases and stages, \
+         docs/PIPELINES.md the spec grammar",
+        nearest_alias(name)
+    ))
+}
+
+impl std::fmt::Display for PipelineSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.canonical())
+    }
+}
+
+impl std::str::FromStr for PipelineSpec {
+    type Err = SzError;
+    fn from_str(s: &str) -> Result<PipelineSpec> {
+        PipelineSpec::parse(s)
+    }
+}
+
+/// Typed builder over [`PipelineSpec`]: start from a family constructor,
+/// chain stage setters, [`finish`](Self::finish) validates and yields the
+/// spec (family defaults fill unset stages).
+///
+/// ```no_run
+/// use sz3::pipeline::spec::PipelineBuilder;
+/// let spec = PipelineBuilder::block()
+///     .lossless("lzhuf")
+///     .radius(512)
+///     .finish()
+///     .unwrap();
+/// assert_eq!(spec.canonical(), "block(lorenzo+regression)/linear@r512/huffman/lzhuf");
+/// ```
+#[derive(Clone, Debug)]
+pub struct PipelineBuilder {
+    pre: PreSpec,
+    pred: PredSpec,
+    quant: Option<QuantSpec>,
+    enc: Option<EncSpec>,
+    lossless: Option<String>,
+    err: Option<String>,
+}
+
+impl PipelineBuilder {
+    fn new(pred: PredSpec) -> Self {
+        PipelineBuilder {
+            pre: PreSpec::Identity,
+            pred,
+            quant: None,
+            enc: None,
+            lossless: None,
+            err: None,
+        }
+    }
+
+    /// Blockwise Lorenzo⊕regression family (SZ3-LR shape).
+    pub fn block() -> Self {
+        Self::new(PredSpec::Block { specialized: false })
+    }
+
+    /// Interpolation family.
+    pub fn interp(mode: InterpMode) -> Self {
+        Self::new(PredSpec::Interp(mode))
+    }
+
+    /// Point family with an order-N Lorenzo predictor.
+    pub fn lorenzo(order: u32) -> Self {
+        Self::new(PredSpec::Lorenzo(order))
+    }
+
+    /// Point family with the always-zero predictor.
+    pub fn zero() -> Self {
+        Self::new(PredSpec::Zero)
+    }
+
+    /// Byte-truncation family.
+    pub fn truncation() -> Self {
+        Self::new(PredSpec::Truncation { keep: None })
+    }
+
+    /// PaSTRI family (`bitplane` selects the SZ3 unpredictable layout).
+    pub fn pastri(bitplane: bool) -> Self {
+        Self::new(PredSpec::Pastri { bitplane, period: None })
+    }
+
+    /// Adaptive APS meta-pipeline.
+    pub fn aps() -> Self {
+        Self::new(PredSpec::Aps { switch_eb: 0.5 })
+    }
+
+    /// Set the preprocessor prefix.
+    pub fn preprocess(mut self, pre: PreSpec) -> Self {
+        self.pre = pre;
+        self
+    }
+
+    /// Use the dimension-specialized block codecs (block family only).
+    pub fn specialized(mut self) -> Self {
+        match self.pred {
+            PredSpec::Block { .. } => {
+                self.pred = PredSpec::Block { specialized: true };
+            }
+            _ => self.set_err("specialized() applies to the block family"),
+        }
+        self
+    }
+
+    /// Pin the truncation keep-bytes (truncation family only).
+    pub fn keep_bytes(mut self, k: usize) -> Self {
+        match self.pred {
+            PredSpec::Truncation { .. } => {
+                self.pred = PredSpec::Truncation { keep: Some(k) };
+            }
+            _ => self.set_err("keep_bytes() applies to the truncation family"),
+        }
+        self
+    }
+
+    /// Pin the pastri pattern period (pastri family only).
+    pub fn period(mut self, p: usize) -> Self {
+        match self.pred {
+            PredSpec::Pastri { bitplane, .. } => {
+                self.pred = PredSpec::Pastri { bitplane, period: Some(p) };
+            }
+            _ => self.set_err("period() applies to the pastri family"),
+        }
+        self
+    }
+
+    /// Set the aps switch error bound (aps family only).
+    pub fn switch_eb(mut self, eb: f64) -> Self {
+        match self.pred {
+            PredSpec::Aps { .. } => self.pred = PredSpec::Aps { switch_eb: eb },
+            _ => self.set_err("switch_eb() applies to the aps family"),
+        }
+        self
+    }
+
+    /// Set the quantizer stage.
+    pub fn quantizer(mut self, q: QuantSpec) -> Self {
+        self.quant = Some(q);
+        self
+    }
+
+    /// Override the linear quantizer's index radius.
+    pub fn radius(mut self, r: u32) -> Self {
+        match self.quant {
+            None | Some(QuantSpec::Linear { .. }) => {
+                self.quant = Some(QuantSpec::Linear { radius: Some(r) });
+            }
+            _ => self.set_err("radius() applies to the linear quantizer"),
+        }
+        self
+    }
+
+    /// Set the encoder stage.
+    pub fn encoder(mut self, e: EncSpec) -> Self {
+        self.enc = Some(e);
+        self
+    }
+
+    /// Set the lossless stage by token name (`zstd`, `gzip`, `lzhuf`,
+    /// `rle`, `bypass`).
+    pub fn lossless(mut self, name: &str) -> Self {
+        self.lossless = Some(name.to_string());
+        self
+    }
+
+    fn set_err(&mut self, msg: &str) {
+        if self.err.is_none() {
+            self.err = Some(msg.to_string());
+        }
+    }
+
+    /// Validate and produce the spec; unset stages take family defaults
+    /// (linear / huffman / zstd where they apply, bypass for truncation).
+    pub fn finish(self) -> Result<PipelineSpec> {
+        if let Some(e) = self.err {
+            return Err(SzError::config(e));
+        }
+        let lossless = match &self.lossless {
+            Some(name) => Some(canon_lossless(name).ok_or_else(|| {
+                SzError::config(format!(
+                    "unknown lossless stage '{name}' (known: {})",
+                    LOSSLESS_TOKENS.join(", ")
+                ))
+            })?),
+            None => None,
+        };
+        let spec = match self.pred {
+            PredSpec::Lorenzo(_)
+            | PredSpec::Zero
+            | PredSpec::Block { .. }
+            | PredSpec::Interp(_) => PipelineSpec {
+                pre: self.pre,
+                pred: self.pred,
+                quant: Some(self.quant.unwrap_or(QuantSpec::Linear { radius: None })),
+                enc: Some(self.enc.unwrap_or(EncSpec::Huffman)),
+                lossless: Some(lossless.unwrap_or("zstd")),
+            },
+            PredSpec::Truncation { .. } => PipelineSpec {
+                pre: self.pre,
+                pred: self.pred,
+                quant: self.quant,
+                enc: self.enc,
+                lossless: Some(lossless.unwrap_or("bypass")),
+            },
+            PredSpec::Pastri { .. } => PipelineSpec {
+                pre: self.pre,
+                pred: self.pred,
+                quant: self.quant,
+                enc: Some(self.enc.unwrap_or(EncSpec::FixedHuffman)),
+                lossless: Some(lossless.unwrap_or("zstd")),
+            },
+            PredSpec::Aps { .. } => PipelineSpec {
+                pre: self.pre,
+                pred: self.pred,
+                quant: self.quant,
+                enc: self.enc,
+                lossless,
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// One entry of the unified stage catalog.
+#[derive(Clone, Copy, Debug)]
+pub struct StageInfo {
+    /// Stage slot: "preprocessor" | "predictor" | "quantizer" | "encoder"
+    /// | "lossless".
+    pub kind: &'static str,
+    /// Spec token.
+    pub token: &'static str,
+    /// Parameter syntax, empty when the stage takes none.
+    pub params: &'static str,
+    /// One-line description.
+    pub summary: &'static str,
+}
+
+/// The unified stage catalog — every token the spec grammar accepts, with
+/// its parameter syntax. `sz3 pipelines` prints this inventory; the stage
+/// modules' `by_name` constructors are reached exclusively through these
+/// tokens.
+pub fn catalog() -> &'static [StageInfo] {
+    &[
+        StageInfo { kind: "preprocessor", token: "log", params: "", summary: "pointwise-relative bounds via ln|x| (requires --pwrel)" },
+        StageInfo { kind: "preprocessor", token: "linearize", params: "", summary: "treat N-d data as 1-d" },
+        StageInfo { kind: "predictor", token: "lorenzo", params: "@N order 1..=3", summary: "point-family order-N Lorenzo" },
+        StageInfo { kind: "predictor", token: "zero", params: "", summary: "point-family always-zero baseline" },
+        StageInfo { kind: "predictor", token: "block(lorenzo+regression)", params: "@s specialized codecs", summary: "SZ2-style blockwise composite (SZ3-LR)" },
+        StageInfo { kind: "predictor", token: "interp", params: "(cubic|linear)", summary: "level-by-level spline interpolation (SZ3-Interp)" },
+        StageInfo { kind: "predictor", token: "truncation", params: "@kN keep bytes 1..=8", summary: "byte truncation, module bypass (SZ3-Truncation)" },
+        StageInfo { kind: "predictor", token: "pastri", params: "(bitplane|value) @pN period", summary: "periodic-pattern prediction for GAMESS ERI (SZ3-Pastri)" },
+        StageInfo { kind: "predictor", token: "aps", params: "@EB switch bound", summary: "adaptive APS meta-pipeline (composes its own stages)" },
+        StageInfo { kind: "quantizer", token: "linear", params: "@rN radius override", summary: "linear-scaling quantizer" },
+        StageInfo { kind: "quantizer", token: "logscale", params: "", summary: "geometric-then-linear binning" },
+        StageInfo { kind: "quantizer", token: "unpred", params: "", summary: "linear with bitplane-coded unpredictables (§4.2)" },
+        StageInfo { kind: "encoder", token: "huffman", params: "", summary: "canonical per-stream Huffman" },
+        StageInfo { kind: "encoder", token: "fixed_huffman", params: "", summary: "predefined-tree Huffman" },
+        StageInfo { kind: "encoder", token: "arithmetic", params: "", summary: "adaptive arithmetic coding" },
+        StageInfo { kind: "encoder", token: "raw", params: "", summary: "uncoded index passthrough" },
+        StageInfo { kind: "lossless", token: "zstd", params: "", summary: "zstd proxy (default stage)" },
+        StageInfo { kind: "lossless", token: "gzip", params: "", summary: "DEFLATE proxy" },
+        StageInfo { kind: "lossless", token: "lzhuf", params: "", summary: "from-scratch LZ+Huffman backend" },
+        StageInfo { kind: "lossless", token: "rle", params: "", summary: "byte run-length encoding" },
+        StageInfo { kind: "lossless", token: "bypass", params: "", summary: "no lossless stage (module bypass)" },
+    ]
+}
+
+/// Generic preprocessor wrapper: applies a spec's preprocessor prefix
+/// around any non-point family (the point family embeds its preprocessor
+/// in-stream). The outer stream is `header(canonical spec, original
+/// dims) · state block · inner stream`, so decompression rebuilds the
+/// exact stack from the header and reverses the transform from the
+/// carried state.
+struct PreprocessedCompressor {
+    name: String,
+    pre: PreSpec,
+    inner: Box<dyn Compressor>,
+}
+
+impl PreprocessedCompressor {
+    fn instantiate(&self) -> Box<dyn Preprocessor> {
+        match self.pre {
+            PreSpec::Identity => Box::new(crate::preprocessor::Identity),
+            PreSpec::Linearize => Box::new(Linearize),
+            PreSpec::Log => Box::new(LogTransform::default()),
+        }
+    }
+}
+
+impl Compressor for PreprocessedCompressor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {
+        let mut w = ByteWriter::new();
+        // outer header carries the ORIGINAL dims; postprocess restores them
+        StreamHeader::for_field(&self.name, field).write(&mut w);
+        let mut f = field.clone();
+        let mut c = conf.clone();
+        let state = self.instantiate().process(&mut f, &mut c)?;
+        w.put_block(&state);
+        w.put_block(&self.inner.compress(&f, &c)?);
+        Ok(w.finish())
+    }
+
+    fn decompress(&self, stream: &[u8]) -> Result<Field> {
+        let mut r = ByteReader::new(stream);
+        let header = StreamHeader::read(&mut r)?;
+        let state = r.get_block()?.to_vec();
+        let inner_stream = r.get_block()?;
+        let mut field = self.inner.decompress(inner_stream)?;
+        self.instantiate().postprocess(&mut field, &state)?;
+        if field.len() != header.len() {
+            return Err(SzError::corrupt(format!(
+                "preprocessed stream: {} elements after postprocess, header \
+                 declares {}",
+                field.len(),
+                header.len()
+            )));
+        }
+        field.name = header.field_name;
+        Ok(field)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::FieldValues;
+    use crate::pipeline::{self, decompress_any, ErrorBound};
+    use crate::util::{prop, rng::Pcg32};
+
+    #[test]
+    fn aliases_resolve_and_canonicalize_stably() {
+        for (alias, canon) in ALIASES {
+            let spec = resolve(alias).unwrap_or_else(|e| panic!("{alias}: {e}"));
+            assert_eq!(&spec.canonical(), canon, "{alias}");
+            // the canonical spec is its own fixed point
+            let reparsed = PipelineSpec::parse(canon).unwrap();
+            assert_eq!(reparsed, spec, "{alias}");
+            assert_eq!(reparsed.canonical(), *canon, "{alias}");
+        }
+    }
+
+    /// Random valid spec over the whole grammar.
+    fn random_spec(rng: &mut Pcg32) -> PipelineSpec {
+        let pred = match rng.below(7) {
+            0 => PredSpec::Lorenzo(rng.below(3) as u32 + 1),
+            1 => PredSpec::Zero,
+            2 => PredSpec::Block { specialized: rng.below(2) == 0 },
+            3 => PredSpec::Interp(if rng.below(2) == 0 {
+                InterpMode::Cubic
+            } else {
+                InterpMode::Linear
+            }),
+            4 => PredSpec::Truncation {
+                keep: if rng.below(2) == 0 { None } else { Some(rng.below(8) + 1) },
+            },
+            5 => PredSpec::Pastri {
+                bitplane: rng.below(2) == 0,
+                period: if rng.below(2) == 0 { None } else { Some(rng.below(200) + 1) },
+            },
+            _ => PredSpec::Aps {
+                switch_eb: [0.5, 0.25, 2.0, 0.75][rng.below(4)],
+            },
+        };
+        let linearish = QuantSpec::Linear {
+            radius: if rng.below(2) == 0 { None } else { Some(rng.below(4096) as u32 + 1) },
+        };
+        let pre = match rng.below(3) {
+            0 => PreSpec::Identity,
+            1 => PreSpec::Linearize,
+            _ => PreSpec::Log,
+        };
+        let enc_any = [EncSpec::Huffman, EncSpec::FixedHuffman, EncSpec::Arithmetic, EncSpec::Raw]
+            [rng.below(4)];
+        let ll = LOSSLESS_TOKENS[rng.below(LOSSLESS_TOKENS.len())];
+        match pred {
+            PredSpec::Lorenzo(_) | PredSpec::Zero => PipelineSpec {
+                pre,
+                pred,
+                quant: Some(match rng.below(3) {
+                    0 => linearish,
+                    1 => QuantSpec::LogScale,
+                    _ => QuantSpec::UnpredAware,
+                }),
+                enc: Some(enc_any),
+                lossless: Some(ll),
+            },
+            PredSpec::Block { .. } | PredSpec::Interp(_) => PipelineSpec {
+                pre,
+                pred,
+                quant: Some(linearish),
+                enc: Some(enc_any),
+                lossless: Some(ll),
+            },
+            PredSpec::Truncation { .. } => {
+                PipelineSpec { pre, pred, quant: None, enc: None, lossless: Some(ll) }
+            }
+            PredSpec::Pastri { .. } => PipelineSpec {
+                pre,
+                pred,
+                quant: None,
+                enc: Some(EncSpec::FixedHuffman),
+                lossless: Some(ll),
+            },
+            PredSpec::Aps { .. } => {
+                PipelineSpec { pre, pred, quant: None, enc: None, lossless: None }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_parse_canonicalize_is_a_fixed_point() {
+        prop::cases(80, 0x5bec, |rng| {
+            let spec = random_spec(rng);
+            spec.validate().expect("random_spec builds valid specs");
+            let canon = spec.canonical();
+            let parsed = PipelineSpec::parse(&canon)
+                .unwrap_or_else(|e| panic!("'{canon}': {e}"));
+            assert_eq!(parsed, spec, "'{canon}' reparses to the same spec");
+            assert_eq!(parsed.canonical(), canon, "'{canon}' is a fixed point");
+            // resolve() treats a canonical spec as itself
+            assert_eq!(super::canonical(&canon).unwrap(), canon);
+        });
+    }
+
+    #[test]
+    fn aliases_roundtrip_bit_identically_through_canonical_specs() {
+        let mut rng = Pcg32::seeded(0xa1145);
+        let dims = [12usize, 12, 12];
+        let f = crate::data::Field::f32("x", &dims, prop::smooth_field(&mut rng, &dims))
+            .unwrap();
+        let conf = crate::pipeline::CompressConf::with_radius(ErrorBound::Abs(1e-3), 512);
+        for (alias, canon) in ALIASES {
+            let a = pipeline::build(alias).unwrap();
+            let c = pipeline::build(canon).unwrap();
+            assert_eq!(a.name(), c.name(), "{alias}: same canonical identity");
+            let sa = a.compress(&f, &conf).unwrap();
+            let sc = c.compress(&f, &conf).unwrap();
+            assert_eq!(sa, sc, "{alias}: alias and canonical spec streams differ");
+            let da = decompress_any(&sa).unwrap();
+            let dc = decompress_any(&sc).unwrap();
+            assert_eq!(da.values, dc.values, "{alias}");
+            assert_eq!(da.shape.dims(), f.shape.dims(), "{alias}");
+        }
+    }
+
+    #[test]
+    fn malformed_specs_error_cleanly() {
+        let bad = [
+            "",
+            "/",
+            "lorenzo/linear/huffman/zstd/",          // trailing '/'
+            "lorenzo//huffman/zstd",                 // empty stage
+            "nope/linear/huffman/zstd",              // unknown predictor
+            "lorenzo/linear/huffman",                // missing lossless
+            "lorenzo/linear/huffman/zstd/extra",     // too many stages
+            "lorenzo@9/linear/huffman/zstd",         // bad order
+            "lorenzo/linear@rX/huffman/zstd",        // bad radius
+            "lorenzo/linear@r0/huffman/zstd",        // zero radius
+            "lorenzo/linear/huffman/nada",           // unknown lossless
+            "lorenzo/linear/morse/zstd",             // unknown encoder
+            "block(lorenzo)/linear/huffman/zstd",    // unsupported composite
+            "block(lorenzo+regression)/logscale/huffman/zstd", // non-linear quant
+            "interp(quintic)/linear/huffman/zstd",   // unknown basis
+            "truncation@k9/bypass",                  // keep out of range
+            "truncation/huffman/zstd",               // truncation takes 1 stage
+            "pastri(bitplane)/huffman/zstd",         // pastri needs fixed_huffman
+            "pastri(sideways)/fixed_huffman/zstd",   // unknown layout
+            "aps/linear/huffman/zstd",               // aps takes no stages
+            "aps@-1",                                // bad switch bound
+            "log",                                   // preprocessor alone
+            "log/linearize/lorenzo/linear/huffman/zstd", // two preprocessors
+            "lorenzo(x)/linear/huffman/zstd",        // stray args
+            "lorenzo/linear(/huffman/zstd",          // unbalanced paren
+        ];
+        for s in bad {
+            assert!(
+                PipelineSpec::parse(s).is_err(),
+                "'{s}' should fail to parse"
+            );
+            assert!(resolve(s).is_err(), "'{s}' should fail to resolve");
+        }
+    }
+
+    #[test]
+    fn nearest_alias_suggests_recovery() {
+        assert_eq!(nearest_alias("sz3-lrr"), "sz3-lr");
+        assert_eq!(nearest_alias("sz3_interp"), "sz3-interp");
+        assert_eq!(nearest_alias("lorenzo1d"), "lorenzo-1d");
+        // arbitrary garbage still yields *some* alias
+        assert!(ALIASES.iter().any(|(a, _)| *a == nearest_alias("???")));
+    }
+
+    #[test]
+    fn builder_composes_and_validates() {
+        let spec = PipelineBuilder::block().lossless("lzhuf").radius(512).finish().unwrap();
+        assert_eq!(
+            spec.canonical(),
+            "block(lorenzo+regression)/linear@r512/huffman/lzhuf"
+        );
+        let spec = PipelineBuilder::lorenzo(2)
+            .preprocess(PreSpec::Linearize)
+            .quantizer(QuantSpec::UnpredAware)
+            .encoder(EncSpec::Arithmetic)
+            .lossless("rle")
+            .finish()
+            .unwrap();
+        assert_eq!(spec.canonical(), "linearize/lorenzo@2/unpred/arithmetic/rle");
+        // defaults fill in
+        assert_eq!(
+            PipelineBuilder::interp(InterpMode::Linear).finish().unwrap().canonical(),
+            "interp(linear)/linear/huffman/zstd"
+        );
+        assert_eq!(
+            PipelineBuilder::truncation().keep_bytes(2).finish().unwrap().canonical(),
+            "truncation@k2/bypass"
+        );
+        // misapplied setters surface at finish()
+        assert!(PipelineBuilder::block().keep_bytes(2).finish().is_err());
+        assert!(PipelineBuilder::aps().switch_eb(-1.0).finish().is_err());
+        assert!(PipelineBuilder::block().lossless("nada").finish().is_err());
+        // out-of-grammar parameters are caught too, so a built spec can
+        // never canonicalize to a string its own header cannot re-parse
+        assert!(PipelineBuilder::block().radius(u32::MAX).finish().is_err());
+        assert!(PipelineBuilder::lorenzo(9).finish().is_err());
+        // builder and parse agree
+        let b = PipelineBuilder::block().specialized().finish().unwrap();
+        let p = PipelineSpec::parse("block(lorenzo+regression)@s/linear/huffman/zstd").unwrap();
+        assert_eq!(b, p);
+    }
+
+    #[test]
+    fn composed_non_registry_specs_roundtrip() {
+        let mut rng = Pcg32::seeded(0xc0de);
+        let dims = [10usize, 8, 8];
+        let f = crate::data::Field::f32("x", &dims, prop::smooth_field(&mut rng, &dims))
+            .unwrap();
+        let conf = crate::pipeline::CompressConf::with_radius(ErrorBound::Abs(1e-3), 512);
+        for s in [
+            "block(lorenzo+regression)/linear/huffman/lzhuf",
+            "interp(cubic)/linear/huffman/rle",
+            "linearize/lorenzo/linear/arithmetic/rle",
+            "lorenzo@2/logscale/huffman/gzip",
+            "linearize/block(lorenzo+regression)/linear@r256/huffman/bypass",
+            "truncation@k3/rle",
+        ] {
+            let canon = super::canonical(s).unwrap();
+            assert!(
+                ALIASES.iter().all(|(_, c)| *c != canon),
+                "'{s}' must not collide with a registry alias"
+            );
+            let c = pipeline::build(s).unwrap();
+            assert_eq!(c.name(), canon, "{s}");
+            let stream = c.compress(&f, &conf).unwrap();
+            let h = crate::pipeline::peek_header(&stream).unwrap();
+            assert_eq!(h.pipeline, canon, "{s}: header carries the canonical spec");
+            let out = decompress_any(&stream).unwrap();
+            assert_eq!(out.shape.dims(), f.shape.dims(), "{s}");
+            for (o, d) in f.values.to_f64_vec().iter().zip(out.values.to_f64_vec()) {
+                assert!((o - d).abs() <= 1e-3 * (1.0 + 1e-12), "{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn log_prefix_gives_pointwise_relative_bounds_to_any_family() {
+        // pwrel through the wrapper (interp family) and the point family
+        let n = 2048usize;
+        let vals: Vec<f64> = (0..n)
+            .map(|i| {
+                let t = i as f64 / 300.0;
+                (t.sin() + 1.5) * 10f64.powf(2.0 * (t * 0.2).cos())
+            })
+            .collect();
+        let f = crate::data::Field::f64("w", &[n], vals.clone()).unwrap();
+        let rel = 1e-3;
+        let conf = crate::pipeline::CompressConf::new(ErrorBound::PwRel(rel));
+        for s in ["log/lorenzo/linear/huffman/zstd", "log/interp(cubic)/linear/huffman/zstd"] {
+            let c = pipeline::build(s).unwrap();
+            let stream = c.compress(&f, &conf).unwrap();
+            let out = decompress_any(&stream).unwrap();
+            assert!(matches!(out.values, FieldValues::F64(_)), "{s}");
+            for (o, d) in vals.iter().zip(out.values.to_f64_vec()) {
+                assert!(
+                    (d / o - 1.0).abs() <= rel * (1.0 + 1e-9),
+                    "{s}: rel err at {o} vs {d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grammar_tokens_reach_real_stage_constructors() {
+        // drift guard for the token sets duplicated across the grammar,
+        // the catalog, and the stage modules' by_name registries: every
+        // encoder/lossless token the grammar accepts must construct
+        for t in ["huffman", "fixed_huffman", "arithmetic", "raw"] {
+            assert!(EncSpec::parse(t).is_some(), "{t} missing from grammar");
+            assert!(crate::encoder::by_name(t, 64).is_some(), "{t} missing from registry");
+        }
+        for &t in LOSSLESS_TOKENS {
+            assert!(crate::lossless::by_name(t).is_some(), "{t} missing from registry");
+        }
+        // and every grammar token appears in the printed catalog
+        for t in ["huffman", "fixed_huffman", "arithmetic", "raw"]
+            .iter()
+            .chain(LOSSLESS_TOKENS)
+        {
+            assert!(
+                catalog().iter().any(|i| i.token == *t),
+                "{t} missing from spec::catalog()"
+            );
+        }
+    }
+
+    #[test]
+    fn catalog_tokens_are_spec_parseable() {
+        // every predictor token in the catalog heads at least one valid spec
+        for info in catalog() {
+            match info.kind {
+                "predictor" => {
+                    let head = match info.token {
+                        "interp" => "interp(cubic)".to_string(),
+                        "pastri" => "pastri(bitplane)".to_string(),
+                        t => t.to_string(),
+                    };
+                    let tail = match info.token {
+                        "truncation" => "/bypass",
+                        "pastri" => "/fixed_huffman/zstd",
+                        "aps" => "",
+                        _ => "/linear/huffman/zstd",
+                    };
+                    let s = format!("{head}{tail}");
+                    PipelineSpec::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+                }
+                "quantizer" => {
+                    let s = format!("lorenzo/{}/huffman/zstd", info.token);
+                    PipelineSpec::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+                }
+                "encoder" => {
+                    let s = format!("lorenzo/linear/{}/zstd", info.token);
+                    PipelineSpec::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+                }
+                "lossless" => {
+                    let s = format!("lorenzo/linear/huffman/{}", info.token);
+                    PipelineSpec::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+                }
+                "preprocessor" => {
+                    let s = format!("{}/lorenzo/linear/huffman/zstd", info.token);
+                    PipelineSpec::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+                }
+                other => panic!("unknown catalog kind {other}"),
+            }
+        }
+    }
+}

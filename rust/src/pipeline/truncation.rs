@@ -18,16 +18,23 @@ use crate::lossless;
 
 /// Byte-truncation compressor.
 pub struct TruncationCompressor {
+    /// Stream-header identity (canonical spec for spec-built instances,
+    /// the legacy `sz3-truncation` for [`Default`]).
+    pub name: String,
     /// How many most-significant bytes to keep (1..=3 for f32, 1..=7 f64).
     /// `None` = derive the smallest k that satisfies the requested bound.
     pub keep_bytes: Option<usize>,
     /// Optional lossless stage ("bypass" for max speed, the default).
-    pub lossless: &'static str,
+    pub lossless: String,
 }
 
 impl Default for TruncationCompressor {
     fn default() -> Self {
-        TruncationCompressor { keep_bytes: None, lossless: "bypass" }
+        TruncationCompressor {
+            name: "sz3-truncation".to_string(),
+            keep_bytes: None,
+            lossless: "bypass".to_string(),
+        }
     }
 }
 
@@ -102,14 +109,14 @@ fn from_planes(planes: &[u8], n: usize, bytes_per: usize, keep: usize) -> Vec<u8
 }
 
 impl Compressor for TruncationCompressor {
-    fn name(&self) -> &'static str {
-        "sz3-truncation"
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {
         let keep = self.pick_keep(field, conf)?;
         let mut w = ByteWriter::new();
-        StreamHeader::for_field(self.name(), field).write(&mut w);
+        StreamHeader::for_field(&self.name, field).write(&mut w);
         let (raw, bytes_per): (Vec<u8>, usize) = match &field.values {
             FieldValues::F32(v) => {
                 (v.iter().flat_map(|x| x.to_le_bytes()).collect(), 4)
@@ -122,9 +129,9 @@ impl Compressor for TruncationCompressor {
             }
         };
         w.put_u8(keep as u8);
-        w.put_str(self.lossless);
+        w.put_str(&self.lossless);
         let planes = to_planes(&raw, bytes_per, keep);
-        let ll = lossless::by_name(self.lossless)
+        let ll = lossless::by_name(&self.lossless)
             .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
         w.put_block(&ll.compress(&planes)?);
         Ok(w.finish())
@@ -202,7 +209,7 @@ mod tests {
     fn keep_all_is_lossless() {
         let vals = vec![1.5f32, -2.25, 3.0e-8, 1e20];
         let f = Field::f32("x", &[4], vals.clone()).unwrap();
-        let c = TruncationCompressor { keep_bytes: Some(4), lossless: "bypass" };
+        let c = TruncationCompressor { keep_bytes: Some(4), ..Default::default() };
         let conf = CompressConf::new(ErrorBound::Abs(1e-30));
         let out = decompress_any(&c.compress(&f, &conf).unwrap()).unwrap();
         assert_eq!(out.values, f.values);
@@ -253,7 +260,7 @@ mod tests {
     fn ratio_is_bytes_fraction() {
         let vals: Vec<f32> = (0..10000).map(|i| i as f32).collect();
         let f = Field::f32("r", &[10000], vals).unwrap();
-        let c = TruncationCompressor { keep_bytes: Some(2), lossless: "bypass" };
+        let c = TruncationCompressor { keep_bytes: Some(2), ..Default::default() };
         let conf = CompressConf::new(ErrorBound::Abs(1e9));
         let stream = c.compress(&f, &conf).unwrap();
         let ratio = f.nbytes() as f64 / stream.len() as f64;

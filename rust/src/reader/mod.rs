@@ -359,13 +359,14 @@ impl<'a> ContainerReader<'a> {
         })
     }
 
-    /// Fetch → verify → dispatch on the index pipeline (cross-checked
-    /// against the inner stream header) → decode → dims check. For a
-    /// delta entry this yields the *residual* field, not the snapshot.
+    /// Fetch → verify → rebuild the stage stack from the index pipeline
+    /// spec (cross-checked against the inner stream header) → decode →
+    /// dims check. For a delta entry this yields the *residual* field,
+    /// not the snapshot.
     fn decode_stream(&self, e: &ChunkEntry) -> Result<Field> {
         let stream = self.fetch_verified(e)?;
-        let compressor = pipeline::by_name(&e.pipeline).ok_or_else(|| {
-            SzError::corrupt(format!("unknown pipeline '{}' in chunk index", e.pipeline))
+        let compressor = pipeline::build(&e.pipeline).map_err(|err| {
+            pipeline::spec::unknown_pipeline_error("chunk index", &e.pipeline, &err)
         })?;
         let header = pipeline::peek_header(&stream)?;
         if header.pipeline != e.pipeline {

@@ -49,9 +49,26 @@ impl HttpClient {
 
     /// Issue `GET target` on this connection and read the full response.
     pub fn get(&mut self, target: &str) -> Result<HttpResponse> {
-        let request = format!(
-            "GET {target} HTTP/1.1\r\nHost: sz3\r\nConnection: keep-alive\r\n\r\n"
+        self.get_with_headers(target, &[])
+    }
+
+    /// `GET target` with extra request headers (e.g. `If-None-Match` for
+    /// conditional requests against the raw-chunk ETags).
+    pub fn get_with_headers(
+        &mut self,
+        target: &str,
+        extra: &[(&str, &str)],
+    ) -> Result<HttpResponse> {
+        let mut request = format!(
+            "GET {target} HTTP/1.1\r\nHost: sz3\r\nConnection: keep-alive\r\n"
         );
+        for (name, value) in extra {
+            request.push_str(name);
+            request.push_str(": ");
+            request.push_str(value);
+            request.push_str("\r\n");
+        }
+        request.push_str("\r\n");
         self.stream.get_mut().write_all(request.as_bytes())?;
         self.stream.get_mut().flush()?;
         self.read_response()

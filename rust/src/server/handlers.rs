@@ -291,6 +291,23 @@ fn raw(store: &ArtifactStore, req: &Request, id: &str) -> Response {
             )
         }
     };
+    // conditional GET: the chunk's index CRC-32 is a strong validator for
+    // the immutable payload, so ETag = quoted crc hex and a matching
+    // If-None-Match short-circuits with 304 before any payload fetch
+    // (v1 artifacts carry no CRC and therefore no ETag)
+    let etag = entry.crc32.map(|c| format!("\"{c:08x}\""));
+    if let (Some(tag), Some(inm)) = (&etag, req.header("if-none-match")) {
+        // RFC 7232 §3.2: If-None-Match uses *weak* comparison, so a
+        // W/-prefixed validator (e.g. weakened by an upstream cache)
+        // still matches our strong ETag
+        let matches = inm.split(',').map(str::trim).any(|t| {
+            let t = t.strip_prefix("W/").unwrap_or(t);
+            t == tag || t == "*"
+        });
+        if matches {
+            return Response::not_modified().with_header("ETag", tag.clone());
+        }
+    }
     match art.reader.chunk_payload(n) {
         Ok(bytes) => {
             let mut resp = Response::octets(bytes)
@@ -305,6 +322,9 @@ fn raw(store: &ArtifactStore, req: &Request, id: &str) -> Response {
                 );
             if let Some(c) = entry.crc32 {
                 resp = resp.with_header("X-SZ3-Crc32", format!("{c:#010x}"));
+            }
+            if let Some(tag) = etag {
+                resp = resp.with_header("ETag", tag);
             }
             resp
         }
@@ -480,6 +500,9 @@ mod tests {
         assert_eq!(map.len(), 8);
         assert_eq!(map[0].get("rows").unwrap().as_arr().unwrap().len(), 2);
         assert!(map[0].get("crc32").unwrap().as_f64().is_some(), "v2 carries crcs");
+        // the chunk map reports the canonical per-chunk pipeline spec
+        let canon = crate::pipeline::canonical("sz3-lr").unwrap();
+        assert_eq!(map[0].get("pipeline").unwrap().as_str(), Some(canon.as_str()));
     }
 
     #[test]
@@ -574,6 +597,48 @@ mod tests {
         // the payload is a self-describing SZ3R stream a client can decode
         let decoded = crate::pipeline::decompress_any(&resp.body).unwrap();
         assert_eq!(decoded.shape.dims()[1..], [12, 12]);
+        // the advertised pipeline is the canonical spec the index records
+        assert_eq!(
+            resp.header("X-SZ3-Pipeline"),
+            Some(crate::pipeline::canonical("sz3-lr").unwrap().as_str())
+        );
+    }
+
+    #[test]
+    fn conditional_get_on_raw_chunks_via_etag() {
+        let (store, artifact) = demo_store();
+        let stats = ServerStats::new();
+        let resp = get(&store, "/v1/artifacts/demo/raw?chunk=2");
+        assert_eq!(resp.status, 200);
+        let etag = resp.header("ETag").expect("v2+ chunks carry an ETag").to_string();
+        // ETag is the chunk CRC-32, quoted hex
+        let meta = crate::container::read_index_meta(&artifact).unwrap();
+        let crc = meta.index.entries[2].crc32.unwrap();
+        assert_eq!(etag, format!("\"{crc:08x}\""));
+        // matching If-None-Match → 304 with an empty body and the ETag
+        let mut req = Request::get("/v1/artifacts/demo/raw?chunk=2");
+        req.headers.push(("if-none-match".to_string(), etag.clone()));
+        let resp = dispatch(&store, &stats, &req);
+        assert_eq!(resp.status, 304);
+        assert!(resp.body.is_empty());
+        assert_eq!(resp.header("ETag"), Some(etag.as_str()));
+        // list form, weak-validator form, and wildcard also match
+        let mut req = Request::get("/v1/artifacts/demo/raw?chunk=2");
+        req.headers
+            .push(("if-none-match".to_string(), format!("\"deadbeef\", {etag}")));
+        assert_eq!(dispatch(&store, &stats, &req).status, 304);
+        let mut req = Request::get("/v1/artifacts/demo/raw?chunk=2");
+        req.headers.push(("if-none-match".to_string(), format!("W/{etag}")));
+        assert_eq!(dispatch(&store, &stats, &req).status, 304, "weak comparison");
+        let mut req = Request::get("/v1/artifacts/demo/raw?chunk=2");
+        req.headers.push(("if-none-match".to_string(), "*".to_string()));
+        assert_eq!(dispatch(&store, &stats, &req).status, 304);
+        // a stale validator still gets the full payload
+        let mut req = Request::get("/v1/artifacts/demo/raw?chunk=2");
+        req.headers.push(("if-none-match".to_string(), "\"00000000\"".to_string()));
+        let resp = dispatch(&store, &stats, &req);
+        assert_eq!(resp.status, 200);
+        assert!(!resp.body.is_empty());
     }
 
     /// Store with one 3-snapshot delta series artifact "ts".

@@ -288,6 +288,12 @@ impl Response {
         }
     }
 
+    /// Empty `304 Not Modified` — conditional-GET short circuit; the
+    /// caller re-attaches the validator (`ETag`) header.
+    pub fn not_modified() -> Response {
+        Response { status: 304, headers: Vec::new(), body: Vec::new() }
+    }
+
     /// Error response with the API's uniform JSON error body:
     /// `{"error":{"status":N,"message":"..."}}`.
     pub fn error(status: u16, message: &str) -> Response {
@@ -357,6 +363,7 @@ pub fn status_text(status: u16) -> &'static str {
     match status {
         200 => "OK",
         204 => "No Content",
+        304 => "Not Modified",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",

@@ -125,6 +125,46 @@ fn snapshot_and_error_matrix_over_loopback() {
         let j = Json::parse(resp.text().unwrap()).unwrap();
         let s = j.get("artifacts").unwrap().get("series").unwrap();
         assert!(s.get("delta_applied").unwrap().as_usize().is_some());
+
+        // conditional GET on raw chunks: ETag = chunk CRC-32 (quoted hex),
+        // matching If-None-Match → 304 with an empty body, stale → 200
+        let resp = client.get("/v1/artifacts/series/raw?chunk=0").unwrap();
+        assert_eq!(resp.status, 200);
+        let etag = resp.header("etag").expect("v3 chunks carry ETags").to_string();
+        let crc = sz3::container::read_index_meta(&series)
+            .unwrap()
+            .index
+            .entries[0]
+            .crc32
+            .unwrap();
+        assert_eq!(etag, format!("\"{crc:08x}\""));
+        let resp = client
+            .get_with_headers(
+                "/v1/artifacts/series/raw?chunk=0",
+                &[("If-None-Match", etag.as_str())],
+            )
+            .unwrap();
+        assert_eq!(resp.status, 304, "matching validator must short-circuit");
+        assert!(resp.body.is_empty());
+        assert_eq!(resp.header("etag"), Some(etag.as_str()));
+        let resp = client
+            .get_with_headers(
+                "/v1/artifacts/series/raw?chunk=0",
+                &[("If-None-Match", "\"00000000\"")],
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200, "stale validator gets the payload");
+
+        // the chunk map's pipeline field is the canonical per-chunk spec
+        let resp = client.get("/v1/artifacts/plain").unwrap();
+        let j = Json::parse(resp.text().unwrap()).unwrap();
+        let map = j.get("fields").unwrap().as_arr().unwrap()[0]
+            .get("chunk_map")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        let canon = sz3::pipeline::canonical("sz3-lr").unwrap();
+        assert_eq!(map[0].get("pipeline").unwrap().as_str(), Some(canon.as_str()));
     }
     handle.shutdown();
     let _ = std::fs::remove_dir_all(&dir);

@@ -59,12 +59,13 @@ fn every_registry_pipeline_roundtrips_every_survey_dataset() {
         };
         let abs = ErrorBound::Rel(1e-3).to_abs(&field).unwrap();
         for name in names {
-            let c = pipeline::by_name(name).unwrap();
+            let c = pipeline::build(name).unwrap();
             let conf = CompressConf::new(ErrorBound::Abs(abs));
             let stream = c.compress(&field, &conf).unwrap();
-            // header carries the right identity for dispatch
+            // header carries the right identity for dispatch: the alias's
+            // canonical spec
             let h = peek_header(&stream).unwrap();
-            assert_eq!(h.pipeline, name);
+            assert_eq!(h.pipeline, pipeline::canonical(name).unwrap());
             // preprocessors may reshape (e.g. linearize), but never resize
             assert_eq!(h.len(), field.len());
             let out = decompress_any(&stream).unwrap();
@@ -81,7 +82,7 @@ fn paper_claim_interp_beats_lr_on_smooth_low_bitrate() {
     let field = &ds.fields[0];
     let conf = CompressConf::new(ErrorBound::Rel(1e-2));
     let ratio = |name: &str| {
-        let c = pipeline::by_name(name).unwrap();
+        let c = pipeline::build(name).unwrap();
         let s = c.compress(field, &conf).unwrap();
         field.nbytes() as f64 / s.len() as f64
     };
@@ -100,7 +101,7 @@ fn paper_claim_truncation_fastest_lowest_quality() {
     let conf = CompressConf::new(ErrorBound::Rel(1e-3));
     let mut ratios = HashMap::new();
     for name in ["sz3-truncation", "sz3-lr", "sz3-interp"] {
-        let c = pipeline::by_name(name).unwrap();
+        let c = pipeline::build(name).unwrap();
         let stream = c.compress(field, &conf).unwrap();
         let out = decompress_any(&stream).unwrap();
         let m = metrics::evaluate(field, &out, stream.len());
@@ -149,7 +150,7 @@ fn stream_is_self_describing_across_pipelines() {
     let conf = CompressConf::new(ErrorBound::Abs(1e-2));
     let mut streams = Vec::new();
     for name in ["sz3-lr", "sz3-interp", "sz3-truncation", "fpzip-like"] {
-        streams.push(pipeline::by_name(name).unwrap().compress(&f, &conf).unwrap());
+        streams.push(pipeline::build(name).unwrap().compress(&f, &conf).unwrap());
     }
     // shuffle decode order
     for s in streams.iter().rev() {
@@ -164,7 +165,7 @@ fn corrupt_streams_error_not_panic() {
     let dims = [32usize, 32];
     let f = Field::f32("x", &dims, sz3::util::prop::smooth_field(&mut rng, &dims)).unwrap();
     let conf = CompressConf::new(ErrorBound::Abs(1e-3));
-    let stream = pipeline::by_name("sz3-lr").unwrap().compress(&f, &conf).unwrap();
+    let stream = pipeline::build("sz3-lr").unwrap().compress(&f, &conf).unwrap();
     // truncations at many offsets must produce Err, never panic
     for cut in [5usize, 20, stream.len() / 2, stream.len() - 3] {
         let r = std::panic::catch_unwind(|| decompress_any(&stream[..cut]));
@@ -192,7 +193,7 @@ fn aps_adaptive_tracks_best_baseline() {
     for eb in [0.2, 4.0] {
         let conf = CompressConf::new(ErrorBound::Abs(eb));
         let size = |name: &str| {
-            pipeline::by_name(name).unwrap().compress(&field, &conf).unwrap().len()
+            pipeline::build(name).unwrap().compress(&field, &conf).unwrap().len()
         };
         let aps = size("sz3-aps");
         let best_fixed = size("sz3-lr").min(size("lorenzo-1d"));
@@ -245,7 +246,9 @@ fn adaptive_container_mixes_pipelines_and_respects_bound() {
     assert_eq!(report.chunks, 4);
     assert!(sz3::container::is_container(&artifact));
 
-    // the chunk index must record a heterogeneous pipeline mix
+    // the chunk index must record a heterogeneous pipeline mix, as
+    // canonical specs
+    let trunc = pipeline::canonical("sz3-truncation").unwrap();
     let (index, _) = sz3::container::read_index(&artifact).unwrap();
     assert_eq!(index.entries.len(), 4);
     let mix = index.per_pipeline();
@@ -254,13 +257,13 @@ fn adaptive_container_mixes_pipelines_and_respects_bound() {
         "heterogeneous field should select ≥2 pipelines, got {mix:?}"
     );
     assert!(
-        mix.iter().any(|(p, _)| p == "sz3-truncation"),
+        mix.iter().any(|(p, _)| *p == trunc),
         "noise chunks should pick truncation: {mix:?}"
     );
     for e in &index.entries {
         if e.rows.1 <= nz / 2 {
             assert_ne!(
-                e.pipeline, "sz3-truncation",
+                e.pipeline, trunc,
                 "smooth rows {:?} must use a predictor",
                 e.rows
             );
@@ -272,6 +275,59 @@ fn adaptive_container_mixes_pipelines_and_respects_bound() {
     assert_eq!(out.shape.dims(), field.shape.dims(), "bit-shape-exact dims");
     assert!(matches!(out.values, FieldValues::F32(_)), "dtype preserved");
     check_bound(&field, &out, eb, "adaptive-container");
+}
+
+/// Acceptance (pipeline-spec API): a composed pipeline that corresponds to
+/// **no** registry alias compresses via the spec, records its canonical
+/// spec in the stream header and the container chunk index, and
+/// decompresses bit-identically through `decompress_any` with no alias
+/// lookup — while all registry aliases keep resolving.
+#[test]
+fn composed_spec_pipeline_end_to_end() {
+    let spec = "linearize/lorenzo/linear@r512/arithmetic/rle";
+    let canon = pipeline::canonical(spec).unwrap();
+    assert!(
+        sz3::pipeline::spec::ALIASES.iter().all(|(_, c)| *c != canon),
+        "test needs a composition outside the alias table"
+    );
+    let mut rng = Pcg32::seeded(0x5bec);
+    let dims = [20usize, 12, 12];
+    let field =
+        Field::f32("hx", &dims, sz3::util::prop::smooth_field(&mut rng, &dims)).unwrap();
+    let eb = 1e-3;
+    let conf = CompressConf::new(ErrorBound::Abs(eb));
+
+    // single-stream path: header carries the canonical spec, roundtrip is
+    // self-describing
+    let c = pipeline::build(spec).unwrap();
+    assert_eq!(c.name(), canon);
+    let stream = c.compress(&field, &conf).unwrap();
+    assert_eq!(peek_header(&stream).unwrap().pipeline, canon);
+    let out = decompress_any(&stream).unwrap();
+    assert_eq!(out.shape.dims(), field.shape.dims());
+    check_bound(&field, &out, eb, "spec-stream");
+    // bit-identical re-decode through a freshly built stack
+    let again = pipeline::build(&canon).unwrap().decompress(&stream).unwrap();
+    assert_eq!(again.values, out.values);
+
+    // container path: the chunk index records the canonical spec per chunk
+    // and the container decodes through the common entry point
+    let cfg = JobConfig {
+        pipeline: spec.into(),
+        bound: ErrorBound::Abs(eb),
+        workers: 2,
+        chunk_elems: 12 * 12 * 5, // 4 chunks
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let (artifact, report) = coord.run_to_container(vec![field.clone()]).unwrap();
+    assert_eq!(report.chunks, 4);
+    let (index, _) = sz3::container::read_index(&artifact).unwrap();
+    assert!(index.entries.iter().all(|e| e.pipeline == canon), "{index:?}");
+    let out = decompress_any(&artifact).unwrap();
+    assert_eq!(out.shape.dims(), field.shape.dims());
+    check_bound(&field, &out, eb, "spec-container");
 }
 
 #[test]
@@ -459,7 +515,7 @@ fn pwrel_bound_via_log_transform_pipeline() {
     let mut conf = CompressConf::new(ErrorBound::PwRel(rel));
     let t = LogTransform::default();
     let state = t.process(&mut field, &mut conf).unwrap();
-    let c = pipeline::by_name("lorenzo-1d").unwrap();
+    let c = pipeline::build("lorenzo-1d").unwrap();
     let stream = c.compress(&field, &conf).unwrap();
     let mut out = decompress_any(&stream).unwrap();
     t.postprocess(&mut out, &state).unwrap();
