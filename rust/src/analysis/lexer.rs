@@ -1,0 +1,388 @@
+//! Hand-rolled Rust lexer for the `sz3 audit` static-analysis pass.
+//!
+//! `syn`/`proc-macro2` are unavailable offline, and the audit rules only
+//! need a faithful *token* view of the source — not a parse tree — so
+//! this lexer handles exactly the constructs that would otherwise corrupt
+//! a token stream: line and (nested) block comments, string literals with
+//! escapes, raw strings with arbitrary `#` fences, byte strings, char
+//! literals vs. lifetimes, numeric literals with suffixes/exponents, and
+//! multi-character operators (so `<<` is distinguishable from `<` and
+//! `+=` from `+`).
+//!
+//! Two audit-specific extras ride on the lexer:
+//! * `// audit:allow(rule, reason = "...")` comments are collected as
+//!   [`Allow`] records instead of being discarded with other comments.
+//! * a post-pass marks every token inside a `#[cfg(test)]` item as
+//!   test-scope, so rules can exempt test code (tests exercise panics on
+//!   purpose; the production invariant is about the shipped decode path).
+
+/// Token classification — only as fine-grained as the rules require.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric literal (int or float, any base/suffix).
+    Num,
+    /// String, raw-string, byte-string or char literal.
+    Str,
+    /// Lifetime (`'a`).
+    Life,
+    /// Operator / punctuation (multi-char ops are single tokens).
+    Op,
+}
+
+/// One lexed token with its source position.
+#[derive(Debug, Clone)]
+pub struct Token {
+    /// Token text (for `Op`, the operator itself, e.g. `"<<"`).
+    pub text: String,
+    /// Classification.
+    pub kind: Kind,
+    /// 1-based source line.
+    pub line: usize,
+    /// Inside a `#[cfg(test)]` item.
+    pub test_scope: bool,
+}
+
+/// One `// audit:allow(rule, reason = "...")` annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// 1-based line the comment sits on (suppresses findings on this line
+    /// and the next).
+    pub line: usize,
+    /// Rule id named by the annotation.
+    pub rule: String,
+    /// Whether a non-empty `reason = "..."` was supplied.
+    pub reason_ok: bool,
+}
+
+/// Multi-character operators, longest first so maximal munch works.
+const MULTI_OPS: [&str; 22] = [
+    "<<=", ">>=", "..=", "::", "->", "=>", "==", "!=", "<=", ">=", "&&",
+    "||", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", "..",
+];
+
+/// Lexer output: the token stream plus every audit annotation seen.
+pub struct Lexed {
+    /// Tokens in source order (comments and whitespace dropped).
+    pub tokens: Vec<Token>,
+    /// `audit:allow` annotations in source order.
+    pub allows: Vec<Allow>,
+}
+
+/// Parse an `audit:allow(...)` comment body (text after `//`, trimmed).
+fn parse_allow(body: &str, line: usize) -> Option<Allow> {
+    let rest = body.trim().strip_prefix("audit:allow(")?;
+    let inner = rest.rsplit_once(')').map(|(i, _)| i).unwrap_or(rest);
+    let (rule, tail) = match inner.split_once(',') {
+        Some((r, t)) => (r.trim(), Some(t)),
+        None => (inner.trim(), None),
+    };
+    let reason_ok = tail
+        .and_then(|t| t.split_once('='))
+        .map(|(k, v)| {
+            k.trim() == "reason" && v.trim().trim_matches('"').trim().len() >= 3
+        })
+        .unwrap_or(false);
+    Some(Allow { line, rule: rule.to_string(), reason_ok })
+}
+
+/// Lex `src` into tokens + annotations. Never panics: malformed input
+/// (unterminated strings/comments) simply ends the current token at EOF.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut tokens = Vec::new();
+    let mut allows = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let at = |i: usize| chars.get(i).copied().unwrap_or('\0');
+    while i < n {
+        let c = at(i);
+        if c == '\n' {
+            line = line.saturating_add(1);
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (and audit annotation collection)
+        if c == '/' && at(i + 1) == '/' {
+            let start = i + 2;
+            while i < n && at(i) != '\n' {
+                i += 1;
+            }
+            let body: String = chars.get(start..i).unwrap_or(&[]).iter().collect();
+            if let Some(a) = parse_allow(&body, line) {
+                allows.push(a);
+            }
+            continue;
+        }
+        // nested block comment
+        if c == '/' && at(i + 1) == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if at(i) == '/' && at(i + 1) == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if at(i) == '*' && at(i + 1) == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if at(i) == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw strings: r"..." / r#"..."# / br#"..."# with any fence depth
+        if (c == 'r' || c == 'b') && !at(i).is_numeric() {
+            let (prefix_len, is_raw) = if c == 'r' {
+                (1, at(i + 1) == '"' || at(i + 1) == '#')
+            } else if at(i + 1) == 'r' {
+                (2, at(i + 2) == '"' || at(i + 2) == '#')
+            } else {
+                (0, false)
+            };
+            if is_raw {
+                let mut j = i + prefix_len;
+                let mut fence = 0usize;
+                while at(j) == '#' {
+                    fence += 1;
+                    j += 1;
+                }
+                if at(j) == '"' {
+                    j += 1;
+                    // scan for `"` followed by `fence` hashes
+                    loop {
+                        if j >= n {
+                            break;
+                        }
+                        if at(j) == '\n' {
+                            line += 1;
+                            j += 1;
+                            continue;
+                        }
+                        if at(j) == '"' {
+                            let mut k = j + 1;
+                            let mut seen = 0usize;
+                            while seen < fence && at(k) == '#' {
+                                seen += 1;
+                                k += 1;
+                            }
+                            if seen == fence {
+                                j = k;
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    tokens.push(Token {
+                        text: String::new(),
+                        kind: Kind::Str,
+                        line,
+                        test_scope: false,
+                    });
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        // string / byte-string literal with escapes
+        if c == '"' || (c == 'b' && at(i + 1) == '"') {
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            while j < n {
+                match at(j) {
+                    '\\' => j += 2,
+                    '"' => {
+                        j += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        j += 1;
+                    }
+                    _ => j += 1,
+                }
+            }
+            tokens.push(Token {
+                text: String::new(),
+                kind: Kind::Str,
+                line,
+                test_scope: false,
+            });
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let nx = at(i + 1);
+            if nx == '\\' {
+                // escaped char literal: '\n', '\u{1F600}', '\'' ...
+                // skip the escaped character so '\'' closes correctly
+                let mut j = i + 3;
+                if at(i + 2) == 'u' && at(j) == '{' {
+                    while j < n && at(j) != '}' {
+                        j += 1;
+                    }
+                }
+                while j < n && at(j) != '\'' {
+                    j += 1;
+                }
+                tokens.push(Token {
+                    text: String::new(),
+                    kind: Kind::Str,
+                    line,
+                    test_scope: false,
+                });
+                i = j + 1;
+                continue;
+            }
+            if at(i + 2) == '\'' && nx != '\'' {
+                // 'x'
+                tokens.push(Token {
+                    text: String::new(),
+                    kind: Kind::Str,
+                    line,
+                    test_scope: false,
+                });
+                i += 3;
+                continue;
+            }
+            // lifetime: 'ident (no closing quote)
+            let mut j = i + 1;
+            while j < n && (at(j).is_alphanumeric() || at(j) == '_') {
+                j += 1;
+            }
+            tokens.push(Token {
+                text: String::new(),
+                kind: Kind::Life,
+                line,
+                test_scope: false,
+            });
+            i = j.max(i + 1);
+            continue;
+        }
+        // identifier / keyword
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (at(i).is_alphanumeric() || at(i) == '_') {
+                i += 1;
+            }
+            let text: String = chars.get(start..i).unwrap_or(&[]).iter().collect();
+            tokens.push(Token { text, kind: Kind::Ident, line, test_scope: false });
+            continue;
+        }
+        // numeric literal (loose: base prefixes, underscores, suffixes,
+        // exponents; stops before `..` so ranges lex as Num Op Num)
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                let d = at(i);
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                } else if d == '.' && at(i + 1) != '.' && at(i + 1) != '\0' {
+                    // float point, but not a range and not a method call
+                    if at(i + 1).is_ascii_digit() {
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                } else if (d == '+' || d == '-')
+                    && matches!(at(i.saturating_sub(1)), 'e' | 'E')
+                {
+                    i += 1; // exponent sign: 1e-3
+                } else {
+                    break;
+                }
+            }
+            let text: String = chars.get(start..i).unwrap_or(&[]).iter().collect();
+            tokens.push(Token { text, kind: Kind::Num, line, test_scope: false });
+            continue;
+        }
+        // operators: maximal munch over the multi-char table
+        let mut matched = None;
+        for op in MULTI_OPS {
+            let oc: Vec<char> = op.chars().collect();
+            if chars.get(i..i + oc.len()) == Some(&oc[..]) {
+                matched = Some(op);
+                break;
+            }
+        }
+        if let Some(op) = matched {
+            tokens.push(Token {
+                text: op.to_string(),
+                kind: Kind::Op,
+                line,
+                test_scope: false,
+            });
+            i += op.len();
+            continue;
+        }
+        tokens.push(Token {
+            text: c.to_string(),
+            kind: Kind::Op,
+            line,
+            test_scope: false,
+        });
+        i += 1;
+    }
+    mark_test_scope(&mut tokens);
+    Lexed { tokens, allows }
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` item (the attribute
+/// itself, through the end of the following braced item or statement).
+fn mark_test_scope(tokens: &mut [Token]) {
+    let is = |t: Option<&Token>, s: &str| t.map(|t| t.text == s).unwrap_or(false);
+    let mut i = 0usize;
+    while i < tokens.len() {
+        let hit = is(tokens.get(i), "#")
+            && is(tokens.get(i + 1), "[")
+            && is(tokens.get(i + 2), "cfg")
+            && is(tokens.get(i + 3), "(")
+            && is(tokens.get(i + 4), "test")
+            && is(tokens.get(i + 5), ")")
+            && is(tokens.get(i + 6), "]");
+        if !hit {
+            i += 1;
+            continue;
+        }
+        // span the following item: to the matching `}` of its first brace
+        // block, or to `;` for brace-less items (`#[cfg(test)] use x;`)
+        let mut j = i + 7;
+        let mut depth = 0usize;
+        let mut braced = false;
+        while j < tokens.len() {
+            match tokens.get(j).map(|t| t.text.as_str()) {
+                Some("{") => {
+                    depth += 1;
+                    braced = true;
+                }
+                Some("}") => {
+                    depth = depth.saturating_sub(1);
+                    if braced && depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                Some(";") if !braced => {
+                    j += 1;
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        for t in tokens.iter_mut().take(j).skip(i) {
+            t.test_scope = true;
+        }
+        i = j;
+    }
+}

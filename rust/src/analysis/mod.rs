@@ -1,0 +1,289 @@
+//! `sz3 audit` — a dependency-free static-analysis pass that makes the
+//! repo's panic-freedom invariant a build-time property.
+//!
+//! The corruption-fuzz suite (PR 4) proved *dynamically* that mutated
+//! containers error instead of panicking. This module enforces the same
+//! invariant *statically*: every module that parses attacker-controlled
+//! bytes (the [trust map](TRUST_MAP)) is lexed ([`lexer`]) and checked
+//! ([`rules`]) for `unwrap`/`expect`/`panic!`-family calls, non-literal
+//! slice indexing, unchecked `+`/`*`/`<<` on length-named values,
+//! truncating `as` casts of decoded values, and `let _ =` swallowed
+//! results. Violations either get refactored into [`crate::SzError`]
+//! returns or carry an explicit `// audit:allow(rule, reason = "...")`
+//! annotation, which the tool counts and reports so every exception
+//! stays visible.
+//!
+//! Run locally with `cargo run --release -- audit` (add `--strict` to
+//! fail on findings, `--json` for machine-readable output); CI runs the
+//! strict mode as a blocking job. Rule catalog and the rationale for
+//! each trust-map entry live in `docs/AUDIT.md`.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{Finding, RULES};
+
+use crate::error::{Result, SzError};
+use std::path::{Path, PathBuf};
+
+/// Modules that parse or index attacker-controlled bytes. Entries ending
+/// in `/` cover a whole directory. Paths are repo-relative with forward
+/// slashes.
+///
+/// Deliberately *not* listed: `container/adaptive.rs` and
+/// `container/fixtures.rs` (compression-side selection / test-corpus
+/// generation — they consume trusted in-process data), and the
+/// compression-side pipeline stages, whose inputs are the caller's own
+/// fields. `docs/AUDIT.md` records the rationale per entry.
+pub const TRUST_MAP: [&str; 11] = [
+    "rust/src/byteio.rs",
+    "rust/src/bitio.rs",
+    "rust/src/container/mod.rs",
+    "rust/src/container/delta.rs",
+    "rust/src/reader/mod.rs",
+    "rust/src/reader/source.rs",
+    "rust/src/reader/cache.rs",
+    "rust/src/server/http.rs",
+    "rust/src/server/handlers.rs",
+    "rust/src/encoder/",
+    "rust/src/lossless/",
+];
+
+/// True if `rel` (repo-relative, forward slashes) is in the trust map.
+pub fn is_untrusted(rel: &str) -> bool {
+    TRUST_MAP.iter().any(|entry| {
+        if let Some(dir) = entry.strip_suffix('/') {
+            rel.starts_with(dir)
+                && rel.get(dir.len()..dir.len() + 1) == Some("/")
+        } else {
+            rel == *entry
+        }
+    })
+}
+
+/// One applied (or dangling) suppression annotation.
+#[derive(Debug, Clone)]
+pub struct SuppressionReport {
+    /// Repo-relative file.
+    pub file: String,
+    /// Annotation line.
+    pub line: usize,
+    /// Rule it names.
+    pub rule: String,
+    /// How many findings it silenced (0 = dangling annotation).
+    pub used: usize,
+}
+
+/// Full audit result over the library tree.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    /// Unsuppressed violations (strict mode fails when non-empty).
+    pub findings: Vec<Finding>,
+    /// Every `audit:allow` annotation with its use count.
+    pub suppressions: Vec<SuppressionReport>,
+    /// `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Files of those in the trust map.
+    pub files_untrusted: usize,
+}
+
+impl AuditReport {
+    /// Total findings silenced by annotations.
+    pub fn suppressed_count(&self) -> usize {
+        self.suppressions.iter().map(|s| s.used).sum()
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| SzError::config(format!("audit: reading {}: {e}", dir.display())))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Audit one file's source text. `rel` decides trust-map membership.
+/// Exposed for the self-test corpus, which feeds fixture snippets
+/// through the same path the repo scan uses.
+pub fn audit_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<SuppressionReport>) {
+    let lexed = lexer::lex(src);
+    let lines: Vec<&str> = src.lines().collect();
+    let raw = rules::check(rel, &lexed, is_untrusted(rel), &lines);
+    let known_rule = |r: &str| RULES.iter().any(|(id, _)| *id == r);
+    let mut used = vec![0usize; lexed.allows.len()];
+    let mut findings = Vec::new();
+    // a malformed annotation (unknown rule / missing reason) is itself a
+    // finding, attributed to the `swallow`-style catch-all id "allow"
+    for a in lexed.allows.iter() {
+        if !known_rule(&a.rule) || !a.reason_ok {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: a.line,
+                rule: "allow",
+                snippet: format!(
+                    "audit:allow({}) {}",
+                    a.rule,
+                    if a.reason_ok { "names an unknown rule" } else { "is missing a reason" }
+                ),
+            });
+        }
+    }
+    for f in raw {
+        let hit = lexed.allows.iter().enumerate().find(|(_, a)| {
+            a.rule == f.rule
+                && a.reason_ok
+                && (a.line == f.line || a.line + 1 == f.line)
+        });
+        match hit {
+            Some((ai, _)) => {
+                if let Some(slot) = used.get_mut(ai) {
+                    *slot += 1;
+                }
+            }
+            None => findings.push(f),
+        }
+    }
+    let suppressions = lexed
+        .allows
+        .iter()
+        .zip(used)
+        .map(|(a, n)| SuppressionReport {
+            file: rel.to_string(),
+            line: a.line,
+            rule: a.rule.clone(),
+            used: n,
+        })
+        .collect();
+    (findings, suppressions)
+}
+
+/// Audit the library tree under `root` (the repo root: scans
+/// `rust/src/**/*.rs`). Tests, benches and examples are out of scope —
+/// the invariant is about shipped decode paths.
+pub fn audit_repo(root: &Path) -> Result<AuditReport> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    let mut report = AuditReport { files_scanned: files.len(), ..Default::default() };
+    for path in &files {
+        let rel_path = path.strip_prefix(root).unwrap_or(path);
+        let rel = rel_path
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        // a file named tests.rs is an out-of-line `#[cfg(test)] mod tests;`
+        // body: all test scope, like inline test modules
+        if rel.ends_with("/tests.rs") {
+            continue;
+        }
+        if is_untrusted(&rel) {
+            report.files_untrusted += 1;
+        }
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| SzError::config(format!("audit: reading {rel}: {e}")))?;
+        let (findings, suppressions) = audit_source(&rel, &src);
+        report.findings.extend(findings);
+        report.suppressions.extend(suppressions);
+    }
+    Ok(report)
+}
+
+/// Human-readable report text (what `sz3 audit` prints).
+pub fn format_report(r: &AuditReport) -> String {
+    let mut out = String::new();
+    for f in &r.findings {
+        out.push_str(&format!(
+            "{}:{}: [{}] {}\n",
+            f.file, f.line, f.rule, f.snippet
+        ));
+    }
+    for s in &r.suppressions {
+        if s.used == 0 {
+            out.push_str(&format!(
+                "{}:{}: warning: unused audit:allow({})\n",
+                s.file, s.line, s.rule
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "audit: {} findings, {} suppressed by {} annotations, \
+         {} files scanned ({} untrusted-input)\n",
+        r.findings.len(),
+        r.suppressed_count(),
+        r.suppressions.len(),
+        r.files_scanned,
+        r.files_untrusted,
+    ));
+    out
+}
+
+/// Minimal JSON string escape (no serde offline).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON report (what `sz3 audit --json` prints).
+pub fn format_report_json(r: &AuditReport) -> String {
+    let findings: Vec<String> = r
+        .findings
+        .iter()
+        .map(|f| {
+            format!(
+                "{{\"file\":{},\"line\":{},\"rule\":{},\"snippet\":{}}}",
+                json_str(&f.file),
+                f.line,
+                json_str(f.rule),
+                json_str(&f.snippet)
+            )
+        })
+        .collect();
+    let sups: Vec<String> = r
+        .suppressions
+        .iter()
+        .map(|s| {
+            format!(
+                "{{\"file\":{},\"line\":{},\"rule\":{},\"used\":{}}}",
+                json_str(&s.file),
+                s.line,
+                json_str(&s.rule),
+                s.used
+            )
+        })
+        .collect();
+    format!(
+        "{{\"findings\":[{}],\"suppressions\":[{}],\
+         \"files_scanned\":{},\"files_untrusted\":{}}}\n",
+        findings.join(","),
+        sups.join(","),
+        r.files_scanned,
+        r.files_untrusted
+    )
+}
+
+#[cfg(test)]
+mod tests;

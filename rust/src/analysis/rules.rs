@@ -1,0 +1,239 @@
+//! Audit rule set: panic-freedom and checked-arithmetic checks over the
+//! lexed token stream of one source file.
+//!
+//! Rules fire only outside `#[cfg(test)]` scope. All rules except
+//! `swallow` additionally require the file to be in the trust map (see
+//! [`super::is_untrusted`]) — they encode the invariant "code that
+//! touches attacker-controlled bytes must not be able to panic or wrap";
+//! `swallow` (`let _ =` discarding a value, typically a `Result`) is a
+//! correctness smell everywhere and applies to the whole library tree.
+//!
+//! The taint heuristic is lexical by design (no type information without
+//! a compiler): an identifier is *tainted* when any snake_case component
+//! matches a stem that decode code uses for lengths, counts and offsets.
+//! That makes `payload_len + 4`, `base_offset * elems` and
+//! `chunk_count << 3` findings, while `fa + fb` (Huffman weights) or
+//! `a + b` stay silent. False negatives are accepted — the dynamic
+//! corruption-fuzz suite backstops them — but every *flagged* site must
+//! be fixed or carry an `audit:allow` with a reason.
+
+use super::lexer::{Kind, Lexed, Token};
+
+/// One rule violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative source path.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule id (see [`RULES`]).
+    pub rule: &'static str,
+    /// Trimmed source line.
+    pub snippet: String,
+}
+
+/// Rule ids with one-line descriptions (the `docs/AUDIT.md` catalog is
+/// generated from the same invariants).
+pub const RULES: [(&str, &str); 7] = [
+    ("panic", "panic!/unreachable!/todo!/unimplemented! in untrusted-input code"),
+    ("unwrap", ".unwrap() in untrusted-input code"),
+    ("expect", ".expect(...) in untrusted-input code"),
+    ("index", "slice/array indexing with a non-literal index in untrusted-input code"),
+    ("arith", "unchecked +, * or << on a length/offset/count-named value"),
+    ("cast", "truncating `as` cast of a length/offset/count-named or freshly decoded value"),
+    ("swallow", "`let _ =` discarding a value (handle it or annotate why)"),
+];
+
+/// Identifier stems treated as length/offset/count-tainted.
+const TAINT_STEMS: [&str; 14] = [
+    "len", "size", "count", "counts", "offset", "offsets", "off", "idx",
+    "index", "pos", "dim", "dims", "elems", "nbytes",
+];
+
+/// Integer types an `as` cast can truncate a decoded 64-bit length into.
+/// (`usize`/`isize` are 32-bit on some targets, so they are included.)
+const NARROW_TYPES: [&str; 8] =
+    ["u8", "u16", "u32", "i8", "i16", "i32", "usize", "isize"];
+
+/// Decoder methods returning attacker-controlled 64-bit values whose
+/// result must not be narrowed with a bare `as`.
+const WIDE_DECODERS: [&str; 2] = ["get_varint", "get_u64"];
+
+/// True if `name` contains a tainted snake_case component.
+fn is_tainted(name: &str) -> bool {
+    name.split('_').any(|part| {
+        let p = part.to_ascii_lowercase();
+        TAINT_STEMS.iter().any(|s| *s == p)
+    })
+}
+
+/// True if the token can end an expression (making a following `[` an
+/// index operation and a following binary operator binary).
+fn ends_expr(t: &Token) -> bool {
+    match t.kind {
+        Kind::Ident => !matches!(
+            t.text.as_str(),
+            "return" | "break" | "continue" | "match" | "if" | "while"
+                | "else" | "in" | "as" | "let" | "mut" | "ref" | "move"
+        ),
+        Kind::Num | Kind::Str => true,
+        Kind::Life => false,
+        Kind::Op => matches!(t.text.as_str(), ")" | "]" | "?"),
+    }
+}
+
+/// Walk `toks[idx]` == `)` back to its matching `(` and return the index
+/// of the token *before* that `(` (the callee), if any.
+fn callee_before_close_paren(toks: &[Token], idx: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut j = idx;
+    loop {
+        match toks.get(j)?.text.as_str() {
+            ")" => depth += 1,
+            "(" => {
+                if depth <= 1 {
+                    return j.checked_sub(1);
+                }
+                depth -= 1;
+            }
+            _ => {}
+        }
+        j = j.checked_sub(1)?;
+    }
+}
+
+/// Run every rule over one lexed file. `untrusted` gates all rules but
+/// `swallow`. `lines` are the file's source lines for snippets.
+pub fn check(
+    file: &str,
+    lexed: &Lexed,
+    untrusted: bool,
+    lines: &[&str],
+) -> Vec<Finding> {
+    let toks = &lexed.tokens;
+    let mut out = Vec::new();
+    let snippet = |line: usize| -> String {
+        let s = lines.get(line.saturating_sub(1)).copied().unwrap_or("");
+        let s = s.trim();
+        if s.len() > 120 {
+            let end = (0..=120).rev().find(|&e| s.is_char_boundary(e)).unwrap_or(0);
+            format!("{}…", s.get(..end).unwrap_or(""))
+        } else {
+            s.to_string()
+        }
+    };
+    let mut push = |line: usize, rule: &'static str| {
+        out.push(Finding { file: file.to_string(), line, rule, snippet: snippet(line) });
+    };
+    for (i, t) in toks.iter().enumerate() {
+        if t.test_scope {
+            continue;
+        }
+        let prev = i.checked_sub(1).and_then(|p| toks.get(p));
+        let next = toks.get(i + 1);
+        let is_op = |tt: Option<&Token>, s: &str| {
+            tt.map(|x| x.kind == Kind::Op && x.text == s).unwrap_or(false)
+        };
+
+        if untrusted && t.kind == Kind::Ident && is_op(next, "!") {
+            if matches!(
+                t.text.as_str(),
+                "panic" | "unreachable" | "todo" | "unimplemented"
+            ) {
+                push(t.line, "panic");
+            }
+        }
+
+        if untrusted && t.kind == Kind::Ident && is_op(prev, ".") {
+            if t.text == "unwrap" && is_op(next, "(") && is_op(toks.get(i + 2), ")") {
+                push(t.line, "unwrap");
+            }
+            if t.text == "expect" && is_op(next, "(") {
+                push(t.line, "expect");
+            }
+        }
+
+        // index: postfix `expr[ ... ]` whose brackets hold any non-literal
+        if untrusted
+            && t.kind == Kind::Op
+            && t.text == "["
+            && prev.map(ends_expr).unwrap_or(false)
+        {
+            let mut depth = 1usize;
+            let mut j = i + 1;
+            let mut non_literal = false;
+            while depth > 0 {
+                let Some(inner) = toks.get(j) else { break };
+                match (inner.kind, inner.text.as_str()) {
+                    (Kind::Op, "[") => depth += 1,
+                    (Kind::Op, "]") => depth -= 1,
+                    (Kind::Num, _) | (Kind::Op, "..") | (Kind::Op, "..=") => {}
+                    _ if depth > 0 => non_literal = true,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if non_literal {
+                push(t.line, "index");
+            }
+        }
+
+        // arith: binary + / * / << with a tainted adjacent identifier
+        if untrusted
+            && t.kind == Kind::Op
+            && matches!(t.text.as_str(), "+" | "*" | "<<")
+            && prev.map(ends_expr).unwrap_or(false)
+        {
+            let tainted_side = |tt: Option<&Token>| {
+                tt.map(|x| x.kind == Kind::Ident && is_tainted(&x.text))
+                    .unwrap_or(false)
+            };
+            if tainted_side(prev) || tainted_side(next) {
+                push(t.line, "arith");
+            }
+        }
+
+        // cast: `tainted_ident as narrow` or `decode_call()? as narrow`
+        if untrusted && t.kind == Kind::Ident && t.text == "as" {
+            let narrow = next
+                .map(|x| {
+                    x.kind == Kind::Ident
+                        && NARROW_TYPES.iter().any(|n| *n == x.text)
+                })
+                .unwrap_or(false);
+            if narrow {
+                let from_tainted = prev
+                    .map(|x| x.kind == Kind::Ident && is_tainted(&x.text))
+                    .unwrap_or(false);
+                let from_decoder = is_op(prev, "?")
+                    && i.checked_sub(2)
+                        .and_then(|p| {
+                            if is_op(toks.get(p), ")") {
+                                callee_before_close_paren(toks, p)
+                            } else {
+                                None
+                            }
+                        })
+                        .and_then(|c| toks.get(c))
+                        .map(|c| {
+                            c.kind == Kind::Ident
+                                && WIDE_DECODERS.iter().any(|d| *d == c.text)
+                        })
+                        .unwrap_or(false);
+                if from_tainted || from_decoder {
+                    push(t.line, "cast");
+                }
+            }
+        }
+
+        // swallow: `let _ =` (library-wide, trust map or not)
+        if t.kind == Kind::Ident
+            && t.text == "let"
+            && next.map(|x| x.kind == Kind::Ident && x.text == "_").unwrap_or(false)
+            && is_op(toks.get(i + 2), "=")
+        {
+            push(t.line, "swallow");
+        }
+    }
+    out
+}

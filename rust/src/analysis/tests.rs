@@ -1,0 +1,184 @@
+//! Audit self-test corpus: every rule must fire on its trigger fixture
+//! and stay silent on its clean fixture, suppressions must silence and
+//! be counted, and — the point of the whole subsystem — the repo itself
+//! must audit clean. The fixtures live in `testdata/*.rs.txt` (non-`.rs`
+//! so cargo never tries to compile them) and run through the exact
+//! [`super::audit_source`] path the repo scan uses.
+
+use super::{audit_source, is_untrusted, lexer, rules, TRUST_MAP};
+
+/// A path inside the trust map, so every rule is active.
+const HOT: &str = "rust/src/container/mod.rs";
+/// A library path outside the trust map: only `swallow` applies.
+const COLD: &str = "rust/src/metrics.rs";
+
+fn rules_fired(path: &str, src: &str) -> Vec<&'static str> {
+    let (findings, _) = audit_source(path, src);
+    findings.iter().map(|f| f.rule).collect()
+}
+
+fn count_rule(path: &str, src: &str, rule: &str) -> usize {
+    rules_fired(path, src).iter().filter(|r| **r == rule).count()
+}
+
+#[test]
+fn trigger_fixtures_fire_their_rule() {
+    let cases: [(&str, &str, usize); 7] = [
+        ("panic", include_str!("testdata/trigger_panic.rs.txt"), 4),
+        ("unwrap", include_str!("testdata/trigger_unwrap.rs.txt"), 1),
+        ("expect", include_str!("testdata/trigger_expect.rs.txt"), 1),
+        ("index", include_str!("testdata/trigger_index.rs.txt"), 2),
+        ("arith", include_str!("testdata/trigger_arith.rs.txt"), 3),
+        ("cast", include_str!("testdata/trigger_cast.rs.txt"), 2),
+        ("swallow", include_str!("testdata/trigger_swallow.rs.txt"), 1),
+    ];
+    for (rule, src, expected) in cases {
+        assert_eq!(
+            count_rule(HOT, src, rule),
+            expected,
+            "rule '{rule}' trigger fixture: got {:?}",
+            rules_fired(HOT, src)
+        );
+    }
+}
+
+#[test]
+fn clean_fixtures_stay_silent() {
+    let cases: [(&str, &str); 7] = [
+        ("panic", include_str!("testdata/clean_panic.rs.txt")),
+        ("unwrap", include_str!("testdata/clean_unwrap.rs.txt")),
+        ("expect", include_str!("testdata/clean_expect.rs.txt")),
+        ("index", include_str!("testdata/clean_index.rs.txt")),
+        ("arith", include_str!("testdata/clean_arith.rs.txt")),
+        ("cast", include_str!("testdata/clean_cast.rs.txt")),
+        ("swallow", include_str!("testdata/clean_swallow.rs.txt")),
+    ];
+    for (rule, src) in cases {
+        let fired = rules_fired(HOT, src);
+        assert!(
+            fired.is_empty(),
+            "clean fixture for '{rule}' fired {fired:?}"
+        );
+    }
+}
+
+#[test]
+fn outside_trust_map_only_swallow_applies() {
+    let trigger_unwrap = include_str!("testdata/trigger_unwrap.rs.txt");
+    assert!(rules_fired(COLD, trigger_unwrap).is_empty());
+    let trigger_swallow = include_str!("testdata/trigger_swallow.rs.txt");
+    assert_eq!(rules_fired(COLD, trigger_swallow), vec!["swallow"]);
+}
+
+#[test]
+fn suppressions_silence_count_and_report_unused() {
+    let src = include_str!("testdata/suppressed.rs.txt");
+    let (findings, sups) = audit_source(HOT, src);
+    assert!(findings.is_empty(), "suppressed fixture fired {findings:?}");
+    assert_eq!(sups.len(), 3);
+    let by_rule: Vec<(&str, usize)> =
+        sups.iter().map(|s| (s.rule.as_str(), s.used)).collect();
+    assert_eq!(
+        by_rule,
+        vec![("index", 1), ("unwrap", 1), ("panic", 0)],
+        "next-line and same-line allows must each count once; the \
+         dangling allow must report used=0"
+    );
+}
+
+#[test]
+fn malformed_allows_are_findings_and_do_not_suppress() {
+    let src = include_str!("testdata/bad_allow.rs.txt");
+    let (findings, _) = audit_source(HOT, src);
+    let fired: Vec<&str> = findings.iter().map(|f| f.rule).collect();
+    // reason-less allow + the unwrap it failed to cover + unknown rule id
+    assert_eq!(fired, vec!["allow", "allow", "unwrap"]);
+}
+
+#[test]
+fn trust_map_membership() {
+    for entry in TRUST_MAP {
+        if let Some(dir) = entry.strip_suffix('/') {
+            assert!(is_untrusted(&format!("{dir}/anything.rs")), "{entry}");
+        } else {
+            assert!(is_untrusted(entry), "{entry}");
+        }
+    }
+    assert!(!is_untrusted("rust/src/metrics.rs"));
+    assert!(!is_untrusted("rust/src/container/adaptive.rs"));
+    assert!(!is_untrusted("rust/src/container/fixtures.rs"));
+    assert!(!is_untrusted("rust/src/encoder.rs"), "dir prefix must not match a sibling file");
+}
+
+#[test]
+fn lexer_handles_strings_comments_lifetimes() {
+    let src = r##"
+        // comment with .unwrap() and panic!
+        /* block /* nested */ with buf[i] */
+        fn f<'a>(x: &'a str) -> char {
+            let s = "a string with .unwrap() and \" escapes";
+            let r = r#"raw with buf[i] and "quotes""#;
+            let c = 'x';
+            let esc = '\'';
+            let _use = (s, r, c, esc);
+            '\n'
+        }
+    "##;
+    let lexed = lexer::lex(src);
+    // none of the comment/string bodies may materialize as code tokens
+    assert!(!lexed
+        .tokens
+        .iter()
+        .any(|t| t.text == "unwrap" || t.text == "panic"));
+    // lifetimes must not swallow the rest of the line as a char literal
+    assert!(lexed.tokens.iter().any(|t| t.kind == lexer::Kind::Life));
+    let idents: Vec<&str> = lexed
+        .tokens
+        .iter()
+        .filter(|t| t.kind == lexer::Kind::Ident)
+        .map(|t| t.text.as_str())
+        .collect();
+    assert!(idents.contains(&"esc") && idents.contains(&"_use"));
+}
+
+#[test]
+fn lexer_separates_compound_ops_from_arith_ops() {
+    let lexed = lexer::lex("a += b; c <<= d; e << f; g + h; i..j; k..=l;");
+    let ops: Vec<&str> = lexed
+        .tokens
+        .iter()
+        .filter(|t| t.kind == lexer::Kind::Op)
+        .map(|t| t.text.as_str())
+        .collect();
+    assert!(ops.contains(&"+=") && ops.contains(&"<<="));
+    assert!(ops.contains(&"<<") && ops.contains(&"+"));
+    assert!(ops.contains(&"..") && ops.contains(&"..="));
+    // exactly one bare `<<` and one bare `+`: compound forms not split
+    assert_eq!(ops.iter().filter(|o| **o == "<<").count(), 1);
+    assert_eq!(ops.iter().filter(|o| **o == "+").count(), 1);
+}
+
+#[test]
+fn every_rule_id_has_a_description() {
+    for (id, desc) in rules::RULES {
+        assert!(!id.is_empty() && !desc.is_empty());
+    }
+}
+
+/// The invariant this subsystem exists to hold: the shipped library tree
+/// audits clean. Runs the same scan `sz3 audit --strict` and CI run.
+#[test]
+fn repo_source_tree_audits_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = super::audit_repo(root).expect("audit scan");
+    assert!(report.files_scanned > 40, "scan found too few files");
+    assert!(report.files_untrusted >= 15, "trust map resolved too few files");
+    let rendered = super::format_report(&report);
+    assert!(
+        report.findings.is_empty(),
+        "audit found unsuppressed violations:\n{rendered}"
+    );
+    // and the machine-readable output stays parseable in shape
+    let json = super::format_report_json(&report);
+    assert!(json.starts_with("{\"findings\":[") && json.ends_with("}\n"));
+}

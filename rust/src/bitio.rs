@@ -115,10 +115,10 @@ impl<'a> BitReader<'a> {
     #[inline]
     pub fn get_bit(&mut self) -> Result<u32> {
         let byte = self.pos >> 3;
-        if byte >= self.buf.len() {
+        let Some(&b) = self.buf.get(byte) else {
             return Err(SzError::corrupt("bit stream exhausted"));
-        }
-        let bit = (self.buf[byte] >> (7 - (self.pos & 7))) & 1;
+        };
+        let bit = (b >> (7 - (self.pos & 7))) & 1;
         self.pos += 1;
         Ok(bit as u32)
     }
@@ -128,11 +128,11 @@ impl<'a> BitReader<'a> {
     #[inline]
     pub fn get_bit_or_zero(&mut self) -> u32 {
         let byte = self.pos >> 3;
-        if byte >= self.buf.len() {
+        let Some(&b) = self.buf.get(byte) else {
             self.pos += 1;
             return 0;
-        }
-        let bit = (self.buf[byte] >> (7 - (self.pos & 7))) & 1;
+        };
+        let bit = (b >> (7 - (self.pos & 7))) & 1;
         self.pos += 1;
         bit as u32
     }
@@ -141,10 +141,10 @@ impl<'a> BitReader<'a> {
     #[inline]
     pub fn get_bits(&mut self, n: u32) -> Result<u64> {
         debug_assert!(n <= 64);
-        if self.pos + n as usize > self.bit_len() {
-            return Err(SzError::corrupt("bit stream exhausted"));
+        match self.pos.checked_add(n as usize) {
+            Some(end) if end <= self.bit_len() => Ok(self.get_bits_unchecked(n)),
+            _ => Err(SzError::corrupt("bit stream exhausted")),
         }
-        Ok(self.get_bits_unchecked(n))
     }
 
     /// Read `n` ≤ 57 bits without an exhaustion check (zero-padded past the
@@ -165,9 +165,9 @@ impl<'a> BitReader<'a> {
         let bit = (self.pos & 7) as u32;
         let mut word = 0u64;
         // load up to 8 bytes starting at `byte`
-        let avail = self.buf.len().saturating_sub(byte).min(8);
-        for i in 0..avail {
-            word |= (self.buf[byte + i] as u64) << (56 - 8 * i);
+        let tail = self.buf.get(byte..).unwrap_or(&[]);
+        for (i, &b) in tail.iter().take(8).enumerate() {
+            word |= (b as u64) << (56 - 8 * i);
         }
         (word << bit) >> (64 - n as u64)
     }

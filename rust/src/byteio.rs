@@ -131,15 +131,33 @@ impl<'a> ByteReader<'a> {
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.remaining() < n {
-            return Err(SzError::corrupt(format!(
+        // checked end-of-range: `pos + n` on attacker-supplied lengths
+        // must neither wrap nor index past the buffer
+        let slice = self
+            .pos
+            .checked_add(n)
+            .and_then(|end| self.buf.get(self.pos..end));
+        match slice {
+            Some(s) => {
+                self.pos += n;
+                Ok(s)
+            }
+            None => Err(SzError::corrupt(format!(
                 "need {n} bytes, have {}",
                 self.remaining()
-            )));
+            ))),
         }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
+    }
+
+    /// Take exactly `N` bytes as a fixed array (panic-free `try_into`
+    /// replacement for the primitive getters).
+    fn take_arr<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let s = self.take(N)?;
+        let mut a = [0u8; N];
+        for (slot, &b) in a.iter_mut().zip(s) {
+            *slot = b;
+        }
+        Ok(a)
     }
 
     /// Read raw bytes.
@@ -149,47 +167,49 @@ impl<'a> ByteReader<'a> {
 
     /// Read a u8.
     pub fn get_u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        let [b] = self.take_arr()?;
+        Ok(b)
     }
 
     /// Read a u16 (LE).
     pub fn get_u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(self.take_arr()?))
     }
 
     /// Read a u32 (LE).
     pub fn get_u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_arr()?))
     }
 
     /// Read a u64 (LE).
     pub fn get_u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_arr()?))
     }
 
     /// Read an i32 (LE).
     pub fn get_i32(&mut self) -> Result<i32> {
-        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(i32::from_le_bytes(self.take_arr()?))
     }
 
     /// Read an i64 (LE).
     pub fn get_i64(&mut self) -> Result<i64> {
-        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(i64::from_le_bytes(self.take_arr()?))
     }
 
     /// Read an f32.
     pub fn get_f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.take_arr()?))
     }
 
     /// Read an f64.
     pub fn get_f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_le_bytes(self.take_arr()?))
     }
 
     /// Read a usize (stored as u64).
     pub fn get_usize(&mut self) -> Result<usize> {
-        Ok(self.get_u64()? as usize)
+        usize::try_from(self.get_u64()?)
+            .map_err(|_| SzError::corrupt("stored size exceeds this platform's usize"))
     }
 
     /// Read a varint.
@@ -211,7 +231,8 @@ impl<'a> ByteReader<'a> {
 
     /// Read a length-prefixed block.
     pub fn get_block(&mut self) -> Result<&'a [u8]> {
-        let len = self.get_varint()? as usize;
+        let len = usize::try_from(self.get_varint()?)
+            .map_err(|_| SzError::corrupt("block length exceeds this platform's usize"))?;
         self.take(len)
     }
 

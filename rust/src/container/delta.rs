@@ -51,7 +51,11 @@ pub fn residual(original: &Field, baseline: &Field) -> Result<Field> {
         (FieldValues::I32(a), FieldValues::I32(b)) => {
             FieldValues::I32(a.iter().zip(b).map(|(&x, &y)| x.wrapping_sub(y)).collect())
         }
-        _ => unreachable!("dtype equality checked above"),
+        _ => {
+            return Err(SzError::Shape(
+                "delta residual: mismatched dtypes survived check_pair".into(),
+            ))
+        }
     };
     Field::new(original.name.clone(), original.shape.dims(), values)
 }
@@ -71,7 +75,11 @@ pub fn apply(baseline: &Field, residual: &Field) -> Result<Field> {
         (FieldValues::I32(b), FieldValues::I32(r)) => {
             FieldValues::I32(b.iter().zip(r).map(|(&y, &d)| y.wrapping_add(d)).collect())
         }
-        _ => unreachable!("dtype equality checked above"),
+        _ => {
+            return Err(SzError::Shape(
+                "delta apply: mismatched dtypes survived check_pair".into(),
+            ))
+        }
     };
     Field::new(residual.name.clone(), residual.shape.dims(), values)
 }

@@ -262,7 +262,11 @@ fn pack_with(chunks: &[CompressedChunk], version: u8, tags: &[String]) -> Result
                 c.field, c.chunk_index, c.chunk_count
             )));
         }
-        if std::mem::replace(&mut got[c.chunk_index], true) {
+        let duplicate = match got.get_mut(c.chunk_index) {
+            Some(slot) => std::mem::replace(slot, true),
+            None => true,
+        };
+        if duplicate {
             return Err(SzError::config(format!(
                 "field '{}': duplicate chunk index {} (two source fields \
                  with the same name?)",
@@ -360,6 +364,11 @@ fn pack_with(chunks: &[CompressedChunk], version: u8, tags: &[String]) -> Result
 /// bytes need not be present. Chunk extents are validated against the
 /// *declared* payload length, so a lazily-fetching reader can trust the
 /// offsets before it has read a single payload byte.
+fn varint_usize(r: &mut ByteReader<'_>, what: &str) -> Result<usize> {
+    usize::try_from(r.get_varint()?)
+        .map_err(|_| SzError::corrupt(format!("{what} exceeds this platform's usize")))
+}
+
 pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
     let mut r = ByteReader::new(prefix);
     let magic = r.get_bytes(4)?;
@@ -370,7 +379,7 @@ pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
     if version < VERSION_V1 || version > VERSION_V3 {
         return Err(SzError::corrupt(format!("unsupported container version {version}")));
     }
-    let n_chunks = r.get_varint()? as usize;
+    let n_chunks = varint_usize(&mut r, "chunk count")?;
     // Every entry consumes ≥ 1 byte, so the remaining length bounds the
     // plausible entry count — reject before growing any allocation. The
     // exhaustion-shaped message matters: on a short *prefix* of a valid
@@ -384,7 +393,7 @@ pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
     }
     let _n_fields = r.get_varint()?;
     let snapshots = if version >= VERSION_V3 {
-        let n_snaps = r.get_varint()? as usize;
+        let n_snaps = varint_usize(&mut r, "snapshot count")?;
         if n_snaps == 0 {
             return Err(SzError::corrupt("v3 container declares no snapshots"));
         }
@@ -407,11 +416,11 @@ pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
     let mut entries = Vec::new();
     for _ in 0..n_chunks {
         let field = r.get_str()?;
-        let chunk_index = r.get_varint()? as usize;
-        let chunk_count = r.get_varint()? as usize;
-        let row_start = r.get_varint()? as usize;
-        let row_end = r.get_varint()? as usize;
-        let nd = r.get_varint()? as usize;
+        let chunk_index = varint_usize(&mut r, "chunk index")?;
+        let chunk_count = varint_usize(&mut r, "chunk count")?;
+        let row_start = varint_usize(&mut r, "row start")?;
+        let row_end = varint_usize(&mut r, "row end")?;
+        let nd = varint_usize(&mut r, "dim count")?;
         if nd == 0 || nd > crate::data::shape::MAX_DIMS {
             return Err(SzError::corrupt(format!(
                 "index dim count {nd} outside 1..={}",
@@ -420,14 +429,14 @@ pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
         }
         let mut field_dims = Vec::with_capacity(nd);
         for _ in 0..nd {
-            field_dims.push(r.get_varint()? as usize);
+            field_dims.push(varint_usize(&mut r, "field dim")?);
         }
         let pipeline = r.get_str()?;
-        let offset = r.get_varint()? as usize;
-        let len = r.get_varint()? as usize;
+        let offset = varint_usize(&mut r, "chunk offset")?;
+        let len = varint_usize(&mut r, "chunk length")?;
         let crc = if version >= VERSION_V2 { Some(r.get_u32()?) } else { None };
         let (snapshot, delta) = if version >= VERSION_V3 {
-            let snapshot = r.get_varint()? as usize;
+            let snapshot = varint_usize(&mut r, "chunk snapshot")?;
             let flags = r.get_u8()?;
             if flags & !FLAG_DELTA != 0 {
                 return Err(SzError::corrupt(format!(
@@ -479,7 +488,10 @@ pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
     if version >= VERSION_V3 {
         let covered = r.pos();
         let got = r.get_u32()?;
-        let expect = crc32(&prefix[..covered]);
+        let covered_bytes = prefix
+            .get(..covered)
+            .ok_or_else(|| SzError::corrupt("index crc range outside prefix"))?;
+        let expect = crc32(covered_bytes);
         if got != expect {
             return Err(SzError::corrupt(format!(
                 "index crc32 mismatch (stored {got:#010x}, computed {expect:#010x})"
@@ -511,43 +523,39 @@ pub fn read_index_meta(prefix: &[u8]) -> Result<IndexMeta> {
 /// Living in the library (not `main.rs`) lets a test lock the v1/v2
 /// output byte-for-byte across format bumps.
 pub fn describe(meta: &IndexMeta) -> String {
-    use std::fmt::Write as _;
     let index = &meta.index;
     let mut out = String::new();
     if meta.version >= VERSION_V3 {
-        let _ = writeln!(
-            out,
+        out.push_str(&format!(
             "container v{}: {} chunks, {} fields, {} snapshots, payload {} \
-             bytes, per-chunk crc32",
+             bytes, per-chunk crc32\n",
             meta.version,
             index.entries.len(),
             index.field_names().len(),
             index.snapshot_count(),
             meta.payload_len,
-        );
+        ));
         for (id, ((total, delta), tag)) in
             index.per_snapshot().iter().zip(&index.snapshots).enumerate()
         {
             let label =
                 if tag.is_empty() { String::new() } else { format!(" '{tag}'") };
-            let _ = writeln!(
-                out,
-                "  snapshot {id}{label}: {total} chunks, {delta} delta"
-            );
+            out.push_str(&format!(
+                "  snapshot {id}{label}: {total} chunks, {delta} delta\n"
+            ));
         }
     } else {
-        let _ = writeln!(
-            out,
-            "container v{}: {} chunks, {} fields, payload {} bytes{}",
+        out.push_str(&format!(
+            "container v{}: {} chunks, {} fields, payload {} bytes{}\n",
             meta.version,
             index.entries.len(),
             index.field_names().len(),
             meta.payload_len,
             if meta.version >= VERSION_V2 { ", per-chunk crc32" } else { ", no checksums" }
-        );
+        ));
     }
     for (p, n) in index.per_pipeline() {
-        let _ = writeln!(out, "  pipeline {p}: {n} chunks");
+        out.push_str(&format!("  pipeline {p}: {n} chunks\n"));
     }
     for e in &index.entries {
         let prefix = if meta.version >= VERSION_V3 {
@@ -555,11 +563,10 @@ pub fn describe(meta: &IndexMeta) -> String {
         } else {
             String::new()
         };
-        let _ = writeln!(
-            out,
-            "  {prefix}{}[{}/{}] rows {}..{} dims {:?} via {} ({} bytes){}",
+        out.push_str(&format!(
+            "  {prefix}{}[{}/{}] rows {}..{} dims {:?} via {} ({} bytes){}\n",
             e.field,
-            e.chunk_index + 1,
+            e.chunk_index.saturating_add(1),
             e.chunk_count,
             e.rows.0,
             e.rows.1,
@@ -567,7 +574,7 @@ pub fn describe(meta: &IndexMeta) -> String {
             e.pipeline,
             e.len,
             if e.delta { ", delta" } else { "" }
-        );
+        ));
     }
     out
 }
@@ -583,8 +590,13 @@ pub fn read_index(stream: &[u8]) -> Result<(ContainerIndex, &[u8])> {
             meta.payload_len
         )));
     }
-    let payload =
-        &stream[meta.payload_offset..meta.payload_offset + meta.payload_len as usize];
+    let plen = usize::try_from(meta.payload_len)
+        .map_err(|_| SzError::corrupt("payload length exceeds this platform's usize"))?;
+    let payload = meta
+        .payload_offset
+        .checked_add(plen)
+        .and_then(|end| stream.get(meta.payload_offset..end))
+        .ok_or_else(|| SzError::corrupt("payload extent outside stream"))?;
     Ok((meta.index, payload))
 }
 

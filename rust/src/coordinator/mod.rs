@@ -394,6 +394,7 @@ impl Coordinator {
             deliver(&mut pending, &mut next_deliver, &mut report, &mut sink);
         }
         for h in handles {
+            // audit:allow(swallow, reason = "worker panics already surfaced as channel errors collected into first_err")
             let _ = h.join();
         }
         if let Some(e) = first_err {

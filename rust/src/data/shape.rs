@@ -26,8 +26,18 @@ impl Shape {
         }
         let mut strides = vec![1usize; dims.len()];
         for i in (0..dims.len() - 1).rev() {
-            strides[i] = strides[i + 1] * dims[i + 1];
+            strides[i] = strides[i + 1].checked_mul(dims[i + 1]).ok_or_else(|| {
+                SzError::Shape("shape element count overflows usize".into())
+            })?;
         }
+        // the full product must fit as well: `len()` and every buffer
+        // sizing downstream rely on it being representable
+        strides
+            .first()
+            .copied()
+            .unwrap_or(1)
+            .checked_mul(dims.first().copied().unwrap_or(1))
+            .ok_or_else(|| SzError::Shape("shape element count overflows usize".into()))?;
         Ok(Shape { dims: dims.to_vec(), strides })
     }
 

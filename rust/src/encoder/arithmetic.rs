@@ -15,6 +15,10 @@ const QUARTER: u64 = TOP >> 2;
 const THREE_QUARTER: u64 = HALF + QUARTER;
 /// Rescale threshold for the adaptive model.
 const MAX_TOTAL: u64 = 1 << 24;
+/// Largest symbol alphabet a stream may declare (quantizer index ranges
+/// are orders of magnitude smaller; anything bigger is a corrupt or
+/// hostile length field, rejected before the model allocates).
+const MAX_ALPHABET: usize = 1 << 28;
 
 /// Fenwick (binary indexed) tree over symbol frequencies.
 struct Fenwick {
@@ -26,11 +30,16 @@ impl Fenwick {
         // Initialize every frequency to 1 (uniform prior) in O(n).
         let mut tree = vec![0u64; n + 1];
         for i in 1..=n {
-            tree[i] += 1;
+            let add = match tree.get_mut(i) {
+                Some(slot) => {
+                    *slot += 1;
+                    *slot
+                }
+                None => continue,
+            };
             let j = i + (i & i.wrapping_neg());
-            if j <= n {
-                let add = tree[i];
-                tree[j] += add;
+            if let Some(slot) = tree.get_mut(j) {
+                *slot += add;
             }
         }
         Fenwick { tree }
@@ -46,7 +55,7 @@ impl Fenwick {
         let mut i = sym;
         let mut s = 0;
         while i > 0 {
-            s += self.tree[i];
+            s += self.tree.get(i).copied().unwrap_or(0);
             i &= i - 1;
         }
         s
@@ -55,8 +64,8 @@ impl Fenwick {
     #[inline]
     fn add(&mut self, sym: usize, delta: i64) {
         let mut i = sym + 1;
-        while i < self.tree.len() {
-            self.tree[i] = (self.tree[i] as i64 + delta) as u64;
+        while let Some(slot) = self.tree.get_mut(i) {
+            *slot = (*slot as i64 + delta) as u64;
             i += i & i.wrapping_neg();
         }
     }
@@ -72,10 +81,12 @@ impl Fenwick {
         let mut rem = target;
         let mut mask = self.tree.len().next_power_of_two() >> 1;
         while mask > 0 {
-            let next = pos + mask;
-            if next < self.tree.len() && self.tree[next] <= rem {
-                rem -= self.tree[next];
-                pos = next;
+            let next = pos.saturating_add(mask);
+            if let Some(&t) = self.tree.get(next) {
+                if t <= rem {
+                    rem -= t;
+                    pos = next;
+                }
             }
             mask >>= 1;
         }
@@ -94,8 +105,8 @@ impl Fenwick {
         for (s, &f) in freqs.iter().enumerate() {
             let mut i = s + 1;
             // direct O(n log n) rebuild is fine: rescale is rare
-            while i < tree.len() {
-                tree[i] += f;
+            while let Some(slot) = tree.get_mut(i) {
+                *slot += f;
                 i += i & i.wrapping_neg();
             }
         }
@@ -249,13 +260,21 @@ impl Encoder for ArithmeticEncoder {
     }
 
     fn decode(&self, r: &mut ByteReader, n: usize) -> Result<Vec<u32>> {
-        let alphabet = r.get_varint()? as usize;
+        let alphabet = usize::try_from(r.get_varint()?)
+            .map_err(|_| SzError::corrupt("arithmetic: alphabet exceeds usize"))?;
         let payload = r.get_block()?;
         if n == 0 {
             return Ok(Vec::new());
         }
         if alphabet == 0 {
             return Err(SzError::corrupt("arithmetic: empty alphabet"));
+        }
+        // the model allocates alphabet+1 u64s before any payload byte is
+        // trusted — bound it so a 10-byte stream cannot demand gigabytes
+        if alphabet > MAX_ALPHABET {
+            return Err(SzError::corrupt(format!(
+                "arithmetic: alphabet {alphabet} exceeds the {MAX_ALPHABET} cap"
+            )));
         }
         let mut model = Fenwick::with_ones(alphabet);
         let mut dec = RangeDecoder::new(payload);

@@ -13,6 +13,10 @@ use crate::bitio::{BitReader, BitWriter};
 use crate::byteio::{ByteReader, ByteWriter};
 use crate::error::{Result, SzError};
 
+/// Largest alphabet a decoded stream header may declare; the derived
+/// tables allocate proportionally, so hostile headers are bounded here.
+const MAX_DECODE_ALPHABET: u32 = 1 << 24;
+
 /// Huffman codec with a predefined geometric-prior tree.
 #[derive(Clone)]
 pub struct FixedHuffmanEncoder {
@@ -59,21 +63,36 @@ impl Encoder for FixedHuffmanEncoder {
         w.put_varint(self.alphabet as u64);
         let mut bw = BitWriter::with_capacity(symbols.len() / 2);
         for &s in symbols {
-            if s >= self.alphabet {
-                return Err(SzError::config(format!(
-                    "symbol {s} outside fixed alphabet {}",
-                    self.alphabet
-                )));
-            }
-            bw.put_bits(self.codes[s as usize], self.lens[s as usize]);
+            let (&code, &len) = self
+                .codes
+                .get(s as usize)
+                .zip(self.lens.get(s as usize))
+                .ok_or_else(|| {
+                    SzError::config(format!(
+                        "symbol {s} outside fixed alphabet {}",
+                        self.alphabet
+                    ))
+                })?;
+            bw.put_bits(code, len);
         }
         w.put_block(&bw.finish());
         Ok(())
     }
 
     fn decode(&self, r: &mut ByteReader, n: usize) -> Result<Vec<u32>> {
-        let center = r.get_varint()? as u32;
-        let alphabet = r.get_varint()? as u32;
+        let center = u32::try_from(r.get_varint()?)
+            .map_err(|_| SzError::corrupt("fixed_huffman: center exceeds u32"))?;
+        let alphabet = u32::try_from(r.get_varint()?)
+            .map_err(|_| SzError::corrupt("fixed_huffman: alphabet exceeds u32"))?;
+        // the derived table allocates `alphabet` slots before any payload
+        // byte is trusted — bound it (real radii are orders of magnitude
+        // smaller than this cap)
+        if alphabet > MAX_DECODE_ALPHABET {
+            return Err(SzError::corrupt(format!(
+                "fixed_huffman: alphabet {alphabet} exceeds the \
+                 {MAX_DECODE_ALPHABET} cap"
+            )));
+        }
         let table = if center == self.center && alphabet == self.alphabet {
             None // reuse our own tables
         } else {

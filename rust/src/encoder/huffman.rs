@@ -25,11 +25,18 @@ impl HuffmanEncoder {
 /// Compute Huffman code lengths for `freqs` (0-frequency symbols get len 0).
 pub fn code_lengths(freqs: &[u64]) -> Vec<u32> {
     let mut lens = vec![0u32; freqs.len()];
-    let present: Vec<usize> = (0..freqs.len()).filter(|&i| freqs[i] > 0).collect();
-    match present.len() {
-        0 => return lens,
-        1 => {
-            lens[present[0]] = 1;
+    let present: Vec<usize> = freqs
+        .iter()
+        .enumerate()
+        .filter(|&(_, &f)| f > 0)
+        .map(|(i, _)| i)
+        .collect();
+    match present.as_slice() {
+        [] => return lens,
+        [sym] => {
+            if let Some(slot) = lens.get_mut(*sym) {
+                *slot = 1;
+            }
             return lens;
         }
         _ => {}
@@ -40,25 +47,38 @@ pub fn code_lengths(freqs: &[u64]) -> Vec<u32> {
     let mut heap: BinaryHeap<Reverse<(u64, usize)>> = present
         .iter()
         .enumerate()
-        .map(|(node, &sym)| Reverse((freqs[sym], node)))
+        .map(|(node, &sym)| Reverse((freqs.get(sym).copied().unwrap_or(0), node)))
         .collect();
     let mut next = n;
     while heap.len() > 1 {
-        let Reverse((fa, a)) = heap.pop().unwrap();
-        let Reverse((fb, b)) = heap.pop().unwrap();
-        parent[a] = next;
-        parent[b] = next;
+        let (Some(Reverse((fa, a))), Some(Reverse((fb, b)))) = (heap.pop(), heap.pop())
+        else {
+            break;
+        };
+        if let Some(slot) = parent.get_mut(a) {
+            *slot = next;
+        }
+        if let Some(slot) = parent.get_mut(b) {
+            *slot = next;
+        }
         heap.push(Reverse((fa + fb, next)));
         next += 1;
     }
     for (node, &sym) in present.iter().enumerate() {
         let mut len = 0u32;
         let mut p = node;
-        while parent[p] != usize::MAX {
-            p = parent[p];
+        // parent links always point at later arena nodes, so this walk
+        // strictly ascends and terminates at an unlinked root
+        while let Some(&q) = parent.get(p) {
+            if q == usize::MAX {
+                break;
+            }
+            p = q;
             len += 1;
         }
-        lens[sym] = len;
+        if let Some(slot) = lens.get_mut(sym) {
+            *slot = len;
+        }
     }
     lens
 }
@@ -69,24 +89,41 @@ pub fn code_lengths(freqs: &[u64]) -> Vec<u32> {
 pub fn canonical_codes(lens: &[u32]) -> (Vec<u64>, u32) {
     let max_len = lens.iter().copied().max().unwrap_or(0);
     debug_assert!(max_len <= 64, "huffman depth {max_len} exceeds 64 bits");
-    let mut count = vec![0u64; max_len as usize + 1];
+    let depth = max_len.min(64) as usize;
+    let mut count = vec![0u64; depth + 1];
     for &l in lens {
         if l > 0 {
-            count[l as usize] += 1;
+            if let Some(slot) = count.get_mut(l as usize) {
+                *slot += 1;
+            }
         }
     }
-    let mut first = vec![0u64; max_len as usize + 2];
+    let mut first = vec![0u64; depth + 2];
     let mut code = 0u64;
-    for l in 1..=max_len as usize {
-        code = (code + count[l - 1]) << 1;
-        first[l] = code;
+    for l in 1..=depth {
+        // lengths from `code_lengths` satisfy Kraft, so this never
+        // saturates; saturating (instead of wrapping) keeps pathological
+        // caller-supplied tables panic-free — decode paths detect them
+        // via `CanonicalDecoder::from_lengths`, which errors instead
+        let prev = count.get(l - 1).copied().unwrap_or(0);
+        code = code
+            .checked_add(prev)
+            .and_then(|c| c.checked_shl(1))
+            .unwrap_or(u64::MAX);
+        if let Some(slot) = first.get_mut(l) {
+            *slot = code;
+        }
     }
     let mut next = first.clone();
     let mut codes = vec![0u64; lens.len()];
     for (sym, &l) in lens.iter().enumerate() {
         if l > 0 {
-            codes[sym] = next[l as usize];
-            next[l as usize] += 1;
+            if let (Some(nslot), Some(cslot)) =
+                (next.get_mut(l as usize), codes.get_mut(sym))
+            {
+                *cslot = *nslot;
+                *nslot += 1;
+            }
         }
     }
     (codes, max_len)
@@ -96,10 +133,9 @@ pub fn canonical_codes(lens: &[u32]) -> (Vec<u64>, u32) {
 fn save_lengths(lens: &[u32], w: &mut ByteWriter) {
     w.put_varint(lens.len() as u64);
     let mut i = 0;
-    while i < lens.len() {
-        let l = lens[i];
+    while let Some(&l) = lens.get(i) {
         let mut run = 1usize;
-        while i + run < lens.len() && lens[i + run] == l {
+        while lens.get(i + run) == Some(&l) {
             run += 1;
         }
         w.put_varint(l as u64);
@@ -109,18 +145,20 @@ fn save_lengths(lens: &[u32], w: &mut ByteWriter) {
 }
 
 fn load_lengths(r: &mut ByteReader) -> Result<Vec<u32>> {
-    let n = r.get_varint()? as usize;
+    let n = usize::try_from(r.get_varint()?)
+        .map_err(|_| SzError::corrupt("huffman table too large"))?;
     if n > (1 << 28) {
         return Err(SzError::corrupt("huffman table too large"));
     }
     let mut lens = Vec::with_capacity(n);
     while lens.len() < n {
-        let l = r.get_varint()? as u32;
-        let run = r.get_varint()? as usize;
+        let l = r.get_varint()?;
+        let run = usize::try_from(r.get_varint()?)
+            .map_err(|_| SzError::corrupt("bad huffman length RLE"))?;
         if lens.len() + run > n || l > 64 {
             return Err(SzError::corrupt("bad huffman length RLE"));
         }
-        lens.extend(std::iter::repeat(l).take(run));
+        lens.extend(std::iter::repeat(l as u32).take(run));
     }
     Ok(lens)
 }
@@ -149,49 +187,76 @@ impl CanonicalDecoder {
         if max_len > 64 {
             return Err(SzError::corrupt("huffman depth exceeds 64 bits"));
         }
-        let mut count = vec![0u64; max_len as usize + 1];
+        let depth = max_len.min(64) as usize;
+        let mut count = vec![0u64; depth + 1];
         for &l in lens {
             if l > 0 {
-                count[l as usize] += 1;
+                if let Some(slot) = count.get_mut(l as usize) {
+                    *slot += 1;
+                }
             }
         }
-        let mut first_code = vec![0u64; max_len as usize + 2];
-        let mut first_idx = vec![0u32; max_len as usize + 2];
+        let mut first_code = vec![0u64; depth + 2];
+        let mut first_idx = vec![0u32; depth + 2];
         let mut code = 0u64;
         let mut idx = 0u32;
-        for l in 1..=max_len as usize {
-            code = (code + count[l - 1]) << 1;
-            first_code[l] = code;
-            first_idx[l] = idx;
-            idx += count[l] as u32;
+        for l in 1..=depth {
+            // hostile length tables (this is the decode side — the table
+            // arrives from the stream) can push the canonical construction
+            // past u64; overflow here is proof of corruption, not a wrap
+            let prev = count.get(l - 1).copied().unwrap_or(0);
+            code = code
+                .checked_add(prev)
+                .and_then(|c| c.checked_shl(1))
+                .ok_or_else(|| SzError::corrupt("huffman code space overflows"))?;
+            if let Some(slot) = first_code.get_mut(l) {
+                *slot = code;
+            }
+            if let Some(slot) = first_idx.get_mut(l) {
+                *slot = idx;
+            }
+            let here = count.get(l).copied().unwrap_or(0);
+            idx = u32::try_from(here)
+                .ok()
+                .and_then(|c| idx.checked_add(c))
+                .ok_or_else(|| SzError::corrupt("huffman table count overflows"))?;
         }
         // symbols in canonical order: sorted by (len, symbol)
-        let mut order: Vec<u32> = (0..lens.len() as u32).filter(|&s| lens[s as usize] > 0).collect();
-        order.sort_by_key(|&s| (lens[s as usize], s));
+        let len_of = |s: u32| lens.get(s as usize).copied().unwrap_or(0);
+        let mut order: Vec<u32> = (0..lens.len() as u32).filter(|&s| len_of(s) > 0).collect();
+        order.sort_by_key(|&s| (len_of(s), s));
         // build the fast table: every LUT_BITS prefix of a short code maps
-        // to (symbol, len)
+        // to (symbol, len). `order` is sorted by (len, symbol), so symbols
+        // of equal length are consecutive — one pass with a per-length
+        // position counter replaces the old quadratic same-length rescan.
         let mut lut = vec![0u32; 1 << LUT_BITS];
+        let mut run_len = 0u32;
+        let mut idx_in_len = 0u64;
         for &sym in &order {
-            let l = lens[sym as usize];
+            let l = len_of(sym);
+            if l != run_len {
+                run_len = l;
+                idx_in_len = 0;
+            }
+            let pos = idx_in_len;
+            idx_in_len += 1;
             if l > LUT_BITS {
                 continue;
             }
-            // canonical code for sym
-            let idx_in_len = {
-                // position of sym among same-length symbols
-                let mut i = 0u32;
-                for &s2 in &order {
-                    if lens[s2 as usize] == l {
-                        if s2 == sym {
-                            break;
-                        }
-                        i += 1;
-                    }
-                }
-                i
-            };
-            let code = first_code[l as usize] + idx_in_len as u64;
+            // symbols ≥ 2^24 cannot pack into a `(sym << 8) | len` entry;
+            // they stay decodable through the canonical-scan fallback
+            if sym >= (1 << 24) {
+                continue;
+            }
+            let code = first_code
+                .get(l as usize)
+                .copied()
+                .unwrap_or(0)
+                .checked_add(pos)
+                .ok_or_else(|| SzError::corrupt("huffman code space overflows"))?;
             let shift = LUT_BITS - l;
+            // an over-subscribed (non-Kraft) table can place `code` past the
+            // prefix space; `skip` past the end simply yields no entries
             let base = (code << shift) as usize;
             let entry = (sym << 8) | l;
             for e in lut.iter_mut().skip(base).take(1 << shift) {
@@ -204,7 +269,11 @@ impl CanonicalDecoder {
     /// Decode one symbol (LUT fast path, canonical-scan fallback).
     #[inline]
     pub fn decode_one(&self, br: &mut BitReader) -> Result<u32> {
-        let entry = self.lut[br.peek_bits(LUT_BITS) as usize];
+        let entry = self
+            .lut
+            .get(br.peek_bits(LUT_BITS) as usize)
+            .copied()
+            .unwrap_or(0);
         if entry != 0 {
             let len = entry & 0xff;
             br.skip_bits(len);
@@ -214,12 +283,25 @@ impl CanonicalDecoder {
             return Ok(entry >> 8);
         }
         let mut code = 0u64;
-        for l in 1..=self.max_len as usize {
+        let depth = self.count.len().saturating_sub(1);
+        for l in 1..=depth {
             code = (code << 1) | br.get_bit()? as u64;
-            if self.count[l] > 0 {
-                let offset = code.wrapping_sub(self.first_code[l]);
-                if offset < self.count[l] {
-                    return Ok(self.symbols[(self.first_idx[l] + offset as u32) as usize]);
+            let cnt = self.count.get(l).copied().unwrap_or(0);
+            if cnt > 0 {
+                let rel = code.wrapping_sub(self.first_code.get(l).copied().unwrap_or(0));
+                if rel < cnt {
+                    let at = self
+                        .first_idx
+                        .get(l)
+                        .copied()
+                        .unwrap_or(0)
+                        .checked_add(rel as u32)
+                        .ok_or_else(|| SzError::corrupt("invalid huffman code"))?;
+                    return self
+                        .symbols
+                        .get(at as usize)
+                        .copied()
+                        .ok_or_else(|| SzError::corrupt("invalid huffman code"));
                 }
             }
         }
@@ -237,18 +319,23 @@ impl Encoder for HuffmanEncoder {
             w.put_varint(0);
             return Ok(());
         }
-        let max_sym = *symbols.iter().max().unwrap() as usize;
+        let max_sym = symbols.iter().copied().max().unwrap_or(0) as usize;
         let mut freqs = vec![0u64; max_sym + 1];
         for &s in symbols {
-            freqs[s as usize] += 1;
+            if let Some(slot) = freqs.get_mut(s as usize) {
+                *slot += 1;
+            }
         }
         let lens = code_lengths(&freqs);
         let (codes, _) = canonical_codes(&lens);
         save_lengths(&lens, w);
         let mut bw = BitWriter::with_capacity(symbols.len() / 2);
         for &s in symbols {
-            let l = lens[s as usize];
-            bw.put_bits(codes[s as usize], l);
+            let (&code, &l) = codes
+                .get(s as usize)
+                .zip(lens.get(s as usize))
+                .ok_or_else(|| SzError::Runtime("huffman code table misses a symbol".into()))?;
+            bw.put_bits(code, l);
         }
         w.put_block(&bw.finish());
         Ok(())
@@ -256,7 +343,9 @@ impl Encoder for HuffmanEncoder {
 
     fn decode(&self, r: &mut ByteReader, n: usize) -> Result<Vec<u32>> {
         if n == 0 {
-            let _ = r.get_varint()?;
+            // the leading table-size varint is still present; consume it so
+            // the cursor lands on the next section
+            r.get_varint()?;
             return Ok(Vec::new());
         }
         // load_lengths reads the same leading varint written by save_lengths.

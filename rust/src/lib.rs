@@ -49,6 +49,7 @@
 //! assert_eq!(restored.shape.dims(), field.shape.dims());
 //! ```
 
+pub mod analysis;
 pub mod bench_harness;
 pub mod bitio;
 pub mod byteio;

@@ -33,10 +33,12 @@ impl Default for LzHuf {
     }
 }
 
+/// Hash the 4-byte window at `i`; `None` when fewer than 4 bytes remain.
 #[inline]
-fn hash4(data: &[u8], i: usize) -> usize {
-    let v = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
-    (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+fn hash4(data: &[u8], i: usize) -> Option<usize> {
+    let w = data.get(i..)?.get(..4)?;
+    let v = u32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+    Some((v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize)
 }
 
 impl LzHuf {
@@ -52,20 +54,24 @@ impl LzHuf {
         let mut head = vec![usize::MAX; 1 << HASH_BITS];
         let mut prev = vec![usize::MAX; n];
         let mut i = 0usize;
-        while i < n {
+        while let Some(&byte) = data.get(i) {
             let mut best_len = 0usize;
             let mut best_dist = 0usize;
-            if i + MIN_MATCH <= n {
-                let h = hash4(data, i);
-                let mut cand = head[h];
+            if let Some(h) = hash4(data, i) {
+                let mut cand = head.get(h).copied().unwrap_or(usize::MAX);
                 let mut chain = self.max_chain;
                 while cand != usize::MAX && chain > 0 && i - cand <= WINDOW {
-                    // candidate match length
+                    // candidate match length: compare the windows at `cand`
+                    // and `i`; zip stops at the shorter tail on its own
                     let limit = (n - i).min(MAX_MATCH);
-                    let mut l = 0usize;
-                    while l < limit && data[cand + l] == data[i + l] {
-                        l += 1;
-                    }
+                    let back = data.get(cand..).unwrap_or(&[]);
+                    let ahead = data.get(i..).unwrap_or(&[]);
+                    let l = back
+                        .iter()
+                        .zip(ahead)
+                        .take(limit)
+                        .take_while(|&(a, b)| a == b)
+                        .count();
                     if l > best_len {
                         best_len = l;
                         best_dist = i - cand;
@@ -73,27 +79,35 @@ impl LzHuf {
                             break;
                         }
                     }
-                    cand = prev[cand];
+                    cand = prev.get(cand).copied().unwrap_or(usize::MAX);
                     chain -= 1;
                 }
-                prev[i] = head[h];
-                head[h] = i;
+                if let Some(slot) = prev.get_mut(i) {
+                    *slot = head.get(h).copied().unwrap_or(usize::MAX);
+                }
+                if let Some(slot) = head.get_mut(h) {
+                    *slot = i;
+                }
             }
             if best_len >= MIN_MATCH {
                 tokens.push(256 + (best_len - MIN_MATCH) as u32);
                 dists.push(best_dist as u32);
                 // insert hash entries for covered positions (sparsely for speed)
-                let end = i + best_len;
+                let end = i.saturating_add(best_len);
                 let mut j = i + 1;
-                while j < end && j + MIN_MATCH <= n {
-                    let h = hash4(data, j);
-                    prev[j] = head[h];
-                    head[h] = j;
+                while j < end {
+                    let Some(h) = hash4(data, j) else { break };
+                    if let Some(slot) = prev.get_mut(j) {
+                        *slot = head.get(h).copied().unwrap_or(usize::MAX);
+                    }
+                    if let Some(slot) = head.get_mut(h) {
+                        *slot = j;
+                    }
                     j += 1;
                 }
                 i = end;
             } else {
-                tokens.push(data[i] as u32);
+                tokens.push(byte as u32);
                 i += 1;
             }
         }
@@ -122,13 +136,20 @@ impl Lossless for LzHuf {
 
     fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
         let mut r = ByteReader::new(data);
-        let orig_len = r.get_varint()? as usize;
-        let n_tokens = r.get_varint()? as usize;
+        let orig_len = usize::try_from(r.get_varint()?)
+            .map_err(|_| SzError::corrupt("lzhuf: stored length exceeds this platform's usize"))?;
+        let n_tokens = usize::try_from(r.get_varint()?)
+            .map_err(|_| SzError::corrupt("lzhuf: token count exceeds this platform's usize"))?;
         let huff = HuffmanEncoder::new();
         let tokens = huff.decode(&mut r, n_tokens)?;
         let n_matches = tokens.iter().filter(|&&t| t >= 256).count();
         let hi = huff.decode(&mut r, n_matches)?;
         let lo = huff.decode(&mut r, n_matches)?;
+        // every token emits at most MAX_MATCH bytes — reject a claimed
+        // length the token stream cannot produce before allocating for it
+        if orig_len > tokens.len().saturating_mul(MAX_MATCH) {
+            return Err(SzError::corrupt("lzhuf: stored length exceeds token capacity"));
+        }
         let mut out = Vec::with_capacity(orig_len);
         let mut m = 0usize;
         for &t in &tokens {
@@ -136,14 +157,21 @@ impl Lossless for LzHuf {
                 out.push(t as u8);
             } else {
                 let len = MIN_MATCH + (t - 256) as usize;
-                let dist = ((hi[m] << 8) | lo[m]) as usize;
+                let (Some(&dh), Some(&dl)) = (hi.get(m), lo.get(m)) else {
+                    return Err(SzError::corrupt("lzhuf: missing match distance"));
+                };
                 m += 1;
+                // widen before the shift: a corrupt distance stream can
+                // decode symbols ≥ 2^24, which `u32 << 8` would overflow
+                let dist = ((dh as usize) << 8) | dl as usize;
                 if dist == 0 || dist > out.len() {
                     return Err(SzError::corrupt("lzhuf: bad match distance"));
                 }
                 let start = out.len() - dist;
                 for k in 0..len {
-                    let b = out[start + k];
+                    // start < out.len() and each push grows the buffer, so
+                    // the overlapping-copy cursor never outruns it
+                    let b = out.get(start + k).copied().unwrap_or(0);
                     out.push(b);
                 }
             }

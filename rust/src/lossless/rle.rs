@@ -31,15 +31,14 @@ impl Lossless for Rle {
             while s < to {
                 let take = (to - s).min(LIT_MAX);
                 out.push((take - 1) as u8);
-                out.extend_from_slice(&data[s..s + take]);
+                out.extend_from_slice(data.get(s..s + take).unwrap_or(&[]));
                 s += take;
             }
         };
-        while i < n {
+        while let Some(&b) = data.get(i) {
             // measure run at i
-            let b = data[i];
             let mut run = 1usize;
-            while i + run < n && data[i + run] == b && run < RUN_MAX {
+            while data.get(i + run) == Some(&b) && run < RUN_MAX {
                 run += 1;
             }
             if run >= RUN_MIN {
@@ -59,22 +58,21 @@ impl Lossless for Rle {
     fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
         let mut out = Vec::with_capacity(data.len() * 2);
         let mut i = 0usize;
-        while i < data.len() {
-            let c = data[i] as usize;
+        while let Some(&cb) = data.get(i) {
+            let c = cb as usize;
             i += 1;
             if c < 128 {
                 let take = c + 1;
-                if i + take > data.len() {
-                    return Err(SzError::corrupt("rle: truncated literal block"));
-                }
-                out.extend_from_slice(&data[i..i + take]);
+                let lits = data
+                    .get(i..i + take)
+                    .ok_or_else(|| SzError::corrupt("rle: truncated literal block"))?;
+                out.extend_from_slice(lits);
                 i += take;
             } else {
-                if i >= data.len() {
+                let Some(&b) = data.get(i) else {
                     return Err(SzError::corrupt("rle: truncated run"));
-                }
+                };
                 let count = c - 128 + RUN_MIN;
-                let b = data[i];
                 i += 1;
                 out.extend(std::iter::repeat(b).take(count));
             }

@@ -42,6 +42,7 @@ USAGE:
                  [--container] [--adaptive]
   sz3 serve-http --dir artifacts/ [--addr 127.0.0.1:8080] [--threads N]
                  [--cache-mb MB] [--workers N] [--no-verify]
+  sz3 audit      [--json] [--strict] [--root DIR]   # static analysis
   sz3 datasets                              # Table 3 registry
   sz3 pipelines                             # aliases + stage catalog
   sz3 quant-hist [--field ff|ff] [--eb 1e-10] [--radius 64]   # Fig. 3
@@ -55,6 +56,11 @@ alias and stage, docs/PIPELINES.md specifies the grammar. --candidates
 accepts the same names/specs.
 --container packs coordinator chunks into one SZ3C artifact; --adaptive
 picks the best-fit pipeline per chunk (recorded in the chunk index).
+audit lexes rust/src and enforces the panic-freedom / checked-arithmetic
+rules over the untrusted-byte trust map (docs/AUDIT.md): --strict exits
+nonzero on any unsuppressed finding (the blocking CI mode), --json emits
+machine-readable findings, --root overrides the repo root (defaults to
+the build-time crate root, so a deployed binary audits its own sources).
 --series packs N timesteps of the same field (one raw file each, same
 dims/dtype) into one v3 container with a snapshot table; snapshots after
 the first are also compressed as residuals against the decoded previous
@@ -147,6 +153,7 @@ fn run(argv: Vec<String>) -> CliResult {
         "info" => cmd_info(&a),
         "serve" => cmd_serve(&a),
         "serve-http" => cmd_serve_http(&a),
+        "audit" => cmd_audit(&a),
         "datasets" => cmd_datasets(),
         "pipelines" => cmd_pipelines(),
         "quant-hist" => cmd_quant_hist(&a),
@@ -647,6 +654,29 @@ fn cmd_serve_http(a: &Args) -> CliResult {
     );
     println!("try: curl http://{}/v1/artifacts", handle.addr());
     handle.run_forever();
+    Ok(())
+}
+
+/// `sz3 audit [--json] [--strict] [--root DIR]`: run the panic-freedom /
+/// checked-arithmetic static analysis over `rust/src` (see docs/AUDIT.md).
+/// `--strict` is the blocking CI mode: any unsuppressed finding fails.
+fn cmd_audit(a: &Args) -> CliResult {
+    let root = a
+        .get("root")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    let report = sz3::analysis::audit_repo(&root)?;
+    if a.has("json") {
+        print!("{}", sz3::analysis::format_report_json(&report));
+    } else {
+        print!("{}", sz3::analysis::format_report(&report));
+    }
+    if a.has("strict") && !report.findings.is_empty() {
+        return Err(err(format!(
+            "audit --strict: {} unsuppressed finding(s)",
+            report.findings.len()
+        )));
+    }
     Ok(())
 }
 

@@ -164,6 +164,7 @@ impl BlockCompressor {
                     None
                 }
             };
+            // audit:allow(swallow, reason = "discards an unused borrow, not a Result; the binding is kept for API stability")
             let _ = &scratch_block; // kept for API stability
             if use_fast {
                 // dimension-specialized codec (SZ3-LR-s, §6.2)

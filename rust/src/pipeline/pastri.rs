@@ -330,6 +330,7 @@ impl PastriCompressor {
                     let pred = scale_rec * pattern_rec[i];
                     let (qi, rec) = data_q.quantize(values[pos + s + i], pred);
                     data_idx.push(qi);
+                    // audit:allow(swallow, reason = "discards a reconstruction value, not a Result; pattern prediction never feeds back")
                     let _ = rec; // pattern prediction never feeds back
                 }
             }
@@ -384,7 +385,8 @@ impl PastriCompressor {
         let mut pat_q = UnpredAwareQuantizer::<f64>::new(1.0, radius);
         pat_q.load(&mut ir)?;
         let mut scale_q = if ir.get_u8()? == 1 {
-            let _ = ir.get_f64()?;
+            // the legacy scale hint is parsed (so the cursor advances) but unused
+            ir.get_f64()?;
             let mut q = UnpredAwareQuantizer::<f64>::new(1.0, radius);
             q.load(&mut ir)?;
             Some(q)

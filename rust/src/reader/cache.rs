@@ -67,12 +67,12 @@ impl ChunkCache {
 
     /// Bytes currently charged (decoded payloads + per-entry overhead).
     pub fn bytes(&self) -> usize {
-        self.inner.lock().unwrap().bytes
+        self.inner.lock().map(|inner| inner.bytes).unwrap_or(0)
     }
 
     /// Entries currently held.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.inner.lock().map(|inner| inner.map.len()).unwrap_or(0)
     }
 
     /// True if nothing is cached.
@@ -92,7 +92,7 @@ impl ChunkCache {
         if self.budget == 0 {
             return None;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let Ok(mut inner) = self.inner.lock() else { return None };
         inner.tick += 1;
         let tick = inner.tick;
         let e = inner.map.get_mut(key)?;
@@ -109,7 +109,7 @@ impl ChunkCache {
             return;
         }
         let cost = Self::entry_cost(&key, &field);
-        let mut inner = self.inner.lock().unwrap();
+        let Ok(mut inner) = self.inner.lock() else { return };
         if let Some(old) = inner.map.remove(&key) {
             inner.bytes -= old.cost;
         }
@@ -125,10 +125,12 @@ impl ChunkCache {
                 .map
                 .iter()
                 .min_by_key(|(_, e)| e.stamp)
-                .map(|(k, _)| k.clone())
-                .expect("bytes > budget implies a non-empty map");
-            let evicted = inner.map.remove(&oldest).expect("key just observed");
-            inner.bytes -= evicted.cost;
+                .map(|(k, _)| k.clone());
+            match oldest.and_then(|k| inner.map.remove(&k)) {
+                Some(evicted) => inner.bytes -= evicted.cost,
+                // an empty map cannot out-charge the budget; stop, don't spin
+                None => break,
+            }
         }
     }
 }

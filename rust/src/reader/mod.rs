@@ -349,7 +349,7 @@ impl<'a> ContainerReader<'a> {
     /// embeds the snapshot id (unit-separated from the field name) so a
     /// series' identically-named fields occupy distinct entries.
     fn cache_key(&self, id: usize) -> Option<ChunkKey> {
-        let e = &self.index.entries[id];
+        let e = self.index.entries.get(id)?;
         // only pay the key's String build when a cache is actually on
         (self.cache.budget() > 0).then(|| {
             (
@@ -417,13 +417,19 @@ impl<'a> ContainerReader<'a> {
             }
             chain.push(c);
             // None exactly when entry `c` is direct — the chain ends
-            cur = self.baseline_of[c];
+            cur = self.baseline_of.get(c).copied().flatten();
         }
         for &c in chain.iter().rev() {
-            let e = &self.index.entries[c];
+            let e = self
+                .index
+                .entries
+                .get(c)
+                .ok_or_else(|| SzError::corrupt("delta chain names an entry outside the index"))?;
             let decoded = self.decode_stream(e)?;
             let field = if e.delta {
-                let b = base.as_ref().expect("baseline validated at open");
+                let b = base.as_ref().ok_or_else(|| {
+                    SzError::corrupt("delta chunk reached without a decoded baseline")
+                })?;
                 Arc::new(self.apply_delta(b, &decoded)?)
             } else {
                 Arc::new(decoded)
@@ -433,7 +439,7 @@ impl<'a> ContainerReader<'a> {
             }
             base = Some(field);
         }
-        Ok(base.expect("chain is non-empty or the cache hit"))
+        base.ok_or_else(|| SzError::corrupt("empty delta chain with no cache hit"))
     }
 
     /// Fetch the compressed payload bytes of index entry `entry_id`
@@ -461,14 +467,23 @@ impl<'a> ContainerReader<'a> {
         let slots: Mutex<Vec<Option<Result<Arc<Field>>>>> =
             Mutex::new((0..n).map(|_| None).collect());
         crate::util::par_for_each(n, self.workers, |i| {
-            let r = self.decode_entry(ids[i]);
-            slots.lock().unwrap()[i] = Some(r);
+            let Some(&id) = ids.get(i) else { return };
+            let r = self.decode_entry(id);
+            if let Ok(mut guard) = slots.lock() {
+                if let Some(slot) = guard.get_mut(i) {
+                    *slot = Some(r);
+                }
+            }
         });
         slots
             .into_inner()
-            .unwrap()
+            .map_err(|_| SzError::Runtime("decode pool poisoned its result slots".into()))?
             .into_iter()
-            .map(|slot| slot.expect("every slot filled by the pool"))
+            .map(|slot| {
+                slot.unwrap_or_else(|| {
+                    Err(SzError::Runtime("decode pool left a slot unfilled".into()))
+                })
+            })
             .collect()
     }
 
@@ -510,8 +525,10 @@ impl<'a> ContainerReader<'a> {
             .iter()
             .copied()
             .filter(|&id| {
-                let (s, e) = self.index.entries[id].rows;
-                e > rows.start && s < rows.end
+                self.index
+                    .entries
+                    .get(id)
+                    .is_some_and(|e| e.rows.1 > rows.start && e.rows.0 < rows.end)
             })
             .collect();
         let decoded = self.decode_many(&overlap)?;
@@ -523,7 +540,14 @@ impl<'a> ContainerReader<'a> {
         }
         let mut parts: Vec<Part> = Vec::with_capacity(decoded.len());
         for (&id, chunk) in overlap.iter().zip(&decoded) {
-            let (c_start, c_end) = self.index.entries[id].rows;
+            let (c_start, c_end) = self
+                .index
+                .entries
+                .get(id)
+                .ok_or_else(|| {
+                    SzError::Runtime("overlap set names an entry outside the index".into())
+                })?
+                .rows;
             let lo = rows.start.max(c_start) - c_start;
             let hi = rows.end.min(c_end) - c_start;
             if lo == 0 && hi == c_end - c_start {
@@ -570,10 +594,12 @@ impl<'a> ContainerReader<'a> {
             ordered.sort_by_key(|f| f.snapshot);
             for fm in ordered {
                 for &id in &fm.entry_ids {
-                    let e = &self.index.entries[id];
+                    let Some(e) = self.index.entries.get(id) else { continue };
                     match chain_of.entry((e.field.as_str(), e.chunk_index)) {
                         std::collections::hash_map::Entry::Occupied(o) => {
-                            chains[*o.get()].push(id)
+                            if let Some(chain) = chains.get_mut(*o.get()) {
+                                chain.push(id);
+                            }
                         }
                         std::collections::hash_map::Entry::Vacant(v) => {
                             v.insert(chains.len());
@@ -586,12 +612,17 @@ impl<'a> ContainerReader<'a> {
         let slots: Mutex<Vec<Option<Result<Arc<Field>>>>> =
             Mutex::new((0..n).map(|_| None).collect());
         crate::util::par_for_each(chains.len(), self.workers, |ci| {
+            let Some(chain) = chains.get(ci) else { return };
             let mut prev: Option<Arc<Field>> = None;
-            for &id in &chains[ci] {
-                let e = &self.index.entries[id];
+            for &id in chain {
+                let Some(e) = self.index.entries.get(id) else { break };
                 let r = self.decode_stream(e).and_then(|decoded| {
                     if e.delta {
-                        let b = prev.as_ref().expect("baseline validated at open");
+                        let b = prev.as_ref().ok_or_else(|| {
+                            SzError::corrupt(
+                                "delta chunk reached without a decoded baseline",
+                            )
+                        })?;
                         Ok(Arc::new(self.apply_delta(b, &decoded)?))
                     } else {
                         Ok(Arc::new(decoded))
@@ -599,24 +630,31 @@ impl<'a> ContainerReader<'a> {
                 });
                 let ok = r.is_ok();
                 prev = r.as_ref().ok().map(Arc::clone);
-                slots.lock().unwrap()[id] = Some(r);
+                if let Ok(mut guard) = slots.lock() {
+                    if let Some(slot) = guard.get_mut(id) {
+                        *slot = Some(r);
+                    }
+                }
                 if !ok {
                     break; // the rest of the chain cannot resolve
                 }
             }
         });
-        let mut slot_vec = slots.into_inner().unwrap();
+        let mut slot_vec = slots
+            .into_inner()
+            .map_err(|_| SzError::Runtime("decode pool poisoned its result slots".into()))?;
         let mut out = Vec::with_capacity(self.fields.len());
         for fm in &self.fields {
             let mut parts = Vec::with_capacity(fm.entry_ids.len());
             for &id in &fm.entry_ids {
-                match slot_vec[id].take() {
+                match slot_vec.get_mut(id).and_then(|slot| slot.take()) {
                     Some(Ok(f)) => parts.push(f),
                     Some(Err(e)) => return Err(e),
                     None => {
                         return Err(SzError::corrupt(format!(
                             "chunk {} of '{}' left undecoded (broken delta chain)",
-                            self.index.entries[id].chunk_index, fm.name
+                            self.index.entries.get(id).map_or(0, |e| e.chunk_index),
+                            fm.name
                         )))
                     }
                 }
@@ -638,17 +676,25 @@ impl<'a> ContainerReader<'a> {
         }
         let failure: Mutex<Option<SzError>> = Mutex::new(None);
         crate::util::par_for_each(n, self.workers, |i| {
-            if failure.lock().unwrap().is_some() {
-                return; // a mismatch was already found; stop fetching
+            if let Ok(found) = failure.lock() {
+                if found.is_some() {
+                    return; // a mismatch was already found; stop fetching
+                }
             }
-            if let Err(e) = self.fetch_verified(&self.index.entries[i]) {
-                failure.lock().unwrap().get_or_insert(e);
+            let Some(entry) = self.index.entries.get(i) else { return };
+            if let Err(e) = self.fetch_verified(entry) {
+                if let Ok(mut found) = failure.lock() {
+                    found.get_or_insert(e);
+                }
             }
         });
-        if let Some(e) = failure.into_inner().unwrap() {
-            return Err(e);
+        match failure.into_inner() {
+            Ok(Some(e)) => Err(e),
+            Ok(None) => Ok(n as u64),
+            Err(_) => Err(SzError::Runtime(
+                "checksum pool poisoned its failure slot".into(),
+            )),
         }
-        Ok(n as u64)
     }
 }
 
@@ -681,8 +727,13 @@ fn validate_coverage(
     // and field listings group naturally by timestep
     fields.sort_by_key(|f| f.snapshot);
     for fm in &mut fields {
-        fm.entry_ids.sort_by_key(|&id| index.entries[id].chunk_index);
-        let first = &index.entries[fm.entry_ids[0]];
+        fm.entry_ids
+            .sort_by_key(|&id| index.entries.get(id).map_or(0, |e| e.chunk_index));
+        let first = fm
+            .entry_ids
+            .first()
+            .and_then(|&id| index.entries.get(id))
+            .ok_or_else(|| SzError::corrupt("field listed with no chunks"))?;
         if fm.entry_ids.len() != first.chunk_count {
             return Err(SzError::corrupt(format!(
                 "field {}: have {} of {} chunks",
@@ -693,7 +744,10 @@ fn validate_coverage(
         }
         let mut next_row = 0usize;
         for (i, &id) in fm.entry_ids.iter().enumerate() {
-            let e = &index.entries[id];
+            let e = index
+                .entries
+                .get(id)
+                .ok_or_else(|| SzError::corrupt("field entry id outside the index"))?;
             if e.chunk_index != i || e.field_dims != fm.dims || e.chunk_count != first.chunk_count
             {
                 return Err(SzError::corrupt(format!(
@@ -741,14 +795,19 @@ fn validate_coverage(
                 e.snapshot - 1
             ))
         })?;
-        let b = &index.entries[b_id];
+        let b = index
+            .entries
+            .get(b_id)
+            .ok_or_else(|| SzError::corrupt("baseline entry id outside the index"))?;
         if b.rows != e.rows || b.field_dims != e.field_dims {
             return Err(SzError::corrupt(format!(
                 "delta chunk {} of '{}': baseline rows {:?} disagree with {:?}",
                 e.chunk_index, e.field, b.rows, e.rows
             )));
         }
-        baseline_of[id] = Some(b_id);
+        if let Some(slot) = baseline_of.get_mut(id) {
+            *slot = Some(b_id);
+        }
     }
     Ok((fields, baseline_of))
 }

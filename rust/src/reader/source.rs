@@ -51,17 +51,19 @@ impl ChunkSource for SliceSource<'_> {
     }
 
     fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
-        let end = offset
-            .checked_add(buf.len() as u64)
-            .filter(|&e| e <= self.data.len() as u64)
-            .ok_or_else(|| {
-                SzError::corrupt(format!(
-                    "read [{offset}, +{}) past end of {}-byte source",
-                    buf.len(),
-                    self.data.len()
-                ))
-            })?;
-        buf.copy_from_slice(&self.data[offset as usize..end as usize]);
+        let want = buf.len();
+        let past_end = move || {
+            SzError::corrupt(format!(
+                "read [{offset}, +{want}) past end of {}-byte source",
+                self.data.len()
+            ))
+        };
+        let start = usize::try_from(offset).map_err(|_| past_end())?;
+        let src = start
+            .checked_add(want)
+            .and_then(|end| self.data.get(start..end))
+            .ok_or_else(past_end)?;
+        buf.copy_from_slice(src);
         Ok(())
     }
 
@@ -112,7 +114,10 @@ impl<F: Read + Seek + Send> ChunkSource for FileSource<F> {
                 self.len
             )));
         }
-        let mut f = self.inner.lock().unwrap();
+        let mut f = self
+            .inner
+            .lock()
+            .map_err(|_| SzError::Runtime("file source lock poisoned".into()))?;
         f.seek(SeekFrom::Start(offset))?;
         f.read_exact(buf)?;
         Ok(())
@@ -173,13 +178,20 @@ impl ChunkSource for PrefetchSource<'_> {
                 self.inner.len()
             )));
         }
-        let mut guard = self.buffer.lock().unwrap();
+        let mut guard = self
+            .buffer
+            .lock()
+            .map_err(|_| SzError::Runtime("prefetch buffer lock poisoned".into()))?;
         if let Some((base, data)) = guard.as_ref() {
             if offset >= *base && end <= base + data.len() as u64 {
                 let lo = (offset - base) as usize;
-                buf.copy_from_slice(&data[lo..lo + buf.len()]);
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return Ok(());
+                if let Some(src) =
+                    lo.checked_add(buf.len()).and_then(|hi| data.get(lo..hi))
+                {
+                    buf.copy_from_slice(src);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -200,7 +212,10 @@ impl ChunkSource for PrefetchSource<'_> {
         };
         let mut data = vec![0u8; fetch];
         self.inner.read_at(offset, &mut data)?;
-        buf.copy_from_slice(&data[..buf.len()]);
+        let src = data.get(..buf.len()).ok_or_else(|| {
+            SzError::Runtime("prefetch fetched fewer bytes than requested".into())
+        })?;
+        buf.copy_from_slice(src);
         *guard = Some((offset, data));
         Ok(())
     }

@@ -225,11 +225,15 @@ pub fn percent_decode(s: &str, plus_as_space: bool) -> String {
     let b = s.as_bytes();
     let mut out = Vec::with_capacity(b.len());
     let mut i = 0;
-    while i < b.len() {
-        match b[i] {
-            b'%' if i + 2 < b.len() => {
+    while let Some(&c) = b.get(i) {
+        match c {
+            b'%' => {
                 let hex = |c: u8| (c as char).to_digit(16);
-                match (hex(b[i + 1]), hex(b[i + 2])) {
+                let pair = (
+                    b.get(i + 1).copied().and_then(hex),
+                    b.get(i + 2).copied().and_then(hex),
+                );
+                match pair {
                     (Some(hi), Some(lo)) => {
                         out.push((hi * 16 + lo) as u8);
                         i += 3;

@@ -5,8 +5,10 @@
 //! snapshot table, every chunk entry, even the tags); the per-chunk
 //! CRC-32 makes it total for the payload.
 
+use sz3::byteio::ByteWriter;
 use sz3::container;
 use sz3::reader::ContainerReader;
+use sz3::util::crc32::crc32;
 
 /// Decode every `(snapshot, field)` through the reader with one worker
 /// (determinism and simple panic propagation).
@@ -138,6 +140,150 @@ fn truncation_sweep_errors_cleanly_at_every_cut() {
             Err(_) => panic!("panic on truncation at {cut}"),
             Ok(Ok(Ok(_))) => panic!("truncated container decoded (cut={cut})"),
             Ok(_) => {}
+        }
+    }
+}
+
+/// Hand-assemble a v3 container (index body from `build`, then the v3
+/// index CRC, then `payload`) so length fields can take values the
+/// honest writer never produces. The CRC is made valid on purpose: the
+/// adversarial values must be rejected by semantic validation, not by
+/// the checksum happening to disagree.
+fn crafted_v3(build: impl FnOnce(&mut ByteWriter), payload: &[u8]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_bytes(container::CONTAINER_MAGIC);
+    w.put_u8(container::VERSION_V3);
+    build(&mut w);
+    let mut bytes = w.finish();
+    let c = crc32(&bytes);
+    bytes.extend_from_slice(&c.to_le_bytes());
+    bytes.extend_from_slice(payload);
+    bytes
+}
+
+/// Index body for one single-chunk field with every length-ish knob
+/// exposed to the test.
+#[allow(clippy::too_many_arguments)]
+fn single_chunk_index(
+    w: &mut ByteWriter,
+    dims: &[u64],
+    row_end: u64,
+    offset: u64,
+    len: u64,
+    payload_len: u64,
+    payload_crc: u32,
+) {
+    w.put_varint(1); // chunk count
+    w.put_varint(1); // field count
+    w.put_varint(1); // snapshot table size
+    w.put_str(""); // snapshot tag
+    w.put_str("f"); // field name
+    w.put_varint(0); // chunk_index
+    w.put_varint(1); // chunk_count
+    w.put_varint(0); // row_start
+    w.put_varint(row_end);
+    w.put_varint(dims.len() as u64);
+    for &d in dims {
+        w.put_varint(d);
+    }
+    w.put_str("sz3-lr"); // pipeline tag (informative)
+    w.put_varint(offset);
+    w.put_varint(len);
+    w.put_u32(payload_crc);
+    w.put_varint(0); // snapshot id
+    w.put_u8(0); // flags
+    w.put_varint(payload_len);
+}
+
+/// `offset + len` sums chosen to wrap: the extent check must use checked
+/// arithmetic and report corruption, never wrap into an in-bounds range.
+#[test]
+fn chunk_extent_overflow_is_rejected_not_wrapped() {
+    let payload = [0u8; 8];
+    let crc = crc32(&payload);
+    for (offset, len) in [
+        (u64::MAX, 1),
+        (u64::MAX - 3, 8),
+        (u64::MAX / 2 + 1, u64::MAX / 2 + 1),
+        (8, u64::MAX - 4),
+    ] {
+        let stream = crafted_v3(
+            |w| single_chunk_index(w, &[16], 16, offset, len, 8, crc),
+            &payload,
+        );
+        let caught = std::panic::catch_unwind(|| {
+            container::read_index_meta(&stream).map(|_| ())
+        });
+        match caught {
+            Err(_) => panic!("PANIC on chunk extent {offset}+{len}"),
+            Ok(Ok(())) => panic!("chunk extent {offset}+{len} accepted"),
+            Ok(Err(_)) => {}
+        }
+    }
+}
+
+/// Dimensions and element counts near `usize::MAX`: no decode attempt may
+/// panic (overflowing stride/size arithmetic) or allocate from the claim.
+#[test]
+fn near_max_dims_error_cleanly() {
+    let payload = [0xa5u8; 8];
+    let crc = crc32(&payload);
+    let dim_sets: [&[u64]; 4] = [
+        &[u64::MAX],
+        &[u64::MAX, u64::MAX],
+        &[1 << 40, 1 << 40],
+        &[u64::MAX / 2, 3],
+    ];
+    for dims in dim_sets {
+        let stream = crafted_v3(
+            |w| single_chunk_index(w, dims, dims[0], 0, 8, 8, crc),
+            &payload,
+        );
+        let caught = std::panic::catch_unwind(|| {
+            ContainerReader::from_slice(&stream)
+                .map(|r| r.with_workers(1).read_all().map(|_| ()))
+        });
+        match caught {
+            Err(_) => panic!("PANIC on dims {dims:?}"),
+            Ok(Ok(Ok(()))) => panic!("container with dims {dims:?} decoded"),
+            Ok(_) => {}
+        }
+    }
+    // the shape layer itself must refuse overflowing element counts
+    use sz3::data::shape::Shape;
+    assert!(Shape::new(&[usize::MAX, 2]).is_err());
+    assert!(Shape::new(&[1 << 40, 1 << 40, 2]).is_err());
+}
+
+/// Headers claiming more snapshots (or chunks) than the stream can hold:
+/// the counts must be rejected against the remaining byte budget before
+/// any allocation grows from them.
+#[test]
+fn oversized_header_counts_are_rejected() {
+    for (n_chunks, n_snaps) in [
+        (1u64, u64::MAX),
+        (1, 1 << 40),
+        (u64::MAX, 1),
+        (1 << 40, 1),
+        (1, 1000), // more snapshot tags than bytes left in the header
+    ] {
+        let stream = crafted_v3(
+            |w| {
+                w.put_varint(n_chunks);
+                w.put_varint(1); // field count
+                w.put_varint(n_snaps);
+            },
+            &[],
+        );
+        let caught = std::panic::catch_unwind(|| {
+            container::read_index_meta(&stream).map(|_| ())
+        });
+        match caught {
+            Err(_) => panic!("PANIC on counts chunks={n_chunks} snaps={n_snaps}"),
+            Ok(Ok(())) => {
+                panic!("counts chunks={n_chunks} snaps={n_snaps} accepted")
+            }
+            Ok(Err(_)) => {}
         }
     }
 }
