@@ -17,6 +17,7 @@
 
 use crate::data::{Field, FieldValues};
 use crate::error::{Result, SzError};
+use crate::obs;
 use crate::pipeline::analysis::{BlockAnalyzer, NativeAnalyzer};
 use crate::pipeline::block::block_side;
 use crate::pipeline::spec::{self, PipelineSpec, PreSpec, PredSpec};
@@ -239,8 +240,24 @@ impl AdaptiveChunkSelector {
         Ok(signals)
     }
 
+    /// Stable metric label for a spec's predictor family (the
+    /// [`obs::SELECTOR_FAMILIES`] vocabulary).
+    fn family_label(s: &PipelineSpec) -> &'static str {
+        match s.pred {
+            PredSpec::Block { .. } => "block",
+            PredSpec::Interp(_) => "interp",
+            PredSpec::Lorenzo(_) | PredSpec::Zero => "point",
+            PredSpec::Truncation { .. } => "truncation",
+            PredSpec::Pastri { .. } => "pastri",
+            PredSpec::Aps { .. } => "aps",
+        }
+    }
+
     /// Pick the best-fit candidate for `field` under `conf`.
     pub fn select(&self, field: &Field, conf: &CompressConf) -> Result<Selection> {
+        let t_select = std::time::Instant::now();
+        let _span = obs::trace::Span::enter("select", "selector");
+        obs::SELECTOR_CANDIDATES.add(self.specs.len() as u64);
         let signals = self.signals(field, conf)?;
         let nd = field.shape.ndim();
         let noise = LorenzoPredictor::noise_factor(nd) * signals.eb;
@@ -282,11 +299,18 @@ impl AdaptiveChunkSelector {
             // unpredictable data: every predictor leaves residuals near the
             // raw value range, so prediction buys almost nothing over plain
             // bit truncation — take the cheaper pipeline if it is a candidate
-            (Some((_, e)), Some(t)) if e > UNPREDICTABLE_FRACTION * signals.range => t,
+            (Some((_, e)), Some(t)) if e > UNPREDICTABLE_FRACTION * signals.range => {
+                obs::SELECTOR_OVERRIDES.inc();
+                t
+            }
             (Some((i, _)), _) => i,
             // no candidate has a residual model: keep the user's first choice
             (None, _) => 0,
         };
+        if let Some(s) = self.specs.get(winner) {
+            obs::selector_win(Self::family_label(s));
+        }
+        obs::SELECTOR_US.observe_since(t_select);
         Ok(Selection { pipeline: self.names[winner].clone(), signals })
     }
 }

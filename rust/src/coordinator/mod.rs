@@ -32,6 +32,7 @@ pub use series::{SeriesReport, Snapshot};
 use crate::container::{self, AdaptiveChunkSelector};
 use crate::data::{Field, FieldValues};
 use crate::error::{Result, SzError};
+use crate::obs::{self, trace::Span};
 use crate::pipeline::{self, CompressConf, Compressor};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -132,6 +133,8 @@ impl std::fmt::Display for RunReport {
 /// Degenerate shapes (no axes, zero-length rows) are rejected instead of
 /// panicking on the unchecked `dims[0]` access this used to do.
 pub fn plan_chunks(field: &Field, chunk_elems: usize) -> Result<Vec<(usize, usize)>> {
+    let t0 = Instant::now();
+    let _span = Span::enter("plan_chunks", "coordinator");
     let dims = field.shape.dims();
     if dims.is_empty() {
         return Err(SzError::config("cannot chunk a 0-dimensional field"));
@@ -152,6 +155,8 @@ pub fn plan_chunks(field: &Field, chunk_elems: usize) -> Result<Vec<(usize, usiz
         out.push((r, e));
         r = e;
     }
+    obs::CHUNKS_PLANNED.add(out.len() as u64);
+    obs::CHUNK_PLAN_NS.add(obs::elapsed_ns(t0));
     Ok(out)
 }
 
@@ -275,6 +280,9 @@ impl Coordinator {
                     };
                     let result = slice_rows(&job.field, job.rows).and_then(|chunk| {
                         let raw = chunk.nbytes();
+                        let t_chunk = Instant::now();
+                        let mut span = Span::enter("chunk", "coordinator")
+                            .arg("seq", job.seq as u64);
                         let (stream, used) = match &selector {
                             Some(sel) => {
                                 let name = sel.select(&chunk, &conf)?.pipeline;
@@ -295,6 +303,11 @@ impl Coordinator {
                                 (c.compress(&chunk, &conf)?, c.name().to_string())
                             }
                         };
+                        span.set_arg("bytes_out", stream.len() as u64);
+                        drop(span);
+                        obs::CHUNK_COMPRESS_US.observe_since(t_chunk);
+                        obs::CHUNK_BYTES_IN.add(raw as u64);
+                        obs::CHUNK_BYTES_OUT.add(stream.len() as u64);
                         Ok(CompressedChunk {
                             seq: job.seq,
                             field: job.field.name.clone(),

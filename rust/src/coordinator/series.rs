@@ -273,9 +273,15 @@ impl Coordinator {
                             report.direct_bytes += d.stream.len() as u64;
                             let c = if r.stream.len() < d.stream.len() {
                                 report.delta_chunks += 1;
+                                crate::obs::SERIES_DELTA_CHUNKS.inc();
+                                crate::obs::SERIES_BYTES_SAVED.add(
+                                    (d.stream.len() as u64)
+                                        .saturating_sub(r.stream.len() as u64),
+                                );
                                 CompressedChunk { snapshot: s, delta: true, ..r }
                             } else {
                                 report.direct_chunks += 1;
+                                crate::obs::SERIES_DIRECT_CHUNKS.inc();
                                 CompressedChunk { snapshot: s, ..d }
                             };
                             report.stored_bytes += c.stream.len() as u64;
@@ -289,6 +295,7 @@ impl Coordinator {
                         report.direct_bytes += c.stream.len() as u64;
                         report.stored_bytes += c.stream.len() as u64;
                         report.direct_chunks += 1;
+                        crate::obs::SERIES_DIRECT_CHUNKS.inc();
                         CompressedChunk { snapshot: s, ..c }
                     })
                     .collect(),

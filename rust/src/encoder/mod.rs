@@ -18,6 +18,8 @@ pub use raw::RawEncoder;
 
 use crate::byteio::{ByteReader, ByteWriter};
 use crate::error::Result;
+use crate::obs;
+use std::time::Instant;
 
 /// Entropy coder over quantization indices.
 ///
@@ -33,15 +35,54 @@ pub trait Encoder: Send + Sync {
     fn decode(&self, r: &mut ByteReader, n: usize) -> Result<Vec<u32>>;
 }
 
-/// Construct a boxed encoder instance by name.
-pub fn by_name(name: &str, radius: u32) -> Option<Box<dyn Encoder>> {
-    match name {
-        "huffman" => Some(Box::new(HuffmanEncoder::new())),
-        "fixed_huffman" => Some(Box::new(FixedHuffmanEncoder::new(radius))),
-        "arithmetic" => Some(Box::new(ArithmeticEncoder::new())),
-        "raw" => Some(Box::new(RawEncoder::new())),
-        _ => None,
+/// Timing shim recording encode/decode stage metrics around any encoder.
+/// Applied by [`by_name`], so every pipeline-built encoder reports into
+/// [`crate::obs`] — one clock pair per chunk-level call, nothing per
+/// symbol.
+struct TimedEncoder {
+    inner: Box<dyn Encoder>,
+}
+
+impl Encoder for TimedEncoder {
+    fn name(&self) -> &'static str {
+        self.inner.name()
     }
+
+    fn encode(&self, symbols: &[u32], w: &mut ByteWriter) -> Result<()> {
+        let start = Instant::now();
+        let before = w.len();
+        let out = self.inner.encode(symbols, w);
+        let bytes_in = (symbols.len() as u64).saturating_mul(4);
+        let bytes_out = w.len().saturating_sub(before) as u64;
+        obs::stage(obs::ST_ENCODE).record(start, bytes_in, bytes_out);
+        out
+    }
+
+    fn decode(&self, r: &mut ByteReader, n: usize) -> Result<Vec<u32>> {
+        let start = Instant::now();
+        let before = r.remaining();
+        let out = self.inner.decode(r, n);
+        let bytes_in = before.saturating_sub(r.remaining()) as u64;
+        let bytes_out = match &out {
+            Ok(v) => (v.len() as u64).saturating_mul(4),
+            Err(_) => 0,
+        };
+        obs::stage(obs::ST_DECODE).record(start, bytes_in, bytes_out);
+        out
+    }
+}
+
+/// Construct a boxed encoder instance by name (wrapped in the
+/// stage-metrics timing shim).
+pub fn by_name(name: &str, radius: u32) -> Option<Box<dyn Encoder>> {
+    let inner: Box<dyn Encoder> = match name {
+        "huffman" => Box::new(HuffmanEncoder::new()),
+        "fixed_huffman" => Box::new(FixedHuffmanEncoder::new(radius)),
+        "arithmetic" => Box::new(ArithmeticEncoder::new()),
+        "raw" => Box::new(RawEncoder::new()),
+        _ => return None,
+    };
+    Some(Box::new(TimedEncoder { inner }))
 }
 
 #[cfg(test)]

@@ -63,6 +63,7 @@ pub mod encoder;
 pub mod error;
 pub mod lossless;
 pub mod metrics;
+pub mod obs;
 pub mod pipeline;
 pub mod predictor;
 pub mod preprocessor;

@@ -15,6 +15,8 @@ pub use lzhuf::LzHuf;
 pub use rle::Rle;
 
 use crate::error::{Result, SzError};
+use crate::obs;
+use std::time::Instant;
 
 /// Lossless byte-stream compressor (paper Appendix A.5).
 pub trait Lossless: Send + Sync {
@@ -104,16 +106,53 @@ impl Lossless for GzipLossless {
     }
 }
 
-/// Construct a boxed lossless backend by name.
-pub fn by_name(name: &str) -> Option<Box<dyn Lossless>> {
-    match name {
-        "bypass" | "none" => Some(Box::new(Bypass)),
-        "zstd" => Some(Box::new(ZstdLossless::default())),
-        "gzip" => Some(Box::new(GzipLossless::default())),
-        "lzhuf" => Some(Box::new(LzHuf::default())),
-        "rle" => Some(Box::new(Rle)),
-        _ => None,
+/// Timing shim recording lossless stage metrics around any backend.
+/// Applied by [`by_name`], so every pipeline-built backend reports into
+/// [`crate::obs`] — one clock pair per stream-level call.
+struct TimedLossless {
+    inner: Box<dyn Lossless>,
+}
+
+impl Lossless for TimedLossless {
+    fn name(&self) -> &'static str {
+        self.inner.name()
     }
+
+    fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let start = Instant::now();
+        let out = self.inner.compress(data);
+        let bytes_out = match &out {
+            Ok(v) => v.len() as u64,
+            Err(_) => 0,
+        };
+        obs::stage(obs::ST_LOSSLESS).record(start, data.len() as u64, bytes_out);
+        out
+    }
+
+    fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let start = Instant::now();
+        let out = self.inner.decompress(data);
+        let bytes_out = match &out {
+            Ok(v) => v.len() as u64,
+            Err(_) => 0,
+        };
+        obs::stage(obs::ST_UNLOSSLESS).record(start, data.len() as u64, bytes_out);
+        out
+    }
+}
+
+/// Construct a boxed lossless backend by name (wrapped in the
+/// stage-metrics timing shim).
+pub fn by_name(name: &str) -> Option<Box<dyn Lossless>> {
+    let inner: Box<dyn Lossless> = match name {
+        "bypass" | "none" => Box::new(Bypass),
+        "zstd" => Box::new(ZstdLossless::default()),
+        "gzip" => Box::new(GzipLossless::default()),
+        "lzhuf" => Box::new(LzHuf::default()),
+        "rle" => Box::new(Rle),
+        _ => return None,
+    };
+    Some(Box::new(TimedLossless { inner }))
 }
 
 #[cfg(test)]

@@ -29,19 +29,22 @@ USAGE:
                  [--pipeline NAME|SPEC] [--abs EB | --rel EB | --pwrel EB]
                  [--radius N] [--container] [--adaptive]
                  [--candidates a,b,c] [--chunk-elems N] [--workers N]
-                 --out file.sz3
+                 [--stats] [--trace trace.json] --out file.sz3
   sz3 compress   --series t0.bin,t1.bin,t2.bin --dims 100,500,500
                  [--tags a,b,c] [--no-delta] [...compress flags]
                  --out series.sz3c
   sz3 decompress --input file.sz3 --out raw.bin [--workers N]
+                 [--stats] [--trace trace.json]
   sz3 extract    --input file.sz3c --out raw.bin [--field NAME]
                  [--rows A..B] [--snapshot K] [--workers N]
                  [--cache-mb MB] [--prefetch-kb N]
+                 [--stats] [--trace trace.json]
   sz3 info       --input file.sz3
   sz3 serve      [--config job.json] [--dataset nyx|all] [--out dir]
                  [--container] [--adaptive]
   sz3 serve-http --dir artifacts/ [--addr 127.0.0.1:8080] [--threads N]
                  [--cache-mb MB] [--workers N] [--no-verify]
+                 [--log-format text|json]
   sz3 audit      [--json] [--strict] [--root DIR]   # static analysis
   sz3 datasets                              # Table 3 registry
   sz3 pipelines                             # aliases + stage catalog
@@ -74,8 +77,13 @@ never loaded. --cache-mb budgets the
 decoded-chunk LRU in megabytes (0 disables; --cache is a deprecated
 alias for --cache-mb and now also takes megabytes, not entries).
 serve-http publishes every .sz3c under --dir over HTTP range queries
-(list/meta/ROI/raw-chunk endpoints, /healthz, /statsz) with one shared
---cache-mb byte budget across all artifacts; see docs/SERVE.md.";
+(list/meta/ROI/raw-chunk endpoints, /healthz, /statsz, /metricsz) with
+one shared --cache-mb byte budget across all artifacts; see docs/SERVE.md.
+--stats prints a per-stage breakdown table (wall-time share, byte flow,
+throughput) after the run; --trace FILE writes a Chrome trace_event JSON
+of the run's spans — open it in Perfetto (ui.perfetto.dev) or
+chrome://tracing. --log-format enables one access-log line per request on
+stderr (docs/OBSERVABILITY.md covers the whole metrics/tracing surface).";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -142,6 +150,44 @@ fn write_raw_field(path: &str, field: &Field) -> CliResult {
     std::fs::write(path, field.values.to_le_bytes())
         .map_err(|e| err(format!("writing {path}: {e}")))?;
     Ok(())
+}
+
+/// `--trace FILE` span sink: 2^18 events ≈ 16 MB ring, far beyond any
+/// single CLI run; overflow drops the oldest and counts in
+/// `sz3_trace_events_dropped_total`.
+const TRACE_CAPACITY: usize = 1 << 18;
+
+/// Arm the span tracer when `--trace FILE` was given; returns the path
+/// the finished trace should be written to.
+fn trace_setup(a: &Args) -> Option<String> {
+    let path = a.get("trace")?.to_string();
+    sz3::obs::trace::enable(TRACE_CAPACITY);
+    Some(path)
+}
+
+/// Dump the collected spans as Chrome trace_event JSON (Perfetto /
+/// chrome://tracing) and disarm the tracer.
+fn trace_finish(path: Option<String>) -> CliResult {
+    let Some(path) = path else { return Ok(()) };
+    let json = sz3::obs::trace::dump_json().unwrap_or_else(|| "[]".to_string());
+    sz3::obs::trace::disable();
+    std::fs::write(&path, json).map_err(|e| err(format!("writing {path}: {e}")))?;
+    eprintln!("trace written to {path} (open in Perfetto: ui.perfetto.dev)");
+    Ok(())
+}
+
+/// `--stats` epilogue for compress-side commands.
+fn print_compress_stats(wall: std::time::Duration) {
+    print!("{}", sz3::obs::stage_table(&sz3::obs::COMPRESS_STAGES, wall));
+}
+
+/// `--stats` epilogue for decode-side commands (extract also appends the
+/// reader fetch/CRC/decode breakdown).
+fn print_decompress_stats(wall: std::time::Duration, with_reader: bool) {
+    print!("{}", sz3::obs::stage_table(&sz3::obs::DECOMPRESS_STAGES, wall));
+    if with_reader {
+        print!("{}", sz3::obs::reader_table());
+    }
 }
 
 fn run(argv: Vec<String>) -> CliResult {
@@ -251,6 +297,7 @@ fn cmd_compress_series(a: &Args, series: Vec<String>) -> CliResult {
     let cfg = job_config_from_flags(a, pipeline_name, parse_bound(a)?)?;
     let coord = Coordinator::from_config(&cfg)?;
     let delta = !a.has("no-delta");
+    let trace = trace_setup(a);
     let t0 = std::time::Instant::now();
     let (artifact, report) = coord.run_series_to_container(snapshots, delta)?;
     let dt = t0.elapsed();
@@ -267,7 +314,10 @@ fn cmd_compress_series(a: &Args, series: Vec<String>) -> CliResult {
         dt,
         raw_bytes as f64 / 1e6 / dt.as_secs_f64()
     );
-    Ok(())
+    if a.has("stats") {
+        print_compress_stats(dt);
+    }
+    trace_finish(trace)
 }
 
 fn cmd_compress(a: &Args) -> CliResult {
@@ -283,6 +333,7 @@ fn cmd_compress(a: &Args) -> CliResult {
     let field = read_raw_field(input, &dims, dtype, stem)?;
     let raw_bytes = field.nbytes();
     let bound = parse_bound(a)?;
+    let trace = trace_setup(a);
     let t0 = std::time::Instant::now();
     let (stream, label) = if a.has("container") || a.has("adaptive") || a.get("candidates").is_some()
     {
@@ -324,13 +375,17 @@ fn cmd_compress(a: &Args) -> CliResult {
         dt,
         raw_bytes as f64 / 1e6 / dt.as_secs_f64()
     );
-    Ok(())
+    if a.has("stats") {
+        print_compress_stats(dt);
+    }
+    trace_finish(trace)
 }
 
 fn cmd_decompress(a: &Args) -> CliResult {
     let input = a.need("input")?;
     let out = a.need("out")?;
     let stream = std::fs::read(input)?;
+    let trace = trace_setup(a);
     let t0 = std::time::Instant::now();
     if container::is_container(&stream) {
         // symmetric with compress: --workers caps the decode fan-out too
@@ -364,7 +419,10 @@ fn cmd_decompress(a: &Args) -> CliResult {
             dt,
             total as f64 / 1e6 / dt.as_secs_f64()
         );
-        return Ok(());
+        if a.has("stats") {
+            print_decompress_stats(dt, false);
+        }
+        return trace_finish(trace);
     }
     let field = pipeline::decompress_any(&stream)?;
     let dt = t0.elapsed();
@@ -378,7 +436,10 @@ fn cmd_decompress(a: &Args) -> CliResult {
         dt,
         field.nbytes() as f64 / 1e6 / dt.as_secs_f64()
     );
-    Ok(())
+    if a.has("stats") {
+        print_decompress_stats(dt, false);
+    }
+    trace_finish(trace)
 }
 
 /// Indexed-seek ROI extraction: open the container through a seekable file
@@ -442,6 +503,7 @@ fn cmd_extract(a: &Args) -> CliResult {
         Some(spec) => sz3::util::parse_rows(spec).map_err(|m| err(format!("--rows: {m}")))?,
         None => 0..dims[0],
     };
+    let trace = trace_setup(a);
     let t0 = std::time::Instant::now();
     let region = reader.read_region_at(snapshot, &field, rows.clone())?;
     let dt = t0.elapsed();
@@ -474,7 +536,10 @@ fn cmd_extract(a: &Args) -> CliResult {
         dt,
         region.nbytes() as f64 / 1e6 / dt.as_secs_f64()
     );
-    Ok(())
+    if a.has("stats") {
+        print_decompress_stats(dt, true);
+    }
+    trace_finish(trace)
 }
 
 fn cmd_info(a: &Args) -> CliResult {
@@ -625,6 +690,16 @@ fn cmd_serve_http(a: &Args) -> CliResult {
     let dir = a.need("dir")?;
     let addr = a.get("addr").unwrap_or("127.0.0.1:8080");
     let threads = a.get_or("threads", 4usize)?.max(1);
+    let log = match a.get("log-format") {
+        None => sz3::server::LogFormat::None,
+        Some("text") => sz3::server::LogFormat::Text,
+        Some("json") => sz3::server::LogFormat::Json,
+        Some(other) => {
+            return Err(err(format!(
+                "unknown --log-format '{other}' (expected text or json)"
+            )))
+        }
+    };
     let opts = sz3::server::StoreOptions {
         cache_bytes: cache_budget_bytes(a, 256)?,
         workers: a.get_or("workers", sz3::util::default_workers())?.max(1),
@@ -644,7 +719,8 @@ fn cmd_serve_http(a: &Args) -> CliResult {
             if verify { " (crc-verified)" } else { "" }
         );
     }
-    let handle = sz3::server::serve(store, addr, threads)?;
+    let handle =
+        sz3::server::serve_with(store, addr, sz3::server::ServeOptions { threads, log })?;
     println!(
         "serving {} artifact(s) on http://{} ({} threads, cache budget {} MB)",
         handle.store().artifacts().len(),
@@ -653,6 +729,7 @@ fn cmd_serve_http(a: &Args) -> CliResult {
         handle.store().cache().budget() >> 20
     );
     println!("try: curl http://{}/v1/artifacts", handle.addr());
+    println!("metrics: curl http://{}/metricsz", handle.addr());
     handle.run_forever();
     Ok(())
 }

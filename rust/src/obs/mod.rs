@@ -1,0 +1,1051 @@
+//! Process-wide observability: a dependency-free metrics registry and a
+//! span tracer ([`trace`]) instrumented through the compression hot
+//! layers.
+//!
+//! Every metric is a `static` lock-free cell ([`Counter`], [`Gauge`],
+//! [`Histogram`] — the latter generalizes the log₂-bucket accumulator
+//! that `server/stats.rs` pioneered): recording is a handful of relaxed
+//! atomic adds with no allocation, no locking and no string lookup, so
+//! the instrumentation is compiled in unconditionally (no feature gate)
+//! and stays on in production. The catalog is fixed at compile time;
+//! dynamic dimensions (pipeline specs, artifact ids) fold into small
+//! static label sets (predictor family, endpoint class) so the hot path
+//! never formats or hashes a label.
+//!
+//! Consumers:
+//! * `GET /metricsz` renders the whole registry in Prometheus text
+//!   exposition format ([`render_prometheus`]).
+//! * `sz3 compress/extract --stats` prints the per-stage wall-time /
+//!   bytes / throughput table ([`stage_table`], [`reader_table`]).
+//! * `sz3 ... --trace FILE` dumps the span ring buffer as Chrome
+//!   `trace_event` JSON ([`trace`]).
+//!
+//! The metric catalog is documented in `docs/OBSERVABILITY.md`; this
+//! module is part of the `sz3 audit` trust map, so everything here is
+//! panic-free and uses checked indexing only.
+
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Histogram bucket span: bucket *i* covers `[2^i, 2^(i+1))` µs (bucket 0
+/// also absorbs 0–1 µs), so bucket 25 tops out at ~67 s.
+pub const N_BUCKETS: usize = 26;
+
+/// Monotonically increasing event count — relaxed atomic adds only.
+#[derive(Debug)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// A zeroed counter (const, so counters can live in statics).
+    pub const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    /// Add `n` to the counter.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add 1 to the counter.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// A last-write-wins instantaneous value (bytes resident, entries live).
+#[derive(Debug)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    /// A zeroed gauge.
+    pub const fn new() -> Gauge {
+        Gauge { v: AtomicU64::new(0) }
+    }
+
+    /// Overwrite the gauge.
+    #[inline]
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+/// Log₂-bucketed latency histogram over microseconds: 26 fixed `u64`
+/// slots plus count / sum / max, all relaxed atomics — safe to hammer
+/// from every worker thread with no allocation or locking.
+#[derive(Debug)]
+pub struct Histogram {
+    n: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+/// Point-in-time copy of a [`Histogram`], for rendering and quantiles.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Observations recorded.
+    pub n: u64,
+    /// Sum of all observations, microseconds.
+    pub sum_us: u64,
+    /// Largest observation, microseconds.
+    pub max_us: u64,
+    /// Per-bucket observation counts.
+    pub buckets: [u64; N_BUCKETS],
+}
+
+/// Bucket slot for a microsecond value.
+#[inline]
+fn bucket_of(us: u64) -> usize {
+    if us <= 1 {
+        0
+    } else {
+        ((63 - us.leading_zeros()) as usize).min(N_BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower bound (µs) of bucket `slot`.
+fn bucket_lo_us(slot: usize) -> u64 {
+    if slot == 0 {
+        0
+    } else {
+        1u64 << slot.min(N_BUCKETS)
+    }
+}
+
+/// Exclusive upper bound (µs) of bucket `slot`.
+pub fn bucket_hi_us(slot: usize) -> u64 {
+    1u64 << (slot.min(N_BUCKETS - 1) + 1)
+}
+
+impl Histogram {
+    /// A zeroed histogram (const, so histograms can live in statics).
+    pub const fn new() -> Histogram {
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            n: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+            buckets: [Z; N_BUCKETS],
+        }
+    }
+
+    /// Record one observation of `us` microseconds.
+    #[inline]
+    pub fn observe_us(&self, us: u64) {
+        self.n.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+        if let Some(b) = self.buckets.get(bucket_of(us)) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one observation of a duration.
+    #[inline]
+    pub fn observe(&self, elapsed: Duration) {
+        self.observe_us(u64::try_from(elapsed.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    /// Record the time elapsed since `start`.
+    #[inline]
+    pub fn observe_since(&self, start: Instant) {
+        self.observe(start.elapsed());
+    }
+
+    /// Copy the distribution. Counters advance concurrently, so a
+    /// snapshot taken under traffic is approximate — fine for
+    /// observability.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot {
+            n: self.n.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+            ..HistSnapshot::default()
+        };
+        for (slot, b) in s.buckets.iter_mut().zip(self.buckets.iter()) {
+            *slot = b.load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl HistSnapshot {
+    /// Estimated quantile `q` (0..=1) in microseconds, **linearly
+    /// interpolated within the winning bucket** — the bucket holding the
+    /// target rank is located, then the rank's position inside that
+    /// bucket's count interpolates between the bucket's bounds. Exact
+    /// when a bucket's samples are uniform; always within the bucket
+    /// (the former upper-bound estimate was conservative to 2×).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64) * q.clamp(0.0, 1.0);
+        let mut cum = 0u64;
+        for (slot, &c) in self.buckets.iter().enumerate() {
+            let reach = cum.saturating_add(c);
+            if c > 0 && (reach as f64) >= target {
+                let lo = bucket_lo_us(slot) as f64;
+                let hi = bucket_hi_us(slot) as f64;
+                let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return (lo + (hi - lo) * frac) as u64;
+            }
+            cum = reach;
+        }
+        self.max_us
+    }
+
+    /// Mean observation in microseconds (0 when empty).
+    pub fn mean_us(&self) -> u64 {
+        if self.n == 0 {
+            0
+        } else {
+            self.sum_us / self.n
+        }
+    }
+}
+
+/// Nanoseconds elapsed since `start`, saturating.
+#[inline]
+pub fn elapsed_ns(start: Instant) -> u64 {
+    u64::try_from(start.elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline stage accounting
+// ---------------------------------------------------------------------------
+
+/// Wall time + byte flow accumulator for one pipeline stage.
+#[derive(Debug)]
+pub struct StageMetrics {
+    ns: Counter,
+    b_in: Counter,
+    b_out: Counter,
+    calls: Counter,
+}
+
+impl StageMetrics {
+    /// A zeroed stage accumulator.
+    pub const fn new() -> StageMetrics {
+        StageMetrics {
+            ns: Counter::new(),
+            b_in: Counter::new(),
+            b_out: Counter::new(),
+            calls: Counter::new(),
+        }
+    }
+
+    /// Record one stage execution: wall time since `start`, bytes
+    /// consumed and bytes produced.
+    #[inline]
+    pub fn record(&self, start: Instant, bytes_in: u64, bytes_out: u64) {
+        self.ns.add(elapsed_ns(start));
+        self.b_in.add(bytes_in);
+        self.b_out.add(bytes_out);
+        self.calls.inc();
+    }
+
+    /// Cumulative stage wall time.
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.ns.get())
+    }
+
+    /// Cumulative bytes in.
+    pub fn bytes_in(&self) -> u64 {
+        self.b_in.get()
+    }
+
+    /// Cumulative bytes out.
+    pub fn bytes_out(&self) -> u64 {
+        self.b_out.get()
+    }
+
+    /// Executions recorded.
+    pub fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+}
+
+/// Stage labels, index-aligned with [`STAGE`]. The first five are the
+/// compression direction (paper §3.2 module order), the last four the
+/// decompression direction.
+pub const STAGE_NAMES: [&str; 9] = [
+    "preprocess",
+    "analyze",
+    "predict",
+    "encode",
+    "lossless",
+    "unlossless",
+    "decode",
+    "reconstruct",
+    "postprocess",
+];
+
+/// Stage slot: preprocessor transform (log / linearize) on compress.
+pub const ST_PREPROCESS: usize = 0;
+/// Stage slot: block analysis (regression fit + error estimation).
+pub const ST_ANALYZE: usize = 1;
+/// Stage slot: prediction + quantization sweep on compress.
+pub const ST_PREDICT: usize = 2;
+/// Stage slot: entropy coding of quantization indices.
+pub const ST_ENCODE: usize = 3;
+/// Stage slot: lossless backend, compress direction.
+pub const ST_LOSSLESS: usize = 4;
+/// Stage slot: lossless backend, decompress direction.
+pub const ST_UNLOSSLESS: usize = 5;
+/// Stage slot: entropy decoding of quantization indices.
+pub const ST_DECODE: usize = 6;
+/// Stage slot: prediction + reconstruction sweep on decompress.
+pub const ST_RECONSTRUCT: usize = 7;
+/// Stage slot: preprocessor inverse (exp / de-linearize) on decompress.
+pub const ST_POSTPROCESS: usize = 8;
+
+/// The stage slots of the compression direction, in execution order.
+pub const COMPRESS_STAGES: [usize; 5] =
+    [ST_PREPROCESS, ST_ANALYZE, ST_PREDICT, ST_ENCODE, ST_LOSSLESS];
+
+/// The stage slots of the decompression direction, in execution order.
+pub const DECOMPRESS_STAGES: [usize; 4] =
+    [ST_UNLOSSLESS, ST_DECODE, ST_RECONSTRUCT, ST_POSTPROCESS];
+
+const STAGE_INIT: StageMetrics = StageMetrics::new();
+/// Per-stage accumulators, indexed by the `ST_*` constants.
+pub static STAGE: [StageMetrics; 9] = [STAGE_INIT; 9];
+
+static NULL_STAGE: StageMetrics = StageMetrics::new();
+
+/// The accumulator for stage `slot` (out-of-range slots return an inert
+/// accumulator rather than panicking).
+#[inline]
+pub fn stage(slot: usize) -> &'static StageMetrics {
+    STAGE.get(slot).unwrap_or(&NULL_STAGE)
+}
+
+// ---------------------------------------------------------------------------
+// Static metric catalog
+// ---------------------------------------------------------------------------
+
+/// Chunks emitted by the coordinator's planner.
+pub static CHUNKS_PLANNED: Counter = Counter::new();
+/// Cumulative chunk-planning wall time, nanoseconds.
+pub static CHUNK_PLAN_NS: Counter = Counter::new();
+/// Per-chunk compression wall time (worker-side, selection included).
+pub static CHUNK_COMPRESS_US: Histogram = Histogram::new();
+/// Uncompressed bytes entering per-chunk compression.
+pub static CHUNK_BYTES_IN: Counter = Counter::new();
+/// Compressed bytes leaving per-chunk compression.
+pub static CHUNK_BYTES_OUT: Counter = Counter::new();
+
+/// Predictor-family labels for the adaptive selector's win counters,
+/// index-aligned with [`SELECTOR_WINS`]. Dynamic pipeline specs fold
+/// into their family so recording stays allocation-free.
+pub const SELECTOR_FAMILIES: [&str; 7] =
+    ["block", "interp", "point", "truncation", "pastri", "aps", "other"];
+
+const COUNTER_INIT: Counter = Counter::new();
+/// Adaptive-selector wins per predictor family.
+pub static SELECTOR_WINS: [Counter; 7] = [COUNTER_INIT; 7];
+/// Candidate pipelines scored by the adaptive selector.
+pub static SELECTOR_CANDIDATES: Counter = Counter::new();
+/// Per-chunk adaptive selection wall time.
+pub static SELECTOR_US: Histogram = Histogram::new();
+/// Times the unpredictability override forced the truncation pipeline.
+pub static SELECTOR_OVERRIDES: Counter = Counter::new();
+
+/// Family slot for a predictor-family name (unknown → `"other"`).
+pub fn selector_family_slot(family: &str) -> usize {
+    SELECTOR_FAMILIES
+        .iter()
+        .position(|f| *f == family)
+        .unwrap_or(SELECTOR_FAMILIES.len() - 1)
+}
+
+/// Count one adaptive-selector win for `family`.
+pub fn selector_win(family: &str) {
+    if let Some(c) = SELECTOR_WINS.get(selector_family_slot(family)) {
+        c.inc();
+    }
+}
+
+/// Series chunks stored direct (delta lost or disabled).
+pub static SERIES_DIRECT_CHUNKS: Counter = Counter::new();
+/// Series chunks stored as snapshot residuals (delta won).
+pub static SERIES_DELTA_CHUNKS: Counter = Counter::new();
+/// Payload bytes saved by delta mode vs storing every chunk direct.
+pub static SERIES_BYTES_SAVED: Counter = Counter::new();
+
+/// Reader chunk-fetch wall time (source I/O).
+pub static READER_FETCH_US: Histogram = Histogram::new();
+/// Reader per-chunk CRC-32 verification wall time.
+pub static READER_CRC_US: Histogram = Histogram::new();
+/// Reader per-chunk pipeline decode wall time.
+pub static READER_DECODE_US: Histogram = Histogram::new();
+
+/// Decoded-chunk cache hits.
+pub static CACHE_HITS: Counter = Counter::new();
+/// Decoded-chunk cache misses.
+pub static CACHE_MISSES: Counter = Counter::new();
+/// Entries evicted to make room.
+pub static CACHE_EVICTIONS: Counter = Counter::new();
+/// Entries inserted.
+pub static CACHE_INSERTS: Counter = Counter::new();
+/// Entries rejected as larger than the whole budget.
+pub static CACHE_REJECTS: Counter = Counter::new();
+/// Bytes currently resident in the cache.
+pub static CACHE_BYTES: Gauge = Gauge::new();
+/// Entries currently resident in the cache.
+pub static CACHE_ENTRIES: Gauge = Gauge::new();
+
+/// Endpoint-class labels for the HTTP metrics, index-aligned with
+/// [`HTTP_REQUESTS`] / [`HTTP_US`] / [`HTTP_RESP_BYTES`]. The server's
+/// per-instance `/statsz` accounting uses the same label set.
+pub const HTTP_ENDPOINTS: [&str; 8] =
+    ["list", "meta", "roi", "raw", "healthz", "statsz", "metricsz", "other"];
+
+/// Requests served per endpoint class.
+pub static HTTP_REQUESTS: [Counter; 8] = [COUNTER_INIT; 8];
+const HIST_INIT: Histogram = Histogram::new();
+/// Request handling latency per endpoint class.
+pub static HTTP_US: [Histogram; 8] = [HIST_INIT; 8];
+/// Response body bytes per endpoint class.
+pub static HTTP_RESP_BYTES: [Counter; 8] = [COUNTER_INIT; 8];
+
+/// Endpoint slot for a handler label (unknown → `"other"`).
+pub fn http_slot(label: &str) -> usize {
+    HTTP_ENDPOINTS
+        .iter()
+        .position(|e| *e == label)
+        .unwrap_or(HTTP_ENDPOINTS.len() - 1)
+}
+
+/// Record one served request against endpoint slot `slot`.
+pub fn http_record(slot: usize, elapsed: Duration, resp_bytes: u64) {
+    if let Some(c) = HTTP_REQUESTS.get(slot) {
+        c.inc();
+    }
+    if let Some(h) = HTTP_US.get(slot) {
+        h.observe(elapsed);
+    }
+    if let Some(c) = HTTP_RESP_BYTES.get(slot) {
+        c.add(resp_bytes);
+    }
+}
+
+/// Trace events overwritten because the ring buffer was full.
+pub static TRACE_DROPPED: Counter = Counter::new();
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+fn head(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+fn sample(out: &mut String, name: &str, label: Option<(&str, &str)>, value: &str) {
+    out.push_str(name);
+    if let Some((k, v)) = label {
+        out.push('{');
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(v);
+        out.push_str("\"}");
+    }
+    out.push(' ');
+    out.push_str(value);
+    out.push('\n');
+}
+
+fn seconds(ns: u64) -> String {
+    format!("{:.9}", ns as f64 / 1e9)
+}
+
+/// One labeled counter family.
+fn counter_family(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    label_key: &str,
+    cells: &[(&str, u64)],
+) {
+    head(out, name, "counter", help);
+    for (lv, v) in cells {
+        sample(out, name, Some((label_key, lv)), &v.to_string());
+    }
+}
+
+/// One unlabeled counter.
+fn counter_single(out: &mut String, name: &str, help: &str, v: u64) {
+    head(out, name, "counter", help);
+    sample(out, name, None, &v.to_string());
+}
+
+/// One unlabeled gauge.
+fn gauge_single(out: &mut String, name: &str, help: &str, v: u64) {
+    head(out, name, "gauge", help);
+    sample(out, name, None, &v.to_string());
+}
+
+/// Emit the `_bucket`/`_sum`/`_count` series of one histogram, with an
+/// optional extra label. Bounds are rendered in seconds per convention.
+fn hist_series(out: &mut String, name: &str, label: Option<(&str, &str)>, s: &HistSnapshot) {
+    let bucket_name = format!("{name}_bucket");
+    let mut cum = 0u64;
+    for (slot, c) in s.buckets.iter().enumerate() {
+        cum = cum.saturating_add(*c);
+        let le = format!("{:.6}", bucket_hi_us(slot) as f64 / 1e6);
+        out.push_str(&bucket_name);
+        out.push('{');
+        if let Some((k, v)) = label {
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(v);
+            out.push_str("\",");
+        }
+        out.push_str("le=\"");
+        out.push_str(&le);
+        out.push_str("\"} ");
+        out.push_str(&cum.to_string());
+        out.push('\n');
+    }
+    out.push_str(&bucket_name);
+    out.push('{');
+    if let Some((k, v)) = label {
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(v);
+        out.push_str("\",");
+    }
+    out.push_str("le=\"+Inf\"} ");
+    out.push_str(&s.n.to_string());
+    out.push('\n');
+    sample(
+        out,
+        &format!("{name}_sum"),
+        label,
+        &format!("{:.6}", s.sum_us as f64 / 1e6),
+    );
+    sample(out, &format!("{name}_count"), label, &s.n.to_string());
+}
+
+/// One unlabeled histogram family.
+fn hist_single(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    head(out, name, "histogram", help);
+    hist_series(out, name, None, &h.snapshot());
+}
+
+/// Render the entire registry in Prometheus text exposition format
+/// (version 0.0.4) — the body of `GET /metricsz`.
+pub fn render_prometheus() -> String {
+    let mut out = String::with_capacity(16 * 1024);
+
+    let stage_cells = |f: &dyn Fn(&StageMetrics) -> u64| -> Vec<(&'static str, u64)> {
+        STAGE_NAMES.iter().zip(STAGE.iter()).map(|(n, s)| (*n, f(s))).collect()
+    };
+    head(
+        &mut out,
+        "sz3_stage_seconds_total",
+        "counter",
+        "Cumulative wall time per pipeline stage.",
+    );
+    for (n, s) in STAGE_NAMES.iter().zip(STAGE.iter()) {
+        sample(
+            &mut out,
+            "sz3_stage_seconds_total",
+            Some(("stage", n)),
+            &seconds(s.ns.get()),
+        );
+    }
+    counter_family(
+        &mut out,
+        "sz3_stage_bytes_in_total",
+        "Bytes consumed per pipeline stage.",
+        "stage",
+        &stage_cells(&|s| s.bytes_in()),
+    );
+    counter_family(
+        &mut out,
+        "sz3_stage_bytes_out_total",
+        "Bytes produced per pipeline stage.",
+        "stage",
+        &stage_cells(&|s| s.bytes_out()),
+    );
+    counter_family(
+        &mut out,
+        "sz3_stage_calls_total",
+        "Stage executions.",
+        "stage",
+        &stage_cells(&|s| s.calls()),
+    );
+
+    counter_single(
+        &mut out,
+        "sz3_chunks_planned_total",
+        "Chunks emitted by the coordinator planner.",
+        CHUNKS_PLANNED.get(),
+    );
+    head(
+        &mut out,
+        "sz3_chunk_plan_seconds_total",
+        "counter",
+        "Cumulative chunk-planning wall time.",
+    );
+    sample(&mut out, "sz3_chunk_plan_seconds_total", None, &seconds(CHUNK_PLAN_NS.get()));
+    hist_single(
+        &mut out,
+        "sz3_chunk_compress_seconds",
+        "Per-chunk compression wall time (selection included).",
+        &CHUNK_COMPRESS_US,
+    );
+    counter_single(
+        &mut out,
+        "sz3_chunk_bytes_in_total",
+        "Uncompressed bytes entering per-chunk compression.",
+        CHUNK_BYTES_IN.get(),
+    );
+    counter_single(
+        &mut out,
+        "sz3_chunk_bytes_out_total",
+        "Compressed bytes produced by per-chunk compression.",
+        CHUNK_BYTES_OUT.get(),
+    );
+
+    let win_cells: Vec<(&'static str, u64)> = SELECTOR_FAMILIES
+        .iter()
+        .zip(SELECTOR_WINS.iter())
+        .map(|(f, c)| (*f, c.get()))
+        .collect();
+    counter_family(
+        &mut out,
+        "sz3_selector_wins_total",
+        "Adaptive-selector wins per predictor family.",
+        "family",
+        &win_cells,
+    );
+    counter_single(
+        &mut out,
+        "sz3_selector_candidates_total",
+        "Candidate pipelines scored by the adaptive selector.",
+        SELECTOR_CANDIDATES.get(),
+    );
+    hist_single(
+        &mut out,
+        "sz3_selector_seconds",
+        "Per-chunk adaptive selection wall time.",
+        &SELECTOR_US,
+    );
+    counter_single(
+        &mut out,
+        "sz3_selector_truncation_overrides_total",
+        "Times the unpredictability override forced truncation.",
+        SELECTOR_OVERRIDES.get(),
+    );
+
+    counter_family(
+        &mut out,
+        "sz3_series_chunks_total",
+        "Series chunks by chosen representation.",
+        "mode",
+        &[
+            ("direct", SERIES_DIRECT_CHUNKS.get()),
+            ("delta", SERIES_DELTA_CHUNKS.get()),
+        ],
+    );
+    counter_single(
+        &mut out,
+        "sz3_series_bytes_saved_total",
+        "Payload bytes saved by snapshot delta mode.",
+        SERIES_BYTES_SAVED.get(),
+    );
+
+    hist_single(
+        &mut out,
+        "sz3_reader_fetch_seconds",
+        "Reader chunk-fetch (source I/O) wall time.",
+        &READER_FETCH_US,
+    );
+    hist_single(
+        &mut out,
+        "sz3_reader_crc_seconds",
+        "Reader per-chunk CRC-32 verification wall time.",
+        &READER_CRC_US,
+    );
+    hist_single(
+        &mut out,
+        "sz3_reader_decode_seconds",
+        "Reader per-chunk pipeline decode wall time.",
+        &READER_DECODE_US,
+    );
+
+    counter_single(&mut out, "sz3_cache_hits_total", "Decoded-chunk cache hits.", CACHE_HITS.get());
+    counter_single(
+        &mut out,
+        "sz3_cache_misses_total",
+        "Decoded-chunk cache misses.",
+        CACHE_MISSES.get(),
+    );
+    counter_single(
+        &mut out,
+        "sz3_cache_evictions_total",
+        "Cache entries evicted to make room.",
+        CACHE_EVICTIONS.get(),
+    );
+    counter_single(
+        &mut out,
+        "sz3_cache_inserts_total",
+        "Cache entries inserted.",
+        CACHE_INSERTS.get(),
+    );
+    counter_single(
+        &mut out,
+        "sz3_cache_rejects_total",
+        "Cache entries rejected as larger than the budget.",
+        CACHE_REJECTS.get(),
+    );
+    gauge_single(&mut out, "sz3_cache_bytes", "Bytes resident in the cache.", CACHE_BYTES.get());
+    gauge_single(
+        &mut out,
+        "sz3_cache_entries",
+        "Entries resident in the cache.",
+        CACHE_ENTRIES.get(),
+    );
+
+    let req_cells: Vec<(&'static str, u64)> = HTTP_ENDPOINTS
+        .iter()
+        .zip(HTTP_REQUESTS.iter())
+        .map(|(e, c)| (*e, c.get()))
+        .collect();
+    counter_family(
+        &mut out,
+        "sz3_http_requests_total",
+        "Requests served per endpoint class.",
+        "endpoint",
+        &req_cells,
+    );
+    head(
+        &mut out,
+        "sz3_http_request_seconds",
+        "histogram",
+        "Request handling latency per endpoint class.",
+    );
+    for (e, h) in HTTP_ENDPOINTS.iter().zip(HTTP_US.iter()) {
+        hist_series(&mut out, "sz3_http_request_seconds", Some(("endpoint", e)), &h.snapshot());
+    }
+    let byte_cells: Vec<(&'static str, u64)> = HTTP_ENDPOINTS
+        .iter()
+        .zip(HTTP_RESP_BYTES.iter())
+        .map(|(e, c)| (*e, c.get()))
+        .collect();
+    counter_family(
+        &mut out,
+        "sz3_http_response_bytes_total",
+        "Response body bytes per endpoint class.",
+        "endpoint",
+        &byte_cells,
+    );
+
+    counter_single(
+        &mut out,
+        "sz3_trace_events_dropped_total",
+        "Trace events overwritten because the ring buffer was full.",
+        TRACE_DROPPED.get(),
+    );
+    out
+}
+
+// ---------------------------------------------------------------------------
+// CLI --stats tables
+// ---------------------------------------------------------------------------
+
+fn human_bytes(b: u64) -> String {
+    if b >= 1_000_000_000 {
+        format!("{:.2} GB", b as f64 / 1e9)
+    } else if b >= 1_000_000 {
+        format!("{:.2} MB", b as f64 / 1e6)
+    } else if b >= 1_000 {
+        format!("{:.1} kB", b as f64 / 1e3)
+    } else {
+        format!("{b} B")
+    }
+}
+
+fn human_time(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.0} µs", s * 1e6)
+    }
+}
+
+/// Render the per-stage breakdown table behind `sz3 compress/extract
+/// --stats`: one row per instrumented stage with wall-time share, byte
+/// flow and throughput over the stage's input, then a residual `other`
+/// row so the rows always sum to the measured wall clock.
+pub fn stage_table(slots: &[usize], wall: Duration) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:>10} {:>7} {:>10} {:>10} {:>9}\n",
+        "stage", "time", "%wall", "bytes in", "bytes out", "MB/s"
+    ));
+    let wall_s = wall.as_secs_f64().max(1e-12);
+    let mut accounted = Duration::ZERO;
+    for &slot in slots {
+        let s = stage(slot);
+        if s.calls() == 0 {
+            continue;
+        }
+        let t = s.total();
+        accounted = accounted.saturating_add(t);
+        let mbs = s.bytes_in() as f64 / 1e6 / t.as_secs_f64().max(1e-12);
+        out.push_str(&format!(
+            "{:<12} {:>10} {:>6.1}% {:>10} {:>10} {:>9.1}\n",
+            STAGE_NAMES.get(slot).copied().unwrap_or("?"),
+            human_time(t),
+            100.0 * t.as_secs_f64() / wall_s,
+            human_bytes(s.bytes_in()),
+            human_bytes(s.bytes_out()),
+            mbs,
+        ));
+    }
+    let other = wall.saturating_sub(accounted);
+    out.push_str(&format!(
+        "{:<12} {:>10} {:>6.1}%\n",
+        "other",
+        human_time(other),
+        100.0 * other.as_secs_f64() / wall_s,
+    ));
+    out.push_str(&format!("{:<12} {:>10} {:>6.1}%\n", "wall", human_time(wall), 100.0));
+    out
+}
+
+/// Render the reader-side breakdown behind `sz3 extract --stats`:
+/// fetch / CRC / decode time plus cache behavior.
+pub fn reader_table() -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:>8} {:>10} {:>10} {:>10}\n",
+        "reader", "calls", "total", "mean", "p99"
+    ));
+    for (name, h) in [
+        ("fetch", &READER_FETCH_US),
+        ("crc", &READER_CRC_US),
+        ("decode", &READER_DECODE_US),
+    ] {
+        let s = h.snapshot();
+        if s.n == 0 {
+            continue;
+        }
+        out.push_str(&format!(
+            "{:<12} {:>8} {:>10} {:>9}µs {:>9}µs\n",
+            name,
+            s.n,
+            human_time(Duration::from_micros(s.sum_us)),
+            s.mean_us(),
+            s.quantile_us(0.99),
+        ));
+    }
+    out.push_str(&format!(
+        "cache        hits {} misses {} evictions {} resident {}\n",
+        CACHE_HITS.get(),
+        CACHE_MISSES.get(),
+        CACHE_EVICTIONS.get(),
+        human_bytes(CACHE_BYTES.get()),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counter_and_histogram_survive_concurrent_hammer_exactly() {
+        // N threads × M ops: totals must be exact (no lost updates), and
+        // the histogram's bucket sum must equal its observation count.
+        let c = Arc::new(Counter::new());
+        let h = Arc::new(Histogram::new());
+        let threads = 8usize;
+        let per = 10_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let c = Arc::clone(&c);
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        c.add(2);
+                        h.observe_us((t as u64) * 131 + i % 4096);
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().expect("hammer thread panicked");
+        }
+        let expected = threads as u64 * per;
+        assert_eq!(c.get(), expected * 2);
+        let s = h.snapshot();
+        assert_eq!(s.n, expected);
+        assert_eq!(s.buckets.iter().sum::<u64>(), expected);
+        assert!(s.max_us >= 4095 && s.max_us <= 7 * 131 + 4095);
+    }
+
+    #[test]
+    fn bucket_of_matches_log2_bounds() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(127), 6);
+        assert_eq!(bucket_of(128), 7);
+        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1);
+        for slot in 0..N_BUCKETS {
+            assert!(bucket_lo_us(slot) < bucket_hi_us(slot));
+            if slot > 0 {
+                assert_eq!(bucket_lo_us(slot), bucket_hi_us(slot - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_the_winning_bucket() {
+        let h = Histogram::new();
+        // 100 samples at 100µs → bucket [64,128); one outlier at 50ms
+        for _ in 0..100 {
+            h.observe_us(100);
+        }
+        h.observe_us(50_000);
+        let s = h.snapshot();
+        // p50: target rank 50.5 of 101, all inside [64,128) → interpolated
+        // strictly inside the bucket, not the old 128µs upper bound
+        let p50 = s.quantile_us(0.50);
+        assert!((64..128).contains(&p50), "p50 {p50} must interpolate inside [64,128)");
+        // p99: rank 99.99 of 101 still inside the fast bucket
+        let p99 = s.quantile_us(0.99);
+        assert!((64..=128).contains(&p99), "p99 {p99}");
+        // p100 reaches the outlier's bucket
+        assert!(s.quantile_us(1.0) >= 32_768);
+        assert_eq!(s.max_us, 50_000);
+        // degenerate cases
+        assert_eq!(HistSnapshot::default().quantile_us(0.5), 0);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        // touch a few metrics so non-zero samples render too
+        stage(ST_ENCODE).record(std::time::Instant::now(), 1024, 256);
+        CHUNK_COMPRESS_US.observe_us(500);
+        selector_win("interp");
+        selector_win("not-a-family");
+        http_record(http_slot("roi"), Duration::from_micros(250), 4096);
+        let text = render_prometheus();
+        let mut families = 0usize;
+        let mut seen_type_for = Vec::new();
+        for line in text.lines() {
+            assert!(!line.ends_with(' '), "trailing space: {line:?}");
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                families += 1;
+                let mut it = rest.split(' ');
+                let name = it.next().unwrap_or("");
+                let kind = it.next().unwrap_or("");
+                assert!(
+                    matches!(kind, "counter" | "gauge" | "histogram"),
+                    "bad TYPE: {line}"
+                );
+                seen_type_for.push(name.to_string());
+            } else if !line.starts_with('#') && !line.is_empty() {
+                // sample line: name[{labels}] value
+                let (series, value) =
+                    line.rsplit_once(' ').expect("sample line has a value");
+                assert!(value.parse::<f64>().is_ok(), "bad value in: {line}");
+                let name = series.split('{').next().unwrap_or("");
+                assert!(
+                    seen_type_for.iter().map(|f| f.as_str()).any(|f| name == f
+                        || name == format!("{f}_bucket")
+                        || name == format!("{f}_sum")
+                        || name == format!("{f}_count")),
+                    "sample before its TYPE: {line}"
+                );
+            }
+        }
+        assert!(families >= 15, "need ≥15 metric families, got {families}");
+        // the acceptance-bar families are all present
+        for fam in [
+            "sz3_stage_seconds_total",
+            "sz3_selector_wins_total",
+            "sz3_cache_hits_total",
+            "sz3_reader_decode_seconds",
+            "sz3_http_request_seconds",
+        ] {
+            assert!(text.contains(&format!("# TYPE {fam} ")), "missing {fam}");
+        }
+        // histogram buckets are cumulative and end at +Inf == count
+        let roi_buckets: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("sz3_http_request_seconds_bucket{endpoint=\"roi\""))
+            .map(|l| l.rsplit_once(' ').and_then(|(_, v)| v.parse().ok()).unwrap_or(0))
+            .collect();
+        assert_eq!(roi_buckets.len(), N_BUCKETS + 1);
+        assert!(roi_buckets.windows(2).all(|w| w[0] <= w[1]), "non-cumulative buckets");
+    }
+
+    #[test]
+    fn stage_table_accounts_for_wall_time() {
+        let wall = Duration::from_millis(100);
+        let t = stage_table(&COMPRESS_STAGES, wall);
+        assert!(t.contains("wall"));
+        assert!(t.contains("other"));
+        assert!(t.lines().count() >= 3);
+        let rt = reader_table();
+        assert!(rt.contains("cache"));
+    }
+}

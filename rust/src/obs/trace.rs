@@ -1,0 +1,318 @@
+//! Span-based tracer with a ring-buffer sink and Chrome `trace_event`
+//! JSON export.
+//!
+//! [`Span::enter`] opens an RAII span; dropping it records one complete
+//! (`"ph":"X"`) event into a fixed-capacity ring buffer. Disabled (the
+//! default) a span is one relaxed atomic load — no clock read, no
+//! allocation, no lock. Enabled, recording is a clock read plus one
+//! short mutex push of a `Copy` event (names and arg keys are
+//! `&'static str`, so the hot path still never allocates); when the
+//! ring wraps, the oldest event is overwritten and
+//! [`super::TRACE_DROPPED`] counts the loss.
+//!
+//! [`dump_json`] renders the buffer in Chrome's `trace_event` format
+//! (JSON object with a `traceEvents` array of duration-complete events),
+//! which `chrome://tracing` and [Perfetto](https://ui.perfetto.dev) open
+//! directly — `sz3 compress --trace out.json` end to end. See
+//! `docs/OBSERVABILITY.md` for the workflow.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Maximum key/value args carried per span (fixed so events stay `Copy`).
+pub const MAX_ARGS: usize = 2;
+
+/// One recorded complete event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Span name (static — e.g. `"chunk"`, `"select"`).
+    pub name: &'static str,
+    /// Category (static — the subsystem, e.g. `"coordinator"`).
+    pub cat: &'static str,
+    /// Start, microseconds since the sink was enabled.
+    pub ts_us: u64,
+    /// Duration, microseconds.
+    pub dur_us: u64,
+    /// Recording thread (small dense ids, first-use order).
+    pub tid: u64,
+    /// Numeric args attached via [`Span::arg`].
+    pub args: [(&'static str, u64); MAX_ARGS],
+    /// How many of `args` are set.
+    pub n_args: u8,
+}
+
+struct Sink {
+    events: Vec<Event>,
+    /// Next write slot once `events` reached capacity.
+    write: usize,
+    capacity: usize,
+    start: Instant,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn sink_guard() -> MutexGuard<'static, Option<Sink>> {
+    match SINK.lock() {
+        Ok(g) => g,
+        // a panicking span holder cannot corrupt a Vec of Copy events
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Start tracing into a fresh ring buffer of `capacity` events
+/// (clamped to at least 16). Replaces any previous buffer.
+pub fn enable(capacity: usize) {
+    let capacity = capacity.max(16);
+    let mut g = sink_guard();
+    *g = Some(Sink {
+        events: Vec::with_capacity(capacity),
+        write: 0,
+        capacity,
+        start: Instant::now(),
+    });
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Stop tracing and drop the buffer.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+    let mut g = sink_guard();
+    *g = None;
+}
+
+/// True while a sink is installed.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Events currently buffered (oldest first).
+pub fn events() -> Vec<Event> {
+    let g = sink_guard();
+    match g.as_ref() {
+        Some(s) => {
+            if s.events.len() < s.capacity {
+                s.events.clone()
+            } else {
+                // ring wrapped: [write..] is the oldest run
+                let mut out = Vec::with_capacity(s.events.len());
+                out.extend_from_slice(s.events.get(s.write..).unwrap_or(&[]));
+                out.extend_from_slice(s.events.get(..s.write).unwrap_or(&[]));
+                out
+            }
+        }
+        None => Vec::new(),
+    }
+}
+
+fn push(s: &mut Sink, event: Event) {
+    if s.events.len() < s.capacity {
+        s.events.push(event);
+    } else {
+        if let Some(slot) = s.events.get_mut(s.write) {
+            *slot = event;
+        }
+        s.write = (s.write + 1) % s.capacity.max(1);
+        super::TRACE_DROPPED.inc();
+    }
+}
+
+/// An RAII span: times the enclosing scope and records one complete
+/// event on drop (when tracing is enabled).
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start: Option<Instant>,
+    args: [(&'static str, u64); MAX_ARGS],
+    n_args: u8,
+}
+
+impl Span {
+    /// Open a span named `name` in category `cat`. When tracing is
+    /// disabled this is a single relaxed load and the span is inert.
+    #[inline]
+    pub fn enter(name: &'static str, cat: &'static str) -> Span {
+        let start = if ENABLED.load(Ordering::Relaxed) {
+            Some(Instant::now())
+        } else {
+            None
+        };
+        Span { name, cat, start, args: [("", 0); MAX_ARGS], n_args: 0 }
+    }
+
+    /// Attach a numeric argument (first [`MAX_ARGS`] stick).
+    #[inline]
+    pub fn arg(mut self, key: &'static str, value: u64) -> Span {
+        self.set_arg(key, value);
+        self
+    }
+
+    /// Attach a numeric argument in place (for spans held in a binding).
+    #[inline]
+    pub fn set_arg(&mut self, key: &'static str, value: u64) {
+        let n = usize::from(self.n_args);
+        if let Some(slot) = self.args.get_mut(n) {
+            *slot = (key, value);
+            self.n_args = self.n_args.saturating_add(1);
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(t0) = self.start else { return };
+        let dur_us = u64::try_from(t0.elapsed().as_micros()).unwrap_or(u64::MAX);
+        // ts is computed against the sink's epoch under the same lock
+        // that pushes the event (duration_since saturates to zero for a
+        // span opened before the sink was (re-)enabled)
+        let mut g = sink_guard();
+        let Some(s) = g.as_mut() else { return };
+        let ts_us = u64::try_from(t0.duration_since(s.start).as_micros()).unwrap_or(0);
+        let event = Event {
+            name: self.name,
+            cat: self.cat,
+            ts_us,
+            dur_us,
+            tid: TID.with(|t| *t),
+            args: self.args,
+            n_args: self.n_args,
+        };
+        push(s, event);
+    }
+}
+
+/// Render the buffered events as Chrome `trace_event` JSON — an object
+/// with a `traceEvents` array of `"ph":"X"` (duration-complete) events,
+/// loadable in `chrome://tracing` and Perfetto. Returns `None` when
+/// tracing was never enabled.
+pub fn dump_json() -> Option<String> {
+    if !enabled() {
+        return None;
+    }
+    let evs = events();
+    let pid = std::process::id();
+    let mut out = String::with_capacity(evs.len() * 96 + 64);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, e) in evs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":{},\"tid\":{}",
+            e.name, e.cat, e.ts_us, e.dur_us, pid, e.tid
+        ));
+        if e.n_args > 0 {
+            out.push_str(",\"args\":{");
+            for (j, (k, v)) in e.args.iter().take(usize::from(e.n_args)).enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("\"{k}\":{v}"));
+            }
+            out.push('}');
+        }
+        out.push_str("}}");
+    }
+    out.push_str("]}\n");
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize tests that flip the global sink.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = locked();
+        disable();
+        {
+            let _s = Span::enter("noop", "test").arg("k", 1);
+        }
+        assert!(dump_json().is_none());
+        assert!(events().is_empty());
+    }
+
+    #[test]
+    fn spans_record_and_dump_valid_chrome_json() {
+        let _g = locked();
+        enable(64);
+        {
+            let _outer = Span::enter("outer", "test").arg("bytes", 1234);
+            let _inner = Span::enter("inner", "test");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let json = dump_json().expect("enabled sink dumps");
+        disable();
+        // valid JSON by the crate's own parser
+        let parsed = crate::config::Json::parse(&json).expect("trace JSON parses");
+        let evs = parsed
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents array");
+        assert_eq!(evs.len(), 2, "{json}");
+        let mut begins = 0i64;
+        let mut ends = 0i64;
+        for e in evs {
+            let ph = e.get("ph").and_then(|p| p.as_str()).expect("ph");
+            match ph {
+                "B" => begins += 1,
+                "E" => ends += 1,
+                "X" => {
+                    // complete events are self-balanced but must carry a
+                    // duration and a timestamp
+                    assert!(e.get("dur").and_then(|d| d.as_f64()).is_some());
+                    assert!(e.get("ts").and_then(|d| d.as_f64()).is_some());
+                }
+                other => panic!("unexpected phase {other}"),
+            }
+            for key in ["name", "cat", "pid", "tid"] {
+                assert!(e.get(key).is_some(), "event missing {key}");
+            }
+        }
+        assert_eq!(begins, ends, "begin/end events must balance");
+        // the inner span closed first and slept ≥2ms
+        let inner = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("inner"))
+            .expect("inner event");
+        assert!(inner.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0) >= 2_000.0);
+        // args survived on the outer span
+        let outer = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("outer"))
+            .expect("outer event");
+        let bytes = outer
+            .get("args")
+            .and_then(|a| a.get("bytes"))
+            .and_then(|b| b.as_f64());
+        assert_eq!(bytes, Some(1234.0));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let _g = locked();
+        let dropped_before = crate::obs::TRACE_DROPPED.get();
+        enable(16);
+        for _ in 0..40 {
+            let _s = Span::enter("tick", "test");
+        }
+        let evs = events();
+        assert_eq!(evs.len(), 16, "ring keeps exactly its capacity");
+        disable();
+        assert_eq!(crate::obs::TRACE_DROPPED.get() - dropped_before, 24);
+    }
+}

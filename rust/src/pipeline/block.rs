@@ -14,9 +14,11 @@ use crate::data::{Field, FieldValues, NdCursor, Scalar, Shape};
 use crate::encoder::{self, Encoder};
 use crate::error::{Result, SzError};
 use crate::lossless::{self};
+use crate::obs;
 use crate::predictor::{CompositeChoice, LorenzoPredictor, Predictor, RegressionFit};
 use crate::quantizer::{LinearQuantizer, Quantizer};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Block side length per dimensionality (SZ2 conventions).
 pub fn block_side(ndim: usize) -> usize {
@@ -119,14 +121,21 @@ impl BlockCompressor {
                 bidx[d] = 0;
             }
         }
+        let t_analyze = Instant::now();
         let analyses: Vec<RawAnalysis> = if full_blocks_data.is_empty() {
             Vec::new()
         } else {
             self.analyzer.analyze_batch(&full_blocks_data, &full_dims)?
         };
+        obs::stage(obs::ST_ANALYZE).record(
+            t_analyze,
+            (full_blocks_data.len() as u64).saturating_mul(8),
+            (analyses.len() as u64).saturating_mul((nd as u64).saturating_add(3)).saturating_mul(8),
+        );
         debug_assert_eq!(analyses.len() * block_len, full_blocks_data.len());
 
         // ---- Pass 2: per-block selection + prediction + quantization ----
+        let t_predict = Instant::now();
         let mut quantizer = LinearQuantizer::<T>::with_radius(eb, radius);
         let mut indices: Vec<u32> = Vec::with_capacity(shape.len());
         let mut selections = BitWriter::new();
@@ -211,6 +220,11 @@ impl BlockCompressor {
                 }
             }
         }
+        obs::stage(obs::ST_PREDICT).record(
+            t_predict,
+            (shape.len() as u64).saturating_mul(std::mem::size_of::<T>() as u64),
+            (indices.len() as u64).saturating_mul(4),
+        );
 
         // ---- Serialize ----
         let ll = lossless::by_name(&self.lossless)
@@ -259,6 +273,7 @@ impl BlockCompressor {
         let eb = quantizer.eb();
         let indices = enc.decode(&mut ir, shape.len())?;
 
+        let t_reconstruct = Instant::now();
         let lorenzo = LorenzoPredictor::new(nd);
         let mut values = vec![T::zero(); shape.len()];
         let use_fast = self.specialized && block_fast::supports(nd);
@@ -334,6 +349,11 @@ impl BlockCompressor {
                 bidx[d] = 0;
             }
         }
+        obs::stage(obs::ST_RECONSTRUCT).record(
+            t_reconstruct,
+            (indices.len() as u64).saturating_mul(4),
+            (values.len() as u64).saturating_mul(std::mem::size_of::<T>() as u64),
+        );
         Ok(values)
     }
 }

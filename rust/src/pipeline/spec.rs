@@ -1207,7 +1207,13 @@ impl Compressor for PreprocessedCompressor {
         StreamHeader::for_field(&self.name, field).write(&mut w);
         let mut f = field.clone();
         let mut c = conf.clone();
+        let t_pre = std::time::Instant::now();
         let state = self.instantiate().process(&mut f, &mut c)?;
+        crate::obs::stage(crate::obs::ST_PREPROCESS).record(
+            t_pre,
+            field.len() as u64,
+            f.len() as u64,
+        );
         w.put_block(&state);
         w.put_block(&self.inner.compress(&f, &c)?);
         Ok(w.finish())
@@ -1219,7 +1225,13 @@ impl Compressor for PreprocessedCompressor {
         let state = r.get_block()?.to_vec();
         let inner_stream = r.get_block()?;
         let mut field = self.inner.decompress(inner_stream)?;
+        let t_post = std::time::Instant::now();
         self.instantiate().postprocess(&mut field, &state)?;
+        crate::obs::stage(crate::obs::ST_POSTPROCESS).record(
+            t_post,
+            0,
+            field.len() as u64,
+        );
         if field.len() != header.len() {
             return Err(SzError::corrupt(format!(
                 "preprocessed stream: {} elements after postprocess, header \

@@ -95,8 +95,12 @@ impl ChunkCache {
         let Ok(mut inner) = self.inner.lock() else { return None };
         inner.tick += 1;
         let tick = inner.tick;
-        let e = inner.map.get_mut(key)?;
+        let Some(e) = inner.map.get_mut(key) else {
+            crate::obs::CACHE_MISSES.inc();
+            return None;
+        };
         e.stamp = tick;
+        crate::obs::CACHE_HITS.inc();
         Some(Arc::clone(&e.field))
     }
 
@@ -114,12 +118,16 @@ impl ChunkCache {
             inner.bytes -= old.cost;
         }
         if cost > self.budget {
+            crate::obs::CACHE_REJECTS.inc();
+            crate::obs::CACHE_BYTES.set(inner.bytes as u64);
+            crate::obs::CACHE_ENTRIES.set(inner.map.len() as u64);
             return;
         }
         inner.tick += 1;
         let stamp = inner.tick;
         inner.bytes += cost;
         inner.map.insert(key, Entry { stamp, cost, field });
+        crate::obs::CACHE_INSERTS.inc();
         while inner.bytes > self.budget {
             let oldest = inner
                 .map
@@ -127,11 +135,16 @@ impl ChunkCache {
                 .min_by_key(|(_, e)| e.stamp)
                 .map(|(k, _)| k.clone());
             match oldest.and_then(|k| inner.map.remove(&k)) {
-                Some(evicted) => inner.bytes -= evicted.cost,
+                Some(evicted) => {
+                    inner.bytes -= evicted.cost;
+                    crate::obs::CACHE_EVICTIONS.inc();
+                }
                 // an empty map cannot out-charge the budget; stop, don't spin
                 None => break,
             }
         }
+        crate::obs::CACHE_BYTES.set(inner.bytes as u64);
+        crate::obs::CACHE_ENTRIES.set(inner.map.len() as u64);
     }
 }
 

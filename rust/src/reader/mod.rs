@@ -44,12 +44,14 @@ use crate::container::{self, ChunkEntry, ContainerIndex};
 use crate::coordinator::slice_rows;
 use crate::data::{Field, FieldValues};
 use crate::error::{Result, SzError};
+use crate::obs;
 use crate::pipeline;
 use crate::util::crc32::crc32;
 use std::ops::Range;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Initial prefix size tried when parsing the index from a source; doubled
 /// until the index parses or the whole artifact has been read.
@@ -327,12 +329,16 @@ impl<'a> ContainerReader<'a> {
             .payload_offset
             .checked_add(e.offset as u64)
             .ok_or_else(|| SzError::corrupt("chunk offset overflows"))?;
+        let t_fetch = Instant::now();
         let mut buf = vec![0u8; e.len];
         self.source.read_at(offset, &mut buf)?;
+        obs::READER_FETCH_US.observe_since(t_fetch);
         self.counters.chunks_fetched.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_fetched.fetch_add(e.len as u64, Ordering::Relaxed);
         if let Some(expect) = e.crc32 {
+            let t_crc = Instant::now();
             let got = crc32(&buf);
+            obs::READER_CRC_US.observe_since(t_crc);
             if got != expect {
                 return Err(SzError::corrupt(format!(
                     "chunk {} of '{}': crc32 mismatch (index {expect:#010x}, \
@@ -365,6 +371,7 @@ impl<'a> ContainerReader<'a> {
     /// not the snapshot.
     fn decode_stream(&self, e: &ChunkEntry) -> Result<Field> {
         let stream = self.fetch_verified(e)?;
+        let t_decode = Instant::now();
         let compressor = pipeline::build(&e.pipeline).map_err(|err| {
             pipeline::spec::unknown_pipeline_error("chunk index", &e.pipeline, &err)
         })?;
@@ -387,6 +394,7 @@ impl<'a> ContainerReader<'a> {
                 expect
             )));
         }
+        obs::READER_DECODE_US.observe_since(t_decode);
         self.counters.chunks_decoded.fetch_add(1, Ordering::Relaxed);
         Ok(field)
     }

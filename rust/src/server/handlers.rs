@@ -14,16 +14,31 @@ use super::http::{json_escape, Request, Response};
 use super::stats::ServerStats;
 use super::ArtifactStore;
 use crate::data::FieldValues;
+use crate::obs;
 use crate::util::parse_rows;
 use std::time::Instant;
 
 /// Route `req`, answer it, and record its latency under the endpoint
-/// label — the single entry point the connection loop calls.
+/// label — the single entry point the connection loop calls. Latency is
+/// double-entried: into the per-server [`ServerStats`] (for `/statsz`)
+/// and into the process-wide [`obs`] registry (for `/metricsz`).
 pub fn dispatch(store: &ArtifactStore, stats: &ServerStats, req: &Request) -> Response {
+    dispatch_labeled(store, stats, req).1
+}
+
+/// [`dispatch`], but also return the endpoint label so the connection
+/// loop can stamp access-log lines without re-routing.
+pub fn dispatch_labeled(
+    store: &ArtifactStore,
+    stats: &ServerStats,
+    req: &Request,
+) -> (&'static str, Response) {
     let t0 = Instant::now();
     let (label, resp) = route(store, stats, req);
-    stats.record(label, t0.elapsed());
-    resp
+    let elapsed = t0.elapsed();
+    stats.record(label, elapsed);
+    obs::http_record(obs::http_slot(label), elapsed, resp.body.len() as u64);
+    (label, resp)
 }
 
 /// Match the request path to a handler; returns the endpoint label used
@@ -43,6 +58,7 @@ pub fn route(
     match segs.as_slice() {
         ["healthz"] => ("healthz", healthz(store, stats)),
         ["statsz"] => ("statsz", statsz(store, stats)),
+        ["metricsz"] => ("metricsz", metricsz()),
         ["v1", "artifacts"] => ("list", list(store)),
         ["v1", "artifacts", id] => ("meta", meta(store, id)),
         ["v1", "artifacts", id, "fields", name] => ("roi", roi(store, req, id, name)),
@@ -310,7 +326,33 @@ fn raw(store: &ArtifactStore, req: &Request, id: &str) -> Response {
     }
     match art.reader.chunk_payload(n) {
         Ok(bytes) => {
-            let mut resp = Response::octets(bytes)
+            let total = bytes.len();
+            let range = match req.header("range") {
+                Some(spec) => parse_byte_range(spec, total),
+                None => ByteRange::Full,
+            };
+            if let ByteRange::Unsatisfiable = range {
+                return Response::error(
+                    416,
+                    &format!("range unsatisfiable for {total}-byte chunk payload"),
+                )
+                .with_header("Content-Range", format!("bytes */{total}"));
+            }
+            let (status, body, content_range) = match range {
+                ByteRange::Slice(first, last) => (
+                    206,
+                    bytes.get(first..=last).unwrap_or(&[]).to_vec(),
+                    Some(format!("bytes {first}-{last}/{total}")),
+                ),
+                _ => (200, bytes, None),
+            };
+            let mut resp = Response::octets(body);
+            resp.status = status;
+            if let Some(cr) = content_range {
+                resp = resp.with_header("Content-Range", cr);
+            }
+            let mut resp = resp
+                .with_header("Accept-Ranges", "bytes")
                 .with_header("X-SZ3-Field", entry.field.clone())
                 .with_header("X-SZ3-Chunk", entry.chunk_index.to_string())
                 .with_header("X-SZ3-Pipeline", entry.pipeline.clone())
@@ -330,6 +372,79 @@ fn raw(store: &ArtifactStore, req: &Request, id: &str) -> Response {
         }
         Err(e) => Response::error(500, &e.to_string()),
     }
+}
+
+/// Prometheus text exposition (format 0.0.4) of the whole process-wide
+/// [`obs`] registry — pipeline stages, coordinator, selector, reader,
+/// cache, and HTTP families in one scrape.
+fn metricsz() -> Response {
+    Response::text(
+        200,
+        "text/plain; version=0.0.4; charset=utf-8",
+        obs::render_prometheus(),
+    )
+}
+
+/// Outcome of parsing a `Range:` header against a body of `total` bytes.
+enum ByteRange {
+    /// No range header, or one we ignore (malformed, multi-range, or a
+    /// unit other than bytes) — RFC 7233 says serve the full 200.
+    Full,
+    /// Single satisfiable range: inclusive first/last byte positions.
+    Slice(usize, usize),
+    /// Syntactically valid but no byte overlaps the body → 416.
+    Unsatisfiable,
+}
+
+/// Parse a single-range `bytes=` specifier. Supported forms: `bytes=a-b`
+/// (inclusive), `bytes=a-` (from `a` to the end), and `bytes=-n` (final
+/// `n` bytes). Multi-range and malformed specs fall back to `Full`;
+/// a first byte at or past the end — or an empty suffix — is
+/// `Unsatisfiable`.
+fn parse_byte_range(spec: &str, total: usize) -> ByteRange {
+    let Some(ranges) = spec.strip_prefix("bytes=") else {
+        return ByteRange::Full;
+    };
+    let ranges = ranges.trim();
+    if ranges.contains(',') {
+        return ByteRange::Full;
+    }
+    let Some((a, b)) = ranges.split_once('-') else {
+        return ByteRange::Full;
+    };
+    let (a, b) = (a.trim(), b.trim());
+    if a.is_empty() {
+        // suffix form "-n": the final n bytes
+        let Ok(tail) = b.parse::<usize>() else {
+            return ByteRange::Full;
+        };
+        if tail == 0 || total == 0 {
+            return ByteRange::Unsatisfiable;
+        }
+        return ByteRange::Slice(
+            total.saturating_sub(tail),
+            total.saturating_sub(1),
+        );
+    }
+    let Ok(first) = a.parse::<usize>() else {
+        return ByteRange::Full;
+    };
+    if first >= total {
+        return ByteRange::Unsatisfiable;
+    }
+    let last = if b.is_empty() {
+        total.saturating_sub(1)
+    } else {
+        match b.parse::<usize>() {
+            Ok(last) => last.min(total.saturating_sub(1)),
+            Err(_) => return ByteRange::Full,
+        }
+    };
+    if last < first {
+        // inverted range is syntactically invalid — ignore the header
+        return ByteRange::Full;
+    }
+    ByteRange::Slice(first, last)
 }
 
 fn statsz(store: &ArtifactStore, stats: &ServerStats) -> Response {
@@ -366,18 +481,24 @@ fn statsz(store: &ArtifactStore, stats: &ServerStats) -> Response {
             )
         })
         .collect();
+    let buckets: Vec<String> = super::stats::bucket_bounds_us()
+        .iter()
+        .map(|b| b.to_string())
+        .collect();
     Response::json(
         200,
         format!(
             "{{\"uptime_s\":{:.1},\
              \"cache\":{{\"budget_bytes\":{},\"bytes\":{},\"entries\":{}}},\
-             \"artifacts\":{{{}}},\"endpoints\":{{{}}}}}",
+             \"artifacts\":{{{}}},\"endpoints\":{{{}}},\
+             \"latency_buckets_us\":[{}]}}",
             stats.uptime_s(),
             cache.budget(),
             cache.bytes(),
             cache.len(),
             artifacts.join(","),
-            endpoints.join(",")
+            endpoints.join(","),
+            buckets.join(",")
         ),
     )
 }
@@ -752,5 +873,105 @@ mod tests {
         let resp = dispatch(&store, &stats, &Request::get("/healthz"));
         let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+    }
+
+    #[test]
+    fn statsz_reports_latency_bucket_bounds() {
+        let (store, _) = demo_store();
+        let resp = get(&store, "/statsz");
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let buckets = j.get("latency_buckets_us").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), super::super::stats::N_BUCKETS);
+        assert_eq!(buckets[0].as_usize(), Some(2));
+        assert_eq!(buckets[1].as_usize(), Some(4), "log2-spaced bounds");
+    }
+
+    #[test]
+    fn metricsz_serves_prometheus_exposition() {
+        let (store, _) = demo_store();
+        // drive a request through dispatch first so HTTP counters move
+        let stats = ServerStats::new();
+        dispatch(&store, &stats, &Request::get("/v1/artifacts"));
+        let resp = dispatch(&store, &stats, &Request::get("/metricsz"));
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            resp.header("Content-Type"),
+            Some("text/plain; version=0.0.4; charset=utf-8")
+        );
+        let text = std::str::from_utf8(&resp.body).unwrap();
+        // every family declares TYPE before its samples, and the demo
+        // compression above populated the pipeline-stage families
+        assert!(text.contains("# TYPE sz3_stage_seconds_total counter"));
+        assert!(text.contains("# TYPE sz3_http_requests_total counter"));
+        let families =
+            text.lines().filter(|l| l.starts_with("# TYPE ")).count();
+        assert!(families >= 15, "expected >= 15 metric families, got {families}");
+    }
+
+    #[test]
+    fn range_requests_slice_raw_chunks() {
+        let (store, artifact) = demo_store();
+        let stats = ServerStats::new();
+        let full = ContainerReader::from_slice(&artifact)
+            .unwrap()
+            .chunk_payload(1)
+            .unwrap();
+        let with_range = |spec: &str| {
+            let mut req = Request::get("/v1/artifacts/demo/raw?chunk=1");
+            req.headers.push(("range".to_string(), spec.to_string()));
+            dispatch(&store, &stats, &req)
+        };
+        // plain GET advertises range support and serves everything
+        let resp = get(&store, "/v1/artifacts/demo/raw?chunk=1");
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("Accept-Ranges"), Some("bytes"));
+        let total = full.len();
+        // closed range
+        let resp = with_range("bytes=0-3");
+        assert_eq!(resp.status, 206);
+        assert_eq!(resp.body, full[0..=3]);
+        assert_eq!(
+            resp.header("Content-Range"),
+            Some(format!("bytes 0-3/{total}").as_str())
+        );
+        // open-ended range
+        let resp = with_range("bytes=4-");
+        assert_eq!(resp.status, 206);
+        assert_eq!(resp.body, full[4..]);
+        // suffix range: the final 5 bytes
+        let resp = with_range("bytes=-5");
+        assert_eq!(resp.status, 206);
+        assert_eq!(resp.body, full[total - 5..]);
+        assert_eq!(
+            resp.header("Content-Range"),
+            Some(format!("bytes {}-{}/{total}", total - 5, total - 1).as_str())
+        );
+        // a last byte past the end is clamped, not rejected (RFC 7233)
+        let resp = with_range(&format!("bytes=2-{}", total + 99));
+        assert_eq!(resp.status, 206);
+        assert_eq!(resp.body, full[2..]);
+        // unsatisfiable: first byte at/past the end
+        let resp = with_range(&format!("bytes={total}-"));
+        assert_eq!(resp.status, 416);
+        assert_eq!(
+            resp.header("Content-Range"),
+            Some(format!("bytes */{total}").as_str())
+        );
+        // malformed and multi-range specs are ignored → full 200
+        for spec in ["bytes=a-b", "bytes=5-2", "bytes=0-3,7-9", "items=0-3"] {
+            let resp = with_range(spec);
+            assert_eq!(resp.status, 200, "range spec {spec}");
+            assert_eq!(resp.body, full, "range spec {spec}");
+        }
+        // conditional GET wins over Range: matching validator still 304s
+        let etag = get(&store, "/v1/artifacts/demo/raw?chunk=1")
+            .header("ETag")
+            .unwrap()
+            .to_string();
+        let mut req = Request::get("/v1/artifacts/demo/raw?chunk=1");
+        req.headers.push(("range".to_string(), "bytes=0-3".to_string()));
+        req.headers.push(("if-none-match".to_string(), etag));
+        assert_eq!(dispatch(&store, &stats, &req).status, 304);
     }
 }

@@ -280,6 +280,16 @@ impl Response {
         }
     }
 
+    /// Plain-text response with an explicit content type (the Prometheus
+    /// exposition endpoint carries a versioned `text/plain` type).
+    pub fn text(status: u16, content_type: &str, body: String) -> Response {
+        Response {
+            status,
+            headers: vec![("Content-Type".to_string(), content_type.to_string())],
+            body: body.into_bytes(),
+        }
+    }
+
     /// Binary response (`application/octet-stream`).
     pub fn octets(body: Vec<u8>) -> Response {
         Response {
@@ -367,6 +377,7 @@ pub fn status_text(status: u16) -> &'static str {
     match status {
         200 => "OK",
         204 => "No Content",
+        206 => "Partial Content",
         304 => "Not Modified",
         400 => "Bad Request",
         404 => "Not Found",

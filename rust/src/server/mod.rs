@@ -23,9 +23,20 @@
 //! | `GET /v1/artifacts/{id}/raw?chunk=N` | compressed chunk passthrough for client-side decode |
 //! | `GET /healthz` | liveness |
 //! | `GET /statsz` | [`crate::reader::ReadStats`] per artifact + per-endpoint latency |
+//! | `GET /metricsz` | Prometheus text exposition of the process-wide [`crate::obs`] registry |
 //!
 //! The full API contract (query params, status codes, error body, cache
 //! semantics, `curl` examples) is specified in `docs/SERVE.md`.
+//!
+//! # Observability
+//!
+//! Every response carries an `X-Request-Id` header — echoed from the
+//! request when the client sent a well-formed one (1–64 chars of
+//! `[A-Za-z0-9._-]`), generated otherwise — so a client-side log line and
+//! a server-side access-log line can be joined on the id. Access logs
+//! (`--log-format text|json`, off by default) are one line per request on
+//! stderr: id, method, route label, path, status, body bytes, and
+//! handling microseconds.
 //!
 //! # Concurrency shape
 //!
@@ -55,13 +66,64 @@ use crate::reader::{ChunkCache, ContainerReader};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Per-connection read timeout: a keep-alive connection idle this long is
 /// closed, which also bounds how long shutdown can wait on a worker.
 const IDLE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Access-log output selector for [`ServeOptions`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogFormat {
+    /// No access logging (the default — tests and embedded servers stay
+    /// quiet).
+    None,
+    /// One human-readable `key=value` line per request on stderr.
+    Text,
+    /// One JSON object per request on stderr (newline-delimited).
+    Json,
+}
+
+/// How [`serve_with`] runs the connection loop.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// HTTP connection workers.
+    pub threads: usize,
+    /// Access-log format (stderr).
+    pub log: LogFormat,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { threads: crate::util::default_workers(), log: LogFormat::None }
+    }
+}
+
+/// Monotonic sequence feeding generated request ids.
+static REQUEST_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// The response's `X-Request-Id`: the client's own id when it sent a
+/// well-formed one (1–64 chars of `[A-Za-z0-9._-]` — anything else is
+/// discarded rather than reflected into logs), a generated
+/// `sz3-<pid>-<seq>` otherwise.
+fn request_id(req: &Request) -> String {
+    if let Some(id) = req.header("x-request-id") {
+        let well_formed = !id.is_empty()
+            && id.len() <= 64
+            && id.bytes().all(|b| {
+                b.is_ascii_alphanumeric() || b == b'-' || b == b'_' || b == b'.'
+            });
+        if well_formed {
+            return id.to_string();
+        }
+    }
+    let seq = REQUEST_SEQ.fetch_add(1, Ordering::Relaxed);
+    // golden-ratio mix so concurrent ids don't read as a tidy sequence
+    // (they are not a security token, just a join key for logs)
+    format!("sz3-{:x}-{:016x}", std::process::id(), seq.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+}
 
 /// How a directory of artifacts is opened into an [`ArtifactStore`].
 #[derive(Clone, Debug)]
@@ -332,14 +394,26 @@ impl Drop for ServerHandle {
 
 /// Bind `addr` (e.g. `127.0.0.1:8080`, port 0 for ephemeral) and serve
 /// `store` on `threads` connection workers until the returned handle is
-/// shut down.
+/// shut down. Access logging is off; use [`serve_with`] to enable it.
 pub fn serve(store: ArtifactStore, addr: &str, threads: usize) -> Result<ServerHandle> {
+    serve_with(store, addr, ServeOptions { threads, log: LogFormat::None })
+}
+
+/// [`serve`] with full [`ServeOptions`] control (thread count and
+/// access-log format).
+pub fn serve_with(
+    store: ArtifactStore,
+    addr: &str,
+    opts: ServeOptions,
+) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr)
         .map_err(|e| SzError::config(format!("binding {addr}: {e}")))?;
     let local = listener.local_addr()?;
     let store = Arc::new(store);
     let stats = Arc::new(ServerStats::new());
     let stop = Arc::new(AtomicBool::new(false));
+    let log = opts.log;
+    let threads = opts.threads;
     let accept = {
         let store = Arc::clone(&store);
         let stats = Arc::clone(&stats);
@@ -360,7 +434,7 @@ pub fn serve(store: ArtifactStore, addr: &str, threads: usize) -> Result<ServerH
                     let stats = Arc::clone(&stats);
                     let stop = Arc::clone(&stop);
                     pool.execute(move || {
-                        handle_connection(stream, &store, &stats, &stop)
+                        handle_connection(stream, &store, &stats, &stop, log)
                     });
                 }
                 // pool drops here: queued connections drain, workers join
@@ -370,13 +444,46 @@ pub fn serve(store: ArtifactStore, addr: &str, threads: usize) -> Result<ServerH
     Ok(ServerHandle { addr: local, store, stats, stop, accept: Some(accept) })
 }
 
+/// Emit one access-log line for a completed request.
+fn access_log(
+    log: LogFormat,
+    id: &str,
+    method: &str,
+    label: &str,
+    path: &str,
+    status: u16,
+    bytes: usize,
+    us: u128,
+) {
+    match log {
+        LogFormat::None => {}
+        LogFormat::Text => eprintln!(
+            "[access] id={id} method={method} route={label} path={path} \
+             status={status} bytes={bytes} us={us}"
+        ),
+        LogFormat::Json => eprintln!(
+            "{{\"id\":\"{}\",\"method\":\"{}\",\"route\":\"{}\",\"path\":\"{}\",\
+             \"status\":{},\"bytes\":{},\"us\":{}}}",
+            http::json_escape(id),
+            http::json_escape(method),
+            http::json_escape(label),
+            http::json_escape(path),
+            status,
+            bytes,
+            us
+        ),
+    }
+}
+
 /// Serve one connection: keep-alive request loop with an idle timeout,
-/// closing on parse errors (after a 400) or `Connection: close`.
+/// closing on parse errors (after a 400) or `Connection: close`. Every
+/// response is stamped with an `X-Request-Id` before it leaves.
 fn handle_connection(
     stream: TcpStream,
     store: &ArtifactStore,
     stats: &ServerStats,
     stop: &AtomicBool,
+    log: LogFormat,
 ) {
     // audit:allow(swallow, reason = "a socket without timeouts still serves; the idle cap is best-effort")
     let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
@@ -401,11 +508,22 @@ fn handle_connection(
         };
         let close = req.close;
         let head_only = req.method == "HEAD";
-        let resp = handlers::dispatch(store, stats, &req);
-        if resp.write_to(&mut writer, close, head_only).is_err() {
-            break;
-        }
-        if close {
+        let rid = request_id(&req);
+        let t0 = Instant::now();
+        let (label, resp) = handlers::dispatch_labeled(store, stats, &req);
+        let resp = resp.with_header("X-Request-Id", rid.clone());
+        let write_ok = resp.write_to(&mut writer, close, head_only).is_ok();
+        access_log(
+            log,
+            &rid,
+            &req.method,
+            label,
+            &req.path,
+            resp.status,
+            resp.body.len(),
+            t0.elapsed().as_micros(),
+        );
+        if !write_ok || close {
             break;
         }
     }

@@ -1,26 +1,25 @@
-//! Per-endpoint latency accounting for `/statsz`: lock-free atomic
-//! counters plus a power-of-two-bucket histogram per endpoint, from which
-//! p50/p99 are estimated. Buckets are log₂-spaced in microseconds (bucket
-//! *i* covers `[2^i, 2^(i+1))` µs), so the histogram is 26 fixed `u64`s
-//! per endpoint — no allocation, no mutex, safe to hammer from every
-//! worker thread. Quantiles report a bucket's upper bound, i.e. they are
-//! conservative to within 2×, which is plenty to see a cold/warm split or
-//! a tail blowing up.
+//! Per-endpoint latency accounting for `/statsz`, backed by the
+//! process-wide observability primitives in [`crate::obs`]: each endpoint
+//! owns a lock-free log₂-bucket [`obs::Histogram`] (bucket *i* covers
+//! `[2^i, 2^(i+1))` µs — 26 fixed `u64`s, no allocation, no mutex, safe
+//! to hammer from every worker thread). Quantiles **interpolate linearly
+//! within the winning bucket** (see [`obs::HistSnapshot::quantile_us`]),
+//! so p50/p99 are exact for uniform in-bucket distributions instead of
+//! the former conservative-to-2× upper-bound estimate. The bucket
+//! boundaries themselves are reported in the `/statsz` JSON
+//! (`latency_buckets_us`) so clients can reconstruct the histogram's
+//! resolution.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::obs::{self, HistSnapshot, Histogram};
 use std::time::Duration;
 
-/// Histogram bucket count: bucket 25 tops out at ~67 s, far beyond any
-/// sane request.
-const N_BUCKETS: usize = 26;
+/// Histogram bucket count (re-exported from [`obs::N_BUCKETS`]).
+pub const N_BUCKETS: usize = obs::N_BUCKETS;
 
 /// Latency accumulator for one endpoint.
 #[derive(Default)]
 pub struct LatencyStats {
-    count: AtomicU64,
-    total_us: AtomicU64,
-    max_us: AtomicU64,
-    buckets: [AtomicU64; N_BUCKETS],
+    hist: Histogram,
 }
 
 /// Point-in-time summary of one endpoint's latency distribution.
@@ -30,9 +29,9 @@ pub struct LatencySummary {
     pub count: u64,
     /// Mean latency in microseconds.
     pub mean_us: u64,
-    /// Estimated median (upper bucket bound), microseconds.
+    /// Estimated median, microseconds (interpolated within its bucket).
     pub p50_us: u64,
-    /// Estimated 99th percentile (upper bucket bound), microseconds.
+    /// Estimated 99th percentile, microseconds (interpolated).
     pub p99_us: u64,
     /// Slowest request observed, microseconds.
     pub max_us: u64,
@@ -41,58 +40,42 @@ pub struct LatencySummary {
 impl LatencyStats {
     /// Record one request's latency.
     pub fn record(&self, elapsed: Duration) {
-        let us = elapsed.as_micros().min(u64::MAX as u128) as u64;
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.total_us.fetch_add(us, Ordering::Relaxed);
-        self.max_us.fetch_max(us, Ordering::Relaxed);
-        let idx = if us <= 1 {
-            0
-        } else {
-            ((63 - us.leading_zeros()) as usize).min(N_BUCKETS - 1)
-        };
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.hist.observe(elapsed);
     }
 
-    /// Upper bound (µs) of the bucket containing quantile `q` (0..=1).
-    fn quantile_us(&self, q: f64, counts: &[u64; N_BUCKETS], total: u64) -> u64 {
-        if total == 0 {
-            return 0;
-        }
-        let target = ((total as f64) * q).ceil().max(1.0) as u64;
-        let mut seen = 0u64;
-        for (i, &c) in counts.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        self.max_us.load(Ordering::Relaxed)
+    /// Copy of the underlying distribution.
+    pub fn snapshot(&self) -> HistSnapshot {
+        self.hist.snapshot()
     }
 
     /// Snapshot the distribution. Counters advance concurrently, so the
     /// summary is approximate during traffic — fine for observability.
     pub fn summary(&self) -> LatencySummary {
-        let count = self.count.load(Ordering::Relaxed);
-        let total = self.total_us.load(Ordering::Relaxed);
-        let mut counts = [0u64; N_BUCKETS];
-        for (slot, b) in counts.iter_mut().zip(self.buckets.iter()) {
-            *slot = b.load(Ordering::Relaxed);
-        }
-        let histo_total: u64 = counts.iter().sum();
+        let s = self.hist.snapshot();
         LatencySummary {
-            count,
-            mean_us: if count == 0 { 0 } else { total / count },
-            p50_us: self.quantile_us(0.50, &counts, histo_total),
-            p99_us: self.quantile_us(0.99, &counts, histo_total),
-            max_us: self.max_us.load(Ordering::Relaxed),
+            count: s.n,
+            mean_us: s.mean_us(),
+            p50_us: s.quantile_us(0.50),
+            p99_us: s.quantile_us(0.99),
+            max_us: s.max_us,
         }
     }
 }
 
 /// Endpoint labels tracked by [`ServerStats`] — one slot per API surface
-/// plus a catch-all for unmatched routes.
-pub const ENDPOINTS: [&str; 7] =
-    ["list", "meta", "roi", "raw", "healthz", "statsz", "other"];
+/// plus a catch-all for unmatched routes. Shared with the Prometheus
+/// exposition layer so `/statsz` and `/metricsz` agree on the vocabulary.
+pub const ENDPOINTS: [&str; 8] = obs::HTTP_ENDPOINTS;
+
+/// Upper bounds (µs, exclusive) of the latency histogram buckets, for the
+/// `/statsz` JSON's `latency_buckets_us` field.
+pub fn bucket_bounds_us() -> [u64; N_BUCKETS] {
+    let mut out = [0u64; N_BUCKETS];
+    for (slot, b) in out.iter_mut().enumerate() {
+        *b = obs::bucket_hi_us(slot);
+    }
+    out
+}
 
 /// All endpoint latency slots plus the server start instant.
 pub struct ServerStats {
@@ -122,7 +105,9 @@ impl ServerStats {
             .iter()
             .position(|&e| e == label)
             .unwrap_or(ENDPOINTS.len() - 1);
-        self.slots[idx].record(elapsed);
+        if let Some(slot) = self.slots.get(idx) {
+            slot.record(elapsed);
+        }
     }
 
     /// Summary for one endpoint label.
@@ -131,7 +116,7 @@ impl ServerStats {
             .iter()
             .position(|&e| e == label)
             .unwrap_or(ENDPOINTS.len() - 1);
-        self.slots[idx].summary()
+        self.slots.get(idx).map(|s| s.summary()).unwrap_or_default()
     }
 
     /// (label, summary) for every endpoint, in [`ENDPOINTS`] order.
@@ -164,30 +149,36 @@ mod tests {
         let sum = s.summary();
         assert_eq!(sum.count, 100);
         assert_eq!(sum.max_us, 50_000);
-        // 100µs lands in bucket [64,128) → p50 reports 128
-        assert_eq!(sum.p50_us, 128);
+        // 100µs lands in bucket [64,128); interpolation keeps p50 strictly
+        // inside that bucket instead of pinning it to the 128 upper bound
         assert!(
-            sum.p99_us <= 256,
+            sum.p50_us >= 64 && sum.p50_us < 128,
+            "p50 must interpolate within [64,128): {}",
+            sum.p50_us
+        );
+        assert!(
+            sum.p99_us < 256,
             "p99 still inside the fast band at 99/100: {}",
             sum.p99_us
         );
         assert!(sum.mean_us >= 100 && sum.mean_us < 1000);
-        // the outlier is visible one step further out
-        assert!(s.quantile_us(1.0, &snapshot(&s), 100) >= 50_000 || sum.max_us >= 50_000);
-    }
-
-    fn snapshot(s: &LatencyStats) -> [u64; N_BUCKETS] {
-        let mut counts = [0u64; N_BUCKETS];
-        for (slot, b) in counts.iter_mut().zip(s.buckets.iter()) {
-            *slot = b.load(Ordering::Relaxed);
-        }
-        counts
+        // the outlier dominates the extreme tail
+        assert!(s.snapshot().quantile_us(1.0) >= 32_768);
     }
 
     #[test]
     fn empty_stats_are_all_zero() {
         let s = LatencyStats::default();
         assert_eq!(s.summary(), LatencySummary::default());
+    }
+
+    #[test]
+    fn bucket_bounds_are_log2_spaced() {
+        let bounds = bucket_bounds_us();
+        assert_eq!(bounds[0], 2);
+        for w in bounds.windows(2) {
+            assert_eq!(w[1], w[0] * 2, "upper bounds must double");
+        }
     }
 
     #[test]
@@ -199,5 +190,6 @@ mod tests {
         assert_eq!(s.summary("other").count, 1);
         assert_eq!(s.summary("raw").count, 0);
         assert_eq!(s.summaries().len(), ENDPOINTS.len());
+        assert!(ENDPOINTS.contains(&"metricsz"), "exposition endpoint tracked");
     }
 }

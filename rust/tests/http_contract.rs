@@ -169,3 +169,120 @@ fn snapshot_and_error_matrix_over_loopback() {
     handle.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn request_ids_byte_ranges_and_metrics_over_loopback() {
+    let (_, plain) = build_artifacts();
+    let dir = std::env::temp_dir()
+        .join(format!("sz3_http_contract_obs_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("plain.sz3c"), &plain).unwrap();
+
+    let store = ArtifactStore::open_dir(
+        &dir,
+        &StoreOptions { cache_bytes: 8 << 20, workers: 2, verify: true },
+    )
+    .unwrap();
+    let handle = server::serve(store, "127.0.0.1:0", 2).unwrap();
+    let addr = handle.addr();
+    {
+        let mut client = HttpClient::connect(addr).unwrap();
+
+        // every response carries a generated X-Request-Id, and two
+        // requests never share one
+        let a = client.get("/healthz").unwrap();
+        let b = client.get("/healthz").unwrap();
+        let id_a = a.header("x-request-id").expect("generated id").to_string();
+        let id_b = b.header("x-request-id").expect("generated id").to_string();
+        assert!(id_a.starts_with("sz3-"), "generated id shape: {id_a}");
+        assert_ne!(id_a, id_b, "ids must be unique per request");
+
+        // a well-formed client-supplied id is echoed verbatim
+        let resp = client
+            .get_with_headers("/healthz", &[("X-Request-Id", "trace-Abc_1.23")])
+            .unwrap();
+        assert_eq!(resp.header("x-request-id"), Some("trace-Abc_1.23"));
+
+        // a malformed one (unsafe chars) is replaced, not reflected
+        let resp = client
+            .get_with_headers("/healthz", &[("X-Request-Id", "bad id\"zap")])
+            .unwrap();
+        let got = resp.header("x-request-id").expect("replacement id");
+        assert!(got.starts_with("sz3-"), "malformed id must be regenerated: {got}");
+
+        // error responses carry the id too
+        let resp = client
+            .get_with_headers("/v1/artifacts/none", &[("X-Request-Id", "err-1")])
+            .unwrap();
+        assert_eq!(resp.status, 404);
+        assert_eq!(resp.header("x-request-id"), Some("err-1"));
+
+        // single byte ranges on raw chunk passthrough
+        let full = client.get("/v1/artifacts/plain/raw?chunk=0").unwrap();
+        assert_eq!(full.status, 200);
+        assert_eq!(full.header("accept-ranges"), Some("bytes"));
+        let total = full.body.len();
+        let resp = client
+            .get_with_headers(
+                "/v1/artifacts/plain/raw?chunk=0",
+                &[("Range", "bytes=0-9")],
+            )
+            .unwrap();
+        assert_eq!(resp.status, 206);
+        assert_eq!(resp.body, full.body[..10]);
+        assert_eq!(
+            resp.header("content-range"),
+            Some(format!("bytes 0-9/{total}").as_str())
+        );
+        let resp = client
+            .get_with_headers(
+                "/v1/artifacts/plain/raw?chunk=0",
+                &[("Range", "bytes=-4")],
+            )
+            .unwrap();
+        assert_eq!(resp.status, 206, "suffix range");
+        assert_eq!(resp.body, full.body[total - 4..]);
+        let resp = client
+            .get_with_headers(
+                "/v1/artifacts/plain/raw?chunk=0",
+                &[("Range", format!("bytes={total}-").as_str())],
+            )
+            .unwrap();
+        assert_eq!(resp.status, 416, "first byte past the end");
+        assert_eq!(
+            resp.header("content-range"),
+            Some(format!("bytes */{total}").as_str())
+        );
+        let resp = client
+            .get_with_headers(
+                "/v1/artifacts/plain/raw?chunk=0",
+                &[("Range", "bytes=0-3,5-9")],
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200, "multi-range is ignored, full body served");
+        assert_eq!(resp.body, full.body);
+
+        // /metricsz serves Prometheus text exposition over the wire
+        let resp = client.get("/metricsz").unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            resp.header("content-type"),
+            Some("text/plain; version=0.0.4; charset=utf-8")
+        );
+        let text = resp.text().unwrap();
+        assert!(text.contains("# TYPE sz3_http_requests_total counter"));
+        assert!(text.contains("# TYPE sz3_cache_hits_total counter"));
+        let families = text.lines().filter(|l| l.starts_with("# TYPE ")).count();
+        assert!(families >= 15, "expected >= 15 families, got {families}");
+        // this very connection's requests are visible in the counters
+        let raw_count = text
+            .lines()
+            .find(|l| l.starts_with("sz3_http_requests_total{endpoint=\"raw\""))
+            .and_then(|l| l.rsplit_once(' '))
+            .and_then(|(_, v)| v.parse::<f64>().ok())
+            .unwrap_or(0.0);
+        assert!(raw_count >= 5.0, "raw requests recorded: {raw_count}");
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
