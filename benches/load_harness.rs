@@ -1,0 +1,282 @@
+//! Production write-path load harness: N concurrent clients drive a
+//! mixed ROI / raw-chunk / ingest / delete workload against one writable
+//! server while two writer threads continuously replace one artifact and
+//! publish/delete another. The PR's acceptance bar lives here: zero 5xx
+//! responses and zero wrong reads (every ROI body bit-identical to a
+//! published snapshot) under sustained concurrent ingest, with exact
+//! client-observed p50/p99/throughput recorded to `BENCH_PR8.json`.
+//!
+//! Output: `load,<case>,<p50_us>,<p99_us>,<rps>,<mbs>`
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use sz3::bench_harness::PerfSummary;
+use sz3::server::{self, HttpClient, Registry, ServeOptions, StoreOptions};
+
+const DIMS: (usize, usize) = (64, 256);
+
+const PARAMS: &str = "{\"dims\":[64,256],\"fields\":[\"rho\"],\
+     \"pipeline\":\"sz3-lr\",\"bound\":{\"mode\":\"abs\",\"value\":0.001},\
+     \"chunk_elems\":512}";
+
+/// Frame an ingest body: `[u32le json_len][json params][le f32 data]`.
+fn ingest_body(base: f32) -> Vec<u8> {
+    let mut body = (PARAMS.len() as u32).to_le_bytes().to_vec();
+    body.extend_from_slice(PARAMS.as_bytes());
+    for i in 0..DIMS.0 * DIMS.1 {
+        body.extend_from_slice(&(base + (i as f32) * 1e-3).to_le_bytes());
+    }
+    body
+}
+
+/// Exact percentile over raw latency samples (µs).
+fn percentile_us(samples: &mut [u64], q: f64) -> u64 {
+    samples.sort_unstable();
+    if samples.is_empty() {
+        return 0;
+    }
+    let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+    samples[idx]
+}
+
+/// PUT with bounded retry on 429 back-pressure. Returns (status, retries).
+fn put_with_retry(c: &mut HttpClient, target: &str, body: &[u8]) -> (u16, u64) {
+    let mut retries = 0u64;
+    loop {
+        let resp = c.put(target, body).unwrap();
+        if resp.status == 429 {
+            retries += 1;
+            assert!(retries < 1000, "ingest slots never freed");
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        return (resp.status, retries);
+    }
+}
+
+struct ReaderOutcome {
+    samples: Vec<u64>,
+    bytes: u64,
+    reads: u64,
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let readers = 8usize;
+    let hot_replaces = if quick { 6u64 } else { 20 };
+    let flap_cycles = if quick { 4u64 } else { 12 };
+    println!("# load_harness bench (quick={quick}, {readers} reader clients)");
+
+    let dir = std::env::temp_dir()
+        .join(format!("sz3_bench_load_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let reg = Arc::new(
+        Registry::open_dir(
+            &dir,
+            &StoreOptions { cache_bytes: 128 << 20, workers: 2, verify: true },
+        )
+        .unwrap()
+        .with_max_inflight_ingests(2),
+    );
+    let opts = ServeOptions {
+        threads: 8,
+        max_body: 64 << 20,
+        max_conns: 128,
+        read_timeout: Duration::from_secs(10),
+        ..Default::default()
+    };
+    let handle =
+        server::serve_registry(Arc::clone(&reg), "127.0.0.1:0", opts).unwrap();
+    let addr = handle.addr();
+
+    // seed the three artifacts and capture bit-exact oracles (the
+    // compressor is deterministic: re-publishing an input reproduces
+    // these bytes exactly)
+    let body_a = ingest_body(0.0);
+    let body_b = ingest_body(7.5);
+    let body_static = ingest_body(100.0);
+    let body_flap = ingest_body(-3.0);
+    let hot_roi = "/v1/artifacts/hot/fields/rho?rows=0..64";
+    let static_roi = "/v1/artifacts/static/fields/rho?rows=8..24";
+    let flap_roi = "/v1/artifacts/flap/fields/rho?rows=0..16";
+    let mut c = HttpClient::connect(addr).unwrap();
+    assert_eq!(c.put("/v1/artifacts/hot", &body_a).unwrap().status, 201);
+    let oracle_a = Arc::new(c.get(hot_roi).unwrap().body);
+    assert_eq!(c.put("/v1/artifacts/hot", &body_b).unwrap().status, 200);
+    let oracle_b = Arc::new(c.get(hot_roi).unwrap().body);
+    assert_ne!(*oracle_a, *oracle_b);
+    assert_eq!(c.put("/v1/artifacts/static", &body_static).unwrap().status, 201);
+    let oracle_static = Arc::new(c.get(static_roi).unwrap().body);
+    assert_eq!(c.put("/v1/artifacts/flap", &body_flap).unwrap().status, 201);
+    let oracle_flap = Arc::new(c.get(flap_roi).unwrap().body);
+    let raw_oracles: Arc<Vec<Vec<u8>>> = Arc::new(
+        (0..4)
+            .map(|i| {
+                let resp =
+                    c.get(&format!("/v1/artifacts/static/raw?chunk={i}")).unwrap();
+                assert_eq!(resp.status, 200);
+                resp.body
+            })
+            .collect(),
+    );
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let err_5xx = Arc::new(AtomicU64::new(0));
+    let mismatches = Arc::new(AtomicU64::new(0));
+    let retries_total = Arc::new(AtomicU64::new(0));
+
+    // writer 1: continuous replace of "hot", alternating the two payloads
+    let hot_writer = {
+        let (retries_total, body_a, body_b) =
+            (Arc::clone(&retries_total), body_a.clone(), body_b.clone());
+        std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr).unwrap();
+            for i in 0..hot_replaces {
+                let body = if i % 2 == 0 { &body_a } else { &body_b };
+                let (status, retries) =
+                    put_with_retry(&mut c, "/v1/artifacts/hot", body);
+                assert_eq!(status, 200, "replace #{i}");
+                retries_total.fetch_add(retries, Ordering::Relaxed);
+            }
+        })
+    };
+
+    // writer 2: publish/delete flap on "flap"
+    let flap_writer = {
+        let (retries_total, body_flap) =
+            (Arc::clone(&retries_total), body_flap.clone());
+        std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr).unwrap();
+            for i in 0..flap_cycles {
+                assert_eq!(c.delete("/v1/artifacts/flap").unwrap().status, 200, "#{i}");
+                let (status, retries) =
+                    put_with_retry(&mut c, "/v1/artifacts/flap", &body_flap);
+                assert_eq!(status, 201, "re-create #{i}");
+                retries_total.fetch_add(retries, Ordering::Relaxed);
+            }
+        })
+    };
+
+    // N reader clients, four traffic mixes
+    let mut reader_handles = Vec::new();
+    for i in 0..readers {
+        let stop = Arc::clone(&stop);
+        let err_5xx = Arc::clone(&err_5xx);
+        let mismatches = Arc::clone(&mismatches);
+        let (a, b, st, fl, raw) = (
+            Arc::clone(&oracle_a),
+            Arc::clone(&oracle_b),
+            Arc::clone(&oracle_static),
+            Arc::clone(&oracle_flap),
+            Arc::clone(&raw_oracles),
+        );
+        reader_handles.push(std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr).unwrap();
+            let mut out =
+                ReaderOutcome { samples: Vec::new(), bytes: 0, reads: 0 };
+            let mut k = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let (target, kind) = match i % 4 {
+                    0 => (hot_roi.to_string(), 0),
+                    1 => (static_roi.to_string(), 1),
+                    2 => (
+                        format!("/v1/artifacts/static/raw?chunk={}", k % raw.len()),
+                        2,
+                    ),
+                    _ => (flap_roi.to_string(), 3),
+                };
+                let t0 = Instant::now();
+                let resp = c.get(&target).unwrap();
+                out.samples.push(t0.elapsed().as_micros() as u64);
+                out.bytes += resp.body.len() as u64;
+                out.reads += 1;
+                k += 1;
+                if resp.status >= 500 {
+                    err_5xx.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                let ok = match kind {
+                    0 => resp.status == 200 && (resp.body == *a || resp.body == *b),
+                    1 => resp.status == 200 && resp.body == *st,
+                    2 => {
+                        resp.status == 200
+                            && resp.body == raw[(k - 1) % raw.len()]
+                    }
+                    _ => match resp.status {
+                        200 => resp.body == *fl,
+                        404 => true,
+                        _ => false,
+                    },
+                };
+                if !ok {
+                    mismatches.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            out
+        }));
+    }
+
+    let wall = Instant::now();
+    hot_writer.join().unwrap();
+    flap_writer.join().unwrap();
+    // let readers overlap the whole write window plus a settle beat
+    std::thread::sleep(Duration::from_millis(if quick { 50 } else { 200 }));
+    stop.store(true, Ordering::Relaxed);
+    let wall = wall.elapsed().as_secs_f64().max(1e-9);
+
+    let mut samples = Vec::new();
+    let (mut bytes, mut reads) = (0u64, 0u64);
+    for h in reader_handles {
+        let out = h.join().unwrap();
+        samples.extend(out.samples);
+        bytes += out.bytes;
+        reads += out.reads;
+    }
+    let p50 = percentile_us(&mut samples, 0.50);
+    let p99 = percentile_us(&mut samples, 0.99);
+    let rps = reads as f64 / wall;
+    let mbs = bytes as f64 / 1e6 / wall;
+    let e5 = err_5xx.load(Ordering::Relaxed);
+    let wrong = mismatches.load(Ordering::Relaxed);
+    let retried = retries_total.load(Ordering::Relaxed);
+    println!("load,mixed,{p50},{p99},{rps:.0},{mbs:.1}");
+    println!(
+        "# {reads} reads, {e5} 5xx, {wrong} wrong, {retried} 429-retries, \
+         generation {}",
+        reg.generation()
+    );
+
+    // the acceptance bar: nothing failed, nothing was ever wrong
+    assert!(reads > 0, "readers must overlap the write window");
+    assert_eq!(e5, 0, "zero 5xx under concurrent ingest");
+    assert_eq!(wrong, 0, "zero wrong reads under replace/delete churn");
+    assert_eq!(
+        reg.generation(),
+        // seeds: hot x2 + static + flap, then the two writer loops
+        4 + hot_replaces + 2 * flap_cycles,
+        "every mutation bumped the epoch exactly once"
+    );
+
+    let mut summary = PerfSummary::new();
+    summary.record("load_reader_clients", readers as f64);
+    summary.record("load_p50_us", p50 as f64);
+    summary.record("load_p99_us", p99 as f64);
+    summary.record("load_rps", rps);
+    summary.record("load_mbs", mbs);
+    summary.record("load_reads", reads as f64);
+    summary.record("load_replaces", hot_replaces as f64);
+    summary.record("load_flap_cycles", flap_cycles as f64);
+    summary.record("load_429_retries", retried as f64);
+    summary.record("load_5xx", e5 as f64);
+    summary.record("load_wrong_reads", wrong as f64);
+
+    drop(c); // close the seed connection so shutdown doesn't wait it out
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    summary.write_json("BENCH_PR8.json").unwrap();
+    println!("# perf summary written to BENCH_PR8.json");
+    println!("{}", summary.to_json());
+}

@@ -44,6 +44,8 @@ USAGE:
                  [--container] [--adaptive]
   sz3 serve-http --dir artifacts/ [--addr 127.0.0.1:8080] [--threads N]
                  [--cache-mb MB] [--workers N] [--no-verify]
+                 [--read-only] [--max-ingests N] [--max-body-mb MB]
+                 [--max-conns N] [--read-timeout-s S]
                  [--log-format text|json]
   sz3 audit      [--json] [--strict] [--root DIR]   # static analysis
   sz3 datasets                              # Table 3 registry
@@ -79,6 +81,13 @@ alias for --cache-mb and now also takes megabytes, not entries).
 serve-http publishes every .sz3c under --dir over HTTP range queries
 (list/meta/ROI/raw-chunk endpoints, /healthz, /statsz, /metricsz) with
 one shared --cache-mb byte budget across all artifacts; see docs/SERVE.md.
+The directory is writable over the API by default: `PUT /v1/artifacts/{id}`
+compresses a raw body into a new artifact and publishes it atomically,
+`DELETE` unpublishes, and `POST /v1/admin/rescan` reconciles with the
+directory. --read-only disables all three; --max-ingests bounds
+concurrent uploads (429 beyond it), --max-body-mb caps the request body
+(413), --max-conns sheds connections at the accept edge (503), and
+--read-timeout-s bounds a stalled request (408).
 --stats prints a per-stage breakdown table (wall-time share, byte flow,
 throughput) after the run; --trace FILE writes a Chrome trace_event JSON
 of the run's spans — open it in Perfetto (ui.perfetto.dev) or
@@ -685,7 +694,9 @@ fn cmd_serve(a: &Args) -> CliResult {
 }
 
 /// Serve a directory of `SZ3C` artifacts over HTTP range queries (see
-/// `docs/SERVE.md` for the API contract). Blocks until killed.
+/// `docs/SERVE.md` for the API contract). Writable by default (PUT /
+/// DELETE / rescan against the same directory); `--read-only` pins the
+/// startup set. Blocks until killed.
 fn cmd_serve_http(a: &Args) -> CliResult {
     let dir = a.need("dir")?;
     let addr = a.get("addr").unwrap_or("127.0.0.1:8080");
@@ -706,8 +717,14 @@ fn cmd_serve_http(a: &Args) -> CliResult {
         verify: !a.has("no-verify"),
     };
     let verify = opts.verify;
-    let store = sz3::server::ArtifactStore::open_dir(dir, &opts)?;
-    for art in store.artifacts() {
+    let registry = if a.has("read-only") {
+        let store = sz3::server::ArtifactStore::open_dir(dir, &opts)?;
+        sz3::server::Registry::read_only(Arc::new(store))
+    } else {
+        sz3::server::Registry::open_dir(dir, &opts)?
+            .with_max_inflight_ingests(a.get_or("max-ingests", 2usize)?.max(1))
+    };
+    for art in registry.snapshot().artifacts() {
         let fields: Vec<&str> =
             art.fields.iter().map(|f| f.name.as_str()).collect();
         println!(
@@ -719,14 +736,27 @@ fn cmd_serve_http(a: &Args) -> CliResult {
             if verify { " (crc-verified)" } else { "" }
         );
     }
-    let handle =
-        sz3::server::serve_with(store, addr, sz3::server::ServeOptions { threads, log })?;
+    let serve_opts = sz3::server::ServeOptions {
+        threads,
+        log,
+        max_body: a
+            .get_or("max-body-mb", 256usize)?
+            .max(1)
+            .saturating_mul(1 << 20),
+        max_conns: a.get_or("max-conns", 256usize)?.max(1),
+        read_timeout: std::time::Duration::from_secs(
+            a.get_or("read-timeout-s", 5u64)?.max(1),
+        ),
+    };
+    let writable = registry.writable();
+    let handle = sz3::server::serve_registry(Arc::new(registry), addr, serve_opts)?;
     println!(
-        "serving {} artifact(s) on http://{} ({} threads, cache budget {} MB)",
+        "serving {} artifact(s) on http://{} ({} threads, cache budget {} MB, {})",
         handle.store().artifacts().len(),
         handle.addr(),
         threads,
-        handle.store().cache().budget() >> 20
+        handle.store().cache().budget() >> 20,
+        if writable { "writable" } else { "read-only" }
     );
     println!("try: curl http://{}/v1/artifacts", handle.addr());
     println!("metrics: curl http://{}/metricsz", handle.addr());

@@ -99,13 +99,16 @@ impl Default for Gauge {
     }
 }
 
-/// Log₂-bucketed latency histogram over microseconds: 26 fixed `u64`
-/// slots plus count / sum / max, all relaxed atomics — safe to hammer
-/// from every worker thread with no allocation or locking.
+/// Log₂-bucketed latency histogram: 26 fixed `u64` microsecond buckets
+/// plus count / max, all relaxed atomics — safe to hammer from every
+/// worker thread with no allocation or locking. The running **sum is
+/// kept in nanoseconds** so sub-microsecond observations (ingest stage
+/// slices) still accumulate instead of truncating to zero; rendered
+/// sums stay seconds-normalized.
 #[derive(Debug)]
 pub struct Histogram {
     n: AtomicU64,
-    sum_us: AtomicU64,
+    sum_ns: AtomicU64,
     max_us: AtomicU64,
     buckets: [AtomicU64; N_BUCKETS],
 }
@@ -115,8 +118,8 @@ pub struct Histogram {
 pub struct HistSnapshot {
     /// Observations recorded.
     pub n: u64,
-    /// Sum of all observations, microseconds.
-    pub sum_us: u64,
+    /// Sum of all observations, nanoseconds.
+    pub sum_ns: u64,
     /// Largest observation, microseconds.
     pub max_us: u64,
     /// Per-bucket observation counts.
@@ -153,27 +156,34 @@ impl Histogram {
         const Z: AtomicU64 = AtomicU64::new(0);
         Histogram {
             n: AtomicU64::new(0),
-            sum_us: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
             max_us: AtomicU64::new(0),
             buckets: [Z; N_BUCKETS],
         }
     }
 
-    /// Record one observation of `us` microseconds.
     #[inline]
-    pub fn observe_us(&self, us: u64) {
+    fn record(&self, us: u64, ns: u64) {
         self.n.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
         self.max_us.fetch_max(us, Ordering::Relaxed);
         if let Some(b) = self.buckets.get(bucket_of(us)) {
             b.fetch_add(1, Ordering::Relaxed);
         }
     }
 
-    /// Record one observation of a duration.
+    /// Record one observation of `us` microseconds.
+    #[inline]
+    pub fn observe_us(&self, us: u64) {
+        self.record(us, us.saturating_mul(1000));
+    }
+
+    /// Record one observation of a duration — the sum keeps full
+    /// nanosecond precision, the bucket is placed by microsecond.
     #[inline]
     pub fn observe(&self, elapsed: Duration) {
-        self.observe_us(u64::try_from(elapsed.as_micros()).unwrap_or(u64::MAX));
+        let ns = u64::try_from(elapsed.as_nanos()).unwrap_or(u64::MAX);
+        self.record(ns / 1000, ns);
     }
 
     /// Record the time elapsed since `start`.
@@ -188,7 +198,7 @@ impl Histogram {
     pub fn snapshot(&self) -> HistSnapshot {
         let mut s = HistSnapshot {
             n: self.n.load(Ordering::Relaxed),
-            sum_us: self.sum_us.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
             max_us: self.max_us.load(Ordering::Relaxed),
             ..HistSnapshot::default()
         };
@@ -232,12 +242,14 @@ impl HistSnapshot {
         self.max_us
     }
 
-    /// Mean observation in microseconds (0 when empty).
+    /// Mean observation in microseconds (0 when empty). Computed from
+    /// the nanosecond sum, so sub-µs populations round to 0 only after
+    /// averaging, not per sample.
     pub fn mean_us(&self) -> u64 {
         if self.n == 0 {
             0
         } else {
-            self.sum_us / self.n
+            self.sum_ns / self.n / 1000
         }
     }
 }
@@ -435,17 +447,46 @@ pub static CACHE_ENTRIES: Gauge = Gauge::new();
 
 /// Endpoint-class labels for the HTTP metrics, index-aligned with
 /// [`HTTP_REQUESTS`] / [`HTTP_US`] / [`HTTP_RESP_BYTES`]. The server's
-/// per-instance `/statsz` accounting uses the same label set.
-pub const HTTP_ENDPOINTS: [&str; 8] =
-    ["list", "meta", "roi", "raw", "healthz", "statsz", "metricsz", "other"];
+/// per-instance `/statsz` accounting uses the same label set. `"other"`
+/// must stay last — it is the fold target for unknown labels.
+pub const HTTP_ENDPOINTS: [&str; 11] = [
+    "list", "meta", "roi", "raw", "healthz", "statsz", "metricsz", "ingest",
+    "delete", "rescan", "other",
+];
 
 /// Requests served per endpoint class.
-pub static HTTP_REQUESTS: [Counter; 8] = [COUNTER_INIT; 8];
+pub static HTTP_REQUESTS: [Counter; 11] = [COUNTER_INIT; 11];
 const HIST_INIT: Histogram = Histogram::new();
 /// Request handling latency per endpoint class.
-pub static HTTP_US: [Histogram; 8] = [HIST_INIT; 8];
+pub static HTTP_US: [Histogram; 11] = [HIST_INIT; 11];
 /// Response body bytes per endpoint class.
-pub static HTTP_RESP_BYTES: [Counter; 8] = [COUNTER_INIT; 8];
+pub static HTTP_RESP_BYTES: [Counter; 11] = [COUNTER_INIT; 11];
+
+// ---------------------------------------------------------------------------
+// Ingest / registry metrics (the server write path)
+// ---------------------------------------------------------------------------
+
+/// Raw request-body bytes accepted into the ingest pipeline.
+pub static INGEST_BYTES: Counter = Counter::new();
+/// Artifacts created by `PUT` (id previously unknown).
+pub static INGEST_CREATED: Counter = Counter::new();
+/// Artifacts atomically replaced by `PUT` (id already live).
+pub static INGEST_REPLACED: Counter = Counter::new();
+/// Ingest attempts that failed after admission (bad params, compression
+/// or I/O error) — partial temp files are cleaned up on this path.
+pub static INGEST_FAILED: Counter = Counter::new();
+/// Ingest attempts rejected with `429` because every ingest slot was busy.
+pub static INGEST_REJECTED_BUSY: Counter = Counter::new();
+/// End-to-end ingest wall time (body parse through registry publish).
+pub static INGEST_SECONDS: Histogram = Histogram::new();
+/// Artifacts removed via `DELETE`.
+pub static ARTIFACTS_DELETED: Counter = Counter::new();
+/// Directory rescans served via `POST /v1/admin/rescan`.
+pub static RESCANS: Counter = Counter::new();
+/// Registry epoch — bumped on every publish/delete/rescan swap.
+pub static REGISTRY_GENERATION: Gauge = Gauge::new();
+/// Artifacts live in the current registry snapshot.
+pub static REGISTRY_ARTIFACTS: Gauge = Gauge::new();
 
 /// Endpoint slot for a handler label (unknown → `"other"`).
 pub fn http_slot(label: &str) -> usize {
@@ -568,7 +609,8 @@ fn hist_series(out: &mut String, name: &str, label: Option<(&str, &str)>, s: &Hi
         out,
         &format!("{name}_sum"),
         label,
-        &format!("{:.6}", s.sum_us as f64 / 1e6),
+        // the running sum is nanoseconds; exposition stays seconds
+        &format!("{:.9}", s.sum_ns as f64 / 1e9),
     );
     sample(out, &format!("{name}_count"), label, &s.n.to_string());
 }
@@ -791,6 +833,55 @@ pub fn render_prometheus() -> String {
 
     counter_single(
         &mut out,
+        "sz3_ingest_bytes_total",
+        "Raw request-body bytes accepted into the ingest pipeline.",
+        INGEST_BYTES.get(),
+    );
+    counter_family(
+        &mut out,
+        "sz3_ingest_artifacts_total",
+        "Ingest outcomes by kind.",
+        "outcome",
+        &[
+            ("created", INGEST_CREATED.get()),
+            ("replaced", INGEST_REPLACED.get()),
+            ("failed", INGEST_FAILED.get()),
+            ("rejected_busy", INGEST_REJECTED_BUSY.get()),
+        ],
+    );
+    hist_single(
+        &mut out,
+        "sz3_ingest_seconds",
+        "End-to-end ingest wall time (body parse through registry publish).",
+        &INGEST_SECONDS,
+    );
+    counter_single(
+        &mut out,
+        "sz3_artifacts_deleted_total",
+        "Artifacts removed via DELETE.",
+        ARTIFACTS_DELETED.get(),
+    );
+    counter_single(
+        &mut out,
+        "sz3_rescans_total",
+        "Directory rescans served via POST /v1/admin/rescan.",
+        RESCANS.get(),
+    );
+    gauge_single(
+        &mut out,
+        "sz3_registry_generation",
+        "Registry epoch, bumped on every publish/delete/rescan swap.",
+        REGISTRY_GENERATION.get(),
+    );
+    gauge_single(
+        &mut out,
+        "sz3_registry_artifacts",
+        "Artifacts live in the current registry snapshot.",
+        REGISTRY_ARTIFACTS.get(),
+    );
+
+    counter_single(
+        &mut out,
         "sz3_trace_events_dropped_total",
         "Trace events overwritten because the ring buffer was full.",
         TRACE_DROPPED.get(),
@@ -887,7 +978,7 @@ pub fn reader_table() -> String {
             "{:<12} {:>8} {:>10} {:>9}µs {:>9}µs\n",
             name,
             s.n,
-            human_time(Duration::from_micros(s.sum_us)),
+            human_time(Duration::from_nanos(s.sum_ns)),
             s.mean_us(),
             s.quantile_us(0.99),
         ));
@@ -1036,6 +1127,31 @@ mod tests {
             .collect();
         assert_eq!(roi_buckets.len(), N_BUCKETS + 1);
         assert!(roi_buckets.windows(2).all(|w| w[0] <= w[1]), "non-cumulative buckets");
+    }
+
+    #[test]
+    fn histogram_sums_accumulate_ns_and_render_seconds() {
+        let h = Histogram::new();
+        // sub-µs durations must accumulate instead of truncating to zero
+        h.observe(Duration::from_nanos(400));
+        h.observe(Duration::from_nanos(600));
+        // the whole-µs entry point scales to ns
+        h.observe_us(1);
+        let s = h.snapshot();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.sum_ns, 400 + 600 + 1_000);
+        // exposition `_sum` stays seconds-normalized: 2000 ns = 2e-6 s
+        let mut out = String::new();
+        hist_series(&mut out, "t_seconds", None, &s);
+        assert!(out.contains("t_seconds_sum 0.000002000"), "sum line: {out}");
+        assert!(out.contains("t_seconds_count 3"), "count line: {out}");
+        // mean truncates to µs only after averaging in ns
+        assert_eq!(s.mean_us(), 0);
+        let h2 = Histogram::new();
+        for _ in 0..4 {
+            h2.observe(Duration::from_micros(3));
+        }
+        assert_eq!(h2.snapshot().mean_us(), 3);
     }
 
     #[test]

@@ -146,6 +146,40 @@ impl ChunkCache {
         crate::obs::CACHE_BYTES.set(inner.bytes as u64);
         crate::obs::CACHE_ENTRIES.set(inner.map.len() as u64);
     }
+
+    /// Drop every entry whose key belongs to cache scope `scope` (the
+    /// prefix [`crate::reader::ContainerReader::with_shared_cache`]
+    /// builds), returning how many entries were removed. The registry
+    /// calls this when an artifact is deleted or replaced: each
+    /// registration gets a fresh scope, so eviction here is byte
+    /// reclamation — a retired artifact's chunks stop occupying budget —
+    /// not a correctness requirement.
+    pub fn evict_scope(&self, scope: &str) -> usize {
+        if self.budget == 0 || scope.is_empty() {
+            return 0;
+        }
+        // the same unit-separator framing with_shared_cache uses, so
+        // scope "a" never matches keys of scope "ab"
+        let prefix = format!("{scope}\u{1f}");
+        let Ok(mut inner) = self.inner.lock() else { return 0 };
+        let doomed: Vec<ChunkKey> = inner
+            .map
+            .keys()
+            .filter(|(name, _)| name.starts_with(&prefix))
+            .cloned()
+            .collect();
+        let mut removed = 0;
+        for k in &doomed {
+            if let Some(e) = inner.map.remove(k) {
+                inner.bytes = inner.bytes.saturating_sub(e.cost);
+                removed += 1;
+                crate::obs::CACHE_EVICTIONS.inc();
+            }
+        }
+        crate::obs::CACHE_BYTES.set(inner.bytes as u64);
+        crate::obs::CACHE_ENTRIES.set(inner.map.len() as u64);
+        removed
+    }
 }
 
 #[cfg(test)]
@@ -233,6 +267,33 @@ mod tests {
         }
         assert_eq!(c.len(), 1);
         assert_eq!(c.bytes(), cost(128));
+    }
+
+    #[test]
+    fn evict_scope_removes_exactly_one_scope() {
+        let c = ChunkCache::new(100 * cost(64));
+        // two scoped artifacts plus an unscoped private entry
+        for i in 0..3 {
+            c.insert((format!("a\u{1f}0\u{1e}rho"), i), field(i, 64));
+            c.insert((format!("b\u{1f}0\u{1e}rho"), i), field(i, 64));
+        }
+        c.insert(key(0), field(9, 64));
+        assert_eq!(c.len(), 7);
+        let before = c.bytes();
+        assert_eq!(c.evict_scope("a"), 3);
+        assert_eq!(c.len(), 4);
+        assert!(c.bytes() < before, "evicted bytes are uncharged");
+        // scope "a" gone, scope "b" and the private entry untouched
+        assert!(c.get(&(format!("a\u{1f}0\u{1e}rho"), 0)).is_none());
+        assert!(c.get(&(format!("b\u{1f}0\u{1e}rho"), 0)).is_some());
+        assert!(c.get(&key(0)).is_some());
+        // prefix framing: scope "a" must not shadow scope "ab"
+        c.insert((format!("ab\u{1f}0\u{1e}rho"), 0), field(1, 64));
+        assert_eq!(c.evict_scope("a"), 0);
+        assert!(c.get(&(format!("ab\u{1f}0\u{1e}rho"), 0)).is_some());
+        // empty scope is a no-op, never a wildcard
+        assert_eq!(c.evict_scope(""), 0);
+        assert_eq!(c.evict_scope("missing"), 0);
     }
 
     #[test]

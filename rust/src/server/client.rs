@@ -59,8 +59,36 @@ impl HttpClient {
         target: &str,
         extra: &[(&str, &str)],
     ) -> Result<HttpResponse> {
+        self.request("GET", target, extra, &[])
+    }
+
+    /// `PUT target` with a body (the streaming-ingest endpoint).
+    pub fn put(&mut self, target: &str, body: &[u8]) -> Result<HttpResponse> {
+        self.request("PUT", target, &[], body)
+    }
+
+    /// `DELETE target`.
+    pub fn delete(&mut self, target: &str) -> Result<HttpResponse> {
+        self.request("DELETE", target, &[], &[])
+    }
+
+    /// `POST target` with a body (admin endpoints).
+    pub fn post(&mut self, target: &str, body: &[u8]) -> Result<HttpResponse> {
+        self.request("POST", target, &[], body)
+    }
+
+    /// Issue an arbitrary request on this keep-alive connection. A
+    /// `Content-Length` header is always sent so the server can frame
+    /// the body (including an explicit `0` for body-less methods).
+    pub fn request(
+        &mut self,
+        method: &str,
+        target: &str,
+        extra: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<HttpResponse> {
         let mut request = format!(
-            "GET {target} HTTP/1.1\r\nHost: sz3\r\nConnection: keep-alive\r\n"
+            "{method} {target} HTTP/1.1\r\nHost: sz3\r\nConnection: keep-alive\r\n"
         );
         for (name, value) in extra {
             request.push_str(name);
@@ -68,8 +96,11 @@ impl HttpClient {
             request.push_str(value);
             request.push_str("\r\n");
         }
-        request.push_str("\r\n");
+        request.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
         self.stream.get_mut().write_all(request.as_bytes())?;
+        if !body.is_empty() {
+            self.stream.get_mut().write_all(body)?;
+        }
         self.stream.get_mut().flush()?;
         self.read_response()
     }

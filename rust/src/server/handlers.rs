@@ -1,19 +1,29 @@
-//! Endpoint handlers: route a parsed [`Request`] against an
-//! [`ArtifactStore`], producing JSON metadata, raw ROI bytes, or the
-//! uniform error body. Pure functions over `(&store, &request)` — no
-//! sockets — so the 404/416/400 matrix is unit-testable without binding a
-//! port, and the connection loop stays a thin shell.
+//! Endpoint handlers: route a parsed [`Request`] against a [`Registry`]
+//! snapshot, producing JSON metadata, raw ROI bytes, ingest/delete/
+//! rescan outcomes, or the uniform error body. Pure functions over
+//! `(&registry, &request)` — no sockets — so the whole status-code
+//! matrix is unit-testable without binding a port, and the connection
+//! loop stays a thin shell.
+//!
+//! Read handlers take one [`Registry::snapshot`] per request and never
+//! observe a concurrent swap. Write handlers (`PUT`, `DELETE`, rescan)
+//! go through the registry's serialized mutation path; a read-only
+//! registry answers **503** to all of them.
 //!
 //! Status-code contract (specified in `docs/SERVE.md`): unknown
 //! artifact/field/chunk → **404**; syntactically valid but out-of-bounds
 //! or empty row ranges → **416** with a `Content-Range: rows */total`
-//! header; malformed parameters → **400**; reader-level failures (e.g. a
-//! chunk failing CRC under an active request) → **500**.
+//! header; malformed parameters or ingest framing → **400**; wrong
+//! method on a known route → **405** with an accurate `Allow`; ingest
+//! slots busy → **429** with `Retry-After`; reader-level failures (e.g.
+//! a chunk failing CRC under an active request) → **500**.
 
 use super::http::{json_escape, Request, Response};
 use super::stats::ServerStats;
-use super::ArtifactStore;
-use crate::data::FieldValues;
+use super::{ArtifactStore, Registry};
+use crate::config::{JobConfig, Json};
+use crate::data::{Field, FieldValues};
+use crate::error::SzError;
 use crate::obs;
 use crate::util::parse_rows;
 use std::time::Instant;
@@ -22,57 +32,92 @@ use std::time::Instant;
 /// label — the single entry point the connection loop calls. Latency is
 /// double-entried: into the per-server [`ServerStats`] (for `/statsz`)
 /// and into the process-wide [`obs`] registry (for `/metricsz`).
-pub fn dispatch(store: &ArtifactStore, stats: &ServerStats, req: &Request) -> Response {
-    dispatch_labeled(store, stats, req).1
+pub fn dispatch(registry: &Registry, stats: &ServerStats, req: &Request) -> Response {
+    dispatch_labeled(registry, stats, req).1
 }
 
 /// [`dispatch`], but also return the endpoint label so the connection
 /// loop can stamp access-log lines without re-routing.
 pub fn dispatch_labeled(
-    store: &ArtifactStore,
+    registry: &Registry,
     stats: &ServerStats,
     req: &Request,
 ) -> (&'static str, Response) {
     let t0 = Instant::now();
-    let (label, resp) = route(store, stats, req);
+    let (label, resp) = route(registry, stats, req);
     let elapsed = t0.elapsed();
     stats.record(label, elapsed);
     obs::http_record(obs::http_slot(label), elapsed, resp.body.len() as u64);
     (label, resp)
 }
 
-/// Match the request path to a handler; returns the endpoint label used
-/// for latency accounting alongside the response.
+/// Match `(method, path)` to a handler; returns the endpoint label used
+/// for latency accounting alongside the response. Wrong methods on
+/// known routes get a 405 whose `Allow` header lists exactly what that
+/// route accepts.
 pub fn route(
-    store: &ArtifactStore,
+    registry: &Registry,
     stats: &ServerStats,
     req: &Request,
 ) -> (&'static str, Response) {
-    if req.method != "GET" && req.method != "HEAD" {
-        let resp = Response::error(405, &format!("method {} not allowed", req.method))
-            .with_header("Allow", "GET, HEAD");
-        return ("other", resp);
-    }
+    // one coherent snapshot per request: concurrent publishes/removes
+    // swap the registry pointer without disturbing this store
+    let snap = registry.snapshot();
+    let read = matches!(req.method.as_str(), "GET" | "HEAD");
     let segs = req.segments();
     let segs: Vec<&str> = segs.iter().map(String::as_str).collect();
     match segs.as_slice() {
-        ["healthz"] => ("healthz", healthz(store, stats)),
-        ["statsz"] => ("statsz", statsz(store, stats)),
-        ["metricsz"] => ("metricsz", metricsz()),
-        ["v1", "artifacts"] => ("list", list(store)),
-        ["v1", "artifacts", id] => ("meta", meta(store, id)),
-        ["v1", "artifacts", id, "fields", name] => ("roi", roi(store, req, id, name)),
-        ["v1", "artifacts", id, "raw"] => ("raw", raw(store, req, id)),
+        ["healthz"] if read => ("healthz", healthz(registry, &snap, stats)),
+        ["statsz"] if read => ("statsz", statsz(&snap, stats)),
+        ["metricsz"] if read => ("metricsz", metricsz()),
+        ["v1", "artifacts"] if read => ("list", list(&snap)),
+        ["v1", "artifacts", id] if read => ("meta", meta(&snap, id)),
+        ["v1", "artifacts", id] if req.method == "PUT" => {
+            ("ingest", ingest(registry, req, id))
+        }
+        ["v1", "artifacts", id] if req.method == "DELETE" => {
+            ("delete", delete_artifact(registry, id))
+        }
+        ["v1", "artifacts", id, "fields", name] if read => {
+            ("roi", roi(&snap, req, id, name))
+        }
+        ["v1", "artifacts", id, "raw"] if read => ("raw", raw(&snap, req, id)),
+        ["v1", "admin", "rescan"] if req.method == "POST" => {
+            ("rescan", rescan(registry))
+        }
+        // known routes, wrong method: accurate Allow per route
+        ["v1", "artifacts", _] => {
+            ("other", method_not_allowed(&req.method, "GET, HEAD, PUT, DELETE"))
+        }
+        ["v1", "admin", "rescan"] => {
+            ("other", method_not_allowed(&req.method, "POST"))
+        }
+        ["healthz"] | ["statsz"] | ["metricsz"] | ["v1", "artifacts"]
+        | ["v1", "artifacts", _, "fields", _] | ["v1", "artifacts", _, "raw"] => {
+            ("other", method_not_allowed(&req.method, "GET, HEAD"))
+        }
         _ => ("other", Response::error(404, &format!("no route for {}", req.path))),
     }
 }
 
-fn healthz(store: &ArtifactStore, stats: &ServerStats) -> Response {
+fn method_not_allowed(method: &str, allow: &'static str) -> Response {
+    Response::error(405, &format!("method {method} not allowed"))
+        .with_header("Allow", allow)
+}
+
+fn healthz(
+    registry: &Registry,
+    store: &ArtifactStore,
+    stats: &ServerStats,
+) -> Response {
     Response::json(
         200,
         format!(
-            "{{\"status\":\"ok\",\"artifacts\":{},\"uptime_s\":{:.1}}}",
+            "{{\"status\":\"ok\",\"artifacts\":{},\"generation\":{},\
+             \"writable\":{},\"uptime_s\":{:.1}}}",
             store.artifacts().len(),
+            registry.generation(),
+            registry.writable(),
             stats.uptime_s()
         ),
     )
@@ -376,13 +421,363 @@ fn raw(store: &ArtifactStore, req: &Request, id: &str) -> Response {
 
 /// Prometheus text exposition (format 0.0.4) of the whole process-wide
 /// [`obs`] registry — pipeline stages, coordinator, selector, reader,
-/// cache, and HTTP families in one scrape.
+/// cache, ingest, and HTTP families in one scrape.
 fn metricsz() -> Response {
     Response::text(
         200,
         "text/plain; version=0.0.4; charset=utf-8",
         obs::render_prometheus(),
     )
+}
+
+/// Ids created over PUT become file stems, so they are restricted to a
+/// filesystem- and URL-safe alphabet (and the path keywords `.`/`..`
+/// are refused). Ids opened from disk are matched against the store and
+/// may use any stem the filesystem allowed.
+fn valid_ingest_id(id: &str) -> bool {
+    !id.is_empty()
+        && id.len() <= 64
+        && id != "."
+        && id != ".."
+        && id
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_' || b == b'.')
+}
+
+/// `PUT /v1/artifacts/{id}`: claim an ingest slot (429 + `Retry-After`
+/// when all are busy), compress the body through the coordinator, and
+/// publish atomically. 201 on create, 200 on replace.
+fn ingest(registry: &Registry, req: &Request, id: &str) -> Response {
+    if !registry.writable() {
+        return Response::error(
+            503,
+            "server is read-only; ingest requires a writable registry",
+        );
+    }
+    if !valid_ingest_id(id) {
+        return Response::error(
+            400,
+            &format!("artifact id '{id}' must be 1-64 chars of [A-Za-z0-9._-]"),
+        );
+    }
+    let Some(_permit) = registry.try_begin_ingest() else {
+        obs::INGEST_REJECTED_BUSY.inc();
+        return Response::error(
+            429,
+            &format!(
+                "all {} ingest slots are busy; retry shortly",
+                registry.max_inflight_ingests()
+            ),
+        )
+        .with_header("Retry-After", "1");
+    };
+    let t0 = Instant::now();
+    let resp = ingest_with_permit(registry, req, id);
+    obs::INGEST_SECONDS.observe_since(t0);
+    match resp.status {
+        201 => obs::INGEST_CREATED.inc(),
+        200 => obs::INGEST_REPLACED.inc(),
+        _ => obs::INGEST_FAILED.inc(),
+    }
+    resp
+}
+
+/// The ingest body after the permit is held. Framing:
+/// `[u32le json_len][json params][field data]`, where the data section
+/// is each field's elements as little-endian f32 in the order the
+/// `fields` param lists them, and the total length must match exactly.
+fn ingest_with_permit(registry: &Registry, req: &Request, id: &str) -> Response {
+    let body = &req.body;
+    let Some(head) = body.get(..4).and_then(|b| <[u8; 4]>::try_from(b).ok())
+    else {
+        return Response::error(
+            400,
+            "body too short for the [u32 json_len][json][data] framing",
+        );
+    };
+    let json_len = match usize::try_from(u32::from_le_bytes(head)) {
+        Ok(n) => n,
+        Err(_) => return Response::error(400, "json_len does not fit usize"),
+    };
+    let json_end = match 4usize.checked_add(json_len) {
+        Some(e) if e <= body.len() => e,
+        _ => {
+            return Response::error(
+                400,
+                &format!(
+                    "json_len {json_len} overruns the {}-byte body",
+                    body.len()
+                ),
+            )
+        }
+    };
+    let Some(params_bytes) = body.get(4..json_end) else {
+        return Response::error(400, "json params out of range");
+    };
+    let Ok(params_text) = std::str::from_utf8(params_bytes) else {
+        return Response::error(400, "json params are not valid UTF-8");
+    };
+    let params = match IngestParams::parse(params_text, registry) {
+        Ok(p) => p,
+        Err(msg) => return Response::error(400, &msg),
+    };
+    let Some(per_field) = params.elems.checked_mul(4) else {
+        return Response::error(400, "dims overflow the addressable size");
+    };
+    let Some(data_len) = per_field.checked_mul(params.fields.len()) else {
+        return Response::error(400, "fields x dims overflow the addressable size");
+    };
+    let Some(expected) = data_len.checked_add(json_end) else {
+        return Response::error(400, "framing overflows the addressable size");
+    };
+    if expected != body.len() {
+        return Response::error(
+            400,
+            &format!(
+                "body is {} bytes but the framing requires {expected} \
+                 (4 + {json_len} json + {} fields x {} elems x 4 data bytes)",
+                body.len(),
+                params.fields.len(),
+                params.elems
+            ),
+        );
+    }
+    let coord = match crate::coordinator::Coordinator::from_config(&params.cfg) {
+        Ok(c) => c,
+        Err(e) => return Response::error(400, &e.to_string()),
+    };
+    let mut ingest_fields = Vec::with_capacity(params.fields.len());
+    let mut off = json_end;
+    for name in &params.fields {
+        let Some(end) = off.checked_add(per_field) else {
+            return Response::error(400, "field data out of range");
+        };
+        let Some(data) = body.get(off..end) else {
+            return Response::error(400, "field data out of range");
+        };
+        let mut values = Vec::with_capacity(params.elems);
+        for quad in data.chunks_exact(4) {
+            let Ok(b) = <[u8; 4]>::try_from(quad) else {
+                return Response::error(400, "field data misaligned");
+            };
+            values.push(f32::from_le_bytes(b));
+        }
+        match Field::f32(name.clone(), &params.dims, values) {
+            Ok(f) => ingest_fields.push(f),
+            Err(e) => return Response::error(400, &e.to_string()),
+        }
+        off = end;
+    }
+    obs::INGEST_BYTES.add(data_len as u64);
+    let (container, _report) = match coord.run_to_container(ingest_fields) {
+        Ok(r) => r,
+        // config/shape problems are the client's fault; anything else
+        // is an internal compression failure
+        Err(e @ (SzError::Config(_) | SzError::Shape(_))) => {
+            return Response::error(400, &e.to_string())
+        }
+        Err(e) => return Response::error(500, &e.to_string()),
+    };
+    match registry.publish(id, &container) {
+        Ok(replaced) => {
+            let status = if replaced { 200 } else { 201 };
+            Response::json(
+                status,
+                format!(
+                    "{{\"id\":\"{}\",\"replaced\":{replaced},\"bytes\":{},\
+                     \"generation\":{}}}",
+                    json_escape(id),
+                    container.len(),
+                    registry.generation()
+                ),
+            )
+        }
+        Err(e) => Response::error(500, &e.to_string()),
+    }
+}
+
+/// Parsed + validated ingest JSON params.
+struct IngestParams {
+    /// Field shape, slowest axis first.
+    dims: Vec<usize>,
+    /// Elements per field (∏ dims, overflow-checked).
+    elems: usize,
+    /// Field names, in body order.
+    fields: Vec<String>,
+    /// Compression config assembled from pipeline/bound/adaptive params.
+    cfg: JobConfig,
+}
+
+impl IngestParams {
+    /// Parse the params object; unknown keys are rejected to catch
+    /// typos, exactly like the CLI's `--config` parser.
+    fn parse(text: &str, registry: &Registry) -> std::result::Result<IngestParams, String> {
+        let j = Json::parse(text).map_err(|e| format!("bad json params: {e}"))?;
+        let Some(obj) = j.as_obj() else {
+            return Err("params must be a JSON object".to_string());
+        };
+        let mut dims: Vec<usize> = Vec::new();
+        let mut fields: Vec<String> = Vec::new();
+        let mut cfg = JobConfig {
+            workers: registry.store_options().workers,
+            ..JobConfig::default()
+        };
+        for (key, val) in obj {
+            match key.as_str() {
+                "dims" => {
+                    let Some(arr) = val.as_arr() else {
+                        return Err("dims must be an array of integers".to_string());
+                    };
+                    for d in arr {
+                        match d.as_usize() {
+                            Some(d) if d > 0 => dims.push(d),
+                            _ => {
+                                return Err(
+                                    "dims entries must be integers >= 1".to_string()
+                                )
+                            }
+                        }
+                    }
+                }
+                "fields" => {
+                    let Some(arr) = val.as_arr() else {
+                        return Err("fields must be an array of names".to_string());
+                    };
+                    for f in arr {
+                        let Some(name) = f.as_str() else {
+                            return Err("fields entries must be strings".to_string());
+                        };
+                        if name.is_empty() {
+                            return Err("field names must be non-empty".to_string());
+                        }
+                        if fields.iter().any(|x| x == name) {
+                            return Err(format!("duplicate field '{name}'"));
+                        }
+                        fields.push(name.to_string());
+                    }
+                }
+                "pipeline" => {
+                    let Some(p) = val.as_str() else {
+                        return Err("pipeline must be a string".to_string());
+                    };
+                    cfg.pipeline = p.to_string();
+                }
+                "adaptive" => {
+                    let Some(b) = val.as_bool() else {
+                        return Err("adaptive must be a boolean".to_string());
+                    };
+                    cfg.adaptive = b;
+                }
+                "candidates" => {
+                    let Some(arr) = val.as_arr() else {
+                        return Err("candidates must be an array of specs".to_string());
+                    };
+                    for c in arr {
+                        let Some(spec) = c.as_str() else {
+                            return Err(
+                                "candidates entries must be strings".to_string()
+                            );
+                        };
+                        cfg.candidates.push(spec.to_string());
+                    }
+                }
+                "chunk_elems" => {
+                    match val.as_usize() {
+                        Some(c) if c > 0 => cfg.chunk_elems = c,
+                        _ => {
+                            return Err(
+                                "chunk_elems must be an integer >= 1".to_string()
+                            )
+                        }
+                    }
+                }
+                "bound" => {
+                    let Some(mode) = val.get("mode").and_then(|m| m.as_str())
+                    else {
+                        return Err(
+                            "bound needs {\"mode\":..,\"value\":..}".to_string()
+                        );
+                    };
+                    let Some(value) = val.get("value").and_then(|v| v.as_f64())
+                    else {
+                        return Err("bound needs a numeric value".to_string());
+                    };
+                    if !(value > 0.0 && value.is_finite()) {
+                        return Err("bound value must be finite and > 0".to_string());
+                    }
+                    cfg.bound = match mode {
+                        "abs" => crate::pipeline::ErrorBound::Abs(value),
+                        "rel" => crate::pipeline::ErrorBound::Rel(value),
+                        "pwrel" => crate::pipeline::ErrorBound::PwRel(value),
+                        other => {
+                            return Err(format!(
+                                "unknown bound mode '{other}' (abs, rel, pwrel)"
+                            ))
+                        }
+                    };
+                }
+                other => return Err(format!("unknown param '{other}'")),
+            }
+        }
+        if dims.is_empty() {
+            return Err("params must set dims".to_string());
+        }
+        if fields.is_empty() {
+            return Err("params must set fields".to_string());
+        }
+        let mut elems = 1usize;
+        for d in &dims {
+            elems = elems
+                .checked_mul(*d)
+                .ok_or_else(|| "dims overflow the addressable size".to_string())?;
+        }
+        Ok(IngestParams { dims, elems, fields, cfg })
+    }
+}
+
+/// `DELETE /v1/artifacts/{id}`: unpublish + delete the file. In-flight
+/// reads on older snapshots are unaffected.
+fn delete_artifact(registry: &Registry, id: &str) -> Response {
+    if !registry.writable() {
+        return Response::error(
+            503,
+            "server is read-only; delete requires a writable registry",
+        );
+    }
+    match registry.remove(id) {
+        Ok(true) => Response::json(
+            200,
+            format!(
+                "{{\"id\":\"{}\",\"deleted\":true,\"generation\":{}}}",
+                json_escape(id),
+                registry.generation()
+            ),
+        ),
+        Ok(false) => Response::error(404, &format!("unknown artifact '{id}'")),
+        Err(e) => Response::error(500, &e.to_string()),
+    }
+}
+
+/// `POST /v1/admin/rescan`: reconcile the serving set with the
+/// directory (pick up out-of-band files, drop vanished ones).
+fn rescan(registry: &Registry) -> Response {
+    if !registry.writable() {
+        return Response::error(
+            503,
+            "server is read-only; rescan requires a writable registry",
+        );
+    }
+    match registry.rescan() {
+        Ok((added, dropped, kept)) => Response::json(
+            200,
+            format!(
+                "{{\"added\":{added},\"dropped\":{dropped},\"kept\":{kept},\
+                 \"generation\":{}}}",
+                registry.generation()
+            ),
+        ),
+        Err(e) => Response::error(500, &e.to_string()),
+    }
 }
 
 /// Outcome of parsing a `Range:` header against a body of `total` bytes.
@@ -564,9 +959,11 @@ mod tests {
     use crate::reader::{ContainerReader, FileSource};
     use crate::util::{prop, rng::Pcg32};
     use std::io::Cursor;
+    use std::sync::Arc;
 
-    /// Store with one artifact "demo": 24×12×12, 3 rows/chunk → 8 chunks.
-    fn demo_store() -> (ArtifactStore, Vec<u8>) {
+    /// Read-only registry with one artifact "demo": 24×12×12, 3
+    /// rows/chunk → 8 chunks.
+    fn demo_store() -> (Registry, Vec<u8>) {
         let cfg = JobConfig {
             pipeline: "sz3-lr".into(),
             bound: ErrorBound::Abs(1e-3),
@@ -589,12 +986,12 @@ mod tests {
         .with_workers(2);
         let len = artifact.len() as u64;
         store.register("demo".to_string(), reader, len).unwrap();
-        (store, artifact)
+        (Registry::read_only(Arc::new(store)), artifact)
     }
 
-    fn get(store: &ArtifactStore, target: &str) -> Response {
+    fn get(registry: &Registry, target: &str) -> Response {
         let stats = ServerStats::new();
-        dispatch(store, &stats, &Request::get(target))
+        dispatch(registry, &stats, &Request::get(target))
     }
 
     #[test]
@@ -640,7 +1037,8 @@ mod tests {
             .unwrap();
         assert_eq!(resp.body, oracle.values.to_le_bytes());
         // and only the overlapping chunks were decoded for it
-        let served = store.get("demo").unwrap().reader.stats();
+        let snap = store.snapshot();
+        let served = snap.get("demo").unwrap().reader.stats();
         assert_eq!(served.chunks_decoded, 2, "rows 7..11 span 2 of 8 chunks");
     }
 
@@ -762,8 +1160,8 @@ mod tests {
         assert!(!resp.body.is_empty());
     }
 
-    /// Store with one 3-snapshot delta series artifact "ts".
-    fn series_store() -> (ArtifactStore, Vec<u8>) {
+    /// Registry with one 3-snapshot delta series artifact "ts".
+    fn series_store() -> (Registry, Vec<u8>) {
         let cfg = JobConfig {
             pipeline: "sz3-lr".into(),
             bound: ErrorBound::Abs(1e-3),
@@ -789,7 +1187,7 @@ mod tests {
         .with_workers(2);
         let len = artifact.len() as u64;
         store.register("ts".to_string(), reader, len).unwrap();
-        (store, artifact)
+        (Registry::read_only(Arc::new(store)), artifact)
     }
 
     #[test]
@@ -973,5 +1371,244 @@ mod tests {
         req.headers.push(("range".to_string(), "bytes=0-3".to_string()));
         req.headers.push(("if-none-match".to_string(), etag));
         assert_eq!(dispatch(&store, &stats, &req).status, 304);
+    }
+
+    // ---- write path -------------------------------------------------
+
+    fn method_req(method: &str, target: &str) -> Request {
+        let mut req = Request::get(target);
+        req.method = method.to_string();
+        req
+    }
+
+    /// Frame an ingest body: `[u32le json_len][json][data]`.
+    fn framed(params: &str, data: &[u8]) -> Vec<u8> {
+        let mut body = (params.len() as u32).to_le_bytes().to_vec();
+        body.extend_from_slice(params.as_bytes());
+        body.extend_from_slice(data);
+        body
+    }
+
+    fn put_req(id: &str, body: Vec<u8>) -> Request {
+        let mut req = method_req("PUT", &format!("/v1/artifacts/{id}"));
+        req.body = body;
+        req
+    }
+
+    /// Writable registry rooted at a fresh temp dir.
+    fn writable_registry(tag: &str) -> (std::path::PathBuf, Registry) {
+        let dir = std::env::temp_dir()
+            .join(format!("sz3_handlers_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg =
+            Registry::open_dir(&dir, &crate::server::StoreOptions::default())
+                .unwrap();
+        (dir, reg)
+    }
+
+    const WAVE_PARAMS: &str = "{\"dims\":[8,64],\"fields\":[\"rho\"],\
+         \"pipeline\":\"sz3-lr\",\"bound\":{\"mode\":\"abs\",\"value\":0.001},\
+         \"chunk_elems\":256}";
+
+    fn wave_values(base: f32) -> Vec<f32> {
+        (0..512).map(|i| base + (i as f32) * 0.01).collect()
+    }
+
+    fn le_bytes(values: &[f32]) -> Vec<u8> {
+        values.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn ingest_delete_rescan_lifecycle_over_dispatch() {
+        let (dir, reg) = writable_registry("lifecycle");
+        let stats = ServerStats::new();
+        let values = wave_values(0.0);
+
+        // create → 201, replaced:false
+        let resp = dispatch(
+            &reg,
+            &stats,
+            &put_req("wave", framed(WAVE_PARAMS, &le_bytes(&values))),
+        );
+        assert_eq!(resp.status, 201, "{}", String::from_utf8_lossy(&resp.body));
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("replaced").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("generation").unwrap().as_usize(), Some(1));
+        assert_eq!(get(&reg, "/v1/artifacts/wave").status, 200);
+
+        // the published artifact serves the data back within the bound
+        let resp = get(&reg, "/v1/artifacts/wave/fields/rho?rows=0..8");
+        assert_eq!(resp.status, 200);
+        let served: Vec<f32> = resp
+            .body
+            .chunks_exact(4)
+            .map(|q| f32::from_le_bytes(q.try_into().unwrap()))
+            .collect();
+        assert_eq!(served.len(), values.len());
+        for (got, want) in served.iter().zip(&values) {
+            assert!((got - want).abs() <= 1e-3 + 1e-6, "{got} vs {want}");
+        }
+
+        // replace → 200, replaced:true, and the new bytes are served
+        let resp = dispatch(
+            &reg,
+            &stats,
+            &put_req("wave", framed(WAVE_PARAMS, &le_bytes(&wave_values(50.0)))),
+        );
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("replaced").unwrap().as_bool(), Some(true));
+        let resp = get(&reg, "/v1/artifacts/wave/fields/rho?rows=0..1");
+        let first = f32::from_le_bytes(resp.body[..4].try_into().unwrap());
+        assert!((first - 50.0).abs() <= 1e-3 + 1e-6, "replaced data served");
+
+        // delete → 200, then 404 both for reads and a second delete
+        let resp =
+            dispatch(&reg, &stats, &method_req("DELETE", "/v1/artifacts/wave"));
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("deleted").unwrap().as_bool(), Some(true));
+        assert_eq!(get(&reg, "/v1/artifacts/wave").status, 404);
+        assert_eq!(
+            dispatch(&reg, &stats, &method_req("DELETE", "/v1/artifacts/wave"))
+                .status,
+            404
+        );
+
+        // rescan of the now-empty dir reports a clean zero delta
+        let resp =
+            dispatch(&reg, &stats, &method_req("POST", "/v1/admin/rescan"));
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("added").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("dropped").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("kept").unwrap().as_usize(), Some(0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ingest_rejects_malformed_bodies_and_ids() {
+        let (dir, reg) = writable_registry("badput");
+        let stats = ServerStats::new();
+        let data = le_bytes(&wave_values(0.0));
+        let cases: Vec<(&str, Vec<u8>)> = vec![
+            ("truncated prefix", vec![1, 2]),
+            ("json_len overrun", {
+                let mut b = 999u32.to_le_bytes().to_vec();
+                b.extend_from_slice(b"{}");
+                b
+            }),
+            ("bad json", framed("{not json", &data)),
+            ("non-object params", framed("[1,2]", &data)),
+            ("unknown key", framed("{\"dims\":[8,64],\"nope\":1}", &data)),
+            ("missing fields", framed("{\"dims\":[8,64]}", &data)),
+            (
+                "zero dim",
+                framed("{\"dims\":[0,64],\"fields\":[\"rho\"]}", &data),
+            ),
+            (
+                "duplicate field",
+                framed("{\"dims\":[8,64],\"fields\":[\"rho\",\"rho\"]}", &data),
+            ),
+            ("short data", framed(WAVE_PARAMS, &data[..100])),
+            (
+                "bad bound mode",
+                framed(
+                    "{\"dims\":[8,64],\"fields\":[\"rho\"],\
+                     \"bound\":{\"mode\":\"nope\",\"value\":0.1}}",
+                    &data,
+                ),
+            ),
+            (
+                "zero bound",
+                framed(
+                    "{\"dims\":[8,64],\"fields\":[\"rho\"],\
+                     \"bound\":{\"mode\":\"abs\",\"value\":0}}",
+                    &data,
+                ),
+            ),
+            (
+                "unknown pipeline",
+                framed(
+                    "{\"dims\":[8,64],\"fields\":[\"rho\"],\
+                     \"pipeline\":\"zzz\"}",
+                    &data,
+                ),
+            ),
+        ];
+        for (what, body) in cases {
+            let resp = dispatch(&reg, &stats, &put_req("w", body));
+            assert_eq!(resp.status, 400, "{what}");
+        }
+        // ids that are not filesystem-safe stems are refused up front
+        let long_id = "x".repeat(65);
+        for bad_id in [".", "..", "a b", "a\u{e9}b", long_id.as_str()] {
+            let resp = dispatch(
+                &reg,
+                &stats,
+                &put_req(bad_id, framed(WAVE_PARAMS, &data)),
+            );
+            assert_eq!(resp.status, 400, "id {bad_id:?}");
+        }
+        // nothing was published and nothing leaked onto disk
+        assert_eq!(reg.generation(), 0);
+        assert!(reg.snapshot().artifacts().is_empty());
+        let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert!(leftovers.is_empty(), "no debris: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn mutations_on_read_only_registry_are_503() {
+        let (reg, _) = demo_store();
+        let stats = ServerStats::new();
+        let put = put_req(
+            "demo",
+            framed(WAVE_PARAMS, &le_bytes(&wave_values(0.0))),
+        );
+        assert_eq!(dispatch(&reg, &stats, &put).status, 503);
+        assert_eq!(
+            dispatch(&reg, &stats, &method_req("DELETE", "/v1/artifacts/demo"))
+                .status,
+            503
+        );
+        assert_eq!(
+            dispatch(&reg, &stats, &method_req("POST", "/v1/admin/rescan"))
+                .status,
+            503
+        );
+        // the read path is untouched
+        assert_eq!(get(&reg, "/v1/artifacts/demo").status, 200);
+    }
+
+    #[test]
+    fn busy_ingest_answers_429_with_retry_after() {
+        let (dir, reg) = writable_registry("busy");
+        let reg = reg.with_max_inflight_ingests(1);
+        let stats = ServerStats::new();
+        let body = framed(WAVE_PARAMS, &le_bytes(&wave_values(0.0)));
+        let permit = reg.try_begin_ingest().unwrap();
+        let resp = dispatch(&reg, &stats, &put_req("wave", body.clone()));
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("Retry-After"), Some("1"));
+        drop(permit);
+        let resp = dispatch(&reg, &stats, &put_req("wave", body));
+        assert_eq!(resp.status, 201, "slot freed by the RAII permit");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn write_route_method_guards() {
+        let (reg, _) = demo_store();
+        let stats = ServerStats::new();
+        let resp =
+            dispatch(&reg, &stats, &method_req("PATCH", "/v1/artifacts/demo"));
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("Allow"), Some("GET, HEAD, PUT, DELETE"));
+        let resp =
+            dispatch(&reg, &stats, &method_req("GET", "/v1/admin/rescan"));
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.header("Allow"), Some("POST"));
     }
 }

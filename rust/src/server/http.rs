@@ -3,12 +3,15 @@
 //! writes status line, headers, `Content-Length`, and body.
 //!
 //! Scope is deliberately narrow — exactly what the artifact-serving
-//! endpoints need: `GET`/`HEAD` only, no request bodies, no chunked
-//! transfer, percent-decoding for paths and query strings, keep-alive by
+//! endpoints need: `GET`/`HEAD` reads plus `PUT`/`DELETE`/`POST` on the
+//! write path, bodies framed by `Content-Length` only (no chunked
+//! transfer), percent-decoding for paths and query strings, keep-alive by
 //! default with `Connection: close` honored. Limits (request-line and
-//! header sizes, header count) are enforced before any allocation is
-//! sized from untrusted input, mirroring how the container index parser
-//! treats its bytes.
+//! header sizes, header count, body size) are enforced before any
+//! allocation is sized from untrusted input, mirroring how the container
+//! index parser treats its bytes. [`read_request_limited`] classifies
+//! read failures (too large / timed out / malformed / peer vanished) so
+//! the connection loop can answer 413/408/400 or close quietly.
 
 use crate::error::{Result, SzError};
 use std::io::{BufRead, Read, Write};
@@ -17,9 +20,24 @@ use std::io::{BufRead, Read, Write};
 const MAX_LINE: usize = 8192;
 /// Maximum number of headers accepted.
 const MAX_HEADERS: usize = 64;
-/// Largest request body we silently drain (requests with bodies are not
-/// part of the API; anything larger is rejected outright).
+/// Default body cap for callers that don't configure one (read-only
+/// endpoints: small strays are drained to keep the connection framed,
+/// anything larger is rejected outright).
 const MAX_DRAIN_BODY: usize = 1 << 20;
+
+/// Why a limits-aware request read failed — the connection loop maps
+/// these onto `413` / `408` / `400` responses or a quiet close.
+#[derive(Debug)]
+pub enum ReadError {
+    /// The declared body exceeds the configured cap → `413`.
+    TooLarge(String),
+    /// The socket timed out after the request line had started → `408`.
+    Timeout,
+    /// Syntactically invalid request → `400`.
+    Malformed(String),
+    /// The peer vanished mid-request — close without a response.
+    Disconnect,
+}
 
 /// One parsed HTTP request.
 #[derive(Debug, Clone, Default)]
@@ -38,6 +56,9 @@ pub struct Request {
     /// True when the request (or its HTTP version) asks to close the
     /// connection after the response.
     pub close: bool,
+    /// Request body (`Content-Length`-framed; empty for body-less
+    /// requests).
+    pub body: Vec<u8>,
 }
 
 impl Request {
@@ -91,8 +112,52 @@ fn read_line_capped<R: BufRead>(r: &mut R, cap: usize) -> std::io::Result<Option
 /// Read one request from `r`. `Ok(None)` means the connection ended
 /// cleanly (EOF before a request line, or an idle-timeout/reset while
 /// waiting for one); errors mean a malformed request the caller should
-/// answer with 400 and close on.
+/// answer with 400 and close on. Compatibility wrapper over
+/// [`read_request_limited`] with the default body cap.
 pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>> {
+    match read_request_limited(r, MAX_DRAIN_BODY) {
+        Ok(v) => Ok(v),
+        Err(ReadError::TooLarge(m)) | Err(ReadError::Malformed(m)) => {
+            Err(SzError::config(m))
+        }
+        Err(ReadError::Timeout) => Err(SzError::config("timed out mid-request")),
+        Err(ReadError::Disconnect) => {
+            Err(SzError::corrupt("connection closed mid-request"))
+        }
+    }
+}
+
+/// True for I/O error kinds meaning the socket timed out under a
+/// configured read timeout.
+fn is_timeout(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// True for I/O error kinds meaning the peer went away.
+fn is_disconnect(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::UnexpectedEof
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::BrokenPipe
+    )
+}
+
+/// Read one request from `r`, capturing a `Content-Length`-framed body of
+/// at most `max_body` bytes into [`Request::body`]. `Ok(None)` means the
+/// connection ended cleanly *before a request line* (EOF, idle timeout,
+/// reset — the keep-alive close path); every later failure is classified
+/// as a [`ReadError`] so the server can answer `413` (body over the cap),
+/// `408` (timed out mid-request), `400` (malformed), or close quietly on
+/// a mid-request disconnect.
+pub fn read_request_limited<R: BufRead>(
+    r: &mut R,
+    max_body: usize,
+) -> std::result::Result<Option<Request>, ReadError> {
     let mut line = String::new();
     // tolerate stray blank lines between pipelined requests (RFC 9112 §2.2)
     for _ in 0..4 {
@@ -100,21 +165,12 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>> {
             Ok(None) => return Ok(None),
             Ok(Some(l)) => line = l,
             Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
-                return Err(SzError::config("request line too long"))
+                return Err(ReadError::Malformed("request line too long".to_string()))
             }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                        | std::io::ErrorKind::UnexpectedEof
-                        | std::io::ErrorKind::ConnectionReset
-                        | std::io::ErrorKind::ConnectionAborted
-                ) =>
-            {
+            Err(e) if is_timeout(e.kind()) || is_disconnect(e.kind()) => {
                 return Ok(None)
             }
-            Err(e) => return Err(e.into()),
+            Err(e) => return Err(ReadError::Malformed(e.to_string())),
         }
         if !line.trim_end_matches(['\r', '\n']).is_empty() {
             break;
@@ -126,64 +182,77 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>> {
         match (parts.next(), parts.next(), parts.next(), parts.next()) {
             (Some(m), Some(t), Some(v), None) => (m, t, v),
             _ => {
-                return Err(SzError::config(format!(
+                return Err(ReadError::Malformed(format!(
                     "malformed request line '{request_line}'"
                 )))
             }
         };
     if !target.starts_with('/') {
-        return Err(SzError::config(format!("request target '{target}' not a path")));
+        return Err(ReadError::Malformed(format!(
+            "request target '{target}' not a path"
+        )));
     }
     let http10 = match version {
         "HTTP/1.1" => false,
         "HTTP/1.0" => true,
         other => {
-            return Err(SzError::config(format!("unsupported version '{other}'")))
+            return Err(ReadError::Malformed(format!(
+                "unsupported version '{other}'"
+            )))
         }
     };
     let mut headers: Vec<(String, String)> = Vec::new();
     loop {
         let h = match read_line_capped(r, MAX_LINE) {
-            Ok(None) => {
-                return Err(SzError::corrupt("connection closed mid-headers"))
-            }
+            Ok(None) => return Err(ReadError::Disconnect),
             Ok(Some(l)) => l,
             Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
-                return Err(SzError::config("header line too long"))
+                return Err(ReadError::Malformed("header line too long".to_string()))
             }
-            Err(e) => return Err(e.into()),
+            Err(e) if is_timeout(e.kind()) => return Err(ReadError::Timeout),
+            Err(e) if is_disconnect(e.kind()) => return Err(ReadError::Disconnect),
+            Err(e) => return Err(ReadError::Malformed(e.to_string())),
         };
         let h = h.trim_end_matches(['\r', '\n']);
         if h.is_empty() {
             break;
         }
         if headers.len() >= MAX_HEADERS {
-            return Err(SzError::config("too many headers"));
+            return Err(ReadError::Malformed("too many headers".to_string()));
         }
-        let (name, value) = h
-            .split_once(':')
-            .ok_or_else(|| SzError::config(format!("malformed header '{h}'")))?;
+        let (name, value) = h.split_once(':').ok_or_else(|| {
+            ReadError::Malformed(format!("malformed header '{h}'"))
+        })?;
         headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
     }
-    // the API has no body-carrying endpoints; drain small strays so a
-    // keep-alive connection stays framed, reject anything big
+    // bodies are Content-Length-framed only; the cap is enforced before
+    // the buffer is sized from the untrusted declared length
     let content_length: usize = match headers
         .iter()
         .find(|(k, _)| k == "content-length")
     {
-        Some((_, v)) => v
-            .parse()
-            .map_err(|_| SzError::config(format!("bad content-length '{v}'")))?,
+        Some((_, v)) => v.parse().map_err(|_| {
+            ReadError::Malformed(format!("bad content-length '{v}'"))
+        })?,
         None => 0,
     };
-    if content_length > MAX_DRAIN_BODY {
-        return Err(SzError::config(format!(
-            "request body of {content_length} bytes not accepted"
+    if content_length > max_body {
+        return Err(ReadError::TooLarge(format!(
+            "request body of {content_length} bytes exceeds the {max_body}-byte limit"
         )));
     }
+    let mut body = Vec::new();
     if content_length > 0 {
-        let mut sink = vec![0u8; content_length];
-        std::io::Read::read_exact(r, &mut sink)?;
+        body = vec![0u8; content_length];
+        if let Err(e) = std::io::Read::read_exact(r, &mut body) {
+            if is_timeout(e.kind()) {
+                return Err(ReadError::Timeout);
+            }
+            if is_disconnect(e.kind()) {
+                return Err(ReadError::Disconnect);
+            }
+            return Err(ReadError::Malformed(e.to_string()));
+        }
     }
     let connection = headers
         .iter()
@@ -201,6 +270,7 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>> {
         query,
         headers,
         close,
+        body,
     }))
 }
 
@@ -376,16 +446,21 @@ impl Response {
 pub fn status_text(status: u16) -> &'static str {
     match status {
         200 => "OK",
+        201 => "Created",
         204 => "No Content",
         206 => "Partial Content",
         304 => "Not Modified",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
         413 => "Payload Too Large",
         416 => "Range Not Satisfiable",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         501 => "Not Implemented",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
 }
@@ -518,6 +593,41 @@ mod tests {
         assert!(text.contains("Content-Length: 11\r\n"));
         assert!(text.contains("Connection: close\r\n"));
         assert!(text.ends_with("\r\n\r\n"));
+    }
+
+    #[test]
+    fn bodies_are_captured_classified_and_capped() {
+        // a Content-Length-framed body lands in req.body
+        let raw = b"PUT /v1/artifacts/x HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        let req = read_request_limited(&mut Cursor::new(raw.to_vec()), 64)
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "PUT");
+        assert_eq!(req.body, b"hello");
+        // a declared length over the cap classifies TooLarge before any
+        // body byte is read or buffered
+        let raw = b"PUT /x HTTP/1.1\r\nContent-Length: 99\r\n\r\n";
+        match read_request_limited(&mut Cursor::new(raw.to_vec()), 64) {
+            Err(ReadError::TooLarge(_)) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // a body truncated by a vanished peer classifies Disconnect (the
+        // crash-safety path: no response, no publish)
+        let raw = b"PUT /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        match read_request_limited(&mut Cursor::new(raw.to_vec()), 64) {
+            Err(ReadError::Disconnect) => {}
+            other => panic!("expected Disconnect, got {other:?}"),
+        }
+        // the write-path status vocabulary has reason phrases
+        for (code, text) in [
+            (201, "Created"),
+            (408, "Request Timeout"),
+            (409, "Conflict"),
+            (429, "Too Many Requests"),
+            (503, "Service Unavailable"),
+        ] {
+            assert_eq!(status_text(code), text);
+        }
     }
 
     #[test]

@@ -21,12 +21,30 @@
 //! | `GET /v1/artifacts/{id}` | index/metadata JSON (fields, dims, chunk map) |
 //! | `GET /v1/artifacts/{id}/fields/{name}?rows=A..B&snapshot=K&format=f32\|raw\|json` | ROI extraction — decodes only overlapping chunks of snapshot K (default 0) |
 //! | `GET /v1/artifacts/{id}/raw?chunk=N` | compressed chunk passthrough for client-side decode |
+//! | `PUT /v1/artifacts/{id}` | ingest: compress raw f32 fields and publish atomically (see below) |
+//! | `DELETE /v1/artifacts/{id}` | unpublish an artifact and delete its file |
+//! | `POST /v1/admin/rescan` | pick up `*.sz3c` files added to the directory out of band |
 //! | `GET /healthz` | liveness |
 //! | `GET /statsz` | [`crate::reader::ReadStats`] per artifact + per-endpoint latency |
 //! | `GET /metricsz` | Prometheus text exposition of the process-wide [`crate::obs`] registry |
 //!
 //! The full API contract (query params, status codes, error body, cache
 //! semantics, `curl` examples) is specified in `docs/SERVE.md`.
+//!
+//! # Write path
+//!
+//! Mutations go through a [`Registry`] — an epoch-pointer wrapper around
+//! an immutable [`ArtifactStore`]: readers snapshot an `Arc` per request
+//! and never block, writers build a successor store (sharing every
+//! unchanged artifact) and swap the pointer under a lock. `PUT` bodies
+//! are compressed through the coordinator, staged to a temp file,
+//! fsynced, verified, and only then renamed to `{id}.sz3c` and published
+//! — a crash at any earlier point leaves no visible debris. Back-pressure
+//! is explicit: a bounded ingest-slot pool answers 429 + `Retry-After`
+//! when saturated, an accept-side connection cap answers 503, and
+//! [`ServeOptions::max_body`] bounds request bodies with 413. Servers
+//! started via [`serve`]/[`serve_with`] wrap their store in a read-only
+//! registry and answer 503 to every mutation.
 //!
 //! # Observability
 //!
@@ -54,10 +72,12 @@ pub mod client;
 pub mod handlers;
 pub mod http;
 pub mod pool;
+pub mod registry;
 pub mod stats;
 
 pub use client::{HttpClient, HttpResponse};
 pub use http::{Request, Response};
+pub use registry::{IngestPermit, Registry};
 pub use stats::{LatencySummary, ServerStats};
 
 use crate::error::{Result, SzError};
@@ -66,7 +86,7 @@ use crate::reader::{ChunkCache, ContainerReader};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -86,18 +106,34 @@ pub enum LogFormat {
     Json,
 }
 
-/// How [`serve_with`] runs the connection loop.
+/// How [`serve_with`]/[`serve_registry`] run the connection loop.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeOptions {
     /// HTTP connection workers.
     pub threads: usize,
     /// Access-log format (stderr).
     pub log: LogFormat,
+    /// Largest accepted request body in bytes. A declared `Content-Length`
+    /// beyond this is refused with 413 before a byte of body is read.
+    pub max_body: usize,
+    /// Simultaneously served (or queued) connections. Accepts beyond this
+    /// get an immediate `503` + `Retry-After: 1` and are closed, so load
+    /// sheds at the edge instead of queueing unboundedly.
+    pub max_conns: usize,
+    /// Per-connection socket read timeout: an idle keep-alive closes
+    /// quietly, a peer that stalls mid-request gets `408`.
+    pub read_timeout: Duration,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { threads: crate::util::default_workers(), log: LogFormat::None }
+        ServeOptions {
+            threads: crate::util::default_workers(),
+            log: LogFormat::None,
+            max_body: 256 << 20,
+            max_conns: 256,
+            read_timeout: IDLE_TIMEOUT,
+        }
     }
 }
 
@@ -162,11 +198,20 @@ pub struct FieldInfo {
     pub chunks: usize,
 }
 
+/// Monotonic sequence making each registration's cache scope unique.
+static SCOPE_SEQ: AtomicU64 = AtomicU64::new(1);
+
 /// One registered artifact: id (file stem), an open reader, and metadata
 /// captured at registration.
 pub struct Artifact {
     /// Artifact id — the file stem, as it appears in URLs.
     pub id: String,
+    /// Shared-cache scope for this registration: `{id}/{seq}` with a
+    /// process-unique sequence number (ids cannot contain `/`, so scopes
+    /// never collide with other ids). A replacement registration of the
+    /// same id therefore never shares cache keys with its predecessor —
+    /// the registry evicts a retired scope purely to reclaim budget.
+    pub scope: String,
     /// The open indexed-seek reader (shared by all request threads).
     pub reader: ContainerReader<'static>,
     /// On-disk artifact size in bytes.
@@ -180,6 +225,68 @@ pub struct Artifact {
 }
 
 impl Artifact {
+    /// Turn an open reader into a servable artifact: validate that the
+    /// series is rectangular, attach the shared cache under a fresh
+    /// unique scope, capture per-field metadata, and snapshot the stats
+    /// baseline. Used by [`ArtifactStore::register`] at startup and by
+    /// the [`Registry`] when publishing live.
+    pub(crate) fn build(
+        id: String,
+        reader: ContainerReader<'static>,
+        file_bytes: u64,
+        cache: &Arc<ChunkCache>,
+    ) -> Result<Artifact> {
+        // the serve path registers snapshot-0 field metadata once and
+        // validates requests against it, so every snapshot must present
+        // the same fields with the same dims (the series packer always
+        // produces this; a hand-crafted ragged artifact is refused here
+        // instead of surfacing as bogus 416/500s at request time)
+        for snapshot in 1..reader.snapshot_count() {
+            if reader.field_names_at(snapshot) != reader.field_names() {
+                return Err(SzError::config(format!(
+                    "artifact '{id}': snapshot {snapshot} holds fields {:?}, \
+                     snapshot 0 holds {:?} — ragged series are not servable",
+                    reader.field_names_at(snapshot),
+                    reader.field_names()
+                )));
+            }
+            for name in reader.field_names() {
+                if reader.field_dims_at(snapshot, name)? != reader.field_dims(name)? {
+                    return Err(SzError::config(format!(
+                        "artifact '{id}': field '{name}' changes dims at \
+                         snapshot {snapshot} — ragged series are not servable"
+                    )));
+                }
+            }
+        }
+        let scope =
+            format!("{id}/{}", SCOPE_SEQ.fetch_add(1, Ordering::Relaxed));
+        let reader = reader.with_shared_cache(Arc::clone(cache), &scope);
+        let mut fields = Vec::new();
+        for name in reader.field_names().into_iter().map(str::to_string) {
+            let dims = reader.field_dims(&name)?.to_vec();
+            let chunks = reader.field_chunks(&name)?;
+            // dtype lives only in the inner stream headers: peek the
+            // field's first snapshot-0 chunk once at registration, never
+            // per request (snapshot 0 is never delta-encoded)
+            let first = reader
+                .index()
+                .entries
+                .iter()
+                .position(|e| e.field == name && e.chunk_index == 0 && e.snapshot == 0)
+                .ok_or_else(|| {
+                    SzError::corrupt(format!("field '{name}' has no chunk 0"))
+                })?;
+            let head = reader.chunk_payload(first)?;
+            let dtype = pipeline::peek_header(&head)?.dtype;
+            fields.push(FieldInfo { name, dims, dtype, chunks });
+        }
+        // snapshot after the verify sweep and dtype peeks so /statsz can
+        // report request-driven counters only
+        let baseline = reader.stats();
+        Ok(Artifact { id, scope, reader, file_bytes, fields, baseline })
+    }
+
     /// Reader counters attributable to requests (registration-time
     /// verification and header peeks subtracted out).
     pub fn request_stats(&self) -> crate::reader::ReadStats {
@@ -197,9 +304,11 @@ impl Artifact {
 }
 
 /// Every artifact the server holds open, plus the shared chunk cache they
-/// all charge against.
+/// all charge against. Artifacts are individually `Arc`'d so the
+/// [`Registry`] can build a successor store that shares every unchanged
+/// artifact instead of reopening them.
 pub struct ArtifactStore {
-    artifacts: Vec<Artifact>,
+    artifacts: Vec<Arc<Artifact>>,
     cache: Arc<ChunkCache>,
 }
 
@@ -255,7 +364,7 @@ impl ArtifactStore {
     }
 
     /// Register an already-open reader under `id`, attaching it to the
-    /// shared cache (scoped by id). Duplicate ids are rejected.
+    /// shared cache under a fresh scope. Duplicate ids are rejected.
     pub fn register(
         &mut self,
         id: String,
@@ -265,64 +374,19 @@ impl ArtifactStore {
         if self.get(&id).is_some() {
             return Err(SzError::config(format!("duplicate artifact id '{id}'")));
         }
-        // the serve path registers snapshot-0 field metadata once and
-        // validates requests against it, so every snapshot must present
-        // the same fields with the same dims (the series packer always
-        // produces this; a hand-crafted ragged artifact is refused here
-        // instead of surfacing as bogus 416/500s at request time)
-        for snapshot in 1..reader.snapshot_count() {
-            if reader.field_names_at(snapshot) != reader.field_names() {
-                return Err(SzError::config(format!(
-                    "artifact '{id}': snapshot {snapshot} holds fields {:?}, \
-                     snapshot 0 holds {:?} — ragged series are not servable",
-                    reader.field_names_at(snapshot),
-                    reader.field_names()
-                )));
-            }
-            for name in reader.field_names() {
-                if reader.field_dims_at(snapshot, name)? != reader.field_dims(name)? {
-                    return Err(SzError::config(format!(
-                        "artifact '{id}': field '{name}' changes dims at \
-                         snapshot {snapshot} — ragged series are not servable"
-                    )));
-                }
-            }
-        }
-        let reader = reader.with_shared_cache(Arc::clone(&self.cache), &id);
-        let mut fields = Vec::new();
-        for name in reader.field_names().into_iter().map(str::to_string) {
-            let dims = reader.field_dims(&name)?.to_vec();
-            let chunks = reader.field_chunks(&name)?;
-            // dtype lives only in the inner stream headers: peek the
-            // field's first snapshot-0 chunk once at registration, never
-            // per request (snapshot 0 is never delta-encoded)
-            let first = reader
-                .index()
-                .entries
-                .iter()
-                .position(|e| e.field == name && e.chunk_index == 0 && e.snapshot == 0)
-                .ok_or_else(|| {
-                    SzError::corrupt(format!("field '{name}' has no chunk 0"))
-                })?;
-            let head = reader.chunk_payload(first)?;
-            let dtype = pipeline::peek_header(&head)?.dtype;
-            fields.push(FieldInfo { name, dims, dtype, chunks });
-        }
-        // snapshot after the verify sweep and dtype peeks so /statsz can
-        // report request-driven counters only
-        let baseline = reader.stats();
-        self.artifacts.push(Artifact { id, reader, file_bytes, fields, baseline });
+        let artifact = Artifact::build(id, reader, file_bytes, &self.cache)?;
+        self.artifacts.push(Arc::new(artifact));
         self.artifacts.sort_by(|a, b| a.id.cmp(&b.id));
         Ok(())
     }
 
     /// Look up an artifact by id.
     pub fn get(&self, id: &str) -> Option<&Artifact> {
-        self.artifacts.iter().find(|a| a.id == id)
+        self.artifacts.iter().find(|a| a.id == id).map(|a| a.as_ref())
     }
 
     /// All artifacts, sorted by id.
-    pub fn artifacts(&self) -> &[Artifact] {
+    pub fn artifacts(&self) -> &[Arc<Artifact>] {
         &self.artifacts
     }
 
@@ -330,13 +394,56 @@ impl ArtifactStore {
     pub fn cache(&self) -> &Arc<ChunkCache> {
         &self.cache
     }
+
+    /// A successor store sharing this store's cache and every unchanged
+    /// artifact, with `artifact` added (replacing any same-id resident).
+    /// Returns the displaced artifact, if any, so the caller can retire
+    /// its cache scope.
+    pub(crate) fn with_artifact(
+        &self,
+        artifact: Arc<Artifact>,
+    ) -> (ArtifactStore, Option<Arc<Artifact>>) {
+        let mut artifacts: Vec<Arc<Artifact>> =
+            Vec::with_capacity(self.artifacts.len() + 1);
+        let mut displaced = None;
+        for a in &self.artifacts {
+            if a.id == artifact.id {
+                displaced = Some(Arc::clone(a));
+            } else {
+                artifacts.push(Arc::clone(a));
+            }
+        }
+        artifacts.push(artifact);
+        artifacts.sort_by(|a, b| a.id.cmp(&b.id));
+        (ArtifactStore { artifacts, cache: Arc::clone(&self.cache) }, displaced)
+    }
+
+    /// A successor store without the artifact named `id` (shares the
+    /// cache and every surviving artifact). Returns the removed artifact,
+    /// or `None` if `id` was not resident.
+    pub(crate) fn without_artifact(
+        &self,
+        id: &str,
+    ) -> (ArtifactStore, Option<Arc<Artifact>>) {
+        let mut artifacts: Vec<Arc<Artifact>> =
+            Vec::with_capacity(self.artifacts.len());
+        let mut removed = None;
+        for a in &self.artifacts {
+            if a.id == id {
+                removed = Some(Arc::clone(a));
+            } else {
+                artifacts.push(Arc::clone(a));
+            }
+        }
+        (ArtifactStore { artifacts, cache: Arc::clone(&self.cache) }, removed)
+    }
 }
 
-/// Handle to a running server: address, live stats/store access, and
+/// Handle to a running server: address, live stats/registry access, and
 /// deterministic shutdown.
 pub struct ServerHandle {
     addr: SocketAddr,
-    store: Arc<ArtifactStore>,
+    registry: Arc<Registry>,
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
     accept: Option<std::thread::JoinHandle<()>>,
@@ -348,9 +455,17 @@ impl ServerHandle {
         self.addr
     }
 
-    /// The artifact store the server answers from.
-    pub fn store(&self) -> &ArtifactStore {
-        &self.store
+    /// Point-in-time snapshot of the artifact store the server answers
+    /// from (the current registry epoch; a concurrent PUT/DELETE makes
+    /// the snapshot stale, not wrong).
+    pub fn store(&self) -> Arc<ArtifactStore> {
+        self.registry.snapshot()
+    }
+
+    /// The registry behind the server — mutation entry points and the
+    /// ingest-permit pool live here.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     /// Live latency/endpoint stats.
@@ -393,55 +508,83 @@ impl Drop for ServerHandle {
 }
 
 /// Bind `addr` (e.g. `127.0.0.1:8080`, port 0 for ephemeral) and serve
-/// `store` on `threads` connection workers until the returned handle is
-/// shut down. Access logging is off; use [`serve_with`] to enable it.
+/// `store` **read-only** on `threads` connection workers until the
+/// returned handle is shut down. Access logging is off; use
+/// [`serve_with`] to enable it, [`serve_registry`] for the write path.
 pub fn serve(store: ArtifactStore, addr: &str, threads: usize) -> Result<ServerHandle> {
-    serve_with(store, addr, ServeOptions { threads, log: LogFormat::None })
+    serve_with(store, addr, ServeOptions { threads, ..ServeOptions::default() })
 }
 
-/// [`serve`] with full [`ServeOptions`] control (thread count and
-/// access-log format).
+/// [`serve`] with full [`ServeOptions`] control. The store is wrapped in
+/// a read-only [`Registry`]: `PUT`/`DELETE`/rescan answer 503.
 pub fn serve_with(
     store: ArtifactStore,
+    addr: &str,
+    opts: ServeOptions,
+) -> Result<ServerHandle> {
+    serve_registry(Arc::new(Registry::read_only(Arc::new(store))), addr, opts)
+}
+
+/// Serve a [`Registry`] — the full read+write API when the registry is
+/// writable. The caller keeps its own `Arc` to drive mutations or pin
+/// ingest permits out-of-band (tests use that for deterministic 429s).
+pub fn serve_registry(
+    registry: Arc<Registry>,
     addr: &str,
     opts: ServeOptions,
 ) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr)
         .map_err(|e| SzError::config(format!("binding {addr}: {e}")))?;
     let local = listener.local_addr()?;
-    let store = Arc::new(store);
     let stats = Arc::new(ServerStats::new());
     let stop = Arc::new(AtomicBool::new(false));
-    let log = opts.log;
     let threads = opts.threads;
+    let max_conns = opts.max_conns.max(1);
     let accept = {
-        let store = Arc::clone(&store);
+        let registry = Arc::clone(&registry);
         let stats = Arc::clone(&stats);
         let stop = Arc::clone(&stop);
         std::thread::Builder::new()
             .name("sz3-http-accept".to_string())
             .spawn(move || {
                 let pool = pool::ThreadPool::new(threads);
+                // connections handed to the pool but not yet finished;
+                // bounds the accept queue so overload sheds as 503 at
+                // the edge instead of growing an invisible backlog
+                let live = Arc::new(AtomicUsize::new(0));
                 for conn in listener.incoming() {
                     if stop.load(Ordering::SeqCst) {
                         break;
                     }
-                    let stream = match conn {
+                    let mut stream = match conn {
                         Ok(s) => s,
                         Err(_) => continue,
                     };
-                    let store = Arc::clone(&store);
+                    if live.load(Ordering::SeqCst) >= max_conns {
+                        let resp = Response::error(
+                            503,
+                            "connection limit reached; retry shortly",
+                        )
+                        .with_header("Retry-After", "1");
+                        // audit:allow(swallow, reason = "best-effort shed response; the connection is being dropped either way")
+                        let _ = resp.write_to(&mut stream, true, false);
+                        continue;
+                    }
+                    live.fetch_add(1, Ordering::SeqCst);
+                    let registry = Arc::clone(&registry);
                     let stats = Arc::clone(&stats);
                     let stop = Arc::clone(&stop);
+                    let live = Arc::clone(&live);
                     pool.execute(move || {
-                        handle_connection(stream, &store, &stats, &stop, log)
+                        handle_connection(stream, &registry, &stats, &stop, opts);
+                        live.fetch_sub(1, Ordering::SeqCst);
                     });
                 }
                 // pool drops here: queued connections drain, workers join
             })
             .map_err(|e| SzError::config(format!("spawning accept thread: {e}")))?
     };
-    Ok(ServerHandle { addr: local, store, stats, stop, accept: Some(accept) })
+    Ok(ServerHandle { addr: local, registry, stats, stop, accept: Some(accept) })
 }
 
 /// Emit one access-log line for a completed request.
@@ -476,41 +619,60 @@ fn access_log(
 }
 
 /// Serve one connection: keep-alive request loop with an idle timeout,
-/// closing on parse errors (after a 400) or `Connection: close`. Every
-/// response is stamped with an `X-Request-Id` before it leaves.
+/// closing on classified read errors (413 for an oversized body, 408 for
+/// a mid-request stall, 400 for garbage, quietly on disconnect) or
+/// `Connection: close`. Every response is stamped with an `X-Request-Id`
+/// before it leaves.
 fn handle_connection(
     stream: TcpStream,
-    store: &ArtifactStore,
+    registry: &Registry,
     stats: &ServerStats,
     stop: &AtomicBool,
-    log: LogFormat,
+    opts: ServeOptions,
 ) {
+    let timeout =
+        if opts.read_timeout.is_zero() { IDLE_TIMEOUT } else { opts.read_timeout };
     // audit:allow(swallow, reason = "a socket without timeouts still serves; the idle cap is best-effort")
-    let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    let _ = stream.set_read_timeout(Some(timeout));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
+    let log = opts.log;
     let mut reader = BufReader::new(stream);
     loop {
         if stop.load(Ordering::SeqCst) {
             break;
         }
-        let req = match http::read_request(&mut reader) {
+        let req = match http::read_request_limited(&mut reader, opts.max_body) {
             Ok(Some(r)) => r,
-            Ok(None) => break, // clean EOF or idle timeout
-            Err(e) => {
-                let resp = Response::error(400, &e.to_string());
+            Ok(None) => break, // clean EOF or idle timeout between requests
+            Err(http::ReadError::TooLarge(msg)) => {
+                let resp = Response::error(413, &msg);
+                // audit:allow(swallow, reason = "best-effort refusal to an over-limit peer; the connection closes either way")
+                let _ = resp.write_to(&mut writer, true, false);
+                break;
+            }
+            Err(http::ReadError::Timeout) => {
+                let resp =
+                    Response::error(408, "timed out reading the request");
+                // audit:allow(swallow, reason = "best-effort 408 to a stalled peer; the connection closes either way")
+                let _ = resp.write_to(&mut writer, true, false);
+                break;
+            }
+            Err(http::ReadError::Malformed(msg)) => {
+                let resp = Response::error(400, &msg);
                 // audit:allow(swallow, reason = "best-effort 400 to a peer that already sent garbage; the connection closes either way")
                 let _ = resp.write_to(&mut writer, true, false);
                 break;
             }
+            Err(http::ReadError::Disconnect) => break,
         };
         let close = req.close;
         let head_only = req.method == "HEAD";
         let rid = request_id(&req);
         let t0 = Instant::now();
-        let (label, resp) = handlers::dispatch_labeled(store, stats, &req);
+        let (label, resp) = handlers::dispatch_labeled(registry, stats, &req);
         let resp = resp.with_header("X-Request-Id", rid.clone());
         let write_ok = resp.write_to(&mut writer, close, head_only).is_ok();
         access_log(

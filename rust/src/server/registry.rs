@@ -1,0 +1,574 @@
+//! Epoch-pointer artifact registry — the serve path's write side.
+//!
+//! A [`Registry`] wraps an immutable [`ArtifactStore`] behind a swapped
+//! `Arc` pointer (the hand-rolled equivalent of `ArcSwap`, which is
+//! unavailable offline): readers call [`Registry::snapshot`] once per
+//! request and keep decoding from that store no matter what writers do —
+//! zero stall, zero torn reads. Writers serialize on a dedicated
+//! mutation lock, build a **successor** store that shares every
+//! unchanged artifact `Arc`, and swap the pointer together with a
+//! monotonically increasing generation counter. An in-flight request
+//! started on generation *g* finishes bit-identical to generation *g*
+//! even if ten replaces land meanwhile.
+//!
+//! # Publish protocol (crash-safe)
+//!
+//! 1. write the packed container to `.{id}.ingest-{pid}-{seq}` — a
+//!    non-`.sz3c` name that [`Registry::rescan`] never picks up;
+//! 2. `fsync` the staged file;
+//! 3. open and (optionally) CRC-verify a reader **from the staged
+//!    path** — the file descriptor survives the rename;
+//! 4. `rename` to `{id}.sz3c` (atomic within the directory) and
+//!    best-effort `fsync` the directory;
+//! 5. swap the epoch pointer and bump the generation.
+//!
+//! A crash or error anywhere before step 4 leaves only a staged temp
+//! file, which a drop guard deletes on the error path and which rescan
+//! ignores by construction; the registry generation does not move.
+//!
+//! # Cache hygiene
+//!
+//! Every registration gets a unique cache scope (see
+//! [`Artifact::scope`]), so a replacement can never poison reads with
+//! its predecessor's decoded chunks. Retiring an artifact evicts its
+//! scope from the shared [`crate::reader::ChunkCache`] purely to return
+//! budget to live artifacts.
+
+use super::{Artifact, ArtifactStore, StoreOptions};
+use crate::error::{Result, SzError};
+use crate::reader::ContainerReader;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Monotonic sequence making staged temp-file names unique per process.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// Default cap on concurrent ingests for writable registries.
+const DEFAULT_MAX_INGESTS: usize = 2;
+
+/// Epoch-pointer registry: an immutable [`ArtifactStore`] snapshot
+/// swapped atomically under a generation counter, plus the bounded
+/// ingest-slot pool that back-pressures `PUT` traffic.
+pub struct Registry {
+    /// Serving directory; `None` makes the registry read-only.
+    dir: Option<PathBuf>,
+    /// How artifacts are opened (cache budget, workers, verify).
+    opts: StoreOptions,
+    /// The epoch pointer: current store and its generation, always
+    /// swapped together so `(snapshot, generation)` pairs are coherent.
+    current: Mutex<(Arc<ArtifactStore>, u64)>,
+    /// Serializes entire publish/remove/rescan operations (file I/O
+    /// included). Readers never take it.
+    mutate: Mutex<()>,
+    /// Remaining ingest slots (see [`Registry::try_begin_ingest`]).
+    ingest_slots: AtomicUsize,
+    /// Total ingest slots.
+    max_ingests: usize,
+}
+
+impl Registry {
+    /// Wrap an existing store read-only: [`Registry::snapshot`] serves
+    /// it forever, every mutation returns a config error (the HTTP layer
+    /// maps that to 503). Used by [`super::serve`]/[`super::serve_with`].
+    pub fn read_only(store: Arc<ArtifactStore>) -> Registry {
+        crate::obs::REGISTRY_GENERATION.set(0);
+        crate::obs::REGISTRY_ARTIFACTS.set(store.artifacts().len() as u64);
+        Registry {
+            dir: None,
+            opts: StoreOptions::default(),
+            current: Mutex::new((store, 0)),
+            mutate: Mutex::new(()),
+            ingest_slots: AtomicUsize::new(0),
+            max_ingests: 0,
+        }
+    }
+
+    /// Open every `*.sz3c` under `dir` into a **writable** registry. An
+    /// empty directory is a valid (empty) serving set — unlike
+    /// [`ArtifactStore::open_dir`], a write-path server legitimately
+    /// starts with nothing and fills up over PUTs.
+    pub fn open_dir(dir: impl AsRef<Path>, opts: &StoreOptions) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut store = ArtifactStore::new(opts.cache_bytes);
+        for (id, path) in scan_dir(&dir)? {
+            let (reader, file_bytes) = open_verified(&id, &path, opts)?;
+            store.register(id, reader, file_bytes)?;
+        }
+        crate::obs::REGISTRY_GENERATION.set(0);
+        crate::obs::REGISTRY_ARTIFACTS.set(store.artifacts().len() as u64);
+        Ok(Registry {
+            dir: Some(dir),
+            opts: opts.clone(),
+            current: Mutex::new((Arc::new(store), 0)),
+            mutate: Mutex::new(()),
+            ingest_slots: AtomicUsize::new(DEFAULT_MAX_INGESTS),
+            max_ingests: DEFAULT_MAX_INGESTS,
+        })
+    }
+
+    /// Builder-style cap on concurrent ingests (clamped to ≥ 1; default
+    /// 2). Slots beyond the cap answer 429 + `Retry-After`.
+    pub fn with_max_inflight_ingests(mut self, n: usize) -> Registry {
+        let n = n.max(1);
+        self.max_ingests = n;
+        self.ingest_slots = AtomicUsize::new(n);
+        self
+    }
+
+    /// Whether mutations are accepted.
+    pub fn writable(&self) -> bool {
+        self.dir.is_some()
+    }
+
+    /// The serving directory (writable registries only).
+    pub fn artifact_dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// How this registry opens artifacts (workers, verify, cache).
+    pub fn store_options(&self) -> &StoreOptions {
+        &self.opts
+    }
+
+    /// Total ingest slots (0 on read-only registries).
+    pub fn max_inflight_ingests(&self) -> usize {
+        self.max_ingests
+    }
+
+    /// The current store epoch. Cheap (`Arc` clone under a short lock);
+    /// callers keep reading from the returned store unaffected by any
+    /// concurrent swap.
+    pub fn snapshot(&self) -> Arc<ArtifactStore> {
+        Arc::clone(&self.current_lock().0)
+    }
+
+    /// The current generation — bumped by every successful publish,
+    /// remove, and set-changing rescan.
+    pub fn generation(&self) -> u64 {
+        self.current_lock().1
+    }
+
+    /// `(snapshot, generation)` as one coherent pair.
+    pub fn snapshot_with_generation(&self) -> (Arc<ArtifactStore>, u64) {
+        let cur = self.current_lock();
+        (Arc::clone(&cur.0), cur.1)
+    }
+
+    /// Claim an ingest slot, or `None` when all slots are busy (the
+    /// HTTP layer answers 429 + `Retry-After`). The slot frees when the
+    /// returned permit drops. Tests can hold permits directly to force
+    /// the back-pressure path deterministically.
+    pub fn try_begin_ingest(&self) -> Option<IngestPermit<'_>> {
+        let mut cur = self.ingest_slots.load(Ordering::Relaxed);
+        loop {
+            if cur == 0 {
+                return None;
+            }
+            match self.ingest_slots.compare_exchange(
+                cur,
+                cur - 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(IngestPermit { registry: self }),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Stage `container` durably as `{id}.sz3c` and publish it in one
+    /// epoch swap (see the module doc for the crash-safety protocol).
+    /// Returns `true` when an existing artifact was replaced. In-flight
+    /// readers of a replaced artifact finish on their old snapshot; its
+    /// cache scope is evicted once the swap is visible.
+    pub fn publish(&self, id: &str, container: &[u8]) -> Result<bool> {
+        let _mutate = self.mutate_lock();
+        let Some(dir) = self.dir.as_deref() else {
+            return Err(SzError::config("registry is read-only"));
+        };
+        let staged = dir.join(format!(
+            ".{id}.ingest-{}-{}",
+            std::process::id(),
+            TEMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let guard = TempGuard { path: staged.clone(), armed: true };
+        {
+            let mut f = std::fs::File::create(&staged)?;
+            f.write_all(container)?;
+            f.sync_all()?;
+        }
+        // open + verify from the staged path before anything becomes
+        // visible; the fd survives the rename below
+        let (reader, file_bytes) = open_verified(id, &staged, &self.opts)?;
+        let cache = Arc::clone(self.snapshot().cache());
+        let artifact =
+            Arc::new(Artifact::build(id.to_string(), reader, file_bytes, &cache)?);
+        std::fs::rename(&staged, dir.join(format!("{id}.sz3c")))?;
+        guard.disarm();
+        fsync_dir(dir);
+        let displaced = {
+            let mut cur = self.current_lock();
+            let (next, displaced) = cur.0.with_artifact(artifact);
+            cur.0 = Arc::new(next);
+            cur.1 += 1;
+            crate::obs::REGISTRY_GENERATION.set(cur.1);
+            crate::obs::REGISTRY_ARTIFACTS.set(cur.0.artifacts().len() as u64);
+            displaced
+        };
+        match displaced {
+            Some(old) => {
+                cache.evict_scope(&old.scope);
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Unpublish `id`: delete its file, swap it out of the serving set,
+    /// and evict its cache scope. Returns `false` (generation untouched)
+    /// when `id` is not resident. In-flight readers finish on their
+    /// snapshot — the artifact's reader stays open until the last `Arc`
+    /// drops.
+    pub fn remove(&self, id: &str) -> Result<bool> {
+        let _mutate = self.mutate_lock();
+        let Some(dir) = self.dir.as_deref() else {
+            return Err(SzError::config("registry is read-only"));
+        };
+        if self.snapshot().get(id).is_none() {
+            return Ok(false);
+        }
+        match std::fs::remove_file(dir.join(format!("{id}.sz3c"))) {
+            Ok(()) => {}
+            // already gone out of band: still drop it from the set
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e.into()),
+        }
+        fsync_dir(dir);
+        let removed = {
+            let mut cur = self.current_lock();
+            let (next, removed) = cur.0.without_artifact(id);
+            cur.0 = Arc::new(next);
+            cur.1 += 1;
+            crate::obs::REGISTRY_GENERATION.set(cur.1);
+            crate::obs::REGISTRY_ARTIFACTS.set(cur.0.artifacts().len() as u64);
+            removed
+        };
+        if let Some(old) = removed {
+            self.snapshot().cache().evict_scope(&old.scope);
+            crate::obs::ARTIFACTS_DELETED.inc();
+        }
+        Ok(true)
+    }
+
+    /// Reconcile the serving set with the directory: open `*.sz3c` files
+    /// that appeared out of band, drop artifacts whose files vanished,
+    /// and keep everything else untouched (readers, cache scopes, and
+    /// stats baselines survive a rescan). Files that fail to open or
+    /// verify are skipped — a half-written foreign file must not take
+    /// down the serving set; staged `.{id}.ingest-*` temp files are
+    /// invisible here by their non-`.sz3c` extension. Returns
+    /// `(added, dropped, kept)`; the generation bumps only if the set
+    /// changed.
+    pub fn rescan(&self) -> Result<(usize, usize, usize)> {
+        let _mutate = self.mutate_lock();
+        let Some(dir) = self.dir.as_deref() else {
+            return Err(SzError::config("registry is read-only"));
+        };
+        let on_disk = scan_dir(dir)?;
+        let disk_ids: std::collections::HashSet<&str> =
+            on_disk.iter().map(|(id, _)| id.as_str()).collect();
+        let base = self.snapshot();
+        let mut store = Arc::clone(&base);
+        let mut retired: Vec<Arc<Artifact>> = Vec::new();
+        let resident: Vec<String> =
+            store.artifacts().iter().map(|a| a.id.clone()).collect();
+        for id in &resident {
+            if !disk_ids.contains(id.as_str()) {
+                let (next, removed) = store.without_artifact(id);
+                store = Arc::new(next);
+                if let Some(old) = removed {
+                    retired.push(old);
+                }
+            }
+        }
+        let mut added = 0usize;
+        for (id, path) in &on_disk {
+            if store.get(id).is_some() {
+                continue;
+            }
+            let Ok((reader, file_bytes)) = open_verified(id, path, &self.opts)
+            else {
+                continue;
+            };
+            let Ok(artifact) =
+                Artifact::build(id.clone(), reader, file_bytes, store.cache())
+            else {
+                continue;
+            };
+            let (next, _) = store.with_artifact(Arc::new(artifact));
+            store = Arc::new(next);
+            added += 1;
+        }
+        let dropped = retired.len();
+        let kept = store.artifacts().len() - added;
+        if added > 0 || dropped > 0 {
+            let mut cur = self.current_lock();
+            cur.0 = store;
+            cur.1 += 1;
+            crate::obs::REGISTRY_GENERATION.set(cur.1);
+            crate::obs::REGISTRY_ARTIFACTS.set(cur.0.artifacts().len() as u64);
+        }
+        for old in &retired {
+            base.cache().evict_scope(&old.scope);
+        }
+        crate::obs::RESCANS.inc();
+        Ok((added, dropped, kept))
+    }
+
+    fn current_lock(&self) -> MutexGuard<'_, (Arc<ArtifactStore>, u64)> {
+        // a poisoned epoch lock still holds a coherent (store, gen) pair:
+        // the swap is a single assignment, never a partial update
+        self.current.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn mutate_lock(&self) -> MutexGuard<'_, ()> {
+        self.mutate.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// RAII ingest slot from [`Registry::try_begin_ingest`]; dropping it
+/// frees the slot for the next `PUT`.
+pub struct IngestPermit<'a> {
+    registry: &'a Registry,
+}
+
+impl Drop for IngestPermit<'_> {
+    fn drop(&mut self) {
+        self.registry.ingest_slots.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+/// Deletes the staged temp file on drop unless disarmed — the error
+/// paths of [`Registry::publish`] leave no debris behind.
+struct TempGuard {
+    path: PathBuf,
+    armed: bool,
+}
+
+impl TempGuard {
+    fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for TempGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            // audit:allow(swallow, reason = "cleanup of a staged temp file that may already be gone; nothing actionable on failure")
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// All `(id, path)` pairs for `*.sz3c` files under `dir`, sorted by id.
+/// Non-UTF-8 stems are skipped — they could never be addressed over the
+/// API anyway.
+fn scan_dir(dir: &Path) -> Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let Ok(entry) = entry else { continue };
+        let path = entry.path();
+        let is_artifact =
+            path.extension().and_then(|e| e.to_str()) == Some("sz3c") && path.is_file();
+        if !is_artifact {
+            continue;
+        }
+        let Some(id) = path.file_stem().and_then(|s| s.to_str()).map(str::to_string)
+        else {
+            continue;
+        };
+        out.push((id, path));
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Open a reader on `path` (CRC-verified per `opts.verify`), returning
+/// it with the on-disk byte size.
+fn open_verified(
+    id: &str,
+    path: &Path,
+    opts: &StoreOptions,
+) -> Result<(ContainerReader<'static>, u64)> {
+    let file_bytes = std::fs::metadata(path)?.len();
+    let reader = ContainerReader::open_path(path)?.with_workers(opts.workers);
+    if opts.verify {
+        reader.verify_checksums().map_err(|e| {
+            SzError::corrupt(format!("artifact '{id}' failed verification: {e}"))
+        })?;
+    }
+    Ok((reader, file_bytes))
+}
+
+/// Best-effort directory fsync so a rename/unlink is durable. Serving
+/// correctness never depends on it — rescan reconciles after a crash.
+fn fsync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        // audit:allow(swallow, reason = "directory fsync is durability hardening; the artifact file itself is already synced")
+        let _ = d.sync_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::JobConfig;
+    use crate::coordinator::Coordinator;
+    use crate::data::Field;
+    use crate::pipeline::ErrorBound;
+
+    fn container(tag: f32) -> Vec<u8> {
+        let cfg = JobConfig {
+            pipeline: "sz3-lr".into(),
+            bound: ErrorBound::Abs(1e-3),
+            workers: 1,
+            chunk_elems: 256,
+            queue_depth: 2,
+            ..Default::default()
+        };
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let values: Vec<f32> = (0..512).map(|i| tag + (i as f32) * 0.01).collect();
+        let field = Field::f32("rho", &[8, 64], values).unwrap();
+        let (bytes, _) = coord.run_to_container(vec![field]).unwrap();
+        bytes
+    }
+
+    fn temp_registry(name: &str) -> (PathBuf, Registry) {
+        let dir = std::env::temp_dir()
+            .join(format!("sz3_registry_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg = Registry::open_dir(&dir, &StoreOptions::default()).unwrap();
+        (dir, reg)
+    }
+
+    fn read_all(store: &ArtifactStore, id: &str) -> Vec<f32> {
+        let art = store.get(id).unwrap();
+        let field = art.reader.read_field("rho").unwrap();
+        match field.values {
+            crate::data::FieldValues::F32(v) => v,
+            other => panic!("unexpected dtype {other:?}"),
+        }
+    }
+
+    #[test]
+    fn publish_replace_remove_lifecycle() {
+        let (dir, reg) = temp_registry("lifecycle");
+        assert_eq!(reg.generation(), 0);
+        assert!(reg.snapshot().artifacts().is_empty(), "empty dir is servable");
+
+        assert!(!reg.publish("a", &container(1.0)).unwrap(), "fresh id: created");
+        assert_eq!(reg.generation(), 1);
+        assert!(dir.join("a.sz3c").exists());
+        let old_snap = reg.snapshot();
+        let old_values = read_all(&old_snap, "a");
+
+        // replace: in-flight readers of old_snap stay bit-identical
+        assert!(reg.publish("a", &container(100.0)).unwrap(), "same id: replaced");
+        assert_eq!(reg.generation(), 2);
+        assert_eq!(read_all(&old_snap, "a"), old_values, "old epoch unchanged");
+        let new_values = read_all(&reg.snapshot(), "a");
+        assert_ne!(new_values, old_values, "new epoch serves new bytes");
+
+        // the two registrations never share cache scope
+        let (a_old, a_new) =
+            (old_snap.get("a").unwrap(), reg.snapshot());
+        assert_ne!(a_old.scope, a_new.get("a").unwrap().scope);
+
+        assert!(reg.remove("a").unwrap());
+        assert_eq!(reg.generation(), 3);
+        assert!(!dir.join("a.sz3c").exists());
+        assert!(reg.snapshot().get("a").is_none());
+        assert!(!reg.remove("a").unwrap(), "double delete is a clean false");
+        assert_eq!(reg.generation(), 3, "no-op remove does not bump the epoch");
+
+        // no staged debris anywhere in the directory
+        let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert!(leftovers.is_empty(), "no temp debris: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rescan_reconciles_with_directory() {
+        let (dir, reg) = temp_registry("rescan");
+        reg.publish("x", &container(1.0)).unwrap();
+        let x_scope = reg.snapshot().get("x").unwrap().scope.clone();
+        let gen_before = reg.generation();
+
+        // a foreign artifact, a staged-style temp file, and garbage
+        std::fs::copy(dir.join("x.sz3c"), dir.join("y.sz3c")).unwrap();
+        std::fs::write(dir.join(".z.ingest-99-1"), b"partial upload").unwrap();
+        std::fs::write(dir.join("junk.sz3c"), b"not a container").unwrap();
+
+        let (added, dropped, kept) = reg.rescan().unwrap();
+        assert_eq!((added, dropped, kept), (1, 0, 1), "y added, junk skipped");
+        assert_eq!(reg.generation(), gen_before + 1);
+        assert!(reg.snapshot().get("y").is_some());
+        assert!(reg.snapshot().get("junk").is_none());
+        assert_eq!(
+            reg.snapshot().get("x").unwrap().scope,
+            x_scope,
+            "kept artifacts keep their registration (and cache scope)"
+        );
+
+        // vanish y's file out of band: rescan drops it
+        std::fs::remove_file(dir.join("y.sz3c")).unwrap();
+        let (added, dropped, _) = reg.rescan().unwrap();
+        assert_eq!((added, dropped), (0, 1));
+        assert!(reg.snapshot().get("y").is_none());
+
+        // a no-change rescan leaves the generation alone
+        let gen = reg.generation();
+        assert_eq!(reg.rescan().unwrap(), (0, 0, 1));
+        assert_eq!(reg.generation(), gen);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn publish_failure_leaves_no_debris_and_no_epoch() {
+        let (dir, reg) = temp_registry("failure");
+        let gen = reg.generation();
+        assert!(reg.publish("bad", b"definitely not a container").is_err());
+        assert_eq!(reg.generation(), gen, "failed publish must not bump");
+        assert!(reg.snapshot().get("bad").is_none());
+        let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert!(leftovers.is_empty(), "staged file cleaned up: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn read_only_registry_rejects_mutations() {
+        let store = Arc::new(ArtifactStore::new(0));
+        let reg = Registry::read_only(Arc::clone(&store));
+        assert!(!reg.writable());
+        assert!(reg.try_begin_ingest().is_none(), "no ingest slots");
+        assert!(reg.publish("a", b"x").is_err());
+        assert!(reg.remove("a").is_err());
+        assert!(reg.rescan().is_err());
+        assert_eq!(reg.generation(), 0);
+    }
+
+    #[test]
+    fn ingest_permits_are_bounded_and_raii() {
+        let (dir, reg) = temp_registry("permits");
+        let reg = reg.with_max_inflight_ingests(2);
+        let p1 = reg.try_begin_ingest().unwrap();
+        let _p2 = reg.try_begin_ingest().unwrap();
+        assert!(reg.try_begin_ingest().is_none(), "slots exhausted");
+        drop(p1);
+        assert!(reg.try_begin_ingest().is_some(), "slot returns on drop");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -65,7 +65,7 @@ impl LatencyStats {
 /// Endpoint labels tracked by [`ServerStats`] — one slot per API surface
 /// plus a catch-all for unmatched routes. Shared with the Prometheus
 /// exposition layer so `/statsz` and `/metricsz` agree on the vocabulary.
-pub const ENDPOINTS: [&str; 8] = obs::HTTP_ENDPOINTS;
+pub const ENDPOINTS: [&str; 11] = obs::HTTP_ENDPOINTS;
 
 /// Upper bounds (µs, exclusive) of the latency histogram buckets, for the
 /// `/statsz` JSON's `latency_buckets_us` field.

@@ -1,14 +1,18 @@
 //! HTTP status-code contract, table-driven over a real loopback socket:
 //! the `?snapshot=` parameter (valid / out-of-range → 404 / malformed →
 //! 400) layered on the existing 400/404/416 matrix, against a store
-//! holding both a v3 delta series and a plain single-snapshot artifact.
+//! holding both a v3 delta series and a plain single-snapshot artifact;
+//! plus the write-path lifecycle matrix (400/413/429/408, replace and
+//! delete semantics) against a writable registry with tight limits.
 
 use sz3::config::{JobConfig, Json};
 use sz3::container::fixtures::smooth_series;
 use sz3::coordinator::Coordinator;
 use sz3::pipeline::ErrorBound;
 use sz3::reader::ContainerReader;
-use sz3::server::{self, ArtifactStore, HttpClient, StoreOptions};
+use sz3::server::{
+    self, ArtifactStore, HttpClient, Registry, ServeOptions, StoreOptions,
+};
 
 /// Build the two artifacts: "series" (3 snapshots, delta on) and "plain"
 /// (one snapshot), both one field "rho" of 12×12×12, 4 chunks/snapshot.
@@ -282,6 +286,113 @@ fn request_ids_byte_ranges_and_metrics_over_loopback() {
             .and_then(|(_, v)| v.parse::<f64>().ok())
             .unwrap_or(0.0);
         assert!(raw_count >= 5.0, "raw requests recorded: {raw_count}");
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Frame an ingest body: `[u32le json_len][json params][le f32 data]`.
+fn ingest_body(params: &str, values: &[f32]) -> Vec<u8> {
+    let mut body = (params.len() as u32).to_le_bytes().to_vec();
+    body.extend_from_slice(params.as_bytes());
+    for v in values {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    body
+}
+
+#[test]
+fn write_lifecycle_contract_over_loopback() {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let dir = std::env::temp_dir()
+        .join(format!("sz3_http_contract_write_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let reg = Arc::new(
+        Registry::open_dir(
+            &dir,
+            &StoreOptions { cache_bytes: 4 << 20, workers: 2, verify: true },
+        )
+        .unwrap()
+        .with_max_inflight_ingests(1),
+    );
+    let opts = ServeOptions {
+        threads: 2,
+        max_body: 64 << 10, // 64 KiB: easy to overflow from a test
+        max_conns: 16,
+        read_timeout: Duration::from_secs(1),
+        ..Default::default()
+    };
+    let handle =
+        server::serve_registry(Arc::clone(&reg), "127.0.0.1:0", opts).unwrap();
+    let addr = handle.addr();
+    {
+        let params = "{\"dims\":[8,64],\"fields\":[\"rho\"],\
+             \"pipeline\":\"sz3-lr\",\"bound\":{\"mode\":\"abs\",\"value\":0.001},\
+             \"chunk_elems\":256}";
+        let values: Vec<f32> = (0..512).map(|i| (i as f32) * 0.01).collect();
+        let good = ingest_body(params, &values);
+        let mut c = HttpClient::connect(addr).unwrap();
+
+        // bad JSON params → 400, and the failure publishes nothing
+        let resp = c.put("/v1/artifacts/w", &ingest_body("{oops", &values)).unwrap();
+        assert_eq!(resp.status, 400);
+        assert_eq!(c.get("/v1/artifacts/w").unwrap().status, 404);
+
+        // data shorter than the framing requires → 400
+        let resp = c.put("/v1/artifacts/w", &ingest_body(params, &values[..99])).unwrap();
+        assert_eq!(resp.status, 400);
+
+        // a declared body over the cap → 413 before any body byte is read
+        // (the server closes that connection, so reconnect afterwards)
+        let big = vec![0u8; (64 << 10) + 1];
+        let resp = c.put("/v1/artifacts/w", &big).unwrap();
+        assert_eq!(resp.status, 413);
+        let mut c = HttpClient::connect(addr).unwrap();
+
+        // create → 201; duplicate id → replace → 200
+        assert_eq!(c.put("/v1/artifacts/w", &good).unwrap().status, 201);
+        let resp = c.put("/v1/artifacts/w", &good).unwrap();
+        assert_eq!(resp.status, 200, "duplicate id replaces");
+        let j = Json::parse(resp.text().unwrap()).unwrap();
+        assert_eq!(j.get("replaced").unwrap().as_bool(), Some(true));
+
+        // delete-then-GET → 404 everywhere, second delete → 404
+        assert_eq!(c.delete("/v1/artifacts/w").unwrap().status, 200);
+        assert_eq!(c.get("/v1/artifacts/w").unwrap().status, 404);
+        assert_eq!(c.get("/v1/artifacts/w/fields/rho").unwrap().status, 404);
+        assert_eq!(c.delete("/v1/artifacts/w").unwrap().status, 404);
+
+        // all ingest slots busy → 429 with a Retry-After hint
+        let permit = reg.try_begin_ingest().unwrap();
+        let resp = c.put("/v1/artifacts/w", &good).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        drop(permit);
+        assert_eq!(c.put("/v1/artifacts/w", &good).unwrap().status, 201);
+
+        // a peer that stalls mid-request (complete request line, then
+        // silence) gets 408 once the read timeout fires
+        use std::io::{Read as _, Write as _};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: sz").unwrap();
+        s.flush().unwrap();
+        let mut raw = Vec::new();
+        s.read_to_end(&mut raw).unwrap();
+        let head = String::from_utf8_lossy(&raw);
+        assert!(
+            head.starts_with("HTTP/1.1 408 "),
+            "stalled request must answer 408: {head:?}"
+        );
+
+        // writable /healthz advertises the write path
+        let resp = c.get("/healthz").unwrap();
+        let j = Json::parse(resp.text().unwrap()).unwrap();
+        assert_eq!(j.get("writable").unwrap().as_bool(), Some(true));
+        assert!(j.get("generation").unwrap().as_usize().unwrap() >= 1);
     }
     handle.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
