@@ -1,17 +1,68 @@
-//! Fig. 8 regeneration: compression/decompression throughput (MB/s) of
-//! every pipeline on the eight survey datasets at relative error bound
-//! 1e-3. Expect the paper's ordering: Truncation ≫ LR/LR-s > Interp, with
-//! Truncation several × the next best.
+//! Fig. 8 regeneration plus the PR 9 fast-family acceptance gate.
+//!
+//! Part 1 — Fig. 8: compression/decompression throughput (MB/s) of every
+//! pipeline on the eight survey datasets at relative error bound 1e-3.
+//! Expect the paper's ordering: Truncation ≫ LR/LR-s > Interp, with
+//! Truncation several × the next best, and `szx` above Truncation.
+//!
+//! Part 2 — constant-heavy corpus: a piecewise-flat field (the SZx sweet
+//! spot: instrument backgrounds, masked regions, quiesced checkpoints)
+//! where the constblock family must beat the fastest prediction-based
+//! family by ≥ 5× compress throughput. Asserted, so the CI smoke run
+//! fails on regression.
+//!
+//! Part 3 — kernel microbenches: dispatched vs always-scalar variants of
+//! the shared SIMD kernels, so the perf summary records what the runtime
+//! dispatch is actually buying on this host.
 //!
 //! Output lines: `tp,<dataset>,<pipeline>,<comp MB/s>,<decomp MB/s>,<ratio>`
+//! and `szx,<metric>,<value>`; machine-readable summary in `BENCH_PR9.json`.
 
-use sz3::bench_harness::Bench;
+use sz3::bench_harness::{Bench, PerfSummary};
+use sz3::data::Field;
 use sz3::pipeline::{self, CompressConf, ErrorBound};
+use sz3::util::rng::Pcg32;
+use sz3::util::simd;
+
+/// Piecewise-constant f32 volume: long plateaus at random levels with an
+/// occasional short noisy stretch (~2% of elements), the shape SZx's
+/// constant-block scan is built for.
+fn constant_heavy_field(nelems: usize, seed: u64) -> Field {
+    let mut rng = Pcg32::seeded(seed);
+    let mut vals = Vec::with_capacity(nelems);
+    while vals.len() < nelems {
+        let run = (500 + rng.below(4000)).min(nelems - vals.len());
+        if rng.below(50) == 0 {
+            for _ in 0..run {
+                vals.push((rng.below(1 << 20) as f32 / 1e4) - 50.0);
+            }
+        } else {
+            let level = (rng.below(1 << 20) as f32 / 1e4) - 50.0;
+            vals.resize(vals.len() + run, level);
+        }
+    }
+    Field::f32("plateau", &[nelems], vals).unwrap()
+}
+
+/// Min-of-iterations compress throughput in MB/s (least noise-polluted
+/// estimate, same convention as the obs overhead bench).
+fn comp_mbs(bench: &Bench, label: &str, field: &Field, name: &str) -> f64 {
+    let c = pipeline::build(name).unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+    let s = bench.run(label, || {
+        c.compress(field, &conf).unwrap();
+    });
+    field.nbytes() as f64 / 1e6 / s.min.as_secs_f64().max(1e-9)
+}
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let bench = if quick { Bench::quick() } else { Bench::default() };
-    let pipelines = ["sz3-truncation", "sz3-lr", "sz3-lr-s", "sz3-interp"];
+    let mut summary = PerfSummary::new();
+
+    // ---------------------------------------------------- Fig. 8 sweep
+    let pipelines =
+        ["sz3-truncation", "sz3-lr", "sz3-lr-s", "sz3-interp", "szx"];
     println!("# Fig. 8: throughput at rel eb 1e-3 (quick={quick})");
     println!("tp,dataset,pipeline,compress_mbs,decompress_mbs,ratio");
     for ds in sz3::datagen::survey(42) {
@@ -40,4 +91,150 @@ fn main() {
             println!("tp,{},{name},{comp_mbs:.1},{dec_mbs:.1},{ratio:.2}", ds.name);
         }
     }
+
+    // ------------------------------- constant-heavy acceptance corpus
+    let nelems = if quick { 1 << 20 } else { 1 << 22 };
+    let field = constant_heavy_field(nelems, 0x5a3c);
+    let mb = field.nbytes() as f64 / 1e6;
+    println!("# constant-heavy corpus: {mb:.0} MB piecewise-flat f32");
+
+    // fastest existing (prediction/truncation) family on this corpus
+    let mut best_existing = 0.0f64;
+    let mut best_name = "";
+    for name in ["sz3-truncation", "sz3-lr-s"] {
+        let mbs = comp_mbs(&bench, &format!("const|{name}"), &field, name);
+        println!("szx,existing_{name}_comp_mbs,{mbs:.1}");
+        summary.record(&format!("existing_{name}_comp_mbs"), mbs);
+        if mbs > best_existing {
+            best_existing = mbs;
+            best_name = name;
+        }
+    }
+
+    // the constblock family: registry alias (derived keep, zstd tail) and
+    // the pinned-keep/bypass configuration a throughput-first deployment
+    // would run
+    let szx_alias = comp_mbs(&bench, "const|szx", &field, "szx");
+    let szx_tuned = comp_mbs(
+        &bench,
+        "const|szx-tuned",
+        &field,
+        "constblock(256)/truncation@k2/raw/bypass",
+    );
+    let szx_best = szx_alias.max(szx_tuned);
+    println!("szx,szx_alias_comp_mbs,{szx_alias:.1}");
+    println!("szx,szx_tuned_comp_mbs,{szx_tuned:.1}");
+    summary.record("szx_alias_comp_mbs", szx_alias);
+    summary.record("szx_tuned_comp_mbs", szx_tuned);
+    summary.record("existing_best_comp_mbs", best_existing);
+
+    // round-trip sanity + ratio on the acceptance corpus (the fast path
+    // must still honor the bound it advertises)
+    let c = pipeline::build("szx").unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+    let stream = c.compress(&field, &conf).unwrap();
+    let restored = c.decompress(&stream).unwrap();
+    let worst = field
+        .values
+        .to_f64_vec()
+        .iter()
+        .zip(restored.values.to_f64_vec())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(worst <= 1e-3 + 1e-9, "szx bound violated: {worst:.3e}");
+    let ratio = field.nbytes() as f64 / stream.len() as f64;
+    println!("szx,const_corpus_ratio,{ratio:.1}");
+    summary.record("const_corpus_ratio", ratio);
+
+    let speedup = szx_best / best_existing.max(1e-9);
+    println!("szx,speedup_vs_{best_name},{speedup:.2}");
+    summary.record("speedup_vs_existing", speedup);
+
+    // ACCEPTANCE: the SZx-style family is ≥5× the fastest existing family
+    // on its target corpus
+    assert!(
+        speedup >= 5.0,
+        "szx {szx_best:.0} MB/s is only {speedup:.2}x {best_name} \
+         ({best_existing:.0} MB/s); acceptance bar is 5x"
+    );
+
+    // -------------------------------------------- kernel microbenches
+    println!("# kernel dispatch: {}", simd::dispatch_label());
+    summary.record(
+        "avx2_active",
+        if simd::avx2_active() { 1.0 } else { 0.0 },
+    );
+
+    let n = 1 << 16;
+    let mut rng = Pcg32::seeded(0x6b31);
+    let vals: Vec<f64> =
+        (0..n).map(|_| rng.below(1 << 20) as f64 / 1e4).collect();
+    let preds: Vec<f64> = vals.iter().map(|v| v + 0.01).collect();
+    let bytes = n * 8;
+
+    fn kernel(
+        bench: &Bench,
+        summary: &mut PerfSummary,
+        name: &str,
+        bytes: usize,
+        disp: impl FnMut(),
+        scal: impl FnMut(),
+    ) {
+        let d = bench.run(&format!("{name}|dispatched"), disp);
+        let s = bench.run(&format!("{name}|scalar"), scal);
+        let d_mbs = bytes as f64 / 1e6 / d.min.as_secs_f64().max(1e-9);
+        let s_mbs = bytes as f64 / 1e6 / s.min.as_secs_f64().max(1e-9);
+        println!("szx,kernel_{name}_dispatched_mbs,{d_mbs:.0}");
+        println!("szx,kernel_{name}_scalar_mbs,{s_mbs:.0}");
+        summary.record(&format!("kernel_{name}_dispatched_mbs"), d_mbs);
+        summary.record(&format!("kernel_{name}_scalar_mbs"), s_mbs);
+        summary.record(&format!("kernel_{name}_speedup"), d_mbs / s_mbs.max(1e-9));
+    }
+
+    let mut row_d = vals.clone();
+    let mut codes_d = vec![0u32; n];
+    let mut row_s = vals.clone();
+    let mut codes_s = vec![0u32; n];
+    kernel(
+        &bench,
+        &mut summary,
+        "linear_quantize_f64",
+        bytes,
+        || {
+            row_d.copy_from_slice(&vals);
+            simd::linear_quantize_f64(&mut row_d, &preds, 1e-3, 512, &mut codes_d);
+        },
+        || {
+            row_s.copy_from_slice(&vals);
+            simd::linear_quantize_f64_scalar(&mut row_s, &preds, 1e-3, 512, &mut codes_s);
+        },
+    );
+    kernel(
+        &bench,
+        &mut summary,
+        "minmax_f64",
+        bytes,
+        || {
+            std::hint::black_box(simd::minmax_f64(&vals));
+        },
+        || {
+            std::hint::black_box(simd::minmax_f64_scalar(&vals));
+        },
+    );
+    let raw: Vec<u8> = (0..bytes).map(|i| (i * 31 % 251) as u8).collect();
+    kernel(
+        &bench,
+        &mut summary,
+        "crc32",
+        bytes,
+        || {
+            std::hint::black_box(simd::crc32_update(0, &raw));
+        },
+        || {
+            std::hint::black_box(simd::crc32_update_scalar(0, &raw));
+        },
+    );
+
+    summary.write_json("BENCH_PR9.json").unwrap();
+    println!("# wrote BENCH_PR9.json");
 }

@@ -34,8 +34,10 @@ use std::path::{Path, PathBuf};
 /// `container/fixtures.rs` (compression-side selection / test-corpus
 /// generation — they consume trusted in-process data), and the
 /// compression-side pipeline stages, whose inputs are the caller's own
-/// fields. `docs/AUDIT.md` records the rationale per entry.
-pub const TRUST_MAP: [&str; 12] = [
+/// fields. `quantizer/` and `predictor/` *are* listed: their `load()`
+/// paths restore per-stream state straight from attacker-controlled
+/// bytes. `docs/AUDIT.md` records the rationale per entry.
+pub const TRUST_MAP: [&str; 14] = [
     "rust/src/byteio.rs",
     "rust/src/bitio.rs",
     "rust/src/container/mod.rs",
@@ -48,6 +50,8 @@ pub const TRUST_MAP: [&str; 12] = [
     "rust/src/obs/",
     "rust/src/encoder/",
     "rust/src/lossless/",
+    "rust/src/quantizer/",
+    "rust/src/predictor/",
 ];
 
 /// True if `rel` (repo-relative, forward slashes) is in the trust map.

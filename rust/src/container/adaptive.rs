@@ -14,6 +14,10 @@
 //! predictor's estimated residual stays above a fixed fraction of the
 //! chunk's value range (prediction would save < ~3 bits/element over raw
 //! bit truncation, so the cheaper pipeline wins at equal quality).
+//! Symmetrically, a chunk whose whole value range fits inside the error
+//! bound is handed to the `constblock` (SZx-style) family when it is a
+//! candidate: every scan block collapses to one stored mean, so the fast
+//! path wins at any quality.
 
 use crate::data::{Field, FieldValues};
 use crate::error::{Result, SzError};
@@ -74,9 +78,10 @@ const UNPREDICTABLE_FRACTION: f64 = 0.15;
 
 impl AdaptiveChunkSelector {
     /// Default candidate set: the three fixed pipelines the paper composes
-    /// plus the linearized 1-D path.
+    /// plus the linearized 1-D path and the SZx-style constant-block fast
+    /// family.
     pub const DEFAULT_CANDIDATES: &'static [&'static str] =
-        &["sz3-lr", "sz3-interp", "lorenzo-1d", "sz3-truncation"];
+        &["sz3-lr", "sz3-interp", "lorenzo-1d", "sz3-truncation", "szx"];
 
     /// Selector over the default candidates with native analysis.
     pub fn new() -> Self {
@@ -248,6 +253,7 @@ impl AdaptiveChunkSelector {
             PredSpec::Interp(_) => "interp",
             PredSpec::Lorenzo(_) | PredSpec::Zero => "point",
             PredSpec::Truncation { .. } => "truncation",
+            PredSpec::ConstBlock { .. } => "szx",
             PredSpec::Pastri { .. } => "pastri",
             PredSpec::Aps { .. } => "aps",
         }
@@ -295,6 +301,21 @@ impl AdaptiveChunkSelector {
             .specs
             .iter()
             .position(|s| matches!(s.pred, PredSpec::Truncation { .. }));
+        let constblock = self
+            .specs
+            .iter()
+            .position(|s| matches!(s.pred, PredSpec::ConstBlock { .. }));
+        // near-constant chunk: the whole value range fits inside one
+        // representative ± eb, so every constblock scan block collapses to
+        // a single stored mean — no predictor can beat that
+        if signals.range <= 2.0 * signals.eb {
+            if let Some(c) = constblock {
+                obs::SELECTOR_OVERRIDES.inc();
+                obs::selector_win(Self::family_label(&self.specs[c]));
+                obs::SELECTOR_US.observe_since(t_select);
+                return Ok(Selection { pipeline: self.names[c].clone(), signals });
+            }
+        }
         let winner = match (best, truncation) {
             // unpredictable data: every predictor leaves residuals near the
             // raw value range, so prediction buys almost nothing over plain
@@ -416,9 +437,23 @@ mod tests {
     }
 
     #[test]
-    fn constant_chunk_stays_prediction_based() {
+    fn constant_chunk_selects_the_constblock_fast_path() {
         let f = Field::f32("flat", &[8, 12, 12], vec![3.5; 8 * 12 * 12]).unwrap();
         let sel = AdaptiveChunkSelector::new();
+        let s = sel.select(&f, &CompressConf::new(ErrorBound::Rel(1e-3))).unwrap();
+        assert_eq!(s.pipeline, canon("szx"), "signals: {:?}", s.signals);
+        assert!(crate::pipeline::build(&s.pipeline).is_ok());
+    }
+
+    #[test]
+    fn constant_chunk_stays_prediction_based_without_constblock() {
+        // when the fast family is not a candidate, a flat chunk must not
+        // fall through to truncation (prediction nails it exactly)
+        let f = Field::f32("flat", &[8, 12, 12], vec![3.5; 8 * 12 * 12]).unwrap();
+        let sel = AdaptiveChunkSelector::from_names(
+            ["sz3-lr", "sz3-interp", "sz3-truncation"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
         let s = sel.select(&f, &CompressConf::new(ErrorBound::Rel(1e-3))).unwrap();
         assert_ne!(s.pipeline, canon("sz3-truncation"));
     }

@@ -18,6 +18,7 @@
 
 use crate::data::{Field, FieldValues};
 use crate::error::{Result, SzError};
+use crate::util::simd;
 
 fn check_pair(a: &Field, b: &Field, what: &str) -> Result<()> {
     if a.shape.dims() != b.shape.dims() {
@@ -41,15 +42,24 @@ fn check_pair(a: &Field, b: &Field, what: &str) -> Result<()> {
 /// `original` — the input a delta chunk's compressor sees.
 pub fn residual(original: &Field, baseline: &Field) -> Result<Field> {
     check_pair(original, baseline, "delta residual")?;
+    // Element math lives in the runtime-dispatched SIMD kernels; each arm
+    // preserves the original per-element semantics bit for bit (the kernel
+    // tests pin this).
     let values = match (&original.values, &baseline.values) {
-        (FieldValues::F32(a), FieldValues::F32(b)) => FieldValues::F32(
-            a.iter().zip(b).map(|(&x, &y)| (x as f64 - y as f64) as f32).collect(),
-        ),
+        (FieldValues::F32(a), FieldValues::F32(b)) => {
+            let mut out = vec![0f32; a.len()];
+            simd::delta_sub_f32(a, b, &mut out);
+            FieldValues::F32(out)
+        }
         (FieldValues::F64(a), FieldValues::F64(b)) => {
-            FieldValues::F64(a.iter().zip(b).map(|(&x, &y)| x - y).collect())
+            let mut out = vec![0f64; a.len()];
+            simd::delta_sub_f64(a, b, &mut out);
+            FieldValues::F64(out)
         }
         (FieldValues::I32(a), FieldValues::I32(b)) => {
-            FieldValues::I32(a.iter().zip(b).map(|(&x, &y)| x.wrapping_sub(y)).collect())
+            let mut out = vec![0i32; a.len()];
+            simd::delta_sub_i32(a, b, &mut out);
+            FieldValues::I32(out)
         }
         _ => {
             return Err(SzError::Shape(
@@ -66,14 +76,20 @@ pub fn residual(original: &Field, baseline: &Field) -> Result<Field> {
 pub fn apply(baseline: &Field, residual: &Field) -> Result<Field> {
     check_pair(residual, baseline, "delta apply")?;
     let values = match (&baseline.values, &residual.values) {
-        (FieldValues::F32(b), FieldValues::F32(r)) => FieldValues::F32(
-            b.iter().zip(r).map(|(&y, &d)| (y as f64 + d as f64) as f32).collect(),
-        ),
+        (FieldValues::F32(b), FieldValues::F32(r)) => {
+            let mut out = vec![0f32; b.len()];
+            simd::delta_add_f32(b, r, &mut out);
+            FieldValues::F32(out)
+        }
         (FieldValues::F64(b), FieldValues::F64(r)) => {
-            FieldValues::F64(b.iter().zip(r).map(|(&y, &d)| y + d).collect())
+            let mut out = vec![0f64; b.len()];
+            simd::delta_add_f64(b, r, &mut out);
+            FieldValues::F64(out)
         }
         (FieldValues::I32(b), FieldValues::I32(r)) => {
-            FieldValues::I32(b.iter().zip(r).map(|(&y, &d)| y.wrapping_add(d)).collect())
+            let mut out = vec![0i32; b.len()];
+            simd::delta_add_i32(b, r, &mut out);
+            FieldValues::I32(out)
         }
         _ => {
             return Err(SzError::Shape(

@@ -30,17 +30,21 @@ pub(super) fn compress_block_3d<T: Scalar>(
         Some(f) => {
             let (c0, c1, c2, c3) =
                 (f.coeffs[0], f.coeffs[1], f.coeffs[2], f.coeffs[3]);
+            // Regression rows have no serial dependence, so whole rows go
+            // through the bulk SIMD quantize path (bit-identical to the
+            // pointwise loop — pinned by the quantize_row tests).
+            let mut preds = vec![0.0f64; b2];
+            let mut codes = vec![0u32; b2];
             for z in 0..b0 {
                 let pz = c0 * z as f64 + c3;
                 for y in 0..b1 {
                     let pzy = pz + c1 * y as f64;
                     let base = (o0 + z) * s0 + (o1 + y) * s1 + o2;
-                    for x in 0..b2 {
-                        let pred = pzy + c2 * x as f64;
-                        let (qi, rec) = quantizer.quantize(values[base + x], pred);
-                        indices.push(qi);
-                        values[base + x] = rec;
+                    for (x, p) in preds.iter_mut().enumerate() {
+                        *p = pzy + c2 * x as f64;
                     }
+                    quantizer.quantize_row(&mut values[base..base + b2], &preds, &mut codes);
+                    indices.extend_from_slice(&codes);
                 }
             }
         }
@@ -179,15 +183,17 @@ pub(super) fn compress_block_2d<T: Scalar>(
     match fit {
         Some(f) => {
             let (c0, c1, c2) = (f.coeffs[0], f.coeffs[1], f.coeffs[2]);
+            // Bulk SIMD quantize per row, as in the 3-D regression path.
+            let mut preds = vec![0.0f64; b1];
+            let mut codes = vec![0u32; b1];
             for y in 0..b0 {
                 let py = c0 * y as f64 + c2;
                 let base = (o0 + y) * s0 + o1;
-                for x in 0..b1 {
-                    let pred = py + c1 * x as f64;
-                    let (qi, rec) = quantizer.quantize(values[base + x], pred);
-                    indices.push(qi);
-                    values[base + x] = rec;
+                for (x, p) in preds.iter_mut().enumerate() {
+                    *p = py + c1 * x as f64;
                 }
+                quantizer.quantize_row(&mut values[base..base + b1], &preds, &mut codes);
+                indices.extend_from_slice(&codes);
             }
         }
         None => {

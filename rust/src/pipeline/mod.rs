@@ -6,7 +6,8 @@
 //! composite (SZ3-LR); [`interp::InterpCompressor`] is SZ3-Interp;
 //! [`truncation::TruncationCompressor`] is SZ3-Truncation;
 //! [`pastri::PastriCompressor`] is SZ-Pastri/SZ3-Pastri (§4);
-//! [`aps::ApsCompressor`] is the adaptive APS pipeline (§5).
+//! [`aps::ApsCompressor`] is the adaptive APS pipeline (§5);
+//! [`szx::SzxCompressor`] is the SZx-style constant-block fast family.
 //!
 //! Every compressed stream begins with a common header (the pipeline's
 //! canonical spec, dtype, shape), so [`decompress_any`] reconstructs the
@@ -26,6 +27,7 @@ pub mod interp;
 pub mod pastri;
 pub mod point;
 pub mod spec;
+pub mod szx;
 pub mod truncation;
 
 pub use analysis::{BlockAnalyzer, NativeAnalyzer};
@@ -35,6 +37,7 @@ pub use interp::InterpCompressor;
 pub use pastri::PastriCompressor;
 pub use point::SzCompressor;
 pub use spec::{canonical, PipelineBuilder, PipelineSpec};
+pub use szx::SzxCompressor;
 pub use truncation::TruncationCompressor;
 
 use crate::byteio::{ByteReader, ByteWriter};

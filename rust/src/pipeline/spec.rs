@@ -19,6 +19,7 @@
 //! | `block(lorenzo+regression)[@s]` | SZ2-style blockwise | `linear` quantizer, encoder, lossless |
 //! | `interp(cubic\|linear)` | level-by-level interpolation | `linear` quantizer, encoder, lossless |
 //! | `truncation[@kN]` | byte truncation (module bypass) | lossless |
+//! | `constblock(B)` | SZx-style constant blocks | `truncation[@kN]`, `raw` encoder, lossless |
 //! | `pastri(bitplane\|value)[@pN]` | GAMESS periodic patterns | `fixed_huffman` encoder, lossless |
 //! | `aps[@EB]` | adaptive APS meta-pipeline | (composes its own stages) |
 //!
@@ -40,6 +41,7 @@ use super::block::BlockCompressor;
 use super::interp::{InterpCompressor, InterpMode};
 use super::pastri::PastriCompressor;
 use super::point::{PredictorKind, PreprocessorKind, QuantizerKind, SzCompressor};
+use super::szx::SzxCompressor;
 use super::truncation::TruncationCompressor;
 use super::{CompressConf, Compressor, StreamHeader};
 use crate::byteio::{ByteReader, ByteWriter};
@@ -60,6 +62,7 @@ pub const ALIASES: &[(&str, &str)] = &[
     ("sz-pastri", "pastri(value)/fixed_huffman/bypass"),
     ("sz-pastri-zstd", "pastri(value)/fixed_huffman/zstd"),
     ("sz3-aps", "aps"),
+    ("szx", "constblock(32)/truncation/raw/zstd"),
     ("lorenzo-1d", "linearize/lorenzo/linear/huffman/zstd"),
     ("fpzip-like", "lorenzo/linear/arithmetic/bypass"),
 ];
@@ -129,6 +132,16 @@ pub enum PredSpec {
     /// Byte truncation (`truncation`, `truncation@k2` pins kept bytes).
     Truncation {
         /// Most-significant bytes to keep; `None` derives from the bound.
+        keep: Option<usize>,
+    },
+    /// SZx-style constant-block fast family (`constblock(32)`); the spec's
+    /// second stage is a `truncation[@kN]` token carrying the keep-bytes
+    /// for non-constant blocks, and the encoder slot must be `raw`.
+    ConstBlock {
+        /// Elements per scan block (1..=2^20).
+        block: u32,
+        /// Most-significant bytes kept for non-constant values; `None`
+        /// derives from the bound.
         keep: Option<usize>,
     },
     /// PaSTRI periodic-pattern prediction (`pastri(bitplane|value)`,
@@ -305,8 +318,9 @@ impl<'a> Token<'a> {
 }
 
 const PRE_NAMES: &[&str] = &["identity", "linearize", "log", "log_transform"];
-const PRED_NAMES: &[&str] =
-    &["lorenzo", "zero", "block", "interp", "truncation", "pastri", "aps"];
+const PRED_NAMES: &[&str] = &[
+    "lorenzo", "zero", "block", "interp", "truncation", "constblock", "pastri", "aps",
+];
 
 fn parse_pre(t: &Token) -> Result<PreSpec> {
     t.no_args()?;
@@ -394,6 +408,33 @@ fn parse_pred(t: &Token) -> Result<PredSpec> {
                 ),
             };
             Ok(PredSpec::Truncation { keep })
+        }
+        "constblock" => {
+            t.no_param()?;
+            let block = match t.args.as_slice() {
+                [] => 32,
+                [b] => b
+                    .parse::<u32>()
+                    .ok()
+                    .filter(|&b| (1..=1 << 20).contains(&b))
+                    .ok_or_else(|| {
+                        SzError::config(format!(
+                            "stage '{}': constblock block size is (N) with N \
+                             in 1..=2^20",
+                            t.raw
+                        ))
+                    })?,
+                _ => {
+                    return Err(SzError::config(format!(
+                        "stage '{}': constblock takes a single block-size \
+                         argument",
+                        t.raw
+                    )))
+                }
+            };
+            // keep-bytes ride on the spec's truncation mid-token; the
+            // family-shape match below fills them in
+            Ok(PredSpec::ConstBlock { block, keep: None })
         }
         "pastri" => {
             let bitplane = match t.args.as_slice() {
@@ -602,6 +643,41 @@ impl PipelineSpec {
                     lossless: Some(parse_lossless(&rest[0])?),
                 }
             }
+            PredSpec::ConstBlock { block, .. } => {
+                if rest.len() != 3 {
+                    return Err(shape_err(
+                        "constblock",
+                        "truncation[@kN]/raw/<lossless>",
+                    ));
+                }
+                // the mid stage reuses the truncation token so keep-bytes
+                // share one grammar (`@k1..@k8`) across both families
+                if rest[0].name != "truncation" {
+                    return Err(SzError::config(format!(
+                        "pipeline spec '{s}': the constblock family's second \
+                         stage is truncation[@kN] (got '{}')",
+                        rest[0].raw
+                    )));
+                }
+                let keep = match parse_pred(&rest[0])? {
+                    PredSpec::Truncation { keep } => keep,
+                    _ => unreachable!("token name checked above"),
+                };
+                let enc = parse_enc(&rest[1])?;
+                if enc != EncSpec::Raw {
+                    return Err(SzError::config(format!(
+                        "pipeline spec '{s}': the constblock family supports \
+                         only the raw encoder"
+                    )));
+                }
+                PipelineSpec {
+                    pre,
+                    pred: PredSpec::ConstBlock { block, keep },
+                    quant: None,
+                    enc: Some(enc),
+                    lossless: Some(parse_lossless(&rest[2])?),
+                }
+            }
             PredSpec::Pastri { .. } => {
                 if rest.len() != 2 {
                     return Err(shape_err("pastri", "encoder/lossless"));
@@ -655,6 +731,7 @@ impl PipelineSpec {
             PredSpec::Interp(InterpMode::Linear) => "interp(linear)".into(),
             PredSpec::Truncation { keep: None } => "truncation".into(),
             PredSpec::Truncation { keep: Some(k) } => format!("truncation@k{k}"),
+            PredSpec::ConstBlock { block, .. } => format!("constblock({block})"),
             PredSpec::Pastri { bitplane, period } => {
                 let base =
                     if bitplane { "pastri(bitplane)" } else { "pastri(value)" };
@@ -671,6 +748,15 @@ impl PipelineSpec {
                 }
             }
         });
+        // the constblock family's keep-bytes render as the spec's
+        // truncation mid-token (it occupies the quantizer slot, which is
+        // None for this family)
+        if let PredSpec::ConstBlock { keep, .. } = self.pred {
+            parts.push(match keep {
+                None => "truncation".into(),
+                Some(k) => format!("truncation@k{k}"),
+            });
+        }
         if let Some(q) = self.quant {
             parts.push(match q {
                 QuantSpec::Linear { radius: None } => "linear".into(),
@@ -737,6 +823,25 @@ impl PipelineSpec {
                     "the truncation family bypasses quantizer and encoder stages",
                 )?;
                 want(self.lossless.is_some(), "truncation needs a lossless stage")
+            }
+            PredSpec::ConstBlock { block, keep } => {
+                want(
+                    (1..=1 << 20).contains(&block),
+                    "constblock block size must be 1..=2^20",
+                )?;
+                want(
+                    keep.map(|k| (1..=8).contains(&k)).unwrap_or(true),
+                    "constblock keep-bytes must be 1..=8",
+                )?;
+                want(
+                    self.quant.is_none(),
+                    "the constblock family bypasses the quantizer stage",
+                )?;
+                want(
+                    matches!(self.enc, Some(EncSpec::Raw)),
+                    "the constblock family supports only the raw encoder",
+                )?;
+                want(self.lossless.is_some(), "constblock needs a lossless stage")
             }
             PredSpec::Pastri { period, .. } => {
                 want(
@@ -839,6 +944,12 @@ impl PipelineSpec {
             }),
             PredSpec::Truncation { keep } => Box::new(TruncationCompressor {
                 name,
+                keep_bytes: keep,
+                lossless: self.lossless.expect("validated").to_string(),
+            }),
+            PredSpec::ConstBlock { block, keep } => Box::new(SzxCompressor {
+                name,
+                block: block as usize,
                 keep_bytes: keep,
                 lossless: self.lossless.expect("validated").to_string(),
             }),
@@ -983,6 +1094,11 @@ impl PipelineBuilder {
         Self::new(PredSpec::Truncation { keep: None })
     }
 
+    /// SZx-style constant-block fast family.
+    pub fn constblock(block: u32) -> Self {
+        Self::new(PredSpec::ConstBlock { block, keep: None })
+    }
+
     /// PaSTRI family (`bitplane` selects the SZ3 unpredictable layout).
     pub fn pastri(bitplane: bool) -> Self {
         Self::new(PredSpec::Pastri { bitplane, period: None })
@@ -1010,13 +1126,19 @@ impl PipelineBuilder {
         self
     }
 
-    /// Pin the truncation keep-bytes (truncation family only).
+    /// Pin the kept most-significant bytes (truncation and constblock
+    /// families).
     pub fn keep_bytes(mut self, k: usize) -> Self {
         match self.pred {
             PredSpec::Truncation { .. } => {
                 self.pred = PredSpec::Truncation { keep: Some(k) };
             }
-            _ => self.set_err("keep_bytes() applies to the truncation family"),
+            PredSpec::ConstBlock { block, .. } => {
+                self.pred = PredSpec::ConstBlock { block, keep: Some(k) };
+            }
+            _ => self.set_err(
+                "keep_bytes() applies to the truncation and constblock families",
+            ),
         }
         self
     }
@@ -1110,6 +1232,13 @@ impl PipelineBuilder {
                 enc: self.enc,
                 lossless: Some(lossless.unwrap_or("bypass")),
             },
+            PredSpec::ConstBlock { .. } => PipelineSpec {
+                pre: self.pre,
+                pred: self.pred,
+                quant: self.quant,
+                enc: Some(self.enc.unwrap_or(EncSpec::Raw)),
+                lossless: Some(lossless.unwrap_or("zstd")),
+            },
             PredSpec::Pastri { .. } => PipelineSpec {
                 pre: self.pre,
                 pred: self.pred,
@@ -1157,6 +1286,7 @@ pub fn catalog() -> &'static [StageInfo] {
         StageInfo { kind: "predictor", token: "block(lorenzo+regression)", params: "@s specialized codecs", summary: "SZ2-style blockwise composite (SZ3-LR)" },
         StageInfo { kind: "predictor", token: "interp", params: "(cubic|linear)", summary: "level-by-level spline interpolation (SZ3-Interp)" },
         StageInfo { kind: "predictor", token: "truncation", params: "@kN keep bytes 1..=8", summary: "byte truncation, module bypass (SZ3-Truncation)" },
+        StageInfo { kind: "predictor", token: "constblock", params: "(N) block elems 1..=2^20, then truncation[@kN]/raw", summary: "SZx-style constant-block fast path" },
         StageInfo { kind: "predictor", token: "pastri", params: "(bitplane|value) @pN period", summary: "periodic-pattern prediction for GAMESS ERI (SZ3-Pastri)" },
         StageInfo { kind: "predictor", token: "aps", params: "@EB switch bound", summary: "adaptive APS meta-pipeline (composes its own stages)" },
         StageInfo { kind: "quantizer", token: "linear", params: "@rN radius override", summary: "linear-scaling quantizer" },
@@ -1266,7 +1396,7 @@ mod tests {
 
     /// Random valid spec over the whole grammar.
     fn random_spec(rng: &mut Pcg32) -> PipelineSpec {
-        let pred = match rng.below(7) {
+        let pred = match rng.below(8) {
             0 => PredSpec::Lorenzo(rng.below(3) as u32 + 1),
             1 => PredSpec::Zero,
             2 => PredSpec::Block { specialized: rng.below(2) == 0 },
@@ -1281,6 +1411,10 @@ mod tests {
             5 => PredSpec::Pastri {
                 bitplane: rng.below(2) == 0,
                 period: if rng.below(2) == 0 { None } else { Some(rng.below(200) + 1) },
+            },
+            6 => PredSpec::ConstBlock {
+                block: [1u32, 2, 32, 256, 1 << 20][rng.below(5)],
+                keep: if rng.below(2) == 0 { None } else { Some(rng.below(8) + 1) },
             },
             _ => PredSpec::Aps {
                 switch_eb: [0.5, 0.25, 2.0, 0.75][rng.below(4)],
@@ -1319,6 +1453,13 @@ mod tests {
             PredSpec::Truncation { .. } => {
                 PipelineSpec { pre, pred, quant: None, enc: None, lossless: Some(ll) }
             }
+            PredSpec::ConstBlock { .. } => PipelineSpec {
+                pre,
+                pred,
+                quant: None,
+                enc: Some(EncSpec::Raw),
+                lossless: Some(ll),
+            },
             PredSpec::Pastri { .. } => PipelineSpec {
                 pre,
                 pred,
@@ -1388,6 +1529,15 @@ mod tests {
             "interp(quintic)/linear/huffman/zstd",   // unknown basis
             "truncation@k9/bypass",                  // keep out of range
             "truncation/huffman/zstd",               // truncation takes 1 stage
+            "constblock(0)/truncation/raw/zstd",     // zero block size
+            "constblock(2000000)/truncation/raw/zstd", // block > 2^20
+            "constblock(8+8)/truncation/raw/zstd",   // one argument only
+            "constblock@k2/truncation/raw/zstd",     // keep rides the mid-token
+            "constblock(32)/linear/raw/zstd",        // mid stage must be truncation
+            "constblock(32)/truncation@k9/raw/zstd", // keep out of range
+            "constblock(32)/truncation/huffman/zstd", // constblock needs raw
+            "constblock(32)/truncation/raw",         // missing lossless
+            "constblock(32)/raw/zstd",               // missing mid stage
             "pastri(bitplane)/huffman/zstd",         // pastri needs fixed_huffman
             "pastri(sideways)/fixed_huffman/zstd",   // unknown layout
             "aps/linear/huffman/zstd",               // aps takes no stages
@@ -1546,10 +1696,12 @@ mod tests {
                     let head = match info.token {
                         "interp" => "interp(cubic)".to_string(),
                         "pastri" => "pastri(bitplane)".to_string(),
+                        "constblock" => "constblock(32)".to_string(),
                         t => t.to_string(),
                     };
                     let tail = match info.token {
                         "truncation" => "/bypass",
+                        "constblock" => "/truncation/raw/zstd",
                         "pastri" => "/fixed_huffman/zstd",
                         "aps" => "",
                         _ => "/linear/huffman/zstd",

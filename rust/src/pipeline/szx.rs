@@ -1,0 +1,386 @@
+//! The `constblock` family — an SZx-style ultra-fast compressor (Yu et
+//! al., arXiv 2201.13020, "Ultrafast Error-Bounded Lossy Compression for
+//! Scientific Datasets"): scan fixed-size blocks, emit each *constant*
+//! block (every value within `eb` of a single representative) as one
+//! stored mean plus a bitmap bit, and byte-truncate the values of the
+//! remaining blocks exactly like [`super::truncation`]. No prediction, no
+//! quantization, no entropy coding — every loop is flat and feeds the
+//! runtime-dispatched kernels in [`crate::util::simd`], which is what buys
+//! the order-of-magnitude throughput gap on constant-heavy data.
+//!
+//! Spec grammar: `constblock(B)/truncation[@kN]/raw/<lossless>` — the
+//! encoder slot must be `raw` (there is nothing to entropy-code), mirroring
+//! how `pastri` pins its encoder.
+//!
+//! Stream layout after the common [`StreamHeader`]:
+//!
+//! ```text
+//! u32 block_elems · u8 keep_bytes · str lossless ·
+//! block(bitmap)   — bit i set ⇔ block i is constant, LSB-first
+//! block(consts)   — one scalar (LE) per constant block, in block order
+//! block(lossless(planes)) — non-constant values, plane-major truncated
+//! ```
+//!
+//! Every length is cross-checked against the header's element count before
+//! any allocation is sized from stream bytes.
+
+use super::truncation::{from_planes, to_planes, truncation_abs_error};
+use super::{CompressConf, Compressor, StreamHeader};
+use crate::byteio::{ByteReader, ByteWriter};
+use crate::data::{Field, FieldValues, Scalar};
+use crate::error::{Result, SzError};
+use crate::lossless;
+use crate::util::simd;
+
+/// Largest accepted block size (elements). Big enough for any sensible
+/// configuration; small enough that a corrupt stream cannot turn one
+/// bitmap bit into an unbounded fill.
+pub const MAX_BLOCK_ELEMS: usize = 1 << 20;
+
+/// The SZx-style constant-block compressor.
+pub struct SzxCompressor {
+    /// Stream-header identity (canonical spec for spec-built instances,
+    /// the `szx` alias for [`Default`]).
+    pub name: String,
+    /// Elements per scan block.
+    pub block: usize,
+    /// Most-significant bytes kept for non-constant values (`None` =
+    /// derive the smallest k honoring the bound, as in truncation).
+    pub keep_bytes: Option<usize>,
+    /// Lossless stage applied to the truncated planes.
+    pub lossless: String,
+}
+
+impl Default for SzxCompressor {
+    fn default() -> Self {
+        SzxCompressor {
+            name: "szx".to_string(),
+            block: 32,
+            keep_bytes: None,
+            lossless: "zstd".to_string(),
+        }
+    }
+}
+
+/// Per-dtype constant-block scan: returns `(bitmap, const_bytes,
+/// nonconst_raw)`. A block is constant when the representative the
+/// decompressor will materialize — `T::from_f64((lo+hi)/2)` — sits within
+/// `eb` of both extremes, which bounds every element's error by `eb`.
+fn scan_blocks<T: Scalar>(values: &[T], block: usize, eb: f64) -> (Vec<u8>, Vec<u8>, Vec<u8>) {
+    let nblocks = values.len().div_ceil(block);
+    let mut bitmap = vec![0u8; nblocks.div_ceil(8)];
+    let mut consts = ByteWriter::new();
+    let mut rest = ByteWriter::new();
+    for (bi, chunk) in values.chunks(block).enumerate() {
+        let (lo, hi) = simd::minmax(chunk);
+        let mut constant = false;
+        // an all-NaN or NaN-containing block never satisfies the bound
+        // check (comparisons with NaN are false), so it stays verbatim
+        if lo.is_finite() && hi.is_finite() {
+            let rec = T::from_f64((lo + hi) / 2.0);
+            let r = rec.to_f64();
+            if (r - lo).abs() <= eb && (r - hi).abs() <= eb {
+                bitmap[bi / 8] |= 1 << (bi % 8);
+                rec.write(&mut consts);
+                constant = true;
+            }
+        }
+        if !constant {
+            for &x in chunk {
+                x.write(&mut rest);
+            }
+        }
+    }
+    (bitmap, consts.finish(), rest.finish())
+}
+
+/// Rebuild the value vector from bitmap + constants + truncated remainder.
+fn rebuild<T: Scalar>(
+    n: usize,
+    block: usize,
+    keep: usize,
+    bitmap: &[u8],
+    consts: &[u8],
+    planes: &[u8],
+) -> Result<Vec<T>> {
+    let nblocks = n.div_ceil(block);
+    if bitmap.len() != nblocks.div_ceil(8) {
+        return Err(SzError::corrupt(format!(
+            "constblock: {} bitmap bytes for {nblocks} blocks",
+            bitmap.len()
+        )));
+    }
+    let is_const = |bi: usize| bitmap[bi / 8] >> (bi % 8) & 1 == 1;
+    let block_len = |bi: usize| if bi + 1 == nblocks { n - bi * block } else { block };
+    let mut const_blocks = 0usize;
+    let mut rest_elems = 0usize;
+    for bi in 0..nblocks {
+        if is_const(bi) {
+            const_blocks += 1;
+        } else {
+            rest_elems += block_len(bi);
+        }
+    }
+    let want_consts = const_blocks
+        .checked_mul(T::SIZE)
+        .ok_or_else(|| SzError::corrupt("constblock: constant byte count overflows"))?;
+    if consts.len() != want_consts {
+        return Err(SzError::corrupt(format!(
+            "constblock: {} constant bytes for {const_blocks} constant blocks",
+            consts.len()
+        )));
+    }
+    let want_planes = rest_elems
+        .checked_mul(keep)
+        .ok_or_else(|| SzError::corrupt("constblock: plane size overflows"))?;
+    if planes.len() != want_planes {
+        return Err(SzError::corrupt(format!(
+            "constblock: {} plane bytes for {rest_elems} elements × {keep} kept",
+            planes.len()
+        )));
+    }
+    let raw = from_planes(planes, rest_elems, T::SIZE, keep);
+    let mut cr = ByteReader::new(consts);
+    let mut rr = ByteReader::new(&raw);
+    let mut out = Vec::with_capacity(n);
+    for bi in 0..nblocks {
+        let len = block_len(bi);
+        if is_const(bi) {
+            let v = T::read(&mut cr)?;
+            out.extend(std::iter::repeat(v).take(len));
+        } else {
+            for _ in 0..len {
+                out.push(T::read(&mut rr)?);
+            }
+        }
+    }
+    Ok(out)
+}
+
+impl SzxCompressor {
+    /// Smallest `keep` honoring the absolute bound for the non-constant
+    /// remainder (same derivation as [`super::truncation`]).
+    fn derive_keep(&self, field: &Field, eb: f64, max_abs: f64) -> Result<usize> {
+        let total = match &field.values {
+            FieldValues::F32(_) | FieldValues::I32(_) => 4,
+            FieldValues::F64(_) => 8,
+        };
+        if let Some(k) = self.keep_bytes {
+            if k == 0 || k > total {
+                return Err(SzError::config(format!(
+                    "keep_bytes {k} invalid for {total}-byte data"
+                )));
+            }
+            return Ok(k);
+        }
+        let integer = matches!(field.values, FieldValues::I32(_));
+        for k in 1..total {
+            let err = if integer {
+                (8.0 * (total - k) as f64).exp2()
+            } else {
+                truncation_abs_error(max_abs, total, k)
+            };
+            if err <= eb {
+                return Ok(k);
+            }
+        }
+        Ok(total)
+    }
+}
+
+impl Compressor for SzxCompressor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compress(&self, field: &Field, conf: &CompressConf) -> Result<Vec<u8>> {
+        if self.block == 0 || self.block > MAX_BLOCK_ELEMS {
+            return Err(SzError::config(format!(
+                "constblock: block size {} outside 1..={MAX_BLOCK_ELEMS}",
+                self.block
+            )));
+        }
+        let (lo, hi) = field.value_range();
+        let eb = conf.bound.to_abs_with_range(|| (lo, hi))?;
+        let keep = self.derive_keep(field, eb, lo.abs().max(hi.abs()))?;
+        let mut w = ByteWriter::new();
+        StreamHeader::for_field(&self.name, field).write(&mut w);
+        w.put_u32(self.block as u32);
+        w.put_u8(keep as u8);
+        w.put_str(&self.lossless);
+        let (bitmap, consts, rest, bytes_per) = match &field.values {
+            FieldValues::F32(v) => {
+                let (b, c, r) = scan_blocks(v, self.block, eb);
+                (b, c, r, 4)
+            }
+            FieldValues::F64(v) => {
+                let (b, c, r) = scan_blocks(v, self.block, eb);
+                (b, c, r, 8)
+            }
+            FieldValues::I32(v) => {
+                let (b, c, r) = scan_blocks(v, self.block, eb);
+                (b, c, r, 4)
+            }
+        };
+        w.put_block(&bitmap);
+        w.put_block(&consts);
+        let planes = to_planes(&rest, bytes_per, keep);
+        let ll = lossless::by_name(&self.lossless)
+            .ok_or_else(|| SzError::config(format!("unknown lossless {}", self.lossless)))?;
+        w.put_block(&ll.compress(&planes)?);
+        Ok(w.finish())
+    }
+
+    fn decompress(&self, stream: &[u8]) -> Result<Field> {
+        let mut r = ByteReader::new(stream);
+        let header = StreamHeader::read(&mut r)?;
+        let block = r.get_u32()? as usize;
+        if block == 0 || block > MAX_BLOCK_ELEMS {
+            return Err(SzError::corrupt(format!(
+                "constblock: block size {block} outside 1..={MAX_BLOCK_ELEMS}"
+            )));
+        }
+        let keep = r.get_u8()? as usize;
+        let ll_name = r.get_str()?;
+        let ll = lossless::by_name(&ll_name)
+            .ok_or_else(|| SzError::corrupt(format!("unknown lossless {ll_name}")))?;
+        let bytes_per = match header.dtype.as_str() {
+            "f32" | "i32" => 4,
+            "f64" => 8,
+            other => return Err(SzError::corrupt(format!("unknown dtype {other}"))),
+        };
+        if keep == 0 || keep > bytes_per {
+            return Err(SzError::corrupt(format!(
+                "constblock: keep {keep} invalid for {bytes_per}-byte data"
+            )));
+        }
+        let bitmap = r.get_block()?.to_vec();
+        let consts = r.get_block()?.to_vec();
+        let planes = ll.decompress(r.get_block()?)?;
+        let n = header.len();
+        let values = match header.dtype.as_str() {
+            "f32" => FieldValues::F32(rebuild(n, block, keep, &bitmap, &consts, &planes)?),
+            "f64" => FieldValues::F64(rebuild(n, block, keep, &bitmap, &consts, &planes)?),
+            "i32" => FieldValues::I32(rebuild(n, block, keep, &bitmap, &consts, &planes)?),
+            other => return Err(SzError::corrupt(format!("unknown dtype {other}"))),
+        };
+        Field::new(header.field_name, &header.dims, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{decompress_any, test_support::roundtrip_bound_check, ErrorBound};
+    use crate::util::prop;
+
+    fn constant_heavy(n: usize, rng: &mut crate::util::rng::Pcg32) -> Vec<f32> {
+        // long constant plateaus with occasional noisy bursts — the SZx
+        // design target (instrument backgrounds, sparse events)
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            if rng.below(5) == 0 {
+                let burst = (rng.below(40) + 1).min(n - out.len());
+                for _ in 0..burst {
+                    out.push(rng.uniform(-100.0, 100.0) as f32);
+                }
+            } else {
+                let level = rng.uniform(-10.0, 10.0) as f32;
+                let run = (rng.below(200) + 20).min(n - out.len());
+                out.extend(std::iter::repeat(level).take(run));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip_respects_bound_on_mixed_data() {
+        prop::cases(40, 0x5a1, |rng| {
+            let n = rng.below(3000) + 10;
+            let vals = constant_heavy(n, rng);
+            let f = Field::f32("x", &[n], vals).unwrap();
+            let eb = 10f64.powf(rng.uniform(-4.0, -1.0));
+            let conf = CompressConf::new(ErrorBound::Abs(eb));
+            let block = [8usize, 32, 256][rng.below(3)];
+            let c = SzxCompressor { block, ..Default::default() };
+            roundtrip_bound_check(&c, &f, &conf);
+        });
+    }
+
+    #[test]
+    fn all_dtypes_roundtrip() {
+        let conf = CompressConf::new(ErrorBound::Abs(0.5));
+        let c = SzxCompressor::default();
+        let f32s = Field::f32("a", &[100], vec![7.0; 100]).unwrap();
+        let f64s = Field::f64("b", &[100], (0..100).map(|i| (i / 40) as f64).collect()).unwrap();
+        let i32s =
+            Field::new("c", &[100], FieldValues::I32(vec![3; 100])).unwrap();
+        for f in [&f32s, &f64s, &i32s] {
+            roundtrip_bound_check(&c, f, &conf);
+        }
+    }
+
+    #[test]
+    fn constant_field_compresses_hard() {
+        let f = Field::f32("flat", &[1 << 14], vec![42.5; 1 << 14]).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+        let ratio = roundtrip_bound_check(&SzxCompressor::default(), &f, &conf);
+        // 16384 f32 = 64 KiB; 512 blocks → 64 B bitmap + 2 KiB consts,
+        // zstd squeezes the constants further
+        assert!(ratio > 25.0, "constant field ratio {ratio}");
+    }
+
+    #[test]
+    fn partial_last_block_roundtrips() {
+        for n in [1usize, 31, 32, 33, 63, 65] {
+            let vals: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+            let f = Field::f32("p", &[n], vals).unwrap();
+            let conf = CompressConf::new(ErrorBound::Abs(1e-6));
+            roundtrip_bound_check(&SzxCompressor::default(), &f, &conf);
+        }
+    }
+
+    #[test]
+    fn nan_blocks_stay_verbatim_nonconstant() {
+        let mut vals = vec![1.0f32; 64];
+        vals[40] = f32::NAN;
+        let f = Field::f32("nan", &[64], vals).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+        let c = SzxCompressor { block: 32, keep_bytes: Some(4), ..Default::default() };
+        let out = decompress_any(&c.compress(&f, &conf).unwrap()).unwrap();
+        let FieldValues::F32(dec) = &out.values else { panic!("dtype") };
+        assert!(dec[40].is_nan(), "NaN must survive the verbatim path");
+        assert_eq!(dec[0], 1.0);
+    }
+
+    #[test]
+    fn invalid_block_sizes_rejected() {
+        let f = Field::f32("x", &[8], vec![0.0; 8]).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(0.1));
+        for block in [0usize, MAX_BLOCK_ELEMS + 1] {
+            let c = SzxCompressor { block, ..Default::default() };
+            assert!(c.compress(&f, &conf).is_err(), "block {block}");
+        }
+    }
+
+    #[test]
+    fn corrupt_sections_error_not_panic() {
+        let vals: Vec<f32> = (0..300).map(|i| (i / 100) as f32).collect();
+        let f = Field::f32("x", &[300], vals).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(1e-4));
+        let c = SzxCompressor::default();
+        let stream = c.compress(&f, &conf).unwrap();
+        // truncating the stream at every prefix must error cleanly
+        for cut in 0..stream.len() {
+            assert!(c.decompress(&stream[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        // flipping bytes across the stream must never panic (it may decode
+        // to junk values, but structural checks catch length lies)
+        for at in 0..stream.len() {
+            let mut bad = stream.clone();
+            bad[at] ^= 0xA5;
+            let _ = std::panic::catch_unwind(|| c.decompress(&bad))
+                .expect("decompress must not panic");
+        }
+    }
+}

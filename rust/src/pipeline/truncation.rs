@@ -41,7 +41,7 @@ impl Default for TruncationCompressor {
 /// Worst-case absolute error of keeping `keep` of `total` bytes, given the
 /// largest exponent present in the data: dropping `b` low bytes of the
 /// mantissa changes the value by < 2^(8b) ulps.
-fn truncation_abs_error(max_abs: f64, total: usize, keep: usize) -> f64 {
+pub(super) fn truncation_abs_error(max_abs: f64, total: usize, keep: usize) -> f64 {
     if max_abs == 0.0 {
         return 0.0;
     }
@@ -84,7 +84,9 @@ impl TruncationCompressor {
 }
 
 /// Split `bytes_per` per-value bytes into plane-major order keeping `keep`.
-fn to_planes(raw: &[u8], bytes_per: usize, keep: usize) -> Vec<u8> {
+/// Shared with the `constblock` family, which truncates its non-constant
+/// remainder through the exact same layout.
+pub(super) fn to_planes(raw: &[u8], bytes_per: usize, keep: usize) -> Vec<u8> {
     let n = raw.len() / bytes_per;
     let mut out = Vec::with_capacity(n * keep);
     // plane 0 = most significant byte (little-endian: index bytes_per-1)
@@ -97,7 +99,7 @@ fn to_planes(raw: &[u8], bytes_per: usize, keep: usize) -> Vec<u8> {
     out
 }
 
-fn from_planes(planes: &[u8], n: usize, bytes_per: usize, keep: usize) -> Vec<u8> {
+pub(super) fn from_planes(planes: &[u8], n: usize, bytes_per: usize, keep: usize) -> Vec<u8> {
     let mut raw = vec![0u8; n * bytes_per];
     for p in 0..keep {
         let b = bytes_per - 1 - p;

@@ -54,8 +54,10 @@ impl CompositeSelector {
         let nd = dims.len();
         let strides = {
             let mut s = vec![1usize; nd];
-            for i in (0..nd - 1).rev() {
-                s[i] = s[i + 1] * dims[i + 1];
+            let mut acc = 1usize;
+            for (st, &d) in s.iter_mut().zip(dims).rev() {
+                *st = acc;
+                acc = acc.saturating_mul(d);
             }
             s
         };
@@ -67,24 +69,24 @@ impl CompositeSelector {
             let nsubsets = 1usize << nd;
             'subset: for s in 1..nsubsets {
                 let mut off = flat;
-                for d in 0..nd {
+                for (d, (&stride, &i)) in strides.iter().zip(idx.iter()).enumerate() {
                     if s >> d & 1 == 1 {
-                        if idx[d] == 0 {
+                        if i == 0 {
                             continue 'subset; // zero padding
                         }
-                        off -= strides[d];
+                        off -= stride;
                     }
                 }
                 let sign = if (s.count_ones() & 1) == 1 { 1.0 } else { -1.0 };
-                pred += sign * block[off];
+                pred += sign * block.get(off).copied().unwrap_or(0.0);
             }
             sum += (x - pred).abs();
-            for d in (0..nd).rev() {
-                idx[d] += 1;
-                if idx[d] < dims[d] {
+            for (i, &d) in idx.iter_mut().zip(dims).rev() {
+                *i += 1;
+                if *i < d {
                     break;
                 }
-                idx[d] = 0;
+                *i = 0;
             }
         }
         sum / block.len() as f64

@@ -11,7 +11,7 @@
 //! the reference/fallback and must stay bit-compatible with `ref.py`.
 
 use crate::byteio::{ByteReader, ByteWriter};
-use crate::error::Result;
+use crate::error::{Result, SzError};
 
 /// A fitted (and possibly coefficient-quantized) hyperplane for one block.
 #[derive(Clone, Debug, PartialEq)]
@@ -19,6 +19,18 @@ pub struct RegressionFit {
     /// Per-axis slopes then intercept: `coeffs[d]` for axis `d`,
     /// `coeffs[ndim]` is the constant term (value at local origin).
     pub coeffs: Vec<f64>,
+}
+
+/// Advance a row-major multi-index one step within `dims`.
+#[inline]
+fn advance_row_major(idx: &mut [usize], dims: &[usize]) {
+    for (i, &d) in idx.iter_mut().zip(dims).rev() {
+        *i += 1;
+        if *i < d {
+            return;
+        }
+        *i = 0;
+    }
 }
 
 impl RegressionFit {
@@ -30,28 +42,21 @@ impl RegressionFit {
         let n: usize = dims.iter().product();
         debug_assert_eq!(block.len(), n);
         let mean = block.iter().sum::<f64>() / n as f64;
-        let mut slopes = vec![0.0; nd];
         // Σ_i (i_d - c_d) * x_i for each axis, with c_d = (n_d - 1)/2.
         let mut idx = vec![0usize; nd];
         let mut sums = vec![0.0; nd];
         for &x in block {
-            for d in 0..nd {
-                sums[d] += (idx[d] as f64 - (dims[d] as f64 - 1.0) / 2.0) * x;
+            for ((s, &i), &d) in sums.iter_mut().zip(idx.iter()).zip(dims) {
+                *s += (i as f64 - (d as f64 - 1.0) / 2.0) * x;
             }
-            // advance row-major index
-            for d in (0..nd).rev() {
-                idx[d] += 1;
-                if idx[d] < dims[d] {
-                    break;
-                }
-                idx[d] = 0;
-            }
+            advance_row_major(&mut idx, dims);
         }
-        for d in 0..nd {
-            let nd_f = dims[d] as f64;
+        let mut slopes = vec![0.0; nd];
+        for (slope, (&sum, &d)) in slopes.iter_mut().zip(sums.iter().zip(dims)) {
+            let nd_f = d as f64;
             // Σ (i - c)^2 over the grid = N/n_d * n_d(n_d^2-1)/12
             let denom = n as f64 * (nd_f * nd_f - 1.0) / 12.0;
-            slopes[d] = if denom > 0.0 { sums[d] / denom } else { 0.0 };
+            *slope = if denom > 0.0 { sum / denom } else { 0.0 };
         }
         let intercept =
             mean - slopes.iter().zip(dims).map(|(b, &d)| b * (d as f64 - 1.0) / 2.0).sum::<f64>();
@@ -63,30 +68,23 @@ impl RegressionFit {
     /// Predicted value at local block index `idx`.
     #[inline]
     pub fn predict(&self, idx: &[usize]) -> f64 {
-        let nd = self.coeffs.len() - 1;
-        let mut v = self.coeffs[nd];
-        for d in 0..nd {
-            v += self.coeffs[d] * idx[d] as f64;
+        let Some((intercept, slopes)) = self.coeffs.split_last() else {
+            return 0.0;
+        };
+        let mut v = *intercept;
+        for (&c, &i) in slopes.iter().zip(idx) {
+            v += c * i as f64;
         }
         v
     }
 
     /// Mean |residual| of the fit over the block (selection criterion input).
     pub fn mean_abs_error(&self, block: &[f64], dims: &[usize]) -> f64 {
-        let nd = dims.len();
-        let mut idx = vec![0usize; nd];
+        let mut idx = vec![0usize; dims.len()];
         let mut sum = 0.0;
         for &x in block {
             sum += (x - self.predict(&idx)).abs();
-            let mut d = nd;
-            while d > 0 {
-                d -= 1;
-                idx[d] += 1;
-                if idx[d] < dims[d] {
-                    break;
-                }
-                idx[d] = 0;
-            }
+            advance_row_major(&mut idx, dims);
         }
         sum / block.len() as f64
     }
@@ -96,20 +94,23 @@ impl RegressionFit {
     /// the induced prediction perturbation stays well under `eb`, and the
     /// quantizer downstream still enforces the bound regardless.
     pub fn quantize(&self, eb: f64, block_side: usize) -> (Vec<i64>, RegressionFit) {
-        let nd = self.coeffs.len() - 1;
+        let nd = self.coeffs.len().saturating_sub(1);
         let slope_step = (eb / (2.0 * block_side as f64 * nd.max(1) as f64)).max(1e-300);
         let icpt_step = (eb / 2.0).max(1e-300);
         let mut q = Vec::with_capacity(nd + 1);
         let mut rec = Vec::with_capacity(nd + 1);
-        for d in 0..nd {
-            let qi = (self.coeffs[d] / slope_step).round();
+        let Some((intercept, slopes)) = self.coeffs.split_last() else {
+            return (q, RegressionFit { coeffs: rec });
+        };
+        for &c in slopes {
+            let qi = (c / slope_step).round();
             // clamp to i64-safe magnitude; huge coeffs mean terrible fit and
             // regression will lose selection anyway
             let qi = qi.clamp(-9e17, 9e17) as i64;
             q.push(qi);
             rec.push(qi as f64 * slope_step);
         }
-        let qi = (self.coeffs[nd] / icpt_step).round().clamp(-9e17, 9e17) as i64;
+        let qi = (*intercept / icpt_step).round().clamp(-9e17, 9e17) as i64;
         q.push(qi);
         rec.push(qi as f64 * icpt_step);
         (q, RegressionFit { coeffs: rec })
@@ -117,14 +118,17 @@ impl RegressionFit {
 
     /// Rebuild the dequantized plane from stored integers.
     pub fn dequantize(q: &[i64], eb: f64, block_side: usize) -> RegressionFit {
-        let nd = q.len() - 1;
+        let nd = q.len().saturating_sub(1);
         let slope_step = (eb / (2.0 * block_side as f64 * nd.max(1) as f64)).max(1e-300);
         let icpt_step = (eb / 2.0).max(1e-300);
         let mut coeffs = Vec::with_capacity(q.len());
-        for &qi in &q[..nd] {
+        let Some((icpt, slopes)) = q.split_last() else {
+            return RegressionFit { coeffs };
+        };
+        for &qi in slopes {
             coeffs.push(qi as f64 * slope_step);
         }
-        coeffs.push(q[nd] as f64 * icpt_step);
+        coeffs.push(*icpt as f64 * icpt_step);
         RegressionFit { coeffs }
     }
 
@@ -138,6 +142,11 @@ impl RegressionFit {
 
     /// Deserialize `n` quantized coefficients.
     pub fn load_quantized(n: usize, r: &mut ByteReader) -> Result<Vec<i64>> {
+        // Each coefficient is at least one varint byte; cap the count by the
+        // remaining payload so a hostile `n` cannot size the allocation.
+        if n > r.remaining() {
+            return Err(SzError::corrupt("regression: coefficient count exceeds payload"));
+        }
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             let zz = r.get_varint()?;

@@ -11,6 +11,11 @@ use crate::byteio::{ByteReader, ByteWriter};
 use crate::data::Scalar;
 use crate::error::{Result, SzError};
 
+/// Largest total point coverage accepted from a serialized bounds map —
+/// matches the pipeline layer's header element cap, so any legitimate
+/// field fits while `len()` can never overflow on hostile run lengths.
+const MAX_COVERED_POINTS: u64 = 1 << 40;
+
 /// Piecewise-constant per-point error bounds over flat indices.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BoundsMap {
@@ -48,14 +53,30 @@ impl BoundsMap {
     }
 
     fn load(r: &mut ByteReader) -> Result<Self> {
-        let k = r.get_varint()? as usize;
+        // Each serialized segment is at least 9 bytes (varint run length +
+        // f64 bound), so the remaining payload caps the segment count —
+        // reject hostile counts before sizing the allocation by them.
+        let k64 = r.get_varint()?;
+        let cap = (r.remaining() / 9) as u64;
+        if k64 > cap {
+            return Err(SzError::corrupt("elementwise: segment count exceeds payload"));
+        }
+        let k = usize::try_from(k64)
+            .map_err(|_| SzError::corrupt("elementwise: segment count overflows usize"))?;
         let mut segments = Vec::with_capacity(k);
+        let mut covered = 0u64;
         for _ in 0..k {
-            let n = r.get_varint()? as usize;
+            let n64 = r.get_varint()?;
             let b = r.get_f64()?;
-            if b <= 0.0 {
+            if b <= 0.0 || !b.is_finite() {
                 return Err(SzError::corrupt("elementwise: non-positive bound"));
             }
+            covered = covered
+                .checked_add(n64)
+                .filter(|&c| c <= MAX_COVERED_POINTS)
+                .ok_or_else(|| SzError::corrupt("elementwise: bounds map covers too many points"))?;
+            let n = usize::try_from(n64)
+                .map_err(|_| SzError::corrupt("elementwise: run length overflows usize"))?;
             segments.push((n, b));
         }
         Ok(BoundsMap { segments })
@@ -90,7 +111,10 @@ impl<T: Scalar> ElementwiseQuantizer<T> {
     #[inline]
     fn next_bound(&mut self) -> f64 {
         // Clamp at the last segment if walked past the declared coverage.
-        let (len, b) = self.map.segments[self.seg.min(self.map.segments.len() - 1)];
+        let at = self.seg.min(self.map.segments.len().saturating_sub(1));
+        let Some(&(len, b)) = self.map.segments.get(at) else {
+            return f64::INFINITY; // unreachable: the map is never empty
+        };
         self.seg_pos += 1;
         if self.seg_pos >= len && self.seg + 1 < self.map.segments.len() {
             self.seg += 1;
@@ -155,10 +179,26 @@ impl<T: Scalar> Quantizer<T> for ElementwiseQuantizer<T> {
     }
 
     fn load(&mut self, r: &mut ByteReader) -> Result<()> {
-        self.map = BoundsMap::load(r)?;
+        let map = BoundsMap::load(r)?;
+        if map.is_empty() {
+            return Err(SzError::corrupt("elementwise: empty bounds map"));
+        }
+        self.map = map;
         self.radius = r.get_u32()?;
-        let n = r.get_varint()? as usize;
+        if self.radius == 0 {
+            return Err(SzError::corrupt("elementwise: zero radius"));
+        }
+        let n64 = r.get_varint()?;
+        let cap = (r.remaining() / T::SIZE) as u64;
+        if n64 > cap {
+            return Err(SzError::corrupt(
+                "elementwise: unpredictable count exceeds payload",
+            ));
+        }
+        let n = usize::try_from(n64)
+            .map_err(|_| SzError::corrupt("elementwise: count overflows usize"))?;
         self.unpred.clear();
+        self.unpred.reserve(n);
         for _ in 0..n {
             self.unpred.push(T::read(r)?);
         }

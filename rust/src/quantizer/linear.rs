@@ -6,6 +6,10 @@ use super::{Quantizer, UNPREDICTABLE};
 use crate::byteio::{ByteReader, ByteWriter};
 use crate::data::Scalar;
 use crate::error::{Result, SzError};
+use crate::util::simd;
+
+// The SIMD kernel hardcodes its escape code; keep the two in lockstep.
+const _: () = assert!(simd::ESCAPE == UNPREDICTABLE);
 
 /// Linear-scaling quantizer with absolute error bound `eb`.
 pub struct LinearQuantizer<T: Scalar> {
@@ -40,6 +44,26 @@ impl<T: Scalar> LinearQuantizer<T> {
     /// Number of values stored as unpredictable so far.
     pub fn unpredictable_count(&self) -> usize {
         self.unpred.len()
+    }
+
+    /// Bulk-quantize a row of values against precomputed predictions via
+    /// the runtime-dispatched SIMD kernel. Bit-identical to calling
+    /// [`Quantizer::quantize`] once per element: recovered values
+    /// overwrite `values`, bin codes land in `codes`, and out-of-range
+    /// inputs (left untouched in `values`) are appended to the
+    /// unpredictable store in order.
+    pub fn quantize_row(&mut self, values: &mut [T], preds: &[f64], codes: &mut [u32]) {
+        debug_assert_eq!(values.len(), preds.len());
+        debug_assert_eq!(values.len(), codes.len());
+        let escapes = simd::linear_quantize(values, preds, self.eb, self.radius, codes);
+        if escapes > 0 {
+            self.unpred.reserve(escapes);
+            for (&v, &c) in values.iter().zip(codes.iter()) {
+                if c == UNPREDICTABLE {
+                    self.unpred.push(v);
+                }
+            }
+        }
     }
 }
 
@@ -97,10 +121,21 @@ impl<T: Scalar> Quantizer<T> for LinearQuantizer<T> {
     fn load(&mut self, r: &mut ByteReader) -> Result<()> {
         self.eb = r.get_f64()?;
         self.radius = r.get_u32()?;
-        if self.eb <= 0.0 || self.radius == 0 {
+        if self.eb <= 0.0 || !self.eb.is_finite() || self.radius == 0 {
             return Err(SzError::corrupt("linear quantizer: bad params"));
         }
-        let n = r.get_varint()? as usize;
+        // The count is attacker-controlled: cap it by the bytes actually
+        // left in the stream before reserving, so a hostile varint errors
+        // instead of aborting on a doomed multi-exabyte allocation.
+        let n64 = r.get_varint()?;
+        let cap = (r.remaining() / T::SIZE) as u64;
+        if n64 > cap {
+            return Err(SzError::corrupt(
+                "linear quantizer: unpredictable count exceeds payload",
+            ));
+        }
+        let n = usize::try_from(n64)
+            .map_err(|_| SzError::corrupt("linear quantizer: count overflows usize"))?;
         self.unpred.clear();
         self.unpred.reserve(n);
         for _ in 0..n {
@@ -163,6 +198,36 @@ mod tests {
             let bounds = vec![eb; n];
             let mut q = LinearQuantizer::<f64>::with_radius(eb, 256);
             roundtrip_check(&mut q, &data, &preds, &bounds);
+        });
+    }
+
+    #[test]
+    fn quantize_row_matches_pointwise_including_unpred_order() {
+        prop::cases(40, 0x11c, |rng| {
+            let eb = 10f64.powf(rng.uniform(-5.0, 0.0));
+            let n = rng.below(300) + 1;
+            let data: Vec<f64> = (0..n).map(|_| rng.uniform(-100.0, 100.0)).collect();
+            // a mix of good and wildly wrong predictions => some escapes
+            let preds: Vec<f64> = data
+                .iter()
+                .map(|&d| if rng.below(5) == 0 { d + 1e6 } else { d + rng.normal() * eb })
+                .collect();
+            let mut point = LinearQuantizer::<f64>::with_radius(eb, 64);
+            let mut want_codes = Vec::new();
+            let mut want_vals = Vec::new();
+            for (&d, &p) in data.iter().zip(&preds) {
+                let (c, rec) = point.quantize(d, p);
+                want_codes.push(c);
+                want_vals.push(rec.to_bits());
+            }
+            let mut bulk = LinearQuantizer::<f64>::with_radius(eb, 64);
+            let mut values = data.clone();
+            let mut codes = vec![0u32; n];
+            bulk.quantize_row(&mut values, &preds, &mut codes);
+            assert_eq!(codes, want_codes);
+            let got: Vec<u64> = values.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want_vals);
+            assert_eq!(bulk.unpred, point.unpred, "escape replay order must match");
         });
     }
 

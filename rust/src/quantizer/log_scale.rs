@@ -9,6 +9,12 @@ use crate::byteio::{ByteReader, ByteWriter};
 use crate::data::Scalar;
 use crate::error::{Result, SzError};
 
+/// Largest radius accepted from a stream: the bin tables are O(radius)
+/// heap and CPU to rebuild, so an attacker-chosen radius must not be able
+/// to request gigabytes. 2^22 is far beyond any useful alphabet (the
+/// grammar's default is 2^15) while keeping the tables under 70 MB.
+const MAX_WIRE_RADIUS: u32 = 1 << 22;
+
 /// Geometric-then-linear binned quantizer.
 pub struct LogScaleQuantizer<T: Scalar> {
     eb: f64,
@@ -71,23 +77,15 @@ impl<T: Scalar> LogScaleQuantizer<T> {
     /// Find the positive-side bin for |diff|; None if beyond the last bin.
     #[inline]
     fn find_bin(&self, mag: f64) -> Option<usize> {
-        if mag >= *self.bounds.last().unwrap() {
+        let last = self.bounds.last().copied().unwrap_or(0.0);
+        if mag >= last {
             return None;
         }
-        // binary search over boundaries
-        let mut lo = 0usize;
-        let mut hi = self.bounds.len() - 1;
-        while lo < hi {
-            let mid = (lo + hi) / 2;
-            if mag < self.bounds[mid] {
-                hi = mid;
-            } else {
-                lo = mid + 1;
-            }
-        }
-        // bin index: 0 means below bounds[0] (central), else k. The outermost
-        // bin (lo == radius) is rejected so the signed index never reaches
-        // -radius, which would collide with UNPREDICTABLE (index 0).
+        // first boundary strictly above |diff| (bin 0 = central)
+        let lo = self.bounds.partition_point(|&b| mag >= b);
+        // The outermost bin (lo == radius) is rejected so the signed index
+        // never reaches -radius, which would collide with UNPREDICTABLE
+        // (index 0).
         if lo >= self.radius as usize {
             None
         } else {
@@ -97,11 +95,15 @@ impl<T: Scalar> LogScaleQuantizer<T> {
 
     fn index_to_residual(&self, index: u32) -> f64 {
         let r = self.radius as i64;
-        let k = index as i64 - r; // signed bin, 0 = central
+        let k = i64::from(index) - r; // signed bin, 0 = central
         match k.cmp(&0) {
             std::cmp::Ordering::Equal => 0.0,
-            std::cmp::Ordering::Greater => self.centers[(k - 1) as usize],
-            std::cmp::Ordering::Less => -self.centers[(-k - 1) as usize],
+            std::cmp::Ordering::Greater => {
+                self.centers.get((k - 1) as usize).copied().unwrap_or(0.0)
+            }
+            std::cmp::Ordering::Less => {
+                -self.centers.get((-k - 1) as usize).copied().unwrap_or(0.0)
+            }
         }
     }
 }
@@ -162,12 +164,33 @@ impl<T: Scalar> Quantizer<T> for LogScaleQuantizer<T> {
         self.alpha = r.get_f64()?;
         self.gamma = r.get_f64()?;
         self.radius = r.get_u32()?;
-        if self.eb <= 0.0 || !(0.0..=1.0).contains(&self.alpha) || self.gamma <= 1.0 {
+        if self.eb <= 0.0
+            || !self.eb.is_finite()
+            || !(0.0..=1.0).contains(&self.alpha)
+            || self.alpha == 0.0
+            || self.gamma <= 1.0
+            || !self.gamma.is_finite()
+        {
             return Err(SzError::corrupt("log_scale quantizer: bad params"));
         }
+        // The bin tables are O(radius) heap + CPU; an attacker-supplied
+        // radius of u32::MAX would burn gigabytes before the first data
+        // byte is read. Legitimate radii are in the grammar's range.
+        if !(2..=MAX_WIRE_RADIUS).contains(&self.radius) {
+            return Err(SzError::corrupt("log_scale quantizer: radius out of range"));
+        }
         self.rebuild_tables();
-        let n = r.get_varint()? as usize;
+        let n64 = r.get_varint()?;
+        let cap = (r.remaining() / T::SIZE) as u64;
+        if n64 > cap {
+            return Err(SzError::corrupt(
+                "log_scale quantizer: unpredictable count exceeds payload",
+            ));
+        }
+        let n = usize::try_from(n64)
+            .map_err(|_| SzError::corrupt("log_scale quantizer: count overflows usize"))?;
         self.unpred.clear();
+        self.unpred.reserve(n);
         for _ in 0..n {
             self.unpred.push(T::read(r)?);
         }

@@ -175,19 +175,32 @@ impl<T: Scalar> Quantizer<T> for UnpredAwareQuantizer<T> {
     fn load(&mut self, r: &mut ByteReader) -> Result<()> {
         self.eb = r.get_f64()?;
         self.radius = r.get_u32()?;
-        if self.eb <= 0.0 || self.radius == 0 {
+        if self.eb <= 0.0 || !self.eb.is_finite() || self.radius == 0 {
             return Err(SzError::corrupt("unpred_aware: bad params"));
         }
-        let n = r.get_varint()? as usize;
+        let n64 = r.get_varint()?;
         self.records.clear();
         self.replay = 0;
-        if n == 0 {
+        if n64 == 0 {
             return Ok(());
         }
-        let nbits = r.get_u8()? as u32;
+        let nbits = u64::from(r.get_u8()?);
         let plane_major = r.get_u8()? == 1;
         self.plane_major = plane_major;
+        // `planes` is a length-checked block, so its size is bounded by the
+        // bytes actually present. Every record needs an escape bit, a sign
+        // bit and `nbits` magnitude bits — reject counts the block cannot
+        // hold *before* sizing any allocation by the hostile count.
         let planes = r.get_block()?;
+        let have_bits = (planes.len() as u64).saturating_mul(8);
+        let need_bits = n64.checked_mul(nbits.saturating_add(2));
+        if need_bits.map(|need| need > have_bits).unwrap_or(true) {
+            return Err(SzError::corrupt(
+                "unpred_aware: record count exceeds bitplane payload",
+            ));
+        }
+        let n = usize::try_from(n64)
+            .map_err(|_| SzError::corrupt("unpred_aware: count overflows usize"))?;
         let mut br = BitReader::new(planes);
         let mut escapes = Vec::with_capacity(n);
         for _ in 0..n {
@@ -201,18 +214,19 @@ impl<T: Scalar> Quantizer<T> for UnpredAwareQuantizer<T> {
         if plane_major {
             for _ in 0..nbits {
                 for m in mags.iter_mut() {
-                    *m = (*m << 1) | br.get_bit()? as u64;
+                    *m = (*m << 1) | u64::from(br.get_bit()?);
                 }
             }
         } else {
+            let w = nbits as u32;
             for m in mags.iter_mut() {
-                *m = br.get_bits(nbits)?;
+                *m = br.get_bits(w)?;
             }
         }
         let mut records = Vec::with_capacity(n);
-        for i in 0..n {
-            let exact = if escapes[i] { Some(T::read(r)?) } else { None };
-            records.push(UnpredRecord { exact, sign: signs[i], mag: mags[i] });
+        for (&esc, (&sign, &mag)) in escapes.iter().zip(signs.iter().zip(mags.iter())) {
+            let exact = if esc { Some(T::read(r)?) } else { None };
+            records.push(UnpredRecord { exact, sign, mag });
         }
         self.records = records;
         Ok(())

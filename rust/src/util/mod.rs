@@ -1,8 +1,10 @@
-//! Utility substrates: PRNG, property-testing helpers, and CRC-32.
+//! Utility substrates: PRNG, property-testing helpers, CRC-32, and the
+//! runtime-dispatched SIMD kernel pool.
 
 pub mod crc32;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 
 /// Default worker-thread count: one per available core, 4 when the
 /// parallelism cannot be queried. Shared by the coordinator config and the

@@ -1,0 +1,590 @@
+//! Runtime-dispatched vector kernels for the hot inner loops shared across
+//! pipeline families (the SZx design point, arXiv 2201.13020: flat,
+//! vectorizable loops instead of pointwise stage calls).
+//!
+//! Every kernel exists in exactly one source form — a `#[inline(always)]`
+//! body written as a flat slice loop — compiled twice: once at the crate's
+//! baseline target features and once inside an `#[target_feature(enable =
+//! "avx2")]` wrapper, selected at runtime with `is_x86_feature_detected!`.
+//! Because both compilations execute the *identical* sequence of IEEE-754
+//! operations (AVX2 does not imply FMA, and Rust never contracts
+//! floating-point expressions), the two paths are bit-identical by
+//! construction; `*_scalar` variants stay public so the property tests can
+//! pin that equivalence on machines where the vector path is live.
+//!
+//! Kernels: linear quantization (the residual→bin loop of
+//! [`crate::quantizer::LinearQuantizer`] and the blockwise fast paths),
+//! order-1 Lorenzo residual/reconstruction, series delta residual/apply
+//! ([`crate::container::delta`]), block min/max scan (the `constblock`
+//! family's constant detection) and slice-by-8 CRC-32
+//! ([`crate::util::crc32`]).
+
+use crate::data::Scalar;
+use std::sync::OnceLock;
+
+/// Quantization code reserved for out-of-range ("unpredictable") values.
+/// Matches `crate::quantizer::UNPREDICTABLE` (asserted at compile time at
+/// the use site).
+pub const ESCAPE: u32 = 0;
+
+/// True when the AVX2 fast paths are selected on this CPU.
+pub fn avx2_active() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// A short human label for the selected dispatch tier (for bench output).
+pub fn dispatch_label() -> &'static str {
+    if avx2_active() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+macro_rules! dispatch {
+    // Generate the public dispatched entry + avx2 wrapper + public scalar
+    // variant around an `#[inline(always)]` body function.
+    ($(#[$doc:meta])* $name:ident, $name_scalar:ident, $body:ident,
+     fn($($arg:ident : $ty:ty),*) $(-> $ret:ty)?) => {
+        $(#[$doc])*
+        pub fn $name($($arg: $ty),*) $(-> $ret)? {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if is_x86_feature_detected!("avx2") {
+                    #[target_feature(enable = "avx2")]
+                    unsafe fn avx2($($arg: $ty),*) $(-> $ret)? {
+                        $body($($arg),*)
+                    }
+                    // SAFETY: reached only when the CPU reports AVX2.
+                    return unsafe { avx2($($arg),*) };
+                }
+            }
+            $body($($arg),*)
+        }
+
+        /// Always-scalar variant of the same kernel (bit-identity pin).
+        pub fn $name_scalar($($arg: $ty),*) $(-> $ret)? {
+            $body($($arg),*)
+        }
+    };
+}
+
+// ---------------------------------------------------------------- quantize
+
+#[inline(always)]
+fn linear_quantize_body<T: Scalar>(
+    values: &mut [T],
+    preds: &[f64],
+    eb: f64,
+    radius: u32,
+    codes: &mut [u32],
+) -> usize {
+    let radius_f = radius as f64;
+    let radius_i = radius as i64;
+    let mut escapes = 0usize;
+    for ((v, &p), c) in values.iter_mut().zip(preds).zip(codes.iter_mut()) {
+        let x = v.to_f64();
+        let diff = x - p;
+        let q = (diff / (2.0 * eb)).round();
+        let mut code = ESCAPE;
+        if q.abs() < radius_f {
+            let rec = T::from_f64(p + q * 2.0 * eb);
+            if (rec.to_f64() - x).abs() <= eb {
+                code = (q as i64 + radius_i) as u32;
+                *v = rec;
+            }
+        }
+        escapes += usize::from(code == ESCAPE);
+        *c = code;
+    }
+    escapes
+}
+
+/// Generic-inner quantize: monomorphic wrappers below get the dispatch.
+#[inline(always)]
+fn quantize_inner<T: Scalar>(
+    values: &mut [T],
+    preds: &[f64],
+    eb: f64,
+    radius: u32,
+    codes: &mut [u32],
+) -> usize {
+    linear_quantize_body(values, preds, eb, radius, codes)
+}
+
+macro_rules! quantize_for {
+    ($(#[$doc:meta])* $name:ident, $name_scalar:ident, $body:ident, $t:ty) => {
+        #[inline(always)]
+        fn $body(
+            values: &mut [$t],
+            preds: &[f64],
+            eb: f64,
+            radius: u32,
+            codes: &mut [u32],
+        ) -> usize {
+            quantize_inner(values, preds, eb, radius, codes)
+        }
+        dispatch! {
+            $(#[$doc])*
+            $name, $name_scalar, $body,
+            fn(values: &mut [$t], preds: &[f64], eb: f64, radius: u32,
+               codes: &mut [u32]) -> usize
+        }
+    };
+}
+
+quantize_for! {
+    /// Linear-scaling quantization of a row of `f32` values against
+    /// precomputed predictions. Writes the recovered value over each
+    /// in-range input (out-of-range inputs keep their original value so
+    /// the caller can collect them as unpredictables, in order) and the
+    /// bin code into `codes` ([`ESCAPE`] marks out-of-range). Returns the
+    /// escape count. Per-element semantics are exactly those of
+    /// `LinearQuantizer::quantize`.
+    linear_quantize_f32, linear_quantize_f32_scalar, lq_f32_body, f32
+}
+quantize_for! {
+    /// [`linear_quantize_f32`] for `f64` rows.
+    linear_quantize_f64, linear_quantize_f64_scalar, lq_f64_body, f64
+}
+quantize_for! {
+    /// [`linear_quantize_f32`] for `i32` rows.
+    linear_quantize_i32, linear_quantize_i32_scalar, lq_i32_body, i32
+}
+
+/// Reinterpret `&mut [T]` as `&mut [U]` once `TypeId` equality has proven
+/// `T == U` (same type ⇒ same layout; the lifetime is untouched).
+macro_rules! reslice_if {
+    ($values:ident, $t:ty, $kernel:ident, $preds:ident, $eb:ident, $radius:ident, $codes:ident) => {
+        if std::any::TypeId::of::<T>() == std::any::TypeId::of::<$t>() {
+            // SAFETY: TypeId equality above proves T is exactly $t.
+            let v = unsafe { &mut *($values as *mut [T] as *mut [$t]) };
+            return $kernel(v, $preds, $eb, $radius, $codes);
+        }
+    };
+}
+
+/// Dtype-generic front door for the linear quantization kernel; routes the
+/// three wire scalar types to their monomorphic dispatched entries and any
+/// future [`Scalar`] impl to the shared scalar body.
+pub fn linear_quantize<T: Scalar>(
+    values: &mut [T],
+    preds: &[f64],
+    eb: f64,
+    radius: u32,
+    codes: &mut [u32],
+) -> usize {
+    reslice_if!(values, f32, linear_quantize_f32, preds, eb, radius, codes);
+    reslice_if!(values, f64, linear_quantize_f64, preds, eb, radius, codes);
+    reslice_if!(values, i32, linear_quantize_i32, preds, eb, radius, codes);
+    linear_quantize_body(values, preds, eb, radius, codes)
+}
+
+// ----------------------------------------------------------------- lorenzo
+
+#[inline(always)]
+fn lorenzo1_residual_body(values: &[f64], out: &mut [f64]) {
+    // out[i] = v[i] - v[i-1]; the first element keeps its value (predict 0).
+    let mut prev = 0.0;
+    for (o, &v) in out.iter_mut().zip(values) {
+        *o = v - prev;
+        prev = v;
+    }
+}
+
+dispatch! {
+    /// Order-1 1-D Lorenzo residual over original values (the estimation /
+    /// proxy form: each point predicted by its raw left neighbor).
+    lorenzo1_residual, lorenzo1_residual_scalar, lorenzo1_residual_body,
+    fn(values: &[f64], out: &mut [f64])
+}
+
+#[inline(always)]
+fn lorenzo1_abs_sum_body(values: &[f64]) -> f64 {
+    let mut prev = 0.0;
+    let mut sum = 0.0;
+    for &v in values {
+        sum += (v - prev).abs();
+        prev = v;
+    }
+    sum
+}
+
+dispatch! {
+    /// Sum of |order-1 Lorenzo residuals| (the adaptive selector's
+    /// first-difference signal) without materializing the residual row.
+    lorenzo1_abs_sum, lorenzo1_abs_sum_scalar, lorenzo1_abs_sum_body,
+    fn(values: &[f64]) -> f64
+}
+
+/// Reconstruct values from order-1 residuals in place (prefix sum). The
+/// loop is inherently sequential, so there is no vector variant — it lives
+/// here so residual/reconstruct stay one audited pair.
+pub fn lorenzo1_apply(deltas: &mut [f64]) {
+    let mut acc = 0.0;
+    for d in deltas.iter_mut() {
+        acc += *d;
+        *d = acc;
+    }
+}
+
+// ------------------------------------------------------------------- delta
+
+#[inline(always)]
+fn delta_sub_f32_body(original: &[f32], baseline: &[f32], out: &mut [f32]) {
+    for ((&x, &y), o) in original.iter().zip(baseline).zip(out.iter_mut()) {
+        *o = (f64::from(x) - f64::from(y)) as f32;
+    }
+}
+dispatch! {
+    /// Series delta residual `original - baseline` for f32 fields
+    /// (computed in f64, matching `container::delta::residual`).
+    delta_sub_f32, delta_sub_f32_scalar, delta_sub_f32_body,
+    fn(original: &[f32], baseline: &[f32], out: &mut [f32])
+}
+
+#[inline(always)]
+fn delta_add_f32_body(baseline: &[f32], residual: &[f32], out: &mut [f32]) {
+    for ((&y, &d), o) in baseline.iter().zip(residual).zip(out.iter_mut()) {
+        *o = (f64::from(y) + f64::from(d)) as f32;
+    }
+}
+dispatch! {
+    /// Series delta reconstruction `baseline + residual` for f32 fields
+    /// (f64 domain, matching `container::delta::apply`).
+    delta_add_f32, delta_add_f32_scalar, delta_add_f32_body,
+    fn(baseline: &[f32], residual: &[f32], out: &mut [f32])
+}
+
+#[inline(always)]
+fn delta_sub_f64_body(original: &[f64], baseline: &[f64], out: &mut [f64]) {
+    for ((&x, &y), o) in original.iter().zip(baseline).zip(out.iter_mut()) {
+        *o = x - y;
+    }
+}
+dispatch! {
+    /// Series delta residual for f64 fields.
+    delta_sub_f64, delta_sub_f64_scalar, delta_sub_f64_body,
+    fn(original: &[f64], baseline: &[f64], out: &mut [f64])
+}
+
+#[inline(always)]
+fn delta_add_f64_body(baseline: &[f64], residual: &[f64], out: &mut [f64]) {
+    for ((&y, &d), o) in baseline.iter().zip(residual).zip(out.iter_mut()) {
+        *o = y + d;
+    }
+}
+dispatch! {
+    /// Series delta reconstruction for f64 fields.
+    delta_add_f64, delta_add_f64_scalar, delta_add_f64_body,
+    fn(baseline: &[f64], residual: &[f64], out: &mut [f64])
+}
+
+#[inline(always)]
+fn delta_sub_i32_body(original: &[i32], baseline: &[i32], out: &mut [i32]) {
+    for ((&x, &y), o) in original.iter().zip(baseline).zip(out.iter_mut()) {
+        *o = x.wrapping_sub(y);
+    }
+}
+dispatch! {
+    /// Integer series delta residual (wrapping, lossless).
+    delta_sub_i32, delta_sub_i32_scalar, delta_sub_i32_body,
+    fn(original: &[i32], baseline: &[i32], out: &mut [i32])
+}
+
+#[inline(always)]
+fn delta_add_i32_body(baseline: &[i32], residual: &[i32], out: &mut [i32]) {
+    for ((&y, &d), o) in baseline.iter().zip(residual).zip(out.iter_mut()) {
+        *o = y.wrapping_add(d);
+    }
+}
+dispatch! {
+    /// Integer series delta reconstruction (wrapping, lossless).
+    delta_add_i32, delta_add_i32_scalar, delta_add_i32_body,
+    fn(baseline: &[i32], residual: &[i32], out: &mut [i32])
+}
+
+// ------------------------------------------------------------------ minmax
+
+#[inline(always)]
+fn minmax_f64_body(values: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in values {
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    (lo, hi)
+}
+
+dispatch! {
+    /// Min/max scan of one block (the `constblock` constant test). NaNs
+    /// never win a comparison, so an all-NaN block reports the identity
+    /// `(+inf, -inf)` and the caller treats it as non-constant.
+    minmax_f64, minmax_f64_scalar, minmax_f64_body,
+    fn(values: &[f64]) -> (f64, f64)
+}
+
+/// Dtype-generic min/max scan in the f64 domain.
+pub fn minmax<T: Scalar>(values: &[T]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for v in values {
+        let x = v.to_f64();
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    (lo, hi)
+}
+
+// ------------------------------------------------------------------- crc32
+
+/// CRC-32 (IEEE, reflected 0xEDB88320) slice-by-8 tables; table 0 is the
+/// classic byte-at-a-time table.
+fn crc_tables() -> &'static [[u32; 256]; 8] {
+    static TABLES: OnceLock<[[u32; 256]; 8]> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut t = [[0u32; 256]; 8];
+        for (i, slot) in t[0].iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 == 1 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        for i in 0..256 {
+            let mut c = t[0][i];
+            for k in 1..8 {
+                c = t[0][(c & 0xff) as usize] ^ (c >> 8);
+                t[k][i] = c;
+            }
+        }
+        t
+    })
+}
+
+/// Advance a raw (pre-inverted) CRC-32 state over `bytes`, eight bytes per
+/// step. Exactly equivalent to the byte-at-a-time loop over table 0 — the
+/// slice-by-8 identity is pinned by tests against [`crc32_update_scalar`].
+pub fn crc32_update(mut state: u32, bytes: &[u8]) -> u32 {
+    let t = crc_tables();
+    let mut chunks = bytes.chunks_exact(8);
+    for chunk in &mut chunks {
+        let lo = u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]) ^ state;
+        let hi = u32::from_le_bytes([chunk[4], chunk[5], chunk[6], chunk[7]]);
+        state = t[7][(lo & 0xff) as usize]
+            ^ t[6][((lo >> 8) & 0xff) as usize]
+            ^ t[5][((lo >> 16) & 0xff) as usize]
+            ^ t[4][(lo >> 24) as usize]
+            ^ t[3][(hi & 0xff) as usize]
+            ^ t[2][((hi >> 8) & 0xff) as usize]
+            ^ t[1][((hi >> 16) & 0xff) as usize]
+            ^ t[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        state = t[0][((state ^ u32::from(b)) & 0xff) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+/// Byte-at-a-time reference form of [`crc32_update`] (table 0 only).
+pub fn crc32_update_scalar(mut state: u32, bytes: &[u8]) -> u32 {
+    let t = crc_tables();
+    for &b in bytes {
+        state = t[0][((state ^ u32::from(b)) & 0xff) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn quantize_dispatched_matches_scalar_bitexactly() {
+        prop::cases(60, 0x51d, |rng| {
+            let n = rng.below(300) + 1;
+            let eb = 10f64.powf(rng.uniform(-6.0, 0.0));
+            let radius = [4u32, 64, 512, 32768][rng.below(4)];
+            let data: Vec<f64> = (0..n).map(|_| rng.uniform(-100.0, 100.0)).collect();
+            let preds: Vec<f64> = data
+                .iter()
+                .map(|&d| d + rng.normal() * eb * 10.0_f64.powf(rng.uniform(-1.0, 3.0)))
+                .collect();
+            let mut v1: Vec<f64> = data.clone();
+            let mut v2: Vec<f64> = data.clone();
+            let mut c1 = vec![0u32; n];
+            let mut c2 = vec![0u32; n];
+            let e1 = linear_quantize_f64(&mut v1, &preds, eb, radius, &mut c1);
+            let e2 = linear_quantize_f64_scalar(&mut v2, &preds, eb, radius, &mut c2);
+            assert_eq!(e1, e2);
+            assert_eq!(c1, c2);
+            let b1: Vec<u64> = v1.iter().map(|x| x.to_bits()).collect();
+            let b2: Vec<u64> = v2.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(b1, b2, "dispatched vs scalar diverged ({})", dispatch_label());
+
+            // f32 storage path too (exercises the from_f64 rounding check)
+            let df: Vec<f32> = data.iter().map(|&d| d as f32).collect();
+            let mut f1 = df.clone();
+            let mut f2 = df.clone();
+            let ef1 = linear_quantize_f32(&mut f1, &preds, eb, radius, &mut c1);
+            let ef2 = linear_quantize_f32_scalar(&mut f2, &preds, eb, radius, &mut c2);
+            assert_eq!(ef1, ef2);
+            assert_eq!(c1, c2);
+            let fb1: Vec<u32> = f1.iter().map(|x| x.to_bits()).collect();
+            let fb2: Vec<u32> = f2.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(fb1, fb2);
+        });
+    }
+
+    #[test]
+    fn quantize_matches_pointwise_quantizer() {
+        use crate::quantizer::{LinearQuantizer, Quantizer};
+        prop::cases(40, 0x51e, |rng| {
+            let n = rng.below(200) + 1;
+            let eb = 10f64.powf(rng.uniform(-5.0, 0.0));
+            let data: Vec<f64> = (0..n).map(|_| rng.uniform(-50.0, 50.0)).collect();
+            let preds: Vec<f64> =
+                data.iter().map(|&d| d + rng.normal() * eb * 4.0).collect();
+            let mut q = LinearQuantizer::<f64>::with_radius(eb, 128);
+            let mut want_codes = Vec::new();
+            let mut want_rec = Vec::new();
+            for (&d, &p) in data.iter().zip(&preds) {
+                let (code, rec) = q.quantize(d, p);
+                want_codes.push(code);
+                want_rec.push(rec.to_bits());
+            }
+            let mut v = data.clone();
+            let mut codes = vec![0u32; n];
+            linear_quantize_f64(&mut v, &preds, eb, 128, &mut codes);
+            assert_eq!(codes, want_codes);
+            let got: Vec<u64> = v.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want_rec, "kernel diverged from LinearQuantizer");
+        });
+    }
+
+    #[test]
+    fn lorenzo_kernels_match_and_roundtrip() {
+        prop::cases(40, 0x52a, |rng| {
+            let n = rng.below(400) + 1;
+            let data: Vec<f64> = (0..n).map(|_| rng.uniform(-1e3, 1e3)).collect();
+            let mut r1 = vec![0.0; n];
+            let mut r2 = vec![0.0; n];
+            lorenzo1_residual(&data, &mut r1);
+            lorenzo1_residual_scalar(&data, &mut r2);
+            assert_eq!(
+                r1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                r2.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            let s1 = lorenzo1_abs_sum(&data);
+            let s2 = lorenzo1_abs_sum_scalar(&data);
+            assert_eq!(s1.to_bits(), s2.to_bits());
+            // reconstruction inverts the residual up to fp associativity
+            let mut rec = r1.clone();
+            lorenzo1_apply(&mut rec);
+            for (a, b) in rec.iter().zip(&data) {
+                assert!((a - b).abs() <= 1e-6 * (1.0 + b.abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn delta_kernels_match_scalar_bitexactly() {
+        prop::cases(40, 0x52b, |rng| {
+            let n = rng.below(500) + 1;
+            let a: Vec<f32> = (0..n).map(|_| rng.uniform(-1e4, 1e4) as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.uniform(-1e4, 1e4) as f32).collect();
+            let mut o1 = vec![0f32; n];
+            let mut o2 = vec![0f32; n];
+            delta_sub_f32(&a, &b, &mut o1);
+            delta_sub_f32_scalar(&a, &b, &mut o2);
+            assert_eq!(
+                o1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                o2.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            let mut back = vec![0f32; n];
+            delta_add_f32(&b, &o1, &mut back);
+            let mut back2 = vec![0f32; n];
+            delta_add_f32_scalar(&b, &o2, &mut back2);
+            assert_eq!(
+                back.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                back2.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            let ia: Vec<i32> = (0..n).map(|_| rng.below(1 << 30) as i32 - (1 << 29)).collect();
+            let ib: Vec<i32> = (0..n).map(|_| rng.below(1 << 30) as i32 - (1 << 29)).collect();
+            let mut d1 = vec![0i32; n];
+            let mut d2 = vec![0i32; n];
+            delta_sub_i32(&ia, &ib, &mut d1);
+            delta_sub_i32_scalar(&ia, &ib, &mut d2);
+            assert_eq!(d1, d2);
+            let mut r = vec![0i32; n];
+            delta_add_i32(&ib, &d1, &mut r);
+            assert_eq!(r, ia, "integer delta must be exactly invertible");
+        });
+    }
+
+    #[test]
+    fn minmax_matches_scalar_and_handles_nan() {
+        prop::cases(40, 0x52c, |rng| {
+            let n = rng.below(600) + 1;
+            let data: Vec<f64> = (0..n).map(|_| rng.uniform(-1e6, 1e6)).collect();
+            let a = minmax_f64(&data);
+            let b = minmax_f64_scalar(&data);
+            assert_eq!((a.0.to_bits(), a.1.to_bits()), (b.0.to_bits(), b.1.to_bits()));
+            let lo = data.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = data.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(a, (lo, hi));
+        });
+        let (lo, hi) = minmax_f64(&[f64::NAN, f64::NAN]);
+        assert!(lo > hi, "all-NaN block must read as non-constant");
+    }
+
+    #[test]
+    fn crc_slice8_equals_byte_at_a_time() {
+        // known vector (also pinned in util::crc32 against the public API)
+        let raw = crc32_update(0xFFFF_FFFF, b"123456789") ^ 0xFFFF_FFFF;
+        assert_eq!(raw, 0xCBF4_3926);
+        prop::cases(60, 0x52d, |rng| {
+            let n = rng.below(4096);
+            let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let a = crc32_update(0xFFFF_FFFF, &bytes);
+            let b = crc32_update_scalar(0xFFFF_FFFF, &bytes);
+            assert_eq!(a, b, "slice-by-8 diverged at n={n}");
+            // resumability across arbitrary split points
+            let split = rng.below(n + 1);
+            let (x, y) = bytes.split_at(split);
+            assert_eq!(crc32_update(crc32_update(0xFFFF_FFFF, x), y), a);
+        });
+    }
+
+    #[test]
+    fn generic_quantize_routes_all_dtypes() {
+        let preds = vec![0.0f64; 8];
+        let mut f = vec![1.0f32; 8];
+        let mut codes = vec![0u32; 8];
+        let e = linear_quantize(&mut f, &preds, 0.5, 16, &mut codes);
+        assert_eq!(e, 0);
+        let mut i = vec![3i32; 8];
+        let e = linear_quantize(&mut i, &preds, 0.5, 16, &mut codes);
+        assert_eq!(e, 0);
+        let mut d = vec![2.0f64; 8];
+        let e = linear_quantize(&mut d, &preds, 0.5, 16, &mut codes);
+        assert_eq!(e, 0);
+    }
+}

@@ -288,6 +288,207 @@ fn oversized_header_counts_are_rejected() {
     }
 }
 
+/// Run `f` under `catch_unwind` and demand a clean `Err`, never a panic
+/// and never an `Ok`.
+fn expect_clean_error<F: FnOnce() -> sz3::error::Result<()> + std::panic::UnwindSafe>(
+    f: F,
+    label: &str,
+) {
+    match std::panic::catch_unwind(f) {
+        Err(_) => panic!("PANIC on {label}"),
+        Ok(Ok(())) => panic!("{label} accepted"),
+        Ok(Err(_)) => {}
+    }
+}
+
+/// Hostile quantizer state fed straight into the `Quantizer::load` entry
+/// points: huge unpredictable counts, counts larger than the remaining
+/// byte budget, and zero/negative/non-finite error bounds must all come
+/// back as `SzError` — allocation bombs and panics are both failures.
+#[test]
+fn hostile_quantizer_state_errors_not_panics() {
+    use sz3::byteio::ByteReader;
+    use sz3::quantizer::{
+        LinearQuantizer, LogScaleQuantizer, Quantizer, UnpredAwareQuantizer,
+    };
+
+    fn linear_payload(eb: f64, radius: u32, count: u64, trailing: &[u8]) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_f64(eb);
+        w.put_u32(radius);
+        w.put_varint(count);
+        w.put_bytes(trailing);
+        w.finish()
+    }
+    let linear_cases: [(Vec<u8>, &str); 8] = [
+        (linear_payload(1e-3, 512, u64::MAX, &[0u8; 8]), "count u64::MAX"),
+        (linear_payload(1e-3, 512, 1 << 40, &[]), "count 2^40, empty payload"),
+        (linear_payload(1e-3, 512, 1000, &[0u8; 16]), "count beyond byte budget"),
+        (linear_payload(0.0, 512, 0, &[]), "zero eb"),
+        (linear_payload(-1.0, 512, 0, &[]), "negative eb"),
+        (linear_payload(f64::NAN, 512, 0, &[]), "NaN eb"),
+        (linear_payload(f64::INFINITY, 512, 0, &[]), "infinite eb"),
+        (linear_payload(1e-3, 0, 0, &[]), "zero radius"),
+    ];
+    for (payload, label) in &linear_cases {
+        expect_clean_error(
+            || {
+                let mut q = LinearQuantizer::<f32>::new(0.5);
+                q.load(&mut ByteReader::new(payload))
+            },
+            &format!("linear quantizer: {label}"),
+        );
+        // the f64 instantiation takes the same path with a different
+        // element size in the budget check
+        expect_clean_error(
+            || {
+                let mut q = LinearQuantizer::<f64>::new(0.5);
+                q.load(&mut ByteReader::new(payload))
+            },
+            &format!("linear<f64> quantizer: {label}"),
+        );
+    }
+
+    fn logscale_payload(
+        eb: f64,
+        alpha: f64,
+        gamma: f64,
+        radius: u32,
+        count: u64,
+    ) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_f64(eb);
+        w.put_f64(alpha);
+        w.put_f64(gamma);
+        w.put_u32(radius);
+        w.put_varint(count);
+        w.finish()
+    }
+    let logscale_cases: [(Vec<u8>, &str); 7] = [
+        (logscale_payload(1e-3, 0.5, 2.0, u32::MAX, 0), "radius u32::MAX (table bomb)"),
+        (logscale_payload(1e-3, 0.5, 2.0, 1 << 30, 0), "radius beyond wire cap"),
+        (logscale_payload(1e-3, 0.5, 2.0, 64, u64::MAX), "count u64::MAX"),
+        (logscale_payload(0.0, 0.5, 2.0, 64, 0), "zero eb"),
+        (logscale_payload(1e-3, 0.0, 2.0, 64, 0), "zero alpha"),
+        (logscale_payload(1e-3, 2.0, 2.0, 64, 0), "alpha > 1"),
+        (logscale_payload(1e-3, 0.5, 1.0, 64, 0), "gamma <= 1"),
+    ];
+    for (payload, label) in &logscale_cases {
+        expect_clean_error(
+            || {
+                let mut q = LogScaleQuantizer::<f64>::new(0.5, 64);
+                q.load(&mut ByteReader::new(payload))
+            },
+            &format!("log_scale quantizer: {label}"),
+        );
+    }
+
+    fn unpred_payload(
+        eb: f64,
+        radius: u32,
+        count: u64,
+        nbits: u8,
+        block: &[u8],
+    ) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_f64(eb);
+        w.put_u32(radius);
+        w.put_varint(count);
+        w.put_u8(nbits);
+        w.put_u8(0); // value-major
+        w.put_block(block);
+        w.finish()
+    }
+    let unpred_cases: [(Vec<u8>, &str); 4] = [
+        (unpred_payload(1e-3, 512, u64::MAX, 4, &[0u8; 8]), "count u64::MAX"),
+        (unpred_payload(1e-3, 512, 1 << 40, 4, &[0u8; 8]), "count 2^40, 8-byte planes"),
+        (unpred_payload(1e-3, 512, 1 << 20, 255, &[0u8; 64]), "nbits 255 overflow probe"),
+        (unpred_payload(-0.5, 512, 0, 0, &[]), "negative eb"),
+    ];
+    for (payload, label) in &unpred_cases {
+        expect_clean_error(
+            || {
+                let mut q = UnpredAwareQuantizer::<f32>::new(0.5, 512);
+                q.load(&mut ByteReader::new(payload))
+            },
+            &format!("unpred_aware quantizer: {label}"),
+        );
+    }
+
+    // regression coefficients: a hostile count must bounce off the byte
+    // budget before sizing the output allocation
+    for n in [usize::MAX, 1 << 40, 100] {
+        expect_clean_error(
+            || {
+                let payload = [0u8; 8];
+                sz3::predictor::RegressionFit::load_quantized(
+                    n,
+                    &mut ByteReader::new(&payload),
+                )
+                .map(|_| ())
+            },
+            &format!("regression coefficients: count {n}"),
+        );
+    }
+}
+
+/// The runtime-dispatched kernels must be bit-identical to their
+/// always-scalar variants on whatever CPU the test runs on — this is the
+/// public-API (integration) pin; the in-module property tests cover the
+/// same contract per kernel in more depth.
+#[test]
+fn dispatched_kernels_match_scalar_bitexactly() {
+    use sz3::util::simd;
+    let mut rng = sz3::util::rng::Pcg32::seeded(0x51d3);
+    for round in 0..20 {
+        let n = 1 + (round * 37) % 300;
+        let vals: Vec<f64> = (0..n).map(|_| rng.uniform(-1e4, 1e4)).collect();
+        let preds: Vec<f64> = vals.iter().map(|v| v + rng.uniform(-1.0, 1.0)).collect();
+        let eb = 10f64.powf(rng.uniform(-6.0, -1.0));
+
+        // linear quantization
+        let mut a = vals.clone();
+        let mut b = vals.clone();
+        let mut ca = vec![0u32; n];
+        let mut cb = vec![0u32; n];
+        let ea = simd::linear_quantize_f64(&mut a, &preds, eb, 512, &mut ca);
+        let eb_count = simd::linear_quantize_f64_scalar(&mut b, &preds, eb, 512, &mut cb);
+        assert_eq!(ea, eb_count);
+        assert_eq!(ca, cb);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "quantize diverged");
+        }
+
+        // Lorenzo residual
+        let mut r1 = vec![0.0; n];
+        let mut r2 = vec![0.0; n];
+        simd::lorenzo1_residual(&vals, &mut r1);
+        simd::lorenzo1_residual_scalar(&vals, &mut r2);
+        for (x, y) in r1.iter().zip(&r2) {
+            assert_eq!(x.to_bits(), y.to_bits(), "lorenzo residual diverged");
+        }
+
+        // delta kernels
+        let base: Vec<f64> = vals.iter().map(|v| v * 0.75).collect();
+        let mut d1 = vec![0.0; n];
+        let mut d2 = vec![0.0; n];
+        simd::delta_sub_f64(&vals, &base, &mut d1);
+        simd::delta_sub_f64_scalar(&vals, &base, &mut d2);
+        for (x, y) in d1.iter().zip(&d2) {
+            assert_eq!(x.to_bits(), y.to_bits(), "delta sub diverged");
+        }
+
+        // min/max and CRC
+        assert_eq!(simd::minmax_f64(&vals), simd::minmax_f64_scalar(&vals));
+        let bytes: Vec<u8> = (0..n * 3).map(|_| rng.below(256) as u8).collect();
+        assert_eq!(
+            simd::crc32_update(!0, &bytes),
+            simd::crc32_update_scalar(!0, &bytes),
+            "crc diverged"
+        );
+    }
+}
+
 #[test]
 fn snapshot_table_specific_mutations_are_validated() {
     // target the bytes right after the fixed header: chunk count, field

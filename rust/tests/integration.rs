@@ -32,7 +32,15 @@ fn every_registry_pipeline_roundtrips_every_survey_dataset() {
     // The composability x generality matrix: all registered pipelines on
     // all eight survey applications (first field each, truncated rows to
     // keep runtime sane).
-    let names = ["sz3-lr", "sz3-lr-s", "sz3-interp", "sz3-truncation", "lorenzo-1d", "fpzip-like"];
+    let names = [
+        "sz3-lr",
+        "sz3-lr-s",
+        "sz3-interp",
+        "sz3-truncation",
+        "szx",
+        "lorenzo-1d",
+        "fpzip-like",
+    ];
     for ds in sz3::datagen::survey(7) {
         let field = {
             // take a slice of the first field to bound runtime
