@@ -1,0 +1,166 @@
+//! Rate-distortion + measured-selection bench behind `docs/SELECTION.md`:
+//!
+//! 1. **RD curves per family** — every `DEFAULT_CANDIDATES` pipeline
+//!    compresses the same mixed three-stratum corpus (smooth / noise /
+//!    flat) at several absolute bounds, printing one grep-able point per
+//!    `(family, eb)` so the curves can be plotted straight off the log.
+//! 2. **Measured selection vs the per-chunk oracle** — the measured
+//!    selector (`JobConfig{measured, optimize: "ratio"}`) packs the
+//!    corpus once; the oracle total is the sum over chunks of the
+//!    smallest payload any fixed candidate produced for that chunk.
+//!    Acceptance bar: selection lands within 2% of the oracle (the
+//!    stratified sample must generalize to the full chunk).
+//!
+//! Output lines:
+//!   `rd,<family>,<eb>,<payload_bytes>,<ratio>`
+//!   `sel,<mode>,<payload_bytes>,<ratio>,<mix>`
+//! plus a machine-readable summary in `BENCH_PR10.json`.
+
+use sz3::bench_harness::{Bench, PerfSummary};
+use sz3::config::JobConfig;
+use sz3::container::{read_index, AdaptiveChunkSelector};
+use sz3::coordinator::Coordinator;
+use sz3::data::Field;
+use sz3::pipeline::ErrorBound;
+use sz3::util::rng::Pcg32;
+use std::collections::HashMap;
+
+/// Three chunk-aligned strata so no single family fits every chunk:
+/// low-frequency smooth structure, full-range white noise, one constant.
+fn mixed_corpus(nz: usize) -> Field {
+    let (ny, nx) = (24usize, 24);
+    let mut rng = Pcg32::seeded(4242);
+    let mut vals = Vec::with_capacity(nz * ny * nx);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                vals.push(if z < nz / 3 {
+                    0.6 * ((z as f32) * 0.21).sin()
+                        + 0.5 * ((y as f32) * 0.14).cos()
+                        + 0.3 * ((x as f32) * 0.09).sin()
+                } else if z < 2 * nz / 3 {
+                    rng.uniform(-500.0, 500.0) as f32
+                } else {
+                    3.25
+                });
+            }
+        }
+    }
+    Field::f32("mixed", &[nz, ny, nx], vals).unwrap()
+}
+
+fn base_cfg(eb: f64) -> JobConfig {
+    JobConfig {
+        bound: ErrorBound::Abs(eb),
+        workers: 4,
+        chunk_elems: 24 * 24 * 8, // 8 rows per chunk: chunks stay in-stratum
+        queue_depth: 4,
+        ..Default::default()
+    }
+}
+
+/// Compressed payload bytes per chunk index (container framing excluded,
+/// so fixed and adaptive runs compare codec output, not index overhead).
+fn chunk_payloads(artifact: &[u8]) -> Vec<(usize, usize)> {
+    let (index, _) = read_index(artifact).unwrap();
+    index.entries.iter().map(|e| (e.chunk_index, e.len)).collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut summary = PerfSummary::new();
+
+    let nz = if quick { 48 } else { 96 };
+    let field = mixed_corpus(nz);
+    let raw_bytes = field.values.to_le_bytes().len();
+    println!("# rd_selection bench (quick={quick}, {raw_bytes} raw bytes)");
+
+    // ---- part 1: RD curve per family --------------------------------
+    println!("rd,family,eb,payload_bytes,ratio");
+    let bounds = [0.01f64, 0.1, 0.5];
+    // per-chunk minimum payload over all candidates at the selection eb,
+    // collected while the fixed runs happen anyway
+    let sel_eb = 0.25f64;
+    let mut oracle: HashMap<usize, usize> = HashMap::new();
+    for family in AdaptiveChunkSelector::DEFAULT_CANDIDATES {
+        for eb in bounds {
+            let cfg =
+                JobConfig { pipeline: family.to_string(), ..base_cfg(eb) };
+            let coord = Coordinator::from_config(&cfg).unwrap();
+            let (artifact, _) =
+                coord.run_to_container(vec![field.clone()]).unwrap();
+            let payload: usize =
+                chunk_payloads(&artifact).iter().map(|(_, n)| n).sum();
+            println!(
+                "rd,{family},{eb},{payload},{:.2}",
+                raw_bytes as f64 / payload as f64
+            );
+            if eb == bounds[1] {
+                summary.record(
+                    &format!("ratio_{family}"),
+                    raw_bytes as f64 / payload as f64,
+                );
+            }
+        }
+        let cfg = JobConfig { pipeline: family.to_string(), ..base_cfg(sel_eb) };
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let (artifact, _) = coord.run_to_container(vec![field.clone()]).unwrap();
+        for (ci, n) in chunk_payloads(&artifact) {
+            let slot = oracle.entry(ci).or_insert(usize::MAX);
+            *slot = (*slot).min(n);
+        }
+    }
+
+    // ---- part 2: measured selection vs per-chunk oracle -------------
+    let cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        measured: true,
+        optimize: "ratio".into(),
+        ..base_cfg(sel_eb)
+    };
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    let mut artifact = Vec::new();
+    let s = bench.run("measured_pack", || {
+        let (a, _) = coord.run_to_container(vec![field.clone()]).unwrap();
+        artifact = a;
+    });
+    let measured_mbs =
+        raw_bytes as f64 / s.min.as_secs_f64() / (1024.0 * 1024.0);
+
+    let selection: usize = chunk_payloads(&artifact).iter().map(|(_, n)| n).sum();
+    let oracle_total: usize = oracle.values().sum();
+    let (index, _) = read_index(&artifact).unwrap();
+    let mix: Vec<String> =
+        index.per_pipeline().iter().map(|(p, n)| format!("{p}x{n}")).collect();
+    println!(
+        "sel,measured,{selection},{:.2},{}",
+        raw_bytes as f64 / selection as f64,
+        mix.join("|")
+    );
+    println!(
+        "sel,oracle,{oracle_total},{:.2},per-chunk-min",
+        raw_bytes as f64 / oracle_total as f64
+    );
+
+    let overhead_pct =
+        100.0 * (selection as f64 - oracle_total as f64) / oracle_total as f64;
+    println!("# measured selection vs oracle: {overhead_pct:+.2}%");
+    assert!(
+        selection as f64 <= oracle_total as f64 * 1.02,
+        "measured selection ({selection} B) must land within 2% of the \
+         per-chunk oracle ({oracle_total} B); got {overhead_pct:+.2}%"
+    );
+    assert!(
+        index.per_pipeline().len() >= 2,
+        "mixed corpus must produce a heterogeneous pipeline mix"
+    );
+
+    summary.record("measured_payload_bytes", selection as f64);
+    summary.record("oracle_payload_bytes", oracle_total as f64);
+    summary.record("selection_vs_oracle_pct", overhead_pct);
+    summary.record("measured_ratio", raw_bytes as f64 / selection as f64);
+    summary.record("measured_pack_mbs", measured_mbs);
+    summary.write_json("BENCH_PR10.json").unwrap();
+    println!("# wrote BENCH_PR10.json");
+}

@@ -37,7 +37,7 @@ use std::path::{Path, PathBuf};
 /// fields. `quantizer/` and `predictor/` *are* listed: their `load()`
 /// paths restore per-stream state straight from attacker-controlled
 /// bytes. `docs/AUDIT.md` records the rationale per entry.
-pub const TRUST_MAP: [&str; 14] = [
+pub const TRUST_MAP: [&str; 15] = [
     "rust/src/byteio.rs",
     "rust/src/bitio.rs",
     "rust/src/container/mod.rs",
@@ -52,6 +52,7 @@ pub const TRUST_MAP: [&str; 14] = [
     "rust/src/lossless/",
     "rust/src/quantizer/",
     "rust/src/predictor/",
+    "rust/src/transform/",
 ];
 
 /// True if `rel` (repo-relative, forward slashes) is in the trust map.

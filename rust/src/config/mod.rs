@@ -48,6 +48,11 @@ pub struct JobConfig {
     /// Candidate pipelines for adaptive selection — aliases or raw specs;
     /// empty means the selector's default set.
     pub candidates: Vec<String>,
+    /// Score candidates by compressing a stratified chunk sample instead
+    /// of the residual proxy (implies `adaptive`).
+    pub measured: bool,
+    /// Objective for measured selection: `ratio` | `speed` | `balanced`.
+    pub optimize: String,
 }
 
 impl Default for JobConfig {
@@ -62,6 +67,8 @@ impl Default for JobConfig {
             use_pjrt: false,
             adaptive: false,
             candidates: Vec::new(),
+            measured: false,
+            optimize: "ratio".to_string(),
         }
     }
 }
@@ -134,6 +141,20 @@ impl JobConfig {
                         .as_bool()
                         .ok_or_else(|| SzError::config("adaptive must be a bool"))?;
                 }
+                "measured" => {
+                    cfg.measured = val
+                        .as_bool()
+                        .ok_or_else(|| SzError::config("measured must be a bool"))?;
+                }
+                "optimize" => {
+                    let name = val
+                        .as_str()
+                        .ok_or_else(|| SzError::config("optimize must be a string"))?;
+                    // validate eagerly so a typo fails at config load, not
+                    // mid-stream
+                    crate::container::OptimizeTarget::from_name(name)?;
+                    cfg.optimize = name.to_string();
+                }
                 "candidates" => {
                     let arr = val
                         .as_arr()
@@ -205,5 +226,27 @@ mod tests {
         assert!(JobConfig::from_json(r#"{"adaptive": "yes"}"#).is_err());
         // defaults stay off
         assert!(!JobConfig::from_json(r#"{}"#).unwrap().adaptive);
+    }
+
+    #[test]
+    fn measured_and_optimize_parse() {
+        let cfg = JobConfig::from_json(
+            r#"{"adaptive": true, "measured": true, "optimize": "balanced"}"#,
+        )
+        .unwrap();
+        assert!(cfg.measured);
+        assert_eq!(cfg.optimize, "balanced");
+        for t in ["ratio", "speed", "balanced"] {
+            let cfg =
+                JobConfig::from_json(&format!(r#"{{"optimize": "{t}"}}"#)).unwrap();
+            assert_eq!(cfg.optimize, t);
+        }
+        // a typo in the objective fails at load time, not mid-stream
+        assert!(JobConfig::from_json(r#"{"optimize": "best"}"#).is_err());
+        assert!(JobConfig::from_json(r#"{"optimize": 3}"#).is_err());
+        assert!(JobConfig::from_json(r#"{"measured": "yes"}"#).is_err());
+        let d = JobConfig::from_json(r#"{}"#).unwrap();
+        assert!(!d.measured);
+        assert_eq!(d.optimize, "ratio");
     }
 }

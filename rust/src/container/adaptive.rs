@@ -18,6 +18,20 @@
 //! bound is handed to the `constblock` (SZx-style) family when it is a
 //! candidate: every scan block collapses to one stored mean, so the fast
 //! path wins at any quality.
+//!
+//! # Measured mode
+//!
+//! The proxy above predicts *residuals*, not bytes — two families with
+//! equal residual can differ 2× in encoded size. [`SelectionMode::Measured`]
+//! ([`AdaptiveChunkSelector::with_measured`]) instead compresses a
+//! stratified ~1/16 sample of the chunk through **every** candidate and
+//! scores the measured (bytes, max-error) pairs, disqualifying any
+//! candidate whose sample reconstruction violates the bound. Scoring
+//! honors an [`OptimizeTarget`]: `Ratio` takes the fewest sample bytes,
+//! `Speed` the cheapest family by the one-shot ns/byte microbenchmark
+//! cost table (measured once per process, see [`family_cost_ns_per_byte`]),
+//! and `Balanced` the best bytes × √time product. When no candidate
+//! qualifies on the sample, selection falls back to the proxy path.
 
 use crate::data::{Field, FieldValues};
 use crate::error::{Result, SzError};
@@ -25,9 +39,9 @@ use crate::obs;
 use crate::pipeline::analysis::{BlockAnalyzer, NativeAnalyzer};
 use crate::pipeline::block::block_side;
 use crate::pipeline::spec::{self, PipelineSpec, PreSpec, PredSpec};
-use crate::pipeline::CompressConf;
+use crate::pipeline::{CompressConf, ErrorBound};
 use crate::predictor::LorenzoPredictor;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Predictor-error estimates measured on a chunk sample.
 #[derive(Clone, Copy, Debug, Default)]
@@ -45,6 +59,42 @@ pub struct ChunkSignals {
     pub range: f64,
     /// Absolute error bound resolved for this chunk.
     pub eb: f64,
+}
+
+/// How the selector scores candidates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectionMode {
+    /// Residual-proxy scoring from [`ChunkSignals`] (cheap, model-based).
+    Proxy,
+    /// Compress a stratified chunk sample through every candidate and
+    /// score measured (bytes, max-error) pairs.
+    Measured,
+}
+
+/// What measured selection optimizes for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizeTarget {
+    /// Fewest sample bytes (best compression ratio).
+    Ratio,
+    /// Cheapest family by the ns/byte microbenchmark cost table.
+    Speed,
+    /// Best bytes × √time product.
+    Balanced,
+}
+
+impl OptimizeTarget {
+    /// Parse a config/CLI token (`ratio` | `speed` | `balanced`).
+    pub fn from_name(name: &str) -> Result<OptimizeTarget> {
+        match name {
+            "ratio" => Ok(OptimizeTarget::Ratio),
+            "speed" => Ok(OptimizeTarget::Speed),
+            "balanced" => Ok(OptimizeTarget::Balanced),
+            other => Err(SzError::config(format!(
+                "unknown optimize target '{other}' (known: ratio, speed, \
+                 balanced)"
+            ))),
+        }
+    }
 }
 
 /// Outcome of selecting a pipeline for one chunk.
@@ -70,6 +120,10 @@ pub struct AdaptiveChunkSelector {
     /// Cap on sampled analysis blocks per chunk (keeps selection overhead
     /// a small fraction of compression time on large chunks).
     pub max_blocks: usize,
+    /// Proxy (default) or measured scoring.
+    pub mode: SelectionMode,
+    /// Objective for measured scoring.
+    pub optimize: OptimizeTarget,
 }
 
 /// Prediction beats truncation only when its estimated residual is below
@@ -78,10 +132,11 @@ const UNPREDICTABLE_FRACTION: f64 = 0.15;
 
 impl AdaptiveChunkSelector {
     /// Default candidate set: the three fixed pipelines the paper composes
-    /// plus the linearized 1-D path and the SZx-style constant-block fast
-    /// family.
-    pub const DEFAULT_CANDIDATES: &'static [&'static str] =
-        &["sz3-lr", "sz3-interp", "lorenzo-1d", "sz3-truncation", "szx"];
+    /// plus the linearized 1-D path, the SZx-style constant-block fast
+    /// family, and the ZFP-style transform family.
+    pub const DEFAULT_CANDIDATES: &'static [&'static str] = &[
+        "sz3-lr", "sz3-interp", "lorenzo-1d", "sz3-truncation", "szx", "zfp-like",
+    ];
 
     /// Selector over the default candidates with native analysis.
     pub fn new() -> Self {
@@ -111,12 +166,22 @@ impl AdaptiveChunkSelector {
             specs,
             analyzer: Arc::new(NativeAnalyzer),
             max_blocks: 256,
+            mode: SelectionMode::Proxy,
+            optimize: OptimizeTarget::Ratio,
         })
     }
 
     /// Replace the analysis backend (e.g. with the PJRT engine).
     pub fn with_analyzer(mut self, a: Arc<dyn BlockAnalyzer>) -> Self {
         self.analyzer = a;
+        self
+    }
+
+    /// Switch to measured rate-distortion scoring with the given
+    /// objective (see the module docs).
+    pub fn with_measured(mut self, target: OptimizeTarget) -> Self {
+        self.mode = SelectionMode::Measured;
+        self.optimize = target;
         self
     }
 
@@ -254,6 +319,7 @@ impl AdaptiveChunkSelector {
             PredSpec::Lorenzo(_) | PredSpec::Zero => "point",
             PredSpec::Truncation { .. } => "truncation",
             PredSpec::ConstBlock { .. } => "szx",
+            PredSpec::Transform { .. } => "transform",
             PredSpec::Pastri { .. } => "pastri",
             PredSpec::Aps { .. } => "aps",
         }
@@ -265,6 +331,14 @@ impl AdaptiveChunkSelector {
         let _span = obs::trace::Span::enter("select", "selector");
         obs::SELECTOR_CANDIDATES.add(self.specs.len() as u64);
         let signals = self.signals(field, conf)?;
+        if self.mode == SelectionMode::Measured {
+            if let Some(sel) = self.select_measured(field, conf, signals) {
+                obs::SELECTOR_US.observe_since(t_select);
+                return Ok(sel);
+            }
+            // no candidate qualified on the sample (e.g. a degenerate
+            // chunk): fall through to the proxy path
+        }
         let nd = field.shape.ndim();
         let noise = LorenzoPredictor::noise_factor(nd) * signals.eb;
         let noise_1d = LorenzoPredictor::noise_factor(1) * signals.eb;
@@ -284,6 +358,10 @@ impl AdaptiveChunkSelector {
                     Some(signals.first_diff_err + noise_1d)
                 }
                 PredSpec::Interp(_) => Some(0.5 * signals.curvature_err),
+                // the transform's low-sequency coefficients capture what a
+                // midpoint interpolant would; the lifting's non-orthogonal
+                // basis leaves a slightly larger residual tail
+                PredSpec::Transform { .. } => Some(0.6 * signals.curvature_err),
                 // no residual model (non-linearized point lorenzo, zero,
                 // pastri, aps, truncation)
                 _ => None,
@@ -334,6 +412,172 @@ impl AdaptiveChunkSelector {
         obs::SELECTOR_US.observe_since(t_select);
         Ok(Selection { pipeline: self.names[winner].clone(), signals })
     }
+
+    /// Measured rate-distortion selection: compress a stratified sample
+    /// through every candidate, disqualify bound violators, and score the
+    /// survivors by the configured [`OptimizeTarget`]. Returns `None`
+    /// when no candidate qualifies (caller falls back to the proxy).
+    fn select_measured(
+        &self,
+        field: &Field,
+        conf: &CompressConf,
+        signals: ChunkSignals,
+    ) -> Option<Selection> {
+        let sample = sample_field(field);
+        let truth = sample.values.to_f64_vec();
+        // the bound is resolved against the FULL chunk's range (a Rel
+        // bound measured on the sample's narrower range would be unfairly
+        // strict), then pinned as absolute for every candidate
+        let abs_conf = CompressConf::with_radius(ErrorBound::Abs(signals.eb), conf.radius);
+        let tol = signals.eb * (1.0 + 1e-9);
+        let mut qualified: Vec<(usize, f64, f64)> = Vec::new(); // (idx, bytes, ns/byte)
+        for (i, name) in self.names.iter().enumerate() {
+            let Ok(c) = crate::pipeline::build(name) else { continue };
+            let t = std::time::Instant::now();
+            let Ok(stream) = c.compress(&sample, &abs_conf) else { continue };
+            let elapsed_ns = t.elapsed().as_nanos() as f64;
+            let Ok(out) = crate::pipeline::decompress_any(&stream) else { continue };
+            let decoded = out.values.to_f64_vec();
+            if decoded.len() != truth.len() {
+                continue;
+            }
+            let max_err = truth
+                .iter()
+                .zip(&decoded)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            if !max_err.is_finite() || max_err > tol {
+                continue; // sample reconstruction violates the bound
+            }
+            // blend the sample's measured throughput with the family's
+            // one-shot microbenchmark: the sample timing reflects this
+            // exact candidate (lossless level and all) but is noisy at
+            // sample size, the table is stable but family-granular
+            let elem_bytes = match &sample.values {
+                FieldValues::F64(_) => 8usize,
+                FieldValues::F32(_) | FieldValues::I32(_) => 4,
+            };
+            let spec_cost = elapsed_ns / ((truth.len() * elem_bytes).max(1) as f64);
+            let family_cost = self
+                .specs
+                .get(i)
+                .map(|s| family_cost_ns_per_byte(Self::family_label(s)))
+                .unwrap_or(spec_cost);
+            qualified.push((i, stream.len() as f64, 0.5 * (spec_cost + family_cost)));
+        }
+        let min_bytes =
+            qualified.iter().map(|&(_, b, _)| b).fold(f64::INFINITY, f64::min);
+        let min_cost =
+            qualified.iter().map(|&(_, _, c)| c).fold(f64::INFINITY, f64::min);
+        let score = |bytes: f64, cost: f64| -> f64 {
+            match self.optimize {
+                OptimizeTarget::Ratio => bytes,
+                OptimizeTarget::Speed => cost,
+                OptimizeTarget::Balanced => {
+                    // normalized so neither axis dominates on units alone
+                    (bytes / min_bytes.max(1.0))
+                        * (cost / min_cost.max(1e-9)).sqrt()
+                }
+            }
+        };
+        let (winner, _) = qualified.iter().fold(None, |best, &(i, b, c)| {
+            let s = score(b, c);
+            match best {
+                Some((_, bs)) if bs <= s => best,
+                _ => Some((i, s)),
+            }
+        })?;
+        if let Some(s) = self.specs.get(winner) {
+            obs::selector_win(Self::family_label(s));
+        }
+        Some(Selection { pipeline: self.names.get(winner)?.clone(), signals })
+    }
+}
+
+/// Stratified ~1/16 sample of a chunk: four contiguous slabs along the
+/// slowest axis (one per quartile stratum), concatenated. Slabs keep full
+/// N-d structure so block/interp/transform candidates behave as on real
+/// data; chunks ≤ 4096 elements are measured whole.
+fn sample_field(field: &Field) -> Field {
+    let dims = field.shape.dims();
+    let n = field.len();
+    if n <= 4096 {
+        return field.clone();
+    }
+    let plane: usize = dims.iter().skip(1).product::<usize>().max(1);
+    let d0 = dims[0];
+    let per = (d0 / 64).max(1);
+    let strata = 4usize.min(d0);
+    let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(strata);
+    for s in 0..strata {
+        let start = (s * d0 / strata).min(d0 - per);
+        ranges.push((start * plane, per * plane));
+    }
+    let total: usize = ranges.iter().map(|&(_, l)| l).sum();
+    let values = match &field.values {
+        FieldValues::F32(v) => FieldValues::F32(
+            ranges.iter().flat_map(|&(s, l)| v[s..s + l].iter().copied()).collect(),
+        ),
+        FieldValues::F64(v) => FieldValues::F64(
+            ranges.iter().flat_map(|&(s, l)| v[s..s + l].iter().copied()).collect(),
+        ),
+        FieldValues::I32(v) => FieldValues::I32(
+            ranges.iter().flat_map(|&(s, l)| v[s..s + l].iter().copied()).collect(),
+        ),
+    };
+    let mut sdims: Vec<usize> = dims.to_vec();
+    sdims[0] = total / plane;
+    Field::new(field.name.clone(), &sdims, values)
+        .unwrap_or_else(|_| field.clone())
+}
+
+/// One-shot per-family compression-cost table (ns per input byte),
+/// measured once per process on a synthetic smooth field. Families
+/// missing from the probe set (or whose probe failed) report the table's
+/// median so they are neither favored nor punished.
+pub fn family_cost_ns_per_byte(label: &str) -> f64 {
+    static TABLE: OnceLock<Vec<(&'static str, f64)>> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        const PROBES: &[(&str, &str)] = &[
+            ("block", "sz3-lr"),
+            ("interp", "sz3-interp"),
+            ("point", "lorenzo-1d"),
+            ("truncation", "sz3-truncation"),
+            ("szx", "szx"),
+            ("transform", "zfp-like"),
+            ("pastri", "sz3-pastri"),
+            ("aps", "sz3-aps"),
+        ];
+        let dims = [24usize, 24, 24];
+        let vals: Vec<f32> = (0..dims.iter().product::<usize>())
+            .map(|i| {
+                let t = i as f32 * 0.013;
+                t.sin() + 0.3 * (t * 2.7).cos()
+            })
+            .collect();
+        let Ok(f) = Field::f32("cost-probe", &dims, vals) else {
+            return Vec::new();
+        };
+        let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+        PROBES
+            .iter()
+            .filter_map(|&(label, alias)| {
+                let c = crate::pipeline::build(alias).ok()?;
+                let t = std::time::Instant::now();
+                // two passes: the first warms per-process lazy state
+                c.compress(&f, &conf).ok()?;
+                c.compress(&f, &conf).ok()?;
+                let ns = t.elapsed().as_nanos() as f64 / 2.0;
+                Some((label, ns / (f.len() * 4) as f64))
+            })
+            .collect()
+    });
+    if let Some(&(_, c)) = table.iter().find(|&&(l, _)| l == label) {
+        return c;
+    }
+    let mut costs: Vec<f64> = table.iter().map(|&(_, c)| c).collect();
+    costs.sort_by(f64::total_cmp);
+    costs.get(costs.len() / 2).copied().unwrap_or(1.0)
 }
 
 impl Default for AdaptiveChunkSelector {
@@ -484,6 +728,118 @@ mod tests {
         let sel = AdaptiveChunkSelector::new();
         let s = sel.select(&f, &conf()).unwrap();
         assert!(crate::pipeline::build(&s.pipeline).is_ok());
+    }
+
+    #[test]
+    fn optimize_target_parses_known_tokens_only() {
+        assert_eq!(OptimizeTarget::from_name("ratio").unwrap(), OptimizeTarget::Ratio);
+        assert_eq!(OptimizeTarget::from_name("speed").unwrap(), OptimizeTarget::Speed);
+        assert_eq!(
+            OptimizeTarget::from_name("balanced").unwrap(),
+            OptimizeTarget::Balanced
+        );
+        assert!(OptimizeTarget::from_name("best").is_err());
+    }
+
+    #[test]
+    fn sample_field_is_a_stratified_sixteenth() {
+        let dims = [256usize, 16, 16];
+        let n: usize = dims.iter().product();
+        let vals: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let f = Field::f32("big", &dims, vals).unwrap();
+        let s = sample_field(&f);
+        // ~1/16 of the rows, full row planes, dtype preserved
+        assert_eq!(s.shape.dims()[1..], dims[1..]);
+        assert_eq!(s.len(), n / 16);
+        assert!(matches!(s.values, FieldValues::F32(_)));
+        // stratified: the sample spans all four quartiles of the slow axis
+        let got = s.values.to_f64_vec();
+        let quartile = (n / 4) as f64;
+        for q in 0..4 {
+            let lo = q as f64 * quartile;
+            assert!(
+                got.iter().any(|&v| v >= lo && v < lo + quartile),
+                "stratum {q} unsampled"
+            );
+        }
+        // small chunks are measured whole
+        let tiny = Field::f32("tiny", &[40, 10], vec![1.0; 400]).unwrap();
+        assert_eq!(sample_field(&tiny).len(), 400);
+    }
+
+    #[test]
+    fn measured_mode_honors_bounds_and_picks_a_winner() {
+        let mut rng = Pcg32::seeded(0x3ea5);
+        let dims = [64usize, 24, 24];
+        let vals = crate::util::prop::smooth_field(&mut rng, &dims);
+        let f = Field::f32("smooth", &dims, vals).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+        for target in
+            [OptimizeTarget::Ratio, OptimizeTarget::Speed, OptimizeTarget::Balanced]
+        {
+            let sel = AdaptiveChunkSelector::new().with_measured(target);
+            let s = sel.select(&f, &conf).unwrap();
+            // the winner compresses the FULL chunk within the bound
+            let c = crate::pipeline::build(&s.pipeline).unwrap();
+            let stream = c.compress(&f, &conf).unwrap();
+            let out = crate::pipeline::decompress_any(&stream).unwrap();
+            let worst = f
+                .values
+                .to_f64_vec()
+                .iter()
+                .zip(out.values.to_f64_vec())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(worst <= 1e-3 * (1.0 + 1e-9), "{target:?}: err {worst}");
+        }
+    }
+
+    #[test]
+    fn measured_ratio_tracks_the_smallest_fixed_candidate() {
+        // on a flat chunk the fast families produce tiny streams; measured
+        // ratio selection must land within 25% of the best fixed pipeline
+        let f = Field::f32("flat", &[128, 16, 16], vec![2.25; 128 * 16 * 16]).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+        let sel = AdaptiveChunkSelector::new().with_measured(OptimizeTarget::Ratio);
+        let s = sel.select(&f, &conf).unwrap();
+        let winner_bytes =
+            crate::pipeline::build(&s.pipeline).unwrap().compress(&f, &conf).unwrap().len();
+        let best_fixed = AdaptiveChunkSelector::DEFAULT_CANDIDATES
+            .iter()
+            .map(|a| {
+                crate::pipeline::build(a).unwrap().compress(&f, &conf).unwrap().len()
+            })
+            .min()
+            .unwrap();
+        // multiplicative slack for payload noise, additive for the fixed
+        // per-stream header difference between candidate spec strings
+        assert!(
+            winner_bytes as f64 <= best_fixed as f64 * 1.25 + 256.0,
+            "winner {} bytes vs best fixed {}",
+            winner_bytes,
+            best_fixed
+        );
+    }
+
+    #[test]
+    fn cost_table_probes_every_default_family() {
+        for fam in ["block", "interp", "point", "truncation", "szx", "transform"] {
+            let c = family_cost_ns_per_byte(fam);
+            assert!(c.is_finite() && c > 0.0, "{fam}: {c}");
+        }
+        // unknown families get the median, not a panic or a freebie
+        let m = family_cost_ns_per_byte("no-such-family");
+        assert!(m.is_finite() && m > 0.0);
+    }
+
+    #[test]
+    fn transform_family_participates_in_default_selection() {
+        assert!(AdaptiveChunkSelector::DEFAULT_CANDIDATES.contains(&"zfp-like"));
+        let sel = AdaptiveChunkSelector::new();
+        assert!(sel
+            .candidates()
+            .iter()
+            .any(|c| c == &spec::canonical("zfp-like").unwrap()));
     }
 
     #[test]

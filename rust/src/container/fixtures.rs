@@ -130,6 +130,29 @@ pub fn golden_set() -> Result<Vec<Fixture>> {
     let (artifact, _) = coord.run_series_to_container(series, true)?;
     let expected = reference_decode(&artifact)?;
     out.push(Fixture { name: "v3-series", artifact, expected });
+
+    // a v3 artifact whose chunks were compressed by the ZFP-style
+    // transform family, locking the `tblock(4)` stream layout (lifted
+    // coefficients + embedded bitplanes) into the committed corpus: a
+    // format bump that breaks transform decode fails compat, not just
+    // unit tests
+    // field named "a" like the rest of the corpus: the compat suite
+    // region-checks field "a" on every fixture
+    let transform_field = smooth_series(20260808, &dims, 1, 0.0, "a")[0].fields[0].clone();
+    let cfg = JobConfig {
+        pipeline: "zfp-like".into(),
+        bound: ErrorBound::Abs(1e-3),
+        workers: 1,
+        chunk_elems: 2 * 36,
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let tcoord = Coordinator::from_config(&cfg)?;
+    let mut tchunks = Vec::new();
+    tcoord.run(vec![transform_field], |c| tchunks.push(c))?;
+    let artifact = super::pack(&tchunks)?;
+    let expected = reference_decode(&artifact)?;
+    out.push(Fixture { name: "v3-transform", artifact, expected });
     Ok(out)
 }
 

@@ -66,7 +66,9 @@ pub mod adaptive;
 pub mod delta;
 pub mod fixtures;
 
-pub use adaptive::{AdaptiveChunkSelector, ChunkSignals, Selection};
+pub use adaptive::{
+    AdaptiveChunkSelector, ChunkSignals, OptimizeTarget, Selection, SelectionMode,
+};
 
 use crate::byteio::{ByteReader, ByteWriter};
 use crate::coordinator::CompressedChunk;

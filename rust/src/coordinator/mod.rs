@@ -213,12 +213,19 @@ impl Coordinator {
         let name = cfg.pipeline.clone();
         pipeline::build(&name)
             .map_err(|e| SzError::config(format!("pipeline '{name}': {e}")))?;
-        let selector = if cfg.adaptive {
-            let sel = if cfg.candidates.is_empty() {
+        // `measured` implies adaptive: asking for measured selection without
+        // a selector would silently run the fixed pipeline.
+        let selector = if cfg.adaptive || cfg.measured {
+            let mut sel = if cfg.candidates.is_empty() {
                 AdaptiveChunkSelector::new()
             } else {
                 AdaptiveChunkSelector::from_names(cfg.candidates.iter().cloned())?
             };
+            if cfg.measured {
+                sel = sel.with_measured(crate::container::OptimizeTarget::from_name(
+                    &cfg.optimize,
+                )?);
+            }
             Some(Arc::new(sel))
         } else {
             None
@@ -582,6 +589,32 @@ mod tests {
         assert!(Coordinator::from_config(&cfg).is_err());
         let cfg = crate::config::JobConfig { adaptive: true, ..Default::default() };
         assert!(Coordinator::from_config(&cfg).unwrap().selector.is_some());
+    }
+
+    #[test]
+    fn measured_config_builds_a_measured_selector() {
+        use crate::container::{OptimizeTarget, SelectionMode};
+        // measured implies adaptive even when the adaptive flag is off
+        let cfg = crate::config::JobConfig {
+            measured: true,
+            optimize: "speed".into(),
+            ..Default::default()
+        };
+        let coord = Coordinator::from_config(&cfg).unwrap();
+        let sel = coord.selector.expect("measured implies a selector");
+        assert_eq!(sel.mode, SelectionMode::Measured);
+        assert_eq!(sel.optimize, OptimizeTarget::Speed);
+        // adaptive without measured stays in proxy mode
+        let cfg = crate::config::JobConfig { adaptive: true, ..Default::default() };
+        let sel = Coordinator::from_config(&cfg).unwrap().selector.unwrap();
+        assert_eq!(sel.mode, SelectionMode::Proxy);
+        // a bad objective fails config-side, but from_config guards too
+        let cfg = crate::config::JobConfig {
+            measured: true,
+            optimize: "best".into(),
+            ..Default::default()
+        };
+        assert!(Coordinator::from_config(&cfg).is_err());
     }
 
     #[test]

@@ -71,6 +71,7 @@ pub mod quantizer;
 pub mod reader;
 pub mod runtime;
 pub mod server;
+pub mod transform;
 pub mod util;
 
 pub use error::{Result, SzError};

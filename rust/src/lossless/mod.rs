@@ -142,14 +142,26 @@ impl Lossless for TimedLossless {
 }
 
 /// Construct a boxed lossless backend by name (wrapped in the
-/// stage-metrics timing shim).
+/// stage-metrics timing shim). A `@lN` suffix selects the backend level
+/// (`zstd@l19`: zstd accepts 1..=22, gzip 1..=9; the other backends take
+/// no level) — the same token grammar the pipeline spec canonicalizes.
 pub fn by_name(name: &str) -> Option<Box<dyn Lossless>> {
-    let inner: Box<dyn Lossless> = match name {
-        "bypass" | "none" => Box::new(Bypass),
-        "zstd" => Box::new(ZstdLossless::default()),
-        "gzip" => Box::new(GzipLossless::default()),
-        "lzhuf" => Box::new(LzHuf::default()),
-        "rle" => Box::new(Rle),
+    let (base, level) = match name.split_once("@l") {
+        Some((b, rest)) => (b, Some(rest.parse::<u32>().ok()?)),
+        None => (name, None),
+    };
+    let inner: Box<dyn Lossless> = match (base, level) {
+        ("bypass" | "none", None) => Box::new(Bypass),
+        ("zstd", None) => Box::new(ZstdLossless::default()),
+        ("zstd", Some(l)) if (1..=22).contains(&l) => {
+            Box::new(ZstdLossless { level: l as i32 })
+        }
+        ("gzip", None) => Box::new(GzipLossless::default()),
+        ("gzip", Some(l)) if (1..=9).contains(&l) => {
+            Box::new(GzipLossless { level: l })
+        }
+        ("lzhuf", None) => Box::new(LzHuf::default()),
+        ("rle", None) => Box::new(Rle),
         _ => return None,
     };
     Some(Box::new(TimedLossless { inner }))
@@ -218,5 +230,29 @@ mod tests {
     #[test]
     fn unknown_backend_is_none() {
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn leveled_backends_roundtrip_and_reject_bad_levels() {
+        let mut rng = crate::util::rng::Pcg32::seeded(0x1eve1);
+        let data = prop::compressible_u8(&mut rng, 40_000);
+        let mut sizes = Vec::new();
+        for n in ["zstd@l1", "zstd@l19", "zstd@l22", "gzip@l1", "gzip@l9"] {
+            let b = by_name(n).unwrap_or_else(|| panic!("{n} should construct"));
+            sizes.push(roundtrip(b.as_ref(), &data));
+        }
+        // a higher level must not be catastrophically worse on motif data
+        assert!(sizes[1] <= sizes[0] * 2, "zstd@l19 vs @l1: {sizes:?}");
+        assert!(sizes[4] <= sizes[3] * 2, "gzip@l9 vs @l1: {sizes:?}");
+        for n in [
+            "zstd@l0", "zstd@l23", "gzip@l0", "gzip@l10", "lzhuf@l3",
+            "rle@l1", "bypass@l2", "zstd@lx", "zstd@l", "zstd@l-1",
+        ] {
+            assert!(by_name(n).is_none(), "{n} should be rejected");
+        }
+        // a leveled compressor's output decodes through the default one
+        let c = by_name("zstd@l19").unwrap().compress(&data).unwrap();
+        let d = by_name("zstd").unwrap().decompress(&c).unwrap();
+        assert_eq!(d, data);
     }
 }

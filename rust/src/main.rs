@@ -27,7 +27,8 @@ sz3 — modular prediction-based error-bounded lossy compression (SZ3 reproducti
 USAGE:
   sz3 compress   --input raw.bin --dims 100,500,500 --dtype f32
                  [--pipeline NAME|SPEC] [--abs EB | --rel EB | --pwrel EB]
-                 [--radius N] [--container] [--adaptive]
+                 [--radius N] [--container] [--adaptive] [--measured]
+                 [--optimize ratio|speed|balanced]
                  [--candidates a,b,c] [--chunk-elems N] [--workers N]
                  [--stats] [--trace trace.json] --out file.sz3
   sz3 compress   --series t0.bin,t1.bin,t2.bin --dims 100,500,500
@@ -41,7 +42,8 @@ USAGE:
                  [--stats] [--trace trace.json]
   sz3 info       --input file.sz3
   sz3 serve      [--config job.json] [--dataset nyx|all] [--out dir]
-                 [--container] [--adaptive]
+                 [--container] [--adaptive] [--measured]
+                 [--optimize ratio|speed|balanced]
   sz3 serve-http --dir artifacts/ [--addr 127.0.0.1:8080] [--threads N]
                  [--cache-mb MB] [--workers N] [--no-verify]
                  [--read-only] [--max-ingests N] [--max-body-mb MB]
@@ -61,6 +63,10 @@ alias and stage, docs/PIPELINES.md specifies the grammar. --candidates
 accepts the same names/specs.
 --container packs coordinator chunks into one SZ3C artifact; --adaptive
 picks the best-fit pipeline per chunk (recorded in the chunk index).
+--measured scores the candidates by compressing a stratified chunk sample
+through each one (measured bytes + timing) instead of the residual proxy;
+--optimize sets the objective (default ratio; see docs/SELECTION.md).
+Both imply --adaptive.
 audit lexes rust/src and enforces the panic-freedom / checked-arithmetic
 rules over the untrusted-byte trust map (docs/AUDIT.md): --strict exits
 nonzero on any unsuppressed finding (the blocking CI mode), --json emits
@@ -255,6 +261,17 @@ fn job_config_from_flags(a: &Args, pipeline: &str, bound: ErrorBound) -> CliResu
         cfg.candidates = c;
         cfg.adaptive = true;
     }
+    if a.has("measured") {
+        cfg.measured = true;
+        cfg.adaptive = true;
+    }
+    if let Some(t) = a.get("optimize") {
+        // an objective only makes sense for measured scoring, so asking
+        // for one opts into it
+        cfg.optimize = t.to_string();
+        cfg.measured = true;
+        cfg.adaptive = true;
+    }
     Ok(cfg)
 }
 
@@ -344,7 +361,11 @@ fn cmd_compress(a: &Args) -> CliResult {
     let bound = parse_bound(a)?;
     let trace = trace_setup(a);
     let t0 = std::time::Instant::now();
-    let (stream, label) = if a.has("container") || a.has("adaptive") || a.get("candidates").is_some()
+    let (stream, label) = if a.has("container")
+        || a.has("adaptive")
+        || a.has("measured")
+        || a.get("optimize").is_some()
+        || a.get("candidates").is_some()
     {
         // coordinator path: shard + (optionally) per-chunk best-fit
         // pipelines; the field moves in, so no second copy is held
@@ -581,6 +602,15 @@ fn cmd_serve(a: &Args) -> CliResult {
     if a.has("adaptive") {
         cfg.adaptive = true;
     }
+    if a.has("measured") {
+        cfg.measured = true;
+        cfg.adaptive = true;
+    }
+    if let Some(t) = a.get("optimize") {
+        cfg.optimize = t.to_string();
+        cfg.measured = true;
+        cfg.adaptive = true;
+    }
     let dataset = a.get("dataset").unwrap_or("nyx");
     let seed = a.get_or("seed", 42u64)?;
     let sets = sz3::datagen::survey(seed);
@@ -614,9 +644,15 @@ fn cmd_serve(a: &Args) -> CliResult {
                 // candidate set (single source of truth) but routing block
                 // analysis through PJRT
                 let base = coord.selector.take().expect("adaptive config sets a selector");
-                let sel = container::AdaptiveChunkSelector::from_names(
+                let mut sel = container::AdaptiveChunkSelector::from_names(
                     base.candidates().iter().cloned(),
                 )?;
+                if cfg.measured {
+                    // the rebuild must not silently drop measured scoring
+                    sel = sel.with_measured(container::OptimizeTarget::from_name(
+                        &cfg.optimize,
+                    )?);
+                }
                 coord.selector = Some(Arc::new(
                     sel.with_analyzer(Arc::new(PjrtAnalyzer::new(service))),
                 ));

@@ -388,12 +388,14 @@ pub static CHUNK_BYTES_OUT: Counter = Counter::new();
 /// Predictor-family labels for the adaptive selector's win counters,
 /// index-aligned with [`SELECTOR_WINS`]. Dynamic pipeline specs fold
 /// into their family so recording stays allocation-free.
-pub const SELECTOR_FAMILIES: [&str; 8] =
-    ["block", "interp", "point", "truncation", "szx", "pastri", "aps", "other"];
+pub const SELECTOR_FAMILIES: [&str; 9] = [
+    "block", "interp", "point", "truncation", "szx", "transform", "pastri",
+    "aps", "other",
+];
 
 const COUNTER_INIT: Counter = Counter::new();
 /// Adaptive-selector wins per predictor family.
-pub static SELECTOR_WINS: [Counter; 8] = [COUNTER_INIT; 8];
+pub static SELECTOR_WINS: [Counter; 9] = [COUNTER_INIT; 9];
 /// Candidate pipelines scored by the adaptive selector.
 pub static SELECTOR_CANDIDATES: Counter = Counter::new();
 /// Per-chunk adaptive selection wall time.

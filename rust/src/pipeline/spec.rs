@@ -20,8 +20,12 @@
 //! | `interp(cubic\|linear)` | level-by-level interpolation | `linear` quantizer, encoder, lossless |
 //! | `truncation[@kN]` | byte truncation (module bypass) | lossless |
 //! | `constblock(B)` | SZx-style constant blocks | `truncation[@kN]`, `raw` encoder, lossless |
+//! | `tblock(4)` | ZFP-style transform coding | `bitplane[@pN]`, `raw` encoder, lossless |
 //! | `pastri(bitplane\|value)[@pN]` | GAMESS periodic patterns | `fixed_huffman` encoder, lossless |
 //! | `aps[@EB]` | adaptive APS meta-pipeline | (composes its own stages) |
+//!
+//! The lossless token optionally carries a backend level (`zstd@l19`,
+//! `gzip@l9`); unleveled tokens keep each backend's default.
 //!
 //! [`PipelineSpec::parse`] validates a spec, [`PipelineSpec::canonical`]
 //! renders the unique canonical string (parse → canonicalize → parse is a
@@ -63,6 +67,7 @@ pub const ALIASES: &[(&str, &str)] = &[
     ("sz-pastri-zstd", "pastri(value)/fixed_huffman/zstd"),
     ("sz3-aps", "aps"),
     ("szx", "constblock(32)/truncation/raw/zstd"),
+    ("zfp-like", "tblock(4)/bitplane/raw/zstd"),
     ("lorenzo-1d", "linearize/lorenzo/linear/huffman/zstd"),
     ("fpzip-like", "lorenzo/linear/arithmetic/bypass"),
 ];
@@ -143,6 +148,15 @@ pub enum PredSpec {
         /// Most-significant bytes kept for non-constant values; `None`
         /// derives from the bound.
         keep: Option<usize>,
+    },
+    /// ZFP-style fixed 4^d-block transform family (`tblock(4)`): lifted
+    /// integer decorrelation plus embedded bitplane coding. The spec's
+    /// second stage is a `bitplane[@pN]` token optionally pinning a
+    /// minimum kept-plane count, and the encoder slot must be `raw`.
+    Transform {
+        /// Minimum kept bitplanes per coded block (1..=64); `None`
+        /// derives the cutoff from the error bound alone.
+        planes: Option<u32>,
     },
     /// PaSTRI periodic-pattern prediction (`pastri(bitplane|value)`,
     /// `@pN` pins the pattern period instead of autocorrelation detection).
@@ -233,6 +247,9 @@ pub struct PipelineSpec {
     pub enc: Option<EncSpec>,
     /// Lossless stage (`None` for the aps family).
     pub lossless: Option<&'static str>,
+    /// Lossless backend level (`zstd@l19`); `None` = backend default.
+    /// Only zstd (1..=22) and gzip (1..=9) take one.
+    pub lossless_level: Option<u32>,
 }
 
 /// One parsed stage token: `name`, optional `(arg+arg)` list, optional
@@ -319,7 +336,8 @@ impl<'a> Token<'a> {
 
 const PRE_NAMES: &[&str] = &["identity", "linearize", "log", "log_transform"];
 const PRED_NAMES: &[&str] = &[
-    "lorenzo", "zero", "block", "interp", "truncation", "constblock", "pastri", "aps",
+    "lorenzo", "zero", "block", "interp", "truncation", "constblock", "tblock",
+    "pastri", "aps",
 ];
 
 fn parse_pre(t: &Token) -> Result<PreSpec> {
@@ -436,6 +454,22 @@ fn parse_pred(t: &Token) -> Result<PredSpec> {
             // family-shape match below fills them in
             Ok(PredSpec::ConstBlock { block, keep: None })
         }
+        "tblock" => {
+            t.no_param()?;
+            match t.args.as_slice() {
+                [] | ["4"] => {}
+                _ => {
+                    return Err(SzError::config(format!(
+                        "stage '{}': the transform block side is fixed at 4 \
+                         (tblock or tblock(4))",
+                        t.raw
+                    )))
+                }
+            }
+            // pinned planes ride on the spec's bitplane mid-token; the
+            // family-shape match below fills them in
+            Ok(PredSpec::Transform { planes: None })
+        }
         "pastri" => {
             let bitplane = match t.args.as_slice() {
                 [] | ["bitplane"] => true,
@@ -535,16 +569,35 @@ fn parse_enc(t: &Token) -> Result<EncSpec> {
     })
 }
 
-fn parse_lossless(t: &Token) -> Result<&'static str> {
+fn parse_lossless(t: &Token) -> Result<(&'static str, Option<u32>)> {
     t.no_args()?;
-    t.no_param()?;
-    canon_lossless(t.name).ok_or_else(|| {
+    let token = canon_lossless(t.name).ok_or_else(|| {
         SzError::config(format!(
             "unknown lossless stage '{}' (known: {})",
             t.name,
             LOSSLESS_TOKENS.join(", ")
         ))
-    })
+    })?;
+    let level = match t.param {
+        None => None,
+        Some(p) => {
+            let lvl = p.strip_prefix('l').and_then(|v| v.parse::<u32>().ok());
+            let ok = match (token, lvl) {
+                ("zstd", Some(l)) => (1..=22).contains(&l),
+                ("gzip", Some(l)) => (1..=9).contains(&l),
+                _ => false,
+            };
+            if !ok {
+                return Err(SzError::config(format!(
+                    "stage '{}': lossless level is @lN (zstd 1..=22, gzip \
+                     1..=9; other backends take none)",
+                    t.raw
+                )));
+            }
+            lvl
+        }
+    };
+    Ok((token, level))
 }
 
 impl PipelineSpec {
@@ -597,12 +650,14 @@ impl PipelineSpec {
                 if rest.len() != 3 {
                     return Err(shape_err("point", "quantizer/encoder/lossless"));
                 }
+                let (ll, lvl) = parse_lossless(&rest[2])?;
                 PipelineSpec {
                     pre,
                     pred,
                     quant: Some(parse_quant(&rest[0])?),
                     enc: Some(parse_enc(&rest[1])?),
-                    lossless: Some(parse_lossless(&rest[2])?),
+                    lossless: Some(ll),
+                    lossless_level: lvl,
                 }
             }
             PredSpec::Block { .. } | PredSpec::Interp(_) => {
@@ -623,24 +678,28 @@ impl PipelineSpec {
                          support only the linear quantizer"
                     )));
                 }
+                let (ll, lvl) = parse_lossless(&rest[2])?;
                 PipelineSpec {
                     pre,
                     pred,
                     quant: Some(quant),
                     enc: Some(parse_enc(&rest[1])?),
-                    lossless: Some(parse_lossless(&rest[2])?),
+                    lossless: Some(ll),
+                    lossless_level: lvl,
                 }
             }
             PredSpec::Truncation { .. } => {
                 if rest.len() != 1 {
                     return Err(shape_err("truncation", "exactly a lossless stage"));
                 }
+                let (ll, lvl) = parse_lossless(&rest[0])?;
                 PipelineSpec {
                     pre,
                     pred,
                     quant: None,
                     enc: None,
-                    lossless: Some(parse_lossless(&rest[0])?),
+                    lossless: Some(ll),
+                    lossless_level: lvl,
                 }
             }
             PredSpec::ConstBlock { block, .. } => {
@@ -670,12 +729,63 @@ impl PipelineSpec {
                          only the raw encoder"
                     )));
                 }
+                let (ll, lvl) = parse_lossless(&rest[2])?;
                 PipelineSpec {
                     pre,
                     pred: PredSpec::ConstBlock { block, keep },
                     quant: None,
                     enc: Some(enc),
-                    lossless: Some(parse_lossless(&rest[2])?),
+                    lossless: Some(ll),
+                    lossless_level: lvl,
+                }
+            }
+            PredSpec::Transform { .. } => {
+                if rest.len() != 3 {
+                    return Err(shape_err(
+                        "transform",
+                        "bitplane[@pN]/raw/<lossless>",
+                    ));
+                }
+                // the mid stage names the embedded bitplane coder and
+                // carries the optional pinned-plane floor
+                if rest[0].name != "bitplane" {
+                    return Err(SzError::config(format!(
+                        "pipeline spec '{s}': the transform family's second \
+                         stage is bitplane[@pN] (got '{}')",
+                        rest[0].raw
+                    )));
+                }
+                rest[0].no_args()?;
+                let planes = match rest[0].param {
+                    None => None,
+                    Some(p) => Some(
+                        p.strip_prefix('p')
+                            .and_then(|v| v.parse::<u32>().ok())
+                            .filter(|v| (1..=64).contains(v))
+                            .ok_or_else(|| {
+                                SzError::config(format!(
+                                    "stage '{}': bitplane pinned planes is \
+                                     @p1..@p64",
+                                    rest[0].raw
+                                ))
+                            })?,
+                    ),
+                };
+                let enc = parse_enc(&rest[1])?;
+                if enc != EncSpec::Raw {
+                    return Err(SzError::config(format!(
+                        "pipeline spec '{s}': the transform family supports \
+                         only the raw encoder"
+                    )));
+                }
+                let (ll, lvl) = parse_lossless(&rest[2])?;
+                PipelineSpec {
+                    pre,
+                    pred: PredSpec::Transform { planes },
+                    quant: None,
+                    enc: Some(enc),
+                    lossless: Some(ll),
+                    lossless_level: lvl,
                 }
             }
             PredSpec::Pastri { .. } => {
@@ -689,19 +799,28 @@ impl PipelineSpec {
                          the fixed_huffman encoder"
                     )));
                 }
+                let (ll, lvl) = parse_lossless(&rest[1])?;
                 PipelineSpec {
                     pre,
                     pred,
                     quant: None,
                     enc: Some(enc),
-                    lossless: Some(parse_lossless(&rest[1])?),
+                    lossless: Some(ll),
+                    lossless_level: lvl,
                 }
             }
             PredSpec::Aps { .. } => {
                 if !rest.is_empty() {
                     return Err(shape_err("aps", "no further stages"));
                 }
-                PipelineSpec { pre, pred, quant: None, enc: None, lossless: None }
+                PipelineSpec {
+                    pre,
+                    pred,
+                    quant: None,
+                    enc: None,
+                    lossless: None,
+                    lossless_level: None,
+                }
             }
         };
         spec.validate()?;
@@ -732,6 +851,7 @@ impl PipelineSpec {
             PredSpec::Truncation { keep: None } => "truncation".into(),
             PredSpec::Truncation { keep: Some(k) } => format!("truncation@k{k}"),
             PredSpec::ConstBlock { block, .. } => format!("constblock({block})"),
+            PredSpec::Transform { .. } => "tblock(4)".into(),
             PredSpec::Pastri { bitplane, period } => {
                 let base =
                     if bitplane { "pastri(bitplane)" } else { "pastri(value)" };
@@ -757,6 +877,14 @@ impl PipelineSpec {
                 Some(k) => format!("truncation@k{k}"),
             });
         }
+        // likewise the transform family's pinned planes render as the
+        // spec's bitplane mid-token
+        if let PredSpec::Transform { planes } = self.pred {
+            parts.push(match planes {
+                None => "bitplane".into(),
+                Some(p) => format!("bitplane@p{p}"),
+            });
+        }
         if let Some(q) = self.quant {
             parts.push(match q {
                 QuantSpec::Linear { radius: None } => "linear".into(),
@@ -769,9 +897,23 @@ impl PipelineSpec {
             parts.push(e.token().into());
         }
         if let Some(l) = self.lossless {
-            parts.push(l.into());
+            parts.push(match self.lossless_level {
+                None => l.into(),
+                Some(n) => format!("{l}@l{n}"),
+            });
         }
         parts.join("/")
+    }
+
+    /// The lossless stage rendered as a backend token (`zstd`,
+    /// `zstd@l19`) — the exact string [`crate::lossless::by_name`]
+    /// accepts.
+    pub fn lossless_token(&self) -> Option<String> {
+        let base = self.lossless?;
+        Some(match self.lossless_level {
+            None => base.to_string(),
+            Some(n) => format!("{base}@l{n}"),
+        })
     }
 
     /// Re-check the family invariants ([`parse`](Self::parse) and
@@ -790,6 +932,14 @@ impl PipelineSpec {
         // string its own header can never re-parse
         if let Some(QuantSpec::Linear { radius: Some(r) }) = self.quant {
             want((1..=1 << 30).contains(&r), "linear radius must be 1..=2^30")?;
+        }
+        if let Some(n) = self.lossless_level {
+            let ok = match self.lossless {
+                Some("zstd") => (1..=22).contains(&n),
+                Some("gzip") => (1..=9).contains(&n),
+                _ => false,
+            };
+            want(ok, "lossless level applies to zstd (1..=22) and gzip (1..=9)")?;
         }
         match self.pred {
             PredSpec::Lorenzo(o) => {
@@ -842,6 +992,21 @@ impl PipelineSpec {
                     "the constblock family supports only the raw encoder",
                 )?;
                 want(self.lossless.is_some(), "constblock needs a lossless stage")
+            }
+            PredSpec::Transform { planes } => {
+                want(
+                    planes.map(|p| (1..=64).contains(&p)).unwrap_or(true),
+                    "transform pinned planes must be 1..=64",
+                )?;
+                want(
+                    self.quant.is_none(),
+                    "the transform family bypasses the quantizer stage",
+                )?;
+                want(
+                    matches!(self.enc, Some(EncSpec::Raw)),
+                    "the transform family supports only the raw encoder",
+                )?;
+                want(self.lossless.is_some(), "transform needs a lossless stage")
             }
             PredSpec::Pastri { period, .. } => {
                 want(
@@ -915,7 +1080,7 @@ impl PipelineSpec {
             predictor: pred,
             quantizer: quant,
             encoder: self.enc.expect("validated").token().to_string(),
-            lossless: self.lossless.expect("validated").to_string(),
+            lossless: self.lossless_token().expect("validated"),
             radius,
         }
     }
@@ -939,24 +1104,31 @@ impl PipelineSpec {
                 name,
                 mode,
                 encoder: self.enc.expect("validated").token().to_string(),
-                lossless: self.lossless.expect("validated").to_string(),
+                lossless: self.lossless_token().expect("validated"),
                 radius,
             }),
             PredSpec::Truncation { keep } => Box::new(TruncationCompressor {
                 name,
                 keep_bytes: keep,
-                lossless: self.lossless.expect("validated").to_string(),
+                lossless: self.lossless_token().expect("validated"),
             }),
             PredSpec::ConstBlock { block, keep } => Box::new(SzxCompressor {
                 name,
                 block: block as usize,
                 keep_bytes: keep,
-                lossless: self.lossless.expect("validated").to_string(),
+                lossless: self.lossless_token().expect("validated"),
             }),
+            PredSpec::Transform { planes } => {
+                Box::new(crate::transform::TransformCompressor {
+                    name,
+                    planes,
+                    lossless: self.lossless_token().expect("validated"),
+                })
+            }
             PredSpec::Pastri { bitplane, period } => Box::new(PastriCompressor {
                 name,
                 bitplane_unpred: bitplane,
-                lossless: self.lossless.expect("validated").to_string(),
+                lossless: self.lossless_token().expect("validated"),
                 period,
             }),
             PredSpec::Aps { switch_eb } => {
@@ -981,7 +1153,7 @@ impl PipelineSpec {
                 name: self.canonical(),
                 analyzer: std::sync::Arc::new(super::analysis::NativeAnalyzer),
                 encoder: self.enc?.token().to_string(),
-                lossless: (*self.lossless.as_ref()?).to_string(),
+                lossless: self.lossless_token()?,
                 assume_noiseless: false,
                 specialized,
                 radius: match self.quant {
@@ -1099,6 +1271,11 @@ impl PipelineBuilder {
         Self::new(PredSpec::ConstBlock { block, keep: None })
     }
 
+    /// ZFP-style 4^d-block transform family.
+    pub fn transform() -> Self {
+        Self::new(PredSpec::Transform { planes: None })
+    }
+
     /// PaSTRI family (`bitplane` selects the SZ3 unpredictable layout).
     pub fn pastri(bitplane: bool) -> Self {
         Self::new(PredSpec::Pastri { bitplane, period: None })
@@ -1139,6 +1316,17 @@ impl PipelineBuilder {
             _ => self.set_err(
                 "keep_bytes() applies to the truncation and constblock families",
             ),
+        }
+        self
+    }
+
+    /// Pin the minimum kept bitplanes (transform family only).
+    pub fn planes(mut self, p: u32) -> Self {
+        match self.pred {
+            PredSpec::Transform { .. } => {
+                self.pred = PredSpec::Transform { planes: Some(p) };
+            }
+            _ => self.set_err("planes() applies to the transform family"),
         }
         self
     }
@@ -1187,7 +1375,7 @@ impl PipelineBuilder {
     }
 
     /// Set the lossless stage by token name (`zstd`, `gzip`, `lzhuf`,
-    /// `rle`, `bypass`).
+    /// `rle`, `bypass`), optionally leveled (`zstd@l19`, `gzip@l9`).
     pub fn lossless(mut self, name: &str) -> Self {
         self.lossless = Some(name.to_string());
         self
@@ -1205,14 +1393,14 @@ impl PipelineBuilder {
         if let Some(e) = self.err {
             return Err(SzError::config(e));
         }
-        let lossless = match &self.lossless {
-            Some(name) => Some(canon_lossless(name).ok_or_else(|| {
-                SzError::config(format!(
-                    "unknown lossless stage '{name}' (known: {})",
-                    LOSSLESS_TOKENS.join(", ")
-                ))
-            })?),
-            None => None,
+        let (lossless, lossless_level) = match &self.lossless {
+            // full token grammar, so `.lossless("zstd@l19")` works too
+            Some(name) => {
+                let tok = Token::parse(name)?;
+                let (l, lvl) = parse_lossless(&tok)?;
+                (Some(l), lvl)
+            }
+            None => (None, None),
         };
         let spec = match self.pred {
             PredSpec::Lorenzo(_)
@@ -1224,6 +1412,7 @@ impl PipelineBuilder {
                 quant: Some(self.quant.unwrap_or(QuantSpec::Linear { radius: None })),
                 enc: Some(self.enc.unwrap_or(EncSpec::Huffman)),
                 lossless: Some(lossless.unwrap_or("zstd")),
+                lossless_level,
             },
             PredSpec::Truncation { .. } => PipelineSpec {
                 pre: self.pre,
@@ -1231,20 +1420,25 @@ impl PipelineBuilder {
                 quant: self.quant,
                 enc: self.enc,
                 lossless: Some(lossless.unwrap_or("bypass")),
+                lossless_level,
             },
-            PredSpec::ConstBlock { .. } => PipelineSpec {
-                pre: self.pre,
-                pred: self.pred,
-                quant: self.quant,
-                enc: Some(self.enc.unwrap_or(EncSpec::Raw)),
-                lossless: Some(lossless.unwrap_or("zstd")),
-            },
+            PredSpec::ConstBlock { .. } | PredSpec::Transform { .. } => {
+                PipelineSpec {
+                    pre: self.pre,
+                    pred: self.pred,
+                    quant: self.quant,
+                    enc: Some(self.enc.unwrap_or(EncSpec::Raw)),
+                    lossless: Some(lossless.unwrap_or("zstd")),
+                    lossless_level,
+                }
+            }
             PredSpec::Pastri { .. } => PipelineSpec {
                 pre: self.pre,
                 pred: self.pred,
                 quant: self.quant,
                 enc: Some(self.enc.unwrap_or(EncSpec::FixedHuffman)),
                 lossless: Some(lossless.unwrap_or("zstd")),
+                lossless_level,
             },
             PredSpec::Aps { .. } => PipelineSpec {
                 pre: self.pre,
@@ -1252,6 +1446,7 @@ impl PipelineBuilder {
                 quant: self.quant,
                 enc: self.enc,
                 lossless,
+                lossless_level,
             },
         };
         spec.validate()?;
@@ -1287,6 +1482,7 @@ pub fn catalog() -> &'static [StageInfo] {
         StageInfo { kind: "predictor", token: "interp", params: "(cubic|linear)", summary: "level-by-level spline interpolation (SZ3-Interp)" },
         StageInfo { kind: "predictor", token: "truncation", params: "@kN keep bytes 1..=8", summary: "byte truncation, module bypass (SZ3-Truncation)" },
         StageInfo { kind: "predictor", token: "constblock", params: "(N) block elems 1..=2^20, then truncation[@kN]/raw", summary: "SZx-style constant-block fast path" },
+        StageInfo { kind: "predictor", token: "tblock", params: "(4) fixed block side, then bitplane[@pN]/raw", summary: "ZFP-style lifted transform + embedded bitplanes" },
         StageInfo { kind: "predictor", token: "pastri", params: "(bitplane|value) @pN period", summary: "periodic-pattern prediction for GAMESS ERI (SZ3-Pastri)" },
         StageInfo { kind: "predictor", token: "aps", params: "@EB switch bound", summary: "adaptive APS meta-pipeline (composes its own stages)" },
         StageInfo { kind: "quantizer", token: "linear", params: "@rN radius override", summary: "linear-scaling quantizer" },
@@ -1296,8 +1492,8 @@ pub fn catalog() -> &'static [StageInfo] {
         StageInfo { kind: "encoder", token: "fixed_huffman", params: "", summary: "predefined-tree Huffman" },
         StageInfo { kind: "encoder", token: "arithmetic", params: "", summary: "adaptive arithmetic coding" },
         StageInfo { kind: "encoder", token: "raw", params: "", summary: "uncoded index passthrough" },
-        StageInfo { kind: "lossless", token: "zstd", params: "", summary: "zstd proxy (default stage)" },
-        StageInfo { kind: "lossless", token: "gzip", params: "", summary: "DEFLATE proxy" },
+        StageInfo { kind: "lossless", token: "zstd", params: "@lN level 1..=22", summary: "zstd proxy (default stage)" },
+        StageInfo { kind: "lossless", token: "gzip", params: "@lN level 1..=9", summary: "DEFLATE proxy" },
         StageInfo { kind: "lossless", token: "lzhuf", params: "", summary: "from-scratch LZ+Huffman backend" },
         StageInfo { kind: "lossless", token: "rle", params: "", summary: "byte run-length encoding" },
         StageInfo { kind: "lossless", token: "bypass", params: "", summary: "no lossless stage (module bypass)" },
@@ -1396,7 +1592,7 @@ mod tests {
 
     /// Random valid spec over the whole grammar.
     fn random_spec(rng: &mut Pcg32) -> PipelineSpec {
-        let pred = match rng.below(8) {
+        let pred = match rng.below(9) {
             0 => PredSpec::Lorenzo(rng.below(3) as u32 + 1),
             1 => PredSpec::Zero,
             2 => PredSpec::Block { specialized: rng.below(2) == 0 },
@@ -1416,6 +1612,13 @@ mod tests {
                 block: [1u32, 2, 32, 256, 1 << 20][rng.below(5)],
                 keep: if rng.below(2) == 0 { None } else { Some(rng.below(8) + 1) },
             },
+            7 => PredSpec::Transform {
+                planes: if rng.below(2) == 0 {
+                    None
+                } else {
+                    Some(rng.below(64) as u32 + 1)
+                },
+            },
             _ => PredSpec::Aps {
                 switch_eb: [0.5, 0.25, 2.0, 0.75][rng.below(4)],
             },
@@ -1431,6 +1634,11 @@ mod tests {
         let enc_any = [EncSpec::Huffman, EncSpec::FixedHuffman, EncSpec::Arithmetic, EncSpec::Raw]
             [rng.below(4)];
         let ll = LOSSLESS_TOKENS[rng.below(LOSSLESS_TOKENS.len())];
+        let lvl = match ll {
+            "zstd" if rng.below(3) == 0 => Some(rng.below(22) as u32 + 1),
+            "gzip" if rng.below(3) == 0 => Some(rng.below(9) as u32 + 1),
+            _ => None,
+        };
         match pred {
             PredSpec::Lorenzo(_) | PredSpec::Zero => PipelineSpec {
                 pre,
@@ -1442,6 +1650,7 @@ mod tests {
                 }),
                 enc: Some(enc_any),
                 lossless: Some(ll),
+                lossless_level: lvl,
             },
             PredSpec::Block { .. } | PredSpec::Interp(_) => PipelineSpec {
                 pre,
@@ -1449,27 +1658,42 @@ mod tests {
                 quant: Some(linearish),
                 enc: Some(enc_any),
                 lossless: Some(ll),
+                lossless_level: lvl,
             },
-            PredSpec::Truncation { .. } => {
-                PipelineSpec { pre, pred, quant: None, enc: None, lossless: Some(ll) }
-            }
-            PredSpec::ConstBlock { .. } => PipelineSpec {
+            PredSpec::Truncation { .. } => PipelineSpec {
                 pre,
                 pred,
                 quant: None,
-                enc: Some(EncSpec::Raw),
+                enc: None,
                 lossless: Some(ll),
+                lossless_level: lvl,
             },
+            PredSpec::ConstBlock { .. } | PredSpec::Transform { .. } => {
+                PipelineSpec {
+                    pre,
+                    pred,
+                    quant: None,
+                    enc: Some(EncSpec::Raw),
+                    lossless: Some(ll),
+                    lossless_level: lvl,
+                }
+            }
             PredSpec::Pastri { .. } => PipelineSpec {
                 pre,
                 pred,
                 quant: None,
                 enc: Some(EncSpec::FixedHuffman),
                 lossless: Some(ll),
+                lossless_level: lvl,
             },
-            PredSpec::Aps { .. } => {
-                PipelineSpec { pre, pred, quant: None, enc: None, lossless: None }
-            }
+            PredSpec::Aps { .. } => PipelineSpec {
+                pre,
+                pred,
+                quant: None,
+                enc: None,
+                lossless: None,
+                lossless_level: None,
+            },
         }
     }
 
@@ -1538,6 +1762,23 @@ mod tests {
             "constblock(32)/truncation/huffman/zstd", // constblock needs raw
             "constblock(32)/truncation/raw",         // missing lossless
             "constblock(32)/raw/zstd",               // missing mid stage
+            "tblock(8)/bitplane/raw/zstd",           // block side fixed at 4
+            "tblock(4+4)/bitplane/raw/zstd",         // one argument only
+            "tblock@p4/bitplane/raw/zstd",           // planes ride the mid-token
+            "tblock(4)/linear/raw/zstd",             // mid stage must be bitplane
+            "tblock(4)/bitplane(x)/raw/zstd",        // bitplane takes no args
+            "tblock(4)/bitplane@p0/raw/zstd",        // planes out of range
+            "tblock(4)/bitplane@p65/raw/zstd",       // planes out of range
+            "tblock(4)/bitplane/huffman/zstd",       // transform needs raw
+            "tblock(4)/bitplane/raw",                // missing lossless
+            "tblock(4)/raw/zstd",                    // missing mid stage
+            "lorenzo/linear/huffman/zstd@l0",        // zstd level out of range
+            "lorenzo/linear/huffman/zstd@l23",       // zstd level out of range
+            "lorenzo/linear/huffman/gzip@l10",       // gzip level out of range
+            "lorenzo/linear/huffman/bypass@l3",      // bypass takes no level
+            "lorenzo/linear/huffman/lzhuf@l2",       // lzhuf takes no level
+            "lorenzo/linear/huffman/zstd@lx",        // malformed level
+            "lorenzo/linear/huffman/zstd@19",        // missing 'l' prefix
             "pastri(bitplane)/huffman/zstd",         // pastri needs fixed_huffman
             "pastri(sideways)/fixed_huffman/zstd",   // unknown layout
             "aps/linear/huffman/zstd",               // aps takes no stages
@@ -1601,6 +1842,52 @@ mod tests {
         let b = PipelineBuilder::block().specialized().finish().unwrap();
         let p = PipelineSpec::parse("block(lorenzo+regression)@s/linear/huffman/zstd").unwrap();
         assert_eq!(b, p);
+        // transform family: defaults, pinned planes, misapplied setters
+        assert_eq!(
+            PipelineBuilder::transform().finish().unwrap().canonical(),
+            "tblock(4)/bitplane/raw/zstd"
+        );
+        let b = PipelineBuilder::transform().planes(12).lossless("gzip").finish().unwrap();
+        let p = PipelineSpec::parse("tblock(4)/bitplane@p12/raw/gzip").unwrap();
+        assert_eq!(b, p);
+        assert!(PipelineBuilder::block().planes(4).finish().is_err());
+        assert!(PipelineBuilder::transform().planes(65).finish().is_err());
+        assert!(PipelineBuilder::transform().keep_bytes(2).finish().is_err());
+    }
+
+    #[test]
+    fn lossless_levels_are_first_class_spec_parameters() {
+        // parse → canonical is a fixed point with the level preserved
+        let spec = PipelineSpec::parse("lorenzo/linear/huffman/zstd@l19").unwrap();
+        assert_eq!(spec.lossless, Some("zstd"));
+        assert_eq!(spec.lossless_level, Some(19));
+        assert_eq!(spec.canonical(), "lorenzo/linear/huffman/zstd@l19");
+        assert_eq!(spec.lossless_token().unwrap(), "zstd@l19");
+        // the builder accepts the same token grammar
+        let b = PipelineBuilder::lorenzo(1).lossless("zstd@l19").finish().unwrap();
+        assert_eq!(b, spec);
+        assert!(PipelineBuilder::lorenzo(1).lossless("zstd@l0").finish().is_err());
+        // hand-built out-of-range levels are caught by validate()
+        let mut bad = spec.clone();
+        bad.lossless_level = Some(23);
+        assert!(bad.validate().is_err());
+        let mut bad = spec;
+        bad.lossless = Some("rle");
+        assert!(bad.validate().is_err());
+        // a leveled pipeline compresses, names itself canonically, and
+        // decodes via decompress_any from the header alone
+        let mut rng = Pcg32::seeded(0x11f7);
+        let dims = [24usize, 24];
+        let f = crate::data::Field::f32("x", &dims, prop::smooth_field(&mut rng, &dims))
+            .unwrap();
+        let conf = crate::pipeline::CompressConf::new(ErrorBound::Abs(1e-3));
+        for s in ["truncation@k3/gzip@l9", "lorenzo/linear/huffman/zstd@l19"] {
+            let c = pipeline::build(s).unwrap();
+            assert_eq!(c.name(), super::canonical(s).unwrap(), "{s}");
+            let stream = c.compress(&f, &conf).unwrap();
+            let out = decompress_any(&stream).unwrap();
+            assert_eq!(out.shape.dims(), f.shape.dims(), "{s}");
+        }
     }
 
     #[test]
@@ -1617,6 +1904,9 @@ mod tests {
             "lorenzo@2/logscale/huffman/gzip",
             "linearize/block(lorenzo+regression)/linear@r256/huffman/bypass",
             "truncation@k3/rle",
+            "tblock(4)/bitplane@p8/raw/gzip",
+            "linearize/tblock(4)/bitplane/raw/zstd@l19",
+            "interp(cubic)/linear/huffman/gzip@l9",
         ] {
             let canon = super::canonical(s).unwrap();
             assert!(
@@ -1675,6 +1965,14 @@ mod tests {
         for &t in LOSSLESS_TOKENS {
             assert!(crate::lossless::by_name(t).is_some(), "{t} missing from registry");
         }
+        // leveled tokens the grammar accepts construct; out-of-grammar
+        // levels are rejected by the registry too
+        for t in ["zstd@l1", "zstd@l22", "gzip@l1", "gzip@l9"] {
+            assert!(crate::lossless::by_name(t).is_some(), "{t} missing from registry");
+        }
+        for t in ["zstd@l0", "zstd@l23", "gzip@l10", "bypass@l1", "rle@l2"] {
+            assert!(crate::lossless::by_name(t).is_none(), "{t} should be rejected");
+        }
         // and every grammar token appears in the printed catalog
         for t in ["huffman", "fixed_huffman", "arithmetic", "raw"]
             .iter()
@@ -1697,11 +1995,13 @@ mod tests {
                         "interp" => "interp(cubic)".to_string(),
                         "pastri" => "pastri(bitplane)".to_string(),
                         "constblock" => "constblock(32)".to_string(),
+                        "tblock" => "tblock(4)".to_string(),
                         t => t.to_string(),
                     };
                     let tail = match info.token {
                         "truncation" => "/bypass",
                         "constblock" => "/truncation/raw/zstd",
+                        "tblock" => "/bitplane/raw/zstd",
                         "pastri" => "/fixed_huffman/zstd",
                         "aps" => "",
                         _ => "/linear/huffman/zstd",

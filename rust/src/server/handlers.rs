@@ -300,20 +300,26 @@ fn roi(store: &ArtifactStore, req: &Request, id: &str, name: &str) -> Response {
     };
     let dims = region.shape.dims().to_vec();
     let resp = match format {
-        "json" => Response::json(
-            200,
-            format!(
-                "{{\"artifact\":\"{}\",\"field\":\"{}\",\"snapshot\":{},\
-                 \"rows\":[{},{}],\
-                 \"dims\":{},\"dtype\":\"{}\",\"values\":{}}}",
-                json_escape(id),
-                json_escape(name),
-                snapshot,
-                rows.start,
-                rows.end,
-                dims_json(&dims),
-                region.values.dtype(),
-                values_json(&region.values)
+        // JSON number arrays deflate ~5-10×, so this is the one response
+        // body worth content-encoding; the raw little-endian paths carry
+        // already-compressed-adjacent float bytes and stay identity
+        "json" => gzip_negotiate(
+            req,
+            Response::json(
+                200,
+                format!(
+                    "{{\"artifact\":\"{}\",\"field\":\"{}\",\"snapshot\":{},\
+                     \"rows\":[{},{}],\
+                     \"dims\":{},\"dtype\":\"{}\",\"values\":{}}}",
+                    json_escape(id),
+                    json_escape(name),
+                    snapshot,
+                    rows.start,
+                    rows.end,
+                    dims_json(&dims),
+                    region.values.dtype(),
+                    values_json(&region.values)
+                ),
             ),
         ),
         // "f32" | "raw": the exact little-endian bytes `read_region_at`
@@ -324,6 +330,43 @@ fn roi(store: &ArtifactStore, req: &Request, id: &str, name: &str) -> Response {
         .with_header("X-SZ3-Dtype", region.values.dtype())
         .with_header("X-SZ3-Rows", format!("{}..{}", rows.start, rows.end))
         .with_header("X-SZ3-Snapshot", snapshot.to_string())
+}
+
+/// Did the client offer gzip? Token scan over `Accept-Encoding`, treating
+/// an explicit `q=0` as refusal; no q-value ranking beyond that — gzip is
+/// the only encoding we produce.
+fn accepts_gzip(req: &Request) -> bool {
+    let Some(v) = req.header("accept-encoding") else { return false };
+    v.split(',').any(|item| {
+        let mut parts = item.split(';');
+        let name = parts.next().unwrap_or("").trim();
+        if !name.eq_ignore_ascii_case("gzip") && name != "*" {
+            return false;
+        }
+        !parts.any(|p| {
+            let p: String = p.chars().filter(|c| !c.is_whitespace()).collect();
+            p == "q=0" || p == "q=0.0" || p == "q=0.00" || p == "q=0.000"
+        })
+    })
+}
+
+/// Gzip `resp`'s body when the request offered it. Always stamps
+/// `Vary: Accept-Encoding` (the representation is negotiated either
+/// way); on encode failure the identity body is served unchanged.
+fn gzip_negotiate(req: &Request, resp: Response) -> Response {
+    let mut resp = resp.with_header("Vary", "Accept-Encoding");
+    if !accepts_gzip(req) {
+        return resp;
+    }
+    use std::io::Write;
+    let mut enc =
+        flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::default());
+    let encoded = enc.write_all(&resp.body).ok().and_then(|()| enc.finish().ok());
+    if let Some(z) = encoded {
+        resp.body = z;
+        resp = resp.with_header("Content-Encoding", "gzip");
+    }
+    resp
 }
 
 fn raw(store: &ArtifactStore, req: &Request, id: &str) -> Response {
@@ -1061,6 +1104,53 @@ mod tests {
         } else {
             panic!("demo field is f32");
         }
+    }
+
+    #[test]
+    fn roi_json_gzips_when_accepted() {
+        let (store, _) = demo_store();
+        let stats = ServerStats::new();
+        let target = "/v1/artifacts/demo/fields/density?rows=0..4&format=json";
+        // identity baseline: negotiated header present, body plain JSON
+        let plain = get(&store, target);
+        assert_eq!(plain.status, 200);
+        assert_eq!(plain.header("Vary"), Some("Accept-Encoding"));
+        assert_eq!(plain.header("Content-Encoding"), None);
+
+        let mut req = Request::get(target);
+        req.headers
+            .push(("accept-encoding".to_string(), "br, gzip;q=0.8".to_string()));
+        let resp = dispatch(&store, &stats, &req);
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("Content-Encoding"), Some("gzip"));
+        assert_eq!(resp.header("Vary"), Some("Accept-Encoding"));
+        assert_eq!(resp.header("Content-Type"), Some("application/json"));
+        assert!(
+            resp.body.len() < plain.body.len() / 2,
+            "json should deflate well: {} vs {}",
+            resp.body.len(),
+            plain.body.len()
+        );
+        // body is real gzip framing that decodes back to the identity json
+        use std::io::Read;
+        let mut dec = flate2::read::GzDecoder::new(resp.body.as_slice());
+        let mut out = Vec::new();
+        dec.read_to_end(&mut out).unwrap();
+        assert_eq!(out, plain.body);
+
+        // an explicit q=0 refusal and non-gzip offers stay identity
+        for ae in ["gzip;q=0", "identity", "br"] {
+            let mut req = Request::get(target);
+            req.headers.push(("accept-encoding".to_string(), ae.to_string()));
+            let resp = dispatch(&store, &stats, &req);
+            assert_eq!(resp.header("Content-Encoding"), None, "ae={ae}");
+        }
+        // raw responses never negotiate an encoding
+        let mut req =
+            Request::get("/v1/artifacts/demo/fields/density?rows=0..4&format=raw");
+        req.headers.push(("accept-encoding".to_string(), "gzip".to_string()));
+        let resp = dispatch(&store, &stats, &req);
+        assert_eq!(resp.header("Content-Encoding"), None);
     }
 
     #[test]

@@ -1,0 +1,97 @@
+//! Embedded bitplane coder: group-tested negabinary planes, most
+//! significant first (the ZFP embedded coding scheme).
+//!
+//! Coefficients arrive in sequency order as 64-bit negabinary words.
+//! Planes are emitted from bit 63 downward; within a plane the first
+//! `sig` coefficients (the prefix already known significant from higher
+//! planes) get verbatim bits, and the remainder is run-length coded with
+//! group tests: one bit answers "is anything in the tail significant in
+//! this plane?", then unary position bits walk to each newly significant
+//! coefficient. Truncating the stream after any plane leaves every
+//! coefficient with its top planes intact — the embedded property the
+//! encoder's reconstruct-and-verify cutoff search relies on.
+
+use crate::bitio::{BitReader, BitWriter};
+use crate::error::{Result, SzError};
+
+/// Encode the top `kept` (1..=64) bitplanes of `coeffs` (≤ 64 negabinary
+/// words in sequency order) into `w`.
+pub fn encode(coeffs: &[u64], kept: u32, w: &mut BitWriter) {
+    let nvals = coeffs.len();
+    let mut sig = 0usize;
+    let lo = 64u32.saturating_sub(kept.min(64));
+    let mut plane = 64u32;
+    while plane > lo {
+        plane -= 1;
+        // plane word: bit i of x = bit `plane` of coeffs[i]
+        let mut x = 0u64;
+        for (i, &c) in coeffs.iter().enumerate() {
+            x |= ((c >> plane) & 1) << i;
+        }
+        // verbatim bits for the known-significant prefix
+        for i in 0..sig {
+            w.put_bit(((x >> i) & 1) as u32);
+        }
+        x = if sig >= 64 { 0 } else { x >> sig };
+        // group-tested unary coding of the tail
+        let mut p = sig;
+        while p < nvals {
+            let any = (x != 0) as u32;
+            w.put_bit(any);
+            if any == 0 {
+                break;
+            }
+            while p + 1 < nvals {
+                let bit = (x & 1) as u32;
+                w.put_bit(bit);
+                if bit == 1 {
+                    break;
+                }
+                x >>= 1;
+                p += 1;
+            }
+            x >>= 1;
+            p += 1;
+        }
+        sig = p;
+    }
+}
+
+/// Decode `nvals` (1..=64) coefficients from the top `kept` bitplanes in
+/// `r` — the exact inverse of [`encode`]. Bits below plane `64 - kept`
+/// are zero in the result. Errors (never panics) on a truncated stream.
+pub fn decode(nvals: usize, kept: u32, r: &mut BitReader) -> Result<Vec<u64>> {
+    if nvals == 0 || nvals > 64 {
+        return Err(SzError::corrupt("bitplane group size out of range"));
+    }
+    let mut coeffs = vec![0u64; nvals];
+    let mut sig = 0usize;
+    let lo = 64u32.saturating_sub(kept.min(64));
+    let mut plane = 64u32;
+    while plane > lo {
+        plane -= 1;
+        let mut x = 0u64;
+        for i in 0..sig {
+            x |= (r.get_bit()? as u64) << i;
+        }
+        let mut p = sig;
+        while p < nvals {
+            if r.get_bit()? == 0 {
+                break;
+            }
+            while p + 1 < nvals {
+                if r.get_bit()? == 1 {
+                    break;
+                }
+                p += 1;
+            }
+            x |= 1u64 << p;
+            p += 1;
+        }
+        sig = p;
+        for (i, slot) in coeffs.iter_mut().enumerate() {
+            *slot |= ((x >> i) & 1) << plane;
+        }
+    }
+    Ok(coeffs)
+}

@@ -1,0 +1,153 @@
+//! Decorrelation substrate for the transform family: the ZFP-style
+//! integer lifting transform over 4-element pencils, the sequency-order
+//! coefficient permutation, and the negabinary mapping that feeds the
+//! embedded bitplane coder.
+//!
+//! The lifting pair implements ZFP's non-orthogonal 4-point transform
+//!
+//! ```text
+//!          ( 4  4  4  4 )                ( 4  6 -4 -1 )
+//! F = 1/16 ( 5  1 -1 -5 )   F⁻¹ = 1/4   ( 4  2  4  5 )
+//!          (-4  4  4 -4 )                ( 4 -2  4 -5 )
+//!          (-2  6 -6  2 )                ( 4 -6 -4  1 )
+//! ```
+//!
+//! as in-place integer shifts/adds, so `inverse(forward(x)) == x` exactly
+//! for any fixed-point input with headroom. All arithmetic is wrapping:
+//! the decode path runs on attacker-controlled coefficients, and a
+//! hostile plane pattern must at worst reconstruct garbage values (caught
+//! by the error-bound tests on honest streams), never panic.
+
+use std::sync::OnceLock;
+
+/// Negabinary conversion mask (1-bits at the odd positions).
+const NB_MASK: u64 = 0xaaaa_aaaa_aaaa_aaaa;
+
+/// Map a two's-complement integer to negabinary, where truncating low
+/// bits perturbs the value by less than the weight of the lowest kept
+/// bit — the property the embedded bitplane coder relies on.
+#[inline]
+pub fn to_negabinary(v: i64) -> u64 {
+    ((v as u64).wrapping_add(NB_MASK)) ^ NB_MASK
+}
+
+/// Inverse of [`to_negabinary`].
+#[inline]
+pub fn from_negabinary(u: u64) -> i64 {
+    ((u ^ NB_MASK).wrapping_sub(NB_MASK)) as i64
+}
+
+/// Forward lift of one 4-element pencil (in place).
+#[inline]
+fn fwd_lift4(p: &mut [i64; 4]) {
+    let [mut x, mut y, mut z, mut w] = *p;
+    x = x.wrapping_add(w);
+    x >>= 1;
+    w = w.wrapping_sub(x);
+    z = z.wrapping_add(y);
+    z >>= 1;
+    y = y.wrapping_sub(z);
+    x = x.wrapping_add(z);
+    x >>= 1;
+    z = z.wrapping_sub(x);
+    w = w.wrapping_add(y);
+    w >>= 1;
+    y = y.wrapping_sub(w);
+    w = w.wrapping_add(y >> 1);
+    y = y.wrapping_sub(w >> 1);
+    *p = [x, y, z, w];
+}
+
+/// Inverse lift of one 4-element pencil (in place).
+#[inline]
+fn inv_lift4(p: &mut [i64; 4]) {
+    let [mut x, mut y, mut z, mut w] = *p;
+    y = y.wrapping_add(w >> 1);
+    w = w.wrapping_sub(y >> 1);
+    y = y.wrapping_add(w);
+    w = w.wrapping_shl(1);
+    w = w.wrapping_sub(y);
+    z = z.wrapping_add(x);
+    x = x.wrapping_shl(1);
+    x = x.wrapping_sub(z);
+    y = y.wrapping_add(z);
+    z = z.wrapping_shl(1);
+    z = z.wrapping_sub(y);
+    w = w.wrapping_add(x);
+    x = x.wrapping_shl(1);
+    x = x.wrapping_sub(w);
+    *p = [x, y, z, w];
+}
+
+/// Lift every pencil along the axis with element `stride` (block layout
+/// is row-major base-4, so a pencil base is any index whose axis digit
+/// is zero).
+fn lift_axis(block: &mut [i64], stride: usize, fwd: bool) {
+    if stride == 0 {
+        return;
+    }
+    let total = block.len();
+    for base in 0..total {
+        if (base / stride) % 4 != 0 {
+            continue;
+        }
+        let mut p = [0i64; 4];
+        for (j, slot) in p.iter_mut().enumerate() {
+            *slot = block.get(base + j * stride).copied().unwrap_or(0);
+        }
+        if fwd {
+            fwd_lift4(&mut p);
+        } else {
+            inv_lift4(&mut p);
+        }
+        for (j, &v) in p.iter().enumerate() {
+            if let Some(slot) = block.get_mut(base + j * stride) {
+                *slot = v;
+            }
+        }
+    }
+}
+
+/// Forward block transform: lift each of the `d` (1..=3) axes, innermost
+/// first. `block` is a row-major 4^d buffer.
+pub fn forward(block: &mut [i64], d: usize) {
+    let mut stride = 1usize;
+    for _ in 0..d.clamp(1, 3) {
+        lift_axis(block, stride, true);
+        stride *= 4;
+    }
+}
+
+/// Inverse block transform (exact inverse of [`forward`]): lift each
+/// axis outermost first.
+pub fn inverse(block: &mut [i64], d: usize) {
+    let dd = d.clamp(1, 3);
+    let mut stride = 1usize << (2 * (dd - 1));
+    for _ in 0..dd {
+        lift_axis(block, stride, false);
+        stride /= 4;
+    }
+}
+
+/// Coefficient visit order for a `d`-dimensional 4-side block: ascending
+/// total sequency (sum of per-axis frequencies), ties broken by linear
+/// index. Low-sequency (smooth) coefficients come first, so the embedded
+/// bitplane coder's significance prefix grows front-to-back.
+pub fn sequency_order(d: usize) -> &'static [usize] {
+    static ORDERS: OnceLock<[Vec<usize>; 3]> = OnceLock::new();
+    let all = ORDERS.get_or_init(|| {
+        let build = |dd: usize| {
+            let n = 1usize << (2 * dd);
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by_key(|&i| {
+                let fx = i & 3;
+                let fy = (i >> 2) & 3;
+                let fz = (i >> 4) & 3;
+                (fx + fy + fz, i)
+            });
+            order
+        };
+        [build(1), build(2), build(3)]
+    });
+    all.get(d.clamp(1, 3) - 1).map(|v| v.as_slice()).unwrap_or(&[])
+}

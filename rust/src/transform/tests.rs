@@ -1,0 +1,281 @@
+use super::*;
+use crate::pipeline::{decompress_any, test_support::roundtrip_bound_check, ErrorBound};
+use crate::util::prop;
+use crate::util::rng::Pcg32;
+
+fn tc() -> TransformCompressor {
+    TransformCompressor::default()
+}
+
+// ---- substrate units ------------------------------------------------------
+
+#[test]
+fn negabinary_roundtrips_and_truncation_is_small() {
+    let mut rng = Pcg32::seeded(0x4e6);
+    for _ in 0..2000 {
+        let v = (rng.next_u64() as i64) >> (rng.below(20) as u32);
+        assert_eq!(lift::from_negabinary(lift::to_negabinary(v)), v);
+        // zeroing the low m bits of the negabinary word moves the value
+        // by less than 2^m — the property plane truncation relies on
+        let m = rng.below(40) as u32 + 1;
+        let mask = u64::MAX << m;
+        let trunc = lift::from_negabinary(lift::to_negabinary(v) & mask);
+        assert!(
+            (v.wrapping_sub(trunc)).unsigned_abs() < 1u64 << m,
+            "v {v} trunc {trunc} m {m}"
+        );
+    }
+}
+
+#[test]
+fn lift_inverse_is_exact() {
+    let mut rng = Pcg32::seeded(0x11f7);
+    for d in 1..=3usize {
+        let n = 1usize << (2 * d);
+        for _ in 0..500 {
+            // 55-bit fixed-point magnitudes, the encoder's headroom contract
+            let orig: Vec<i64> =
+                (0..n).map(|_| (rng.next_u64() as i64) >> 9).collect();
+            let mut work = orig.clone();
+            lift::forward(&mut work, d);
+            lift::inverse(&mut work, d);
+            assert_eq!(work, orig, "d={d}");
+        }
+    }
+}
+
+#[test]
+fn sequency_order_is_a_permutation_sorted_by_total_frequency() {
+    for d in 1..=3usize {
+        let n = 1usize << (2 * d);
+        let perm = lift::sequency_order(d);
+        assert_eq!(perm.len(), n);
+        let mut seen = vec![false; n];
+        for &i in perm {
+            assert!(!seen[i], "duplicate {i}");
+            seen[i] = true;
+        }
+        let seq = |i: usize| (i & 3) + ((i >> 2) & 3) + ((i >> 4) & 3);
+        for pair in perm.windows(2) {
+            assert!(seq(pair[0]) <= seq(pair[1]), "not sorted: {pair:?}");
+        }
+    }
+}
+
+#[test]
+fn bitplane_decode_returns_exactly_the_kept_planes() {
+    let mut rng = Pcg32::seeded(0xb17e);
+    for _ in 0..300 {
+        let n = rng.below(64) + 1;
+        let coeffs: Vec<u64> = (0..n)
+            .map(|_| {
+                // skewed magnitudes like real transform output
+                rng.next_u64() >> (rng.below(60) as u32)
+            })
+            .collect();
+        let kept = rng.below(64) as u32 + 1;
+        let mask = if kept >= 64 { u64::MAX } else { u64::MAX << (64 - kept) };
+        let mut w = crate::bitio::BitWriter::new();
+        bitplane::encode(&coeffs, kept, &mut w);
+        let bytes = w.finish();
+        let mut r = crate::bitio::BitReader::new(&bytes);
+        let dec = bitplane::decode(n, kept, &mut r).unwrap();
+        let want: Vec<u64> = coeffs.iter().map(|&c| c & mask).collect();
+        assert_eq!(dec, want, "n={n} kept={kept}");
+    }
+}
+
+#[test]
+fn bitplane_rejects_bad_group_sizes_and_truncated_streams() {
+    let mut r = crate::bitio::BitReader::new(&[]);
+    assert!(bitplane::decode(0, 8, &mut r).is_err());
+    let mut r = crate::bitio::BitReader::new(&[]);
+    assert!(bitplane::decode(65, 8, &mut r).is_err());
+    // a stream that demands more bits than available must error
+    let mut w = crate::bitio::BitWriter::new();
+    bitplane::encode(&[u64::MAX; 64], 64, &mut w);
+    let bytes = w.finish();
+    let mut r = crate::bitio::BitReader::new(&bytes[..bytes.len() / 2]);
+    assert!(bitplane::decode(64, 64, &mut r).is_err());
+}
+
+// ---- end-to-end family ----------------------------------------------------
+
+#[test]
+fn prop_roundtrip_bound_on_smooth_fields() {
+    prop::cases(30, 0x7f0, |rng| {
+        let dims: Vec<usize> = match rng.below(3) {
+            0 => vec![rng.below(200) + 1],
+            1 => vec![rng.below(24) + 1, rng.below(24) + 1],
+            _ => vec![rng.below(10) + 1, rng.below(10) + 1, rng.below(10) + 1],
+        };
+        let vals = prop::smooth_field(rng, &dims);
+        let f = Field::f32("s", &dims, vals).unwrap();
+        let eb = 10f64.powf(rng.uniform(-5.0, -1.0));
+        roundtrip_bound_check(&tc(), &f, &CompressConf::new(ErrorBound::Abs(eb)));
+    });
+}
+
+#[test]
+fn prop_roundtrip_bound_on_noise_and_rel_bounds() {
+    prop::cases(25, 0x7f1, |rng| {
+        let n = rng.below(2000) + 1;
+        let vals = prop::vec_f32(rng, n);
+        let f = Field::f32("w", &[n], vals).unwrap();
+        let conf = if rng.below(2) == 0 {
+            CompressConf::new(ErrorBound::Abs(10f64.powf(rng.uniform(-4.0, 0.0))))
+        } else {
+            CompressConf::new(ErrorBound::Rel(10f64.powf(rng.uniform(-5.0, -2.0))))
+        };
+        roundtrip_bound_check(&tc(), &f, &conf);
+    });
+}
+
+#[test]
+fn all_dtypes_roundtrip() {
+    let conf = CompressConf::new(ErrorBound::Abs(0.5));
+    let f32s = Field::f32("a", &[10, 10], (0..100).map(|i| i as f32 * 0.3).collect()).unwrap();
+    let f64s = Field::f64("b", &[100], (0..100).map(|i| (i as f64).sin()).collect()).unwrap();
+    let i32s =
+        Field::new("c", &[100], FieldValues::I32((0..100).map(|i| i * 7 - 350).collect()))
+            .unwrap();
+    for f in [&f32s, &f64s, &i32s] {
+        roundtrip_bound_check(&tc(), f, &conf);
+    }
+}
+
+#[test]
+fn awkward_shapes_roundtrip() {
+    // partial edge blocks on every axis, plus >3-d axis merging
+    let shapes: &[&[usize]] = &[
+        &[1],
+        &[5],
+        &[4, 4],
+        &[5, 7],
+        &[1, 9],
+        &[3, 3, 3],
+        &[4, 5, 6],
+        &[2, 3, 4, 5],
+        &[2, 2, 2, 2, 3],
+    ];
+    for dims in shapes {
+        let n: usize = dims.iter().product();
+        let vals: Vec<f32> = (0..n).map(|i| ((i * 37 % 97) as f32).sqrt()).collect();
+        let f = Field::f32("shape", dims, vals).unwrap();
+        let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+        roundtrip_bound_check(&tc(), &f, &conf);
+    }
+}
+
+#[test]
+fn constant_field_compresses_hard() {
+    let f = Field::f32("flat", &[64, 64], vec![13.25; 4096]).unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(1e-6));
+    let ratio = roundtrip_bound_check(&tc(), &f, &conf);
+    assert!(ratio > 20.0, "constant field ratio {ratio}");
+}
+
+#[test]
+fn smooth_field_beats_raw_storage() {
+    let mut rng = Pcg32::seeded(0x57e9);
+    let vals = prop::smooth_field(&mut rng, &[32, 32]);
+    let f = Field::f32("smooth", &[32, 32], vals).unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(1e-2));
+    let ratio = roundtrip_bound_check(&tc(), &f, &conf);
+    assert!(ratio > 1.5, "smooth field ratio {ratio}");
+}
+
+#[test]
+fn nan_survives_the_verbatim_path() {
+    let mut vals = vec![1.5f32; 80];
+    vals[40] = f32::NAN;
+    vals[41] = f32::INFINITY;
+    let f = Field::f32("nan", &[80], vals).unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(1e-3));
+    let stream = tc().compress(&f, &conf).unwrap();
+    let out = decompress_any(&stream).unwrap();
+    let FieldValues::F32(dec) = &out.values else { panic!("dtype") };
+    assert!(dec[40].is_nan());
+    assert_eq!(dec[41], f32::INFINITY);
+    assert_eq!(dec[0], 1.5);
+    assert_eq!(dec[79], 1.5);
+}
+
+#[test]
+fn unreachable_bound_falls_back_to_exact_verbatim() {
+    // f64 data under a bound far below the fixed point's resolution:
+    // every non-constant block must patch verbatim and round-trip exactly
+    let mut rng = Pcg32::seeded(0xfa11);
+    let vals: Vec<f64> = (0..200).map(|_| rng.uniform(-1e9, 1e9)).collect();
+    let f = Field::f64("exact", &[200], vals.clone()).unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(1e-300));
+    let out = decompress_any(&tc().compress(&f, &conf).unwrap()).unwrap();
+    assert_eq!(out.values, FieldValues::F64(vals));
+}
+
+#[test]
+fn pinned_planes_raise_fidelity_and_bytes() {
+    let mut rng = Pcg32::seeded(0x91e);
+    let vals: Vec<f64> =
+        prop::smooth_field(&mut rng, &[24, 24]).iter().map(|&v| v as f64).collect();
+    let f = Field::f64("pin", &[24, 24], vals.clone()).unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(0.25));
+    let loose = tc().compress(&f, &conf).unwrap();
+    let pinned =
+        TransformCompressor { planes: Some(56), ..Default::default() }.compress(&f, &conf).unwrap();
+    assert!(pinned.len() > loose.len(), "{} !> {}", pinned.len(), loose.len());
+    let max_err = |stream: &[u8]| -> f64 {
+        let out = decompress_any(stream).unwrap();
+        let FieldValues::F64(dec) = &out.values else { panic!("dtype") };
+        dec.iter().zip(vals.iter()).map(|(d, o)| (d - o).abs()).fold(0.0, f64::max)
+    };
+    let e_loose = max_err(&loose);
+    let e_pinned = max_err(&pinned);
+    assert!(e_loose <= 0.25);
+    // 56 of 64 planes is far tighter than the 0.25 bound requires
+    assert!(e_pinned < e_loose / 100.0, "pinned {e_pinned} loose {e_loose}");
+}
+
+#[test]
+fn stored_lossless_token_drives_decode() {
+    // decode must honor the lossless named in the stream, not the
+    // decompressor instance's own config
+    let f = Field::f32("ll", &[40], (0..40).map(|i| i as f32).collect()).unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(1e-4));
+    let c = TransformCompressor { lossless: "gzip".to_string(), ..Default::default() };
+    let stream = c.compress(&f, &conf).unwrap();
+    roundtrip_bound_check(&c, &f, &conf);
+    // a default (zstd-configured) instance still decodes the gzip stream
+    let out = tc().decompress(&stream).unwrap();
+    assert_eq!(out.shape.dims(), &[40]);
+}
+
+#[test]
+fn unknown_lossless_rejected_at_compress_time() {
+    let f = Field::f32("x", &[8], vec![0.5; 8]).unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(0.1));
+    let c = TransformCompressor { lossless: "nope".to_string(), ..Default::default() };
+    assert!(c.compress(&f, &conf).is_err());
+}
+
+#[test]
+fn corrupt_sections_error_not_panic() {
+    let mut rng = Pcg32::seeded(0xc0de);
+    let vals = prop::smooth_field(&mut rng, &[17, 13]);
+    let f = Field::f32("x", &[17, 13], vals).unwrap();
+    let conf = CompressConf::new(ErrorBound::Abs(1e-4));
+    let c = tc();
+    let stream = c.compress(&f, &conf).unwrap();
+    // truncating the stream at every prefix must error cleanly
+    for cut in 0..stream.len() {
+        assert!(c.decompress(&stream[..cut]).is_err(), "prefix {cut} accepted");
+    }
+    // flipping bytes across the stream must never panic (it may decode
+    // to junk values, but structural checks catch length lies)
+    for at in 0..stream.len() {
+        let mut bad = stream.clone();
+        bad[at] ^= 0xA5;
+        let _ = std::panic::catch_unwind(|| c.decompress(&bad))
+            .expect("decompress must not panic");
+    }
+}

@@ -169,6 +169,33 @@ fn snapshot_and_error_matrix_over_loopback() {
             .unwrap();
         let canon = sz3::pipeline::canonical("sz3-lr").unwrap();
         assert_eq!(map[0].get("pipeline").unwrap().as_str(), Some(canon.as_str()));
+
+        // json ROI responses negotiate gzip over the real socket: the
+        // encoded body is smaller, decodes to the identity body, and raw
+        // format responses never carry an encoding
+        let target = "/v1/artifacts/plain/fields/rho?rows=0..6&format=json";
+        let plain_resp = client.get(target).unwrap();
+        assert_eq!(plain_resp.status, 200);
+        assert_eq!(plain_resp.header("vary"), Some("Accept-Encoding"));
+        assert_eq!(plain_resp.header("content-encoding"), None);
+        let resp = client
+            .get_with_headers(target, &[("Accept-Encoding", "gzip, br")])
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-encoding"), Some("gzip"));
+        assert!(resp.body.len() < plain_resp.body.len() / 2);
+        use std::io::Read as _;
+        let mut dec = flate2::read::GzDecoder::new(resp.body.as_slice());
+        let mut decoded = Vec::new();
+        dec.read_to_end(&mut decoded).unwrap();
+        assert_eq!(decoded, plain_resp.body);
+        let resp = client
+            .get_with_headers(
+                "/v1/artifacts/plain/fields/rho?rows=0..6",
+                &[("Accept-Encoding", "gzip")],
+            )
+            .unwrap();
+        assert_eq!(resp.header("content-encoding"), None, "raw stays identity");
     }
     handle.shutdown();
     let _ = std::fs::remove_dir_all(&dir);

@@ -285,6 +285,95 @@ fn adaptive_container_mixes_pipelines_and_respects_bound() {
     check_bound(&field, &out, eb, "adaptive-container");
 }
 
+/// Acceptance (measured rate-distortion selection): on a corpus with
+/// smooth, turbulent, and flat strata — chunk-aligned so every chunk is
+/// homogeneous — measured selection must (a) respect the bound end to
+/// end, (b) record per-chunk winners as canonical specs in the index,
+/// and (c) produce a container no larger than *any* single fixed
+/// candidate pipeline run over the same corpus at the same bound. No
+/// fixed family is good everywhere, which is the whole pitch.
+#[test]
+fn measured_selection_beats_every_fixed_pipeline_on_mixed_corpus() {
+    let (nz, ny, nx) = (48usize, 24, 24);
+    let mut rng = Pcg32::seeded(4242);
+    let mut vals = Vec::with_capacity(nz * ny * nx);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                vals.push(if z < 16 {
+                    // smooth stratum: low-frequency structure
+                    0.6 * ((z as f32) * 0.21).sin()
+                        + 0.5 * ((y as f32) * 0.14).cos()
+                        + 0.3 * ((x as f32) * 0.09).sin()
+                } else if z < 32 {
+                    // turbulent stratum: full-range white noise
+                    rng.uniform(-500.0, 500.0) as f32
+                } else {
+                    // flat stratum: one constant
+                    3.25
+                });
+            }
+        }
+    }
+    let field = Field::f32("mixed", &[nz, ny, nx], vals).unwrap();
+    let eb = 0.25;
+    let base = JobConfig {
+        bound: ErrorBound::Abs(eb),
+        workers: 4,
+        chunk_elems: ny * nx * 8, // 8 rows per chunk -> 6 homogeneous chunks
+        queue_depth: 2,
+        ..Default::default()
+    };
+
+    let measured_cfg = JobConfig {
+        pipeline: "sz3-lr".into(),
+        measured: true,
+        optimize: "ratio".into(),
+        ..base.clone()
+    };
+    let coord = Coordinator::from_config(&measured_cfg).unwrap();
+    let (artifact, report) = coord.run_to_container(vec![field.clone()]).unwrap();
+    assert_eq!(report.chunks, 6);
+
+    // (a) the bound holds over the full reassembled field
+    let out = decompress_any(&artifact).unwrap();
+    check_bound(&field, &out, eb, "measured-mixed");
+
+    // (b) winners are recorded per chunk, as canonical specs, and the
+    // mix is heterogeneous — one family cannot have won every stratum
+    let (index, _) = sz3::container::read_index(&artifact).unwrap();
+    assert_eq!(index.entries.len(), 6);
+    for e in &index.entries {
+        assert_eq!(
+            pipeline::canonical(&e.pipeline).unwrap(),
+            e.pipeline,
+            "chunk {} pipeline must be a canonical spec",
+            e.chunk_index
+        );
+    }
+    let mix = index.per_pipeline();
+    assert!(
+        mix.len() >= 2,
+        "mixed corpus should produce a pipeline mix, got {mix:?}"
+    );
+
+    // (c) no fixed single-family run does better on the whole corpus
+    for name in sz3::container::AdaptiveChunkSelector::DEFAULT_CANDIDATES {
+        let fixed_cfg =
+            JobConfig { pipeline: name.to_string(), ..base.clone() };
+        let fixed = Coordinator::from_config(&fixed_cfg).unwrap();
+        let (fixed_artifact, _) =
+            fixed.run_to_container(vec![field.clone()]).unwrap();
+        assert!(
+            artifact.len() <= fixed_artifact.len(),
+            "measured selection ({} bytes) must not lose to fixed '{name}' \
+             ({} bytes)",
+            artifact.len(),
+            fixed_artifact.len()
+        );
+    }
+}
+
 /// Acceptance (pipeline-spec API): a composed pipeline that corresponds to
 /// **no** registry alias compresses via the spec, records its canonical
 /// spec in the stream header and the container chunk index, and
